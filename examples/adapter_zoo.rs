@@ -1,0 +1,88 @@
+//! Adapter zoo: the storage story from the paper's introduction, measured.
+//!
+//! Fine-tunes one adapter per GLUE-sim task with three methods (FourierFT,
+//! LoRA, full dense delta), publishes all of them to an [`AdapterStore`],
+//! and prints the bytes a "Civitai for adapters" would have to store and
+//! ship per fine-tune — then serves a mixed request queue across all
+//! FourierFT adapters with hot-swap, reporting router statistics.
+//!
+//! Run: `cargo run --example adapter_zoo -- [--steps 60]`
+
+use fourier_peft::adapter::{AdapterFile, AdapterKind, AdapterStore};
+use fourier_peft::coordinator::experiments::{glue_run, Opts};
+use fourier_peft::coordinator::serving::{Request, Server};
+use fourier_peft::coordinator::trainer::Trainer;
+use fourier_peft::data::collate_text;
+use fourier_peft::data::glue::GlueTask;
+use fourier_peft::util::{cli::Args, fmt_bytes};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps = args.usize_or("steps", 60);
+    let trainer = Trainer::open_default()?;
+    let opts = Opts { steps, seeds: 1, eval_count: 128, quick: true, scaling_scale: 1.0 };
+    let store_dir = fourier_peft::runs_dir().join("zoo");
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let mut store = AdapterStore::open(&store_dir)?;
+
+    let tasks = [GlueTask::Sst2, GlueTask::Mrpc, GlueTask::Rte, GlueTask::Qnli];
+    let methods: [(&str, &str, AdapterKind); 3] = [
+        ("fourierft", "enc_base__fourierft_n64__ce", AdapterKind::FourierFt),
+        ("lora", "enc_base__lora_r8__ce", AdapterKind::Lora),
+        ("dense", "enc_base__ff__ce", AdapterKind::DenseDelta),
+    ];
+
+    println!("{:<10} {:<8} {:>10} {:>12} {:>8}", "method", "task", "metric", "bytes", "vs fft");
+    let mut fft_bytes = 0usize;
+    for (mname, artifact, kind) in methods {
+        for task in tasks {
+            let res = glue_run(&trainer, task, artifact, &opts, 0, 1.0)?;
+            let file = AdapterFile {
+                kind,
+                seed: 2024,
+                alpha: 8.0,
+                meta: vec![("task".into(), task.name().into())],
+                // paper convention: adapters exclude the task head for byte
+                // accounting (heads are tiny and method-independent)
+                tensors: res.adapt.into_iter().filter(|(k, _)| !k.starts_with("head.")).collect(),
+            };
+            let bytes = store.save(&format!("{mname}_{}", task.name()), &file)?;
+            if mname == "fourierft" {
+                fft_bytes = bytes;
+            }
+            println!(
+                "{:<10} {:<8} {:>9.1}% {:>12} {:>7.1}x",
+                mname,
+                task.name(),
+                100.0 * res.best_eval,
+                fmt_bytes(bytes),
+                bytes as f64 / fft_bytes.max(1) as f64
+            );
+        }
+    }
+    println!("\nstore total: {}", fmt_bytes(store.total_bytes()? as usize));
+
+    // --- serve a mixed queue over the FourierFT adapters ------------------
+    let mut server = Server::new(&trainer, "enc_base__fourierft_n64__ce", store, 2024, 8.0)?;
+    let meta = trainer.registry.meta("enc_base__fourierft_n64__ce")?.clone();
+    let queue: Vec<Request> = (0..16)
+        .map(|i| {
+            let task = tasks[i % tasks.len()];
+            Request {
+                id: i as u64,
+                adapter: format!("fourierft_{}", task.name()),
+                batch: collate_text(&task.split("val", meta.model.batch, i as u64), meta.model.seqlen),
+            }
+        })
+        .collect();
+    let (results, stats) = server.serve(queue)?;
+    println!(
+        "served {} requests  swaps {} ({:.1} ms total)  exec {:.1} ms  throughput {:.1} req/s",
+        results.len(),
+        stats.swaps,
+        1e3 * stats.swap_seconds,
+        1e3 * stats.exec_seconds,
+        stats.throughput_rps()
+    );
+    Ok(())
+}

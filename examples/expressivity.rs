@@ -1,0 +1,148 @@
+//! Expressivity head-to-head (paper Figure 7 + §4.5): at an *equal*
+//! trainable-parameter budget, FourierFT's spectral parameterization covers
+//! weight-change directions a rank-1 LoRA cannot.
+//!
+//! Trains LoRA r=1 (128 params/site) vs FourierFT n=128 (128 params/site)
+//! vs FF on the 8-class blobs task and prints accuracy trajectories side
+//! by side, plus the reconstruction-rank analysis: the effective rank of
+//! the FourierFT ΔW vs LoRA's rank-1 ΔW.
+//!
+//! Run: `cargo run --example expressivity -- [--steps 400]`
+
+use fourier_peft::adapter::merge::delta_host;
+use fourier_peft::coordinator::trainer::{FinetuneCfg, Trainer};
+use fourier_peft::data::blobs;
+use fourier_peft::metrics::classify;
+use fourier_peft::tensor::Tensor;
+use fourier_peft::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps = args.usize_or("steps", 400);
+    let trainer = Trainer::open_default()?;
+    let eval_pts = blobs::dataset(512, 0.35, 0xE);
+    let eval_batches: Vec<_> = eval_pts.chunks(64).map(blobs::collate).collect();
+
+    let mut trajectories: Vec<(String, Vec<(usize, f64)>)> = Vec::new();
+    let mut fft_adapt: Option<Vec<(String, Tensor)>> = None;
+    for (label, artifact, lr, scaling) in [
+        ("LoRA r=1", "mlp__lora_r1__ce", 1e-2f32, 2.0f32),
+        ("FourierFT n=128", "mlp__fourierft_n128__ce", 5e-2, 64.0),
+        ("FF", "mlp__ff__ce", 1e-2, 1.0),
+    ] {
+        let mut cfg = FinetuneCfg::new(artifact);
+        cfg.lr = lr;
+        cfg.scaling = scaling;
+        cfg.steps = steps;
+        cfg.eval_every = (steps / 20).max(1);
+        cfg.seed = 7;
+        let tr = &trainer;
+        let eval_ref = &eval_batches;
+        let mut eval_fn = move |exe: &fourier_peft::runtime::Executable,
+                                state: &mut fourier_peft::runtime::exec::ParamSet,
+                                scaling: f32|
+              -> anyhow::Result<f64> {
+            let (preds, labels, _, _) = tr.eval_classify(exe, state, scaling, eval_ref)?;
+            Ok(classify::accuracy(&preds, &labels))
+        };
+        let res = trainer.finetune(
+            &cfg,
+            |step, _| blobs::collate(&blobs::dataset(64, 0.35, 0xF00 ^ (step as u64) << 13)),
+            Some(&mut eval_fn),
+        )?;
+        println!("{label:<18} final {:.1}%  best {:.1}%",
+                 100.0 * res.final_eval, 100.0 * res.best_eval);
+        if label.starts_with("FourierFT") {
+            fft_adapt = Some(res.adapt.clone());
+        }
+        trajectories.push((label.to_string(), res.evals));
+    }
+
+    // side-by-side trajectory table
+    println!("\nstep      {}", trajectories.iter().map(|(l, _)| format!("{l:<18}")).collect::<String>());
+    let max_len = trajectories.iter().map(|(_, e)| e.len()).max().unwrap_or(0);
+    for i in 0..max_len {
+        let step = trajectories[0].1.get(i).map(|(s, _)| *s).unwrap_or(0);
+        let mut line = format!("{step:<9} ");
+        for (_, evals) in &trajectories {
+            if let Some((_, acc)) = evals.get(i) {
+                line.push_str(&format!("{:<18.3}", acc));
+            }
+        }
+        println!("{line}");
+    }
+
+    // Effective rank of the learned FourierFT ΔW vs LoRA's structural rank 1.
+    if let Some(adapt) = fft_adapt {
+        if let Some((_, coeffs)) = adapt.iter().find(|(k, _)| k == "spec.w2.w.c") {
+            let delta = delta_host(coeffs, 2024, 128, 64, 64, 64.0)?;
+            let erank = effective_rank(&delta)?;
+            println!(
+                "\nΔW analysis: FourierFT n=128 produces effective rank ≈ {erank:.1} \
+                 (LoRA r=1 is rank 1 by construction) — the expressivity gap of Fig. 7"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Effective rank via the entropy of the singular-value spectrum,
+/// exp(H(sigma^2 / sum sigma^2)), estimated with power iteration deflation.
+fn effective_rank(m: &Tensor) -> anyhow::Result<f64> {
+    // cheap estimate: Frobenius vs spectral norms over a few power iters
+    let d = m.shape[0];
+    let data = m.as_f32()?;
+    // Gram matrix eigenvalues via Jacobi-ish power deflation (top 16)
+    let mut gram = vec![0.0f64; d * d];
+    for i in 0..d {
+        for j in 0..d {
+            let mut acc = 0.0f64;
+            for k in 0..d {
+                acc += data[i * d + k] as f64 * data[j * d + k] as f64;
+            }
+            gram[i * d + j] = acc;
+        }
+    }
+    let mut eigs = Vec::new();
+    let mut g = gram;
+    for t in 0..16 {
+        let mut v = vec![1.0f64 / (d as f64).sqrt(); d];
+        let mut lambda = 0.0;
+        for _ in 0..50 {
+            let mut nv = vec![0.0f64; d];
+            for i in 0..d {
+                for j in 0..d {
+                    nv[i] += g[i * d + j] * v[j];
+                }
+            }
+            lambda = nv.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if lambda < 1e-12 {
+                break;
+            }
+            for (vi, nvi) in v.iter_mut().zip(&nv) {
+                *vi = nvi / lambda;
+            }
+        }
+        if lambda < 1e-12 {
+            break;
+        }
+        eigs.push(lambda);
+        // deflate
+        for i in 0..d {
+            for j in 0..d {
+                g[i * d + j] -= lambda * v[i] * v[j];
+            }
+        }
+        let _ = t;
+    }
+    let total: f64 = eigs.iter().sum();
+    let h: f64 = eigs
+        .iter()
+        .filter(|&&e| e > 1e-12)
+        .map(|e| {
+            let p = e / total;
+            -p * p.ln()
+        })
+        .sum();
+    Ok(h.exp())
+}

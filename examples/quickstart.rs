@@ -1,0 +1,68 @@
+//! Quickstart: the 60-second tour of fourier-peft.
+//!
+//! 1. open the artifact registry (built once by `make artifacts`),
+//! 2. fine-tune a FourierFT adapter (n=128 spectral coefficients) on the
+//!    Figure-7 synthetic task,
+//! 3. save the adapter (~a few hundred bytes of coefficients!),
+//! 4. reload it and serve a prediction.
+//!
+//! Run: `cargo run --example quickstart`
+
+use fourier_peft::adapter::{AdapterFile, AdapterKind, AdapterStore};
+use fourier_peft::coordinator::trainer::{FinetuneCfg, Trainer};
+use fourier_peft::data::blobs;
+use fourier_peft::metrics::classify;
+use fourier_peft::util::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. runtime + registry ------------------------------------------
+    let trainer = Trainer::open_default()?;
+    println!("PJRT platform: {}", trainer.client.platform());
+
+    // --- 2. fine-tune: FourierFT with n=128 spectral coefficients --------
+    let artifact = "mlp__fourierft_n128__ce";
+    let mut cfg = FinetuneCfg::new(artifact);
+    cfg.lr = 0.05;
+    cfg.scaling = 64.0; // the paper's alpha
+    cfg.steps = 200;
+    cfg.entry_seed = 2024; // the paper's shared entry seed
+    println!("fine-tuning {artifact} for {} steps ...", cfg.steps);
+    let result = trainer.finetune(
+        &cfg,
+        |step, _rng| blobs::collate(&blobs::dataset(64, 0.35, step as u64)),
+        None,
+    )?;
+    println!(
+        "loss {:.3} -> {:.3} in {:.1}s",
+        result.losses.first().unwrap(),
+        result.losses.last().unwrap(),
+        result.train_seconds
+    );
+
+    // --- 3. save the adapter --------------------------------------------
+    let mut store = AdapterStore::open(&fourier_peft::runs_dir().join("quickstart"))?;
+    let file = AdapterFile {
+        kind: AdapterKind::FourierFt,
+        seed: cfg.entry_seed,
+        alpha: cfg.scaling,
+        meta: vec![("task".into(), "blobs8".into()), ("n".into(), "128".into())],
+        tensors: result.adapt,
+    };
+    let bytes = store.save("blobs8", &file)?;
+    println!("adapter saved: {} ({} trainable coefficients/site)", fmt_bytes(bytes), 128);
+
+    // --- 4. reload + serve ----------------------------------------------
+    let exe = trainer.executable(artifact)?;
+    let (statics, _) = trainer.make_statics(&exe.meta, cfg.entry_seed, cfg.bias)?;
+    let base = trainer.base_for(&exe.meta)?;
+    let mut state = exe.init_state(0, base, statics)?;
+    let reloaded = store.load("blobs8")?;
+    exe.set_adapt(&mut state, &reloaded.tensors.into_iter().collect())?;
+
+    let pts = blobs::dataset(64, 0.35, 0xDEED);
+    let out = exe.eval(&mut state, cfg.scaling, &blobs::collate(&pts))?;
+    let preds = classify::argmax_rows(out.logits.as_f32()?, 8);
+    let labels: Vec<i32> = pts.iter().map(|p| p.class as i32).collect();
+    println!("served accuracy: {:.1}%", 100.0 * classify::accuracy(&preds, &labels));
+    Ok(())
+}

@@ -1,0 +1,259 @@
+"""AOT driver: lower every manifest artifact to HLO *text* + meta JSON.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 rust crate links) rejects
+(``proto.id() <= INT_MAX``). The HLO text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs per ArtifactSpec under ``artifacts/``:
+
+  <name>.step.hlo.txt   fused train/eval step (lr=0 => pure eval)
+  <name>.init.hlo.txt   seed -> initial adapt/m/v tensors
+  <name>.meta.json      tensor-level ABI: ordered inputs/outputs with
+                        name/dtype/shape/role + param-count accounting
+
+plus per architecture ``<model>.base.hlo.txt`` (seed -> base params) and
+per (d, n) FourierFT shape ``delta_d{d}_n{n}.hlo.txt`` (E, c, alpha -> ΔW,
+used by the rust serving/merge path), and a global ``manifest.json``.
+
+Python runs ONLY here (build time); the rust coordinator never imports it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import layers, train
+from .configs import ArtifactSpec, build_manifest, manifest_dict
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def sortd(d: "OrderedDict") -> "OrderedDict":
+    """Re-key an OrderedDict in sorted order. jax flattens OrderedDicts in
+    *insertion* order (unlike plain dicts, which flatten sorted), so every
+    dict that crosses the HLO ABI is normalized to sorted order — the meta
+    JSON records the same order and the rust side relies on it."""
+    return OrderedDict((k, d[k]) for k in sorted(d))
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _zeros(shapes: "OrderedDict[str, tuple]"):
+    return OrderedDict((k, jnp.zeros(s, jnp.float32)) for k, s in shapes.items())
+
+
+def _spec_arrays(spec: ArtifactSpec):
+    """Abstract example arrays for lowering the step fn, plus IO metadata."""
+    cfg, method = spec.model, spec.method
+    base = sortd(layers.init_base(cfg, jax.random.PRNGKey(0)))
+    adapt = sortd(layers.init_adapt(cfg, method, spec.loss, jax.random.PRNGKey(1)))
+    statics = sortd(OrderedDict(
+        (k, jnp.zeros(shape, DTYPES[dt]))
+        for k, (dt, shape) in layers.static_shapes(cfg, method).items()
+    ))
+    scalars = sortd(OrderedDict(
+        (k, jnp.zeros((), jnp.float32)) for k in train.scalar_names()))
+    batch = sortd(OrderedDict(
+        (k, jnp.zeros(shape, DTYPES[dt]))
+        for k, (dt, shape) in train.batch_shapes(spec).items()
+    ))
+    return base, adapt, statics, scalars, batch
+
+
+def _io_meta(groups: "list[tuple[str, OrderedDict]]"):
+    out = []
+    for role, d in groups:
+        for k, v in d.items():
+            out.append({
+                "name": k,
+                "role": role,
+                "dtype": "i32" if v.dtype == jnp.int32 else "f32",
+                "shape": list(v.shape),
+            })
+    return out
+
+
+def lower_step(spec: ArtifactSpec, outdir: str) -> dict:
+    base, adapt, statics, scalars, batch = _spec_arrays(spec)
+    m = OrderedDict((k, jnp.zeros_like(v)) for k, v in adapt.items())
+    v_ = OrderedDict((k, jnp.zeros_like(v)) for k, v in adapt.items())
+
+    def step(base, adapt, m, v, statics, scalars, batch):
+        a2, m2, v2, loss, logits = train.train_step(
+            spec, base, adapt, m, v, statics, scalars, batch)
+        return sortd(a2), sortd(m2), sortd(v2), loss, logits
+
+    lowered = jax.jit(step, keep_unused=True).lower(base, adapt, m, v_, statics, scalars, batch)
+    text = to_hlo_text(lowered)
+    path = os.path.join(outdir, f"{spec.name}.step.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+
+    # Input order matches jax's flattening of the positional args: every
+    # OrderedDict is pre-sorted by sortd(), args flatten left-to-right.
+    inputs = _io_meta([
+        ("base", base), ("adapt", adapt), ("opt_m", m),
+        ("opt_v", v_), ("static", statics),
+        ("scalar", scalars), ("batch", batch),
+    ])
+    logits_shape = jax.eval_shape(
+        lambda *a: train.model_logits(spec, *a), base, adapt, statics, scalars, batch
+    )
+    outputs = _io_meta([
+        ("adapt", adapt), ("opt_m", m), ("opt_v", v_),
+    ]) + [
+        {"name": "loss", "role": "loss", "dtype": "f32", "shape": []},
+        {"name": "logits", "role": "logits", "dtype": "f32",
+         "shape": list(logits_shape.shape)},
+    ]
+    return {"step_hlo": os.path.basename(path), "inputs": inputs, "outputs": outputs}
+
+
+def lower_init(spec: ArtifactSpec, outdir: str) -> str:
+    """seed (i32 scalar) -> initial (adapt, m, v) tensors."""
+    def init(seed):
+        key = jax.random.PRNGKey(seed)
+        adapt = sortd(layers.init_adapt(spec.model, spec.method, spec.loss, key))
+        zeros = OrderedDict((k, jnp.zeros_like(v)) for k, v in adapt.items())
+        return adapt, zeros, zeros
+
+    lowered = jax.jit(init, keep_unused=True).lower(jnp.zeros((), jnp.int32))
+    path = os.path.join(outdir, f"{spec.name}.init.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return os.path.basename(path)
+
+
+def lower_base(model_cfg, outdir: str) -> dict:
+    def init(seed):
+        return sortd(layers.init_base(model_cfg, jax.random.PRNGKey(seed)))
+
+    lowered = jax.jit(init, keep_unused=True).lower(jnp.zeros((), jnp.int32))
+    path = os.path.join(outdir, f"{model_cfg.name}.base.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    base = layers.init_base(model_cfg, jax.random.PRNGKey(0))
+    tensors = [
+        {"name": k, "dtype": "f32", "shape": list(v.shape)}
+        for k, v in sorted(base.items())
+    ]
+    return {"base_hlo": os.path.basename(path), "tensors": tensors}
+
+
+def lower_delta(d: int, n: int, outdir: str) -> str:
+    """Standalone ΔW reconstruction (E, c, alpha) -> [d, d] for the rust
+    adapter-merge / serving path; exercises the same L1 Pallas kernel."""
+    def delta(entries, coeffs, alpha):
+        return layers.fourier_delta(entries, coeffs, alpha, d, d)
+
+    lowered = jax.jit(delta).lower(
+        jnp.zeros((2, n), jnp.int32), jnp.zeros((n,), jnp.float32),
+        jnp.zeros((), jnp.float32),
+    )
+    name = f"delta_d{d}_n{n}.hlo.txt"
+    with open(os.path.join(outdir, name), "w") as f:
+        f.write(to_hlo_text(lowered))
+    return name
+
+
+def trainable_counts(spec: ArtifactSpec) -> dict:
+    adapt = layers.init_adapt(spec.model, spec.method, spec.loss, jax.random.PRNGKey(0))
+    head = sum(int(v.size) for k, v in adapt.items()
+               if k.startswith("head.") or k.startswith("delta.head."))
+    total = sum(int(v.size) for v in adapt.values())
+    return {"trainable": total, "trainable_ex_head": total - head, "head": head}
+
+
+def source_fingerprint() -> str:
+    here = os.path.dirname(__file__)
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    specs = build_manifest()
+    if args.only:
+        specs = [s for s in specs if args.only in s.name]
+
+    manifest = {"fingerprint": source_fingerprint(), "specs": [], "bases": {},
+                "deltas": []}
+    # Incremental mode: merge the previous manifest so a filtered rebuild
+    # does not orphan the untouched artifact families.
+    prev_path = os.path.join(args.out, "manifest.json")
+    if args.only and os.path.exists(prev_path):
+        with open(prev_path) as f:
+            prev = json.load(f)
+        rebuilt = {s.name for s in specs}
+        manifest["specs"] = [e for e in prev.get("specs", []) if e["name"] not in rebuilt]
+        manifest["bases"] = prev.get("bases", {})
+        manifest["deltas"] = prev.get("deltas", [])
+
+    # Bases of models touched this run are always re-lowered (their init
+    # may have changed); untouched models keep their previous entries.
+    done_models: set = set(manifest["bases"].keys()) - {s.model.name for s in specs}
+    done_deltas = {(e["d"], e["n"]) for e in manifest["deltas"]}
+    for i, spec in enumerate(specs):
+        print(f"[{i + 1}/{len(specs)}] {spec.name}", flush=True)
+        entry = dict(manifest_dict_entry(spec))
+        entry.update(lower_step(spec, args.out))
+        entry["init_hlo"] = lower_init(spec, args.out)
+        entry["counts"] = trainable_counts(spec)
+        manifest["specs"].append(entry)
+
+        if spec.model.name not in done_models:
+            done_models.add(spec.model.name)
+            manifest["bases"][spec.model.name] = lower_base(spec.model, args.out)
+        if spec.method.name == "fourierft":
+            d = spec.model.d if spec.model.kind != "mlp" else spec.model.hidden
+            key = (d, spec.method.n)
+            if key not in done_deltas:
+                done_deltas.add(key)
+                manifest["deltas"].append(
+                    {"d": d, "n": spec.method.n,
+                     "hlo": lower_delta(d, spec.method.n, args.out)})
+
+        # write meta sidecar per spec
+        with open(os.path.join(args.out, f"{spec.name}.meta.json"), "w") as f:
+            json.dump(entry, f, indent=1)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(specs)} artifact families to {args.out}")
+
+
+def manifest_dict_entry(spec: ArtifactSpec) -> dict:
+    from dataclasses import asdict
+
+    return {"name": spec.name, "model": asdict(spec.model),
+            "method": asdict(spec.method), "loss": spec.loss}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,416 @@
+"""Layer-2 building blocks: parameter init, PEFT weight deltas, and the
+transformer / MLP forward passes.
+
+Parameters are *flat* ``OrderedDict[str, jnp.ndarray]`` keyed by dotted
+paths ("blk0.attn.wq", ...). The same layout is mirrored by the rust
+runtime via the artifact meta JSON, so keeping it flat (no pytrees) makes
+the ABI explicit.
+
+Every method is expressed as "frozen base + delta":
+
+    W_eff = base[k] + delta_k(adapt, statics)
+
+For ``ff`` the delta is a dense tensor initialized to zero — since Adam is
+translation-invariant this is trajectory-identical to training the weight
+itself, and it lets one rust code path ("merge deltas into base") serve
+every method, including pretraining.
+"""
+
+from __future__ import annotations
+
+import functools
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+
+from .configs import MethodCfg, ModelCfg
+from .kernels.fourier import spectral_to_delta
+
+Params = "OrderedDict[str, jnp.ndarray]"
+
+ADAPTED_SITES = ("attn.wq", "attn.wv")  # paper: query & value only
+
+
+# ---------------------------------------------------------------------------
+# FourierFT delta with custom VJP (Pallas forward, analytic trig adjoint)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _spectral_delta_fn(d1: int, d2: int):
+    """Differentiable Delta_W = alpha * Re(IDFT2(ToDense(E, c))).
+
+    Forward runs the L1 Pallas kernel; backward is the analytic adjoint
+
+        dL/dc_l = alpha/(d1 d2) * [Cu^T G Cv - Su^T G Sv]_ll
+                = alpha/(d1 d2) * [((G @ Cv) * Cu).sum(0) - ((G @ Sv) * Su).sum(0)]
+
+    i.e. the same rank-n trig contraction transposed — two [d1,d2]x[d2,n]
+    matmuls, MXU-friendly like the forward.
+    """
+
+    @jax.custom_vjp
+    def f(entries, coeffs, alpha):
+        return spectral_to_delta(entries, coeffs, alpha, d1=d1, d2=d2)
+
+    def fwd(entries, coeffs, alpha):
+        return f(entries, coeffs, alpha), (entries, alpha)
+
+    def bwd(res, g):
+        entries, alpha = res
+        j = entries[0].astype(jnp.float32)
+        k = entries[1].astype(jnp.float32)
+        p = jnp.arange(d1, dtype=jnp.float32)[:, None]
+        q = jnp.arange(d2, dtype=jnp.float32)[:, None]
+        tu = 2.0 * jnp.pi / d1 * p * j[None, :]  # [d1, n]
+        tv = 2.0 * jnp.pi / d2 * q * k[None, :]  # [d2, n]
+        gc = ((g @ jnp.cos(tv)) * jnp.cos(tu)).sum(0) - (
+            (g @ jnp.sin(tv)) * jnp.sin(tu)
+        ).sum(0)
+        gc = gc * (alpha / (d1 * d2))
+        zero_e = jnp.zeros(entries.shape, dtype=jax.dtypes.float0)
+        zero_a = jnp.zeros((), dtype=jnp.float32)
+        return zero_e, gc.astype(jnp.float32), zero_a
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def fourier_delta(entries, coeffs, alpha, d1: int, d2: int):
+    return _spectral_delta_fn(d1, d2)(entries, coeffs, alpha)
+
+
+# ---------------------------------------------------------------------------
+# Base parameter init
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, fan_in: int, shape) -> jnp.ndarray:
+    return jax.random.normal(key, shape, jnp.float32) * (fan_in ** -0.5)
+
+
+def init_base(cfg: ModelCfg, key) -> "OrderedDict[str, jnp.ndarray]":
+    """Initialize the frozen backbone (no task head — heads live in the
+    adapt tree since they are always trainable)."""
+    p = OrderedDict()
+    keys = iter(jax.random.split(key, 1024))
+
+    def dense(name, din, dout, bias=True):
+        p[f"{name}.w"] = _dense_init(next(keys), din, (din, dout))
+        if bias:
+            p[f"{name}.b"] = jnp.zeros((dout,), jnp.float32)
+
+    def ln(name):
+        p[f"{name}.g"] = jnp.ones((cfg.d,), jnp.float32)
+        p[f"{name}.b"] = jnp.zeros((cfg.d,), jnp.float32)
+
+    if cfg.kind == "mlp":
+        # Fig. 7: 2 -> hidden -> hidden -> classes; the adapted site is the
+        # hidden x hidden matrix, exactly as in the paper's appendix C.2.
+        # The head lives in the (freezable) base so the _fh variants can
+        # reproduce the paper's "only the hidden layer trains" protocol.
+        p["w1.w"] = _dense_init(next(keys), 2, (2, cfg.hidden))
+        p["w1.b"] = jnp.zeros((cfg.hidden,), jnp.float32)
+        p["w2.w"] = _dense_init(next(keys), cfg.hidden, (cfg.hidden, cfg.hidden))
+        p["w2.b"] = jnp.zeros((cfg.hidden,), jnp.float32)
+        p["head.w"] = _dense_init(next(keys), cfg.hidden, (cfg.hidden, cfg.classes))
+        p["head.b"] = jnp.zeros((cfg.classes,), jnp.float32)
+        return p
+
+    if cfg.kind == "denoiser":
+        # DreamBooth-sim (Table 13): flat-pixel denoiser 768 -> h -> h -> 768
+        # with the h x h core as the adapted site (mirrors adapting the
+        # diffusion UNet's attention weights).
+        pix = cfg.img * cfg.img * cfg.channels
+        p["fc_in.w"] = _dense_init(next(keys), pix, (pix, cfg.hidden))
+        p["fc_in.b"] = jnp.zeros((cfg.hidden,), jnp.float32)
+        p["w2.w"] = _dense_init(next(keys), cfg.hidden, (cfg.hidden, cfg.hidden))
+        p["w2.b"] = jnp.zeros((cfg.hidden,), jnp.float32)
+        p["fc_out.w"] = _dense_init(next(keys), cfg.hidden, (cfg.hidden, pix))
+        p["fc_out.b"] = jnp.zeros((pix,), jnp.float32)
+        return p
+
+    if cfg.kind in ("encoder", "decoder"):
+        p["tok_emb"] = jax.random.normal(next(keys), (cfg.vocab, cfg.d)) * 0.02
+        p["pos_emb"] = jax.random.normal(next(keys), (cfg.tokens, cfg.d)) * 0.02
+    elif cfg.kind == "vit":
+        pdim = cfg.patch * cfg.patch * cfg.channels
+        dense("patch", pdim, cfg.d)
+        p["cls_tok"] = jax.random.normal(next(keys), (1, cfg.d)) * 0.02
+        p["pos_emb"] = jax.random.normal(next(keys), (cfg.tokens, cfg.d)) * 0.02
+
+    for i in range(cfg.layers):
+        b = f"blk{i}"
+        ln(f"{b}.ln1")
+        for w in ("wq", "wk", "wv", "wo"):
+            dense(f"{b}.attn.{w}", cfg.d, cfg.d)
+        ln(f"{b}.ln2")
+        dense(f"{b}.mlp.fc1", cfg.d, cfg.dff)
+        dense(f"{b}.mlp.fc2", cfg.dff, cfg.d)
+    ln("ln_f")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Adapt (trainable) parameter init
+# ---------------------------------------------------------------------------
+
+
+def adapted_weight_keys(cfg: ModelCfg) -> list[str]:
+    """Base keys whose weight gets a LoRA / FourierFT / basis delta."""
+    if cfg.kind in ("mlp", "denoiser"):
+        return ["w2.w"]
+    return [f"blk{i}.{s}.w" for i in range(cfg.layers) for s in ADAPTED_SITES]
+
+
+def head_shapes(cfg: ModelCfg, loss: str) -> "OrderedDict[str, tuple]":
+    h = OrderedDict()
+    if cfg.kind == "denoiser":
+        return h  # no task head: the output projection stays frozen
+    if cfg.kind == "mlp":
+        # mlp heads are deltas on the base head (freezable, Fig. 7)
+        h["delta.head.w"] = (cfg.hidden, cfg.classes)
+        h["delta.head.b"] = (cfg.classes,)
+    elif cfg.kind == "decoder" or loss == "mlm":
+        # decoder LM head, or encoder masked-token pretraining head
+        h["head.w"] = (cfg.d, cfg.vocab)
+        h["head.b"] = (cfg.vocab,)
+    else:
+        out = 1 if loss == "mse" else cfg.classes
+        h["head.w"] = (cfg.d, out)
+        h["head.b"] = (out,)
+    return h
+
+
+def init_adapt(cfg: ModelCfg, method: MethodCfg, loss: str, key):
+    """Trainable parameters: task head + method-specific deltas.
+
+    Zero-initialized deltas guarantee the fine-tune starts exactly at the
+    pretrained function (LoRA achieves this with B=0; FourierFT with c=0 —
+    the paper's Gaussian c-init is available for its ablation but zero-init
+    matches the peft library default and keeps eval@step0 == pretrained).
+    """
+    p = OrderedDict()
+    keys = iter(jax.random.split(key, 4096))
+    sites = adapted_weight_keys(cfg)
+
+    if method.name == "ff":
+        for k, v in init_base(cfg, next(keys)).items():
+            if k.startswith("head.") and not method.head:
+                continue  # frozen-head FF (Fig. 7 protocol)
+            p[f"delta.{k}"] = jnp.zeros_like(v)
+    elif method.name == "bitfit":
+        for k, v in init_base(cfg, next(keys)).items():
+            if k.endswith(".b") and "ln" not in k:
+                p[f"delta.{k}"] = jnp.zeros_like(v)
+    elif method.name == "adapter":
+        # Houlsby-style: two bottlenecks per block (post-attn, post-mlp).
+        for i in range(cfg.layers):
+            for spot in ("attn", "mlp"):
+                b = f"adpt.blk{i}.{spot}"
+                p[f"{b}.down.w"] = _dense_init(next(keys), cfg.d, (cfg.d, method.m))
+                p[f"{b}.down.b"] = jnp.zeros((method.m,), jnp.float32)
+                p[f"{b}.up.w"] = jnp.zeros((method.m, cfg.d), jnp.float32)
+                p[f"{b}.up.b"] = jnp.zeros((cfg.d,), jnp.float32)
+    elif method.name == "lora":
+        for k in sites:
+            d1 = _site_dims(cfg, k)[0]
+            d2 = _site_dims(cfg, k)[1]
+            p[f"lora.{k}.a"] = _dense_init(next(keys), d1, (method.r, d2))
+            p[f"lora.{k}.b"] = jnp.zeros((d1, method.r), jnp.float32)
+    elif method.name in ("fourierft", "randbasis", "orthobasis"):
+        for k in sites:
+            p[f"spec.{k}.c"] = jnp.zeros((method.n,), jnp.float32)
+    elif method.name == "lp":
+        pass
+    else:
+        raise ValueError(f"unknown method {method.name}")
+
+    for k, shp in head_shapes(cfg, loss).items():
+        if k in p:
+            continue  # ff already materialized the head delta
+        if not method.head:
+            continue  # frozen head: no trainable head tensors at all
+        if k.startswith("delta."):
+            p[k] = jnp.zeros(shp, jnp.float32)  # delta on a base head
+        elif k.endswith(".w"):
+            p[k] = _dense_init(next(keys), shp[0], shp)
+        else:
+            p[k] = jnp.zeros(shp, jnp.float32)
+    return p
+
+
+def _site_dims(cfg: ModelCfg, key: str) -> tuple[int, int]:
+    if cfg.kind in ("mlp", "denoiser"):
+        return (cfg.hidden, cfg.hidden)
+    return (cfg.d, cfg.d)
+
+
+def static_shapes(cfg: ModelCfg, method: MethodCfg) -> "OrderedDict[str, tuple]":
+    """Frozen non-base inputs supplied by the rust coordinator each call:
+    the shared spectral entry matrix E, or the ablation basis pair."""
+    s = OrderedDict()
+    d1, d2 = _site_dims(cfg, adapted_weight_keys(cfg)[0]) if adapted_weight_keys(cfg) else (cfg.d, cfg.d)
+    if method.name == "fourierft":
+        s["entries"] = ("i32", (2, method.n))
+    elif method.name in ("randbasis", "orthobasis"):
+        s["entries"] = ("i32", (2, method.n))
+        s["basis1"] = ("f32", (d1, d1))
+        s["basis2"] = ("f32", (d2, d2))
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Effective weights + forward passes
+# ---------------------------------------------------------------------------
+
+
+def effective_weight(cfg, method, base, adapt, statics, key, scaling):
+    """W_eff for base tensor ``key`` under the active method.
+
+    ``scaling`` is the runtime scalar (alpha for spectral methods, the
+    LoRA scaling for lora; unused otherwise).
+    """
+    w = base[key]
+    if method.name == "ff":
+        return w + adapt[f"delta.{key}"]
+    if method.name == "bitfit":
+        dk = f"delta.{key}"
+        return w + adapt[dk] if dk in adapt else w
+    if method.name == "lora" and key in _adapted_set(cfg):
+        return w + adapt[f"lora.{key}.b"] @ adapt[f"lora.{key}.a"] * scaling
+    if method.name == "fourierft" and key in _adapted_set(cfg):
+        d1, d2 = w.shape
+        return w + fourier_delta(statics["entries"], adapt[f"spec.{key}.c"],
+                                 scaling, d1, d2)
+    if method.name in ("randbasis", "orthobasis") and key in _adapted_set(cfg):
+        d1, d2 = w.shape
+        f = jnp.zeros((d1, d2), jnp.float32).at[
+            statics["entries"][0], statics["entries"][1]
+        ].set(adapt[f"spec.{key}.c"])
+        return w + statics["basis1"] @ f @ statics["basis2"].T * scaling
+    return w
+
+
+@functools.lru_cache(maxsize=None)
+def _adapted_set_cached(cfg: ModelCfg) -> frozenset:
+    return frozenset(adapted_weight_keys(cfg))
+
+
+def _adapted_set(cfg) -> frozenset:
+    return _adapted_set_cached(cfg)
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(cfg: ModelCfg, x, wq, wk, wv, wo, bq, bk_, bv, bo, causal: bool):
+    b, t, d = x.shape
+    h, dh = cfg.heads, cfg.d // cfg.heads
+
+    def split(z):
+        return z.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+
+    q = split(x @ wq + bq)
+    k = split(x @ wk + bk_)
+    v = split(x @ wv + bv)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(dh))
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        att = jnp.where(mask[None, None], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ wo + bo
+
+
+def _maybe_adapter(adapt, tag, x):
+    """Houlsby bottleneck with residual; identity when the method has none."""
+    dw = adapt.get(f"{tag}.down.w")
+    if dw is None:
+        return x
+    h = jax.nn.gelu(x @ dw + adapt[f"{tag}.down.b"])
+    return x + h @ adapt[f"{tag}.up.w"] + adapt[f"{tag}.up.b"]
+
+
+def transformer_trunk(cfg, method, base, adapt, statics, x, scaling, causal):
+    """Shared encoder/decoder/vit trunk over embedded tokens x: [B,T,D]."""
+    W = lambda k: effective_weight(cfg, method, base, adapt, statics, k, scaling)
+    for i in range(cfg.layers):
+        blk = f"blk{i}"
+        h = _layer_norm(x, base[f"{blk}.ln1.g"], base[f"{blk}.ln1.b"])
+        h = _attention(
+            cfg, h,
+            W(f"{blk}.attn.wq.w"), W(f"{blk}.attn.wk.w"),
+            W(f"{blk}.attn.wv.w"), W(f"{blk}.attn.wo.w"),
+            _bias(cfg, method, base, adapt, f"{blk}.attn.wq.b"),
+            _bias(cfg, method, base, adapt, f"{blk}.attn.wk.b"),
+            _bias(cfg, method, base, adapt, f"{blk}.attn.wv.b"),
+            _bias(cfg, method, base, adapt, f"{blk}.attn.wo.b"),
+            causal,
+        )
+        h = _maybe_adapter(adapt, f"adpt.blk{i}.attn", h)
+        x = x + h
+        h = _layer_norm(x, base[f"{blk}.ln2.g"], base[f"{blk}.ln2.b"])
+        h = jax.nn.gelu(h @ W(f"{blk}.mlp.fc1.w")
+                        + _bias(cfg, method, base, adapt, f"{blk}.mlp.fc1.b"))
+        h = h @ W(f"{blk}.mlp.fc2.w") + _bias(cfg, method, base, adapt, f"{blk}.mlp.fc2.b")
+        h = _maybe_adapter(adapt, f"adpt.blk{i}.mlp", h)
+        x = x + h
+    return _layer_norm(x, base["ln_f.g"], base["ln_f.b"])
+
+
+def _bias(cfg, method, base, adapt, key):
+    b = base[key]
+    if method.name == "ff":
+        return b + adapt[f"delta.{key}"]
+    if method.name == "bitfit":
+        dk = f"delta.{key}"
+        return b + adapt[dk] if dk in adapt else b
+    return b
+
+
+def forward(cfg: ModelCfg, method: MethodCfg, loss: str, base, adapt, statics,
+            x, scaling):
+    """Model forward -> logits.
+
+    encoder/vit: [B, classes-or-1] off the first token; decoder: [B, T, V];
+    mlp: [B, classes].
+    """
+    if cfg.kind == "denoiser":
+        W = lambda k: effective_weight(cfg, method, base, adapt, statics, k, scaling)
+        h = jnp.tanh(x @ W("fc_in.w") + _bias(cfg, method, base, adapt, "fc_in.b"))
+        h = jnp.tanh(h @ W("w2.w") + _bias(cfg, method, base, adapt, "w2.b"))
+        out = h @ W("fc_out.w") + _bias(cfg, method, base, adapt, "fc_out.b")
+        return jax.nn.sigmoid(out)  # pixels in [0, 1]
+
+    if cfg.kind == "mlp":
+        W = lambda k: effective_weight(cfg, method, base, adapt, statics, k, scaling)
+        h = jnp.tanh(x @ W("w1.w") + _bias(cfg, method, base, adapt, "w1.b"))
+        h = jnp.tanh(h @ W("w2.w") + _bias(cfg, method, base, adapt, "w2.b"))
+        hw = base["head.w"] + adapt.get("delta.head.w", 0.0)
+        hb = base["head.b"] + adapt.get("delta.head.b", 0.0)
+        return h @ hw + hb
+
+    if cfg.kind in ("encoder", "decoder"):
+        tok = base["tok_emb"][x]  # x: i32 [B, T]
+        h = tok + base["pos_emb"][None, : x.shape[1]]
+    else:  # vit: x f32 [B, img, img, C]
+        b = x.shape[0]
+        pp, ch = cfg.patch, cfg.channels
+        g = cfg.img // pp
+        patches = x.reshape(b, g, pp, g, pp, ch).transpose(0, 1, 3, 2, 4, 5)
+        patches = patches.reshape(b, g * g, pp * pp * ch)
+        emb = patches @ base["patch.w"] + base["patch.b"]
+        cls = jnp.broadcast_to(base["cls_tok"], (b, 1, cfg.d))
+        h = jnp.concatenate([cls, emb], axis=1) + base["pos_emb"][None]
+
+    h = transformer_trunk(cfg, method, base, adapt, statics, h,
+                          scaling, causal=(cfg.kind == "decoder"))
+    if cfg.kind == "decoder" or loss == "mlm":
+        return h @ adapt["head.w"] + adapt["head.b"]  # [B, T, V]
+    return h[:, 0] @ adapt["head.w"] + adapt["head.b"]  # first/[CLS] token

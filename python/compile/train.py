@@ -1,0 +1,111 @@
+"""Layer-2 training step: losses + Adam(W), fused train/eval in one HLO.
+
+One artifact per (model, method, loss) serves both training and evaluation:
+the step returns ``(adapt', m', v', loss, logits)`` and running it with
+``lr = 0`` is a pure forward pass (Adam moments still roll but the rust
+coordinator discards them in eval mode). This halves the artifact count and
+guarantees train/eval numerics share one compiled module.
+
+All hyperparameters that do not change tensor *shapes* (lr, weight decay,
+the FourierFT scaling alpha / LoRA scaling, Adam step t) are runtime scalar
+inputs, so the rust coordinator can sweep them without re-lowering.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .configs import ArtifactSpec
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def batch_shapes(spec: ArtifactSpec) -> "OrderedDict[str, tuple]":
+    """Batch tensors the coordinator feeds each step (name -> (dtype, shape))."""
+    cfg, loss = spec.model, spec.loss
+    b = cfg.batch
+    s = OrderedDict()
+    if cfg.kind == "mlp":
+        s["x"] = ("f32", (b, 2))
+        s["y"] = ("i32", (b,))
+    elif cfg.kind == "denoiser":
+        pix = cfg.img * cfg.img * cfg.channels
+        s["x"] = ("f32", (b, pix))  # noisy pixels
+        s["y"] = ("f32", (b, pix))  # clean pixels
+    elif cfg.kind == "vit":
+        s["x"] = ("f32", (b, cfg.img, cfg.img, cfg.channels))
+        s["y"] = ("i32", (b,))
+    elif cfg.kind == "encoder":
+        s["x"] = ("i32", (b, cfg.seqlen))
+        if loss == "mse":
+            s["y"] = ("f32", (b,))
+        elif loss == "mlm":
+            s["y"] = ("i32", (b, cfg.seqlen))
+            s["mask"] = ("f32", (b, cfg.seqlen))
+        else:
+            s["y"] = ("i32", (b,))
+    else:  # decoder, lm loss
+        s["x"] = ("i32", (b, cfg.seqlen))
+        s["y"] = ("i32", (b, cfg.seqlen))
+        s["mask"] = ("f32", (b, cfg.seqlen))
+    return s
+
+
+def compute_loss(spec: ArtifactSpec, logits, batch):
+    loss_kind = spec.loss
+    if loss_kind == "ce":
+        lp = jax.nn.log_softmax(logits, -1)
+        nll = -jnp.take_along_axis(lp, batch["y"][:, None], axis=-1)
+        return nll.mean()
+    if loss_kind == "mse":
+        return ((logits[:, 0] - batch["y"]) ** 2).mean()
+    if loss_kind == "mseimg":
+        return ((logits - batch["y"]) ** 2).mean()
+    # lm / mlm: per-token CE with a validity mask.
+    lp = jax.nn.log_softmax(logits, -1)
+    nll = -jnp.take_along_axis(lp, batch["y"][..., None], axis=-1)[..., 0]
+    m = batch["mask"]
+    return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def model_logits(spec: ArtifactSpec, base, adapt, statics, scalars, batch):
+    return layers.forward(spec.model, spec.method, spec.loss, base, adapt,
+                          statics, batch["x"], scalars["scaling"])
+
+
+def train_step(spec: ArtifactSpec, base, adapt, m, v, statics, scalars, batch):
+    """One fused Adam(W) step. scalars: step (1-based, f32), lr, wd, scaling."""
+
+    def loss_fn(a):
+        logits = model_logits(spec, base, a, statics, scalars, batch)
+        return compute_loss(spec, logits, batch), logits
+
+    (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(adapt)
+
+    t = scalars["step"]
+    lr, wd = scalars["lr"], scalars["wd"]
+    lr_head = scalars["lr_head"]
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    new_a, new_m, new_v = OrderedDict(), OrderedDict(), OrderedDict()
+    for k in adapt:
+        g = grads[k]
+        mk = ADAM_B1 * m[k] + (1.0 - ADAM_B1) * g
+        vk = ADAM_B2 * v[k] + (1.0 - ADAM_B2) * g * g
+        upd = (mk / bc1) / (jnp.sqrt(vk / bc2) + ADAM_EPS)
+        # The paper tunes the task head with its own (smaller) learning
+        # rate — spectral coefficients want lr ~50x larger than dense
+        # head weights (Appendix B, Tables 9-12).
+        k_lr = lr_head if (k.startswith("head.") or k.startswith("delta.head.")) else lr
+        new_a[k] = adapt[k] - k_lr * upd - k_lr * wd * adapt[k]
+        new_m[k] = mk
+        new_v[k] = vk
+    return new_a, new_m, new_v, loss, logits
+
+
+def scalar_names() -> list[str]:
+    return ["step", "lr", "lr_head", "wd", "scaling"]

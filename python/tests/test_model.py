@@ -1,0 +1,186 @@
+"""L2 correctness: model shapes, PEFT delta semantics, and train-step
+behaviour (loss decreases; lr=0 is a pure eval; zero-init deltas preserve
+the base function)."""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers, train
+from compile.configs import (ArtifactSpec, MethodCfg, ModelCfg, MLP, ENC_BASE,
+                             DEC_MED, VIT_BASE, build_manifest)
+
+
+def make_all(spec: ArtifactSpec, seed=0):
+    base = layers.init_base(spec.model, jax.random.PRNGKey(seed))
+    adapt = layers.init_adapt(spec.model, spec.method, spec.loss,
+                              jax.random.PRNGKey(seed + 1))
+    statics = OrderedDict()
+    rng = np.random.default_rng(seed)
+    for k, (dt, shape) in layers.static_shapes(spec.model, spec.method).items():
+        if k == "entries":
+            d = spec.model.d if spec.model.kind != "mlp" else spec.model.hidden
+            flat = rng.choice(d * d, size=spec.method.n, replace=False)
+            statics[k] = jnp.asarray(np.stack([flat // d, flat % d]), jnp.int32)
+        else:
+            statics[k] = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    scalars = OrderedDict(step=jnp.asarray(1.0), lr=jnp.asarray(1e-3),
+                          lr_head=jnp.asarray(1e-3), wd=jnp.asarray(0.0),
+                          scaling=jnp.asarray(1.0))
+    batch = OrderedDict()
+    for k, (dt, shape) in train.batch_shapes(spec).items():
+        if dt == "i32":
+            hi = spec.model.vocab if len(shape) > 1 or spec.model.kind == "decoder" else max(spec.model.classes, 2)
+            if spec.model.kind in ("mlp", "vit") and k == "y":
+                hi = spec.model.classes
+            batch[k] = jnp.asarray(rng.integers(0, hi, size=shape), jnp.int32)
+        else:
+            batch[k] = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    if "mask" in batch:
+        batch["mask"] = jnp.ones_like(batch["mask"])
+    return base, adapt, statics, scalars, batch
+
+
+METHODS = [MethodCfg("ff"), MethodCfg("bitfit"), MethodCfg("lp"),
+           MethodCfg("adapter", m=4), MethodCfg("lora", r=2),
+           MethodCfg("fourierft", n=24), MethodCfg("randbasis", n=24),
+           MethodCfg("orthobasis", n=24)]
+
+SMALL_ENC = ModelCfg(name="enc_t", kind="encoder", d=32, layers=2, heads=2,
+                     dff=64, vocab=50, seqlen=8, classes=3, batch=4)
+SMALL_DEC = ModelCfg(name="dec_t", kind="decoder", d=32, layers=2, heads=2,
+                     dff=64, vocab=50, seqlen=8, batch=4)
+SMALL_VIT = ModelCfg(name="vit_t", kind="vit", d=32, layers=2, heads=2,
+                     dff=64, img=16, patch=4, classes=5, batch=4)
+SMALL_MLP = ModelCfg(name="mlp_t", kind="mlp", hidden=16, classes=8, batch=4)
+
+
+@pytest.mark.parametrize("method", METHODS, ids=lambda m: m.tag)
+@pytest.mark.parametrize("cfg,loss", [(SMALL_ENC, "ce"), (SMALL_DEC, "lm"),
+                                      (SMALL_VIT, "ce"), (SMALL_MLP, "ce")],
+                         ids=["enc", "dec", "vit", "mlp"])
+def test_forward_shapes(cfg, loss, method):
+    spec = ArtifactSpec(cfg, method, loss)
+    base, adapt, statics, scalars, batch = make_all(spec)
+    logits = train.model_logits(spec, base, adapt, statics, scalars, batch)
+    if loss == "lm":
+        assert logits.shape == (cfg.batch, cfg.seqlen, cfg.vocab)
+    else:
+        assert logits.shape == (cfg.batch, cfg.classes)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("method", METHODS, ids=lambda m: m.tag)
+def test_zero_init_preserves_base_function(method):
+    """At step 0 every method (with zero-init deltas / B=0 / c=0 / zero-up
+    adapters) must compute exactly the frozen-base forward."""
+    spec = ArtifactSpec(SMALL_ENC, method, "ce")
+    base, adapt, statics, scalars, batch = make_all(spec)
+    lp_spec = ArtifactSpec(SMALL_ENC, MethodCfg("lp"), "ce")
+    lp_adapt = OrderedDict((k, v) for k, v in adapt.items() if k.startswith("head."))
+    got = train.model_logits(spec, base, adapt, statics, scalars, batch)
+    want = train.model_logits(lp_spec, base, lp_adapt, OrderedDict(), scalars, batch)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("method", [MethodCfg("ff"), MethodCfg("lora", r=2),
+                                    MethodCfg("fourierft", n=24)],
+                         ids=lambda m: m.tag)
+@pytest.mark.parametrize("cfg,loss", [(SMALL_ENC, "ce"), (SMALL_DEC, "lm"),
+                                      (SMALL_MLP, "ce")], ids=["enc", "dec", "mlp"])
+def test_loss_decreases(cfg, loss, method):
+    spec = ArtifactSpec(cfg, method, loss)
+    base, adapt, statics, scalars, batch = make_all(spec)
+    scalars["lr"] = jnp.asarray(3e-3)
+    m = OrderedDict((k, jnp.zeros_like(v)) for k, v in adapt.items())
+    v = OrderedDict((k, jnp.zeros_like(v2)) for k, v2 in adapt.items())
+    step = jax.jit(lambda a, m, v, s: train.train_step(spec, base, a, m, v,
+                                                       statics, s, batch))
+    losses = []
+    for t in range(1, 31):
+        scalars["step"] = jnp.asarray(float(t))
+        adapt, m, v, loss_val, _ = step(adapt, m, v, scalars)
+        losses.append(float(loss_val))
+    assert losses[-1] < losses[0] * 0.9, losses[::10]
+
+
+def test_lr_zero_is_pure_eval():
+    spec = ArtifactSpec(SMALL_ENC, MethodCfg("fourierft", n=16), "ce")
+    base, adapt, statics, scalars, batch = make_all(spec)
+    scalars["lr"] = jnp.asarray(0.0)
+    scalars["lr_head"] = jnp.asarray(0.0)
+    m = OrderedDict((k, jnp.zeros_like(v)) for k, v in adapt.items())
+    v = OrderedDict((k, jnp.zeros_like(v2)) for k, v2 in adapt.items())
+    a2, _, _, loss, logits = train.train_step(spec, base, adapt, m, v, statics,
+                                              scalars, batch)
+    for k in adapt:
+        np.testing.assert_array_equal(adapt[k], a2[k])
+    want = train.model_logits(spec, base, adapt, statics, scalars, batch)
+    np.testing.assert_allclose(logits, want, rtol=1e-6)
+
+
+def test_ff_on_delta_equals_training_weights():
+    """Adam on a zero-init delta == Adam on the weight itself (translation
+    invariance) — validates the uniform 'everything is a delta' design."""
+    spec = ArtifactSpec(SMALL_MLP, MethodCfg("ff"), "ce")
+    base, adapt, statics, scalars, batch = make_all(spec)
+    scalars["lr"] = jnp.asarray(1e-2)
+    scalars["lr_head"] = jnp.asarray(1e-2)  # uniform rate for exact equivalence
+
+    m = OrderedDict((k, jnp.zeros_like(v)) for k, v in adapt.items())
+    v = OrderedDict((k, jnp.zeros_like(x)) for k, x in adapt.items())
+    a = adapt
+    for t in range(1, 6):
+        scalars["step"] = jnp.asarray(float(t))
+        a, m, v, _, _ = train.train_step(spec, base, a, m, v, statics, scalars, batch)
+
+    # Direct formulation: train the weights themselves.
+    def direct_loss(params):
+        h = jnp.tanh(batch["x"] @ params["w1.w"] + params["w1.b"])
+        h = jnp.tanh(h @ params["w2.w"] + params["w2.b"])
+        logits = h @ params["head.w"] + params["head.b"]
+        lp = jax.nn.log_softmax(logits, -1)
+        return -jnp.take_along_axis(lp, batch["y"][:, None], -1).mean()
+
+    params = {k: base[k] for k in base}
+    m2 = {k: jnp.zeros_like(x) for k, x in params.items()}
+    v2 = {k: jnp.zeros_like(x) for k, x in params.items()}
+    for t in range(1, 6):
+        g = jax.grad(direct_loss)(params)
+        for k in params:
+            m2[k] = 0.9 * m2[k] + 0.1 * g[k]
+            v2[k] = 0.999 * v2[k] + 0.001 * g[k] ** 2
+            mh = m2[k] / (1 - 0.9 ** t)
+            vh = v2[k] / (1 - 0.999 ** t)
+            params[k] = params[k] - 1e-2 * mh / (jnp.sqrt(vh) + 1e-8)
+
+    np.testing.assert_allclose(base["w2.w"] + a["delta.w2.w"], params["w2.w"],
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_trainable_param_counts_match_theory():
+    """Paper §3.2: |Θ|_FourierFT = n * L_t, |Θ|_LoRA = 2 d r L_t (ex head)."""
+    lt = 2 * ENC_BASE.layers  # W_q and W_v per block
+    from compile.aot import trainable_counts
+
+    c_fft = trainable_counts(ArtifactSpec(ENC_BASE, MethodCfg("fourierft", n=64), "ce"))
+    assert c_fft["trainable_ex_head"] == 64 * lt
+
+    c_lora = trainable_counts(ArtifactSpec(ENC_BASE, MethodCfg("lora", r=4), "ce"))
+    assert c_lora["trainable_ex_head"] == 2 * ENC_BASE.d * 4 * lt
+
+
+def test_manifest_names_unique():
+    names = [s.name for s in build_manifest()]
+    assert len(names) == len(set(names))
+
+
+def test_adapted_sites_query_value_only():
+    keys = layers.adapted_weight_keys(ENC_BASE)
+    assert all(("attn.wq" in k) or ("attn.wv" in k) for k in keys)
+    assert len(keys) == 2 * ENC_BASE.layers

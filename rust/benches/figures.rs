@@ -1,0 +1,32 @@
+//! Figure benches (`cargo bench --bench figures`): regenerates every paper
+//! *figure*'s data series in quick mode and times each driver (Figure 1 is
+//! the summary scatter assembled from tables 4/5 reports, so it is covered
+//! by `cargo bench --bench tables`; Figure 2 is a schematic).
+
+use fourier_peft::coordinator::experiments;
+use fourier_peft::coordinator::trainer::Trainer;
+use fourier_peft::util::cli::Args;
+use fourier_peft::util::timed;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let mut args = Args::parse(argv);
+    args.flags.entry("quick".into()).or_insert_with(|| "true".into());
+    args.flags.entry("steps".into()).or_insert_with(|| "25".into());
+    args.flags.entry("eval-count".into()).or_insert_with(|| "64".into());
+    args.flags.entry("seeds".into()).or_insert_with(|| "1".into());
+
+    let trainer = Trainer::open_default()?;
+    for id in ["figure3", "figure4", "figure5", "figure6", "figure7"] {
+        let (res, secs) = timed(|| experiments::run(&trainer, id, &args));
+        match res {
+            Ok(reports) => println!(
+                "bench {id:<8} ok   {:>8.1}s   ({} report(s))",
+                secs,
+                reports.len()
+            ),
+            Err(e) => println!("bench {id:<8} FAIL {:>8.1}s   {e:#}", secs),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,143 @@
+//! Micro-benchmarks (`cargo bench --bench micro`): the hot paths of the
+//! serving and reconstruction stack.
+//!
+//! * ΔW reconstruction: rust trig-IDFT vs rust FFT-IDFT vs the AOT XLA
+//!   (Pallas-kernel) artifact, across n — locating the algorithmic
+//!   crossover documented in EXPERIMENTS.md §Perf.
+//! * adapter swap cost: FourierFT vs LoRA vs dense-delta checkpoint load.
+//! * one fused train step / eval step on each model family.
+//! * adapter file save/load throughput.
+
+use fourier_peft::adapter::format::{AdapterFile, AdapterKind};
+use fourier_peft::coordinator::trainer::{FinetuneCfg, Trainer};
+use fourier_peft::fourier::{idft2_real_sparse, idft2_real_sparse_fft, sample_entries, EntryBias};
+use fourier_peft::runtime::to_literal;
+use fourier_peft::tensor::{rng::Rng, Tensor};
+use fourier_peft::util::bench::Bench;
+use std::collections::HashMap;
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::default();
+    let mut rng = Rng::new(0xBE
+        ^ 0x2C);
+
+    // --- ΔW reconstruction across n (d = 128, the enc_base shape) --------
+    let d = 128;
+    for n in [16, 64, 256, 1024] {
+        let (rows, cols) = sample_entries(d, d, n, EntryBias::None, 2024);
+        let c = rng.normal_vec(n, 1.0);
+        b.run(&format!("reconstruct/trig_idft/d128_n{n}"), || {
+            idft2_real_sparse((&rows, &cols), &c, d, d, 8.0)
+        });
+        b.run(&format!("reconstruct/fft_idft/d128_n{n}"), || {
+            idft2_real_sparse_fft((&rows, &cols), &c, d, d, 8.0)
+        });
+    }
+
+    // --- XLA (Pallas kernel) reconstruction via the delta artifact -------
+    let trainer = Trainer::open_default()?;
+    for n in [64usize, 1024] {
+        if let Ok(hlo) = trainer.registry.delta_hlo(d, n) {
+            let exe = trainer.client.load_hlo(&hlo)?;
+            let (rows, cols) = sample_entries(d, d, n, EntryBias::None, 2024);
+            let mut e = rows.clone();
+            e.extend(&cols);
+            let args = [
+                to_literal(&Tensor::i32(&[2, n], e))?,
+                to_literal(&Tensor::f32(&[n], rng.normal_vec(n, 1.0)))?,
+                to_literal(&Tensor::scalar(8.0))?,
+            ];
+            b.run(&format!("reconstruct/xla_pallas/d128_n{n}"), || {
+                exe.execute::<xla::Literal>(&args).unwrap()
+            });
+        }
+    }
+
+    // --- adapter checkpoint save/load ------------------------------------
+    let dir = std::env::temp_dir().join("fp_bench_store");
+    let _ = std::fs::create_dir_all(&dir);
+    let make = |kind: AdapterKind, tensors: Vec<(String, Tensor)>| AdapterFile {
+        kind,
+        seed: 2024,
+        alpha: 8.0,
+        meta: vec![],
+        tensors,
+    };
+    let fft_file = make(
+        AdapterKind::FourierFt,
+        (0..8).map(|i| (format!("spec.blk{i}.c"), Tensor::zeros(&[64]))).collect(),
+    );
+    let lora_file = make(
+        AdapterKind::Lora,
+        (0..8)
+            .flat_map(|i| [
+                (format!("lora.blk{i}.a"), Tensor::zeros(&[8, 128])),
+                (format!("lora.blk{i}.b"), Tensor::zeros(&[128, 8])),
+            ])
+            .collect(),
+    );
+    let dense_file = make(
+        AdapterKind::DenseDelta,
+        (0..8).map(|i| (format!("delta.blk{i}"), Tensor::zeros(&[128, 128]))).collect(),
+    );
+    for (name, file) in [("fourierft", &fft_file), ("lora", &lora_file), ("dense", &dense_file)] {
+        let path = dir.join(format!("{name}.adapter"));
+        b.run(&format!("adapter_io/save/{name}"), || file.save(&path).unwrap());
+        b.run(&format!("adapter_io/load/{name}"), || AdapterFile::load(&path).unwrap());
+        println!("{:<44} size: {}", format!("adapter_io/bytes/{name}"),
+                 fourier_peft::util::fmt_bytes(file.byte_size()));
+    }
+
+    // --- fused step latency per model family ------------------------------
+    for artifact in ["mlp__fourierft_n128__ce", "enc_base__fourierft_n64__ce",
+                     "enc_base__lora_r8__ce", "enc_base__ff__ce"] {
+        let exe = trainer.executable(artifact)?;
+        let meta = exe.meta.clone();
+        let (statics, _) = trainer.make_statics(&meta, 2024, EntryBias::None)?;
+        let base = trainer.base_for(&meta)?;
+        let mut state = exe.init_state(0, base, statics)?;
+        let batch: HashMap<String, Tensor> = if meta.model.kind == "mlp" {
+            fourier_peft::data::blobs::collate(&fourier_peft::data::blobs::dataset(
+                meta.model.batch, 0.35, 1))
+        } else {
+            fourier_peft::data::collate_text(
+                &fourier_peft::data::glue::GlueTask::Rte.split("train", meta.model.batch, 1),
+                meta.model.seqlen,
+            )
+        };
+        b.run(&format!("step/train/{artifact}"), || {
+            exe.step(
+                &mut state,
+                fourier_peft::runtime::exec::StepScalars {
+                    step: 1.0, lr: 1e-3, lr_head: 1e-3, wd: 0.0, scaling: 8.0,
+                },
+                &batch,
+            )
+            .unwrap()
+        });
+        b.run(&format!("step/eval/{artifact}"), || {
+            exe.eval(&mut state, 8.0, &batch).unwrap()
+        });
+    }
+
+    // --- end-to-end short fine-tune (the trainer loop itself) ------------
+    let quick = Bench::quick();
+    quick.run("trainer/finetune_20steps/mlp_fourierft", || {
+        let mut cfg = FinetuneCfg::new("mlp__fourierft_n128__ce");
+        cfg.steps = 20;
+        cfg.lr = 0.05;
+        cfg.scaling = 64.0;
+        trainer
+            .finetune(
+                &cfg,
+                |step, _| {
+                    fourier_peft::data::blobs::collate(&fourier_peft::data::blobs::dataset(
+                        64, 0.35, step as u64,
+                    ))
+                },
+                None,
+            )
+            .unwrap()
+    });
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! Table benches (`cargo bench --bench tables`): regenerates every paper
+//! *table* end-to-end in quick mode and times each driver. The printed
+//! tables are the reproduction artifacts; the timings document the cost of
+//! regenerating them on this machine.
+//!
+//! Full-fidelity runs (more seeds/steps) are `repro table N` without
+//! `--quick` — see EXPERIMENTS.md for the recorded full runs.
+
+use fourier_peft::coordinator::experiments;
+use fourier_peft::coordinator::trainer::Trainer;
+use fourier_peft::util::cli::Args;
+use fourier_peft::util::timed;
+
+fn main() -> anyhow::Result<()> {
+    // honor `cargo bench -- --quick-steps 30`
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let mut args = Args::parse(argv);
+    args.flags.entry("quick".into()).or_insert_with(|| "true".into());
+    args.flags.entry("steps".into()).or_insert_with(|| "25".into());
+    args.flags.entry("eval-count".into()).or_insert_with(|| "64".into());
+    args.flags.entry("seeds".into()).or_insert_with(|| "1".into());
+
+    let trainer = Trainer::open_default()?;
+    for id in ["table1", "table2", "table3", "table4", "table5", "table6"] {
+        let (res, secs) = timed(|| experiments::run(&trainer, id, &args));
+        match res {
+            Ok(reports) => println!(
+                "bench {id:<8} ok   {:>8.1}s   ({} report(s))",
+                secs,
+                reports.len()
+            ),
+            Err(e) => println!("bench {id:<8} FAIL {:>8.1}s   {e:#}", secs),
+        }
+    }
+    Ok(())
+}

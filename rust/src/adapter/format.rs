@@ -1,0 +1,322 @@
+//! Binary adapter checkpoint formats.
+//!
+//! The paper's pitch is storage: a FourierFT fine-tune of RoBERTa-base is
+//! 18.8 KB vs LoRA's 574 KB. This module is the concrete artifact: a
+//! little-endian binary container with a 16-byte header, a JSON-free
+//! metadata section, and raw tensor payloads.
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//! magic   u32   0x46465431  ("FFT1")
+//! kind    u8    0 = fourierft, 1 = lora, 2 = dense-delta, 3 = bitfit
+//! _pad    [u8; 3]
+//! seed    u64   entry-matrix seed (fourierft) or 0
+//! alpha   f32   scaling value baked at save time
+//! n_meta  u32   #key-value strings
+//! n_tens  u32   #tensors
+//! meta    n_meta × (len-prefixed key, len-prefixed value)
+//! tensors n_tens × (len-prefixed name, u8 dtype, u32 rank, rank × u64 dims,
+//!                   payload)
+//! ```
+//!
+//! For `fourierft` adapters the entry matrix E is NOT stored per tensor —
+//! only `seed` (+ grid dims in meta), from which `fourier::sample_entries`
+//! regenerates E deterministically; this is exactly the paper's
+//! "2n entry parameters shared across all layers" trick taken to its
+//! logical end (0 bytes per layer).
+
+use crate::tensor::{Data, Tensor};
+use anyhow::{anyhow, bail, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: u32 = 0x4646_5431;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdapterKind {
+    FourierFt = 0,
+    Lora = 1,
+    DenseDelta = 2,
+    BitFit = 3,
+}
+
+impl AdapterKind {
+    fn from_u8(v: u8) -> Result<AdapterKind> {
+        Ok(match v {
+            0 => AdapterKind::FourierFt,
+            1 => AdapterKind::Lora,
+            2 => AdapterKind::DenseDelta,
+            3 => AdapterKind::BitFit,
+            other => bail!("unknown adapter kind {other}"),
+        })
+    }
+
+    pub fn from_method(name: &str) -> AdapterKind {
+        match name {
+            "fourierft" | "randbasis" | "orthobasis" => AdapterKind::FourierFt,
+            "lora" => AdapterKind::Lora,
+            "bitfit" => AdapterKind::BitFit,
+            _ => AdapterKind::DenseDelta,
+        }
+    }
+}
+
+/// An adapter checkpoint in memory.
+#[derive(Debug, Clone)]
+pub struct AdapterFile {
+    pub kind: AdapterKind,
+    pub seed: u64,
+    pub alpha: f32,
+    pub meta: Vec<(String, String)>,
+    pub tensors: Vec<(String, Tensor)>,
+}
+
+impl AdapterFile {
+    pub fn meta_get(&self, key: &str) -> Option<&str> {
+        self.meta.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Total serialized size in bytes (exact, = what `save` writes).
+    pub fn byte_size(&self) -> usize {
+        let mut sz = 4 + 1 + 3 + 8 + 4 + 4 + 4;
+        for (k, v) in &self.meta {
+            sz += 4 + k.len() + 4 + v.len();
+        }
+        for (name, t) in &self.tensors {
+            sz += 4 + name.len() + 1 + 4 + 8 * t.shape.len() + 4 * t.len();
+        }
+        sz
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::with_capacity(self.byte_size());
+        buf.extend(MAGIC.to_le_bytes());
+        buf.push(self.kind as u8);
+        buf.extend([0u8; 3]);
+        buf.extend(self.seed.to_le_bytes());
+        buf.extend(self.alpha.to_le_bytes());
+        buf.extend((self.meta.len() as u32).to_le_bytes());
+        buf.extend((self.tensors.len() as u32).to_le_bytes());
+        for (k, v) in &self.meta {
+            write_str(&mut buf, k);
+            write_str(&mut buf, v);
+        }
+        for (name, t) in &self.tensors {
+            write_str(&mut buf, name);
+            match &t.data {
+                Data::F32(v) => {
+                    buf.push(0);
+                    write_dims(&mut buf, &t.shape);
+                    for x in v {
+                        buf.extend(x.to_le_bytes());
+                    }
+                }
+                Data::I32(v) => {
+                    buf.push(1);
+                    write_dims(&mut buf, &t.shape);
+                    for x in v {
+                        buf.extend(x.to_le_bytes());
+                    }
+                }
+            }
+        }
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<AdapterFile> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+        Self::from_bytes(&bytes)
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<AdapterFile> {
+        let mut r = Reader { b, i: 0 };
+        if r.u32()? != MAGIC {
+            bail!("bad magic: not a fourier-peft adapter file");
+        }
+        let kind = AdapterKind::from_u8(r.u8()?)?;
+        r.skip(3)?;
+        let seed = r.u64()?;
+        let alpha = f32::from_le_bytes(r.bytes(4)?.try_into().unwrap());
+        let n_meta = r.u32()? as usize;
+        let n_tens = r.u32()? as usize;
+        let mut meta = Vec::with_capacity(n_meta);
+        for _ in 0..n_meta {
+            meta.push((r.string()?, r.string()?));
+        }
+        let mut tensors = Vec::with_capacity(n_tens);
+        for _ in 0..n_tens {
+            let name = r.string()?;
+            let dt = r.u8()?;
+            let rank = r.u32()? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(r.u64()? as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let t = match dt {
+                0 => {
+                    let raw = r.bytes(4 * numel)?;
+                    let v = raw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    Tensor::f32(&shape, v)
+                }
+                1 => {
+                    let raw = r.bytes(4 * numel)?;
+                    let v = raw
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    Tensor::i32(&shape, v)
+                }
+                other => bail!("unknown dtype tag {other}"),
+            };
+            tensors.push((name, t));
+        }
+        Ok(AdapterFile { kind, seed, alpha, meta, tensors })
+    }
+}
+
+fn write_str(buf: &mut Vec<u8>, s: &str) {
+    buf.extend((s.len() as u32).to_le_bytes());
+    buf.extend(s.as_bytes());
+}
+
+fn write_dims(buf: &mut Vec<u8>, dims: &[usize]) {
+    buf.extend((dims.len() as u32).to_le_bytes());
+    for &d in dims {
+        buf.extend((d as u64).to_le_bytes());
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated adapter file at byte {}", self.i);
+        }
+        let out = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(out)
+    }
+
+    fn skip(&mut self, n: usize) -> Result<()> {
+        self.bytes(n).map(|_| ())
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let raw = self.bytes(len)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| anyhow!("bad utf8 in adapter file"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> AdapterFile {
+        AdapterFile {
+            kind: AdapterKind::FourierFt,
+            seed: 2024,
+            alpha: 300.0,
+            meta: vec![
+                ("model".into(), "enc_base".into()),
+                ("n".into(), "64".into()),
+                ("d".into(), "128".into()),
+            ],
+            tensors: vec![
+                ("spec.blk0.attn.wq.w.c".into(), Tensor::f32(&[64], (0..64).map(|i| i as f32).collect())),
+                ("head.w".into(), Tensor::f32(&[4, 3], vec![0.5; 12])),
+                ("ids".into(), Tensor::i32(&[2, 3], vec![1, 2, 3, 4, 5, 6])),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let a = sample();
+        let dir = std::env::temp_dir().join("fourier_peft_test_fmt");
+        let path = dir.join("a.fft");
+        a.save(&path).unwrap();
+        let b = AdapterFile::load(&path).unwrap();
+        assert_eq!(a.kind, b.kind);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.alpha, b.alpha);
+        assert_eq!(a.meta, b.meta);
+        assert_eq!(a.tensors, b.tensors);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn byte_size_is_exact() {
+        let a = sample();
+        let dir = std::env::temp_dir().join("fourier_peft_test_fmt2");
+        let path = dir.join("b.fft");
+        a.save(&path).unwrap();
+        let on_disk = std::fs::metadata(&path).unwrap().len() as usize;
+        assert_eq!(on_disk, a.byte_size());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(AdapterFile::from_bytes(&[0u8; 8]).is_err());
+        assert!(AdapterFile::from_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn fourierft_file_is_smaller_than_lora_for_matched_quality() {
+        // Storage claim at our sim scale: enc_base, n=64 vs lora r=8.
+        // FourierFT: 8 sites x 64 coeffs; LoRA: 8 sites x 2 x 128 x 8.
+        let fft = AdapterFile {
+            kind: AdapterKind::FourierFt,
+            seed: 2024,
+            alpha: 16.0,
+            meta: vec![],
+            tensors: (0..8)
+                .map(|i| (format!("spec.blk{i}.c"), Tensor::zeros(&[64])))
+                .collect(),
+        };
+        let lora = AdapterFile {
+            kind: AdapterKind::Lora,
+            seed: 0,
+            alpha: 2.0,
+            meta: vec![],
+            tensors: (0..8)
+                .flat_map(|i| {
+                    [
+                        (format!("lora.blk{i}.a"), Tensor::zeros(&[8, 128])),
+                        (format!("lora.blk{i}.b"), Tensor::zeros(&[128, 8])),
+                    ]
+                })
+                .collect(),
+        };
+        let ratio = lora.byte_size() as f64 / fft.byte_size() as f64;
+        assert!(ratio > 25.0, "expected ~32x smaller, got {ratio:.1}x");
+    }
+}

@@ -1,0 +1,204 @@
+//! ΔW reconstruction + merge into base weights.
+//!
+//! LoRA-family methods avoid inference latency by merging the learned
+//! change into W0 once (paper Eq. 4). Two paths:
+//!
+//! * [`delta_host`] — pure rust (the "mobile RAM" path from the paper's
+//!   intro): rank-n trig IDFT, no XLA.
+//! * [`delta_device`] — run the AOT `delta_d{d}_n{n}.hlo.txt` artifact
+//!   (the same L1 Pallas kernel used in training) via PJRT; used by the
+//!   server where the client already exists and d is large.
+//!
+//! Both paths agree to f32 tolerance (asserted in tests/adapter_roundtrip).
+
+use super::format::{AdapterFile, AdapterKind};
+use crate::fourier::{idft2_real_sparse, sample_entries, EntryBias};
+use crate::runtime::{from_literal, to_literal, Client, Registry};
+use crate::tensor::{linalg, Tensor};
+use anyhow::{anyhow, bail, Result};
+
+/// Reconstruct ΔW for one FourierFT site host-side.
+pub fn delta_host(
+    coeffs: &Tensor,
+    seed: u64,
+    n: usize,
+    d1: usize,
+    d2: usize,
+    alpha: f32,
+) -> Result<Tensor> {
+    let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, seed);
+    let c = coeffs.as_f32()?;
+    anyhow::ensure!(c.len() == n, "coeff len {} != n {n}", c.len());
+    Ok(Tensor::f32(&[d1, d2], idft2_real_sparse((&rows, &cols), c, d1, d2, alpha)))
+}
+
+/// Reconstruct ΔW on device via the AOT artifact (same Pallas kernel as
+/// training). `entries` must be the same E used at train time.
+pub fn delta_device(
+    client: &Client,
+    registry: &Registry,
+    entries: (&[i32], &[i32]),
+    coeffs: &Tensor,
+    d: usize,
+    alpha: f32,
+) -> Result<Tensor> {
+    let n = coeffs.len();
+    let hlo = registry.delta_hlo(d, n)?;
+    let exe = client.load_hlo(&hlo)?;
+    let mut e_data: Vec<i32> = entries.0.to_vec();
+    e_data.extend(entries.1);
+    let args = [
+        to_literal(&Tensor::i32(&[2, n], e_data))?,
+        to_literal(coeffs)?,
+        to_literal(&Tensor::scalar(alpha))?,
+    ];
+    let out = exe.execute::<xla::Literal>(&args)?[0][0]
+        .to_literal_sync()?
+        .to_tuple1()?;
+    from_literal(&out)
+}
+
+/// Reconstruct ΔW for a LoRA site: (B @ A) * scaling.
+pub fn delta_lora(a: &Tensor, b: &Tensor, scaling: f32) -> Result<Tensor> {
+    let mut out = linalg::matmul(b, a)?;
+    out.scale(scaling)?;
+    Ok(out)
+}
+
+/// Merge a saved adapter into a named set of base weights, host-side.
+///
+/// `base` maps base tensor name -> weight; the adapter tensor names encode
+/// the target site: `spec.<site>.c` (fourierft), `lora.<site>.{a,b}`,
+/// `delta.<site>` (dense / bitfit). Head tensors (`head.*`) are returned
+/// separately — they replace rather than add.
+pub fn merge_into_base(
+    adapter: &AdapterFile,
+    base: &mut std::collections::BTreeMap<String, Tensor>,
+) -> Result<Vec<(String, Tensor)>> {
+    let mut heads = Vec::new();
+    match adapter.kind {
+        AdapterKind::FourierFt => {
+            let n: usize = adapter
+                .meta_get("n")
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| anyhow!("adapter missing n meta"))?;
+            for (name, t) in &adapter.tensors {
+                if let Some(rest) = name.strip_prefix("spec.") {
+                    let site = rest.strip_suffix(".c").unwrap_or(rest);
+                    let w = base
+                        .get_mut(site)
+                        .ok_or_else(|| anyhow!("base missing site {site}"))?;
+                    let (d1, d2) = (w.shape[0], w.shape[1]);
+                    let delta = delta_host(t, adapter.seed, n, d1, d2, adapter.alpha)?;
+                    w.add_assign(&delta)?;
+                } else if name.starts_with("head.") {
+                    heads.push((name.clone(), t.clone()));
+                }
+            }
+        }
+        AdapterKind::Lora => {
+            // pair up a/b by site
+            for (name, a_t) in &adapter.tensors {
+                if let Some(rest) = name.strip_prefix("lora.") {
+                    if let Some(site) = rest.strip_suffix(".a") {
+                        let b_name = format!("lora.{site}.b");
+                        let b_t = adapter
+                            .tensors
+                            .iter()
+                            .find(|(n2, _)| n2 == &b_name)
+                            .map(|(_, t)| t)
+                            .ok_or_else(|| anyhow!("missing {b_name}"))?;
+                        let w = base
+                            .get_mut(site)
+                            .ok_or_else(|| anyhow!("base missing site {site}"))?;
+                        w.add_assign(&delta_lora(a_t, b_t, adapter.alpha)?)?;
+                    }
+                } else if name.starts_with("head.") {
+                    heads.push((name.clone(), a_t.clone()));
+                }
+            }
+        }
+        AdapterKind::DenseDelta | AdapterKind::BitFit => {
+            for (name, t) in &adapter.tensors {
+                if let Some(site) = name.strip_prefix("delta.") {
+                    let w = base
+                        .get_mut(site)
+                        .ok_or_else(|| anyhow!("base missing site {site}"))?;
+                    w.add_assign(t)?;
+                } else if name.starts_with("head.") {
+                    heads.push((name.clone(), t.clone()));
+                } else {
+                    bail!("unexpected tensor {name} in dense adapter");
+                }
+            }
+        }
+    }
+    Ok(heads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn lora_delta_matches_manual() {
+        let a = Tensor::f32(&[1, 3], vec![1.0, 2.0, 3.0]); // [r=1, d2=3]
+        let b = Tensor::f32(&[2, 1], vec![10.0, 20.0]); // [d1=2, r=1]
+        let d = delta_lora(&a, &b, 0.5).unwrap();
+        assert_eq!(d.as_f32().unwrap(), &[5.0, 10.0, 15.0, 10.0, 20.0, 30.0]);
+    }
+
+    #[test]
+    fn merge_dense_adds_and_returns_heads() {
+        let mut base = BTreeMap::from([("w.w".to_string(), Tensor::f32(&[2], vec![1.0, 2.0]))]);
+        let adapter = AdapterFile {
+            kind: AdapterKind::DenseDelta,
+            seed: 0,
+            alpha: 1.0,
+            meta: vec![],
+            tensors: vec![
+                ("delta.w.w".into(), Tensor::f32(&[2], vec![0.5, -0.5])),
+                ("head.w".into(), Tensor::f32(&[1], vec![9.0])),
+            ],
+        };
+        let heads = merge_into_base(&adapter, &mut base).unwrap();
+        assert_eq!(base["w.w"].as_f32().unwrap(), &[1.5, 1.5]);
+        assert_eq!(heads.len(), 1);
+    }
+
+    #[test]
+    fn merge_fourierft_zero_coeffs_is_identity() {
+        let mut base = BTreeMap::from([(
+            "blk0.attn.wq.w".to_string(),
+            Tensor::f32(&[8, 8], (0..64).map(|i| i as f32).collect()),
+        )]);
+        let before = base["blk0.attn.wq.w"].clone();
+        let adapter = AdapterFile {
+            kind: AdapterKind::FourierFt,
+            seed: 2024,
+            alpha: 300.0,
+            meta: vec![("n".into(), "4".into())],
+            tensors: vec![("spec.blk0.attn.wq.w.c".into(), Tensor::zeros(&[4]))],
+        };
+        merge_into_base(&adapter, &mut base).unwrap();
+        assert_eq!(base["blk0.attn.wq.w"], before);
+    }
+
+    #[test]
+    fn merge_fourierft_nonzero_changes_weight_by_alpha_scaled_delta() {
+        let mut base =
+            BTreeMap::from([("w".to_string(), Tensor::zeros(&[16, 16]))]);
+        let coeffs = Tensor::f32(&[8], vec![1.0; 8]);
+        let adapter = AdapterFile {
+            kind: AdapterKind::FourierFt,
+            seed: 7,
+            alpha: 2.0,
+            meta: vec![("n".into(), "8".into())],
+            tensors: vec![("spec.w.c".into(), coeffs.clone())],
+        };
+        merge_into_base(&adapter, &mut base).unwrap();
+        let want = delta_host(&coeffs, 7, 8, 16, 16, 2.0).unwrap();
+        assert_eq!(base["w"], want);
+    }
+}

@@ -1,0 +1,22 @@
+//! Adapter storage & serving — the paper's systems motivation (§1: Civitai
+//! bandwidth, mobile RAM) made concrete:
+//!
+//! * [`format`] — compact binary checkpoint formats: `.fft` stores the
+//!   shared entry matrix once plus per-layer coefficient vectors;
+//!   `.lora` stores (A, B) pairs; `.dense` stores full deltas.
+//! * [`budget`] — exact trainable-parameter / byte arithmetic reproducing
+//!   the paper's Table 1 for all 14 base-model configurations.
+//! * [`store`] — a multi-adapter registry over one frozen base model with
+//!   hot-swap, the unit the serving loop routes requests across.
+//! * [`merge`] — ΔW reconstruction + merge into base weights, either
+//!   host-side (rust-native IDFT, zero XLA dependency — the "mobile" path)
+//!   or on-device via the `delta_*.hlo.txt` artifact.
+
+pub mod budget;
+pub mod format;
+pub mod merge;
+pub mod store;
+
+pub use budget::{fourierft_params, lora_params, Table1Row, TABLE1};
+pub use format::{AdapterFile, AdapterKind};
+pub use store::AdapterStore;

@@ -1,0 +1,171 @@
+//! Multi-adapter store: many fine-tunes over one frozen base.
+//!
+//! This is the serving-side unit the paper's storage argument is about:
+//! a Civitai-style registry holds hundreds of adapters per base model;
+//! clients fetch kilobytes, not megabytes. The store provides
+//! save/load/list/byte-accounting and an LRU-bounded in-memory cache for
+//! hot adapters (the router in `coordinator::serving` swaps them per
+//! request batch).
+
+use super::format::AdapterFile;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+pub struct AdapterStore {
+    dir: PathBuf,
+    cache: BTreeMap<String, AdapterFile>,
+    cache_order: Vec<String>,
+    cache_cap: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl AdapterStore {
+    pub fn open(dir: &Path) -> Result<AdapterStore> {
+        std::fs::create_dir_all(dir)?;
+        Ok(AdapterStore {
+            dir: dir.to_path_buf(),
+            cache: BTreeMap::new(),
+            cache_order: Vec::new(),
+            cache_cap: 32,
+            hits: 0,
+            misses: 0,
+        })
+    }
+
+    pub fn with_cache_cap(mut self, cap: usize) -> AdapterStore {
+        self.cache_cap = cap.max(1);
+        self
+    }
+
+    fn path_of(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.adapter"))
+    }
+
+    pub fn save(&mut self, name: &str, adapter: &AdapterFile) -> Result<usize> {
+        let path = self.path_of(name);
+        adapter.save(&path)?;
+        self.touch(name, adapter.clone());
+        Ok(adapter.byte_size())
+    }
+
+    /// Load an adapter, via the LRU cache.
+    pub fn load(&mut self, name: &str) -> Result<AdapterFile> {
+        if let Some(a) = self.cache.get(name) {
+            self.hits += 1;
+            let a = a.clone();
+            self.bump(name);
+            return Ok(a);
+        }
+        self.misses += 1;
+        let a = AdapterFile::load(&self.path_of(name))
+            .map_err(|e| anyhow!("adapter '{name}': {e}"))?;
+        self.touch(name, a.clone());
+        Ok(a)
+    }
+
+    fn bump(&mut self, name: &str) {
+        if let Some(pos) = self.cache_order.iter().position(|n| n == name) {
+            let n = self.cache_order.remove(pos);
+            self.cache_order.push(n);
+        }
+    }
+
+    fn touch(&mut self, name: &str, a: AdapterFile) {
+        if !self.cache.contains_key(name) && self.cache.len() >= self.cache_cap {
+            if let Some(evict) = self.cache_order.first().cloned() {
+                self.cache.remove(&evict);
+                self.cache_order.remove(0);
+            }
+        }
+        self.cache.insert(name.to_string(), a);
+        self.bump(name);
+        if !self.cache_order.iter().any(|n| n == name) {
+            self.cache_order.push(name.to_string());
+        }
+    }
+
+    /// All adapters on disk, with their byte sizes.
+    pub fn list(&self) -> Result<Vec<(String, u64)>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            let p = entry.path();
+            if p.extension().map(|e| e == "adapter").unwrap_or(false) {
+                let name = p.file_stem().unwrap().to_string_lossy().to_string();
+                out.push((name, entry.metadata()?.len()));
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Total bytes across all stored adapters — the "Civitai bandwidth"
+    /// number the paper's intro argues about.
+    pub fn total_bytes(&self) -> Result<u64> {
+        Ok(self.list()?.iter().map(|(_, sz)| sz).sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::format::AdapterKind;
+    use crate::tensor::Tensor;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("fp_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn adapter(n: usize) -> AdapterFile {
+        AdapterFile {
+            kind: AdapterKind::FourierFt,
+            seed: 2024,
+            alpha: 16.0,
+            meta: vec![("n".into(), n.to_string())],
+            tensors: vec![("spec.w.c".into(), Tensor::zeros(&[n]))],
+        }
+    }
+
+    #[test]
+    fn save_list_load_roundtrip() {
+        let mut store = AdapterStore::open(&tmp("a")).unwrap();
+        store.save("task_rte", &adapter(16)).unwrap();
+        store.save("task_cola", &adapter(32)).unwrap();
+        let names: Vec<String> = store.list().unwrap().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["task_cola", "task_rte"]);
+        let a = store.load("task_rte").unwrap();
+        assert_eq!(a.meta_get("n"), Some("16"));
+    }
+
+    #[test]
+    fn lru_caches_and_evicts() {
+        let mut store = AdapterStore::open(&tmp("b")).unwrap().with_cache_cap(2);
+        for i in 0..3 {
+            store.save(&format!("a{i}"), &adapter(8)).unwrap();
+        }
+        store.hits = 0;
+        store.misses = 0;
+        store.load("a2").unwrap(); // cached (just saved)
+        store.load("a0").unwrap(); // evicted by cap-2 -> miss
+        assert!(store.misses >= 1);
+        assert!(store.hits >= 1);
+    }
+
+    #[test]
+    fn total_bytes_accumulates() {
+        let mut store = AdapterStore::open(&tmp("c")).unwrap();
+        store.save("x", &adapter(64)).unwrap();
+        store.save("y", &adapter(64)).unwrap();
+        assert_eq!(store.total_bytes().unwrap(), 2 * adapter(64).byte_size() as u64);
+    }
+
+    #[test]
+    fn missing_adapter_is_an_error() {
+        let mut store = AdapterStore::open(&tmp("d")).unwrap();
+        assert!(store.load("nope").is_err());
+    }
+}

@@ -1,0 +1,76 @@
+//! Figure 6 — training curves at equal parameter count on MRPC-sim:
+//! LoRA r=1 (2·128·1 = 256 params/site) vs FourierFT n=256. The paper's
+//! claim: FourierFT dominates accuracy, F1, and loss over the whole run.
+
+use crate::coordinator::report::Report;
+use crate::coordinator::trainer::{FinetuneCfg, Trainer};
+use crate::data::glue::GlueTask;
+use crate::metrics::classify;
+use crate::util::json::{self, Json};
+use anyhow::Result;
+
+use super::{glue_batches, glue_eval_batches, method_hp, Opts};
+
+pub fn run(trainer: &Trainer, opts: &Opts) -> Result<Vec<Report>> {
+    let task = GlueTask::Mrpc;
+    let steps = if opts.quick { opts.steps } else { opts.steps.max(300) };
+    let mut r = Report::new(
+        "figure6",
+        "Training curves at equal parameter count (MRPC-sim): LoRA r=1 vs FourierFT n=256",
+        &["method", "params/site", "final acc", "final f1", "final loss", "auc(acc)"],
+    );
+    let mut curves = Vec::new();
+    for (artifact, label, params) in [
+        ("enc_base__lora_r1__ce", "LoRA r=1", 256usize),
+        ("enc_base__fourierft_n256__ce", "FourierFT n=256", 256),
+    ] {
+        let meta = trainer.registry.meta(artifact)?.clone();
+        let (lr, lr_head, scaling) = method_hp(&meta.method.name, meta.model.d);
+        let mut cfg = FinetuneCfg::new(artifact);
+        cfg.lr = lr;
+        cfg.lr_head = lr_head;
+        cfg.scaling = scaling;
+        cfg.steps = steps;
+        cfg.eval_every = (steps / 25).max(1);
+        cfg.seed = 3;
+        let eval_batches =
+            glue_eval_batches(task, meta.model.seqlen, meta.model.batch, opts.eval_count, 0xF16);
+        // track (acc, f1) over time: encode both in one metric stream by
+        // storing acc in evals and f1 via side channel
+        let tr = trainer;
+        let mut f1s: Vec<(usize, f64)> = Vec::new();
+        let mut step_now = 0usize;
+        let mut eval_fn = |exe: &crate::runtime::Executable,
+                           state: &mut crate::runtime::exec::ParamSet,
+                           scaling: f32|
+              -> Result<f64> {
+            let (preds, labels, _, _) = tr.eval_classify(exe, state, scaling, &eval_batches)?;
+            step_now += 1;
+            f1s.push((step_now, classify::f1_binary(&preds, &labels)));
+            Ok(classify::accuracy(&preds, &labels))
+        };
+        let res = trainer.finetune(
+            &cfg,
+            glue_batches(task, meta.model.seqlen, meta.model.batch, 3),
+            Some(&mut eval_fn),
+        )?;
+        let auc = res.evals.iter().map(|(_, a)| a).sum::<f64>() / res.evals.len().max(1) as f64;
+        r.row(vec![
+            label.to_string(),
+            params.to_string(),
+            format!("{:.1}", 100.0 * res.final_eval),
+            format!("{:.1}", 100.0 * f1s.last().map(|(_, f)| *f).unwrap_or(0.0)),
+            format!("{:.4}", res.losses.last().copied().unwrap_or(f32::NAN)),
+            format!("{:.3}", auc),
+        ]);
+        curves.push(json::obj(vec![
+            ("method", json::s(label)),
+            ("loss", json::arr(res.losses.iter().step_by(2).map(|&l| json::num(l as f64)).collect())),
+            ("acc", json::arr(res.evals.iter().map(|(s, a)| json::arr(vec![json::num(*s as f64), json::num(*a)])).collect())),
+            ("f1", json::arr(f1s.iter().map(|(s, f)| json::arr(vec![json::num(*s as f64), json::num(*f)])).collect())),
+        ]));
+    }
+    r.extra.insert("curves".into(), Json::Arr(curves));
+    r.note("paper shape: FourierFT above LoRA r=1 in acc/F1 and below in loss throughout training");
+    Ok(vec![r])
+}

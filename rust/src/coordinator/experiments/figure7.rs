@@ -1,0 +1,82 @@
+//! Figure 7 — expressive-ability study on the synthetic 8-class 2D dataset
+//! (paper appendix C.2): a single 64x64 hidden layer adapted with LoRA
+//! (r=1) vs FourierFT (n=128) at *equal* trainable-parameter budget
+//! (2·64·1 = 128 = n). The paper's claim: LoRA r=1 plateaus below 100%
+//! accuracy while FourierFT reaches it quickly.
+
+use crate::coordinator::report::Report;
+use crate::coordinator::trainer::{FinetuneCfg, Trainer};
+use crate::data::blobs;
+use crate::metrics::classify;
+use crate::util::json::{self, Json};
+use anyhow::Result;
+
+use super::Opts;
+
+pub fn run(trainer: &Trainer, opts: &Opts) -> Result<Vec<Report>> {
+    let steps = if opts.quick { 150 } else { 600 };
+    let mut r = Report::new(
+        "figure7",
+        "Expressivity on 8-class 2D blobs: 64x64 hidden layer, equal parameter budget",
+        &["method", "trainable (site)", "final acc", "best acc", "steps to 95%"],
+    );
+    let eval_pts = blobs::dataset(512, 0.35, 0xE);
+    let eval_batches: Vec<_> = eval_pts.chunks(64).map(blobs::collate).collect();
+
+    // _fh = frozen head: the paper's protocol trains ONLY the 64x64 hidden
+    // layer, which is where LoRA r=1's rank bottleneck shows.
+    let mut curves = Vec::new();
+    for (artifact, label, lr, scaling) in [
+        ("mlp__lora_r1_fh__ce", "LoRA r=1", 2e-2f32, 2.0f32),
+        ("mlp__fourierft_n128_fh__ce", "FourierFT n=128", 5e-2, 64.0),
+        ("mlp__ff_fh__ce", "FF (upper bound)", 1e-2, 1.0),
+    ] {
+        let mut cfg = FinetuneCfg::new(artifact);
+        cfg.lr = lr;
+        cfg.scaling = scaling;
+        cfg.steps = steps;
+        cfg.eval_every = (steps / 30).max(1);
+        cfg.seed = 7;
+        let tr = trainer;
+        let eval_ref = &eval_batches;
+        let mut eval_fn = move |exe: &crate::runtime::Executable,
+                                state: &mut crate::runtime::exec::ParamSet,
+                                scaling: f32|
+              -> Result<f64> {
+            let (preds, labels, _, _) = tr.eval_classify(exe, state, scaling, eval_ref)?;
+            Ok(classify::accuracy(&preds, &labels))
+        };
+        let result = trainer.finetune(
+            &cfg,
+            |step, _rng| {
+                let pts = blobs::dataset(64, 0.35, 0xF00 ^ (step as u64) << 13);
+                blobs::collate(&pts)
+            },
+            Some(&mut eval_fn),
+        )?;
+        let to95 = result
+            .evals
+            .iter()
+            .find(|(_, acc)| *acc >= 0.95)
+            .map(|(s, _)| s.to_string())
+            .unwrap_or_else(|| format!(">{steps}"));
+        let meta = trainer.registry.meta(artifact)?;
+        r.row(vec![
+            label.to_string(),
+            meta.trainable_ex_head.to_string(),
+            format!("{:.1}%", 100.0 * result.final_eval),
+            format!("{:.1}%", 100.0 * result.best_eval),
+            to95,
+        ]);
+        curves.push(json::obj(vec![
+            ("method", json::s(label)),
+            ("losses", json::arr(result.losses.iter().step_by(5).map(|&l| json::num(l as f64)).collect())),
+            ("acc", json::arr(result.evals.iter().map(|(s, a)| {
+                json::arr(vec![json::num(*s as f64), json::num(*a)])
+            }).collect())),
+        ]));
+    }
+    r.extra.insert("curves".into(), Json::Arr(curves));
+    r.note("paper: LoRA r=1 never reaches 100% within 2000 epochs; FourierFT n=128 does in ~500");
+    Ok(vec![r])
+}

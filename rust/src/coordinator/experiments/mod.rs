@@ -1,0 +1,174 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §4).
+//!
+//! Every driver follows the same contract: deterministic data, the shared
+//! [`Trainer`], and a [`Report`] (printed + persisted to runs/reports/).
+//! The `--quick` flag (and per-driver step/seed overrides) scales runtime
+//! down without changing the comparison structure.
+
+pub mod figure1;
+pub mod figure3;
+pub mod figure4;
+pub mod figure5;
+pub mod figure6;
+pub mod figure7;
+pub mod table1;
+pub mod table13;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+
+use super::report::Report;
+use super::trainer::{Batch, FinetuneCfg, Trainer};
+use crate::data::glue::GlueTask;
+use crate::data::collate_text;
+use crate::metrics::classify;
+use crate::runtime::exec::ParamSet;
+use crate::runtime::Executable;
+use crate::tensor::linalg;
+use crate::util::cli::Args;
+use anyhow::Result;
+
+/// Experiment knobs shared across drivers.
+#[derive(Debug, Clone)]
+pub struct Opts {
+    pub steps: usize,
+    pub seeds: usize,
+    pub eval_count: usize,
+    pub quick: bool,
+    /// Multiplier on the method's default scaling (hyperparameter search).
+    pub scaling_scale: f32,
+}
+
+impl Opts {
+    pub fn from_args(args: &Args) -> Opts {
+        let quick = args.bool("quick");
+        Opts {
+            steps: args.usize_or("steps", if quick { 60 } else { 240 }),
+            seeds: args.usize_or("seeds", if quick { 1 } else { 3 }),
+            eval_count: args.usize_or("eval-count", if quick { 128 } else { 256 }),
+            quick,
+            scaling_scale: args.f32_or("scaling-scale", 1.0),
+        }
+    }
+}
+
+/// Default (lr, scaling) per method tag at our sim scale.
+///
+/// Scaling semantics differ per method (FourierFT's IDFT carries a
+/// 1/(d1 d2) factor; the ablation bases do not), so the defaults normalize
+/// the *effective* ΔW magnitude across methods — see DESIGN.md §2.
+pub fn method_hp(method: &str, d: usize) -> (f32, f32, f32) {
+    // (lr, lr_head, scaling) — mirrors the paper's Appendix B protocol of
+    // a large rate for spectral coefficients and a ~10-50x smaller one for
+    // the dense task head.
+    match method {
+        "ff" => (1e-3, 1e-3, 1.0),
+        "bitfit" => (3e-3, 1e-3, 1.0),
+        "adapter" => (3e-3, 1e-3, 1.0),
+        "lp" => (5e-3, 5e-3, 1.0),
+        "lora" => (5e-3, 1e-3, 2.0),
+        // alpha calibrated on SST-2-sim (see EXPERIMENTS.md §Calibration):
+        // the short step budget needs a larger alpha than the paper's 300
+        // to reach comparable effective ΔW magnitude.
+        "fourierft" => (5e-2, 2e-3, 512.0),
+        // match FourierFT's effective magnitude: Gaussian basis lacks the
+        // 1/d^2 normalization, orthogonal basis lacks 1/d.
+        "randbasis" => (5e-2, 2e-3, 512.0 / (d * d) as f32),
+        "orthobasis" => (5e-2, 2e-3, 512.0 / d as f32),
+        other => panic!("no hyperparameters for method {other}"),
+    }
+}
+
+/// GLUE-sim training-batch source for an artifact.
+pub fn glue_batches(task: GlueTask, seqlen: usize, batch: usize, seed: u64)
+    -> impl FnMut(usize, &mut crate::tensor::rng::Rng) -> Batch {
+    move |step, _rng| {
+        let exs = task.split("train", batch, seed ^ (step as u64) << 17);
+        collate_text(&exs, seqlen)
+    }
+}
+
+/// Fixed GLUE-sim eval batches.
+pub fn glue_eval_batches(task: GlueTask, seqlen: usize, batch: usize, count: usize,
+                         seed: u64) -> Vec<Batch> {
+    let exs = task.split("val", count, seed);
+    exs.chunks(batch)
+        .filter(|c| c.len() == batch)
+        .map(|c| collate_text(c, seqlen))
+        .collect()
+}
+
+/// Task metric from eval batches (acc / mcc / pcc per task).
+pub fn glue_metric(
+    trainer: &Trainer,
+    task: GlueTask,
+    exe: &Executable,
+    state: &mut ParamSet,
+    scaling: f32,
+    batches: &[Batch],
+) -> Result<f64> {
+    let (preds, labels, scores, targets) =
+        trainer.eval_classify(exe, state, scaling, batches)?;
+    Ok(match task {
+        GlueTask::Cola => classify::matthews(&preds, &labels),
+        GlueTask::Stsb => linalg::pearson(&scores, &targets),
+        _ => classify::accuracy(&preds, &labels),
+    })
+}
+
+/// Train one GLUE-sim fine-tune and return (best-eval metric, result).
+pub fn glue_run(
+    trainer: &Trainer,
+    task: GlueTask,
+    artifact: &str,
+    opts: &Opts,
+    seed: u64,
+    lr_scale: f32,
+) -> Result<super::trainer::RunResult> {
+    let meta = trainer.registry.meta(artifact)?.clone();
+    let (lr, lr_head, scaling) = method_hp(&meta.method.name, meta.model.d);
+    let seqlen = meta.model.seqlen;
+    let b = meta.model.batch;
+    let mut cfg = FinetuneCfg::new(artifact);
+    cfg.lr = lr * lr_scale;
+    cfg.lr_head = lr_head;
+    cfg.scaling = scaling * opts.scaling_scale;
+    cfg.steps = opts.steps;
+    cfg.eval_every = (opts.steps / 4).max(1);
+    cfg.seed = seed;
+    let eval_batches = glue_eval_batches(task, seqlen, b, opts.eval_count, 0xE7A1);
+    let tr = trainer;
+    let mut eval_fn = |exe: &Executable, state: &mut ParamSet, scaling: f32| {
+        glue_metric(tr, task, exe, state, scaling, &eval_batches)
+    };
+    trainer.finetune(&cfg, glue_batches(task, seqlen, b, seed), Some(&mut eval_fn))
+}
+
+/// Dispatch an experiment by id ("1", "2", ... "13", "f1".."f7").
+pub fn run(trainer: &Trainer, id: &str, args: &Args) -> Result<Vec<Report>> {
+    let opts = Opts::from_args(args);
+    let reports = match id {
+        "table1" | "t1" | "1" => vec![table1::run()?],
+        "table2" | "t2" | "2" => table2::run(trainer, &opts)?,
+        "table3" | "t3" | "3" => table3::run(trainer, &opts)?,
+        "table4" | "t4" | "4" => table4::run(trainer, &opts)?,
+        "table5" | "t5" | "5" => table5::run(trainer, &opts)?,
+        "table6" | "t6" | "6" => table6::run(trainer, &opts)?,
+        "table13" | "t13" | "13" => table13::run(trainer, &opts)?,
+        "figure1" | "f1" => vec![figure1::run()?],
+        "figure3" | "f3" => vec![figure3::run()?],
+        "figure4" | "f4" => figure4::run(trainer, &opts)?,
+        "figure5" | "f5" => figure5::run(trainer, &opts)?,
+        "figure6" | "f6" => figure6::run(trainer, &opts)?,
+        "figure7" | "f7" => figure7::run(trainer, &opts)?,
+        other => anyhow::bail!(
+            "unknown experiment '{other}'; expected table1..table6, figure1/3..7"
+        ),
+    };
+    for r in &reports {
+        r.emit()?;
+    }
+    Ok(reports)
+}

@@ -1,0 +1,182 @@
+//! Table 13 (appendix E) — DreamBooth-sim: subject-driven generation.
+//!
+//! The paper fine-tunes Stable Diffusion on 5-6 subject images and reports
+//! FID. Offline substitute (DESIGN.md §2): a flat-pixel denoiser (16x16x3,
+//! hidden 256, adapted site 256x256) pretrained on the broad procedural
+//! image mixture, fine-tuned on 6 renders of one pets37-sim "subject",
+//! then sampled by iterated denoising from Gaussian noise. FID uses the
+//! fixed random-feature extractor (metrics::fid).
+//!
+//! Comparison structure preserved from the paper: w/o fine-tuning >> all
+//! fine-tunes; FF best; LoRA ≈ FourierFT with ~64x fewer parameters.
+
+use crate::coordinator::report::Report;
+use crate::coordinator::trainer::{Batch, FinetuneCfg, Trainer};
+use crate::data::vision::{self, VisionSet};
+use crate::metrics::fid;
+use crate::runtime::exec::ParamSet;
+use crate::runtime::Executable;
+use crate::tensor::{rng::Rng, Tensor};
+use crate::util::fmt_params;
+use anyhow::Result;
+use std::collections::HashMap;
+
+use super::Opts;
+
+pub const SUBJECT: VisionSet = VisionSet::Pets37;
+pub const SUBJECT_CLASS: usize = 5;
+const SIDE: usize = 16;
+const PIX: usize = SIDE * SIDE * 3;
+
+/// Render a subject image at 16x16 (2x2-mean downsample of the 32x32 render).
+pub fn subject_image(rng: &mut Rng) -> Vec<f32> {
+    let full = SUBJECT.render(SUBJECT_CLASS, rng).pixels;
+    downsample32(&full)
+}
+
+pub fn downsample32(px: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; PIX];
+    for y in 0..SIDE {
+        for x in 0..SIDE {
+            for c in 0..3 {
+                let mut acc = 0.0;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        acc += px[((2 * y + dy) * 32 + 2 * x + dx) * 3 + c];
+                    }
+                }
+                out[(y * SIDE + x) * 3 + c] = acc / 4.0;
+            }
+        }
+    }
+    out
+}
+
+fn upsample16(px: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; 32 * 32 * 3];
+    for y in 0..32 {
+        for x in 0..32 {
+            for c in 0..3 {
+                out[(y * 32 + x) * 3 + c] = px[((y / 2) * SIDE + x / 2) * 3 + c];
+            }
+        }
+    }
+    out
+}
+
+/// Denoising training batch: clean subject images + Gaussian noise.
+fn denoise_batch(clean_pool: &[Vec<f32>], b: usize, noise: f32, rng: &mut Rng) -> Batch {
+    let mut x = Vec::with_capacity(b * PIX);
+    let mut y = Vec::with_capacity(b * PIX);
+    for _ in 0..b {
+        let img = &clean_pool[rng.below(clean_pool.len())];
+        y.extend(img);
+        x.extend(img.iter().map(|&p| (p + noise * rng.normal()).clamp(0.0, 1.0)));
+    }
+    HashMap::from([
+        ("x".to_string(), Tensor::f32(&[b, PIX], x)),
+        ("y".to_string(), Tensor::f32(&[b, PIX], y)),
+    ])
+}
+
+/// Broad pretraining pool (all generator families at 16x16).
+fn broad_pool(count: usize, seed: u64) -> Vec<Vec<f32>> {
+    vision::imagenet_sim(count, 200, seed)
+        .into_iter()
+        .map(|e| downsample32(&e.pixels))
+        .collect()
+}
+
+/// Iterated denoising from pure noise: k applications of the denoiser.
+fn sample_images(
+    exe: &Executable,
+    state: &mut ParamSet,
+    scaling: f32,
+    count: usize,
+    steps: usize,
+    rng: &mut Rng,
+) -> Result<Vec<Vec<f32>>> {
+    let b = exe.meta.model.batch;
+    let mut out = Vec::new();
+    let dummy_y = Tensor::f32(&[b, PIX], vec![0.0; b * PIX]);
+    while out.len() < count {
+        let mut x: Vec<f32> = (0..b * PIX).map(|_| rng.f32()).collect();
+        for _ in 0..steps {
+            let batch = HashMap::from([
+                ("x".to_string(), Tensor::f32(&[b, PIX], x.clone())),
+                ("y".to_string(), dummy_y.clone()),
+            ]);
+            let step_out = exe.eval(state, scaling, &batch)?;
+            x = step_out.logits.as_f32()?.to_vec();
+        }
+        for row in x.chunks(PIX) {
+            if out.len() < count {
+                out.push(upsample16(row));
+            }
+        }
+    }
+    Ok(out)
+}
+
+pub fn run(trainer: &Trainer, opts: &Opts) -> Result<Vec<Report>> {
+    let mut r = Report::new(
+        "table13",
+        "DreamBooth-sim: subject-driven generation FID (lower is better)",
+        &["method", "params (site)", "FID"],
+    );
+    // the 6 training subject renders + a held-out subject set for FID
+    let mut rng = Rng::new(0xD2EA);
+    let train_pool: Vec<Vec<f32>> = (0..6).map(|_| subject_image(&mut rng)).collect();
+    let target: Vec<Vec<f32>> = (0..64)
+        .map(|_| upsample16(&subject_image(&mut rng)))
+        .collect();
+    let steps = if opts.quick { 80 } else { 300 };
+    let sample_count = if opts.quick { 32 } else { 64 };
+
+    // "w/o fine-tuning": the pretrained denoiser sampled directly.
+    {
+        let exe = trainer.executable("denoiser__ff__mseimg")?;
+        let base = trainer.base_for(&exe.meta)?;
+        let mut state = exe.init_state(0, base, vec![])?;
+        let mut srng = Rng::new(0x5A);
+        let imgs = sample_images(&exe, &mut state, 1.0, sample_count, 8, &mut srng)?;
+        let d = fid::fid(&imgs, &target);
+        r.row(vec!["w/o fine-tuning".into(), "-".into(), format!("{d:.1}")]);
+        eprintln!("[table13] w/o fine-tuning: FID {d:.1}");
+    }
+
+    for (label, tag, lr, scaling) in [
+        ("FF", "ff", 1e-3f32, 1.0f32),
+        ("LoRA (r=8)", "lora_r8", 5e-3, 2.0),
+        ("FourierFT (n=64)", "fourierft_n64", 5e-2, 512.0),
+    ] {
+        let artifact = format!("denoiser__{tag}__mseimg");
+        let meta = trainer.registry.meta(&artifact)?.clone();
+        let mut cfg = FinetuneCfg::new(&artifact);
+        cfg.lr = lr;
+        cfg.scaling = scaling;
+        cfg.steps = steps;
+        cfg.seed = 3;
+        let pool = train_pool.clone();
+        let res = trainer.finetune(
+            &cfg,
+            move |step, rng| {
+                let _ = step;
+                denoise_batch(&pool, 32, 0.6, rng)
+            },
+            None,
+        )?;
+        let exe = trainer.executable(&artifact)?;
+        let (statics, _) = trainer.make_statics(&exe.meta, cfg.entry_seed, cfg.bias)?;
+        let base = trainer.base_for(&exe.meta)?;
+        let mut state = exe.init_state(cfg.seed as i32, base, statics)?;
+        exe.set_adapt(&mut state, &res.adapt.into_iter().collect())?;
+        let mut srng = Rng::new(0x5B);
+        let imgs = sample_images(&exe, &mut state, cfg.scaling, sample_count, 8, &mut srng)?;
+        let d = fid::fid(&imgs, &target);
+        eprintln!("[table13] {label}: FID {d:.1}");
+        r.row(vec![label.into(), fmt_params(meta.trainable_ex_head), format!("{d:.1}")]);
+    }
+    r.note("paper shape: w/o fine-tuning worst; FF best; FourierFT ≈ LoRA at ~1.5% of its parameters");
+    Ok(vec![r])
+}

@@ -1,0 +1,111 @@
+//! Table 3 — E2E-sim NLG with the decoder models: fine-tune on the
+//! slot-table-to-text corpus, greedy-generate on held-out MRs, score with
+//! all five E2E metrics (BLEU / NIST / METEOR / ROUGE-L / CIDEr).
+
+use crate::coordinator::generate;
+use crate::coordinator::report::Report;
+use crate::coordinator::trainer::{FinetuneCfg, Trainer};
+use crate::data::e2e;
+use crate::metrics::nlg;
+use crate::util::fmt_params;
+use anyhow::Result;
+
+use super::{method_hp, Opts};
+
+fn methods_for(model: &str) -> Vec<(&'static str, String)> {
+    let fft_small = if model == "dec_large" { "fourierft_n96" } else { "fourierft_n64" };
+    vec![
+        ("FF", "ff".to_string()),
+        ("Adapter(m=8)", "adapter_m8".to_string()),
+        ("LoRA(r=4)", "lora_r4".to_string()),
+        ("FourierFT", fft_small.to_string()),
+    ]
+}
+
+pub fn run(trainer: &Trainer, opts: &Opts) -> Result<Vec<Report>> {
+    let models: &[&str] = if opts.quick { &["dec_med"] } else { &["dec_med", "dec_large"] };
+    let mut reports = Vec::new();
+    for model in models {
+        reports.push(run_model(trainer, opts, model)?);
+    }
+    Ok(reports)
+}
+
+fn run_model(trainer: &Trainer, opts: &Opts, model: &str) -> Result<Report> {
+    let mut r = Report::new(
+        &format!("table3_{model}"),
+        &format!("E2E-sim NLG with {model}: greedy decode on held-out MRs"),
+        &["method", "params (ex head)", "BLEU", "NIST", "METEOR", "ROUGE-L", "CIDEr"],
+    );
+    let steps = if opts.quick { opts.steps } else { opts.steps.max(300) };
+    let test_count = if opts.quick { 32 } else { 96 };
+    for (label, tag) in methods_for(model) {
+        let artifact = format!("{model}__{tag}__lm");
+        let meta = trainer.registry.meta(&artifact)?.clone();
+        let (lr, lr_head, scaling) = method_hp(&meta.method.name, meta.model.d);
+        let seqlen = meta.model.seqlen;
+        let b = meta.model.batch;
+        let mut cfg = FinetuneCfg::new(&artifact);
+        cfg.lr = lr;
+        cfg.lr_head = lr_head;
+        cfg.scaling = scaling;
+        cfg.steps = steps;
+        cfg.seed = 1;
+        let result = trainer.finetune(
+            &cfg,
+            move |step, _rng| {
+                let mrs = e2e::split("train", b, (step as u64) << 9 ^ 0xE2);
+                crate::data::collate_lm(&e2e::examples(&mrs, seqlen, step as u64), seqlen)
+            },
+            None,
+        )?;
+        // Rebuild the trained state for generation.
+        let exe = trainer.executable(&artifact)?;
+        let (statics, _) = trainer.make_statics(&exe.meta, cfg.entry_seed, cfg.bias)?;
+        let base = trainer.base_for(&exe.meta)?;
+        let mut state = exe.init_state(cfg.seed as i32, base, statics)?;
+        let adapt_map: std::collections::HashMap<String, crate::tensor::Tensor> =
+            result.adapt.iter().cloned().collect();
+        exe.set_adapt(&mut state, &adapt_map)?;
+
+        let test_mrs = e2e::split("test", test_count, 0xE2);
+        let mut hyps = Vec::new();
+        let mut refs = Vec::new();
+        for chunk in test_mrs.chunks(b) {
+            let prompts: Vec<Vec<i32>> = chunk.iter().map(|m| m.prompt()).collect();
+            let outs = generate::greedy(&exe, &mut state, cfg.scaling, &prompts, 12)?;
+            for (mr, mut gen) in chunk.iter().zip(outs) {
+                // strip EOS for metric computation (refs keep structure)
+                if gen.last() == Some(&crate::data::vocab::EOS) {
+                    gen.pop();
+                }
+                hyps.push(gen);
+                refs.push(
+                    mr.references()
+                        .into_iter()
+                        .map(|mut r| {
+                            r.pop(); // EOS
+                            r
+                        })
+                        .collect::<Vec<_>>(),
+                );
+            }
+        }
+        let scores = nlg::score_all(&hyps, &refs);
+        eprintln!(
+            "[table3 {model}] {label}: BLEU {:.1} NIST {:.2} METEOR {:.1} ROUGE {:.1} CIDEr {:.2}",
+            scores.bleu, scores.nist, scores.meteor, scores.rouge_l, scores.cider
+        );
+        r.row(vec![
+            label.to_string(),
+            fmt_params(meta.trainable_ex_head),
+            format!("{:.1}", scores.bleu),
+            format!("{:.2}", scores.nist),
+            format!("{:.1}", scores.meteor),
+            format!("{:.1}", scores.rouge_l),
+            format!("{:.2}", scores.cider),
+        ]);
+    }
+    r.note("paper shape: FourierFT ≈ LoRA on all 5 metrics with ~10-14% of its parameters");
+    Ok(r)
+}

@@ -1,0 +1,101 @@
+//! Table 5 — image classification: {LP, FF, LoRA, FourierFT small/large}
+//! on the eight procedural vision datasets, ViT base and large.
+
+use crate::coordinator::report::Report;
+use crate::coordinator::trainer::{Batch, FinetuneCfg, Trainer};
+use crate::data::vision::{VisionSet, IMG};
+use crate::data::collate_img;
+use crate::metrics::classify;
+use crate::util::fmt_params;
+use anyhow::Result;
+
+use super::{method_hp, Opts};
+
+fn methods_for(model: &str) -> Vec<(&'static str, String)> {
+    let (small, large) = if model == "vit_large" {
+        ("fourierft_n144", "fourierft_n576")
+    } else {
+        ("fourierft_n96", "fourierft_n384")
+    };
+    vec![
+        ("LP", "lp".to_string()),
+        ("FF", "ff".to_string()),
+        ("LoRA(r=8)", "lora_r8".to_string()),
+        ("FourierFT (small)", small.to_string()),
+        ("FourierFT (large)", large.to_string()),
+    ]
+}
+
+pub fn run(trainer: &Trainer, opts: &Opts) -> Result<Vec<Report>> {
+    let models: &[&str] = if opts.quick { &["vit_base"] } else { &["vit_base", "vit_large"] };
+    let mut reports = Vec::new();
+    for model in models {
+        reports.push(run_model(trainer, opts, model)?);
+    }
+    Ok(reports)
+}
+
+fn run_model(trainer: &Trainer, opts: &Opts, model: &str) -> Result<Report> {
+    let sets: Vec<VisionSet> = if opts.quick {
+        vec![VisionSet::Cifar10, VisionSet::Dtd47, VisionSet::Cars196]
+    } else {
+        VisionSet::ALL.to_vec()
+    };
+    let mut cols: Vec<String> = vec!["method".into(), "params (ex head)".into()];
+    cols.extend(sets.iter().map(|s| s.name().to_string()));
+    cols.push("avg".into());
+    let col_refs: Vec<&str> = cols.iter().map(String::as_str).collect();
+    let mut r = Report::new(
+        &format!("table5_{model}"),
+        &format!("Image classification accuracy (%) with {model}"),
+        &col_refs,
+    );
+    let steps = if opts.quick { opts.steps } else { opts.steps.max(200) };
+    for (label, tag) in methods_for(model) {
+        let artifact = format!("{model}__{tag}__ce");
+        let meta = trainer.registry.meta(&artifact)?.clone();
+        let (lr, lr_head, scaling) = method_hp(&meta.method.name, meta.model.d);
+        let b = meta.model.batch;
+        let mut cells = vec![label.to_string(), fmt_params(meta.trainable_ex_head)];
+        let mut accs = Vec::new();
+        for &set in &sets {
+            let mut cfg = FinetuneCfg::new(&artifact);
+            cfg.lr = lr;
+            cfg.lr_head = lr_head;
+            cfg.scaling = scaling;
+            cfg.steps = steps;
+            cfg.eval_every = 0;
+            cfg.seed = 2;
+            let eval: Vec<Batch> = set
+                .split("test", opts.eval_count, 0x7E57)
+                .chunks(b)
+                .filter(|c| c.len() == b)
+                .map(|c| collate_img(c, IMG))
+                .collect();
+            let tr = trainer;
+            let eval_ref = &eval;
+            let mut eval_fn = move |exe: &crate::runtime::Executable,
+                                    state: &mut crate::runtime::exec::ParamSet,
+                                    scaling: f32|
+                  -> Result<f64> {
+                let (preds, labels, _, _) = tr.eval_classify(exe, state, scaling, eval_ref)?;
+                Ok(classify::accuracy(&preds, &labels))
+            };
+            let res = trainer.finetune(
+                &cfg,
+                move |step, _rng| {
+                    collate_img(&set.split("train", b, (step as u64) << 11 ^ 0x1A9E), IMG)
+                },
+                Some(&mut eval_fn),
+            )?;
+            accs.push(res.best_eval);
+            cells.push(format!("{:.1}", 100.0 * res.best_eval));
+            eprintln!("[table5 {model}] {label} {}: {:.3}", set.name(), res.best_eval);
+        }
+        let avg = 100.0 * accs.iter().sum::<f64>() / accs.len() as f64;
+        cells.push(format!("{avg:.1}"));
+        r.row(cells);
+    }
+    r.note("paper shape: LP << LoRA ≈ FourierFT(small) < FourierFT(large) <= FF; fine-grained sets (cars196, fgvc100) show the biggest FF gap");
+    Ok(r)
+}

@@ -1,0 +1,91 @@
+//! Greedy decoding for the decoder artifacts (E2E generation, instruction
+//! responses). The fused step artifact returns full [B, T, V] logits; the
+//! generator fills the token buffer position by position, re-running the
+//! forward pass each step (O(T^2) attention recompute — fine at T = 48;
+//! KV caching is a noted non-goal for the sim scale, see DESIGN.md §6).
+
+use crate::data::vocab::{EOS, PAD};
+use crate::runtime::exec::ParamSet;
+use crate::runtime::Executable;
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Greedy-complete a batch of prompts. Returns, per row, the generated
+/// continuation (tokens after the prompt, EOS-truncated inclusive).
+pub fn greedy(
+    exe: &Executable,
+    state: &mut ParamSet,
+    scaling: f32,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+) -> Result<Vec<Vec<i32>>> {
+    let b = exe.meta.model.batch;
+    let t = exe.meta.model.seqlen;
+    let vocab = exe.meta.model.vocab;
+    assert!(prompts.len() <= b, "at most {b} prompts per call");
+
+    let mut buf = vec![PAD; b * t];
+    let mut lens = vec![0usize; b];
+    for (i, p) in prompts.iter().enumerate() {
+        let l = p.len().min(t);
+        buf[i * t..i * t + l].copy_from_slice(&p[..l]);
+        lens[i] = l;
+    }
+    let mut done = vec![false; prompts.len()];
+    let mut out: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+
+    // dummy y/mask (loss ignored at lr=0)
+    let y = Tensor::i32(&[b, t], vec![0; b * t]);
+    let mask = Tensor::f32(&[b, t], vec![0.0; b * t]);
+
+    for _ in 0..max_new {
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        let batch = HashMap::from([
+            ("x".to_string(), Tensor::i32(&[b, t], buf.clone())),
+            ("y".to_string(), y.clone()),
+            ("mask".to_string(), mask.clone()),
+        ]);
+        let step_out = exe.eval(state, scaling, &batch)?;
+        let logits = step_out.logits.as_f32()?;
+        for i in 0..prompts.len() {
+            if done[i] || lens[i] >= t {
+                done[i] = true;
+                continue;
+            }
+            // next token = argmax of logits at the last filled position
+            let pos = lens[i] - 1;
+            let row = &logits[(i * t + pos) * vocab..(i * t + pos + 1) * vocab];
+            let mut best = (0usize, f32::MIN);
+            for (c, &v) in row.iter().enumerate() {
+                if v > best.1 {
+                    best = (c, v);
+                }
+            }
+            let tok = best.0 as i32;
+            buf[i * t + lens[i]] = tok;
+            lens[i] += 1;
+            out[i].push(tok);
+            if tok == EOS {
+                done[i] = true;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Mean masked LM loss over batches (perplexity basis) at lr = 0.
+pub fn lm_loss(
+    exe: &Executable,
+    state: &mut ParamSet,
+    scaling: f32,
+    batches: &[HashMap<String, Tensor>],
+) -> Result<f64> {
+    let mut total = 0.0;
+    for b in batches {
+        total += exe.eval(state, scaling, b)?.loss as f64;
+    }
+    Ok(total / batches.len().max(1) as f64)
+}

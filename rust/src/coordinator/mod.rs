@@ -1,0 +1,19 @@
+//! L3 coordinator: training orchestration, pretrained-base management,
+//! greedy generation, multi-adapter serving, and one experiment driver per
+//! paper table/figure (DESIGN.md §4).
+//!
+//! The coordinator owns the event loop: data generation (rust), device
+//! dispatch (PJRT), metric computation (rust). The paper's contribution is
+//! the L1/L2 parameterization, so L3's "product" is the fine-tuning +
+//! adapter-serving stack a downstream team would run.
+
+pub mod experiments;
+pub mod generate;
+pub mod pretrain;
+pub mod report;
+pub mod serving;
+pub mod trainer;
+
+pub use report::Report;
+
+pub use trainer::{FinetuneCfg, RunResult, Trainer};

@@ -1,0 +1,189 @@
+//! Pretrained-base management: train sim backbones once, cache to disk.
+//!
+//! Real experiments fine-tune *pretrained* RoBERTa/GPT-2/ViT; our sim
+//! models are pretrained here (masked-token for encoders, next-token LM
+//! for decoders, ImageNet-21k-sim classification for ViTs) and cached as
+//! `.base` tensor-set files under `runs/bases/`. Every fine-tuning run
+//! then starts from the same checkpoint, exactly like the paper.
+
+use super::trainer::{Batch, FinetuneCfg, Trainer};
+use crate::adapter::format::{AdapterFile, AdapterKind};
+use crate::data::{collate_img, collate_lm, corpus, vision};
+use crate::runtime::{from_literal, to_literal};
+use crate::tensor::{rng::Rng, Tensor};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// Pretraining recipe per architecture.
+fn recipe(model: &str) -> Option<(&'static str, usize, f32)> {
+    // (artifact, steps, lr)
+    match model {
+        "enc_base" => Some(("enc_base__ff__mlm", 400, 1e-3)),
+        "enc_large" => Some(("enc_large__ff__mlm", 400, 1e-3)),
+        "dec_med" => Some(("dec_med__ff__lm", 500, 1e-3)),
+        "dec_large" => Some(("dec_large__ff__lm", 500, 1e-3)),
+        "vit_base" => Some(("vit_base__ff__ce", 400, 1e-3)),
+        "vit_large" => Some(("vit_large__ff__ce", 400, 1e-3)),
+        "denoiser" => Some(("denoiser__ff__mseimg", 400, 1e-3)),
+        _ => None, // mlp trains from random init (Fig. 7 protocol)
+    }
+}
+
+fn base_path(model: &str) -> std::path::PathBuf {
+    crate::runs_dir().join("bases").join(format!("{model}.base"))
+}
+
+/// Load the cached pretrained base, pretraining it first if absent.
+/// Models without a recipe (mlp) return the seed-0 random init.
+pub fn load_or_init_base(trainer: &Trainer, model: &str) -> Result<Vec<xla::Literal>> {
+    let (hlo, tensors_meta) = trainer.registry.base_init(model)?;
+    let path = base_path(model);
+    if path.exists() {
+        let file = AdapterFile::load(&path)?;
+        let map: BTreeMap<&str, &Tensor> =
+            file.tensors.iter().map(|(k, v)| (k.as_str(), v)).collect();
+        return tensors_meta
+            .iter()
+            .map(|tm| {
+                let t = map
+                    .get(tm.name.as_str())
+                    .with_context(|| format!("base file missing {}", tm.name))?;
+                to_literal(t)
+            })
+            .collect();
+    }
+    let init = crate::runtime::exec::run_base_init(&trainer.client, &hlo, 0)?;
+    if recipe(model).is_none() {
+        return Ok(init);
+    }
+    eprintln!("[pretrain] no cached base for {model}; pretraining...");
+    let base = pretrain(trainer, model)?;
+    // reload via the cache we just wrote
+    load_or_init_base(trainer, model)
+}
+
+/// Pretrain a backbone and cache it. Returns the merged base tensors.
+pub fn pretrain(trainer: &Trainer, model: &str) -> Result<Vec<Tensor>> {
+    let (artifact, steps, lr) =
+        recipe(model).with_context(|| format!("no pretraining recipe for {model}"))?;
+    let exe = trainer.executable(artifact)?;
+    let meta = exe.meta.clone();
+    let (hlo, tensors_meta) = trainer.registry.base_init(model)?;
+    let base_lits = crate::runtime::exec::run_base_init(&trainer.client, &hlo, 0)?;
+    // snapshot the random base host-side for the merge at the end
+    let mut base_tensors: BTreeMap<String, Tensor> = tensors_meta
+        .iter()
+        .zip(&base_lits)
+        .map(|(tm, l)| Ok((tm.name.clone(), from_literal(l)?)))
+        .collect::<Result<_>>()?;
+
+    let mut state = exe.init_state(0, base_lits, vec![])?;
+    let seqlen = meta.model.seqlen;
+    let b = meta.model.batch;
+    let img = meta.model.img;
+    let kind = meta.model.kind.clone();
+    let classes = meta.model.classes;
+    let mut rng = Rng::new(0x5E7 ^ model.len() as u64);
+    let mut next = |step: usize, rng: &mut Rng| -> Batch {
+        match kind.as_str() {
+            "encoder" => collate_lm(&corpus::mlm_set(b, seqlen, step as u64 ^ rng.next_u64()), seqlen),
+            "decoder" => collate_lm(&corpus::lm_set(b, seqlen, step as u64 ^ rng.next_u64()), seqlen),
+            "vit" => collate_img(&vision::imagenet_sim(b, classes, step as u64 ^ rng.next_u64()), img),
+            "denoiser" => {
+                // broad denoising: all generator families at 16x16
+                use crate::coordinator::experiments::table13::downsample32;
+                let pool: Vec<Vec<f32>> = vision::imagenet_sim(b, 200, step as u64 ^ rng.next_u64())
+                    .into_iter()
+                    .map(|e| downsample32(&e.pixels))
+                    .collect();
+                let pix = pool[0].len();
+                let mut x = Vec::with_capacity(b * pix);
+                let mut y = Vec::with_capacity(b * pix);
+                for img_px in &pool {
+                    y.extend(img_px);
+                    x.extend(img_px.iter().map(|&p| (p + 0.6 * rng.normal()).clamp(0.0, 1.0)));
+                }
+                std::collections::HashMap::from([
+                    ("x".to_string(), Tensor::f32(&[b, pix], x)),
+                    ("y".to_string(), Tensor::f32(&[b, pix], y)),
+                ])
+            }
+            other => panic!("no pretraining for {other}"),
+        }
+    };
+    let mut first = 0.0f32;
+    let mut last = 0.0f32;
+    let t0 = std::time::Instant::now();
+    for step in 1..=steps {
+        let batch = next(step, &mut rng);
+        let out = exe.step(
+            &mut state,
+            crate::runtime::exec::StepScalars {
+                step: step as f32,
+                lr,
+                lr_head: lr,
+                wd: 0.0,
+                scaling: 1.0,
+            },
+            &batch,
+        )?;
+        if step == 1 {
+            first = out.loss;
+        }
+        last = out.loss;
+        if step % 100 == 0 {
+            eprintln!("[pretrain {model}] step {step}/{steps} loss {:.4}", out.loss);
+        }
+    }
+    eprintln!(
+        "[pretrain {model}] done: loss {first:.4} -> {last:.4} in {:.1}s",
+        t0.elapsed().as_secs_f64()
+    );
+    anyhow::ensure!(last < first, "pretraining did not reduce loss ({first} -> {last})");
+
+    // Merge: base' = base + delta (ff adapters are dense deltas).
+    let adapter = AdapterFile {
+        kind: AdapterKind::DenseDelta,
+        seed: 0,
+        alpha: 1.0,
+        meta: vec![("model".into(), model.into())],
+        tensors: exe.adapt_tensors(&state)?
+            .into_iter()
+            .filter(|(k, _)| !k.starts_with("head."))
+            .collect(),
+    };
+    crate::adapter::merge::merge_into_base(&adapter, &mut base_tensors)?;
+
+    let file = AdapterFile {
+        kind: AdapterKind::DenseDelta,
+        seed: 0,
+        alpha: 1.0,
+        meta: vec![
+            ("model".into(), model.into()),
+            ("pretrain_artifact".into(), artifact.into()),
+            ("steps".into(), steps.to_string()),
+            ("loss_first".into(), format!("{first}")),
+            ("loss_last".into(), format!("{last}")),
+        ],
+        tensors: base_tensors.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+    };
+    file.save(&base_path(model))?;
+    Ok(base_tensors.into_values().collect())
+}
+
+/// Force (re)pretraining of one model, used by the CLI `pretrain` command.
+pub fn ensure_pretrained(trainer: &Trainer, model: &str, force: bool) -> Result<()> {
+    let path = base_path(model);
+    if force && path.exists() {
+        std::fs::remove_file(&path)?;
+    }
+    if !path.exists() && recipe(model).is_some() {
+        pretrain(trainer, model)?;
+    }
+    Ok(())
+}
+
+/// Fine-tune loss-curve sanity helper used by tests & FinetuneCfg defaults.
+pub fn default_cfg_for(artifact: &str) -> FinetuneCfg {
+    FinetuneCfg::new(artifact)
+}

@@ -1,0 +1,159 @@
+//! Experiment reports: aligned-column console tables + markdown + JSON
+//! persisted under `runs/reports/`, so EXPERIMENTS.md can cite exact runs.
+
+use crate::util::json::{self, Json};
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// A rectangular result table with a title and free-form notes.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+    /// machine-readable extras (series data for figures etc.)
+    pub extra: BTreeMap<String, Json>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str, columns: &[&str]) -> Report {
+        Report {
+            id: id.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+            extra: BTreeMap::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Console rendering with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} — {} ==\n", self.id, self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.columns, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        out
+    }
+
+    /// Markdown rendering (for EXPERIMENTS.md extracts).
+    pub fn markdown(&self) -> String {
+        let mut out = format!("### {} — {}\n\n", self.id, self.title);
+        out.push_str(&format!("| {} |\n", self.columns.join(" | ")));
+        out.push_str(&format!("|{}|\n", self.columns.iter().map(|_| "---").collect::<Vec<_>>().join("|")));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        for n in &self.notes {
+            out.push_str(&format!("\n*{n}*\n"));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("id", json::s(&self.id)),
+            ("title", json::s(&self.title)),
+            ("columns", json::arr(self.columns.iter().map(|c| json::s(c)).collect())),
+            (
+                "rows",
+                json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| json::arr(r.iter().map(|c| json::s(c)).collect()))
+                        .collect(),
+                ),
+            ),
+            ("notes", json::arr(self.notes.iter().map(|n| json::s(n)).collect())),
+            ("extra", Json::Obj(self.extra.clone())),
+        ])
+    }
+
+    /// Print to stdout and persist md + json under runs/reports/.
+    pub fn emit(&self) -> Result<()> {
+        println!("{}", self.render());
+        let dir = crate::runs_dir().join("reports");
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(dir.join(format!("{}.md", self.id)), self.markdown())?;
+        std::fs::write(dir.join(format!("{}.json", self.id)), self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+/// Format "mean ± std" the way the paper's tables do.
+pub fn pm(mean: f64, std: f64, decimals: usize) -> String {
+    format!("{mean:.decimals$} ±{std:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_and_markdown_is_valid() {
+        let mut r = Report::new("t0", "demo", &["method", "acc"]);
+        r.row(vec!["fourierft".into(), "91.2".into()]);
+        r.row(vec!["lora".into(), "90.8".into()]);
+        r.note("n=64");
+        let text = r.render();
+        assert!(text.contains("fourierft"));
+        let md = r.markdown();
+        assert!(md.starts_with("### t0"));
+        assert_eq!(md.matches('|').count(), 4 * 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut r = Report::new("t", "t", &["a", "b"]);
+        r.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut r = Report::new("t1", "x", &["a"]);
+        r.row(vec!["1".into()]);
+        let j = r.to_json();
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("id").unwrap().as_str(), Some("t1"));
+    }
+
+    #[test]
+    fn pm_formats() {
+        assert_eq!(pm(94.25, 0.31, 1), "94.2 ±0.3");
+    }
+}

@@ -1,0 +1,136 @@
+//! Multi-adapter serving loop — the PetS/Civitai scenario from the paper's
+//! introduction: one frozen base, many tiny fine-tunes, requests tagged by
+//! adapter.
+//!
+//! The router groups a request queue by adapter, hot-swaps adapter tensors
+//! into the device state (base stays resident), executes batched forwards,
+//! and reports per-adapter latency plus swap-overhead accounting. The
+//! experiment `bench serving` (micro bench) contrasts FourierFT's swap
+//! cost (n floats/site + IDFT) against LoRA's (2dr floats/site + matmul)
+//! and dense deltas (d^2 floats/site).
+
+use super::trainer::{Batch, Trainer};
+use crate::adapter::format::AdapterFile;
+use crate::adapter::store::AdapterStore;
+use crate::runtime::exec::ParamSet;
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// One inference request against a named adapter.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub adapter: String,
+    pub batch: Batch,
+}
+
+/// Serving statistics.
+#[derive(Debug, Default, Clone)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub swaps: usize,
+    pub swap_seconds: f64,
+    pub exec_seconds: f64,
+    pub per_adapter: Vec<(String, usize)>,
+}
+
+impl ServeStats {
+    pub fn throughput_rps(&self) -> f64 {
+        let total = self.swap_seconds + self.exec_seconds;
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / total
+        }
+    }
+}
+
+/// A server: one artifact family + its device state + an adapter store.
+pub struct Server<'a> {
+    pub trainer: &'a Trainer,
+    pub artifact: String,
+    pub store: AdapterStore,
+    state: ParamSet,
+    active: Option<String>,
+    scaling: f32,
+}
+
+impl<'a> Server<'a> {
+    /// Build a server over a frozen base; adapters come from `store`.
+    pub fn new(
+        trainer: &'a Trainer,
+        artifact: &str,
+        store: AdapterStore,
+        entry_seed: u64,
+        scaling: f32,
+    ) -> Result<Server<'a>> {
+        let exe = trainer.executable(artifact)?;
+        let (statics, _) =
+            trainer.make_statics(&exe.meta, entry_seed, crate::fourier::EntryBias::None)?;
+        let base = trainer.base_for(&exe.meta)?;
+        let state = exe.init_state(0, base, statics)?;
+        Ok(Server { trainer, artifact: artifact.to_string(), store, state, active: None, scaling })
+    }
+
+    /// Swap in an adapter by name (no-op if already active).
+    pub fn activate(&mut self, name: &str, stats: &mut ServeStats) -> Result<()> {
+        if self.active.as_deref() == Some(name) {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let file = self.store.load(name)?;
+        let exe = self.trainer.executable(&self.artifact)?;
+        let tensors: HashMap<String, Tensor> = file.tensors.iter().cloned().collect();
+        exe.set_adapt(&mut self.state, &tensors)?;
+        self.active = Some(name.to_string());
+        stats.swaps += 1;
+        stats.swap_seconds += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Serve a queue: group by adapter (minimizing swaps), run each batch,
+    /// return logits per request id.
+    pub fn serve(&mut self, queue: Vec<Request>) -> Result<(Vec<(u64, Tensor)>, ServeStats)> {
+        let mut stats = ServeStats { requests: queue.len(), ..Default::default() };
+        // stable group-by-adapter routing
+        let mut grouped: Vec<(String, Vec<Request>)> = Vec::new();
+        for req in queue {
+            match grouped.iter_mut().find(|(a, _)| *a == req.adapter) {
+                Some((_, v)) => v.push(req),
+                None => grouped.push((req.adapter.clone(), vec![req])),
+            }
+        }
+        let exe = self.trainer.executable(&self.artifact)?;
+        let mut results = Vec::new();
+        for (adapter, reqs) in grouped {
+            self.activate(&adapter, &mut stats)?;
+            stats.per_adapter.push((adapter.clone(), reqs.len()));
+            for req in reqs {
+                let t0 = Instant::now();
+                let out = exe.eval(&mut self.state, self.scaling, &req.batch)?;
+                stats.exec_seconds += t0.elapsed().as_secs_f64();
+                stats.batches += 1;
+                results.push((req.id, out.logits));
+            }
+        }
+        Ok((results, stats))
+    }
+
+    /// Persist the currently-active adapter state under a new name
+    /// (training-service path: fine-tune then publish).
+    pub fn publish(&mut self, name: &str, kind: crate::adapter::AdapterKind, seed: u64,
+                   meta: Vec<(String, String)>) -> Result<usize> {
+        let exe = self.trainer.executable(&self.artifact)?;
+        let file = AdapterFile {
+            kind,
+            seed,
+            alpha: self.scaling,
+            meta,
+            tensors: exe.adapt_tensors(&self.state)?,
+        };
+        self.store.save(name, &file)
+    }
+}

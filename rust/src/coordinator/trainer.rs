@@ -1,0 +1,241 @@
+//! Generic fine-tuning loop over a step artifact.
+//!
+//! The trainer is method-agnostic: the artifact's meta describes every
+//! tensor, `make_statics` produces the frozen method inputs (spectral
+//! entries / ablation bases), and the loop is data-in → step → metrics-out.
+//! Executables are cached per artifact name so sweeps and seed repeats pay
+//! XLA compilation once.
+
+use crate::fourier::{sample_entries, EntryBias};
+use crate::runtime::{exec, to_literal, ArtifactMeta, Client, Executable, Registry};
+use crate::tensor::{linalg, rng::Rng, Tensor};
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
+
+pub type Batch = HashMap<String, Tensor>;
+
+/// Hyperparameters for one fine-tuning run.
+#[derive(Debug, Clone)]
+pub struct FinetuneCfg {
+    pub artifact: String,
+    pub lr: f32,
+    /// Task-head learning rate (paper Appendix B tunes it separately).
+    pub lr_head: f32,
+    pub wd: f32,
+    /// FourierFT alpha / LoRA scaling (alpha_lora / r), method-dependent.
+    pub scaling: f32,
+    pub steps: usize,
+    /// Evaluate every `eval_every` steps (0 = only at the end).
+    pub eval_every: usize,
+    pub seed: u64,
+    /// Entry-matrix seed (paper: 2024) and frequency bias (Eq. 5).
+    pub entry_seed: u64,
+    pub bias: EntryBias,
+}
+
+impl FinetuneCfg {
+    pub fn new(artifact: &str) -> FinetuneCfg {
+        FinetuneCfg {
+            artifact: artifact.to_string(),
+            lr: 5e-3,
+            lr_head: 2e-3,
+            wd: 0.0,
+            scaling: 16.0,
+            steps: 200,
+            eval_every: 0,
+            seed: 0,
+            entry_seed: 2024,
+            bias: EntryBias::None,
+        }
+    }
+}
+
+/// Outcome of a run: loss curve, per-eval metric history, final adapt.
+#[derive(Debug)]
+pub struct RunResult {
+    pub losses: Vec<f32>,
+    /// (step, metric) pairs from `eval_fn`.
+    pub evals: Vec<(usize, f64)>,
+    pub best_eval: f64,
+    pub final_eval: f64,
+    pub adapt: Vec<(String, Tensor)>,
+    pub entries: Option<(Vec<i32>, Vec<i32>)>,
+    pub train_seconds: f64,
+}
+
+/// Trainer: a PJRT client + executable cache + artifact registry.
+pub struct Trainer {
+    pub client: Client,
+    pub registry: Registry,
+    cache: Mutex<BTreeMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Trainer {
+    pub fn new(client: Client, registry: Registry) -> Trainer {
+        Trainer { client, registry, cache: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn open_default() -> Result<Trainer> {
+        let reg = Registry::open(&crate::artifacts_dir())
+            .context("opening artifact registry (run `make artifacts`)")?;
+        Ok(Trainer::new(Client::cpu()?, reg))
+    }
+
+    /// Compile (or fetch cached) the executable for an artifact family.
+    pub fn executable(&self, artifact: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(artifact) {
+            return Ok(e.clone());
+        }
+        let meta = self.registry.meta(artifact)?.clone();
+        let exe = std::sync::Arc::new(Executable::load(&self.client, &self.registry.dir, &meta)?);
+        self.cache.lock().unwrap().insert(artifact.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Frozen method inputs (role = "static") for an artifact.
+    ///
+    /// * `fourierft`: the shared entry matrix E (seeded, optional Eq. 5 bias)
+    /// * `randbasis`: Gaussian basis pair B1, B2
+    /// * `orthobasis`: Haar-orthogonal basis pair (QR of Gaussian)
+    pub fn make_statics(
+        &self,
+        meta: &ArtifactMeta,
+        entry_seed: u64,
+        bias: EntryBias,
+    ) -> Result<(Vec<xla::Literal>, Option<(Vec<i32>, Vec<i32>)>)> {
+        let statics = meta.inputs_with_role("static");
+        if statics.is_empty() {
+            return Ok((vec![], None));
+        }
+        let d = if meta.model.kind == "mlp" { meta.model.hidden } else { meta.model.d };
+        let n = meta.method.n;
+        let (rows, cols) = sample_entries(d, d, n, bias, entry_seed);
+        let mut e_data = rows.clone();
+        e_data.extend(&cols);
+        let entries_t = Tensor::i32(&[2, n], e_data);
+
+        let mut lits = Vec::new();
+        for t in &statics {
+            match t.name.as_str() {
+                "entries" => lits.push(to_literal(&entries_t)?),
+                "basis1" | "basis2" => {
+                    let dim = t.shape[0];
+                    let tag = if t.name == "basis1" { 1 } else { 2 };
+                    let mut rng = Rng::new(entry_seed ^ (0xBA5E << 8) ^ tag);
+                    let g = Tensor::f32(&[dim, dim], rng.normal_vec(dim * dim, 1.0));
+                    let b = if meta.method.name == "orthobasis" {
+                        linalg::qr_q(&g)?
+                    } else {
+                        g
+                    };
+                    lits.push(to_literal(&b)?);
+                }
+                other => anyhow::bail!("unknown static input {other}"),
+            }
+        }
+        Ok((lits, Some((rows, cols))))
+    }
+
+    /// Load pretrained base literals for the artifact's model, falling back
+    /// to the seed-0 random init when no pretrained checkpoint exists.
+    pub fn base_for(&self, meta: &ArtifactMeta) -> Result<Vec<xla::Literal>> {
+        crate::coordinator::pretrain::load_or_init_base(self, &meta.model.name)
+    }
+
+    /// Run one fine-tune. `next_batch(step, rng)` yields training batches;
+    /// `eval_fn` (if any) maps the trainer+state to a scalar quality metric
+    /// (higher = better).
+    pub fn finetune(
+        &self,
+        cfg: &FinetuneCfg,
+        mut next_batch: impl FnMut(usize, &mut Rng) -> Batch,
+        mut eval_fn: Option<&mut dyn FnMut(&Executable, &mut exec::ParamSet, f32) -> Result<f64>>,
+    ) -> Result<RunResult> {
+        let exe = self.executable(&cfg.artifact)?;
+        let meta = &exe.meta;
+        let (statics, entries) = self.make_statics(meta, cfg.entry_seed, cfg.bias)?;
+        let base = self.base_for(meta)?;
+        let mut state = exe.init_state(cfg.seed as i32, base, statics)?;
+
+        let mut rng = Rng::new(cfg.seed ^ 0x7EA1);
+        let mut losses = Vec::with_capacity(cfg.steps);
+        let mut evals = Vec::new();
+        let t0 = std::time::Instant::now();
+        for step in 1..=cfg.steps {
+            let batch = next_batch(step, &mut rng);
+            let out = exe.step(
+                &mut state,
+                exec::StepScalars {
+                    step: step as f32,
+                    lr: cfg.lr,
+                    lr_head: cfg.lr_head,
+                    wd: cfg.wd,
+                    scaling: cfg.scaling,
+                },
+                &batch,
+            )?;
+            anyhow::ensure!(out.loss.is_finite(), "loss diverged at step {step}");
+            losses.push(out.loss);
+            let do_eval = cfg.eval_every > 0 && step % cfg.eval_every == 0;
+            if do_eval {
+                if let Some(f) = eval_fn.as_deref_mut() {
+                    evals.push((step, f(&exe, &mut state, cfg.scaling)?));
+                }
+            }
+        }
+        if let Some(f) = eval_fn.as_deref_mut() {
+            if evals.last().map(|(s, _)| *s != cfg.steps).unwrap_or(true) {
+                evals.push((cfg.steps, f(&exe, &mut state, cfg.scaling)?));
+            }
+        }
+        let train_seconds = t0.elapsed().as_secs_f64();
+        let best_eval = if evals.is_empty() {
+            f64::NAN
+        } else {
+            evals.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max)
+        };
+        let final_eval = evals.last().map(|(_, v)| *v).unwrap_or(f64::NAN);
+        Ok(RunResult {
+            losses,
+            evals,
+            best_eval,
+            final_eval,
+            adapt: exe.adapt_tensors(&state)?,
+            entries,
+            train_seconds,
+        })
+    }
+
+    /// Classification evaluation: accuracy-style metrics from logits.
+    /// Returns (predictions, labels, raw scores for regression).
+    pub fn eval_classify(
+        &self,
+        exe: &Executable,
+        state: &mut exec::ParamSet,
+        scaling: f32,
+        batches: &[Batch],
+    ) -> Result<(Vec<i32>, Vec<i32>, Vec<f32>, Vec<f32>)> {
+        let classes = exe.meta.logits_shape()?[1];
+        let mut preds = Vec::new();
+        let mut labels = Vec::new();
+        let mut scores = Vec::new();
+        let mut targets = Vec::new();
+        for batch in batches {
+            let out = exe.eval(state, scaling, batch)?;
+            let logits = out.logits.as_f32()?;
+            if exe.meta.loss == "mse" {
+                scores.extend(logits.iter().copied());
+                targets.extend(batch["y"].as_f32()?.iter().copied());
+            } else {
+                preds.extend(crate::metrics::classify::argmax_rows(logits, classes));
+                labels.extend(batch["y"].as_i32()?.iter().copied());
+            }
+        }
+        Ok((preds, labels, scores, targets))
+    }
+}
+
+fn evals_empty(evals: &[(usize, f64)]) -> bool {
+    evals.is_empty()
+}

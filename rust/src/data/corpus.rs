@@ -1,0 +1,171 @@
+//! Pretraining streams: the "broad" data the sim base models are trained on
+//! before any fine-tuning, covering the grammar of every downstream task.
+//!
+//! * Encoder: masked-token prediction (15% of positions, MLM-style).
+//! * Decoder: plain next-token LM over the same sentence distribution plus
+//!   E2E prompts and instruction traces (so fine-tuning starts from a
+//!   competent base, as with real GPT-2 / LLaMA checkpoints).
+
+use super::vocab::{vocab, Class, BOS, CLS, EOS, MASK};
+use super::{Label, TextExample};
+use crate::tensor::rng::Rng;
+
+/// A generic grammatical sentence mixing all word classes.
+pub fn sentence(rng: &mut Rng, len: usize) -> Vec<i32> {
+    let v = vocab();
+    let mut toks = Vec::with_capacity(len);
+    let classes = [
+        Class::Determiner,
+        Class::NeutralAdj,
+        Class::Noun,
+        Class::Verb,
+        Class::Adverb,
+        Class::PosAdj,
+        Class::NegAdj,
+        Class::Name,
+        Class::Food,
+        Class::Price,
+        Class::Area,
+        Class::Rating,
+        Class::Number,
+        Class::Op,
+        Class::Question,
+        Class::Negation,
+        Class::Filler,
+    ];
+    // Weighted towards the content classes the tasks use, with fillers so
+    // the whole embedding table trains.
+    let weights = [8.0, 6.0, 12.0, 10.0, 4.0, 5.0, 5.0, 3.0, 3.0, 2.0, 2.0, 2.0, 4.0, 2.0, 2.0, 2.0, 8.0];
+    for _ in 0..len {
+        let c = classes[rng.weighted(&weights)];
+        let ids = v.ids_of(c);
+        toks.push(ids[rng.below(ids.len())]);
+    }
+    toks
+}
+
+/// Encoder MLM example: x has MASK at ~15% of positions, y holds the
+/// original ids, mask selects the masked positions for the loss.
+pub fn mlm_example(rng: &mut Rng, seqlen: usize) -> TextExample {
+    let mut x = vec![CLS];
+    x.extend(sentence(rng, seqlen - 1));
+    let y = x.clone();
+    let mut mask = vec![0.0f32; seqlen];
+    for i in 1..seqlen {
+        if rng.chance(0.15) {
+            x[i] = MASK;
+            mask[i] = 1.0;
+        }
+    }
+    if mask.iter().all(|&m| m == 0.0) {
+        x[1] = MASK;
+        mask[1] = 1.0;
+    }
+    TextExample { tokens: x, label: Label::Seq { target: y, mask } }
+}
+
+/// Decoder LM example: next-token prediction over a sentence or a task-
+/// format trace (20% E2E-shaped, 20% instruction-shaped, 60% prose).
+pub fn lm_example(rng: &mut Rng, seqlen: usize) -> TextExample {
+    let roll = rng.f64();
+    let mut x = if roll < 0.2 {
+        let mr = super::e2e::Mr::sample(rng);
+        let mut t = mr.prompt();
+        let refs = mr.references();
+        t.extend(&refs[rng.below(refs.len())]);
+        t
+    } else if roll < 0.4 {
+        let q = super::instruct::Question::sample(rng, &super::instruct::Op::ALL);
+        let mut t = q.prompt();
+        t.extend(q.answer());
+        t
+    } else {
+        let mut t = vec![BOS];
+        t.extend(sentence(rng, seqlen - 2));
+        t.push(EOS);
+        t
+    };
+    x.truncate(seqlen);
+    let mut y = x[1..].to_vec();
+    y.push(0);
+    let mut mask = vec![1.0f32; x.len()];
+    *mask.last_mut().unwrap() = 0.0;
+    TextExample { tokens: x, label: Label::Seq { target: y, mask } }
+}
+
+pub fn mlm_set(count: usize, seqlen: usize, seed: u64) -> Vec<TextExample> {
+    let mut rng = Rng::new(seed ^ 0x313A);
+    (0..count).map(|_| mlm_example(&mut rng, seqlen)).collect()
+}
+
+pub fn lm_set(count: usize, seqlen: usize, seed: u64) -> Vec<TextExample> {
+    let mut rng = Rng::new(seed ^ 0x1313);
+    (0..count).map(|_| lm_example(&mut rng, seqlen)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::vocab::SEP;
+
+    #[test]
+    fn mlm_masks_roughly_15_percent() {
+        let exs = mlm_set(100, 32, 1);
+        let total: f32 = exs
+            .iter()
+            .map(|e| match &e.label {
+                Label::Seq { mask, .. } => mask.iter().sum::<f32>(),
+                _ => 0.0,
+            })
+            .sum();
+        let frac = total / (100.0 * 31.0);
+        assert!((0.10..0.22).contains(&frac), "mask fraction {frac}");
+    }
+
+    #[test]
+    fn mlm_target_restores_original() {
+        let mut rng = Rng::new(2);
+        let ex = mlm_example(&mut rng, 16);
+        if let Label::Seq { target, mask } = &ex.label {
+            for i in 0..16 {
+                if mask[i] > 0.0 {
+                    assert_eq!(ex.tokens[i], MASK);
+                    assert_ne!(target[i], MASK);
+                } else {
+                    assert_eq!(ex.tokens[i], target[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lm_y_is_shifted_x() {
+        let exs = lm_set(20, 48, 3);
+        for e in &exs {
+            if let Label::Seq { target, .. } = &e.label {
+                for i in 0..e.tokens.len() - 1 {
+                    assert_eq!(target[i], e.tokens[i + 1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lm_mixes_task_formats() {
+        let exs = lm_set(200, 48, 4);
+        let with_sep = exs.iter().filter(|e| e.tokens.contains(&SEP)).count();
+        assert!(with_sep > 40, "only {with_sep}/200 contain task formatting");
+    }
+
+    #[test]
+    fn sentences_use_broad_vocab() {
+        let mut rng = Rng::new(7);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..300 {
+            for t in sentence(&mut rng, 20) {
+                seen.insert(t);
+            }
+        }
+        assert!(seen.len() > 300, "vocabulary coverage {} too low", seen.len());
+    }
+}

@@ -1,0 +1,172 @@
+//! E2E-NLG-like data-to-text task (Table 3).
+//!
+//! Mirrors the E2E challenge structure: a meaning representation (MR) of
+//! restaurant slots is linearized as the prompt; the target is a natural-
+//! language utterance realizing those slots. Several surface templates per
+//! MR provide the *multiple references* the E2E metrics (BLEU / NIST /
+//! METEOR / ROUGE-L / CIDEr) are designed for.
+//!
+//! Sequence layout (decoder, T = 48):
+//!   BOS  name[x] food[y] price[z] area[w] rating[v]  SEP  utterance  EOS
+//! Loss mask covers only the utterance (+EOS), exactly like fine-tuning
+//! GPT-2 on E2E with the prompt masked out.
+
+use super::vocab::{vocab, Class, BOS, EOS, SEP};
+use super::{Label, TextExample};
+use crate::tensor::rng::Rng;
+
+/// One meaning representation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mr {
+    pub name: i32,
+    pub food: i32,
+    pub price: i32,
+    pub area: i32,
+    pub rating: i32,
+}
+
+impl Mr {
+    pub fn sample(rng: &mut Rng) -> Mr {
+        let v = vocab();
+        let p = |c: Class, rng: &mut Rng| {
+            let ids = v.ids_of(c);
+            ids[rng.below(ids.len())]
+        };
+        Mr {
+            name: p(Class::Name, rng),
+            food: p(Class::Food, rng),
+            price: p(Class::Price, rng),
+            area: p(Class::Area, rng),
+            rating: p(Class::Rating, rng),
+        }
+    }
+
+    /// Linearized prompt tokens (the "table").
+    pub fn prompt(&self) -> Vec<i32> {
+        vec![BOS, self.name, self.food, self.price, self.area, self.rating, SEP]
+    }
+
+    /// All reference realizations (each a token sequence, EOS-terminated).
+    pub fn references(&self) -> Vec<Vec<i32>> {
+        let v = vocab();
+        let the = v.ids_of(Class::Determiner)[0];
+        let is = v.ids_of(Class::Verb)[0];
+        let place = v.ids_of(Class::Noun)
+            .into_iter()
+            .find(|&id| v.word(id) == "place")
+            .unwrap();
+        // Three template families, mirroring E2E's human-reference variety.
+        let t1 = vec![
+            self.name, is, the, self.price, self.food, place, self.area, self.rating, EOS,
+        ];
+        let t2 = vec![
+            the, self.food, place, self.name, is, self.price, self.rating, self.area, EOS,
+        ];
+        let t3 = vec![
+            self.name, is, the, self.rating, self.food, place, self.price, self.area, EOS,
+        ];
+        vec![t1, t2, t3]
+    }
+
+    /// One training example: prompt + a sampled reference, LM-shifted.
+    pub fn example(&self, rng: &mut Rng, seqlen: usize) -> TextExample {
+        let refs = self.references();
+        let target_seq = &refs[rng.below(refs.len())];
+        let mut tokens = self.prompt();
+        let prompt_len = tokens.len();
+        tokens.extend(target_seq);
+        // next-token LM: y[t] = x[t+1], mask on positions predicting the
+        // utterance (from the SEP position through EOS-1).
+        let mut y = tokens[1..].to_vec();
+        y.push(0);
+        let mut mask = vec![0.0f32; tokens.len()];
+        for m in mask.iter_mut().take(tokens.len() - 1).skip(prompt_len - 1) {
+            *m = 1.0;
+        }
+        tokens.truncate(seqlen);
+        y.truncate(seqlen);
+        mask.truncate(seqlen);
+        TextExample { tokens, label: Label::Seq { target: y, mask } }
+    }
+}
+
+/// Deterministic dataset of MRs; train/val/test use disjoint MR streams.
+pub fn split(split: &str, count: usize, seed: u64) -> Vec<Mr> {
+    let tag = match split {
+        "train" => 0x11,
+        "val" => 0x22,
+        "test" => 0x33,
+        other => panic!("unknown split {other}"),
+    };
+    let mut rng = Rng::new(seed ^ 0xE2E0).fork(tag);
+    (0..count).map(|_| Mr::sample(&mut rng)).collect()
+}
+
+/// Training examples for a list of MRs.
+pub fn examples(mrs: &[Mr], seqlen: usize, seed: u64) -> Vec<TextExample> {
+    let mut rng = Rng::new(seed ^ 0xE2E1);
+    mrs.iter().map(|mr| mr.example(&mut rng, seqlen)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompt_and_references_are_well_formed() {
+        let mut rng = Rng::new(1);
+        let mr = Mr::sample(&mut rng);
+        assert_eq!(mr.prompt().len(), 7);
+        for r in mr.references() {
+            assert_eq!(*r.last().unwrap(), EOS);
+            assert!(r.contains(&mr.name));
+            assert!(r.contains(&mr.food));
+            assert!(r.contains(&mr.price));
+        }
+    }
+
+    #[test]
+    fn references_differ_in_word_order() {
+        let mut rng = Rng::new(2);
+        let mr = Mr::sample(&mut rng);
+        let refs = mr.references();
+        assert_ne!(refs[0], refs[1]);
+        assert_ne!(refs[1], refs[2]);
+    }
+
+    #[test]
+    fn example_mask_covers_only_utterance() {
+        let mut rng = Rng::new(3);
+        let mr = Mr::sample(&mut rng);
+        let ex = mr.example(&mut rng, 48);
+        if let Label::Seq { target, mask } = &ex.label {
+            assert_eq!(target.len(), ex.tokens.len());
+            // prompt positions (before SEP) carry no loss except the one
+            // predicting the first utterance token
+            let sep_pos = ex.tokens.iter().position(|&t| t == SEP).unwrap();
+            assert_eq!(mask[..sep_pos - 1], vec![0.0; sep_pos - 1][..]);
+            assert!(mask[sep_pos] > 0.0);
+            // masked positions' targets are the utterance tokens
+            let masked: usize = mask.iter().map(|&m| m as usize).sum();
+            assert_eq!(masked, mr.references()[0].len());
+        } else {
+            panic!("expected Seq label");
+        }
+    }
+
+    #[test]
+    fn splits_disjoint() {
+        let tr = split("train", 200, 5);
+        let te = split("test", 50, 5);
+        let dup = te.iter().filter(|m| tr.contains(m)).count();
+        assert!(dup <= 2, "{dup} test MRs leak into train");
+    }
+
+    #[test]
+    fn fits_decoder_window() {
+        let mrs = split("train", 100, 7);
+        for ex in examples(&mrs, 48, 7) {
+            assert!(ex.tokens.len() <= 48);
+        }
+    }
+}

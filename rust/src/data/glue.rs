@@ -1,0 +1,325 @@
+//! Six GLUE-like NLU tasks over the shared grammar (Table 2, Figures 4/5/6).
+//!
+//! Each task is a genuine sequence-understanding problem (not a bag-of-
+//! words shortcut around position 0): labels depend on token interactions
+//! (negation scope, cross-sentence overlap, word order), so attention —
+//! and therefore the adapted W_q/W_v — matters. Metrics mirror the paper:
+//! accuracy for SST/MRPC/QNLI/RTE, Matthews correlation for CoLA, Pearson
+//! correlation for STS-B.
+
+use super::vocab::{vocab, Class, CLS, SEP};
+use super::{Label, TextExample};
+use crate::tensor::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GlueTask {
+    Sst2,
+    Mrpc,
+    Cola,
+    Qnli,
+    Rte,
+    Stsb,
+}
+
+impl GlueTask {
+    pub const ALL: [GlueTask; 6] =
+        [GlueTask::Sst2, GlueTask::Mrpc, GlueTask::Cola, GlueTask::Qnli, GlueTask::Rte, GlueTask::Stsb];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GlueTask::Sst2 => "sst2",
+            GlueTask::Mrpc => "mrpc",
+            GlueTask::Cola => "cola",
+            GlueTask::Qnli => "qnli",
+            GlueTask::Rte => "rte",
+            GlueTask::Stsb => "stsb",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<GlueTask> {
+        Self::ALL.iter().copied().find(|t| t.name() == s)
+    }
+
+    pub fn metric_name(&self) -> &'static str {
+        match self {
+            GlueTask::Cola => "mcc",
+            GlueTask::Stsb => "pcc",
+            _ => "acc",
+        }
+    }
+
+    pub fn is_regression(&self) -> bool {
+        matches!(self, GlueTask::Stsb)
+    }
+
+    pub fn num_classes(&self) -> usize {
+        2 // all classification tasks here are binary; head is 3-wide (cfg)
+    }
+
+    /// Generate one example.
+    pub fn example(&self, rng: &mut Rng) -> TextExample {
+        match self {
+            GlueTask::Sst2 => sst2(rng),
+            GlueTask::Mrpc => mrpc(rng),
+            GlueTask::Cola => cola(rng),
+            GlueTask::Qnli => qnli(rng),
+            GlueTask::Rte => rte(rng),
+            GlueTask::Stsb => stsb(rng),
+        }
+    }
+
+    /// Deterministic split: train / val draws from disjoint substreams.
+    pub fn split(&self, split: &str, count: usize, seed: u64) -> Vec<TextExample> {
+        let tag = match split {
+            "train" => 1,
+            "val" => 2,
+            "test" => 3,
+            other => panic!("unknown split {other}"),
+        };
+        let mut rng = Rng::new(seed ^ (0x6C75 << 16) ^ (self.name().len() as u64) << 8 ^ tag)
+            .fork(fxhash(self.name()) ^ tag);
+        (0..count).map(|_| self.example(&mut rng)).collect()
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    s.bytes().fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+fn pick(rng: &mut Rng, class: Class) -> i32 {
+    let ids = vocab().ids_of(class);
+    ids[rng.below(ids.len())]
+}
+
+/// "the movie was (not)? very good/bad ..." — label flips under negation.
+fn sst2(rng: &mut Rng) -> TextExample {
+    let mut toks = vec![CLS];
+    let positive = rng.chance(0.5);
+    let negated = rng.chance(0.3);
+    toks.push(pick(rng, Class::Determiner));
+    toks.push(pick(rng, Class::Noun));
+    toks.push(pick(rng, Class::Verb));
+    if negated {
+        toks.push(pick(rng, Class::Negation));
+    }
+    if rng.chance(0.6) {
+        toks.push(pick(rng, Class::Adverb));
+    }
+    toks.push(pick(rng, if positive { Class::PosAdj } else { Class::NegAdj }));
+    // distractor clause with a *neutral* adjective
+    if rng.chance(0.5) {
+        toks.push(pick(rng, Class::Determiner));
+        toks.push(pick(rng, Class::NeutralAdj));
+        toks.push(pick(rng, Class::Noun));
+    }
+    let label = (positive ^ negated) as i32;
+    TextExample { tokens: toks, label: Label::Class(label) }
+}
+
+fn content_sentence(rng: &mut Rng, len: usize) -> Vec<i32> {
+    let mut s = Vec::with_capacity(len);
+    s.push(pick(rng, Class::Determiner));
+    s.push(pick(rng, Class::NeutralAdj));
+    s.push(pick(rng, Class::Noun));
+    s.push(pick(rng, Class::Verb));
+    while s.len() < len {
+        s.push(pick(rng, Class::Noun));
+    }
+    s
+}
+
+/// Paraphrase: same content words (shuffled interior) vs different content.
+fn mrpc(rng: &mut Rng) -> TextExample {
+    let s1 = content_sentence(rng, 6);
+    let paraphrase = rng.chance(0.5);
+    let s2 = if paraphrase {
+        let mut s2 = s1.clone();
+        // shuffle the non-initial tokens (word-order change, same content)
+        let tail = &mut s2[1..];
+        rng.shuffle(tail);
+        s2
+    } else {
+        // change the content nouns
+        let mut s2 = content_sentence(rng, 6);
+        s2[2] = pick(rng, Class::Noun);
+        s2
+    };
+    let mut toks = vec![CLS];
+    toks.extend(&s1);
+    toks.push(SEP);
+    toks.extend(&s2);
+    TextExample { tokens: toks, label: Label::Class(paraphrase as i32) }
+}
+
+/// Acceptability: canonical order DET (ADV)? ADJ NOUN VERB vs a corrupted
+/// permutation of the same words.
+fn cola(rng: &mut Rng) -> TextExample {
+    let mut s = vec![
+        pick(rng, Class::Determiner),
+        pick(rng, Class::Adverb),
+        pick(rng, Class::NeutralAdj),
+        pick(rng, Class::Noun),
+        pick(rng, Class::Verb),
+        pick(rng, Class::PosAdj),
+    ];
+    let acceptable = rng.chance(0.5);
+    if !acceptable {
+        // corrupt: swap two distinct word-class positions
+        let i = rng.below(s.len());
+        let mut j = rng.below(s.len());
+        while j == i {
+            j = rng.below(s.len());
+        }
+        s.swap(i, j);
+        // tiny chance the swap is a no-op class-wise; force a det/verb swap
+        s.swap(0, 4);
+    }
+    let mut toks = vec![CLS];
+    toks.extend(s);
+    TextExample { tokens: toks, label: Label::Class(acceptable as i32) }
+}
+
+/// QNLI-like: "what/where NOUN" question + sentence; entailed iff the
+/// sentence mentions the queried noun.
+fn qnli(rng: &mut Rng) -> TextExample {
+    let noun = pick(rng, Class::Noun);
+    let entailed = rng.chance(0.5);
+    let mut toks = vec![CLS, pick(rng, Class::Question), noun, SEP];
+    let mut sent = content_sentence(rng, 7);
+    if entailed {
+        let pos = 2 + rng.below(4);
+        sent[pos] = noun;
+    } else {
+        // ensure the noun does not appear
+        for t in sent.iter_mut() {
+            if *t == noun {
+                *t = pick(rng, Class::Noun);
+            }
+        }
+        if sent.contains(&noun) {
+            sent[2] = noun + 1; // fallback; ids are dense within class
+        }
+    }
+    toks.extend(sent);
+    TextExample { tokens: toks, label: Label::Class(entailed as i32) }
+}
+
+/// RTE-like: hypothesis content ⊆ premise content => entailment.
+fn rte(rng: &mut Rng) -> TextExample {
+    let premise = content_sentence(rng, 8);
+    let entailed = rng.chance(0.5);
+    let mut hypo: Vec<i32> = premise[..4].to_vec();
+    if !entailed {
+        // introduce a novel content word
+        hypo[2] = pick(rng, Class::Noun);
+        if premise.contains(&hypo[2]) {
+            hypo[2] = pick(rng, Class::Verb);
+        }
+    }
+    let mut toks = vec![CLS];
+    toks.extend(&premise);
+    toks.push(SEP);
+    toks.extend(&hypo);
+    TextExample { tokens: toks, label: Label::Class(entailed as i32) }
+}
+
+/// STS-B-like: similarity in [0, 5] = 5 x token-overlap of two sentences.
+fn stsb(rng: &mut Rng) -> TextExample {
+    let s1 = content_sentence(rng, 6);
+    let overlap = rng.below(7) as f32 / 6.0; // target similarity fraction
+    let keep = (overlap * 6.0).round() as usize;
+    let mut s2 = s1.clone();
+    for i in keep..6 {
+        s2[i] = pick(rng, Class::Noun);
+    }
+    // recompute actual overlap (replacement may coincide)
+    let same = s1.iter().zip(&s2).filter(|(a, b)| a == b).count();
+    let score = 5.0 * same as f32 / 6.0;
+    let mut toks = vec![CLS];
+    toks.extend(&s1);
+    toks.push(SEP);
+    toks.extend(&s2);
+    TextExample { tokens: toks, label: Label::Score(score) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_are_deterministic_and_disjoint_streams() {
+        let a = GlueTask::Rte.split("train", 50, 7);
+        let b = GlueTask::Rte.split("train", 50, 7);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+        }
+        let c = GlueTask::Rte.split("val", 50, 7);
+        let overlap = a.iter().filter(|e| c.iter().any(|f| f.tokens == e.tokens)).count();
+        assert!(overlap < 5, "train/val overlap {overlap}");
+    }
+
+    #[test]
+    fn labels_are_balancedish() {
+        for task in [GlueTask::Sst2, GlueTask::Mrpc, GlueTask::Cola, GlueTask::Qnli, GlueTask::Rte] {
+            let exs = task.split("train", 400, 3);
+            let pos = exs
+                .iter()
+                .filter(|e| matches!(e.label, Label::Class(1)))
+                .count();
+            assert!((100..300).contains(&pos), "{}: {pos}/400 positive", task.name());
+        }
+    }
+
+    #[test]
+    fn sst2_label_consistent_with_tokens() {
+        // Reconstruct the rule: polarity xor negation.
+        let v = vocab();
+        for ex in GlueTask::Sst2.split("train", 200, 11) {
+            let has_neg = ex.tokens.iter().any(|&t| v.class_of(t) == Some(Class::Negation));
+            let has_pos = ex.tokens.iter().any(|&t| v.class_of(t) == Some(Class::PosAdj));
+            let want = (has_pos ^ has_neg) as i32;
+            match ex.label {
+                Label::Class(c) => assert_eq!(c, want),
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn qnli_entailment_matches_mention() {
+        for ex in GlueTask::Qnli.split("train", 200, 5) {
+            let noun = ex.tokens[2];
+            let sep = ex.tokens.iter().position(|&t| t == SEP).unwrap();
+            let mentioned = ex.tokens[sep + 1..].contains(&noun);
+            match ex.label {
+                Label::Class(c) => assert_eq!(c == 1, mentioned),
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn stsb_scores_in_range_and_varied() {
+        let exs = GlueTask::Stsb.split("train", 300, 9);
+        let mut lo = f32::MAX;
+        let mut hi = f32::MIN;
+        for e in &exs {
+            if let Label::Score(s) = e.label {
+                assert!((0.0..=5.0).contains(&s));
+                lo = lo.min(s);
+                hi = hi.max(s);
+            }
+        }
+        assert!(lo < 2.0 && hi > 4.0, "score range [{lo}, {hi}] too narrow");
+    }
+
+    #[test]
+    fn sequences_fit_encoder_window() {
+        for t in GlueTask::ALL {
+            for e in t.split("train", 100, 1) {
+                assert!(e.tokens.len() <= 32, "{} len {}", t.name(), e.tokens.len());
+            }
+        }
+    }
+}

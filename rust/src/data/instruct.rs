@@ -1,0 +1,210 @@
+//! Instruction-tuning corpus + evaluation questions (Table 4, Figure 1).
+//!
+//! Alpaca-style: each example is (instruction-op, input tokens) -> output
+//! tokens, with the loss masked to the response. The operations are exact
+//! sequence-manipulation tasks so the MT-Bench-sim "judge" (metrics::judge)
+//! can score responses deterministically — our stand-in for GPT-4 scoring:
+//! a response earns up to 10 points for exact-match, with partial credit
+//! per correct token, mirroring how the paper reports mean judge scores.
+
+use super::vocab::{vocab, Class, BOS, EOS, SEP};
+use super::{Label, TextExample};
+use crate::tensor::rng::Rng;
+
+/// The instruction operations (the "skills" fine-tuning must teach).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Reverse,
+    Sort,
+    Copy,
+    First,
+    Last,
+    Repeat,
+    Unique,
+    Count,
+}
+
+impl Op {
+    pub const ALL: [Op; 8] =
+        [Op::Reverse, Op::Sort, Op::Copy, Op::First, Op::Last, Op::Repeat, Op::Unique, Op::Count];
+
+    fn word(&self) -> &'static str {
+        match self {
+            Op::Reverse => "reverse",
+            Op::Sort => "sort",
+            Op::Copy => "copy",
+            Op::First => "first",
+            Op::Last => "last",
+            Op::Repeat => "repeat",
+            Op::Unique => "unique",
+            Op::Count => "count",
+        }
+    }
+
+    pub fn token(&self) -> i32 {
+        let v = vocab();
+        v.ids_of(Class::Op)
+            .into_iter()
+            .find(|&id| v.word(id) == self.word())
+            .expect("op word in vocab")
+    }
+
+    /// Ground-truth output for an input over number tokens.
+    pub fn apply(&self, input: &[i32]) -> Vec<i32> {
+        match self {
+            Op::Reverse => input.iter().rev().copied().collect(),
+            Op::Sort => {
+                let mut s = input.to_vec();
+                s.sort_unstable();
+                s
+            }
+            Op::Copy => input.to_vec(),
+            Op::First => vec![input[0]],
+            Op::Last => vec![*input.last().unwrap()],
+            Op::Repeat => {
+                let mut out = input.to_vec();
+                out.extend(input);
+                out
+            }
+            Op::Unique => {
+                let mut out = Vec::new();
+                for &t in input {
+                    if !out.contains(&t) {
+                        out.push(t);
+                    }
+                }
+                out
+            }
+            Op::Count => {
+                let v = vocab();
+                let nums = v.ids_of(Class::Number);
+                vec![nums[input.len().min(nums.len() - 1)]]
+            }
+        }
+    }
+}
+
+/// One instruction prompt: BOS op x1..xk SEP (answer) EOS.
+#[derive(Debug, Clone)]
+pub struct Question {
+    pub op: Op,
+    pub input: Vec<i32>,
+}
+
+impl Question {
+    pub fn sample(rng: &mut Rng, ops: &[Op]) -> Question {
+        let v = vocab();
+        let nums = v.ids_of(Class::Number);
+        let k = 3 + rng.below(4); // 3..6 number tokens
+        let input: Vec<i32> = (0..k).map(|_| nums[rng.below(nums.len())]).collect();
+        Question { op: *rng.pick(ops), input }
+    }
+
+    pub fn prompt(&self) -> Vec<i32> {
+        let mut p = vec![BOS, self.op.token()];
+        p.extend(&self.input);
+        p.push(SEP);
+        p
+    }
+
+    pub fn answer(&self) -> Vec<i32> {
+        let mut a = self.op.apply(&self.input);
+        a.push(EOS);
+        a
+    }
+
+    /// LM training example with response-only loss mask.
+    pub fn example(&self, seqlen: usize) -> TextExample {
+        let mut tokens = self.prompt();
+        let prompt_len = tokens.len();
+        tokens.extend(self.answer());
+        let mut y = tokens[1..].to_vec();
+        y.push(0);
+        let mut mask = vec![0.0f32; tokens.len()];
+        for m in mask.iter_mut().take(tokens.len() - 1).skip(prompt_len - 1) {
+            *m = 1.0;
+        }
+        tokens.truncate(seqlen);
+        y.truncate(seqlen);
+        mask.truncate(seqlen);
+        TextExample { tokens, label: Label::Seq { target: y, mask } }
+    }
+}
+
+/// Training corpus (all ops mixed — "Alpaca-sim").
+pub fn train_set(count: usize, seqlen: usize, seed: u64) -> Vec<TextExample> {
+    let mut rng = Rng::new(seed ^ 0xA17ACA);
+    (0..count).map(|_| Question::sample(&mut rng, &Op::ALL).example(seqlen)).collect()
+}
+
+/// MT-Bench-sim: held-out questions over ALL ops (broad skill coverage).
+pub fn mt_bench_sim(count: usize, seed: u64) -> Vec<Question> {
+    let mut rng = Rng::new(seed ^ 0x177B);
+    (0..count).map(|_| Question::sample(&mut rng, &Op::ALL)).collect()
+}
+
+/// Vicuna-sim: the easier subset (copy/first/last/reverse), like Vicuna
+/// Eval's shorter free-form questions.
+pub fn vicuna_sim(count: usize, seed: u64) -> Vec<Question> {
+    let ops = [Op::Copy, Op::First, Op::Last, Op::Reverse];
+    let mut rng = Rng::new(seed ^ 0x71C);
+    (0..count).map(|_| Question::sample(&mut rng, &ops)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ops_compute_correct_answers() {
+        let v = vocab();
+        let nums = v.ids_of(Class::Number);
+        let input = vec![nums[3], nums[1], nums[3], nums[0]];
+        assert_eq!(Op::Reverse.apply(&input), vec![nums[0], nums[3], nums[1], nums[3]]);
+        assert_eq!(Op::Sort.apply(&input), {
+            let mut s = input.clone();
+            s.sort_unstable();
+            s
+        });
+        assert_eq!(Op::First.apply(&input), vec![nums[3]]);
+        assert_eq!(Op::Unique.apply(&input), vec![nums[3], nums[1], nums[0]]);
+        assert_eq!(Op::Count.apply(&input), vec![nums[4]]);
+    }
+
+    #[test]
+    fn example_mask_is_response_only() {
+        let mut rng = Rng::new(1);
+        let q = Question::sample(&mut rng, &Op::ALL);
+        let ex = q.example(48);
+        if let Label::Seq { mask, .. } = &ex.label {
+            let masked: usize = mask.iter().map(|&m| m as usize).sum();
+            assert_eq!(masked, q.answer().len());
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn benches_are_deterministic() {
+        let a = mt_bench_sim(10, 3);
+        let b = mt_bench_sim(10, 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.input, y.input);
+            assert_eq!(x.op, y.op);
+        }
+    }
+
+    #[test]
+    fn vicuna_uses_easy_ops_only() {
+        for q in vicuna_sim(50, 7) {
+            assert!(matches!(q.op, Op::Copy | Op::First | Op::Last | Op::Reverse));
+        }
+    }
+
+    #[test]
+    fn fits_decoder_window() {
+        for ex in train_set(100, 48, 5) {
+            assert!(ex.tokens.len() <= 48);
+        }
+    }
+}

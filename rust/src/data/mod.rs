@@ -1,0 +1,175 @@
+//! Synthetic data substrate.
+//!
+//! The paper's experiments need GLUE, E2E, Alpaca, and 8 vision datasets
+//! plus pretrained base models — none available in this offline sandbox
+//! (repro band 0/5). Per DESIGN.md §2 every workload is re-created as a
+//! *procedural* dataset that exercises the identical code path:
+//!
+//! * [`vocab`] — a 1000-token vocabulary with word classes (the grammar's
+//!   terminals) shared by every text task and the rust-side detokenizer.
+//! * [`glue`] — six GLUE-like NLU tasks (sentiment, paraphrase,
+//!   acceptability, QNLI-, RTE-, STS-B-like) built from a rule grammar.
+//! * [`e2e`] — restaurant slot-table -> utterance generation (E2E NLG).
+//! * [`instruct`] — instruction-following tasks + the deterministic judge
+//!   questions (MT-Bench-sim / Vicuna-sim).
+//! * [`vision`] — eight procedural image datasets mirroring the paper's
+//!   class counts and difficulty ordering, plus an ImageNet-21k-sim
+//!   pretraining mixture.
+//! * [`blobs`] — the Figure 7 two-dimensional 8-class Gaussian dataset.
+//! * [`corpus`] — broad pretraining streams (masked-token for encoders,
+//!   next-token for decoders).
+//!
+//! Everything is seeded and deterministic; splits never overlap by
+//! construction (disjoint index ranges of one generator stream).
+
+pub mod blobs;
+pub mod corpus;
+pub mod e2e;
+pub mod glue;
+pub mod instruct;
+pub mod vision;
+pub mod vocab;
+
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// A text example: token ids plus a task label.
+#[derive(Debug, Clone)]
+pub struct TextExample {
+    pub tokens: Vec<i32>,
+    pub label: Label,
+}
+
+#[derive(Debug, Clone)]
+pub enum Label {
+    Class(i32),
+    Score(f32),
+    /// Target token sequence (NLG); paired with a loss mask over positions.
+    Seq { target: Vec<i32>, mask: Vec<f32> },
+}
+
+/// An image example: HWC f32 pixels in [0, 1] plus a class id.
+#[derive(Debug, Clone)]
+pub struct ImgExample {
+    pub pixels: Vec<f32>, // img*img*3
+    pub label: i32,
+}
+
+/// Pad / truncate a token sequence to `len` (PAD = 0).
+pub fn pad_to(tokens: &[i32], len: usize) -> Vec<i32> {
+    let mut out = tokens.to_vec();
+    out.truncate(len);
+    out.resize(len, vocab::PAD);
+    out
+}
+
+/// Collate classification text examples into a step batch.
+pub fn collate_text(examples: &[TextExample], seqlen: usize) -> HashMap<String, Tensor> {
+    let b = examples.len();
+    let mut x = Vec::with_capacity(b * seqlen);
+    let mut y_cls = Vec::with_capacity(b);
+    let mut y_score = Vec::with_capacity(b);
+    let mut is_score = false;
+    for ex in examples {
+        x.extend(pad_to(&ex.tokens, seqlen));
+        match &ex.label {
+            Label::Class(c) => y_cls.push(*c),
+            Label::Score(s) => {
+                is_score = true;
+                y_score.push(*s);
+            }
+            Label::Seq { .. } => panic!("use collate_lm for seq labels"),
+        }
+    }
+    let mut out = HashMap::from([("x".to_string(), Tensor::i32(&[b, seqlen], x))]);
+    if is_score {
+        out.insert("y".to_string(), Tensor::f32(&[b], y_score));
+    } else {
+        out.insert("y".to_string(), Tensor::i32(&[b], y_cls));
+    }
+    out
+}
+
+/// Collate LM examples: x = tokens, y = next-token targets, mask = loss mask.
+pub fn collate_lm(examples: &[TextExample], seqlen: usize) -> HashMap<String, Tensor> {
+    let b = examples.len();
+    let mut x = Vec::with_capacity(b * seqlen);
+    let mut y = Vec::with_capacity(b * seqlen);
+    let mut m = Vec::with_capacity(b * seqlen);
+    for ex in examples {
+        let toks = pad_to(&ex.tokens, seqlen);
+        match &ex.label {
+            Label::Seq { target, mask } => {
+                x.extend(&toks);
+                y.extend(pad_to(target, seqlen));
+                let mut mm = mask.clone();
+                mm.truncate(seqlen);
+                mm.resize(seqlen, 0.0);
+                m.extend(mm);
+            }
+            _ => panic!("collate_lm wants Seq labels"),
+        }
+    }
+    HashMap::from([
+        ("x".to_string(), Tensor::i32(&[b, seqlen], x)),
+        ("y".to_string(), Tensor::i32(&[b, seqlen], y)),
+        ("mask".to_string(), Tensor::f32(&[b, seqlen], m)),
+    ])
+}
+
+/// Collate image examples.
+pub fn collate_img(examples: &[ImgExample], img: usize) -> HashMap<String, Tensor> {
+    let b = examples.len();
+    let mut x = Vec::with_capacity(b * img * img * 3);
+    let mut y = Vec::with_capacity(b);
+    for ex in examples {
+        assert_eq!(ex.pixels.len(), img * img * 3);
+        x.extend(&ex.pixels);
+        y.push(ex.label);
+    }
+    HashMap::from([
+        ("x".to_string(), Tensor::f32(&[b, img, img, 3], x)),
+        ("y".to_string(), Tensor::i32(&[b], y)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_truncates_and_pads() {
+        assert_eq!(pad_to(&[1, 2, 3], 2), vec![1, 2]);
+        assert_eq!(pad_to(&[1], 3), vec![1, vocab::PAD, vocab::PAD]);
+    }
+
+    #[test]
+    fn collate_text_shapes() {
+        let exs = vec![
+            TextExample { tokens: vec![1, 2], label: Label::Class(1) },
+            TextExample { tokens: vec![3], label: Label::Class(0) },
+        ];
+        let b = collate_text(&exs, 4);
+        assert_eq!(b["x"].shape, vec![2, 4]);
+        assert_eq!(b["y"].shape, vec![2]);
+        assert_eq!(b["y"].dtype(), "i32");
+    }
+
+    #[test]
+    fn collate_regression_emits_f32_labels() {
+        let exs = vec![TextExample { tokens: vec![1], label: Label::Score(2.5) }];
+        let b = collate_text(&exs, 4);
+        assert_eq!(b["y"].dtype(), "f32");
+    }
+
+    #[test]
+    fn collate_lm_shapes_and_mask() {
+        let exs = vec![TextExample {
+            tokens: vec![4, 10, 11],
+            label: Label::Seq { target: vec![10, 11, 5], mask: vec![0.0, 1.0, 1.0] },
+        }];
+        let b = collate_lm(&exs, 5);
+        assert_eq!(b["x"].shape, vec![1, 5]);
+        assert_eq!(b["mask"].as_f32().unwrap(), &[0.0, 1.0, 1.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,204 @@
+//! Shared 1000-token vocabulary with word classes.
+//!
+//! The synthetic grammar's terminals are organized into part-of-speech /
+//! semantic classes; every text task draws from the same vocabulary so the
+//! encoder/decoder pretraining distribution covers the fine-tuning tasks
+//! (as real-world pretraining does). Ids are stable across runs: the
+//! vocabulary is constructed deterministically at first use.
+
+use std::sync::OnceLock;
+
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const MASK: i32 = 3;
+pub const BOS: i32 = 4;
+pub const EOS: i32 = 5;
+pub const FIRST_WORD: i32 = 6;
+
+/// Word classes used by the grammar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Class {
+    PosAdj,
+    NegAdj,
+    NeutralAdj,
+    Noun,
+    Verb,
+    Adverb,
+    Determiner,
+    Negation,
+    Name,
+    Food,
+    Price,
+    Area,
+    Rating,
+    Question,
+    Number,
+    Op,
+    Filler,
+}
+
+pub struct Vocab {
+    words: Vec<(&'static str, Class)>,
+}
+
+static VOCAB: OnceLock<Vocab> = OnceLock::new();
+
+pub fn vocab() -> &'static Vocab {
+    VOCAB.get_or_init(Vocab::build)
+}
+
+impl Vocab {
+    pub fn size(&self) -> usize {
+        FIRST_WORD as usize + self.words.len()
+    }
+
+    /// Token id -> surface string (specials included).
+    pub fn word(&self, id: i32) -> &'static str {
+        match id {
+            PAD => "<pad>",
+            CLS => "<cls>",
+            SEP => "<sep>",
+            MASK => "<mask>",
+            BOS => "<bos>",
+            EOS => "<eos>",
+            _ => self.words[(id - FIRST_WORD) as usize].0,
+        }
+    }
+
+    pub fn class_of(&self, id: i32) -> Option<Class> {
+        if id < FIRST_WORD || (id - FIRST_WORD) as usize >= self.words.len() {
+            return None;
+        }
+        Some(self.words[(id - FIRST_WORD) as usize].1)
+    }
+
+    /// All token ids of a class.
+    pub fn ids_of(&self, class: Class) -> Vec<i32> {
+        self.words
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, c))| *c == class)
+            .map(|(i, _)| i as i32 + FIRST_WORD)
+            .collect()
+    }
+
+    pub fn detok(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter(|&&i| i != PAD)
+            .map(|&i| self.word(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    fn build() -> Vocab {
+        let mut words: Vec<(&'static str, Class)> = Vec::new();
+        let mut add = |list: &[&'static str], class: Class, words: &mut Vec<(&'static str, Class)>| {
+            for w in list {
+                words.push((w, class));
+            }
+        };
+        add(&["good", "great", "excellent", "wonderful", "amazing", "superb",
+              "delightful", "fantastic", "charming", "pleasant", "brilliant",
+              "lovely", "stellar", "impressive", "enjoyable", "satisfying"],
+            Class::PosAdj, &mut words);
+        add(&["bad", "terrible", "awful", "horrible", "dreadful", "poor",
+              "disappointing", "mediocre", "bland", "boring", "unpleasant",
+              "dull", "weak", "forgettable", "tedious", "lousy"],
+            Class::NegAdj, &mut words);
+        add(&["red", "blue", "green", "small", "large", "old", "new", "quiet",
+              "busy", "modern", "classic", "local", "famous", "simple"],
+            Class::NeutralAdj, &mut words);
+        add(&["movie", "film", "book", "story", "meal", "service", "plot",
+              "acting", "music", "place", "city", "river", "dog", "cat",
+              "house", "garden", "street", "market", "teacher", "student",
+              "doctor", "artist", "game", "song", "show", "paper", "idea",
+              "coffee", "bread", "table", "window", "door", "tree", "bird",
+              "car", "train", "journey", "evening", "morning", "dinner"],
+            Class::Noun, &mut words);
+        add(&["is", "was", "seems", "feels", "looks", "sounds", "runs",
+              "walks", "reads", "writes", "sings", "plays", "visits",
+              "serves", "offers", "makes", "tells", "shows", "finds", "keeps"],
+            Class::Verb, &mut words);
+        add(&["very", "quite", "really", "truly", "rather", "fairly",
+              "extremely", "remarkably", "surprisingly", "genuinely"],
+            Class::Adverb, &mut words);
+        add(&["the", "a", "this", "that", "every", "some"], Class::Determiner, &mut words);
+        add(&["not", "never", "hardly", "barely"], Class::Negation, &mut words);
+        add(&["alimento", "bibimbap", "cascade", "delmonte", "eastgate",
+              "fortuna", "galleria", "harvest", "ironwood", "juniper",
+              "kestrel", "lantern", "meridian", "nectar", "orchid", "pavilion"],
+            Class::Name, &mut words);
+        add(&["italian", "chinese", "french", "indian", "japanese", "mexican",
+              "thai", "greek", "spanish", "korean", "fusion", "vegan"],
+            Class::Food, &mut words);
+        add(&["cheap", "moderate", "expensive", "premium"], Class::Price, &mut words);
+        add(&["centre", "riverside", "uptown", "suburbs", "harbour", "oldtown"],
+            Class::Area, &mut words);
+        add(&["onestar", "twostar", "threestar", "fourstar", "fivestar"],
+            Class::Rating, &mut words);
+        add(&["what", "where", "who", "when", "which", "how"], Class::Question, &mut words);
+        add(&["zero", "one", "two", "three", "four", "five", "six", "seven",
+              "eight", "nine", "ten", "eleven", "twelve", "thirteen",
+              "fourteen", "fifteen"],
+            Class::Number, &mut words);
+        add(&["reverse", "sort", "copy", "count", "first", "last", "add",
+              "swap", "unique", "repeat"],
+            Class::Op, &mut words);
+        // Filler words pad the vocabulary to a realistic size; pretraining
+        // uses them so embeddings of rare ids are still trained.
+        const FILLERS: usize = 1000;
+        static FILLER_NAMES: OnceLock<Vec<String>> = OnceLock::new();
+        let fillers = FILLER_NAMES.get_or_init(|| {
+            (0..FILLERS).map(|i| format!("w{i:03}")).collect()
+        });
+        for f in fillers {
+            if words.len() + FIRST_WORD as usize >= 1000 {
+                break;
+            }
+            // leak: 'static strings for a fixed small vocabulary
+            words.push((Box::leak(f.clone().into_boxed_str()), Class::Filler));
+        }
+        assert_eq!(words.len() + FIRST_WORD as usize, 1000);
+        Vocab { words }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_is_exactly_1000() {
+        assert_eq!(vocab().size(), 1000);
+    }
+
+    #[test]
+    fn classes_nonempty_and_disjoint_ids() {
+        let v = vocab();
+        for c in [Class::PosAdj, Class::NegAdj, Class::Noun, Class::Verb,
+                  Class::Name, Class::Food, Class::Price, Class::Area,
+                  Class::Rating, Class::Number, Class::Op] {
+            assert!(!v.ids_of(c).is_empty(), "{c:?} empty");
+        }
+        let pos = v.ids_of(Class::PosAdj);
+        let neg = v.ids_of(Class::NegAdj);
+        assert!(pos.iter().all(|i| !neg.contains(i)));
+    }
+
+    #[test]
+    fn word_id_roundtrip() {
+        let v = vocab();
+        let ids = v.ids_of(Class::Name);
+        assert_eq!(v.word(ids[0]), "alimento");
+        assert_eq!(v.class_of(ids[0]), Some(Class::Name));
+        assert_eq!(v.class_of(PAD), None);
+    }
+
+    #[test]
+    fn detok_skips_pad() {
+        let v = vocab();
+        let s = v.detok(&[CLS, v.ids_of(Class::Noun)[0], PAD, PAD]);
+        assert_eq!(s, "<cls> movie");
+    }
+}

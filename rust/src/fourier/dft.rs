@@ -1,0 +1,248 @@
+//! Inverse 2D DFT reconstruction of ΔW from sparse spectral coefficients.
+//!
+//! Two independent implementations with different algorithmic structure —
+//! both are tested against each other and against the XLA artifact, so an
+//! error would have to be replicated in three formulations:
+//!
+//! * [`idft2_real_sparse`]: the rank-n trigonometric expansion (exactly the
+//!   math the L1 Pallas kernel runs on the MXU): O(n · d1 · d2).
+//! * [`idft2_real_sparse_fft`]: scatter into a dense complex spectrum, then
+//!   a radix-2/Bluestein-free row–column inverse FFT: O(d1 d2 log(d1 d2)).
+//!   (Falls back to naive column DFT for non-power-of-two dims.)
+//!
+//! The crossover between the two (n ≈ log d at equal cost) is measured in
+//! `benches/micro.rs` and discussed in EXPERIMENTS.md §Perf.
+
+use std::f64::consts::PI;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Complex {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Complex {
+    pub const ZERO: Complex = Complex { re: 0.0, im: 0.0 };
+
+    pub fn new(re: f64, im: f64) -> Complex {
+        Complex { re, im }
+    }
+
+    pub fn mul(self, o: Complex) -> Complex {
+        Complex::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+
+    pub fn add(self, o: Complex) -> Complex {
+        Complex::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+/// ΔW = alpha * Re(IDFT2(ToDense(E, c))) via the rank-n trig expansion.
+///
+/// `entries` is the paper's E matrix flattened: entries[0][l] = row freq j_l,
+/// entries[1][l] = col freq k_l. Matches `torch.fft.ifft2` normalization
+/// (1 / (d1 d2)).
+pub fn idft2_real_sparse(
+    entries: (&[i32], &[i32]),
+    coeffs: &[f32],
+    d1: usize,
+    d2: usize,
+    alpha: f32,
+) -> Vec<f32> {
+    let (js, ks) = entries;
+    assert_eq!(js.len(), coeffs.len());
+    assert_eq!(ks.len(), coeffs.len());
+    let mut out = vec![0.0f64; d1 * d2];
+    // Per entry: out[p, q] += c * cos(tu_p + tv_q)
+    //                       = c * (cos tu_p cos tv_q - sin tu_p sin tv_q).
+    // Precompute the two 1-D trig vectors per entry: O(n (d1 + d2 + d1 d2)).
+    let mut cu = vec![0.0f64; d1];
+    let mut su = vec![0.0f64; d1];
+    let mut cv = vec![0.0f64; d2];
+    let mut sv = vec![0.0f64; d2];
+    for l in 0..coeffs.len() {
+        let c = coeffs[l] as f64;
+        if c == 0.0 {
+            continue;
+        }
+        let wj = 2.0 * PI * js[l] as f64 / d1 as f64;
+        let wk = 2.0 * PI * ks[l] as f64 / d2 as f64;
+        for (p, (cup, sup)) in cu.iter_mut().zip(su.iter_mut()).enumerate() {
+            let t = wj * p as f64;
+            *cup = t.cos();
+            *sup = t.sin();
+        }
+        for (q, (cvq, svq)) in cv.iter_mut().zip(sv.iter_mut()).enumerate() {
+            let t = wk * q as f64;
+            *cvq = t.cos();
+            *svq = t.sin();
+        }
+        for p in 0..d1 {
+            let (a, b) = (c * cu[p], c * su[p]);
+            let row = &mut out[p * d2..(p + 1) * d2];
+            for q in 0..d2 {
+                row[q] += a * cv[q] - b * sv[q];
+            }
+        }
+    }
+    let scale = alpha as f64 / (d1 * d2) as f64;
+    out.iter().map(|&x| (x * scale) as f32).collect()
+}
+
+/// Same reconstruction via dense scatter + row-column inverse FFT.
+pub fn idft2_real_sparse_fft(
+    entries: (&[i32], &[i32]),
+    coeffs: &[f32],
+    d1: usize,
+    d2: usize,
+    alpha: f32,
+) -> Vec<f32> {
+    let (js, ks) = entries;
+    let mut spec = vec![Complex::ZERO; d1 * d2];
+    for l in 0..coeffs.len() {
+        spec[js[l] as usize * d2 + ks[l] as usize].re += coeffs[l] as f64;
+    }
+    // rows
+    let mut row = vec![Complex::ZERO; d2];
+    for p in 0..d1 {
+        row.copy_from_slice(&spec[p * d2..(p + 1) * d2]);
+        idft1(&mut row);
+        spec[p * d2..(p + 1) * d2].copy_from_slice(&row);
+    }
+    // cols
+    let mut col = vec![Complex::ZERO; d1];
+    for q in 0..d2 {
+        for p in 0..d1 {
+            col[p] = spec[p * d2 + q];
+        }
+        idft1(&mut col);
+        for p in 0..d1 {
+            spec[p * d2 + q] = col[p];
+        }
+    }
+    let scale = alpha as f64 / (d1 * d2) as f64;
+    spec.iter().map(|z| (z.re * scale) as f32).collect()
+}
+
+/// Unnormalized inverse 1-D DFT, in place. Radix-2 Cooley–Tukey when the
+/// length is a power of two, otherwise the naive O(n^2) transform.
+fn idft1(x: &mut [Complex]) {
+    let n = x.len();
+    if n.is_power_of_two() && n > 1 {
+        fft_pow2(x, true);
+    } else {
+        let mut out = vec![Complex::ZERO; n];
+        for (p, o) in out.iter_mut().enumerate() {
+            for (k, &xk) in x.iter().enumerate() {
+                let t = 2.0 * PI * (p * k % n) as f64 / n as f64;
+                *o = o.add(xk.mul(Complex::new(t.cos(), t.sin())));
+            }
+        }
+        x.copy_from_slice(&out);
+    }
+}
+
+/// Iterative radix-2 FFT (inverse when `inv`), unnormalized.
+fn fft_pow2(x: &mut [Complex], inv: bool) {
+    let n = x.len();
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            x.swap(i, j);
+        }
+    }
+    let sign = if inv { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let wl = Complex::new(ang.cos(), ang.sin());
+        for i in (0..n).step_by(len) {
+            let mut w = Complex::new(1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = x[i + k];
+                let v = x[i + k + len / 2].mul(w);
+                x[i + k] = u.add(v);
+                x[i + k + len / 2] = Complex::new(u.re - v.re, u.im - v.im);
+                w = w.mul(wl);
+            }
+        }
+        len <<= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    fn random_case(seed: u64, d1: usize, d2: usize, n: usize) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let picks = rng.choose_distinct(d1 * d2, n);
+        let js: Vec<i32> = picks.iter().map(|&f| (f / d2) as i32).collect();
+        let ks: Vec<i32> = picks.iter().map(|&f| (f % d2) as i32).collect();
+        let cs = rng.normal_vec(n, 1.0);
+        (js, ks, cs)
+    }
+
+    #[test]
+    fn trig_and_fft_forms_agree_pow2() {
+        let (js, ks, cs) = random_case(1, 64, 32, 40);
+        let a = idft2_real_sparse((&js, &ks), &cs, 64, 32, 3.0);
+        let b = idft2_real_sparse_fft((&js, &ks), &cs, 64, 32, 3.0);
+        let d = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+        assert!(d < 1e-5, "max diff {d}");
+    }
+
+    #[test]
+    fn trig_and_fft_forms_agree_non_pow2() {
+        let (js, ks, cs) = random_case(2, 48, 100, 64);
+        let a = idft2_real_sparse((&js, &ks), &cs, 48, 100, 1.0);
+        let b = idft2_real_sparse_fft((&js, &ks), &cs, 48, 100, 1.0);
+        let d = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+        assert!(d < 1e-5, "max diff {d}");
+    }
+
+    #[test]
+    fn dc_component_is_constant_matrix() {
+        // A single coefficient at (0, 0) is the DC term: ΔW = alpha * c / (d1 d2).
+        let out = idft2_real_sparse((&[0], &[0]), &[2.0], 8, 8, 4.0);
+        for &v in &out {
+            assert!((v - 2.0 * 4.0 / 64.0).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn zero_coeffs_zero_output() {
+        let out = idft2_real_sparse((&[1, 2], &[3, 4]), &[0.0, 0.0], 16, 16, 300.0);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn linearity_in_coefficients() {
+        let (js, ks, cs) = random_case(3, 16, 16, 12);
+        let a = idft2_real_sparse((&js, &ks), &cs, 16, 16, 1.0);
+        let doubled: Vec<f32> = cs.iter().map(|c| 2.0 * c).collect();
+        let b = idft2_real_sparse((&js, &ks), &doubled, 16, 16, 1.0);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((2.0 * x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn parsevalish_energy_scales_with_n() {
+        // More coefficients => more reconstruction energy (sanity of scatter).
+        let (js, ks, cs) = random_case(4, 32, 32, 64);
+        let e1: f32 = idft2_real_sparse((&js[..8], &ks[..8]), &cs[..8], 32, 32, 1.0)
+            .iter().map(|x| x * x).sum();
+        let e2: f32 = idft2_real_sparse((&js, &ks), &cs, 32, 32, 1.0)
+            .iter().map(|x| x * x).sum();
+        assert!(e2 > e1);
+    }
+}

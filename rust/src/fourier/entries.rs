@@ -1,0 +1,161 @@
+//! Spectral entry sampling — the paper's E matrix (§3.1).
+//!
+//! Default: uniform over the d1 x d2 spectral grid with no frequency bias
+//! (the paper's main configuration; "we use the value 2024 as the seed").
+//! Optionally a Gaussian band-pass bias (Eq. 5) favoring a central
+//! frequency f_c with bandwidth W:
+//!
+//! ```text
+//! p(u, v) = exp(-((D^2 - f_c^2) / (D * W))^2)
+//! ```
+//!
+//! where D is the distance from (u, v) to the *center* of the matrix.
+//! Figure 3 visualizes these maps; Figure 5 sweeps f_c on four GLUE tasks.
+
+use crate::tensor::rng::Rng;
+
+/// Frequency bias for entry sampling.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EntryBias {
+    /// Uniform over all d1*d2 entries (paper default).
+    None,
+    /// Gaussian band-pass around central frequency `fc` with bandwidth `w`.
+    BandPass { fc: f64, w: f64 },
+}
+
+/// Sample `n` distinct spectral entries from a d1 x d2 grid.
+/// Returns (rows, cols), each of length n — the paper's E in R^{2 x n}.
+pub fn sample_entries(
+    d1: usize,
+    d2: usize,
+    n: usize,
+    bias: EntryBias,
+    seed: u64,
+) -> (Vec<i32>, Vec<i32>) {
+    assert!(n <= d1 * d2, "n={n} exceeds spectral grid {d1}x{d2}");
+    let mut rng = Rng::new(seed);
+    match bias {
+        EntryBias::None => {
+            let picks = rng.choose_distinct(d1 * d2, n);
+            (
+                picks.iter().map(|&f| (f / d2) as i32).collect(),
+                picks.iter().map(|&f| (f % d2) as i32).collect(),
+            )
+        }
+        EntryBias::BandPass { fc, w } => {
+            let probs = bandpass_map(d1, d2, fc, w);
+            // Weighted sampling without replacement (successive draws with
+            // removal). Grid sizes here are <= 768^2 so O(n * d1 d2) is fine.
+            let mut weights = probs;
+            let mut rows = Vec::with_capacity(n);
+            let mut cols = Vec::with_capacity(n);
+            for _ in 0..n {
+                let idx = rng.weighted(&weights);
+                weights[idx] = 0.0;
+                rows.push((idx / d2) as i32);
+                cols.push((idx % d2) as i32);
+            }
+            (rows, cols)
+        }
+    }
+}
+
+/// Eq. 5 sampling-probability map (unnormalized), row-major d1 x d2.
+/// Reproduces Figure 3 when rendered (see `repro figure 3`).
+pub fn bandpass_map(d1: usize, d2: usize, fc: f64, w: f64) -> Vec<f64> {
+    let (c1, c2) = ((d1 as f64 - 1.0) / 2.0, (d2 as f64 - 1.0) / 2.0);
+    let mut out = Vec::with_capacity(d1 * d2);
+    for u in 0..d1 {
+        for v in 0..d2 {
+            let du = u as f64 - c1;
+            let dv = v as f64 - c2;
+            let dist = (du * du + dv * dv).sqrt();
+            let p = if dist < 1e-9 {
+                // Limit at the exact center: full pass only for fc = 0.
+                if fc.abs() < 1e-9 { 1.0 } else { 0.0 }
+            } else {
+                let t = (dist * dist - fc * fc) / (dist * w);
+                (-t * t).exp()
+            };
+            out.push(p);
+        }
+    }
+    out
+}
+
+/// Mean distance-from-center of sampled entries — a scalar summary used by
+/// tests and the Figure 5 sweep report to confirm the bias takes effect.
+pub fn mean_radius(rows: &[i32], cols: &[i32], d1: usize, d2: usize) -> f64 {
+    let (c1, c2) = ((d1 as f64 - 1.0) / 2.0, (d2 as f64 - 1.0) / 2.0);
+    let mut acc = 0.0;
+    for i in 0..rows.len() {
+        let du = rows[i] as f64 - c1;
+        let dv = cols[i] as f64 - c2;
+        acc += (du * du + dv * dv).sqrt();
+    }
+    acc / rows.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_entries_distinct_and_in_range() {
+        let (r, c) = sample_entries(96, 80, 500, EntryBias::None, 2024);
+        assert_eq!(r.len(), 500);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..500 {
+            assert!((0..96).contains(&r[i]));
+            assert!((0..80).contains(&c[i]));
+            assert!(seen.insert((r[i], c[i])), "duplicate entry");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = sample_entries(64, 64, 100, EntryBias::None, 2024);
+        let b = sample_entries(64, 64, 100, EntryBias::None, 2024);
+        assert_eq!(a, b);
+        let c = sample_entries(64, 64, 100, EntryBias::None, 2025);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn low_freq_bias_concentrates_near_center() {
+        // fc = 0 passes only low distances; large fc favors the rim.
+        let d = 128;
+        let (r0, c0) = sample_entries(d, d, 300, EntryBias::BandPass { fc: 0.0, w: 30.0 }, 7);
+        let (r1, c1) = sample_entries(d, d, 300, EntryBias::BandPass { fc: 60.0, w: 30.0 }, 7);
+        let m0 = mean_radius(&r0, &c0, d, d);
+        let m1 = mean_radius(&r1, &c1, d, d);
+        assert!(m0 < m1, "fc=0 radius {m0} should be < fc=60 radius {m1}");
+        // uniform sampling over a d x d grid has mean radius ~0.38 d ≈ 49;
+        // the low-pass bias must pull well below that.
+        assert!(m0 < 35.0, "low-pass mean radius too large: {m0}");
+    }
+
+    #[test]
+    fn bandpass_map_peaks_at_fc() {
+        let d = 129; // odd => exact center pixel
+        let map = bandpass_map(d, d, 40.0, 20.0);
+        // The map restricted to the center row should peak near distance fc.
+        let row = d / 2;
+        let mut best = (0usize, -1.0f64);
+        for v in (d / 2)..d {
+            let p = map[row * d + v];
+            if p > best.1 {
+                best = (v - d / 2, p);
+            }
+        }
+        assert!((best.0 as f64 - 40.0).abs() <= 2.0, "peak at distance {}", best.0);
+    }
+
+    #[test]
+    fn figure3_fc_zero_is_low_pass() {
+        let map = bandpass_map(64, 64, 0.0, 200.0);
+        let center = map[32 * 64 + 32];
+        let corner = map[0];
+        assert!(center > corner);
+    }
+}

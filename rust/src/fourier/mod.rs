@@ -1,0 +1,14 @@
+//! Rust-native discrete Fourier substrate.
+//!
+//! Three consumers:
+//! 1. the serving/merge path — reconstruct ΔW from a stored `.fft` adapter
+//!    without touching XLA (mobile-RAM use case from the paper's intro),
+//! 2. cross-checks of the L1 Pallas kernel (runtime integration tests
+//!    compare this implementation against the `delta_*.hlo.txt` artifact),
+//! 3. spectral-entry sampling (Eq. 5 Gaussian band-pass bias, Figure 3/5).
+
+pub mod dft;
+pub mod entries;
+
+pub use dft::{idft2_real_sparse, idft2_real_sparse_fft, Complex};
+pub use entries::{sample_entries, EntryBias};

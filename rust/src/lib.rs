@@ -1,0 +1,61 @@
+//! # fourier-peft
+//!
+//! Production-grade reproduction of **"Parameter-Efficient Fine-Tuning with
+//! Discrete Fourier Transform"** (FourierFT, ICML 2024) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! * **L1** (`python/compile/kernels/`) — Pallas kernel computing
+//!   ΔW = α·Re(IDFT2(ToDense(E, c))) as a rank-n trig matmul (MXU-form).
+//! * **L2** (`python/compile/`) — JAX models (MLP / encoder / decoder / ViT)
+//!   with pluggable PEFT methods, fused Adam train/eval steps, AOT-lowered
+//!   to HLO text artifacts.
+//! * **L3** (this crate) — the coordinator: PJRT runtime, synthetic data
+//!   generators, metrics, the adapter store/serving layer, experiment
+//!   drivers for every table and figure in the paper, and benches.
+//!
+//! Python never runs at train/serve time; `make artifacts` is the only
+//! python invocation.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
+
+pub mod adapter;
+pub mod coordinator;
+pub mod data;
+pub mod fourier;
+pub mod metrics;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Default artifacts directory relative to the repo root.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("FOURIER_PEFT_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| repo_root().join("artifacts"))
+}
+
+/// Default runs directory (pretrained bases, adapters, reports).
+pub fn runs_dir() -> std::path::PathBuf {
+    std::env::var("FOURIER_PEFT_RUNS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| repo_root().join("runs"))
+}
+
+/// Locate the repo root: walk up from CWD until a `Cargo.toml` with our
+/// package name is found; fall back to CWD.
+pub fn repo_root() -> std::path::PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let c = dir.join("Cargo.toml");
+        if c.exists() {
+            if let Ok(text) = std::fs::read_to_string(&c) {
+                if text.contains("name = \"fourier-peft\"") {
+                    return dir;
+                }
+            }
+        }
+        if !dir.pop() {
+            return std::env::current_dir().unwrap_or_else(|_| ".".into());
+        }
+    }
+}

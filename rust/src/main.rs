@@ -1,0 +1,248 @@
+//! `repro` — the fourier-peft coordinator CLI.
+//!
+//! Subcommands:
+//!   info                         platform + artifact registry summary
+//!   pretrain  --model M [--force]   (re)build a cached sim backbone
+//!   train     --artifact A [...]    one fine-tuning run with loss curve
+//!   table     N [--quick ...]       regenerate paper table N
+//!   figure    N [--quick ...]       regenerate paper figure N
+//!   all       [--quick]             every table + figure (EXPERIMENTS.md data)
+//!   serve     [--adapters K ...]    multi-adapter serving demo + stats
+//!
+//! Everything runs from AOT artifacts; python is never invoked.
+
+use anyhow::{Context, Result};
+use fourier_peft::coordinator::experiments;
+use fourier_peft::coordinator::trainer::{FinetuneCfg, Trainer};
+use fourier_peft::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command() {
+        Some("info") => info(),
+        Some("pretrain") => pretrain(args),
+        Some("train") => train(args),
+        Some("table") => experiment(args, "table"),
+        Some("figure") => experiment(args, "figure"),
+        Some("all") => all(args),
+        Some("serve") => serve(args),
+        Some("probe") => probe(args),
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown command '{cmd}'\n");
+            }
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "usage: repro <command> [flags]\n\
+         \n\
+         commands:\n\
+         \x20 info                               platform + registry summary\n\
+         \x20 pretrain --model <m> [--force]     build cached backbone (enc_base, dec_med, ...)\n\
+         \x20 train --artifact <a> [--steps N --lr F --scaling F --seed N]\n\
+         \x20 table <1|2|3|4|5|6|13>  [--quick --steps N --seeds N]\n\
+         \x20 figure <3|4|5|6|7>   [--quick --steps N --seeds N]\n\
+         \x20 all [--quick]                      run every table and figure\n\
+         \x20 serve [--adapters N --requests N]  multi-adapter serving demo"
+    );
+}
+
+fn info() -> Result<()> {
+    let trainer = Trainer::open_default()?;
+    println!("platform: {}", trainer.client.platform());
+    println!("artifacts: {}", trainer.registry.dir.display());
+    let names: Vec<&str> = trainer.registry.names().collect();
+    println!("artifact families: {}", names.len());
+    for n in &names {
+        let m = trainer.registry.meta(n)?;
+        println!(
+            "  {n:<44} trainable {:>9} (ex-head {:>9})",
+            m.trainable, m.trainable_ex_head
+        );
+    }
+    Ok(())
+}
+
+fn pretrain(args: &Args) -> Result<()> {
+    let trainer = Trainer::open_default()?;
+    let model = args.required("model")?;
+    fourier_peft::coordinator::pretrain::ensure_pretrained(&trainer, model, args.bool("force"))?;
+    println!("base for {model} ready under {}", fourier_peft::runs_dir().join("bases").display());
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let trainer = Trainer::open_default()?;
+    let artifact = args.required("artifact")?;
+    let meta = trainer.registry.meta(artifact)?.clone();
+    let (lr_d, lrh_d, sc_d) =
+        experiments::method_hp(&meta.method.name, meta.model.d.max(meta.model.hidden));
+    let mut cfg = FinetuneCfg::new(artifact);
+    cfg.steps = args.usize_or("steps", 200);
+    cfg.lr = args.f32_or("lr", lr_d);
+    cfg.lr_head = args.f32_or("lr-head", lrh_d);
+    cfg.scaling = args.f32_or("scaling", sc_d);
+    cfg.wd = args.f32_or("wd", 0.0);
+    cfg.seed = args.u64_or("seed", 0);
+    cfg.entry_seed = args.u64_or("entry-seed", 2024);
+
+    // Pick a matching data stream by model kind / loss.
+    let kind = meta.model.kind.clone();
+    let loss = meta.loss.clone();
+    let seqlen = meta.model.seqlen;
+    let b = meta.model.batch;
+    let img = meta.model.img;
+    let task = fourier_peft::data::glue::GlueTask::from_name(args.str_or("task", "rte"))
+        .context("unknown --task")?;
+    let vset = fourier_peft::data::vision::VisionSet::from_name(args.str_or("dataset", "cifar10"))
+        .context("unknown --dataset")?;
+    let result = trainer.finetune(
+        &cfg,
+        move |step, _rng| {
+            let s = (step as u64) << 5 ^ 0xC11;
+            match (kind.as_str(), loss.as_str()) {
+                ("mlp", _) => fourier_peft::data::blobs::collate(
+                    &fourier_peft::data::blobs::dataset(b, 0.35, s)),
+                ("encoder", "mlm") => fourier_peft::data::collate_lm(
+                    &fourier_peft::data::corpus::mlm_set(b, seqlen, s), seqlen),
+                ("encoder", "mse") => fourier_peft::data::collate_text(
+                    &fourier_peft::data::glue::GlueTask::Stsb.split("train", b, s), seqlen),
+                ("encoder", _) => fourier_peft::data::collate_text(
+                    &task.split("train", b, s), seqlen),
+                ("decoder", _) => fourier_peft::data::collate_lm(
+                    &fourier_peft::data::corpus::lm_set(b, seqlen, s), seqlen),
+                ("vit", _) => fourier_peft::data::collate_img(
+                    &vset.split("train", b, s), img.max(1)),
+                _ => panic!("no data stream for {kind}/{loss}"),
+            }
+        },
+        None,
+    )?;
+    println!(
+        "trained {} for {} steps in {:.1}s  loss {:.4} -> {:.4}",
+        artifact,
+        cfg.steps,
+        result.train_seconds,
+        result.losses.first().unwrap_or(&f32::NAN),
+        result.losses.last().unwrap_or(&f32::NAN)
+    );
+    let every = (cfg.steps / 20).max(1);
+    for (i, l) in result.losses.iter().enumerate() {
+        if i % every == 0 {
+            println!("  step {:>5}  loss {l:.4}", i + 1);
+        }
+    }
+    Ok(())
+}
+
+fn experiment(args: &Args, prefix: &str) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .with_context(|| format!("usage: repro {prefix} <n>"))?;
+    let trainer = Trainer::open_default()?;
+    experiments::run(&trainer, &format!("{prefix}{id}"), args)?;
+    Ok(())
+}
+
+fn all(args: &Args) -> Result<()> {
+    let trainer = Trainer::open_default()?;
+    for id in ["table1", "figure3", "figure7", "table2", "figure4", "figure5",
+               "figure6", "table6", "table3", "table4", "table5", "table13", "figure1"] {
+        println!("\n########## {id} ##########");
+        experiments::run(&trainer, id, args)?;
+    }
+    Ok(())
+}
+
+/// Debug command: one glue_run with explicit knobs, printing the eval
+/// trajectory. `repro probe --artifact A --task T [--steps N --lr-scale F]`
+fn probe(args: &Args) -> Result<()> {
+    let trainer = Trainer::open_default()?;
+    let artifact = args.required("artifact")?;
+    let task = fourier_peft::data::glue::GlueTask::from_name(args.str_or("task", "sst2"))
+        .context("unknown --task")?;
+    let mut opts = experiments::Opts::from_args(args);
+    opts.steps = args.usize_or("steps", 150);
+    let lr_scale = args.f32_or("lr-scale", 1.0);
+    let res = experiments::glue_run(&trainer, task, artifact, &opts,
+                                    args.u64_or("seed", 0), lr_scale)?;
+    println!("losses: first {:.4} min {:.4} last {:.4}",
+             res.losses.first().unwrap(),
+             res.losses.iter().cloned().fold(f32::MAX, f32::min),
+             res.losses.last().unwrap());
+    for (s, m) in &res.evals {
+        println!("  step {s:>5}  {}: {:.4}", task.metric_name(), m);
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    use fourier_peft::adapter::{AdapterKind, AdapterStore};
+    use fourier_peft::coordinator::serving::{Request, Server};
+    use fourier_peft::data::glue::GlueTask;
+
+    let trainer = Trainer::open_default()?;
+    let n_adapters = args.usize_or("adapters", 4);
+    let n_requests = args.usize_or("requests", 32);
+    let artifact = args.str_or("artifact", "enc_base__fourierft_n64__ce");
+    let meta = trainer.registry.meta(artifact)?.clone();
+    let store_dir = fourier_peft::runs_dir().join("serve_demo");
+    let store = AdapterStore::open(&store_dir)?;
+    let mut server = Server::new(&trainer, artifact, store, 2024, 8.0)?;
+
+    // Publish n adapters: quick fine-tunes on different tasks.
+    let tasks = [GlueTask::Rte, GlueTask::Sst2, GlueTask::Mrpc, GlueTask::Qnli];
+    for i in 0..n_adapters {
+        let task = tasks[i % tasks.len()];
+        let opts = experiments::Opts { steps: 40, seeds: 1, eval_count: 64, quick: true, scaling_scale: 1.0 };
+        let res = experiments::glue_run(&trainer, task, artifact, &opts, i as u64, 1.0)?;
+        server.store.save(
+            &format!("adapter_{i}_{}", task.name()),
+            &fourier_peft::adapter::AdapterFile {
+                kind: AdapterKind::FourierFt,
+                seed: 2024,
+                alpha: 8.0,
+                meta: vec![("task".into(), task.name().into()),
+                           ("n".into(), meta.method.n.to_string())],
+                tensors: res.adapt,
+            },
+        )?;
+        println!("published adapter_{i}_{} (best metric {:.3})", task.name(), res.best_eval);
+    }
+
+    // Random request queue across adapters.
+    let names: Vec<String> = server.store.list()?.into_iter().map(|(n, _)| n).collect();
+    let mut rng = fourier_peft::tensor::rng::Rng::new(0x5E21);
+    let queue: Vec<Request> = (0..n_requests)
+        .map(|i| {
+            let name = names[rng.below(names.len())].clone();
+            let exs = GlueTask::Rte.split("val", meta.model.batch, i as u64);
+            Request {
+                id: i as u64,
+                adapter: name,
+                batch: fourier_peft::data::collate_text(&exs, meta.model.seqlen),
+            }
+        })
+        .collect();
+    let (results, stats) = server.serve(queue)?;
+    println!(
+        "served {} requests in {} batches  swaps {}  swap {:.3}s  exec {:.3}s  => {:.1} req/s",
+        results.len(), stats.batches, stats.swaps, stats.swap_seconds, stats.exec_seconds,
+        stats.throughput_rps()
+    );
+    println!("store total bytes: {}", fourier_peft::util::fmt_bytes(server.store.total_bytes()? as usize));
+    Ok(())
+}

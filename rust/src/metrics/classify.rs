@@ -1,0 +1,101 @@
+//! Classification metrics: accuracy, binary F1, Matthews correlation.
+
+/// Fraction of positions where prediction == label.
+pub fn accuracy(pred: &[i32], label: &[i32]) -> f64 {
+    assert_eq!(pred.len(), label.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let ok = pred.iter().zip(label).filter(|(p, l)| p == l).count();
+    ok as f64 / pred.len() as f64
+}
+
+/// Binary F1 with class 1 as positive.
+pub fn f1_binary(pred: &[i32], label: &[i32]) -> f64 {
+    let (mut tp, mut fp, mut fn_) = (0.0, 0.0, 0.0);
+    for (&p, &l) in pred.iter().zip(label) {
+        match (p == 1, l == 1) {
+            (true, true) => tp += 1.0,
+            (true, false) => fp += 1.0,
+            (false, true) => fn_ += 1.0,
+            _ => {}
+        }
+    }
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let precision = tp / (tp + fp);
+    let recall = tp / (tp + fn_);
+    2.0 * precision * recall / (precision + recall)
+}
+
+/// Matthews correlation coefficient (the CoLA metric).
+pub fn matthews(pred: &[i32], label: &[i32]) -> f64 {
+    let (mut tp, mut tn, mut fp, mut fn_) = (0.0f64, 0.0, 0.0, 0.0);
+    for (&p, &l) in pred.iter().zip(label) {
+        match (p == 1, l == 1) {
+            (true, true) => tp += 1.0,
+            (false, false) => tn += 1.0,
+            (true, false) => fp += 1.0,
+            (false, true) => fn_ += 1.0,
+        }
+    }
+    let denom = ((tp + fp) * (tp + fn_) * (tn + fp) * (tn + fn_)).sqrt();
+    if denom == 0.0 {
+        return 0.0;
+    }
+    (tp * tn - fp * fn_) / denom
+}
+
+/// Argmax over the last axis of row-major logits [n, c].
+pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<i32> {
+    logits
+        .chunks_exact(classes)
+        .map(|row| {
+            let mut best = (0usize, f32::MIN);
+            for (i, &v) in row.iter().enumerate() {
+                if v > best.1 {
+                    best = (i, v);
+                }
+            }
+            best.0 as i32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basics() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn f1_perfect_and_degenerate() {
+        assert_eq!(f1_binary(&[1, 0, 1], &[1, 0, 1]), 1.0);
+        assert_eq!(f1_binary(&[0, 0], &[1, 1]), 0.0);
+    }
+
+    #[test]
+    fn matthews_known_value() {
+        // TP=2 TN=2 FP=1 FN=1 -> mcc = (4-1)/sqrt(3*3*3*3) = 1/3
+        let pred = [1, 1, 1, 0, 0, 0];
+        let label = [1, 1, 0, 0, 0, 1];
+        assert!((matthews(&pred, &label) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matthews_perfect_is_one_inverted_is_minus_one() {
+        assert!((matthews(&[1, 0, 1, 0], &[1, 0, 1, 0]) - 1.0).abs() < 1e-12);
+        assert!((matthews(&[0, 1, 0, 1], &[1, 0, 1, 0]) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let logits = [0.1, 0.9, 0.0, 0.8, 0.1, 0.1];
+        assert_eq!(argmax_rows(&logits, 3), vec![1, 0]);
+    }
+}

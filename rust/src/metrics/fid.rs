@@ -1,0 +1,127 @@
+//! Fréchet Inception Distance with a fixed random-feature extractor
+//! (Table 13, DreamBooth-sim).
+//!
+//! The real FID uses InceptionV3 pool3 features; offline we substitute a
+//! *fixed* (seeded) random projection of 8x8 average-pooled pixels through
+//! a tanh nonlinearity — a random conv-ish feature map. Random features
+//! preserve distributional distances well enough for the *relative*
+//! comparisons Table 13 makes (w/o-finetune >> LoRA ≈ FourierFT > FF).
+//!
+//! FID = |mu_a - mu_b|^2 + Tr(Ca + Cb - 2 (Ca Cb)^{1/2}); we use the
+//! diagonal-covariance form (standard for small sample counts) which keeps
+//! the trace term closed-form: sum over dims of (sa + sb - 2 sqrt(sa sb)).
+
+use crate::data::vision::IMG;
+use crate::tensor::rng::Rng;
+
+pub const FEAT_DIM: usize = 64;
+const POOL: usize = 4; // 32 -> 8x8 pooling
+const POOLED: usize = (IMG / POOL) * (IMG / POOL) * 3;
+
+/// The fixed projection matrix (seeded once; same for all measurements).
+fn projection() -> Vec<f32> {
+    let mut rng = Rng::new(0xF1D);
+    rng.normal_vec(POOLED * FEAT_DIM, (POOLED as f32).powf(-0.5))
+}
+
+/// Feature vector of one image (pixels: IMG*IMG*3 HWC in [0,1]).
+pub fn features(pixels: &[f32]) -> Vec<f32> {
+    assert_eq!(pixels.len(), IMG * IMG * 3);
+    // 4x4 average pool per channel
+    let g = IMG / POOL;
+    let mut pooled = vec![0.0f32; POOLED];
+    for y in 0..IMG {
+        for x in 0..IMG {
+            for c in 0..3 {
+                let v = pixels[(y * IMG + x) * 3 + c];
+                pooled[((y / POOL) * g + (x / POOL)) * 3 + c] += v / (POOL * POOL) as f32;
+            }
+        }
+    }
+    let proj = projection();
+    let mut out = vec![0.0f32; FEAT_DIM];
+    for (i, o) in out.iter_mut().enumerate() {
+        let mut acc = 0.0;
+        for (j, &p) in pooled.iter().enumerate() {
+            acc += p * proj[j * FEAT_DIM + i];
+        }
+        *o = acc.tanh();
+    }
+    out
+}
+
+fn moments(feats: &[Vec<f32>]) -> (Vec<f64>, Vec<f64>) {
+    let n = feats.len().max(1) as f64;
+    let mut mu = vec![0.0f64; FEAT_DIM];
+    for f in feats {
+        for (m, &v) in mu.iter_mut().zip(f) {
+            *m += v as f64 / n;
+        }
+    }
+    let mut var = vec![0.0f64; FEAT_DIM];
+    for f in feats {
+        for i in 0..FEAT_DIM {
+            let d = f[i] as f64 - mu[i];
+            var[i] += d * d / n;
+        }
+    }
+    (mu, var)
+}
+
+/// FID between two image sets (each: vec of IMG*IMG*3 pixel buffers).
+pub fn fid(a: &[Vec<f32>], b: &[Vec<f32>]) -> f64 {
+    let fa: Vec<Vec<f32>> = a.iter().map(|p| features(p)).collect();
+    let fb: Vec<Vec<f32>> = b.iter().map(|p| features(p)).collect();
+    let (mu_a, var_a) = moments(&fa);
+    let (mu_b, var_b) = moments(&fb);
+    let mut d2 = 0.0;
+    let mut tr = 0.0;
+    for i in 0..FEAT_DIM {
+        let dm = mu_a[i] - mu_b[i];
+        d2 += dm * dm;
+        tr += var_a[i] + var_b[i] - 2.0 * (var_a[i] * var_b[i]).sqrt();
+    }
+    // scale to the familiar FID magnitude range
+    100.0 * (d2 + tr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::vision::VisionSet;
+
+    fn images(set: VisionSet, class: usize, count: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..count).map(|_| set.render(class, &mut rng).pixels).collect()
+    }
+
+    #[test]
+    fn identical_distributions_give_near_zero() {
+        let a = images(VisionSet::Cifar10, 3, 64, 1);
+        let b = images(VisionSet::Cifar10, 3, 64, 2);
+        let d = fid(&a, &b);
+        assert!(d < 5.0, "same-distribution FID {d}");
+    }
+
+    #[test]
+    fn different_classes_give_larger_fid() {
+        let a = images(VisionSet::Cifar10, 3, 64, 1);
+        let b = images(VisionSet::Cifar10, 7, 64, 2);
+        let same = fid(&a, &images(VisionSet::Cifar10, 3, 64, 3));
+        let diff = fid(&a, &b);
+        assert!(diff > 4.0 * same.max(0.05), "same {same} vs diff {diff}");
+    }
+
+    #[test]
+    fn fid_is_symmetric() {
+        let a = images(VisionSet::Dtd47, 1, 32, 1);
+        let b = images(VisionSet::Dtd47, 20, 32, 2);
+        assert!((fid(&a, &b) - fid(&b, &a)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn features_are_deterministic() {
+        let a = images(VisionSet::Pets37, 0, 1, 9);
+        assert_eq!(features(&a[0]), features(&a[0]));
+    }
+}

@@ -1,0 +1,101 @@
+//! MT-Bench-sim judge: the deterministic stand-in for GPT-4 scoring
+//! (Table 4). A response to an instruction question earns a 0-10 score:
+//!
+//! * 10 x (token-level accuracy against the exact answer), with
+//! * a 2-point deduction for wrong response length (truncated/rambling),
+//!   floored at 0 — mirroring how GPT-4 penalizes incomplete answers.
+//!
+//! The *relative* comparison between fine-tuning methods (what Table 4 is
+//! about) is preserved: a better-tuned model produces more exact-match
+//! responses and earns a higher mean score.
+
+use crate::data::instruct::Question;
+use crate::data::vocab::EOS;
+
+/// Score one response (generated token stream, EOS-terminated or ragged).
+pub fn score_response(q: &Question, response: &[i32]) -> f64 {
+    let want = q.answer(); // includes EOS
+    // cut the response at its first EOS (inclusive)
+    let cut = response
+        .iter()
+        .position(|&t| t == EOS)
+        .map(|i| i + 1)
+        .unwrap_or(response.len());
+    let got = &response[..cut];
+    let matched = want
+        .iter()
+        .zip(got.iter())
+        .filter(|(a, b)| a == b)
+        .count();
+    let acc = matched as f64 / want.len() as f64;
+    let mut score = 10.0 * acc;
+    if got.len() != want.len() {
+        score -= 2.0;
+    }
+    score.clamp(0.0, 10.0)
+}
+
+/// Mean score over a question set, given per-question responses.
+pub fn mean_score(questions: &[Question], responses: &[Vec<i32>]) -> f64 {
+    assert_eq!(questions.len(), responses.len());
+    if questions.is_empty() {
+        return 0.0;
+    }
+    let total: f64 = questions
+        .iter()
+        .zip(responses)
+        .map(|(q, r)| score_response(q, r))
+        .sum();
+    total / questions.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::instruct::Op;
+    use crate::data::vocab::{vocab, Class};
+
+    fn q() -> Question {
+        let nums = vocab().ids_of(Class::Number);
+        Question { op: Op::Reverse, input: vec![nums[1], nums[2], nums[3]] }
+    }
+
+    #[test]
+    fn exact_answer_scores_ten() {
+        let question = q();
+        let resp = question.answer();
+        assert_eq!(score_response(&question, &resp), 10.0);
+    }
+
+    #[test]
+    fn empty_answer_scores_zero() {
+        assert_eq!(score_response(&q(), &[]), 0.0);
+    }
+
+    #[test]
+    fn partial_answer_scores_between() {
+        let question = q();
+        let mut resp = question.answer();
+        let nums = vocab().ids_of(Class::Number);
+        resp[0] = nums[9]; // corrupt first token
+        let s = score_response(&question, &resp);
+        assert!(s > 0.0 && s < 10.0, "score {s}");
+    }
+
+    #[test]
+    fn rambling_is_penalized() {
+        let question = q();
+        let mut resp = question.answer();
+        resp.pop(); // remove EOS
+        resp.extend([resp[0], resp[0], resp[0]]); // ramble, no EOS
+        let exact = score_response(&question, &question.answer());
+        assert!(score_response(&question, &resp) < exact);
+    }
+
+    #[test]
+    fn mean_over_set() {
+        let qs = vec![q(), q()];
+        let rs = vec![qs[0].answer(), vec![]];
+        assert_eq!(mean_score(&qs, &rs), 5.0);
+    }
+}

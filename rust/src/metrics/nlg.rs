@@ -1,0 +1,376 @@
+//! NLG metrics over token sequences with multiple references — the five
+//! E2E-challenge metrics of Table 3: BLEU, NIST, METEOR, ROUGE-L, CIDEr.
+//!
+//! Implementations follow the canonical definitions:
+//! * BLEU-4: corpus-level, geometric mean of clipped n-gram precisions
+//!   with brevity penalty (Papineni et al. 2002).
+//! * NIST-5: information-weighted n-gram precision with the NIST brevity
+//!   factor (Doddington 2002); n-gram information from reference stats.
+//! * METEOR: unigram harmonic mean F(alpha=0.9) with a fragmentation
+//!   penalty (Banerjee & Lavie 2005), exact matching (token ids have no
+//!   stem/synonym structure).
+//! * ROUGE-L: LCS-based F-measure (Lin 2004, beta -> recall-weighted).
+//! * CIDEr: TF-IDF weighted n-gram cosine, averaged over n=1..4, consensus
+//!   across references (Vedantam et al. 2015).
+
+use std::collections::HashMap;
+
+type Gram = Vec<i32>;
+
+fn ngrams(seq: &[i32], n: usize) -> HashMap<Gram, usize> {
+    let mut out: HashMap<Gram, usize> = HashMap::new();
+    if seq.len() >= n {
+        for w in seq.windows(n) {
+            *out.entry(w.to_vec()).or_insert(0) += 1;
+        }
+    }
+    out
+}
+
+/// Corpus-level BLEU-4 (scaled 0-100 like the paper reports).
+pub fn bleu(hyps: &[Vec<i32>], refs: &[Vec<Vec<i32>>]) -> f64 {
+    assert_eq!(hyps.len(), refs.len());
+    let max_n = 4;
+    let mut clipped = vec![0usize; max_n];
+    let mut total = vec![0usize; max_n];
+    let mut hyp_len = 0usize;
+    let mut ref_len = 0usize;
+    for (h, rs) in hyps.iter().zip(refs) {
+        hyp_len += h.len();
+        // closest reference length
+        ref_len += rs
+            .iter()
+            .map(|r| r.len())
+            .min_by_key(|&l| (l as i64 - h.len() as i64).abs())
+            .unwrap_or(0);
+        for n in 1..=max_n {
+            let hg = ngrams(h, n);
+            let mut best: HashMap<Gram, usize> = HashMap::new();
+            for r in rs {
+                for (g, c) in ngrams(r, n) {
+                    let e = best.entry(g).or_insert(0);
+                    *e = (*e).max(c);
+                }
+            }
+            for (g, c) in &hg {
+                total[n - 1] += c;
+                clipped[n - 1] += best.get(g).map(|&m| m.min(*c)).unwrap_or(0);
+            }
+        }
+    }
+    let mut log_p = 0.0;
+    for n in 0..max_n {
+        if total[n] == 0 || clipped[n] == 0 {
+            return 0.0;
+        }
+        log_p += (clipped[n] as f64 / total[n] as f64).ln();
+    }
+    let bp = if hyp_len >= ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len.max(1) as f64).exp()
+    };
+    100.0 * bp * (log_p / max_n as f64).exp()
+}
+
+/// NIST-5 (typical magnitude 0-10).
+pub fn nist(hyps: &[Vec<i32>], refs: &[Vec<Vec<i32>>]) -> f64 {
+    let max_n = 5;
+    // n-gram information weights from the reference corpus
+    let mut counts: Vec<HashMap<Gram, usize>> = vec![HashMap::new(); max_n + 1];
+    let mut total_unigrams = 0usize;
+    for rs in refs {
+        for r in rs {
+            total_unigrams += r.len();
+            for n in 1..=max_n {
+                for (g, c) in ngrams(r, n) {
+                    *counts[n].entry(g).or_insert(0) += c;
+                }
+            }
+        }
+    }
+    let info = |g: &Gram| -> f64 {
+        let n = g.len();
+        let c_full = *counts[n].get(g).unwrap_or(&0);
+        if c_full == 0 {
+            return 0.0;
+        }
+        let c_parent = if n == 1 {
+            total_unigrams
+        } else {
+            *counts[n - 1].get(&g[..n - 1].to_vec()).unwrap_or(&1)
+        };
+        ((c_parent as f64) / (c_full as f64)).log2()
+    };
+    let mut num = vec![0.0f64; max_n];
+    let mut den = vec![0usize; max_n];
+    let mut hyp_len = 0usize;
+    let mut ref_len_avg = 0.0f64;
+    for (h, rs) in hyps.iter().zip(refs) {
+        hyp_len += h.len();
+        ref_len_avg += rs.iter().map(|r| r.len()).sum::<usize>() as f64 / rs.len().max(1) as f64;
+        for n in 1..=max_n {
+            let hg = ngrams(h, n);
+            let mut matched: HashMap<Gram, usize> = HashMap::new();
+            for r in rs {
+                for (g, c) in ngrams(r, n) {
+                    let e = matched.entry(g).or_insert(0);
+                    *e = (*e).max(c);
+                }
+            }
+            for (g, c) in &hg {
+                den[n - 1] += c;
+                let m = matched.get(g).map(|&m| m.min(*c)).unwrap_or(0);
+                num[n - 1] += m as f64 * info(g);
+            }
+        }
+    }
+    let mut score = 0.0;
+    for n in 0..max_n {
+        if den[n] > 0 {
+            score += num[n] / den[n] as f64;
+        }
+    }
+    // NIST brevity factor
+    let beta = (0.5f64).ln() / (1.5f64).ln().powi(2);
+    let ratio = hyp_len as f64 / ref_len_avg.max(1.0);
+    let bp = (beta * (ratio.min(1.0)).ln().powi(2)).exp();
+    score * bp
+}
+
+/// METEOR (exact-match variant), 0-100 scale.
+pub fn meteor(hyps: &[Vec<i32>], refs: &[Vec<Vec<i32>>]) -> f64 {
+    let mut total = 0.0;
+    for (h, rs) in hyps.iter().zip(refs) {
+        let mut best = 0.0f64;
+        for r in rs {
+            best = best.max(meteor_single(h, r));
+        }
+        total += best;
+    }
+    100.0 * total / hyps.len().max(1) as f64
+}
+
+fn meteor_single(h: &[i32], r: &[i32]) -> f64 {
+    // greedy left-to-right alignment of exact matches
+    let mut used = vec![false; r.len()];
+    let mut align: Vec<usize> = Vec::new(); // ref index per matched hyp token
+    let mut matches = 0usize;
+    for &t in h {
+        if let Some(j) = r.iter().enumerate().position(|(j, &rt)| rt == t && !used[j]) {
+            used[j] = true;
+            align.push(j);
+            matches += 1;
+        }
+    }
+    if matches == 0 {
+        return 0.0;
+    }
+    let p = matches as f64 / h.len() as f64;
+    let rc = matches as f64 / r.len() as f64;
+    let f_mean = p * rc / (0.9 * p + 0.1 * rc);
+    // chunks: maximal runs of consecutive alignments
+    let mut chunks = 1usize;
+    for w in align.windows(2) {
+        if w[1] != w[0] + 1 {
+            chunks += 1;
+        }
+    }
+    let penalty = 0.5 * (chunks as f64 / matches as f64).powi(3);
+    f_mean * (1.0 - penalty)
+}
+
+/// ROUGE-L F-measure (0-100).
+pub fn rouge_l(hyps: &[Vec<i32>], refs: &[Vec<Vec<i32>>]) -> f64 {
+    let mut total = 0.0;
+    for (h, rs) in hyps.iter().zip(refs) {
+        let mut best = 0.0f64;
+        for r in rs {
+            let l = lcs(h, r) as f64;
+            if l == 0.0 {
+                continue;
+            }
+            let p = l / h.len() as f64;
+            let rc = l / r.len() as f64;
+            let beta2 = 1.44; // beta = 1.2, per the E2E evaluation script
+            best = best.max((1.0 + beta2) * p * rc / (rc + beta2 * p));
+        }
+        total += best;
+    }
+    100.0 * total / hyps.len().max(1) as f64
+}
+
+fn lcs(a: &[i32], b: &[i32]) -> usize {
+    let mut dp = vec![0usize; b.len() + 1];
+    for &x in a {
+        let mut prev = 0;
+        for (j, &y) in b.iter().enumerate() {
+            let cur = dp[j + 1];
+            dp[j + 1] = if x == y { prev + 1 } else { dp[j + 1].max(dp[j]) };
+            prev = cur;
+        }
+    }
+    dp[b.len()]
+}
+
+/// CIDEr (typical 0-10 scale as in the paper's Table 3).
+pub fn cider(hyps: &[Vec<i32>], refs: &[Vec<Vec<i32>>]) -> f64 {
+    let max_n = 4;
+    // document frequency over reference sets
+    let mut df: Vec<HashMap<Gram, f64>> = vec![HashMap::new(); max_n + 1];
+    for rs in refs {
+        for n in 1..=max_n {
+            let mut seen: HashMap<Gram, bool> = HashMap::new();
+            for r in rs {
+                for g in ngrams(r, n).into_keys() {
+                    seen.insert(g, true);
+                }
+            }
+            for g in seen.into_keys() {
+                *df[n].entry(g).or_insert(0.0) += 1.0;
+            }
+        }
+    }
+    let num_docs = refs.len().max(1) as f64;
+    let tfidf = |seq: &[i32], n: usize| -> HashMap<Gram, f64> {
+        let grams = ngrams(seq, n);
+        let total: usize = grams.values().sum();
+        grams
+            .into_iter()
+            .map(|(g, c)| {
+                let idf = (num_docs / df[n].get(&g).copied().unwrap_or(0.0).max(1.0)).ln();
+                (g, c as f64 / total.max(1) as f64 * idf)
+            })
+            .collect()
+    };
+    let cos = |a: &HashMap<Gram, f64>, b: &HashMap<Gram, f64>| -> f64 {
+        let dot: f64 = a.iter().map(|(g, v)| v * b.get(g).copied().unwrap_or(0.0)).sum();
+        let na: f64 = a.values().map(|v| v * v).sum::<f64>().sqrt();
+        let nb: f64 = b.values().map(|v| v * v).sum::<f64>().sqrt();
+        if na == 0.0 || nb == 0.0 {
+            0.0
+        } else {
+            dot / (na * nb)
+        }
+    };
+    let mut total = 0.0;
+    for (h, rs) in hyps.iter().zip(refs) {
+        let mut score = 0.0;
+        for n in 1..=max_n {
+            let hv = tfidf(h, n);
+            let mut per_ref = 0.0;
+            for r in rs {
+                per_ref += cos(&hv, &tfidf(r, n));
+            }
+            score += per_ref / rs.len().max(1) as f64;
+        }
+        total += 10.0 * score / max_n as f64;
+    }
+    total / hyps.len().max(1) as f64
+}
+
+/// All five Table 3 metrics in one struct.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NlgScores {
+    pub bleu: f64,
+    pub nist: f64,
+    pub meteor: f64,
+    pub rouge_l: f64,
+    pub cider: f64,
+}
+
+pub fn score_all(hyps: &[Vec<i32>], refs: &[Vec<Vec<i32>>]) -> NlgScores {
+    NlgScores {
+        bleu: bleu(hyps, refs),
+        nist: nist(hyps, refs),
+        meteor: meteor(hyps, refs),
+        rouge_l: rouge_l(hyps, refs),
+        cider: cider(hyps, refs),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one(h: &[i32], r: &[i32]) -> (Vec<Vec<i32>>, Vec<Vec<Vec<i32>>>) {
+        (vec![h.to_vec()], vec![vec![r.to_vec()]])
+    }
+
+    #[test]
+    fn perfect_hypothesis_maxes_metrics() {
+        let r = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let (h, rs) = one(&r, &r);
+        assert!((bleu(&h, &rs) - 100.0).abs() < 1e-9);
+        assert!((rouge_l(&h, &rs) - 100.0).abs() < 1e-9);
+        assert!((meteor(&h, &rs) - 100.0 * (1.0 - 0.5 / 64.0)).abs() < 1.0);
+        assert!(nist(&h, &rs) > 0.0);
+        // CIDEr needs a multi-document corpus (idf degenerates to 0 with a
+        // single reference set — the standard definition).
+        let hyps = vec![vec![1, 2, 3, 4], vec![5, 6, 7, 8]];
+        let refs = vec![vec![vec![1, 2, 3, 4]], vec![vec![5, 6, 7, 8]]];
+        assert!(cider(&hyps, &refs) > 9.0, "perfect corpus CIDEr {}", cider(&hyps, &refs));
+    }
+
+    #[test]
+    fn disjoint_hypothesis_scores_zero() {
+        let (h, rs) = one(&[10, 11, 12, 13], &[1, 2, 3, 4]);
+        assert_eq!(bleu(&h, &rs), 0.0);
+        assert_eq!(rouge_l(&h, &rs), 0.0);
+        assert_eq!(meteor(&h, &rs), 0.0);
+        assert!(cider(&h, &rs) < 1e-9);
+    }
+
+    #[test]
+    fn bleu_brevity_penalty_kicks_in() {
+        // hypothesis = first half of the reference: perfect precision but
+        // short -> BP < 1.
+        let r = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let (h, rs) = one(&r[..5], &r);
+        let b = bleu(&h, &rs);
+        assert!(b < 100.0 && b > 20.0, "bleu {b}");
+    }
+
+    #[test]
+    fn rouge_order_sensitivity() {
+        // same bag of words, scrambled: LCS drops.
+        let (h, rs) = one(&[4, 3, 2, 1], &[1, 2, 3, 4]);
+        assert!(rouge_l(&h, &rs) < 50.0);
+    }
+
+    #[test]
+    fn meteor_fragmentation_penalty() {
+        // contiguous match scores higher than fragmented match
+        let r = vec![1, 2, 3, 4, 5, 6];
+        let contiguous = meteor(&[vec![1, 2, 3]], &[vec![r.clone()]]);
+        let fragmented = meteor(&[vec![1, 3, 5]], &[vec![r.clone()]]);
+        assert!(contiguous > fragmented, "{contiguous} !> {fragmented}");
+    }
+
+    #[test]
+    fn multiple_references_help() {
+        let refs_multi = vec![vec![vec![1, 2, 3, 4], vec![4, 3, 2, 1]]];
+        let refs_single = vec![vec![vec![1, 2, 3, 4]]];
+        let h = vec![vec![4, 3, 2, 1]];
+        assert!(bleu(&h, &refs_multi) > bleu(&h, &refs_single));
+    }
+
+    #[test]
+    fn lcs_known() {
+        assert_eq!(lcs(&[1, 3, 5, 7], &[1, 2, 3, 4, 5]), 3);
+        assert_eq!(lcs(&[], &[1]), 0);
+    }
+
+    #[test]
+    fn cider_rewards_consensus() {
+        // hypothesis matching the common part of both references beats one
+        // matching a single reference's idiosyncratic tail
+        let refs = vec![
+            vec![vec![1, 2, 3, 9, 9], vec![1, 2, 3, 8, 8]],
+            vec![vec![5, 6, 7, 9, 9], vec![5, 6, 7, 8, 8]],
+        ];
+        let common = vec![vec![1, 2, 3], vec![5, 6, 7]];
+        let tail = vec![vec![9, 9], vec![8, 8]];
+        assert!(cider(&common, &refs) > cider(&tail, &refs));
+    }
+}

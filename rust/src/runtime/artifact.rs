@@ -1,0 +1,295 @@
+//! Artifact registry: schema-driven loading of `artifacts/*.hlo.txt` plus
+//! their `.meta.json` sidecars emitted by `python/compile/aot.py`.
+//!
+//! The meta JSON is the tensor-level ABI between L2 (jax) and L3 (rust):
+//! an ordered list of inputs/outputs with name, dtype, shape, and *role*
+//! (base / adapt / opt_m / opt_v / static / scalar / batch / loss / logits).
+//! Nothing about parameter layout is hard-coded on the rust side.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One tensor slot in an artifact signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub role: String,
+    pub dtype: String, // "f32" | "i32"
+    pub shape: Vec<usize>,
+}
+
+impl TensorMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorMeta> {
+        Ok(TensorMeta {
+            name: v.get("name").and_then(Json::as_str).ok_or_else(|| anyhow!("no name"))?.into(),
+            role: v.get("role").and_then(Json::as_str).unwrap_or("").into(),
+            dtype: v.get("dtype").and_then(Json::as_str).ok_or_else(|| anyhow!("no dtype"))?.into(),
+            shape: v
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("no shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// Method hyperparameters recorded at lowering time.
+#[derive(Debug, Clone, Default)]
+pub struct MethodMeta {
+    pub name: String,
+    pub r: usize,
+    pub n: usize,
+    pub m: usize,
+}
+
+/// Model hyperparameters recorded at lowering time.
+#[derive(Debug, Clone, Default)]
+pub struct ModelMeta {
+    pub name: String,
+    pub kind: String,
+    pub d: usize,
+    pub layers: usize,
+    pub vocab: usize,
+    pub seqlen: usize,
+    pub classes: usize,
+    pub batch: usize,
+    pub img: usize,
+    pub patch: usize,
+    pub channels: usize,
+    pub hidden: usize,
+}
+
+/// Parsed `.meta.json` for one artifact family (step + init).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub loss: String,
+    pub model: ModelMeta,
+    pub method: MethodMeta,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    pub step_hlo: String,
+    pub init_hlo: String,
+    pub trainable: usize,
+    pub trainable_ex_head: usize,
+}
+
+impl ArtifactMeta {
+    pub fn parse(doc: &Json) -> Result<ArtifactMeta> {
+        let get_str = |k: &str| -> Result<String> {
+            Ok(doc.get(k).and_then(Json::as_str).ok_or_else(|| anyhow!("missing {k}"))?.into())
+        };
+        let model = doc.get("model").ok_or_else(|| anyhow!("missing model"))?;
+        let method = doc.get("method").ok_or_else(|| anyhow!("missing method"))?;
+        let usize_of = |v: &Json, k: &str| v.get(k).and_then(Json::as_usize).unwrap_or(0);
+        Ok(ArtifactMeta {
+            name: get_str("name")?,
+            loss: get_str("loss")?,
+            model: ModelMeta {
+                name: model.get("name").and_then(Json::as_str).unwrap_or("").into(),
+                kind: model.get("kind").and_then(Json::as_str).unwrap_or("").into(),
+                d: usize_of(model, "d"),
+                layers: usize_of(model, "layers"),
+                vocab: usize_of(model, "vocab"),
+                seqlen: usize_of(model, "seqlen"),
+                classes: usize_of(model, "classes"),
+                batch: usize_of(model, "batch"),
+                img: usize_of(model, "img"),
+                patch: usize_of(model, "patch"),
+                channels: usize_of(model, "channels"),
+                hidden: usize_of(model, "hidden"),
+            },
+            method: MethodMeta {
+                name: method.get("name").and_then(Json::as_str).unwrap_or("").into(),
+                r: usize_of(method, "r"),
+                n: usize_of(method, "n"),
+                m: usize_of(method, "m"),
+            },
+            inputs: doc
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing inputs"))?
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect::<Result<_>>()?,
+            outputs: doc
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing outputs"))?
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect::<Result<_>>()?,
+            step_hlo: get_str("step_hlo")?,
+            init_hlo: get_str("init_hlo")?,
+            trainable: doc.path(&["counts", "trainable"]).and_then(Json::as_usize).unwrap_or(0),
+            trainable_ex_head: doc
+                .path(&["counts", "trainable_ex_head"])
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+        })
+    }
+
+    pub fn inputs_with_role(&self, role: &str) -> Vec<&TensorMeta> {
+        self.inputs.iter().filter(|t| t.role == role).collect()
+    }
+
+    pub fn outputs_with_role(&self, role: &str) -> Vec<&TensorMeta> {
+        self.outputs.iter().filter(|t| t.role == role).collect()
+    }
+
+    /// Shape of the logits output.
+    pub fn logits_shape(&self) -> Result<&[usize]> {
+        self.outputs
+            .iter()
+            .find(|t| t.role == "logits")
+            .map(|t| t.shape.as_slice())
+            .ok_or_else(|| anyhow!("artifact {} has no logits output", self.name))
+    }
+}
+
+/// Registry over the `artifacts/` directory: global manifest + per-family
+/// meta, with lazy access by artifact name.
+pub struct Registry {
+    pub dir: PathBuf,
+    pub manifest: Json,
+    metas: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Registry {
+    pub fn open(dir: &Path) -> Result<Registry> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?}; run `make artifacts` first"))?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let mut metas = BTreeMap::new();
+        for spec in manifest.get("specs").and_then(Json::as_arr).unwrap_or(&[]) {
+            let meta = ArtifactMeta::parse(spec)?;
+            metas.insert(meta.name.clone(), meta);
+        }
+        Ok(Registry { dir: dir.to_path_buf(), manifest, metas })
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.metas.keys().map(String::as_str)
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.metas.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact '{name}' not in manifest ({} available; e.g. {:?})",
+                self.metas.len(),
+                self.metas.keys().take(3).collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Find the artifact for (model, method-tag, loss), e.g.
+    /// ("enc_base", "fourierft_n64", "ce").
+    pub fn find(&self, model: &str, method_tag: &str, loss: &str) -> Result<&ArtifactMeta> {
+        let name = format!("{model}__{method_tag}__{loss}");
+        self.meta(&name)
+    }
+
+    pub fn hlo_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Base-model init HLO path + tensor list for an architecture.
+    pub fn base_init(&self, model: &str) -> Result<(PathBuf, Vec<TensorMeta>)> {
+        let b = self
+            .manifest
+            .path(&["bases", model])
+            .ok_or_else(|| anyhow!("no base entry for model {model}"))?;
+        let hlo = b.get("base_hlo").and_then(Json::as_str).ok_or_else(|| anyhow!("no base_hlo"))?;
+        let tensors = b
+            .get("tensors")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("no base tensors"))?
+            .iter()
+            .map(|t| {
+                Ok(TensorMeta {
+                    name: t.get("name").and_then(Json::as_str).unwrap_or("").into(),
+                    role: "base".into(),
+                    dtype: t.get("dtype").and_then(Json::as_str).unwrap_or("f32").into(),
+                    shape: t
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok((self.dir.join(hlo), tensors))
+    }
+
+    /// Standalone ΔW-reconstruction artifact for (d, n), if lowered.
+    pub fn delta_hlo(&self, d: usize, n: usize) -> Result<PathBuf> {
+        for e in self.manifest.get("deltas").and_then(Json::as_arr).unwrap_or(&[]) {
+            if e.get("d").and_then(Json::as_usize) == Some(d)
+                && e.get("n").and_then(Json::as_usize) == Some(n)
+            {
+                let hlo = e.get("hlo").and_then(Json::as_str).unwrap();
+                return Ok(self.dir.join(hlo));
+            }
+        }
+        bail!("no delta artifact for d={d}, n={n}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_meta() -> Json {
+        Json::parse(
+            r#"{
+          "name": "m__fourierft_n8__ce", "loss": "ce",
+          "model": {"name": "m", "kind": "encoder", "d": 16, "layers": 1,
+                    "vocab": 10, "seqlen": 4, "classes": 3, "batch": 2,
+                    "img": 0, "patch": 0, "channels": 0, "hidden": 0,
+                    "heads": 2, "dff": 32},
+          "method": {"name": "fourierft", "r": 0, "n": 8, "m": 0},
+          "inputs": [
+            {"name": "tok_emb", "role": "base", "dtype": "f32", "shape": [10, 16]},
+            {"name": "spec.w.c", "role": "adapt", "dtype": "f32", "shape": [8]},
+            {"name": "entries", "role": "static", "dtype": "i32", "shape": [2, 8]},
+            {"name": "x", "role": "batch", "dtype": "i32", "shape": [2, 4]}
+          ],
+          "outputs": [
+            {"name": "spec.w.c", "role": "adapt", "dtype": "f32", "shape": [8]},
+            {"name": "loss", "role": "loss", "dtype": "f32", "shape": []},
+            {"name": "logits", "role": "logits", "dtype": "f32", "shape": [2, 3]}
+          ],
+          "step_hlo": "a.step.hlo.txt", "init_hlo": "a.init.hlo.txt",
+          "counts": {"trainable": 100, "trainable_ex_head": 64, "head": 36}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_meta() {
+        let m = ArtifactMeta::parse(&sample_meta()).unwrap();
+        assert_eq!(m.method.n, 8);
+        assert_eq!(m.inputs_with_role("base").len(), 1);
+        assert_eq!(m.logits_shape().unwrap(), &[2, 3]);
+        assert_eq!(m.trainable_ex_head, 64);
+        assert_eq!(m.inputs[2].numel(), 16);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let bad = Json::parse(r#"{"name": "x"}"#).unwrap();
+        assert!(ArtifactMeta::parse(&bad).is_err());
+    }
+}

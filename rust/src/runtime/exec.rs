@@ -1,0 +1,219 @@
+//! Executable wrapper: schema-driven argument assembly + train state.
+//!
+//! One [`Executable`] owns a compiled step module and its [`ArtifactMeta`].
+//! The fused step artifact computes `(adapt', m', v', loss, logits)` from
+//! `(base, adapt, m, v, statics, scalars, batch)`; running it with `lr = 0`
+//! is a pure eval (the L2 lowering guarantees this — see train.py).
+//!
+//! State tensors are kept as `xla::Literal`s between steps: the output
+//! tuple is decomposed and its adapt/m/v slots become next step's inputs
+//! verbatim, so there is no host re-encode in the loop.
+
+use super::artifact::ArtifactMeta;
+use super::{from_literal, to_literal, Client};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Scalar hyperparameters fed to every step call.
+#[derive(Debug, Clone, Copy)]
+pub struct StepScalars {
+    /// 1-based Adam step count.
+    pub step: f32,
+    pub lr: f32,
+    /// Task-head learning rate (the paper tunes it separately; dense head
+    /// weights want a much smaller rate than spectral coefficients).
+    pub lr_head: f32,
+    pub wd: f32,
+    /// FourierFT alpha, or LoRA alpha/r, per method semantics.
+    pub scaling: f32,
+}
+
+/// Mutable training state: literals aligned with the meta's per-role order.
+pub struct ParamSet {
+    pub base: Vec<xla::Literal>,
+    pub adapt: Vec<xla::Literal>,
+    pub m: Vec<xla::Literal>,
+    pub v: Vec<xla::Literal>,
+    pub statics: Vec<xla::Literal>,
+}
+
+/// Result of one step call.
+pub struct StepOut {
+    pub loss: f32,
+    pub logits: Tensor,
+}
+
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    step: xla::PjRtLoadedExecutable,
+    init: xla::PjRtLoadedExecutable,
+    n_adapt: usize,
+}
+
+impl Executable {
+    /// Load + compile the step and init modules for one artifact family.
+    pub fn load(client: &Client, artifacts_dir: &Path, meta: &ArtifactMeta) -> Result<Executable> {
+        let step = client
+            .load_hlo(&artifacts_dir.join(&meta.step_hlo))
+            .with_context(|| format!("compiling {}", meta.step_hlo))?;
+        let init = client
+            .load_hlo(&artifacts_dir.join(&meta.init_hlo))
+            .with_context(|| format!("compiling {}", meta.init_hlo))?;
+        let n_adapt = meta.inputs_with_role("adapt").len();
+        Ok(Executable { meta: meta.clone(), step, init, n_adapt })
+    }
+
+    /// Run the init module: seed -> fresh (adapt, m, v) literals.
+    pub fn init_state(
+        &self,
+        seed: i32,
+        base: Vec<xla::Literal>,
+        statics: Vec<xla::Literal>,
+    ) -> Result<ParamSet> {
+        let seed_lit = to_literal(&Tensor::scalar_i32(seed))?;
+        let out = self.init.execute::<xla::Literal>(&[seed_lit])?[0][0]
+            .to_literal_sync()?
+            .to_tuple()?;
+        let k = self.n_adapt;
+        if out.len() != 3 * k {
+            bail!("init returned {} tensors, expected {}", out.len(), 3 * k);
+        }
+        let mut it = out.into_iter();
+        let adapt: Vec<_> = it.by_ref().take(k).collect();
+        let m: Vec<_> = it.by_ref().take(k).collect();
+        let v: Vec<_> = it.collect();
+        Ok(ParamSet { base, adapt, m, v, statics })
+    }
+
+    /// One fused train/eval step. Mutates `state` (adapt/m/v roll forward).
+    pub fn step(
+        &self,
+        state: &mut ParamSet,
+        scalars: StepScalars,
+        batch: &HashMap<String, Tensor>,
+    ) -> Result<StepOut> {
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(self.meta.inputs.len());
+        for group in [&state.base, &state.adapt, &state.m, &state.v, &state.statics] {
+            args.extend(group.iter());
+        }
+
+        // Scalars + batch in the exact order the meta records.
+        let mut tail: Vec<xla::Literal> = Vec::new();
+        for t in &self.meta.inputs {
+            match t.role.as_str() {
+                "scalar" => {
+                    let v = match t.name.as_str() {
+                        "step" => scalars.step,
+                        "lr" => scalars.lr,
+                        "lr_head" => scalars.lr_head,
+                        "wd" => scalars.wd,
+                        "scaling" => scalars.scaling,
+                        other => bail!("unknown scalar input {other}"),
+                    };
+                    tail.push(to_literal(&Tensor::scalar(v))?);
+                }
+                "batch" => {
+                    let tensor = batch
+                        .get(&t.name)
+                        .ok_or_else(|| anyhow!("batch missing tensor '{}'", t.name))?;
+                    if tensor.shape != t.shape {
+                        bail!("batch '{}' shape {:?}, artifact wants {:?}",
+                              t.name, tensor.shape, t.shape);
+                    }
+                    tail.push(to_literal(tensor)?);
+                }
+                _ => {}
+            }
+        }
+        let expected =
+            args.len() + tail.len();
+        if expected != self.meta.inputs.len() {
+            bail!("assembled {} args, meta wants {}", expected, self.meta.inputs.len());
+        }
+        args.extend(tail.iter());
+
+        let out = self.step.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?
+            .to_tuple()?;
+        let k = self.n_adapt;
+        if out.len() != 3 * k + 2 {
+            bail!("step returned {} tensors, expected {}", out.len(), 3 * k + 2);
+        }
+        let mut it = out.into_iter();
+        state.adapt = it.by_ref().take(k).collect();
+        state.m = it.by_ref().take(k).collect();
+        state.v = it.by_ref().take(k).collect();
+        let loss_lit = it.next().unwrap();
+        let logits_lit = it.next().unwrap();
+        let loss = loss_lit.to_vec::<f32>()?[0];
+        let logits = from_literal(&logits_lit)?;
+        Ok(StepOut { loss, logits })
+    }
+
+    /// Pure evaluation: lr = 0 forward pass on a batch; adapt/m/v restored.
+    pub fn eval(
+        &self,
+        state: &mut ParamSet,
+        scaling: f32,
+        batch: &HashMap<String, Tensor>,
+    ) -> Result<StepOut> {
+        // lr = 0 leaves adapt unchanged; m/v do roll but we snapshot-restore
+        // them so eval is side-effect free.
+        let m_save = std::mem::take(&mut state.m);
+        let v_save = std::mem::take(&mut state.v);
+        state.m = m_save.iter().map(clone_literal).collect::<Result<_>>()?;
+        state.v = v_save.iter().map(clone_literal).collect::<Result<_>>()?;
+        let out = self.step(
+            state,
+            StepScalars { step: 1.0, lr: 0.0, lr_head: 0.0, wd: 0.0, scaling },
+            batch,
+        )?;
+        state.m = m_save;
+        state.v = v_save;
+        Ok(out)
+    }
+
+    /// Extract the current adapt tensors as host tensors, keyed by name.
+    pub fn adapt_tensors(&self, state: &ParamSet) -> Result<Vec<(String, Tensor)>> {
+        let metas = self.meta.inputs_with_role("adapt");
+        metas
+            .iter()
+            .zip(&state.adapt)
+            .map(|(m, l)| Ok((m.name.clone(), from_literal(l)?)))
+            .collect()
+    }
+
+    /// Replace adapt tensors from host tensors (adapter hot-load path).
+    pub fn set_adapt(&self, state: &mut ParamSet, tensors: &HashMap<String, Tensor>) -> Result<()> {
+        let metas = self.meta.inputs_with_role("adapt");
+        let mut new_adapt = Vec::with_capacity(metas.len());
+        for m in metas {
+            let t = tensors
+                .get(&m.name)
+                .ok_or_else(|| anyhow!("missing adapt tensor '{}'", m.name))?;
+            new_adapt.push(to_literal(t)?);
+        }
+        state.adapt = new_adapt;
+        Ok(())
+    }
+}
+
+/// Literal has no Clone; round-trip through host bytes.
+pub fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    to_literal(&from_literal(l)?)
+}
+
+/// Run a base-init module: seed -> base tensors (sorted name order).
+pub fn run_base_init(
+    client: &Client,
+    hlo_path: &Path,
+    seed: i32,
+) -> Result<Vec<xla::Literal>> {
+    let exe = client.load_hlo(hlo_path)?;
+    let seed_lit = to_literal(&Tensor::scalar_i32(seed))?;
+    Ok(exe.execute::<xla::Literal>(&[seed_lit])?[0][0]
+        .to_literal_sync()?
+        .to_tuple()?)
+}

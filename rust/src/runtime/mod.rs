@@ -1,0 +1,95 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! This is the only module that touches the `xla` crate. The flow (see
+//! /opt/xla-example/load_hlo) is:
+//!
+//!   HLO text --HloModuleProto::from_text_file--> XlaComputation
+//!            --PjRtClient::cpu().compile--> PjRtLoadedExecutable
+//!            --execute / execute_b--> PjRtBuffers
+//!
+//! HLO *text* (not serialized proto) is the interchange format: jax >= 0.5
+//! emits 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids.
+//!
+//! Python is never on this path — artifacts are built once by
+//! `make artifacts` and the binary is self-contained afterwards.
+
+pub mod artifact;
+pub mod exec;
+
+pub use artifact::{ArtifactMeta, Registry, TensorMeta};
+pub use exec::{Executable, ParamSet};
+
+use crate::tensor::{Data, Tensor};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Shared PJRT client. Creating a CPU client is cheap but not free; the
+/// coordinator makes exactly one and threads it everywhere.
+#[derive(Clone)]
+pub struct Client {
+    inner: Arc<xla::PjRtClient>,
+}
+
+impl Client {
+    pub fn cpu() -> Result<Client> {
+        Ok(Client { inner: Arc::new(xla::PjRtClient::cpu()?) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    pub fn raw(&self) -> &xla::PjRtClient {
+        &self.inner
+    }
+
+    /// Compile an HLO text file into an executable.
+    pub fn load_hlo(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.inner.compile(&comp)?)
+    }
+}
+
+/// Host tensor -> XLA literal.
+pub fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    let lit = match &t.data {
+        Data::F32(v) => xla::Literal::vec1(v),
+        Data::I32(v) => xla::Literal::vec1(v),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+/// XLA literal -> host tensor.
+pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let t = match shape.ty() {
+        xla::ElementType::F32 => Tensor::f32(&dims, lit.to_vec::<f32>()?),
+        xla::ElementType::S32 => Tensor::i32(&dims, lit.to_vec::<i32>()?),
+        other => anyhow::bail!("unsupported element type {:?}", other),
+    };
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = to_literal(&t).unwrap();
+        let back = from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_scalar() {
+        let t = Tensor::scalar_i32(42);
+        let back = from_literal(&to_literal(&t).unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+}

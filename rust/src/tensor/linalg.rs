@@ -1,0 +1,207 @@
+//! Dense linear algebra for the host-side substrates: matmul (blocked),
+//! Householder QR (random orthogonal basis generation for the Table 6
+//! ablation), and small helpers shared by the Fourier module and tests.
+
+use super::Tensor;
+use anyhow::Result;
+
+/// C = A @ B with A: [m, k], B: [k, n]. Blocked i-k-j loop order; good
+/// enough for the d<=256 matrices the coordinator touches host-side.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    anyhow::ensure!(k == k2, "matmul inner dims {k} vs {k2}");
+    let (av, bv) = (a.as_f32()?, b.as_f32()?);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let ci = &mut c[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let aik = av[i * k + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let bk = &bv[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                ci[j] += aik * bk[j];
+            }
+        }
+    }
+    Ok(Tensor::f32(&[m, n], c))
+}
+
+pub fn transpose(a: &Tensor) -> Result<Tensor> {
+    let (m, n) = (a.shape[0], a.shape[1]);
+    let av = a.as_f32()?;
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = av[i * n + j];
+        }
+    }
+    Ok(Tensor::f32(&[n, m], out))
+}
+
+/// Householder QR of a square matrix; returns Q (orthogonal).
+///
+/// Used to produce the "orthogonal basis" for the paper's Table 6 ablation:
+/// Q from the QR of a Gaussian matrix is Haar-distributed (up to sign
+/// convention, which we fix so diag(R) >= 0).
+pub fn qr_q(a: &Tensor) -> Result<Tensor> {
+    let n = a.shape[0];
+    anyhow::ensure!(a.shape[1] == n, "qr_q wants square, got {:?}", a.shape);
+    let mut r: Vec<f64> = a.as_f32()?.iter().map(|&x| x as f64).collect();
+    let mut q: Vec<f64> = vec![0.0; n * n];
+    for i in 0..n {
+        q[i * n + i] = 1.0;
+    }
+    for k in 0..n {
+        // Householder vector for column k below the diagonal.
+        let mut norm = 0.0;
+        for i in k..n {
+            norm += r[i * n + k] * r[i * n + k];
+        }
+        let norm = norm.sqrt();
+        if norm < 1e-12 {
+            continue;
+        }
+        let alpha = if r[k * n + k] > 0.0 { -norm } else { norm };
+        let mut v = vec![0.0; n];
+        v[k] = r[k * n + k] - alpha;
+        for i in (k + 1)..n {
+            v[i] = r[i * n + k];
+        }
+        let vtv: f64 = v[k..].iter().map(|x| x * x).sum();
+        if vtv < 1e-24 {
+            continue;
+        }
+        // R <- (I - 2 v v^T / v^T v) R
+        for j in k..n {
+            let dot: f64 = (k..n).map(|i| v[i] * r[i * n + j]).sum();
+            let c = 2.0 * dot / vtv;
+            for i in k..n {
+                r[i * n + j] -= c * v[i];
+            }
+        }
+        // Q <- Q (I - 2 v v^T / v^T v)
+        for i in 0..n {
+            let dot: f64 = (k..n).map(|j| v[j] * q[i * n + j]).sum();
+            let c = 2.0 * dot / vtv;
+            for j in k..n {
+                q[i * n + j] -= c * v[j];
+            }
+        }
+    }
+    // Sign fix: make diag(R) non-negative so Q is unique.
+    for k in 0..n {
+        if r[k * n + k] < 0.0 {
+            for i in 0..n {
+                q[i * n + k] = -q[i * n + k];
+            }
+        }
+    }
+    Ok(Tensor::f32(&[n, n], q.iter().map(|&x| x as f32).collect()))
+}
+
+/// Pearson correlation coefficient of two equal-length slices.
+pub fn pearson(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    let ma = a.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let mb = b.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for i in 0..a.len() {
+        let (da, db) = (a[i] as f64 - ma, b[i] as f64 - mb);
+        cov += da * db;
+        va += da * da;
+        vb += db * db;
+    }
+    if va <= 0.0 || vb <= 0.0 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// Spearman rank correlation (ties get average ranks).
+pub fn spearman(a: &[f32], b: &[f32]) -> f64 {
+    pearson(&ranks(a), &ranks(b))
+}
+
+fn ranks(x: &[f32]) -> Vec<f32> {
+    let mut idx: Vec<usize> = (0..x.len()).collect();
+    idx.sort_by(|&i, &j| x[i].partial_cmp(&x[j]).unwrap());
+    let mut out = vec![0.0f32; x.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && x[idx[j + 1]] == x[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f32 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            out[k] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::f32(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::f32(&[2, 2], vec![1., 1., 1., 1.]);
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.as_f32().unwrap(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Tensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let t = transpose(&transpose(&a).unwrap()).unwrap();
+        assert_eq!(a, t);
+    }
+
+    #[test]
+    fn qr_gives_orthogonal_q() {
+        let mut rng = Rng::new(5);
+        let n = 24;
+        let a = Tensor::f32(&[n, n], rng.normal_vec(n * n, 1.0));
+        let q = qr_q(&a).unwrap();
+        let qtq = matmul(&transpose(&q).unwrap(), &q).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((qtq.at2(i, j) - want).abs() < 1e-4, "({i},{j}) {}", qtq.at2(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [2.0, 4.0, 6.0, 8.0];
+        let c = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-9);
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spearman_monotone_nonlinear() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [1.0, 8.0, 27.0, 64.0, 125.0]; // monotone => rho = 1
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spearman_handles_ties() {
+        let a = [1.0, 1.0, 2.0, 3.0];
+        let b = [1.0, 1.0, 2.0, 3.0];
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,172 @@
+//! Host-side tensor substrate: a small dense f32/i32 tensor with shape
+//! metadata, plus linear algebra (`linalg`) and the deterministic PRNG
+//! (`rng`) used by every data generator.
+
+pub mod linalg;
+pub mod rng;
+
+use anyhow::{bail, Result};
+
+/// Element type of a [`Tensor`]. Mirrors the two dtypes the artifact ABI
+/// uses (`f32` weights/activations, `i32` token ids / labels / entries).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Dense row-major host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {:?} vs len {}", shape, data.len());
+        Tensor { shape: shape.to_vec(), data: Data::F32(data) }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data: Data::I32(data) }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor::f32(shape, vec![0.0; shape.iter().product()])
+    }
+
+    pub fn zeros_i32(shape: &[usize]) -> Tensor {
+        Tensor::i32(shape, vec![0; shape.iter().product()])
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor::f32(&[], vec![v])
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::i32(&[], vec![v])
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self.data {
+            Data::F32(_) => "f32",
+            Data::I32(_) => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            Data::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// 2-D accessor (row-major).
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        match &self.data {
+            Data::F32(v) => v[i * self.shape[1] + j],
+            Data::I32(v) => v[i * self.shape[1] + j] as f32,
+        }
+    }
+
+    /// Elementwise in-place add (shape-checked); used by the host-side
+    /// delta-merge path.
+    pub fn add_assign(&mut self, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        let o = other.as_f32()?;
+        for (a, b) in self.as_f32_mut()?.iter_mut().zip(o) {
+            *a += *b;
+        }
+        Ok(())
+    }
+
+    pub fn scale(&mut self, s: f32) -> Result<()> {
+        for a in self.as_f32_mut()? {
+            *a *= s;
+        }
+        Ok(())
+    }
+
+    /// Max absolute difference against another tensor (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        let (a, b) = (self.as_f32()?, other.as_f32()?);
+        Ok(a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max))
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        match &self.data {
+            Data::F32(v) => v.iter().map(|x| x * x).sum::<f32>().sqrt(),
+            Data::I32(v) => v.iter().map(|&x| (x as f32) * (x as f32)).sum::<f32>().sqrt(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), "f32");
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_len_mismatch_panics() {
+        Tensor::f32(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn add_assign_and_scale() {
+        let mut a = Tensor::f32(&[2], vec![1.0, 2.0]);
+        let b = Tensor::f32(&[2], vec![10.0, 20.0]);
+        a.add_assign(&b).unwrap();
+        a.scale(0.5).unwrap();
+        assert_eq!(a.as_f32().unwrap(), &[5.5, 11.0]);
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = Tensor::zeros_i32(&[2]);
+        assert!(t.as_f32().is_err());
+        assert!(Tensor::zeros(&[2]).as_i32().is_err());
+    }
+}

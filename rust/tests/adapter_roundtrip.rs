@@ -1,0 +1,178 @@
+//! Adapter lifecycle integration: fine-tune -> publish to store -> reload
+//! -> merge ΔW host-side AND on-device -> both paths agree; plus the
+//! serving router end-to-end over multiple adapters.
+//!
+//! Requires `artifacts/` (run `make artifacts`).
+
+use fourier_peft::adapter::merge::{delta_device, delta_host};
+use fourier_peft::adapter::{AdapterFile, AdapterKind, AdapterStore};
+use fourier_peft::coordinator::serving::{Request, Server};
+use fourier_peft::coordinator::trainer::Trainer;
+use fourier_peft::data::collate_text;
+use fourier_peft::data::glue::GlueTask;
+use fourier_peft::fourier::{sample_entries, EntryBias};
+use fourier_peft::tensor::{rng::Rng, Tensor};
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("fp_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn host_and_device_delta_reconstruction_agree() {
+    let trainer = Trainer::open_default().unwrap();
+    let (d, n) = (128usize, 64usize);
+    let seed = 2024u64;
+    let (rows, cols) = sample_entries(d, d, n, EntryBias::None, seed);
+    let mut rng = Rng::new(3);
+    let coeffs = Tensor::f32(&[n], rng.normal_vec(n, 1.0));
+    let alpha = 8.0;
+
+    let host = delta_host(&coeffs, seed, n, d, d, alpha).unwrap();
+    let device =
+        delta_device(&trainer.client, &trainer.registry, (&rows, &cols), &coeffs, d, alpha)
+            .unwrap();
+    let diff = host.max_abs_diff(&device).unwrap();
+    assert!(diff < 1e-3, "host vs device ΔW differ by {diff}");
+}
+
+#[test]
+fn finetune_publish_reload_serve() {
+    let trainer = Trainer::open_default().unwrap();
+    let artifact = "mlp__fourierft_n128__ce";
+    let store = AdapterStore::open(&tmpdir("serve")).unwrap();
+    let mut server = Server::new(&trainer, artifact, store, 2024, 64.0).unwrap();
+
+    // Quick fine-tune on blobs, then publish twice under different names.
+    let exe = trainer.executable(artifact).unwrap();
+    let cfg = {
+        let mut c = fourier_peft::coordinator::trainer::FinetuneCfg::new(artifact);
+        c.lr = 0.02;
+        c.scaling = 64.0;
+        c.steps = 60;
+        c
+    };
+    let res = trainer
+        .finetune(
+            &cfg,
+            |step, _| {
+                fourier_peft::data::blobs::collate(&fourier_peft::data::blobs::dataset(
+                    64, 0.35, step as u64,
+                ))
+            },
+            None,
+        )
+        .unwrap();
+    for name in ["blobs_a", "blobs_b"] {
+        server
+            .store
+            .save(
+                name,
+                &AdapterFile {
+                    kind: AdapterKind::FourierFt,
+                    seed: 2024,
+                    alpha: 64.0,
+                    meta: vec![("n".into(), "128".into())],
+                    tensors: res.adapt.clone(),
+                },
+            )
+            .unwrap();
+    }
+
+    // Queue alternating adapters: router should batch to 2 swaps only.
+    let queue: Vec<Request> = (0..6)
+        .map(|i| {
+            let pts = fourier_peft::data::blobs::dataset(64, 0.35, 100 + i);
+            Request {
+                id: i,
+                adapter: if i % 2 == 0 { "blobs_a" } else { "blobs_b" }.into(),
+                batch: fourier_peft::data::blobs::collate(&pts),
+            }
+        })
+        .collect();
+    let (results, stats) = server.serve(queue).unwrap();
+    assert_eq!(results.len(), 6);
+    assert_eq!(stats.swaps, 2, "router must group by adapter");
+    assert!(stats.throughput_rps() > 0.0);
+
+    // Served logits from the trained adapter classify well.
+    let pts = fourier_peft::data::blobs::dataset(64, 0.35, 999);
+    let batch = fourier_peft::data::blobs::collate(&pts);
+    let (r2, _) = server
+        .serve(vec![Request { id: 9, adapter: "blobs_a".into(), batch: batch.clone() }])
+        .unwrap();
+    let logits = r2[0].1.as_f32().unwrap();
+    let preds = fourier_peft::metrics::classify::argmax_rows(logits, 8);
+    let labels: Vec<i32> = pts.iter().map(|p| p.class as i32).collect();
+    let acc = fourier_peft::metrics::classify::accuracy(&preds, &labels);
+    assert!(acc > 0.5, "served accuracy {acc} too low (untrained would be 0.125)");
+}
+
+#[test]
+fn merged_weights_reproduce_adapter_forward() {
+    // Host-side merge W0 + ΔW must equal what the runtime computes with the
+    // adapter active: compare logits from (merged base + zero adapter) vs
+    // (base + trained adapter). Uses the MLP model for tight tolerances.
+    let trainer = Trainer::open_default().unwrap();
+    let artifact = "mlp__fourierft_n128__ce";
+    let exe = trainer.executable(artifact).unwrap();
+    let seed = 2024u64;
+    let (statics, entries) = trainer
+        .make_statics(&exe.meta, seed, EntryBias::None)
+        .unwrap();
+    let (rows, cols) = entries.unwrap();
+
+    // random trained-ish coefficients
+    let mut rng = Rng::new(8);
+    let n = exe.meta.method.n;
+    let coeffs = Tensor::f32(&[n], rng.normal_vec(n, 0.5));
+    let alpha = 16.0f32;
+
+    // Path A: adapter active on the device.
+    let (base_hlo, base_meta) = trainer.registry.base_init("mlp").unwrap();
+    let base_lits = fourier_peft::runtime::exec::run_base_init(&trainer.client, &base_hlo, 5).unwrap();
+    let mut state = exe.init_state(0, base_lits, statics.clone()).unwrap();
+    let mut adapt: std::collections::HashMap<String, Tensor> = exe
+        .adapt_tensors(&state)
+        .unwrap()
+        .into_iter()
+        .collect();
+    adapt.insert("spec.w2.w.c".into(), coeffs.clone());
+    exe.set_adapt(&mut state, &adapt).unwrap();
+    let pts = fourier_peft::data::blobs::dataset(64, 0.35, 4);
+    let batch = fourier_peft::data::blobs::collate(&pts);
+    let out_a = exe.eval(&mut state, alpha, &batch).unwrap();
+
+    // Path B: merge ΔW into w2.w host-side, zero the adapter coefficients.
+    let base_lits2 = fourier_peft::runtime::exec::run_base_init(&trainer.client, &base_hlo, 5).unwrap();
+    let mut base_map: std::collections::BTreeMap<String, Tensor> = base_meta
+        .iter()
+        .zip(&base_lits2)
+        .map(|(m, l)| (m.name.clone(), fourier_peft::runtime::from_literal(l).unwrap()))
+        .collect();
+    let adapter_file = AdapterFile {
+        kind: AdapterKind::FourierFt,
+        seed,
+        alpha,
+        meta: vec![("n".into(), n.to_string())],
+        tensors: vec![("spec.w2.w.c".into(), coeffs.clone())],
+    };
+    fourier_peft::adapter::merge::merge_into_base(&adapter_file, &mut base_map).unwrap();
+    // sanity: merged weight actually differs from the original
+    let delta = delta_host(&coeffs, seed, n, 64, 64, alpha).unwrap();
+    assert!(delta.frob_norm() > 1e-3);
+    let _ = (&rows, &cols);
+
+    let merged_lits: Vec<xla::Literal> = base_meta
+        .iter()
+        .map(|m| fourier_peft::runtime::to_literal(&base_map[&m.name]).unwrap())
+        .collect();
+    let mut state_b = exe.init_state(0, merged_lits, statics).unwrap();
+    adapt.insert("spec.w2.w.c".into(), Tensor::zeros(&[n]));
+    exe.set_adapt(&mut state_b, &adapt).unwrap();
+    let out_b = exe.eval(&mut state_b, alpha, &batch).unwrap();
+
+    let diff = out_a.logits.max_abs_diff(&out_b.logits).unwrap();
+    assert!(diff < 1e-2, "adapter-forward vs merged-forward logits differ by {diff}");
+}

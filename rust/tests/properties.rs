@@ -1,0 +1,241 @@
+//! Property-based tests over the rust substrates (hand-rolled generators —
+//! the offline vendor set has no proptest). Each property runs across many
+//! random cases from a seeded stream, and failures print the case seed.
+
+use fourier_peft::adapter::budget;
+use fourier_peft::fourier::{idft2_real_sparse, idft2_real_sparse_fft, sample_entries, EntryBias};
+use fourier_peft::metrics::{classify, nlg};
+use fourier_peft::tensor::{linalg, rng::Rng, Tensor};
+
+fn cases(n: usize) -> impl Iterator<Item = u64> {
+    let mut rng = Rng::new(0x9E3779B9);
+    (0..n).map(move |_| rng.next_u64())
+}
+
+/// IDFT linearity: reconstruct(c1 + c2) == reconstruct(c1) + reconstruct(c2).
+#[test]
+fn prop_idft_is_linear() {
+    for seed in cases(20) {
+        let mut rng = Rng::new(seed);
+        let d1 = 8 + rng.below(48);
+        let d2 = 8 + rng.below(48);
+        let n = 1 + rng.below((d1 * d2).min(64));
+        let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, seed);
+        let c1 = rng.normal_vec(n, 1.0);
+        let c2 = rng.normal_vec(n, 1.0);
+        let sum: Vec<f32> = c1.iter().zip(&c2).map(|(a, b)| a + b).collect();
+        let r1 = idft2_real_sparse((&rows, &cols), &c1, d1, d2, 3.0);
+        let r2 = idft2_real_sparse((&rows, &cols), &c2, d1, d2, 3.0);
+        let rs = idft2_real_sparse((&rows, &cols), &sum, d1, d2, 3.0);
+        for i in 0..d1 * d2 {
+            assert!((r1[i] + r2[i] - rs[i]).abs() < 1e-4, "seed {seed} idx {i}");
+        }
+    }
+}
+
+/// The two IDFT implementations agree on random shapes (incl. non-pow2).
+#[test]
+fn prop_idft_implementations_agree() {
+    for seed in cases(15) {
+        let mut rng = Rng::new(seed);
+        let d1 = 4 + rng.below(60);
+        let d2 = 4 + rng.below(60);
+        let n = 1 + rng.below((d1 * d2).min(50));
+        let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, seed ^ 1);
+        let c = rng.normal_vec(n, 2.0);
+        let a = idft2_real_sparse((&rows, &cols), &c, d1, d2, 1.5);
+        let b = idft2_real_sparse_fft((&rows, &cols), &c, d1, d2, 1.5);
+        let max = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        assert!(max < 1e-4, "seed {seed} d=({d1},{d2}) n={n}: diff {max}");
+    }
+}
+
+/// Reconstruction norm bound: |alpha * Re(IDFT2(F))|_F <= alpha |c| / sqrt(d1 d2).
+#[test]
+fn prop_reconstruction_norm_bounded() {
+    for seed in cases(20) {
+        let mut rng = Rng::new(seed);
+        let d = 16 + rng.below(48);
+        let n = 1 + rng.below(32);
+        let (rows, cols) = sample_entries(d, d, n, EntryBias::None, seed ^ 2);
+        let c = rng.normal_vec(n, 1.0);
+        let alpha = 2.0f32;
+        let rec = idft2_real_sparse((&rows, &cols), &c, d, d, alpha);
+        let rec_norm: f32 = rec.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let c_norm: f32 = c.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let bound = alpha * c_norm / (d as f32) + 1e-4;
+        assert!(rec_norm <= bound, "seed {seed}: {rec_norm} > {bound}");
+    }
+}
+
+/// QR orthogonality holds for random matrices of varying size.
+#[test]
+fn prop_qr_orthogonal() {
+    for seed in cases(8) {
+        let mut rng = Rng::new(seed);
+        let n = 4 + rng.below(28);
+        let a = Tensor::f32(&[n, n], rng.normal_vec(n * n, 1.0));
+        let q = linalg::qr_q(&a).unwrap();
+        let qtq = linalg::matmul(&linalg::transpose(&q).unwrap(), &q).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (qtq.at2(i, j) - want).abs() < 1e-3,
+                    "seed {seed} n={n} ({i},{j})"
+                );
+            }
+        }
+    }
+}
+
+/// Every NLG metric is maximized by the reference itself across random
+/// corpora, and bounded by its scale.
+#[test]
+fn prop_nlg_reference_dominates() {
+    for seed in cases(10) {
+        let mut rng = Rng::new(seed);
+        let docs = 4 + rng.below(6);
+        let mut refs = Vec::new();
+        let mut perfect = Vec::new();
+        let mut noisy = Vec::new();
+        for _ in 0..docs {
+            let len = 5 + rng.below(8);
+            let r: Vec<i32> = (0..len).map(|_| rng.below(40) as i32 + 1).collect();
+            let mut h = r.clone();
+            for t in h.iter_mut() {
+                if rng.chance(0.4) {
+                    *t = rng.below(40) as i32 + 1;
+                }
+            }
+            perfect.push(r.clone());
+            noisy.push(h);
+            refs.push(vec![r]);
+        }
+        let p = nlg::score_all(&perfect, &refs);
+        let q = nlg::score_all(&noisy, &refs);
+        assert!(p.bleu >= q.bleu - 1e-9, "seed {seed} bleu");
+        assert!(p.rouge_l >= q.rouge_l - 1e-9, "seed {seed} rouge");
+        assert!(p.meteor >= q.meteor - 1e-9, "seed {seed} meteor");
+        assert!(p.cider >= q.cider - 1e-9, "seed {seed} cider");
+        assert!(p.bleu <= 100.0 + 1e-9 && p.meteor <= 100.0 + 1e-9);
+    }
+}
+
+/// Accuracy is permutation-invariant; inverting binary predictions negates
+/// the Matthews correlation.
+#[test]
+fn prop_classify_metric_invariances() {
+    for seed in cases(15) {
+        let mut rng = Rng::new(seed);
+        let n = 10 + rng.below(100);
+        let pred: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        let label: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        let acc = classify::accuracy(&pred, &label);
+        assert!((0.0..=1.0).contains(&acc));
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let pred_p: Vec<i32> = idx.iter().map(|&i| pred[i]).collect();
+        let label_p: Vec<i32> = idx.iter().map(|&i| label[i]).collect();
+        assert!((classify::accuracy(&pred_p, &label_p) - acc).abs() < 1e-12);
+        let inv: Vec<i32> = pred.iter().map(|p| 1 - p).collect();
+        let mcc = classify::matthews(&pred, &label);
+        let mcc_inv = classify::matthews(&inv, &label);
+        assert!((mcc + mcc_inv).abs() < 1e-9, "seed {seed}: {mcc} vs {mcc_inv}");
+    }
+}
+
+/// Budget arithmetic: LoRA's count is linear in width d; FourierFT's does
+/// not depend on d at all (the paper's §3.2 scaling argument).
+#[test]
+fn prop_budget_scaling_structure() {
+    for seed in cases(10) {
+        let mut rng = Rng::new(seed);
+        let d1 = 64 + rng.below(1024);
+        let d2 = d1 * 2;
+        let layers = 2 + rng.below(64);
+        let r = 1 + rng.below(64);
+        let n = 16 + rng.below(4096);
+        assert_eq!(
+            budget::lora_params(d2, layers, r),
+            2 * budget::lora_params(d1, layers, r)
+        );
+        assert_eq!(budget::fourierft_params(n, layers), n * layers);
+        assert_eq!(budget::fourierft_stored(n, layers), n * (2 + layers));
+    }
+}
+
+/// Spearman is invariant under strictly monotone transforms.
+#[test]
+fn prop_spearman_monotone_invariant() {
+    for seed in cases(10) {
+        let mut rng = Rng::new(seed);
+        let n = 5 + rng.below(50);
+        let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let b_cubed: Vec<f32> = b.iter().map(|x| x.powi(3)).collect();
+        let s1 = linalg::spearman(&a, &b);
+        let s2 = linalg::spearman(&a, &b_cubed);
+        assert!((s1 - s2).abs() < 1e-9, "seed {seed}: {s1} vs {s2}");
+    }
+}
+
+/// Entry sampling: distinct, in range, deterministic for any (d, n, bias).
+#[test]
+fn prop_entry_sampling_valid() {
+    for seed in cases(12) {
+        let mut rng = Rng::new(seed);
+        let d1 = 8 + rng.below(120);
+        let d2 = 8 + rng.below(120);
+        let n = 1 + rng.below((d1 * d2) / 2);
+        let bias = if rng.chance(0.5) {
+            EntryBias::None
+        } else {
+            EntryBias::BandPass { fc: rng.f64() * d1 as f64, w: 5.0 + rng.f64() * 50.0 }
+        };
+        let (rows, cols) = sample_entries(d1, d2, n, bias, seed);
+        let again = sample_entries(d1, d2, n, bias, seed);
+        assert_eq!((rows.clone(), cols.clone()), again, "determinism seed {seed}");
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..n {
+            assert!((rows[i] as usize) < d1 && (cols[i] as usize) < d2);
+            assert!(seen.insert((rows[i], cols[i])), "dup entry seed {seed}");
+        }
+    }
+}
+
+/// Adapter file round-trip survives random contents.
+#[test]
+fn prop_adapter_format_roundtrip() {
+    use fourier_peft::adapter::{AdapterFile, AdapterKind};
+    for seed in cases(10) {
+        let mut rng = Rng::new(seed);
+        let n_tensors = 1 + rng.below(6);
+        let tensors: Vec<(String, Tensor)> = (0..n_tensors)
+            .map(|i| {
+                let rank = 1 + rng.below(3);
+                let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(16)).collect();
+                let numel: usize = shape.iter().product();
+                if rng.chance(0.3) {
+                    (format!("t{i}"), Tensor::i32(&shape, (0..numel as i32).collect()))
+                } else {
+                    (format!("t{i}"), Tensor::f32(&shape, rng.normal_vec(numel, 1.0)))
+                }
+            })
+            .collect();
+        let file = AdapterFile {
+            kind: AdapterKind::FourierFt,
+            seed,
+            alpha: rng.f32() * 300.0,
+            meta: vec![("k".into(), format!("v{seed}"))],
+            tensors,
+        };
+        let path = std::env::temp_dir().join(format!("fp_prop_{seed}.adapter"));
+        file.save(&path).unwrap();
+        let back = AdapterFile::load(&path).unwrap();
+        assert_eq!(file.tensors, back.tensors, "seed {seed}");
+        assert_eq!(file.alpha, back.alpha);
+        assert_eq!(std::fs::metadata(&path).unwrap().len() as usize, file.byte_size());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

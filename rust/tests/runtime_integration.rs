@@ -1,0 +1,213 @@
+//! End-to-end runtime integration: rust loads the AOT HLO artifacts built
+//! by `make artifacts`, runs init + train steps on the PJRT CPU client, and
+//! cross-checks the L1 Pallas kernel against the rust-native IDFT.
+//!
+//! These tests require `artifacts/` to exist (they are the proof that the
+//! three layers compose); they fail loudly with a pointer to
+//! `make artifacts` otherwise.
+
+use fourier_peft::fourier::{idft2_real_sparse, sample_entries, EntryBias};
+use fourier_peft::runtime::{exec, Client, Executable, Registry};
+use fourier_peft::tensor::{rng::Rng, Tensor};
+use std::collections::HashMap;
+
+fn setup() -> (Client, Registry) {
+    let dir = fourier_peft::artifacts_dir();
+    let reg = Registry::open(&dir).expect("run `make artifacts` first");
+    let client = Client::cpu().expect("PJRT CPU client");
+    (client, reg)
+}
+
+fn mlp_batch(rng: &mut Rng, b: usize) -> HashMap<String, Tensor> {
+    // 8 Gaussian blobs on a circle (the Figure 7 dataset).
+    let mut x = Vec::with_capacity(b * 2);
+    let mut y = Vec::with_capacity(b);
+    for _ in 0..b {
+        let c = rng.below(8);
+        let ang = 2.0 * std::f32::consts::PI * c as f32 / 8.0;
+        x.push(ang.cos() * 2.0 + 0.3 * rng.normal());
+        x.push(ang.sin() * 2.0 + 0.3 * rng.normal());
+        y.push(c as i32);
+    }
+    HashMap::from([
+        ("x".to_string(), Tensor::f32(&[b, 2], x)),
+        ("y".to_string(), Tensor::i32(&[b], y)),
+    ])
+}
+
+#[test]
+fn mlp_fourierft_trains_end_to_end() {
+    let (client, reg) = setup();
+    let meta = reg.find("mlp", "fourierft_n128", "ce").unwrap();
+    let exe = Executable::load(&client, &reg.dir, meta).unwrap();
+
+    // Base params from the base-init artifact; E sampled host-side.
+    let (base_hlo, _) = reg.base_init("mlp").unwrap();
+    let base = exec::run_base_init(&client, &base_hlo, 7).unwrap();
+    let (rows, cols) = sample_entries(64, 64, 128, EntryBias::None, 2024);
+    let mut e_data: Vec<i32> = rows.clone();
+    e_data.extend(&cols);
+    let entries = Tensor::i32(&[2, 128], e_data);
+    let statics = vec![fourier_peft::runtime::to_literal(&entries).unwrap()];
+
+    let mut state = exe.init_state(3, base, statics).unwrap();
+    let mut rng = Rng::new(5);
+    let scal = exec::StepScalars { step: 1.0, lr: 0.01, lr_head: 0.01, wd: 0.0, scaling: 64.0 };
+
+    let first = exe
+        .step(&mut state, exec::StepScalars { step: 1.0, ..scal }, &mlp_batch(&mut rng, 64))
+        .unwrap();
+    let mut last = first.loss;
+    for t in 2..=60 {
+        let out = exe
+            .step(
+                &mut state,
+                exec::StepScalars { step: t as f32, ..scal },
+                &mlp_batch(&mut rng, 64),
+            )
+            .unwrap();
+        last = out.loss;
+    }
+    assert!(first.loss.is_finite() && last.is_finite());
+    assert!(
+        last < first.loss * 0.6,
+        "loss did not decrease: first={} last={last}",
+        first.loss
+    );
+}
+
+#[test]
+fn eval_is_side_effect_free_and_lr0_preserves_adapt() {
+    let (client, reg) = setup();
+    let meta = reg.find("mlp", "lora_r1", "ce").unwrap();
+    let exe = Executable::load(&client, &reg.dir, meta).unwrap();
+    let (base_hlo, _) = reg.base_init("mlp").unwrap();
+    let base = exec::run_base_init(&client, &base_hlo, 1).unwrap();
+    let mut state = exe.init_state(2, base, vec![]).unwrap();
+    let mut rng = Rng::new(9);
+    let batch = mlp_batch(&mut rng, 64);
+
+    let before = exe.adapt_tensors(&state).unwrap();
+    let out1 = exe.eval(&mut state, 2.0, &batch).unwrap();
+    let out2 = exe.eval(&mut state, 2.0, &batch).unwrap();
+    let after = exe.adapt_tensors(&state).unwrap();
+
+    assert_eq!(out1.loss, out2.loss, "eval must be deterministic");
+    for ((k1, t1), (k2, t2)) in before.iter().zip(after.iter()) {
+        assert_eq!(k1, k2);
+        assert_eq!(t1, t2, "adapt tensor {k1} changed during eval");
+    }
+}
+
+#[test]
+fn pallas_delta_artifact_matches_rust_idft() {
+    // Three-way agreement: L1 Pallas kernel (inside delta_*.hlo.txt, built
+    // by jax) vs the rust-native rank-n trig IDFT. Tolerance is f32-level.
+    let (client, reg) = setup();
+    let (d, n) = (64, 128);
+    let hlo = reg.delta_hlo(d, n).unwrap();
+    let exe = client.load_hlo(&hlo).unwrap();
+
+    let (rows, cols) = sample_entries(d, d, n, EntryBias::None, 42);
+    let mut rng = Rng::new(11);
+    let coeffs = rng.normal_vec(n, 1.0);
+    let alpha = 150.0f32;
+
+    let mut e_data = rows.clone();
+    e_data.extend(&cols);
+    let args = [
+        fourier_peft::runtime::to_literal(&Tensor::i32(&[2, n], e_data)).unwrap(),
+        fourier_peft::runtime::to_literal(&Tensor::f32(&[n], coeffs.clone())).unwrap(),
+        fourier_peft::runtime::to_literal(&Tensor::scalar(alpha)).unwrap(),
+    ];
+    let out = exe.execute::<xla::Literal>(&args).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap()
+        .to_tuple1()
+        .unwrap();
+    let got = out.to_vec::<f32>().unwrap();
+
+    let want = idft2_real_sparse((&rows, &cols), &coeffs, d, d, alpha);
+    let max_diff = got
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "pallas vs rust IDFT max diff {max_diff}");
+}
+
+#[test]
+fn encoder_fourierft_artifact_runs_and_learns() {
+    let (client, reg) = setup();
+    let meta = reg.find("enc_base", "fourierft_n64", "ce").unwrap();
+    let exe = Executable::load(&client, &reg.dir, meta).unwrap();
+    let (base_hlo, _) = reg.base_init("enc_base").unwrap();
+    let base = exec::run_base_init(&client, &base_hlo, 0).unwrap();
+
+    let (rows, cols) = sample_entries(128, 128, 64, EntryBias::None, 2024);
+    let mut e_data = rows;
+    e_data.extend(cols);
+    let statics =
+        vec![fourier_peft::runtime::to_literal(&Tensor::i32(&[2, 64], e_data)).unwrap()];
+    let mut state = exe.init_state(1, base, statics).unwrap();
+
+    // Overfit one fixed batch (label = first token mod 3): loss on the same
+    // batch must drop substantially — adapter + head have ample capacity.
+    let mut rng = Rng::new(3);
+    let (b, t) = (meta.model.batch, meta.model.seqlen);
+    let x: Vec<i32> = (0..b * t).map(|_| rng.below(1000) as i32).collect();
+    let y: Vec<i32> = (0..b).map(|i| x[i * t] % 3).collect();
+    let batch = HashMap::from([
+        ("x".to_string(), Tensor::i32(&[b, t], x)),
+        ("y".to_string(), Tensor::i32(&[b], y)),
+    ]);
+    let scaling = 16.0;
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for step in 1..=40 {
+        let out = exe
+            .step(
+                &mut state,
+                exec::StepScalars { step: step as f32, lr: 0.02, lr_head: 0.005, wd: 0.0, scaling },
+                &batch,
+            )
+            .unwrap();
+        if step == 1 {
+            first = out.loss;
+        }
+        last = out.loss;
+        assert!(out.loss.is_finite(), "step {step} loss not finite");
+    }
+    assert!(
+        last < first * 0.7,
+        "encoder loss did not improve: {first} -> {last}"
+    );
+}
+
+#[test]
+fn registry_covers_every_table() {
+    let (_, reg) = setup();
+    // Spot-check that the artifact families each experiment needs exist.
+    for name in [
+        "mlp__fourierft_n128__ce",     // Figure 7
+        "mlp__lora_r1__ce",            // Figure 7
+        "enc_base__ff__mlm",           // pretraining
+        "enc_base__lora_r8__ce",       // Table 2
+        "enc_base__fourierft_n64__ce", // Table 2
+        "enc_base__randbasis_n64__ce", // Table 6
+        "enc_base__orthobasis_n64__ce",
+        "enc_base__fourierft_n64__mse", // STS-B
+        "dec_med__fourierft_n64__lm",   // Table 3 / 4
+        "vit_base__fourierft_n96__ce",  // Table 5
+        "vit_base__lp__ce",
+    ] {
+        assert!(reg.meta(name).is_ok(), "missing artifact {name}");
+    }
+    // Fig 4 grids fully present.
+    for r in [1, 2, 4, 6, 8, 15] {
+        assert!(reg.find("enc_base", &format!("lora_r{r}"), "ce").is_ok());
+    }
+    for n in [16, 32, 64, 256, 1024, 2048] {
+        assert!(reg.find("enc_base", &format!("fourierft_n{n}"), "ce").is_ok());
+    }
+}
