@@ -12,12 +12,14 @@
 //! Both paths agree to f32 tolerance (asserted in tests/adapter_roundtrip).
 
 use super::format::{AdapterFile, AdapterKind};
-use crate::fourier::{idft2_real_sparse, sample_entries, EntryBias};
-use crate::runtime::{from_literal, to_literal, Client, Registry};
+use crate::fourier::{plan, sample_entries, EntryBias};
+use crate::runtime::{from_literal, to_literal, xla, Client, Registry};
 use crate::tensor::{linalg, Tensor};
 use anyhow::{anyhow, bail, Result};
 
-/// Reconstruct ΔW for one FourierFT site host-side.
+/// Reconstruct ΔW for one FourierFT site host-side, via the process-wide
+/// GEMM plan cache (twiddle tables built once per (d1, d2, entries) and
+/// shared across sites, merges, and serve-time swaps).
 pub fn delta_host(
     coeffs: &Tensor,
     seed: u64,
@@ -29,7 +31,8 @@ pub fn delta_host(
     let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, seed);
     let c = coeffs.as_f32()?;
     anyhow::ensure!(c.len() == n, "coeff len {} != n {n}", c.len());
-    Ok(Tensor::f32(&[d1, d2], idft2_real_sparse((&rows, &cols), c, d1, d2, alpha)))
+    let p = plan::global().get((&rows, &cols), d1, d2)?;
+    Ok(Tensor::f32(&[d1, d2], p.reconstruct(c, alpha)?))
 }
 
 /// Reconstruct ΔW on device via the AOT artifact (same Pallas kernel as
@@ -65,17 +68,24 @@ pub fn delta_lora(a: &Tensor, b: &Tensor, scaling: f32) -> Result<Tensor> {
     Ok(out)
 }
 
-/// Merge a saved adapter into a named set of base weights, host-side.
+/// Reconstruct the per-site ΔW set of a whole adapter file, host-side.
 ///
-/// `base` maps base tensor name -> weight; the adapter tensor names encode
-/// the target site: `spec.<site>.c` (fourierft), `lora.<site>.{a,b}`,
-/// `delta.<site>` (dense / bitfit). Head tensors (`head.*`) are returned
-/// separately — they replace rather than add.
-pub fn merge_into_base(
+/// The adapter tensor names encode the target site: `spec.<site>.c`
+/// (fourierft, reconstructed through the global GEMM plan cache via
+/// [`delta_host`]), `lora.<site>.{a,b}`, `delta.<site>` (dense / bitfit).
+/// `dims` maps a site name to its (d1, d2) weight shape (needed for the
+/// spectral kinds); `head.*` tensors are skipped — they replace rather
+/// than add and are handled by the merge/serve callers.
+///
+/// This is the single reconstruction dispatch shared by
+/// [`merge_into_base`] and the serving swap cache
+/// (`coordinator::serving::SwapCache`), so both paths agree on adapter
+/// grammar by construction.
+pub fn site_deltas(
     adapter: &AdapterFile,
-    base: &mut std::collections::BTreeMap<String, Tensor>,
+    dims: &dyn Fn(&str) -> Option<(usize, usize)>,
 ) -> Result<Vec<(String, Tensor)>> {
-    let mut heads = Vec::new();
+    let mut out = Vec::new();
     match adapter.kind {
         AdapterKind::FourierFt => {
             let n: usize = adapter
@@ -85,55 +95,67 @@ pub fn merge_into_base(
             for (name, t) in &adapter.tensors {
                 if let Some(rest) = name.strip_prefix("spec.") {
                     let site = rest.strip_suffix(".c").unwrap_or(rest);
-                    let w = base
-                        .get_mut(site)
-                        .ok_or_else(|| anyhow!("base missing site {site}"))?;
-                    let (d1, d2) = (w.shape[0], w.shape[1]);
-                    let delta = delta_host(t, adapter.seed, n, d1, d2, adapter.alpha)?;
-                    w.add_assign(&delta)?;
-                } else if name.starts_with("head.") {
-                    heads.push((name.clone(), t.clone()));
+                    let (d1, d2) = dims(site)
+                        .ok_or_else(|| anyhow!("unknown adapter site '{site}'"))?;
+                    out.push((
+                        site.to_string(),
+                        delta_host(t, adapter.seed, n, d1, d2, adapter.alpha)?,
+                    ));
                 }
             }
         }
         AdapterKind::Lora => {
             // pair up a/b by site
             for (name, a_t) in &adapter.tensors {
-                if let Some(rest) = name.strip_prefix("lora.") {
-                    if let Some(site) = rest.strip_suffix(".a") {
-                        let b_name = format!("lora.{site}.b");
-                        let b_t = adapter
-                            .tensors
-                            .iter()
-                            .find(|(n2, _)| n2 == &b_name)
-                            .map(|(_, t)| t)
-                            .ok_or_else(|| anyhow!("missing {b_name}"))?;
-                        let w = base
-                            .get_mut(site)
-                            .ok_or_else(|| anyhow!("base missing site {site}"))?;
-                        w.add_assign(&delta_lora(a_t, b_t, adapter.alpha)?)?;
-                    }
-                } else if name.starts_with("head.") {
-                    heads.push((name.clone(), a_t.clone()));
+                if let Some(site) = name.strip_prefix("lora.").and_then(|r| r.strip_suffix(".a"))
+                {
+                    let b_name = format!("lora.{site}.b");
+                    let b_t = adapter
+                        .tensors
+                        .iter()
+                        .find(|(n2, _)| n2 == &b_name)
+                        .map(|(_, t)| t)
+                        .ok_or_else(|| anyhow!("missing {b_name}"))?;
+                    out.push((site.to_string(), delta_lora(a_t, b_t, adapter.alpha)?));
                 }
             }
         }
         AdapterKind::DenseDelta | AdapterKind::BitFit => {
             for (name, t) in &adapter.tensors {
                 if let Some(site) = name.strip_prefix("delta.") {
-                    let w = base
-                        .get_mut(site)
-                        .ok_or_else(|| anyhow!("base missing site {site}"))?;
-                    w.add_assign(t)?;
-                } else if name.starts_with("head.") {
-                    heads.push((name.clone(), t.clone()));
-                } else {
+                    out.push((site.to_string(), t.clone()));
+                } else if !name.starts_with("head.") {
                     bail!("unexpected tensor {name} in dense adapter");
                 }
             }
         }
     }
-    Ok(heads)
+    Ok(out)
+}
+
+/// Merge a saved adapter into a named set of base weights, host-side.
+///
+/// `base` maps base tensor name -> weight. ΔW per site comes from
+/// [`site_deltas`]; head tensors (`head.*`) are returned separately —
+/// they replace rather than add.
+pub fn merge_into_base(
+    adapter: &AdapterFile,
+    base: &mut std::collections::BTreeMap<String, Tensor>,
+) -> Result<Vec<(String, Tensor)>> {
+    let deltas = site_deltas(adapter, &|site| {
+        base.get(site).filter(|w| w.shape.len() == 2).map(|w| (w.shape[0], w.shape[1]))
+    })?;
+    for (site, delta) in deltas {
+        base.get_mut(&site)
+            .ok_or_else(|| anyhow!("base missing site {site}"))?
+            .add_assign(&delta)?;
+    }
+    Ok(adapter
+        .tensors
+        .iter()
+        .filter(|(name, _)| name.starts_with("head."))
+        .cloned()
+        .collect())
 }
 
 #[cfg(test)]

@@ -50,7 +50,8 @@ impl AdapterStore {
         Ok(adapter.byte_size())
     }
 
-    /// Load an adapter, via the LRU cache.
+    /// Load an adapter, via the LRU cache. A hit returns the decoded file
+    /// with no disk I/O; a miss reads + decodes from disk and caches.
     pub fn load(&mut self, name: &str) -> Result<AdapterFile> {
         if let Some(a) = self.cache.get(name) {
             self.hits += 1;
@@ -63,6 +64,23 @@ impl AdapterStore {
             .map_err(|e| anyhow!("adapter '{name}': {e}"))?;
         self.touch(name, a.clone());
         Ok(a)
+    }
+
+    /// Disk reads performed so far (every cache miss is one).
+    pub fn disk_reads(&self) -> u64 {
+        self.misses
+    }
+
+    /// True if `name` is resident in the decode cache.
+    pub fn cached(&self, name: &str) -> bool {
+        self.cache.contains_key(name)
+    }
+
+    /// Drop `name` from the decode cache (e.g. after an external writer
+    /// replaced the file); the next `load` re-reads from disk.
+    pub fn invalidate(&mut self, name: &str) {
+        self.cache.remove(name);
+        self.cache_order.retain(|n| n != name);
     }
 
     fn bump(&mut self, name: &str) {
@@ -167,5 +185,19 @@ mod tests {
     fn missing_adapter_is_an_error() {
         let mut store = AdapterStore::open(&tmp("d")).unwrap();
         assert!(store.load("nope").is_err());
+    }
+
+    #[test]
+    fn invalidate_forces_a_disk_reread() {
+        let mut store = AdapterStore::open(&tmp("e")).unwrap();
+        store.save("x", &adapter(8)).unwrap();
+        assert!(store.cached("x"));
+        let before = store.disk_reads();
+        store.load("x").unwrap();
+        assert_eq!(store.disk_reads(), before, "cached load must not touch disk");
+        store.invalidate("x");
+        assert!(!store.cached("x"));
+        store.load("x").unwrap();
+        assert_eq!(store.disk_reads(), before + 1);
     }
 }

@@ -9,7 +9,7 @@
 use super::trainer::{Batch, FinetuneCfg, Trainer};
 use crate::adapter::format::{AdapterFile, AdapterKind};
 use crate::data::{collate_img, collate_lm, corpus, vision};
-use crate::runtime::{from_literal, to_literal};
+use crate::runtime::{from_literal, to_literal, xla};
 use crate::tensor::{rng::Rng, Tensor};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
@@ -57,7 +57,7 @@ pub fn load_or_init_base(trainer: &Trainer, model: &str) -> Result<Vec<xla::Lite
         return Ok(init);
     }
     eprintln!("[pretrain] no cached base for {model}; pretraining...");
-    let base = pretrain(trainer, model)?;
+    pretrain(trainer, model)?;
     // reload via the cache we just wrote
     load_or_init_base(trainer, model)
 }

@@ -4,18 +4,36 @@
 //!
 //! The router groups a request queue by adapter, hot-swaps adapter tensors
 //! into the device state (base stays resident), executes batched forwards,
-//! and reports per-adapter latency plus swap-overhead accounting. The
-//! experiment `bench serving` (micro bench) contrasts FourierFT's swap
+//! and reports per-adapter latency plus swap-overhead accounting.
+//!
+//! Swap cost is three layers of cache, so the steady state is a pair of
+//! `HashMap` lookups instead of disk-read + decode + inverse DFT:
+//!
+//! 1. [`crate::adapter::AdapterStore`] — LRU of decoded `.adapter` files
+//!    (no disk I/O or decode on a warm swap),
+//! 2. [`SwapCache::adapt_tensors`] — device-form tensor sets per adapter
+//!    name (no per-swap re-collation),
+//! 3. [`SwapCache::deltas`] — reconstructed per-site ΔW per adapter name,
+//!    built through the process-wide GEMM plan cache
+//!    ([`crate::fourier::plan::global`]) for the merge/export path (no
+//!    IDFT recompute on a warm swap; twiddle tables shared across
+//!    adapters with the same entry matrix).
+//!
+//! [`Server::publish`] invalidates every layer for the republished name.
+//! The experiment `bench serving` (micro bench) contrasts FourierFT's swap
 //! cost (n floats/site + IDFT) against LoRA's (2dr floats/site + matmul)
-//! and dense deltas (d^2 floats/site).
+//! and dense deltas (d^2 floats/site), and `serving/swap_cached/*` rows
+//! measure the cold/warm asymmetry of this cache stack.
 
 use super::trainer::{Batch, Trainer};
 use crate::adapter::format::AdapterFile;
+use crate::adapter::merge::site_deltas;
 use crate::adapter::store::AdapterStore;
 use crate::runtime::exec::ParamSet;
 use crate::tensor::Tensor;
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// One inference request against a named adapter.
@@ -32,8 +50,15 @@ pub struct ServeStats {
     pub requests: usize,
     pub batches: usize,
     pub swaps: usize,
+    /// Swaps served entirely from the cache stack (no disk read).
+    pub warm_swaps: usize,
     pub swap_seconds: f64,
     pub exec_seconds: f64,
+    /// Adapter files read + decoded from disk during this call. (ΔW
+    /// reconstruction accounting lives in [`SwapCacheStats`]: the serve
+    /// path hot-swaps spectral tensors and never builds ΔW; only the
+    /// merge/export path via [`Server::merged_deltas`] does.)
+    pub disk_reads: u64,
     pub per_adapter: Vec<(String, usize)>,
 }
 
@@ -48,11 +73,129 @@ impl ServeStats {
     }
 }
 
-/// A server: one artifact family + its device state + an adapter store.
+/// Cache counters for [`SwapCache`].
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SwapCacheStats {
+    pub tensor_hits: u64,
+    pub tensor_builds: u64,
+    pub delta_hits: u64,
+    pub delta_builds: u64,
+}
+
+/// Per-adapter swap state, keyed by adapter name: device-form tensor sets
+/// and reconstructed ΔW sets, LRU-bounded on distinct adapter names (the
+/// ΔW set is sites × d1 × d2 floats — far larger than the adapter file —
+/// so the cap matters for Civitai-scale registries). Pure host code —
+/// usable (and tested) without the XLA runtime; [`Server`] wires it to
+/// the device executor.
+pub struct SwapCache {
+    /// Adapted site name -> (d1, d2) weight dims, from the artifact meta.
+    site_dims: BTreeMap<String, (usize, usize)>,
+    tensors: HashMap<String, Arc<HashMap<String, Tensor>>>,
+    deltas: HashMap<String, Arc<Vec<(String, Tensor)>>>,
+    /// LRU order over adapter names, most-recently-used last.
+    order: Vec<String>,
+    cap: usize,
+    pub stats: SwapCacheStats,
+}
+
+impl SwapCache {
+    pub fn new(site_dims: BTreeMap<String, (usize, usize)>) -> SwapCache {
+        SwapCache::with_cap(site_dims, 64)
+    }
+
+    /// Cap the number of distinct adapter names resident at once.
+    pub fn with_cap(site_dims: BTreeMap<String, (usize, usize)>, cap: usize) -> SwapCache {
+        SwapCache {
+            site_dims,
+            tensors: HashMap::new(),
+            deltas: HashMap::new(),
+            order: Vec::new(),
+            cap: cap.max(1),
+            stats: SwapCacheStats::default(),
+        }
+    }
+
+    /// Mark `name` most-recently-used, evicting the coldest name (both
+    /// cache layers) if a new name exceeds the cap.
+    fn touch(&mut self, name: &str) {
+        if let Some(pos) = self.order.iter().position(|n| n == name) {
+            let n = self.order.remove(pos);
+            self.order.push(n);
+            return;
+        }
+        if self.order.len() >= self.cap {
+            let evict = self.order.remove(0);
+            self.tensors.remove(&evict);
+            self.deltas.remove(&evict);
+        }
+        self.order.push(name.to_string());
+    }
+
+    /// Device-form adapt tensors for `name`, via the store's decode LRU
+    /// and this cache's per-name map. Warm path: two hash lookups.
+    pub fn adapt_tensors(
+        &mut self,
+        store: &mut AdapterStore,
+        name: &str,
+    ) -> Result<Arc<HashMap<String, Tensor>>> {
+        if let Some(t) = self.tensors.get(name).cloned() {
+            self.stats.tensor_hits += 1;
+            self.touch(name);
+            return Ok(t);
+        }
+        let file = store.load(name)?;
+        let t: Arc<HashMap<String, Tensor>> = Arc::new(file.tensors.into_iter().collect());
+        self.stats.tensor_builds += 1;
+        self.tensors.insert(name.to_string(), t.clone());
+        self.touch(name);
+        Ok(t)
+    }
+
+    /// Reconstructed per-site ΔW for `name` (merge/export serving path),
+    /// via [`crate::adapter::merge::site_deltas`] — the same dispatch the
+    /// offline merge uses — with site dims from the artifact meta. Cold:
+    /// decode (store LRU) + per-site reconstruction through the global
+    /// GEMM plan cache. Warm: one hash lookup, no disk, no IDFT.
+    pub fn deltas(
+        &mut self,
+        store: &mut AdapterStore,
+        name: &str,
+    ) -> Result<Arc<Vec<(String, Tensor)>>> {
+        if let Some(d) = self.deltas.get(name).cloned() {
+            self.stats.delta_hits += 1;
+            self.touch(name);
+            return Ok(d);
+        }
+        let file = store.load(name)?;
+        let d = Arc::new(site_deltas(&file, &|site| self.site_dims.get(site).copied())?);
+        self.stats.delta_builds += 1;
+        self.deltas.insert(name.to_string(), d.clone());
+        self.touch(name);
+        Ok(d)
+    }
+
+    /// Drop all cached state for `name` (republish / external overwrite).
+    pub fn invalidate(&mut self, name: &str) {
+        self.tensors.remove(name);
+        self.deltas.remove(name);
+        self.order.retain(|n| n != name);
+    }
+
+    pub fn clear(&mut self) {
+        self.tensors.clear();
+        self.deltas.clear();
+        self.order.clear();
+    }
+}
+
+/// A server: one artifact family + its device state + an adapter store +
+/// the per-adapter swap cache.
 pub struct Server<'a> {
     pub trainer: &'a Trainer,
     pub artifact: String,
     pub store: AdapterStore,
+    pub swap: SwapCache,
     state: ParamSet,
     active: Option<String>,
     scaling: f32,
@@ -72,29 +215,55 @@ impl<'a> Server<'a> {
             trainer.make_statics(&exe.meta, entry_seed, crate::fourier::EntryBias::None)?;
         let base = trainer.base_for(&exe.meta)?;
         let state = exe.init_state(0, base, statics)?;
-        Ok(Server { trainer, artifact: artifact.to_string(), store, state, active: None, scaling })
+        let site_dims = exe
+            .meta
+            .inputs_with_role("base")
+            .iter()
+            .filter(|t| t.shape.len() == 2)
+            .map(|t| (t.name.clone(), (t.shape[0], t.shape[1])))
+            .collect();
+        Ok(Server {
+            trainer,
+            artifact: artifact.to_string(),
+            store,
+            swap: SwapCache::new(site_dims),
+            state,
+            active: None,
+            scaling,
+        })
     }
 
-    /// Swap in an adapter by name (no-op if already active).
+    /// Swap in an adapter by name (no-op if already active). Warm swaps
+    /// resolve entirely from the cache stack: no disk, no decode, no IDFT.
     pub fn activate(&mut self, name: &str, stats: &mut ServeStats) -> Result<()> {
         if self.active.as_deref() == Some(name) {
             return Ok(());
         }
         let t0 = Instant::now();
-        let file = self.store.load(name)?;
+        let disk0 = self.store.disk_reads();
+        let tensors = self.swap.adapt_tensors(&mut self.store, name)?;
         let exe = self.trainer.executable(&self.artifact)?;
-        let tensors: HashMap<String, Tensor> = file.tensors.iter().cloned().collect();
         exe.set_adapt(&mut self.state, &tensors)?;
         self.active = Some(name.to_string());
         stats.swaps += 1;
+        if self.store.disk_reads() == disk0 {
+            stats.warm_swaps += 1;
+        }
         stats.swap_seconds += t0.elapsed().as_secs_f64();
         Ok(())
+    }
+
+    /// Reconstructed ΔW set for an adapter (merge/export path), through
+    /// the swap cache + global plan cache.
+    pub fn merged_deltas(&mut self, name: &str) -> Result<Arc<Vec<(String, Tensor)>>> {
+        self.swap.deltas(&mut self.store, name)
     }
 
     /// Serve a queue: group by adapter (minimizing swaps), run each batch,
     /// return logits per request id.
     pub fn serve(&mut self, queue: Vec<Request>) -> Result<(Vec<(u64, Tensor)>, ServeStats)> {
         let mut stats = ServeStats { requests: queue.len(), ..Default::default() };
+        let disk0 = self.store.disk_reads();
         // stable group-by-adapter routing
         let mut grouped: Vec<(String, Vec<Request>)> = Vec::new();
         for req in queue {
@@ -116,11 +285,13 @@ impl<'a> Server<'a> {
                 results.push((req.id, out.logits));
             }
         }
+        stats.disk_reads = self.store.disk_reads() - disk0;
         Ok((results, stats))
     }
 
     /// Persist the currently-active adapter state under a new name
-    /// (training-service path: fine-tune then publish).
+    /// (training-service path: fine-tune then publish). Invalidates every
+    /// cache layer for `name` so subsequent swaps see the new contents.
     pub fn publish(&mut self, name: &str, kind: crate::adapter::AdapterKind, seed: u64,
                    meta: Vec<(String, String)>) -> Result<usize> {
         let exe = self.trainer.executable(&self.artifact)?;
@@ -131,6 +302,10 @@ impl<'a> Server<'a> {
             meta,
             tensors: exe.adapt_tensors(&self.state)?,
         };
-        self.store.save(name, &file)
+        let bytes = self.store.save(name, &file)?;
+        // Drop per-name cache layers; the device state already holds these
+        // tensors, so an active adapter stays active.
+        self.swap.invalidate(name);
+        Ok(bytes)
     }
 }

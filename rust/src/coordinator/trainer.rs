@@ -7,7 +7,7 @@
 //! XLA compilation once.
 
 use crate::fourier::{sample_entries, EntryBias};
-use crate::runtime::{exec, to_literal, ArtifactMeta, Client, Executable, Registry};
+use crate::runtime::{exec, to_literal, xla, ArtifactMeta, Client, Executable, Registry};
 use crate::tensor::{linalg, rng::Rng, Tensor};
 use anyhow::{Context, Result};
 use std::collections::{BTreeMap, HashMap};
@@ -234,8 +234,4 @@ impl Trainer {
         }
         Ok((preds, labels, scores, targets))
     }
-}
-
-fn evals_empty(evals: &[(usize, f64)]) -> bool {
-    evals.is_empty()
 }

@@ -1,19 +1,52 @@
 //! Inverse 2D DFT reconstruction of ΔW from sparse spectral coefficients.
 //!
-//! Two independent implementations with different algorithmic structure —
-//! both are tested against each other and against the XLA artifact, so an
-//! error would have to be replicated in three formulations:
+//! Three independent implementations with different algorithmic structure —
+//! all are tested against each other and against the XLA artifact, so an
+//! error would have to be replicated in every formulation:
 //!
 //! * [`idft2_real_sparse`]: the rank-n trigonometric expansion (exactly the
-//!   math the L1 Pallas kernel runs on the MXU): O(n · d1 · d2).
+//!   math the L1 Pallas kernel runs on the MXU): O(n · d1 · d2), scalar f64.
 //! * [`idft2_real_sparse_fft`]: scatter into a dense complex spectrum, then
 //!   a radix-2/Bluestein-free row–column inverse FFT: O(d1 d2 log(d1 d2)).
 //!   (Falls back to naive column DFT for non-power-of-two dims.)
+//! * [`crate::fourier::plan::ReconstructPlan`]: the GEMM formulation — the
+//!   trig expansion factored into one (d1 × 2n)·(2n × d2) f32 matmul with
+//!   cached twiddle tables, multi-threaded via `tensor::par`. This is the
+//!   serving hot path.
 //!
-//! The crossover between the two (n ≈ log d at equal cost) is measured in
-//! `benches/micro.rs` and discussed in EXPERIMENTS.md §Perf.
+//! Entry frequencies are wrapped mod (d1, d2), so negative / out-of-range
+//! frequencies mean the same thing in every path (the DFT basis is periodic
+//! in the frequency index). The crossovers between the three are measured
+//! in `benches/micro.rs` and discussed in EXPERIMENTS.md §Perf.
 
+use anyhow::Result;
 use std::f64::consts::PI;
+
+/// Wrap a (possibly negative) frequency index into [0, d): the DFT basis
+/// e^{2πi f p / d} is periodic in f with period d for integer p.
+pub(crate) fn wrap_freq(f: i32, d: usize) -> usize {
+    debug_assert!(d > 0);
+    f.rem_euclid(d as i32) as usize
+}
+
+/// Validate one (entries, coeffs, dims) argument set; shared by all three
+/// reconstruction paths.
+pub(crate) fn check_args(
+    entries: (&[i32], &[i32]),
+    n_coeffs: usize,
+    d1: usize,
+    d2: usize,
+) -> Result<()> {
+    anyhow::ensure!(d1 > 0 && d2 > 0, "degenerate spectral grid {d1}x{d2}");
+    anyhow::ensure!(
+        entries.0.len() == n_coeffs && entries.1.len() == n_coeffs,
+        "entry matrix is {}x{} but there are {} coefficients",
+        entries.0.len(),
+        entries.1.len(),
+        n_coeffs,
+    );
+    Ok(())
+}
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Complex {
@@ -48,10 +81,9 @@ pub fn idft2_real_sparse(
     d1: usize,
     d2: usize,
     alpha: f32,
-) -> Vec<f32> {
+) -> Result<Vec<f32>> {
+    check_args(entries, coeffs.len(), d1, d2)?;
     let (js, ks) = entries;
-    assert_eq!(js.len(), coeffs.len());
-    assert_eq!(ks.len(), coeffs.len());
     let mut out = vec![0.0f64; d1 * d2];
     // Per entry: out[p, q] += c * cos(tu_p + tv_q)
     //                       = c * (cos tu_p cos tv_q - sin tu_p sin tv_q).
@@ -65,8 +97,8 @@ pub fn idft2_real_sparse(
         if c == 0.0 {
             continue;
         }
-        let wj = 2.0 * PI * js[l] as f64 / d1 as f64;
-        let wk = 2.0 * PI * ks[l] as f64 / d2 as f64;
+        let wj = 2.0 * PI * wrap_freq(js[l], d1) as f64 / d1 as f64;
+        let wk = 2.0 * PI * wrap_freq(ks[l], d2) as f64 / d2 as f64;
         for (p, (cup, sup)) in cu.iter_mut().zip(su.iter_mut()).enumerate() {
             let t = wj * p as f64;
             *cup = t.cos();
@@ -86,7 +118,7 @@ pub fn idft2_real_sparse(
         }
     }
     let scale = alpha as f64 / (d1 * d2) as f64;
-    out.iter().map(|&x| (x * scale) as f32).collect()
+    Ok(out.iter().map(|&x| (x * scale) as f32).collect())
 }
 
 /// Same reconstruction via dense scatter + row-column inverse FFT.
@@ -96,11 +128,12 @@ pub fn idft2_real_sparse_fft(
     d1: usize,
     d2: usize,
     alpha: f32,
-) -> Vec<f32> {
+) -> Result<Vec<f32>> {
+    check_args(entries, coeffs.len(), d1, d2)?;
     let (js, ks) = entries;
     let mut spec = vec![Complex::ZERO; d1 * d2];
     for l in 0..coeffs.len() {
-        spec[js[l] as usize * d2 + ks[l] as usize].re += coeffs[l] as f64;
+        spec[wrap_freq(js[l], d1) * d2 + wrap_freq(ks[l], d2)].re += coeffs[l] as f64;
     }
     // rows
     let mut row = vec![Complex::ZERO; d2];
@@ -121,7 +154,7 @@ pub fn idft2_real_sparse_fft(
         }
     }
     let scale = alpha as f64 / (d1 * d2) as f64;
-    spec.iter().map(|z| (z.re * scale) as f32).collect()
+    Ok(spec.iter().map(|z| (z.re * scale) as f32).collect())
 }
 
 /// Unnormalized inverse 1-D DFT, in place. Radix-2 Cooley–Tukey when the
@@ -194,8 +227,8 @@ mod tests {
     #[test]
     fn trig_and_fft_forms_agree_pow2() {
         let (js, ks, cs) = random_case(1, 64, 32, 40);
-        let a = idft2_real_sparse((&js, &ks), &cs, 64, 32, 3.0);
-        let b = idft2_real_sparse_fft((&js, &ks), &cs, 64, 32, 3.0);
+        let a = idft2_real_sparse((&js, &ks), &cs, 64, 32, 3.0).unwrap();
+        let b = idft2_real_sparse_fft((&js, &ks), &cs, 64, 32, 3.0).unwrap();
         let d = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
         assert!(d < 1e-5, "max diff {d}");
     }
@@ -203,8 +236,8 @@ mod tests {
     #[test]
     fn trig_and_fft_forms_agree_non_pow2() {
         let (js, ks, cs) = random_case(2, 48, 100, 64);
-        let a = idft2_real_sparse((&js, &ks), &cs, 48, 100, 1.0);
-        let b = idft2_real_sparse_fft((&js, &ks), &cs, 48, 100, 1.0);
+        let a = idft2_real_sparse((&js, &ks), &cs, 48, 100, 1.0).unwrap();
+        let b = idft2_real_sparse_fft((&js, &ks), &cs, 48, 100, 1.0).unwrap();
         let d = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
         assert!(d < 1e-5, "max diff {d}");
     }
@@ -212,7 +245,7 @@ mod tests {
     #[test]
     fn dc_component_is_constant_matrix() {
         // A single coefficient at (0, 0) is the DC term: ΔW = alpha * c / (d1 d2).
-        let out = idft2_real_sparse((&[0], &[0]), &[2.0], 8, 8, 4.0);
+        let out = idft2_real_sparse((&[0], &[0]), &[2.0], 8, 8, 4.0).unwrap();
         for &v in &out {
             assert!((v - 2.0 * 4.0 / 64.0).abs() < 1e-7);
         }
@@ -220,16 +253,16 @@ mod tests {
 
     #[test]
     fn zero_coeffs_zero_output() {
-        let out = idft2_real_sparse((&[1, 2], &[3, 4]), &[0.0, 0.0], 16, 16, 300.0);
+        let out = idft2_real_sparse((&[1, 2], &[3, 4]), &[0.0, 0.0], 16, 16, 300.0).unwrap();
         assert!(out.iter().all(|&v| v == 0.0));
     }
 
     #[test]
     fn linearity_in_coefficients() {
         let (js, ks, cs) = random_case(3, 16, 16, 12);
-        let a = idft2_real_sparse((&js, &ks), &cs, 16, 16, 1.0);
+        let a = idft2_real_sparse((&js, &ks), &cs, 16, 16, 1.0).unwrap();
         let doubled: Vec<f32> = cs.iter().map(|c| 2.0 * c).collect();
-        let b = idft2_real_sparse((&js, &ks), &doubled, 16, 16, 1.0);
+        let b = idft2_real_sparse((&js, &ks), &doubled, 16, 16, 1.0).unwrap();
         for (x, y) in a.iter().zip(&b) {
             assert!((2.0 * x - y).abs() < 1e-6);
         }
@@ -240,9 +273,33 @@ mod tests {
         // More coefficients => more reconstruction energy (sanity of scatter).
         let (js, ks, cs) = random_case(4, 32, 32, 64);
         let e1: f32 = idft2_real_sparse((&js[..8], &ks[..8]), &cs[..8], 32, 32, 1.0)
-            .iter().map(|x| x * x).sum();
+            .unwrap().iter().map(|x| x * x).sum();
         let e2: f32 = idft2_real_sparse((&js, &ks), &cs, 32, 32, 1.0)
-            .iter().map(|x| x * x).sum();
+            .unwrap().iter().map(|x| x * x).sum();
         assert!(e2 > e1);
+    }
+
+    #[test]
+    fn negative_and_aliased_frequencies_wrap_in_both_paths() {
+        // f and f mod d index the same DFT basis vector: (-1, -3) == (15, 13)
+        // on a 16x16 grid, and 17 == 1. Both implementations must agree on
+        // that semantics instead of indexing out of bounds.
+        let cs = [1.25f32, -0.5];
+        let wrapped = idft2_real_sparse((&[15, 1], &[13, 5]), &cs, 16, 16, 2.0).unwrap();
+        for (js, ks) in [(vec![-1, 1], vec![-3, 5]), (vec![15, 17], vec![-19, 5])] {
+            let a = idft2_real_sparse((&js, &ks), &cs, 16, 16, 2.0).unwrap();
+            let b = idft2_real_sparse_fft((&js, &ks), &cs, 16, 16, 2.0).unwrap();
+            for i in 0..wrapped.len() {
+                assert!((a[i] - wrapped[i]).abs() < 1e-6, "trig alias mismatch at {i}");
+                assert!((b[i] - wrapped[i]).abs() < 1e-5, "fft alias mismatch at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_entry_lengths_error() {
+        assert!(idft2_real_sparse((&[1, 2], &[3]), &[1.0, 2.0], 8, 8, 1.0).is_err());
+        assert!(idft2_real_sparse_fft((&[1], &[3]), &[1.0, 2.0], 8, 8, 1.0).is_err());
+        assert!(idft2_real_sparse((&[0], &[0]), &[1.0], 0, 8, 1.0).is_err());
     }
 }

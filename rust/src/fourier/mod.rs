@@ -2,13 +2,17 @@
 //!
 //! Three consumers:
 //! 1. the serving/merge path — reconstruct ΔW from a stored `.fft` adapter
-//!    without touching XLA (mobile-RAM use case from the paper's intro),
+//!    without touching XLA (mobile-RAM use case from the paper's intro);
+//!    the hot path is the GEMM-formulated [`plan::ReconstructPlan`] with
+//!    twiddle tables cached per (d1, d2, entries) in [`plan::global`],
 //! 2. cross-checks of the L1 Pallas kernel (runtime integration tests
 //!    compare this implementation against the `delta_*.hlo.txt` artifact),
 //! 3. spectral-entry sampling (Eq. 5 Gaussian band-pass bias, Figure 3/5).
 
 pub mod dft;
 pub mod entries;
+pub mod plan;
 
 pub use dft::{idft2_real_sparse, idft2_real_sparse_fft, Complex};
 pub use entries::{sample_entries, EntryBias};
+pub use plan::{idft2_real_sparse_gemm, PlanCache, ReconstructPlan};

@@ -16,7 +16,27 @@
 //! Python never runs at train/serve time; `make artifacts` is the only
 //! python invocation.
 //!
-//! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
+//! ## Reconstruction plan cache
+//!
+//! The host-side ΔW hot path is GEMM-formulated: [`fourier::plan::ReconstructPlan`]
+//! factors the rank-n trig expansion into one (d1 × 2n)·(2n × d2) product
+//! executed by the multi-threaded blocked kernel in [`tensor::par`], with
+//! twiddle tables built once per (d1, d2, entries) and shared process-wide
+//! through [`fourier::plan::global`]. The serving layer
+//! ([`coordinator::serving`]) stacks per-adapter caches on top (decode LRU
+//! in [`adapter::AdapterStore`], tensor/ΔW sets in
+//! [`coordinator::serving::SwapCache`]) so a warm adapter swap is a pair of
+//! hash lookups — no disk read, no decode, no inverse DFT.
+//!
+//! ## Feature flags
+//!
+//! * `xla-runtime` — use the real `xla` crate (PJRT) for compiled HLO
+//!   artifacts. Off by default: the pure-Rust stand-in
+//!   (`runtime::xla_compat`) keeps everything except HLO execution fully
+//!   functional offline.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for results
+//! (§Perf has the trig / FFT / GEMM crossover and swap-cost tables).
 
 pub mod adapter;
 pub mod coordinator;
@@ -49,7 +69,7 @@ pub fn repo_root() -> std::path::PathBuf {
         let c = dir.join("Cargo.toml");
         if c.exists() {
             if let Ok(text) = std::fs::read_to_string(&c) {
-                if text.contains("name = \"fourier-peft\"") {
+                if text.contains("name = \"fourier_peft\"") || text.contains("name = \"fourier-peft\"") {
                     return dir;
                 }
             }

@@ -10,7 +10,7 @@
 //! verbatim, so there is no host re-encode in the loop.
 
 use super::artifact::ArtifactMeta;
-use super::{from_literal, to_literal, Client};
+use super::{from_literal, to_literal, xla, Client};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;

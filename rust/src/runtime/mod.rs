@@ -16,6 +16,17 @@
 
 pub mod artifact;
 pub mod exec;
+#[cfg(not(feature = "xla-runtime"))]
+pub mod xla_compat;
+
+/// The runtime backend. With the `xla-runtime` feature this is the real
+/// `xla` crate (PJRT over vendored XLA); without it, the pure-Rust
+/// stand-in in [`xla_compat`] (host literals work, compiling/executing HLO
+/// errors). All code in this crate goes through this alias.
+#[cfg(feature = "xla-runtime")]
+pub use ::xla;
+#[cfg(not(feature = "xla-runtime"))]
+pub use xla_compat as xla;
 
 pub use artifact::{ArtifactMeta, Registry, TensorMeta};
 pub use exec::{Executable, ParamSet};

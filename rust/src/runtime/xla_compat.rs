@@ -1,0 +1,231 @@
+//! Pure-Rust stand-in for the `xla` crate, used when the `xla-runtime`
+//! feature is disabled (the default, offline build).
+//!
+//! Everything in the crate refers to the runtime through the
+//! `crate::runtime::xla` alias, which resolves either to the real `xla`
+//! crate (feature `xla-runtime`) or to this module. Host-side literal
+//! plumbing (`Literal`, shapes, dtype round-trips) is fully functional so
+//! the adapter/serving/reconstruction stack — and its tests — run without
+//! XLA; only compiling/executing HLO artifacts returns an error pointing
+//! at the feature flag.
+
+use crate::tensor::{Data, Tensor};
+use anyhow::{bail, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Element dtypes the artifact ABI uses. Mirrors `xla::ElementType` for the
+/// variants the coordinator touches; the extra variants keep wildcard match
+/// arms at call sites reachable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    F64,
+    S64,
+    Pred,
+}
+
+/// Shape of a dense array literal: dims + element type.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Scalar types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn wrap(v: Vec<Self>) -> Data;
+    fn unwrap(d: &Data) -> Result<&[Self]>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+
+    fn wrap(v: Vec<f32>) -> Data {
+        Data::F32(v)
+    }
+
+    fn unwrap(d: &Data) -> Result<&[f32]> {
+        match d {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => bail!("literal holds i32, expected f32"),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+
+    fn wrap(v: Vec<i32>) -> Data {
+        Data::I32(v)
+    }
+
+    fn unwrap(d: &Data) -> Result<&[i32]> {
+        match d {
+            Data::I32(v) => Ok(v),
+            Data::F32(_) => bail!("literal holds f32, expected i32"),
+        }
+    }
+}
+
+/// Host literal: a dense tensor with shape metadata. The real `xla::Literal`
+/// has no `Clone`; this one keeps the same API surface the coordinator uses
+/// (construction via `vec1` + `reshape`, extraction via `to_vec`).
+#[derive(Debug)]
+pub struct Literal {
+    tensor: Tensor,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice (or anything slice-like).
+    pub fn vec1<T: NativeType>(v: impl AsRef<[T]>) -> Literal {
+        let v = v.as_ref();
+        Literal { tensor: Tensor { shape: vec![v.len()], data: T::wrap(v.to_vec()) } }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let shape: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+        let numel: usize = shape.iter().product();
+        if numel != self.tensor.len() {
+            bail!("reshape {:?} on literal of {} elements", dims, self.tensor.len());
+        }
+        Ok(Literal { tensor: Tensor { shape, data: self.tensor.data.clone() } })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match self.tensor.data {
+            Data::F32(_) => ElementType::F32,
+            Data::I32(_) => ElementType::S32,
+        };
+        Ok(ArrayShape { dims: self.tensor.shape.iter().map(|&d| d as i64).collect(), ty })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(T::unwrap(&self.tensor.data)?.to_vec())
+    }
+
+    /// Decompose a tuple literal. Tuples only arise from executing HLO
+    /// artifacts, which the fallback cannot do.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        bail!("tuple literals require the `xla-runtime` feature")
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        bail!("tuple literals require the `xla-runtime` feature")
+    }
+}
+
+/// Parsed HLO module. The fallback cannot parse HLO text; constructing one
+/// is the first step of every compile path and fails with a clear pointer.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        bail!(
+            "cannot load HLO artifact {:?}: built without the `xla-runtime` feature \
+             (rebuild with `--features xla-runtime` and a vendored `xla` crate)",
+            path.as_ref()
+        )
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device client stand-in. Creating one succeeds (it is just a handle) so
+/// pure-host consumers can hold a `Client`; compiling fails.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "host-only (xla-runtime disabled)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        bail!("compiling HLO requires the `xla-runtime` feature")
+    }
+}
+
+/// Compiled executable stand-in; never constructible in the fallback, so
+/// `execute` is unreachable but must typecheck for both `Literal` and
+/// `&Literal` argument forms.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        bail!("executing HLO requires the `xla-runtime` feature")
+    }
+}
+
+/// Device buffer stand-in.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    _private: Arc<()>,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        bail!("device buffers require the `xla-runtime` feature")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_vec1_reshape_to_vec() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]).reshape(&[2, 3]).unwrap();
+        let s = l.array_shape().unwrap();
+        assert_eq!(s.dims(), &[2, 3]);
+        assert_eq!(s.ty(), ElementType::F32);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn reshape_len_mismatch_errors() {
+        assert!(Literal::vec1(&[1i32, 2]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn compile_paths_point_at_feature() {
+        let err = HloModuleProto::from_text_file("x.hlo.txt").unwrap_err();
+        assert!(format!("{err}").contains("xla-runtime"));
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("disabled"));
+    }
+}

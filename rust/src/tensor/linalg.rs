@@ -1,32 +1,16 @@
-//! Dense linear algebra for the host-side substrates: matmul (blocked),
-//! Householder QR (random orthogonal basis generation for the Table 6
-//! ablation), and small helpers shared by the Fourier module and tests.
+//! Dense linear algebra for the host-side substrates: matmul (delegating
+//! to the multi-threaded blocked kernel in [`super::par`]), Householder QR
+//! (random orthogonal basis generation for the Table 6 ablation), and
+//! small helpers shared by the Fourier module and tests.
 
 use super::Tensor;
 use anyhow::Result;
 
-/// C = A @ B with A: [m, k], B: [k, n]. Blocked i-k-j loop order; good
-/// enough for the d<=256 matrices the coordinator touches host-side.
+/// C = A @ B with A: [m, k], B: [k, n]. Backed by the cache-blocked,
+/// multi-threaded kernel in [`super::par`] (small products stay on the
+/// calling thread).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
-    let (m, k) = (a.shape[0], a.shape[1]);
-    let (k2, n) = (b.shape[0], b.shape[1]);
-    anyhow::ensure!(k == k2, "matmul inner dims {k} vs {k2}");
-    let (av, bv) = (a.as_f32()?, b.as_f32()?);
-    let mut c = vec![0.0f32; m * n];
-    for i in 0..m {
-        let ci = &mut c[i * n..(i + 1) * n];
-        for kk in 0..k {
-            let aik = av[i * k + kk];
-            if aik == 0.0 {
-                continue;
-            }
-            let bk = &bv[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                ci[j] += aik * bk[j];
-            }
-        }
-    }
-    Ok(Tensor::f32(&[m, n], c))
+    super::par::matmul(a, b)
 }
 
 pub fn transpose(a: &Tensor) -> Result<Tensor> {

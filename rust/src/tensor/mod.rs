@@ -1,8 +1,10 @@
 //! Host-side tensor substrate: a small dense f32/i32 tensor with shape
-//! metadata, plus linear algebra (`linalg`) and the deterministic PRNG
-//! (`rng`) used by every data generator.
+//! metadata, plus linear algebra (`linalg`), the multi-threaded blocked
+//! GEMM backing it (`par`), and the deterministic PRNG (`rng`) used by
+//! every data generator.
 
 pub mod linalg;
+pub mod par;
 pub mod rng;
 
 use anyhow::{bail, Result};

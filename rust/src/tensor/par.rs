@@ -1,0 +1,149 @@
+//! Multi-threaded, cache-blocked f32 GEMM for the host-side hot paths.
+//!
+//! The serving-time ΔW reconstruction (`fourier::plan`) reduces the sparse
+//! inverse DFT to one dense (d1 × 2n)·(2n × d2) matmul, so this kernel is
+//! the reconstruction hot loop. It is also the backend of
+//! `tensor::linalg::matmul`, replacing the previous single-threaded
+//! implementation everywhere dense products are taken host-side.
+//!
+//! Structure: the output rows are chunked across `std::thread::scope`
+//! workers (no thread pool — worker lifetime is one call, which at our
+//! sizes is dominated by the O(m k n) loop); each worker runs a k-blocked
+//! i-k-j kernel so a K-panel of B stays hot in cache while it streams
+//! through its rows of A. Zero A-elements skip the inner row update,
+//! preserving the sparse-friendly behavior of the old kernel.
+
+use super::Tensor;
+use anyhow::Result;
+
+/// K-panel height for the blocked kernel: 256 rows of B at n ≤ 2048 f32
+/// columns is ≤ 2 MB, comfortably L2-resident on anything current.
+const KC: usize = 256;
+
+/// Below this many multiply-adds the scoped-thread setup costs more than
+/// the whole product; run single-threaded.
+const PAR_THRESHOLD: usize = 1 << 16;
+
+/// Worker count for parallel sections (physical parallelism, ≥ 1).
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// C(m×n) = A(m×k) · B(k×n), all row-major f32 slices.
+///
+/// Panics if the slice lengths disagree with the dims (programmer error —
+/// the `Tensor`-level wrappers do the user-facing validation).
+pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "A length vs {m}x{k}");
+    assert_eq!(b.len(), k * n, "B length vs {k}x{n}");
+    let mut c = vec![0.0f32; m * n];
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let work = m.saturating_mul(k).saturating_mul(n);
+    let threads = if work < PAR_THRESHOLD { 1 } else { num_threads().min(m) };
+    if threads <= 1 {
+        matmul_rows(a, b, &mut c, m, k, n);
+    } else {
+        let rows_per = m.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (ti, c_chunk) in c.chunks_mut(rows_per * n).enumerate() {
+                let rows = c_chunk.len() / n;
+                let a_chunk = &a[ti * rows_per * k..ti * rows_per * k + rows * k];
+                s.spawn(move || matmul_rows(a_chunk, b, c_chunk, rows, k, n));
+            }
+        });
+    }
+    c
+}
+
+/// Blocked i-k-j kernel over a contiguous row range: C += A · B with C
+/// pre-zeroed by the caller.
+fn matmul_rows(a: &[f32], b: &[f32], c: &mut [f32], rows: usize, k: usize, n: usize) {
+    for kk in (0..k).step_by(KC) {
+        let kend = (kk + KC).min(k);
+        for i in 0..rows {
+            let a_row = &a[i * k..(i + 1) * k];
+            let c_row = &mut c[i * n..(i + 1) * n];
+            for (p, &aip) in a_row.iter().enumerate().take(kend).skip(kk) {
+                if aip == 0.0 {
+                    continue;
+                }
+                let b_row = &b[p * n..(p + 1) * n];
+                for (cj, &bj) in c_row.iter_mut().zip(b_row) {
+                    *cj += aip * bj;
+                }
+            }
+        }
+    }
+}
+
+/// Tensor-level wrapper: C = A @ B with A: [m, k], B: [k, n].
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    anyhow::ensure!(a.rank() == 2 && b.rank() == 2, "matmul wants rank-2 tensors");
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    anyhow::ensure!(k == k2, "matmul inner dims {k} vs {k2}");
+    let c = matmul_f32(a.as_f32()?, b.as_f32()?, m, k, n);
+    Ok(Tensor::f32(&[m, n], c))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    /// Naive reference for cross-checking.
+    fn matmul_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += a[i * k + p] * b[p * n + j];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_reference_on_random_shapes() {
+        let mut rng = Rng::new(0x6E88);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 64, 33), (128, 300, 64), (64, 1024, 96)] {
+            let a = rng.normal_vec(m * k, 1.0);
+            let b = rng.normal_vec(k * n, 1.0);
+            let got = matmul_f32(&a, &b, m, k, n);
+            let want = matmul_ref(&a, &b, m, k, n);
+            let max = got.iter().zip(&want).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+            // identical summation order per element => tight tolerance
+            assert!(max < 1e-3, "({m},{k},{n}) max diff {max}");
+        }
+    }
+
+    #[test]
+    fn large_enough_to_cross_the_thread_threshold() {
+        let mut rng = Rng::new(7);
+        let (m, k, n) = (97, 120, 80); // m not divisible by thread count
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        let got = matmul_f32(&a, &b, m, k, n);
+        let want = matmul_ref(&a, &b, m, k, n);
+        let max = got.iter().zip(&want).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        assert!(max < 1e-3, "max diff {max}");
+    }
+
+    #[test]
+    fn empty_dims_yield_zeros() {
+        assert!(matmul_f32(&[], &[], 0, 0, 4).is_empty());
+        assert_eq!(matmul_f32(&[], &[], 2, 0, 2), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn tensor_wrapper_checks_shapes() {
+        let a = Tensor::f32(&[2, 3], vec![1.0; 6]);
+        let b = Tensor::f32(&[4, 2], vec![1.0; 8]);
+        assert!(matmul(&a, &b).is_err());
+    }
+}

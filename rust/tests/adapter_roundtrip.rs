@@ -2,9 +2,13 @@
 //! -> merge ΔW host-side AND on-device -> both paths agree; plus the
 //! serving router end-to-end over multiple adapters.
 //!
-//! Requires `artifacts/` (run `make artifacts`).
+//! Requires the `xla-runtime` feature (compiles to nothing without it; the
+//! pure-host swap-cache lifecycle is covered by tests/serving_cache.rs)
+//! and `artifacts/` (run `make artifacts`).
+#![cfg(feature = "xla-runtime")]
 
 use fourier_peft::adapter::merge::{delta_device, delta_host};
+use fourier_peft::runtime::xla;
 use fourier_peft::adapter::{AdapterFile, AdapterKind, AdapterStore};
 use fourier_peft::coordinator::serving::{Request, Server};
 use fourier_peft::coordinator::trainer::Trainer;

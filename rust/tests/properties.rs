@@ -3,7 +3,10 @@
 //! random cases from a seeded stream, and failures print the case seed.
 
 use fourier_peft::adapter::budget;
-use fourier_peft::fourier::{idft2_real_sparse, idft2_real_sparse_fft, sample_entries, EntryBias};
+use fourier_peft::fourier::{
+    idft2_real_sparse, idft2_real_sparse_fft, idft2_real_sparse_gemm, sample_entries, EntryBias,
+    ReconstructPlan,
+};
 use fourier_peft::metrics::{classify, nlg};
 use fourier_peft::tensor::{linalg, rng::Rng, Tensor};
 
@@ -24,16 +27,17 @@ fn prop_idft_is_linear() {
         let c1 = rng.normal_vec(n, 1.0);
         let c2 = rng.normal_vec(n, 1.0);
         let sum: Vec<f32> = c1.iter().zip(&c2).map(|(a, b)| a + b).collect();
-        let r1 = idft2_real_sparse((&rows, &cols), &c1, d1, d2, 3.0);
-        let r2 = idft2_real_sparse((&rows, &cols), &c2, d1, d2, 3.0);
-        let rs = idft2_real_sparse((&rows, &cols), &sum, d1, d2, 3.0);
+        let r1 = idft2_real_sparse((&rows, &cols), &c1, d1, d2, 3.0).unwrap();
+        let r2 = idft2_real_sparse((&rows, &cols), &c2, d1, d2, 3.0).unwrap();
+        let rs = idft2_real_sparse((&rows, &cols), &sum, d1, d2, 3.0).unwrap();
         for i in 0..d1 * d2 {
             assert!((r1[i] + r2[i] - rs[i]).abs() < 1e-4, "seed {seed} idx {i}");
         }
     }
 }
 
-/// The two IDFT implementations agree on random shapes (incl. non-pow2).
+/// All three IDFT implementations (trig, FFT, GEMM plan) agree on random
+/// shapes, including non-power-of-two dims.
 #[test]
 fn prop_idft_implementations_agree() {
     for seed in cases(15) {
@@ -43,10 +47,68 @@ fn prop_idft_implementations_agree() {
         let n = 1 + rng.below((d1 * d2).min(50));
         let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, seed ^ 1);
         let c = rng.normal_vec(n, 2.0);
-        let a = idft2_real_sparse((&rows, &cols), &c, d1, d2, 1.5);
-        let b = idft2_real_sparse_fft((&rows, &cols), &c, d1, d2, 1.5);
-        let max = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
-        assert!(max < 1e-4, "seed {seed} d=({d1},{d2}) n={n}: diff {max}");
+        let a = idft2_real_sparse((&rows, &cols), &c, d1, d2, 1.5).unwrap();
+        let b = idft2_real_sparse_fft((&rows, &cols), &c, d1, d2, 1.5).unwrap();
+        let g = idft2_real_sparse_gemm((&rows, &cols), &c, d1, d2, 1.5).unwrap();
+        let max_ab = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        assert!(max_ab < 1e-4, "seed {seed} d=({d1},{d2}) n={n}: trig vs fft diff {max_ab}");
+        // GEMM accumulates in f32; tolerance scales with the f64 paths'.
+        let max_ag = a.iter().zip(&g).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        assert!(max_ag < 2e-3, "seed {seed} d=({d1},{d2}) n={n}: trig vs gemm diff {max_ag}");
+    }
+}
+
+/// Negative / aliased frequencies reconstruct identically to their wrapped
+/// equivalents in every implementation (entry-index robustness).
+#[test]
+fn prop_idft_negative_frequency_equivalence() {
+    for seed in cases(12) {
+        let mut rng = Rng::new(seed);
+        let d1 = 4 + rng.below(40);
+        let d2 = 4 + rng.below(40);
+        let n = 1 + rng.below(24.min(d1 * d2));
+        let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, seed ^ 3);
+        // Shift each frequency by a random multiple of its period (incl.
+        // negative shifts) — the reconstruction must be unchanged.
+        let rows_shifted: Vec<i32> = rows
+            .iter()
+            .map(|&j| j + d1 as i32 * (rng.below(7) as i32 - 3))
+            .collect();
+        let cols_shifted: Vec<i32> = cols
+            .iter()
+            .map(|&k| k + d2 as i32 * (rng.below(7) as i32 - 3))
+            .collect();
+        let c = rng.normal_vec(n, 1.0);
+        let base = idft2_real_sparse((&rows, &cols), &c, d1, d2, 2.0).unwrap();
+        let trig = idft2_real_sparse((&rows_shifted, &cols_shifted), &c, d1, d2, 2.0).unwrap();
+        let fft = idft2_real_sparse_fft((&rows_shifted, &cols_shifted), &c, d1, d2, 2.0).unwrap();
+        let gemm = idft2_real_sparse_gemm((&rows_shifted, &cols_shifted), &c, d1, d2, 2.0).unwrap();
+        for i in 0..base.len() {
+            assert!((base[i] - trig[i]).abs() < 1e-4, "seed {seed} trig alias idx {i}");
+            assert!((base[i] - fft[i]).abs() < 1e-4, "seed {seed} fft alias idx {i}");
+            assert!((base[i] - gemm[i]).abs() < 2e-3, "seed {seed} gemm alias idx {i}");
+        }
+    }
+}
+
+/// A prebuilt plan gives the same answer as the one-shot paths for any
+/// coefficient stream (plan reuse across "training steps").
+#[test]
+fn prop_plan_reuse_matches_one_shot() {
+    for seed in cases(8) {
+        let mut rng = Rng::new(seed);
+        let d1 = 8 + rng.below(56);
+        let d2 = 8 + rng.below(56);
+        let n = 1 + rng.below(32);
+        let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, seed ^ 9);
+        let plan = ReconstructPlan::new((&rows, &cols), d1, d2).unwrap();
+        for _ in 0..3 {
+            let c = rng.normal_vec(n, 1.0);
+            let want = idft2_real_sparse((&rows, &cols), &c, d1, d2, 4.0).unwrap();
+            let got = plan.reconstruct(&c, 4.0).unwrap();
+            let max = want.iter().zip(&got).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+            assert!(max < 2e-3, "seed {seed} d=({d1},{d2}) n={n}: diff {max}");
+        }
     }
 }
 
@@ -60,7 +122,7 @@ fn prop_reconstruction_norm_bounded() {
         let (rows, cols) = sample_entries(d, d, n, EntryBias::None, seed ^ 2);
         let c = rng.normal_vec(n, 1.0);
         let alpha = 2.0f32;
-        let rec = idft2_real_sparse((&rows, &cols), &c, d, d, alpha);
+        let rec = idft2_real_sparse((&rows, &cols), &c, d, d, alpha).unwrap();
         let rec_norm: f32 = rec.iter().map(|x| x * x).sum::<f32>().sqrt();
         let c_norm: f32 = c.iter().map(|x| x * x).sum::<f32>().sqrt();
         let bound = alpha * c_norm / (d as f32) + 1e-4;

@@ -2,11 +2,14 @@
 //! by `make artifacts`, runs init + train steps on the PJRT CPU client, and
 //! cross-checks the L1 Pallas kernel against the rust-native IDFT.
 //!
-//! These tests require `artifacts/` to exist (they are the proof that the
+//! These tests require the `xla-runtime` feature (they compile to nothing
+//! without it) and `artifacts/` to exist (they are the proof that the
 //! three layers compose); they fail loudly with a pointer to
 //! `make artifacts` otherwise.
+#![cfg(feature = "xla-runtime")]
 
 use fourier_peft::fourier::{idft2_real_sparse, sample_entries, EntryBias};
+use fourier_peft::runtime::xla;
 use fourier_peft::runtime::{exec, Client, Executable, Registry};
 use fourier_peft::tensor::{rng::Rng, Tensor};
 use std::collections::HashMap;
@@ -127,7 +130,7 @@ fn pallas_delta_artifact_matches_rust_idft() {
         .unwrap();
     let got = out.to_vec::<f32>().unwrap();
 
-    let want = idft2_real_sparse((&rows, &cols), &coeffs, d, d, alpha);
+    let want = idft2_real_sparse((&rows, &cols), &coeffs, d, d, alpha).unwrap();
     let max_diff = got
         .iter()
         .zip(&want)

@@ -3,8 +3,10 @@
 //! parameter-matched LoRA on the expressivity task (the paper's core
 //! claim, asserted as a test).
 //!
-//! Requires `artifacts/` (run `make artifacts`). Uses a throwaway runs dir
-//! so cached bases from real experiments are not affected.
+//! Requires the `xla-runtime` feature (compiles to nothing without it) and
+//! `artifacts/` (run `make artifacts`). Uses a throwaway runs dir so cached
+//! bases from real experiments are not affected.
+#![cfg(feature = "xla-runtime")]
 
 use fourier_peft::coordinator::experiments::{self, Opts};
 use fourier_peft::coordinator::trainer::{FinetuneCfg, Trainer};
