@@ -1,14 +1,15 @@
 //! Adapter zoo: the storage story from the paper's introduction, measured.
 //!
 //! Fine-tunes one adapter per GLUE-sim task with three methods (FourierFT,
-//! LoRA, full dense delta), publishes all of them to an [`AdapterStore`],
-//! and prints the bytes a "Civitai for adapters" would have to store and
-//! ship per fine-tune — then serves a mixed request queue across all
-//! FourierFT adapters with hot-swap, reporting router statistics.
+//! LoRA, full dense delta), publishes all of them to a
+//! [`SharedAdapterStore`], and prints the bytes a "Civitai for adapters"
+//! would have to store and ship per fine-tune — then serves a mixed
+//! request queue across all FourierFT adapters through the micro-batching
+//! scheduler, reporting router statistics.
 //!
 //! Run: `cargo run --example adapter_zoo -- [--steps 60]`
 
-use fourier_peft::adapter::{AdapterFile, AdapterKind, AdapterStore};
+use fourier_peft::adapter::{AdapterFile, AdapterKind, SharedAdapterStore};
 use fourier_peft::coordinator::experiments::{glue_run, Opts};
 use fourier_peft::coordinator::serving::{Request, Server};
 use fourier_peft::coordinator::trainer::Trainer;
@@ -23,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     let opts = Opts { steps, seeds: 1, eval_count: 128, quick: true, scaling_scale: 1.0 };
     let store_dir = fourier_peft::runs_dir().join("zoo");
     let _ = std::fs::remove_dir_all(&store_dir);
-    let mut store = AdapterStore::open(&store_dir)?;
+    let store = SharedAdapterStore::open(&store_dir)?;
 
     let tasks = [GlueTask::Sst2, GlueTask::Mrpc, GlueTask::Rte, GlueTask::Qnli];
     let methods: [(&str, &str, AdapterKind); 3] = [

@@ -8,6 +8,10 @@
 //! * adapter swap cost: FourierFT vs LoRA vs dense-delta checkpoint load,
 //!   plus the serving swap-cache stack cold vs warm
 //!   (`serving/swap_cached/*`).
+//! * the micro-batching scheduler vs sequential serve on the 500-adapter
+//!   Zipf workload (`serving/sched_seq/*`, `serving/sched_par/*` at
+//!   1/2/4/8 workers, latency percentiles, warm-swap counters, and a
+//!   4-worker-vs-sequential speedup summary).
 //! * one fused train step / eval step on each model family (XLA builds).
 //! * adapter file save/load throughput.
 //!
@@ -108,6 +112,72 @@ fn main() -> anyhow::Result<()> {
             warm.stats.delta_hits,
             warm.stats.delta_builds,
             store.disk_reads() - disk_before_warm,
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // --- micro-batching scheduler vs sequential serve (500-adapter Zipf) --
+    {
+        use fourier_peft::adapter::store::SharedAdapterStore;
+        use fourier_peft::coordinator::scheduler::{self, SchedCfg};
+        use fourier_peft::coordinator::serving::SharedSwap;
+        use fourier_peft::coordinator::workload::{self, WorkloadCfg};
+
+        let dir = std::env::temp_dir().join(format!("fp_bench_sched_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let wl = WorkloadCfg::zipf500();
+        let store = SharedAdapterStore::with_shards(&dir, 8, 128)?;
+        workload::populate_store(&store, &wl)?;
+        let swap = SharedSwap::with_shards(workload::site_dims(&wl), 8, 128);
+        let queue = workload::gen_requests(&wl);
+
+        // Warm the cache stack once so every row below measures the
+        // serving steady state (cold-build cost is `serving/swap_cold/*`'s
+        // story; warm-swap counters below prove the rows stay warm).
+        let warm_cfg =
+            SchedCfg { workers: 2, max_batch: 32, max_wait_ticks: 256, queue_cap: 1024 };
+        scheduler::serve_scheduled_host(&swap, &store, queue.clone(), &warm_cfg)?;
+
+        let qb = Bench::quick();
+        let seq_t = qb.run("serving/sched_seq/zipf500", || {
+            scheduler::serve_sequential_host(&swap, &store, queue.clone()).unwrap()
+        });
+        let mut par4_t = f64::NAN;
+        for workers in [1usize, 2, 4, 8] {
+            let cfg =
+                SchedCfg { workers, max_batch: 32, max_wait_ticks: 256, queue_cap: 1024 };
+            let t = qb.run(&format!("serving/sched_par/zipf500_w{workers}"), || {
+                scheduler::serve_scheduled_host(&swap, &store, queue.clone(), &cfg).unwrap()
+            });
+            if workers == 4 {
+                par4_t = t;
+            }
+        }
+        println!(
+            "{:<44} {:.1}x  (seq {} vs 4 workers {})",
+            "serving/sched_speedup_4w_vs_seq/zipf500",
+            seq_t / par4_t,
+            fmt_time(seq_t),
+            fmt_time(par4_t),
+        );
+
+        // Latency percentiles + warm-swap counters from one instrumented
+        // run per path: the cache stack must short-circuit all disk and
+        // IDFT work while the scheduler parallelizes execution.
+        let cfg4 = SchedCfg { workers: 4, max_batch: 32, max_wait_ticks: 256, queue_cap: 1024 };
+        let (_, par_stats) = scheduler::serve_scheduled_host(&swap, &store, queue.clone(), &cfg4)?;
+        let (_, seq_stats) = scheduler::serve_sequential_host(&swap, &store, queue.clone())?;
+        qb.report_percentiles("serving/sched_seq/latency", &seq_stats.latencies);
+        qb.report_percentiles("serving/sched_par/latency_w4", &par_stats.latencies);
+        let sw = swap.stats();
+        println!(
+            "{:<44} swaps {} warm {} disk_reads {} delta_hits {} delta_builds {}",
+            "serving/sched_par/warm_counters",
+            par_stats.swaps,
+            par_stats.warm_swaps,
+            par_stats.disk_reads,
+            sw.delta_hits,
+            sw.delta_builds,
         );
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -19,4 +19,4 @@ pub mod store;
 
 pub use budget::{fourierft_params, lora_params, Table1Row, TABLE1};
 pub use format::{AdapterFile, AdapterKind};
-pub use store::AdapterStore;
+pub use store::{AdapterStore, SharedAdapterStore};

@@ -2,15 +2,33 @@
 //!
 //! This is the serving-side unit the paper's storage argument is about:
 //! a Civitai-style registry holds hundreds of adapters per base model;
-//! clients fetch kilobytes, not megabytes. The store provides
+//! clients fetch kilobytes, not megabytes. [`AdapterStore`] provides
 //! save/load/list/byte-accounting and an LRU-bounded in-memory cache for
-//! hot adapters (the router in `coordinator::serving` swaps them per
-//! request batch).
+//! hot adapters; [`SharedAdapterStore`] partitions that cache across
+//! independently locked shards (adapter name → shard, stable FNV-1a hash)
+//! so concurrent serve workers loading *distinct* adapters never contend
+//! on one decode-cache lock — the shared-access surface the micro-batching
+//! scheduler in `coordinator::scheduler` executes against.
 
 use super::format::AdapterFile;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Stable shard index for an adapter name: FNV-1a over the name bytes,
+/// reduced mod `shards`. Used by both [`SharedAdapterStore`] and the
+/// serving swap cache so a name's cached state always lives in exactly
+/// one shard.
+pub fn shard_index(name: &str, shards: usize) -> usize {
+    debug_assert!(shards > 0);
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % shards as u64) as usize
+}
 
 pub struct AdapterStore {
     dir: PathBuf,
@@ -126,6 +144,101 @@ impl AdapterStore {
     }
 }
 
+/// Lock-partitioned, thread-shared adapter store.
+///
+/// One [`AdapterStore`] per shard, all over the same directory; an adapter
+/// name always hashes to the same shard ([`shard_index`]), so per-name LRU,
+/// hit/miss counters, and invalidation semantics are exactly those of the
+/// underlying store — but loads of adapters in different shards proceed in
+/// parallel. All methods take `&self`; this is the interior-mutability
+/// surface the concurrent serving scheduler shares across its worker pool.
+pub struct SharedAdapterStore {
+    dir: PathBuf,
+    shards: Vec<Mutex<AdapterStore>>,
+}
+
+impl SharedAdapterStore {
+    /// Open with the default partitioning (8 shards × 32-adapter decode LRU).
+    pub fn open(dir: &Path) -> Result<SharedAdapterStore> {
+        SharedAdapterStore::with_shards(dir, 8, 32)
+    }
+
+    /// Open with `shards` partitions, each holding an LRU decode cache of
+    /// `cache_cap_per_shard` adapters.
+    pub fn with_shards(
+        dir: &Path,
+        shards: usize,
+        cache_cap_per_shard: usize,
+    ) -> Result<SharedAdapterStore> {
+        let n = shards.max(1);
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(Mutex::new(AdapterStore::open(dir)?.with_cache_cap(cache_cap_per_shard)));
+        }
+        Ok(SharedAdapterStore { dir: dir.to_path_buf(), shards: v })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard an adapter name lives in.
+    pub fn shard_of(&self, name: &str) -> usize {
+        shard_index(name, self.shards.len())
+    }
+
+    /// Run `f` against the (locked) shard owning `name`. This is the one
+    /// primitive everything else routes through; callers composing multiple
+    /// operations atomically per name (e.g. the swap cache's
+    /// load-and-build) use it directly.
+    pub fn with_shard<R>(&self, name: &str, f: impl FnOnce(&mut AdapterStore) -> R) -> R {
+        let mut guard = self.shards[self.shard_of(name)].lock().unwrap();
+        f(&mut guard)
+    }
+
+    pub fn save(&self, name: &str, adapter: &AdapterFile) -> Result<usize> {
+        self.with_shard(name, |s| s.save(name, adapter))
+    }
+
+    pub fn load(&self, name: &str) -> Result<AdapterFile> {
+        self.with_shard(name, |s| s.load(name))
+    }
+
+    /// Drop `name` from its shard's decode cache.
+    pub fn invalidate(&self, name: &str) {
+        self.with_shard(name, |s| s.invalidate(name));
+    }
+
+    /// True if `name` is resident in its shard's decode cache.
+    pub fn cached(&self, name: &str) -> bool {
+        self.with_shard(name, |s| s.cached(name))
+    }
+
+    /// Disk reads across all shards (every decode-cache miss is one).
+    pub fn disk_reads(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().disk_reads()).sum()
+    }
+
+    /// Decode-cache hits across all shards.
+    pub fn cache_hits(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().hits).sum()
+    }
+
+    /// All adapters on disk, with byte sizes (directory scan; shard-free).
+    pub fn list(&self) -> Result<Vec<(String, u64)>> {
+        self.shards[0].lock().unwrap().list()
+    }
+
+    /// Total bytes across all stored adapters.
+    pub fn total_bytes(&self) -> Result<u64> {
+        self.shards[0].lock().unwrap().total_bytes()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,6 +298,71 @@ mod tests {
     fn missing_adapter_is_an_error() {
         let mut store = AdapterStore::open(&tmp("d")).unwrap();
         assert!(store.load("nope").is_err());
+    }
+
+    #[test]
+    fn shard_index_is_stable_and_in_range() {
+        for shards in [1usize, 2, 8, 13] {
+            for name in ["a", "task_rte", "zipf_0499", ""] {
+                let i = shard_index(name, shards);
+                assert!(i < shards);
+                assert_eq!(i, shard_index(name, shards), "must be deterministic");
+            }
+        }
+    }
+
+    #[test]
+    fn shared_store_routes_names_to_fixed_shards() {
+        // cap ≥ name count so a skewed shard hash can never evict
+        let store = SharedAdapterStore::with_shards(&tmp("sh_a"), 4, 16).unwrap();
+        for i in 0..16 {
+            store.save(&format!("ad{i}"), &adapter(8)).unwrap();
+        }
+        // Loads hit the decode cache populated by save — zero disk reads —
+        // and counters aggregate across shards.
+        let disk0 = store.disk_reads();
+        for i in 0..16 {
+            store.load(&format!("ad{i}")).unwrap();
+        }
+        assert_eq!(store.disk_reads(), disk0);
+        assert!(store.cache_hits() >= 16);
+        // Invalidation only touches the owning shard; the next load is a
+        // disk read.
+        store.invalidate("ad3");
+        assert!(!store.cached("ad3"));
+        store.load("ad3").unwrap();
+        assert_eq!(store.disk_reads(), disk0 + 1);
+    }
+
+    #[test]
+    fn shared_store_concurrent_loads_from_all_threads() {
+        let store = SharedAdapterStore::with_shards(&tmp("sh_b"), 4, 16).unwrap();
+        for i in 0..8 {
+            store.save(&format!("t{i}"), &adapter(8)).unwrap();
+        }
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let store = &store;
+                s.spawn(move || {
+                    for round in 0..20 {
+                        let name = format!("t{}", (t + round) % 8);
+                        let a = store.load(&name).unwrap();
+                        assert_eq!(a.meta_get("n"), Some("8"));
+                    }
+                });
+            }
+        });
+        assert_eq!(store.disk_reads(), 0, "all loads must be decode-cache hits");
+    }
+
+    #[test]
+    fn shared_store_list_and_bytes() {
+        let store = SharedAdapterStore::with_shards(&tmp("sh_c"), 3, 8).unwrap();
+        store.save("x", &adapter(64)).unwrap();
+        store.save("y", &adapter(64)).unwrap();
+        let names: Vec<String> = store.list().unwrap().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["x", "y"]);
+        assert_eq!(store.total_bytes().unwrap(), 2 * adapter(64).byte_size() as u64);
     }
 
     #[test]

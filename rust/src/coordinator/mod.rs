@@ -11,8 +11,10 @@ pub mod experiments;
 pub mod generate;
 pub mod pretrain;
 pub mod report;
+pub mod scheduler;
 pub mod serving;
 pub mod trainer;
+pub mod workload;
 
 pub use report::Report;
 

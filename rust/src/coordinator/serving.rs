@@ -1,39 +1,64 @@
-//! Multi-adapter serving loop — the PetS/Civitai scenario from the paper's
+//! Multi-adapter serving — the PetS/Civitai scenario from the paper's
 //! introduction: one frozen base, many tiny fine-tunes, requests tagged by
 //! adapter.
 //!
-//! The router groups a request queue by adapter, hot-swaps adapter tensors
-//! into the device state (base stays resident), executes batched forwards,
-//! and reports per-adapter latency plus swap-overhead accounting.
+//! Since PR 2 the serving path is a **concurrent micro-batching pipeline**
+//! (see `coordinator::scheduler` for the queue/batcher/worker-pool
+//! machinery):
+//!
+//! 1. requests enter a bounded admission queue,
+//! 2. an adapter-affinity batcher coalesces same-adapter requests into
+//!    micro-batches (capped by batch size, flushed by a max-wait tick so
+//!    stragglers don't starve),
+//! 3. a `std::thread::scope` worker pool executes micro-batches while the
+//!    router keeps grouping; every worker holds its own eval state
+//!    ([`crate::runtime::ParamSet::try_clone`]) and shares the cache stack
+//!    below through lock-partitioned shards, so warm swaps on *distinct*
+//!    adapters never serialize.
 //!
 //! Swap cost is three layers of cache, so the steady state is a pair of
 //! `HashMap` lookups instead of disk-read + decode + inverse DFT:
 //!
-//! 1. [`crate::adapter::AdapterStore`] — LRU of decoded `.adapter` files
-//!    (no disk I/O or decode on a warm swap),
+//! 1. [`crate::adapter::SharedAdapterStore`] — sharded LRU of decoded
+//!    `.adapter` files (no disk I/O or decode on a warm swap),
 //! 2. [`SwapCache::adapt_tensors`] — device-form tensor sets per adapter
-//!    name (no per-swap re-collation),
+//!    name (no per-swap re-collation), sharded behind [`SharedSwap`],
 //! 3. [`SwapCache::deltas`] — reconstructed per-site ΔW per adapter name,
 //!    built through the process-wide GEMM plan cache
 //!    ([`crate::fourier::plan::global`]) for the merge/export path (no
 //!    IDFT recompute on a warm swap; twiddle tables shared across
 //!    adapters with the same entry matrix).
 //!
-//! [`Server::publish`] invalidates every layer for the republished name.
-//! The experiment `bench serving` (micro bench) contrasts FourierFT's swap
-//! cost (n floats/site + IDFT) against LoRA's (2dr floats/site + matmul)
-//! and dense deltas (d^2 floats/site), and `serving/swap_cached/*` rows
-//! measure the cold/warm asymmetry of this cache stack.
+//! [`Server::publish`] invalidates every layer for the republished name;
+//! workers detect the republication on their next micro-batch because the
+//! cached `Arc` identity changes, so no stale ΔW or spectral tensors are
+//! ever served. Scheduler output is deterministic given a workload: the
+//! (request id → logits) mapping is identical across runs and worker
+//! counts (asserted in `tests/scheduler.rs`).
+//!
+//! Note on the XLA path: the vendored real-runtime PJRT handle types are
+//! not `Send`/`Sync`, so with the `xla-runtime` feature enabled
+//! `serve_scheduled` falls back to the sequential path; the concurrent
+//! worker-pool executor compiles against the compat backend only. The
+//! default pure-Rust build exercises the full scheduler + cache stack
+//! host-side via `scheduler::DeltaRunner`; `serving/sched_{seq,par}/*`
+//! bench rows measure sequential vs scheduled throughput on the
+//! 500-adapter Zipf workload from `coordinator::workload`.
 
+use super::scheduler::{self, SchedCfg};
+#[cfg(not(feature = "xla-runtime"))]
+use super::scheduler::{BatchOut, BatchRunner};
 use super::trainer::{Batch, Trainer};
 use crate::adapter::format::AdapterFile;
 use crate::adapter::merge::site_deltas;
-use crate::adapter::store::AdapterStore;
+use crate::adapter::store::{shard_index, AdapterStore, SharedAdapterStore};
 use crate::runtime::exec::ParamSet;
+#[cfg(not(feature = "xla-runtime"))]
+use crate::runtime::Executable;
 use crate::tensor::Tensor;
 use anyhow::Result;
 use std::collections::{BTreeMap, HashMap};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// One inference request against a named adapter.
@@ -44,32 +69,78 @@ pub struct Request {
     pub batch: Batch,
 }
 
+/// Reconstructed per-site ΔW set for one adapter, shared across workers.
+pub type DeltaSet = Arc<Vec<(String, Tensor)>>;
+
+/// Device-form adapt tensor set for one adapter, shared across workers.
+pub type TensorSet = Arc<HashMap<String, Tensor>>;
+
 /// Serving statistics.
 #[derive(Debug, Default, Clone)]
 pub struct ServeStats {
     pub requests: usize,
+    /// Micro-batches executed (the sequential path counts one per request).
     pub batches: usize,
     pub swaps: usize,
     /// Swaps served entirely from the cache stack (no disk read).
     pub warm_swaps: usize,
     pub swap_seconds: f64,
     pub exec_seconds: f64,
-    /// Adapter files read + decoded from disk during this call. (ΔW
-    /// reconstruction accounting lives in [`SwapCacheStats`]: the serve
-    /// path hot-swaps spectral tensors and never builds ΔW; only the
-    /// merge/export path via [`Server::merged_deltas`] does.)
+    /// Wall-clock of the whole serve call. With a worker pool this is the
+    /// throughput basis; `swap_seconds + exec_seconds` sum *across*
+    /// workers and can exceed it.
+    pub wall_seconds: f64,
+    /// Adapter files read + decoded from disk during this call.
     pub disk_reads: u64,
+    /// Requests per adapter, in first-seen adapter order.
     pub per_adapter: Vec<(String, usize)>,
+    /// Peak depth of the bounded admission queue.
+    pub queue_depth_peak: usize,
+    /// Micro-batches flushed because they reached `max_batch`.
+    pub full_flushes: usize,
+    /// Micro-batches flushed by the max-wait straggler tick.
+    pub wait_flushes: usize,
+    /// Micro-batches flushed by the end-of-queue drain.
+    pub final_flushes: usize,
+    /// Largest number of requests coalesced into one micro-batch.
+    pub max_micro_batch: usize,
+    /// Per-request latency in seconds (admission → micro-batch completion;
+    /// the sequential path measures serve-start → request completion).
+    pub latencies: Vec<f64>,
 }
 
 impl ServeStats {
+    /// Requests per second. Basis: wall-clock when recorded (scheduler and
+    /// sequential paths both set it), else the summed swap + exec time;
+    /// zero / unset time yields 0.0 rather than dividing by zero.
     pub fn throughput_rps(&self) -> f64 {
-        let total = self.swap_seconds + self.exec_seconds;
+        let total = if self.wall_seconds > 0.0 {
+            self.wall_seconds
+        } else {
+            self.swap_seconds + self.exec_seconds
+        };
         if total <= 0.0 {
             0.0
         } else {
             self.requests as f64 / total
         }
+    }
+
+    /// p-th latency percentile (p in [0, 100], linear interpolation).
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        crate::util::percentile(&self.latencies, p)
+    }
+
+    pub fn latency_p50(&self) -> f64 {
+        self.latency_percentile(50.0)
+    }
+
+    pub fn latency_p95(&self) -> f64 {
+        self.latency_percentile(95.0)
+    }
+
+    pub fn latency_p99(&self) -> f64 {
+        self.latency_percentile(99.0)
     }
 }
 
@@ -82,17 +153,64 @@ pub struct SwapCacheStats {
     pub delta_builds: u64,
 }
 
+impl SwapCacheStats {
+    /// Accumulate another shard's counters (see [`SharedSwap::stats`]).
+    pub fn merge(&mut self, other: &SwapCacheStats) {
+        self.tensor_hits += other.tensor_hits;
+        self.tensor_builds += other.tensor_builds;
+        self.delta_hits += other.delta_hits;
+        self.delta_builds += other.delta_builds;
+    }
+}
+
+/// What one cache access actually did — returned alongside the cached
+/// value by the `*_traced` accessors so callers can account warm vs cold
+/// swaps exactly, even when the caches are shared across threads (global
+/// counter deltas would race).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SwapTrace {
+    /// The per-name entry was (re)built — a miss in this cache layer.
+    pub rebuilt: bool,
+    /// The adapter file was read + decoded from disk (store-layer miss).
+    pub disk_read: bool,
+}
+
+/// Update a worker's active-adapter slot after a cache fetch and return
+/// the `(swaps, warm_swaps)` increment for the transition. "Changed" means
+/// a different adapter name *or* the same name with a different `Arc`
+/// identity — i.e. the cached set was invalidated and rebuilt (the
+/// republish case), so the worker must re-apply it. The single definition
+/// keeps the scheduled, sequential, and XLA paths' swap accounting
+/// identical by construction.
+pub(crate) fn account_swap<T>(
+    active: &mut Option<(String, Arc<T>)>,
+    adapter: &str,
+    fetched: &Arc<T>,
+    trace: SwapTrace,
+) -> (usize, usize) {
+    let changed = match active {
+        Some((name, arc)) => name.as_str() != adapter || !Arc::ptr_eq(arc, fetched),
+        None => true,
+    };
+    if !changed {
+        return (0, 0);
+    }
+    *active = Some((adapter.to_string(), fetched.clone()));
+    (1, usize::from(!trace.disk_read))
+}
+
 /// Per-adapter swap state, keyed by adapter name: device-form tensor sets
 /// and reconstructed ΔW sets, LRU-bounded on distinct adapter names (the
 /// ΔW set is sites × d1 × d2 floats — far larger than the adapter file —
 /// so the cap matters for Civitai-scale registries). Pure host code —
-/// usable (and tested) without the XLA runtime; [`Server`] wires it to
-/// the device executor.
+/// usable (and tested) without the XLA runtime. Single-threaded by itself;
+/// [`SharedSwap`] partitions instances across locked shards for the
+/// concurrent serving path.
 pub struct SwapCache {
     /// Adapted site name -> (d1, d2) weight dims, from the artifact meta.
     site_dims: BTreeMap<String, (usize, usize)>,
-    tensors: HashMap<String, Arc<HashMap<String, Tensor>>>,
-    deltas: HashMap<String, Arc<Vec<(String, Tensor)>>>,
+    tensors: HashMap<String, TensorSet>,
+    deltas: HashMap<String, DeltaSet>,
     /// LRU order over adapter names, most-recently-used last.
     order: Vec<String>,
     cap: usize,
@@ -138,18 +256,29 @@ impl SwapCache {
         &mut self,
         store: &mut AdapterStore,
         name: &str,
-    ) -> Result<Arc<HashMap<String, Tensor>>> {
+    ) -> Result<TensorSet> {
+        Ok(self.adapt_tensors_traced(store, name)?.0)
+    }
+
+    /// [`SwapCache::adapt_tensors`] plus an exact account of what the
+    /// access did (rebuild? disk read?).
+    pub fn adapt_tensors_traced(
+        &mut self,
+        store: &mut AdapterStore,
+        name: &str,
+    ) -> Result<(TensorSet, SwapTrace)> {
         if let Some(t) = self.tensors.get(name).cloned() {
             self.stats.tensor_hits += 1;
             self.touch(name);
-            return Ok(t);
+            return Ok((t, SwapTrace::default()));
         }
+        let disk0 = store.disk_reads();
         let file = store.load(name)?;
-        let t: Arc<HashMap<String, Tensor>> = Arc::new(file.tensors.into_iter().collect());
+        let t: TensorSet = Arc::new(file.tensors.into_iter().collect());
         self.stats.tensor_builds += 1;
         self.tensors.insert(name.to_string(), t.clone());
         self.touch(name);
-        Ok(t)
+        Ok((t, SwapTrace { rebuilt: true, disk_read: store.disk_reads() > disk0 }))
     }
 
     /// Reconstructed per-site ΔW for `name` (merge/export serving path),
@@ -161,18 +290,28 @@ impl SwapCache {
         &mut self,
         store: &mut AdapterStore,
         name: &str,
-    ) -> Result<Arc<Vec<(String, Tensor)>>> {
+    ) -> Result<DeltaSet> {
+        Ok(self.deltas_traced(store, name)?.0)
+    }
+
+    /// [`SwapCache::deltas`] plus an exact account of what the access did.
+    pub fn deltas_traced(
+        &mut self,
+        store: &mut AdapterStore,
+        name: &str,
+    ) -> Result<(DeltaSet, SwapTrace)> {
         if let Some(d) = self.deltas.get(name).cloned() {
             self.stats.delta_hits += 1;
             self.touch(name);
-            return Ok(d);
+            return Ok((d, SwapTrace::default()));
         }
+        let disk0 = store.disk_reads();
         let file = store.load(name)?;
         let d = Arc::new(site_deltas(&file, &|site| self.site_dims.get(site).copied())?);
         self.stats.delta_builds += 1;
         self.deltas.insert(name.to_string(), d.clone());
         self.touch(name);
-        Ok(d)
+        Ok((d, SwapTrace { rebuilt: true, disk_read: store.disk_reads() > disk0 }))
     }
 
     /// Drop all cached state for `name` (republish / external overwrite).
@@ -187,18 +326,191 @@ impl SwapCache {
         self.deltas.clear();
         self.order.clear();
     }
+
+    /// Resident adapter names in LRU order, coldest first (for tests and
+    /// introspection).
+    pub fn resident(&self) -> Vec<String> {
+        self.order.clone()
+    }
+
+    /// True if either cache layer holds `name`.
+    pub fn contains(&self, name: &str) -> bool {
+        self.tensors.contains_key(name) || self.deltas.contains_key(name)
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Internal invariants, checked by the LRU property tests: every
+    /// cached name appears in `order` exactly once, `order` holds no
+    /// phantom names (entries backing neither layer), and the cap holds.
+    pub fn check_consistent(&self) -> bool {
+        let no_phantom = self
+            .order
+            .iter()
+            .all(|n| self.tensors.contains_key(n) || self.deltas.contains_key(n));
+        let all_tracked = self
+            .tensors
+            .keys()
+            .chain(self.deltas.keys())
+            .all(|n| self.order.iter().any(|o| o == n));
+        let unique = {
+            let mut sorted = self.order.clone();
+            sorted.sort();
+            sorted.windows(2).all(|w| w[0] != w[1])
+        };
+        no_phantom && all_tracked && unique && self.order.len() <= self.cap
+    }
 }
 
-/// A server: one artifact family + its device state + an adapter store +
-/// the per-adapter swap cache.
+/// Lock-partitioned swap cache: adapter names hash to shards (same stable
+/// hash as [`SharedAdapterStore`]), each an independently locked
+/// [`SwapCache`], so concurrent warm swaps on distinct adapters don't
+/// serialize on one lock. LRU caps and counters are per shard; a name's
+/// state always lives in exactly one shard, so invalidation is exact.
+pub struct SharedSwap {
+    shards: Vec<Mutex<SwapCache>>,
+}
+
+impl SharedSwap {
+    /// Default partitioning: 8 shards × 64-adapter cap.
+    pub fn new(site_dims: BTreeMap<String, (usize, usize)>) -> SharedSwap {
+        SharedSwap::with_shards(site_dims, 8, 64)
+    }
+
+    pub fn with_shards(
+        site_dims: BTreeMap<String, (usize, usize)>,
+        shards: usize,
+        cap_per_shard: usize,
+    ) -> SharedSwap {
+        let n = shards.max(1);
+        SharedSwap {
+            shards: (0..n)
+                .map(|_| Mutex::new(SwapCache::with_cap(site_dims.clone(), cap_per_shard)))
+                .collect(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_of(&self, name: &str) -> usize {
+        shard_index(name, self.shards.len())
+    }
+
+    /// Device-form adapt tensors for `name` through the sharded cache +
+    /// shared store. Lock order is always swap-shard → store-shard, and
+    /// the store never calls back into the swap cache, so this nesting is
+    /// deadlock-free. The build (if any) runs while holding the swap
+    /// shard, so concurrent requests for the same adapter build once.
+    pub fn adapt_tensors(
+        &self,
+        store: &SharedAdapterStore,
+        name: &str,
+    ) -> Result<(TensorSet, SwapTrace)> {
+        let mut shard = self.shards[self.shard_of(name)].lock().unwrap();
+        store.with_shard(name, |st| shard.adapt_tensors_traced(st, name))
+    }
+
+    /// Reconstructed per-site ΔW for `name` through the sharded cache.
+    pub fn deltas(
+        &self,
+        store: &SharedAdapterStore,
+        name: &str,
+    ) -> Result<(DeltaSet, SwapTrace)> {
+        let mut shard = self.shards[self.shard_of(name)].lock().unwrap();
+        store.with_shard(name, |st| shard.deltas_traced(st, name))
+    }
+
+    /// Drop all cached state for `name` in its owning shard.
+    pub fn invalidate(&self, name: &str) {
+        self.shards[self.shard_of(name)].lock().unwrap().invalidate(name);
+    }
+
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+
+    /// Counters aggregated across shards.
+    pub fn stats(&self) -> SwapCacheStats {
+        let mut out = SwapCacheStats::default();
+        for s in &self.shards {
+            out.merge(&s.lock().unwrap().stats);
+        }
+        out
+    }
+
+    /// Resident adapter names across all shards (no particular global
+    /// order; LRU order is per shard).
+    pub fn resident(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            out.extend(s.lock().unwrap().resident());
+        }
+        out
+    }
+}
+
+/// A server: one artifact family + its device state + a sharded adapter
+/// store + the sharded per-adapter swap cache.
 pub struct Server<'a> {
     pub trainer: &'a Trainer,
     pub artifact: String,
-    pub store: AdapterStore,
-    pub swap: SwapCache,
+    pub store: SharedAdapterStore,
+    pub swap: SharedSwap,
     state: ParamSet,
     active: Option<String>,
     scaling: f32,
+}
+
+/// Per-worker XLA eval state: a deep-cloned [`ParamSet`] plus the identity
+/// of the adapt-tensor set currently loaded into it. The `Arc` identity
+/// check is what makes republication visible mid-stream: `publish`
+/// invalidates the cache entry, the next fetch builds a fresh `Arc`, and
+/// the pointer inequality forces a re-`set_adapt`.
+#[cfg(not(feature = "xla-runtime"))]
+struct XlaSlot {
+    state: ParamSet,
+    active: Option<(String, TensorSet)>,
+}
+
+/// Scheduler executor for the XLA path: swap via the shared cache stack,
+/// then run the artifact's eval per request of the micro-batch on this
+/// worker's own state. Compiled only against the compat backend: the
+/// vendored real-runtime PJRT handle types are not `Send`/`Sync`, so the
+/// `xla-runtime` build serves sequentially (see [`Server::serve_scheduled`]).
+#[cfg(not(feature = "xla-runtime"))]
+struct XlaRunner<'a> {
+    exe: Arc<Executable>,
+    swap: &'a SharedSwap,
+    store: &'a SharedAdapterStore,
+    scaling: f32,
+    slots: Vec<Mutex<XlaSlot>>,
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+impl BatchRunner for XlaRunner<'_> {
+    fn run_batch(&self, worker: usize, adapter: &str, reqs: &[Request]) -> Result<BatchOut> {
+        let mut guard = self.slots[worker].lock().unwrap();
+        let slot = &mut *guard;
+        let t0 = Instant::now();
+        let (tensors, trace) = self.swap.adapt_tensors(self.store, adapter)?;
+        let (swaps, warm_swaps) = account_swap(&mut slot.active, adapter, &tensors, trace);
+        if swaps > 0 {
+            self.exe.set_adapt(&mut slot.state, &tensors)?;
+        }
+        let swap_seconds = t0.elapsed().as_secs_f64();
+        let mut results = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            let out = self.exe.eval(&mut slot.state, self.scaling, &req.batch)?;
+            results.push((req.id, out.logits));
+        }
+        Ok(BatchOut { results, swaps, warm_swaps, swap_seconds })
+    }
 }
 
 impl<'a> Server<'a> {
@@ -206,7 +518,7 @@ impl<'a> Server<'a> {
     pub fn new(
         trainer: &'a Trainer,
         artifact: &str,
-        store: AdapterStore,
+        store: SharedAdapterStore,
         entry_seed: u64,
         scaling: f32,
     ) -> Result<Server<'a>> {
@@ -226,27 +538,28 @@ impl<'a> Server<'a> {
             trainer,
             artifact: artifact.to_string(),
             store,
-            swap: SwapCache::new(site_dims),
+            swap: SharedSwap::new(site_dims),
             state,
             active: None,
             scaling,
         })
     }
 
-    /// Swap in an adapter by name (no-op if already active). Warm swaps
-    /// resolve entirely from the cache stack: no disk, no decode, no IDFT.
+    /// Swap an adapter into the server's own state (no-op if already
+    /// active). Warm swaps resolve entirely from the cache stack: no disk,
+    /// no decode, no IDFT. This is the sequential-path swap; scheduler
+    /// workers hold their own states and swap independently.
     pub fn activate(&mut self, name: &str, stats: &mut ServeStats) -> Result<()> {
         if self.active.as_deref() == Some(name) {
             return Ok(());
         }
         let t0 = Instant::now();
-        let disk0 = self.store.disk_reads();
-        let tensors = self.swap.adapt_tensors(&mut self.store, name)?;
+        let (tensors, trace) = self.swap.adapt_tensors(&self.store, name)?;
         let exe = self.trainer.executable(&self.artifact)?;
         exe.set_adapt(&mut self.state, &tensors)?;
         self.active = Some(name.to_string());
         stats.swaps += 1;
-        if self.store.disk_reads() == disk0 {
+        if !trace.disk_read {
             stats.warm_swaps += 1;
         }
         stats.swap_seconds += t0.elapsed().as_secs_f64();
@@ -255,43 +568,97 @@ impl<'a> Server<'a> {
 
     /// Reconstructed ΔW set for an adapter (merge/export path), through
     /// the swap cache + global plan cache.
-    pub fn merged_deltas(&mut self, name: &str) -> Result<Arc<Vec<(String, Tensor)>>> {
-        self.swap.deltas(&mut self.store, name)
+    pub fn merged_deltas(&mut self, name: &str) -> Result<DeltaSet> {
+        Ok(self.swap.deltas(&self.store, name)?.0)
     }
 
-    /// Serve a queue: group by adapter (minimizing swaps), run each batch,
-    /// return logits per request id.
+    /// Serve a queue through the micro-batching scheduler with the default
+    /// config (worker pool sized to the machine). Returns logits per
+    /// request id, sorted by id. See [`Server::serve_scheduled`].
     pub fn serve(&mut self, queue: Vec<Request>) -> Result<(Vec<(u64, Tensor)>, ServeStats)> {
+        self.serve_scheduled(queue, &SchedCfg::default())
+    }
+
+    /// Serve a queue through the concurrent micro-batching scheduler:
+    /// bounded admission, adapter-affinity coalescing, `cfg.workers`
+    /// executor threads each holding a deep-cloned eval state. Output is
+    /// deterministic given the queue (ids sorted; logits independent of
+    /// worker count).
+    #[cfg(not(feature = "xla-runtime"))]
+    pub fn serve_scheduled(
+        &mut self,
+        queue: Vec<Request>,
+        cfg: &SchedCfg,
+    ) -> Result<(Vec<(u64, Tensor)>, ServeStats)> {
+        let exe = self.trainer.executable(&self.artifact)?;
+        let disk0 = self.store.disk_reads();
+        let workers = cfg.workers.max(1);
+        let mut slots = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            slots.push(Mutex::new(XlaSlot { state: self.state.try_clone()?, active: None }));
+        }
+        let runner = XlaRunner {
+            exe,
+            swap: &self.swap,
+            store: &self.store,
+            scaling: self.scaling,
+            slots,
+        };
+        let (results, mut stats) = scheduler::run(cfg, queue, &runner)?;
+        stats.disk_reads = self.store.disk_reads() - disk0;
+        Ok((results, stats))
+    }
+
+    /// Real-runtime fallback: the vendored `xla` crate's PJRT handles are
+    /// not `Send`/`Sync`, so the worker-pool path cannot compile against
+    /// it; serve sequentially until the runtime grows thread-safe
+    /// wrappers. (The host-side scheduler in `coordinator::scheduler`
+    /// is unaffected — it carries the concurrency story for both builds.)
+    #[cfg(feature = "xla-runtime")]
+    pub fn serve_scheduled(
+        &mut self,
+        queue: Vec<Request>,
+        _cfg: &SchedCfg,
+    ) -> Result<(Vec<(u64, Tensor)>, ServeStats)> {
+        self.serve_sequential(queue)
+    }
+
+    /// Sequential reference path: group the queue by adapter (HashMap
+    /// grouping, first-seen order), swap once per group, eval one request
+    /// at a time on the server's own state. Kept for baseline benches and
+    /// as the zero-thread fallback.
+    pub fn serve_sequential(
+        &mut self,
+        queue: Vec<Request>,
+    ) -> Result<(Vec<(u64, Tensor)>, ServeStats)> {
+        let t_start = Instant::now();
         let mut stats = ServeStats { requests: queue.len(), ..Default::default() };
         let disk0 = self.store.disk_reads();
-        // stable group-by-adapter routing
-        let mut grouped: Vec<(String, Vec<Request>)> = Vec::new();
-        for req in queue {
-            match grouped.iter_mut().find(|(a, _)| *a == req.adapter) {
-                Some((_, v)) => v.push(req),
-                None => grouped.push((req.adapter.clone(), vec![req])),
-            }
-        }
         let exe = self.trainer.executable(&self.artifact)?;
         let mut results = Vec::new();
-        for (adapter, reqs) in grouped {
+        for (adapter, reqs) in scheduler::group_by_adapter(queue) {
             self.activate(&adapter, &mut stats)?;
-            stats.per_adapter.push((adapter.clone(), reqs.len()));
+            stats.per_adapter.push((adapter, reqs.len()));
             for req in reqs {
                 let t0 = Instant::now();
                 let out = exe.eval(&mut self.state, self.scaling, &req.batch)?;
                 stats.exec_seconds += t0.elapsed().as_secs_f64();
                 stats.batches += 1;
+                stats.latencies.push(t_start.elapsed().as_secs_f64());
                 results.push((req.id, out.logits));
             }
         }
         stats.disk_reads = self.store.disk_reads() - disk0;
+        stats.wall_seconds = t_start.elapsed().as_secs_f64();
+        results.sort_by_key(|&(id, _)| id);
         Ok((results, stats))
     }
 
     /// Persist the currently-active adapter state under a new name
     /// (training-service path: fine-tune then publish). Invalidates every
-    /// cache layer for `name` so subsequent swaps see the new contents.
+    /// cache layer for `name` so subsequent swaps see the new contents —
+    /// including scheduler workers mid-stream, via the `Arc` identity
+    /// check in their slots.
     pub fn publish(&mut self, name: &str, kind: crate::adapter::AdapterKind, seed: u64,
                    meta: Vec<(String, String)>) -> Result<usize> {
         let exe = self.trainer.executable(&self.artifact)?;
@@ -303,9 +670,114 @@ impl<'a> Server<'a> {
             tensors: exe.adapt_tensors(&self.state)?,
         };
         let bytes = self.store.save(name, &file)?;
-        // Drop per-name cache layers; the device state already holds these
-        // tensors, so an active adapter stays active.
+        // Drop per-name cache layers; the server's own device state
+        // already holds these tensors, so an active adapter stays active.
         self.swap.invalidate(name);
         Ok(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_zero_time_guard() {
+        let stats = ServeStats { requests: 10, ..Default::default() };
+        assert_eq!(stats.throughput_rps(), 0.0, "no recorded time must not divide by zero");
+        let stats = ServeStats::default();
+        assert_eq!(stats.throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn throughput_prefers_wall_clock() {
+        let stats = ServeStats {
+            requests: 100,
+            wall_seconds: 2.0,
+            swap_seconds: 3.0,
+            exec_seconds: 5.0, // summed across workers — larger than wall
+            ..Default::default()
+        };
+        assert!((stats.throughput_rps() - 50.0).abs() < 1e-9);
+        // without wall clock, falls back to summed time
+        let stats = ServeStats {
+            requests: 100,
+            swap_seconds: 1.0,
+            exec_seconds: 1.0,
+            ..Default::default()
+        };
+        assert!((stats.throughput_rps() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_percentiles_on_known_vector() {
+        let stats = ServeStats {
+            latencies: (1..=100).map(|i| i as f64).collect(),
+            ..Default::default()
+        };
+        assert!((stats.latency_p50() - 50.5).abs() < 1e-9);
+        assert!((stats.latency_p95() - 95.05).abs() < 1e-9);
+        assert!((stats.latency_p99() - 99.01).abs() < 1e-9);
+        // empty latency vector degrades to 0.0
+        assert_eq!(ServeStats::default().latency_p99(), 0.0);
+    }
+
+    #[test]
+    fn swap_cache_stats_merge_sums_fields() {
+        let mut a =
+            SwapCacheStats { tensor_hits: 1, tensor_builds: 2, delta_hits: 3, delta_builds: 4 };
+        let b =
+            SwapCacheStats { tensor_hits: 10, tensor_builds: 20, delta_hits: 30, delta_builds: 40 };
+        a.merge(&b);
+        assert_eq!(a.tensor_hits, 11);
+        assert_eq!(a.tensor_builds, 22);
+        assert_eq!(a.delta_hits, 33);
+        assert_eq!(a.delta_builds, 44);
+    }
+
+    #[test]
+    fn shared_swap_counters_and_invalidation() {
+        use crate::adapter::format::{AdapterFile, AdapterKind};
+        use crate::tensor::rng::Rng;
+
+        let dir = std::env::temp_dir()
+            .join(format!("fp_sharedswap_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = SharedAdapterStore::with_shards(&dir, 4, 8).unwrap();
+        let (d, n) = (16usize, 8usize);
+        let site_dims: BTreeMap<String, (usize, usize)> =
+            [("blk0.attn.wq.w".to_string(), (d, d))].into_iter().collect();
+        let swap = SharedSwap::with_shards(site_dims, 4, 8);
+        let mut rng = Rng::new(0x5A);
+        for name in ["a", "b", "c"] {
+            let file = AdapterFile {
+                kind: AdapterKind::FourierFt,
+                seed: 2024,
+                alpha: 4.0,
+                meta: vec![("n".into(), n.to_string())],
+                tensors: vec![(
+                    "spec.blk0.attn.wq.w.c".into(),
+                    Tensor::f32(&[n], rng.normal_vec(n, 1.0)),
+                )],
+            };
+            store.save(name, &file).unwrap();
+        }
+        // Cold then warm: the trace tells each access apart exactly.
+        let (_, t1) = swap.deltas(&store, "a").unwrap();
+        assert!(t1.rebuilt && !t1.disk_read, "publish-primed decode cache: rebuild without disk");
+        let (_, t2) = swap.deltas(&store, "a").unwrap();
+        assert!(!t2.rebuilt && !t2.disk_read);
+        swap.deltas(&store, "b").unwrap();
+        let s = swap.stats();
+        assert_eq!(s.delta_builds, 2);
+        assert_eq!(s.delta_hits, 1);
+        // Invalidation drops exactly the named adapter.
+        swap.invalidate("a");
+        let resident = swap.resident();
+        assert!(!resident.contains(&"a".to_string()));
+        assert!(resident.contains(&"b".to_string()));
+        let (_, t3) = swap.deltas(&store, "a").unwrap();
+        assert!(t3.rebuilt);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

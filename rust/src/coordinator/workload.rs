@@ -1,0 +1,313 @@
+//! Seeded, deterministic serving workloads.
+//!
+//! The scheduler's behavior (batching, cache churn, worker balance) is a
+//! function of the request stream, so tests and benches need streams that
+//! are (a) shaped like the paper's serving story — a Civitai-style
+//! registry where adapter popularity is heavy-tailed — and (b) bit-stable
+//! across runs and machines. This module provides both: Zipf-distributed
+//! adapter draws from the crate's deterministic [`Rng`], per-request
+//! batch contents derived from the request id alone (so a request's
+//! logits are a pure function of (seed, id, adapter file)), and a
+//! configurable arrival order to steer the coalescing behavior from
+//! best-case (grouped) to adversarial (round-robin).
+//!
+//! [`Rng`]: crate::tensor::rng::Rng
+
+use super::serving::Request;
+use super::trainer::Batch;
+use crate::adapter::format::{AdapterFile, AdapterKind};
+use crate::adapter::store::SharedAdapterStore;
+use crate::tensor::{rng::Rng, Tensor};
+use anyhow::Result;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+/// Arrival order of the generated queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrival {
+    /// Popularity-draw order: adapters interleave naturally (the default;
+    /// what a live request mix looks like).
+    Random,
+    /// All requests for one adapter arrive back-to-back (blocks in
+    /// first-draw order) — the best case for coalescing.
+    Grouped,
+    /// Strict round-robin over the drawn adapters — maximal alternation,
+    /// the adversarial case for swap-minimizing routers.
+    RoundRobin,
+}
+
+/// Workload shape: registry size, request count, popularity skew, arrival
+/// order, and the synthetic adapter/request geometry.
+#[derive(Debug, Clone)]
+pub struct WorkloadCfg {
+    pub adapters: usize,
+    pub requests: usize,
+    /// Zipf exponent s: popularity of the rank-k adapter ∝ 1/(k+1)^s.
+    pub zipf_s: f64,
+    pub arrival: Arrival,
+    pub seed: u64,
+    /// Rows per request batch tensor.
+    pub batch: usize,
+    /// Input dim (= d1 = d2 of every adapted site).
+    pub dim: usize,
+    /// Adapted sites per adapter file.
+    pub sites: usize,
+    /// Spectral coefficients per site.
+    pub n_coeffs: usize,
+}
+
+impl WorkloadCfg {
+    /// Small workload for fast deterministic tests.
+    pub fn small() -> WorkloadCfg {
+        WorkloadCfg {
+            adapters: 16,
+            requests: 256,
+            zipf_s: 1.1,
+            arrival: Arrival::Random,
+            seed: 2024,
+            batch: 4,
+            dim: 32,
+            sites: 2,
+            n_coeffs: 16,
+        }
+    }
+
+    /// The 500-adapter Zipf workload the serving benches and the
+    /// scheduler stress test run (the registry scale the paper's §1
+    /// storage argument is about).
+    pub fn zipf500() -> WorkloadCfg {
+        WorkloadCfg {
+            adapters: 500,
+            requests: 2000,
+            zipf_s: 1.1,
+            arrival: Arrival::Random,
+            seed: 2024,
+            batch: 8,
+            dim: 64,
+            sites: 4,
+            n_coeffs: 64,
+        }
+    }
+}
+
+/// Canonical name of the rank-i adapter.
+pub fn adapter_name(i: usize) -> String {
+    format!("zipf_{i:04}")
+}
+
+/// Site names + dims shared by every generated adapter (matches the
+/// swap-cache `site_dims` map the server builds from artifact meta).
+pub fn site_dims(cfg: &WorkloadCfg) -> BTreeMap<String, (usize, usize)> {
+    (0..cfg.sites).map(|s| (format!("blk{s}.attn.wq.w"), (cfg.dim, cfg.dim))).collect()
+}
+
+/// Unnormalized Zipf popularity weights for ranks 0..n.
+pub fn zipf_weights(n: usize, s: f64) -> Vec<f64> {
+    (0..n).map(|k| 1.0 / ((k + 1) as f64).powf(s)).collect()
+}
+
+/// Write one seeded FourierFT adapter file per rank into the store;
+/// returns the names. Every adapter shares the entry seed (paper: one
+/// entry matrix per model family) but has its own coefficients, so all
+/// ΔW reconstructions share one GEMM plan while remaining distinct.
+pub fn populate_store(store: &SharedAdapterStore, cfg: &WorkloadCfg) -> Result<Vec<String>> {
+    let mut names = Vec::with_capacity(cfg.adapters);
+    for i in 0..cfg.adapters {
+        let name = adapter_name(i);
+        let mut rng =
+            Rng::new(cfg.seed ^ 0xADA7 ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let file = AdapterFile {
+            kind: AdapterKind::FourierFt,
+            seed: cfg.seed,
+            alpha: 8.0,
+            meta: vec![("n".into(), cfg.n_coeffs.to_string())],
+            tensors: (0..cfg.sites)
+                .map(|s| {
+                    (
+                        format!("spec.blk{s}.attn.wq.w.c"),
+                        Tensor::f32(&[cfg.n_coeffs], rng.normal_vec(cfg.n_coeffs, 1.0)),
+                    )
+                })
+                .collect(),
+        };
+        store.save(&name, &file)?;
+        names.push(name);
+    }
+    Ok(names)
+}
+
+/// Generate the request queue: Zipf-sampled adapter per request,
+/// id-derived batch contents, arrival order per `cfg.arrival`. Calling
+/// this twice with the same config yields bit-identical queues.
+pub fn gen_requests(cfg: &WorkloadCfg) -> Vec<Request> {
+    let weights = zipf_weights(cfg.adapters, cfg.zipf_s);
+    let mut cum = Vec::with_capacity(weights.len());
+    let mut acc = 0.0f64;
+    for w in &weights {
+        acc += *w;
+        cum.push(acc);
+    }
+    let total = acc;
+    let mut rng = Rng::new(cfg.seed ^ 0x5E12);
+    let mut draws: Vec<usize> = (0..cfg.requests)
+        .map(|_| {
+            let t = rng.f64() * total;
+            match cum.binary_search_by(|c| c.partial_cmp(&t).unwrap()) {
+                Ok(i) => i,
+                Err(i) => i.min(cfg.adapters - 1),
+            }
+        })
+        .collect();
+
+    match cfg.arrival {
+        Arrival::Random => {}
+        Arrival::Grouped => {
+            // Stable sort by first-draw rank keeps blocks in first-seen
+            // order and request order within a block.
+            let mut first: HashMap<usize, usize> = HashMap::new();
+            for &a in &draws {
+                let next = first.len();
+                first.entry(a).or_insert(next);
+            }
+            draws.sort_by_key(|a| first[a]);
+        }
+        Arrival::RoundRobin => {
+            let mut order: Vec<usize> = Vec::new();
+            let mut buckets: HashMap<usize, VecDeque<usize>> = HashMap::new();
+            for &a in &draws {
+                if !buckets.contains_key(&a) {
+                    order.push(a);
+                }
+                buckets.entry(a).or_default().push_back(a);
+            }
+            let mut out = Vec::with_capacity(draws.len());
+            loop {
+                let mut any = false;
+                for &a in &order {
+                    if let Some(x) = buckets.get_mut(&a).and_then(|b| b.pop_front()) {
+                        out.push(x);
+                        any = true;
+                    }
+                }
+                if !any {
+                    break;
+                }
+            }
+            draws = out;
+        }
+    }
+
+    draws
+        .into_iter()
+        .enumerate()
+        .map(|(i, a)| {
+            // Batch contents derive from (seed, id) only, so a request's
+            // expected output doesn't depend on its position in the queue.
+            let mut brng = Rng::new(
+                cfg.seed ^ 0xB00C ^ (i as u64).wrapping_mul(0xD134_2543_DE82_EF95),
+            );
+            let x = Tensor::f32(
+                &[cfg.batch, cfg.dim],
+                brng.normal_vec(cfg.batch * cfg.dim, 1.0),
+            );
+            let mut batch: Batch = Batch::new();
+            batch.insert("x".into(), x);
+            Request { id: i as u64, adapter: adapter_name(a), batch }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let cfg = WorkloadCfg::small();
+        let a = gen_requests(&cfg);
+        let b = gen_requests(&cfg);
+        assert_eq!(a.len(), b.len());
+        for (ra, rb) in a.iter().zip(b.iter()) {
+            assert_eq!(ra.id, rb.id);
+            assert_eq!(ra.adapter, rb.adapter);
+            let (xa, xb) = (ra.batch["x"].as_f32().unwrap(), rb.batch["x"].as_f32().unwrap());
+            assert_eq!(xa, xb, "batch contents must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn zipf_head_is_heavier_than_tail() {
+        let cfg = WorkloadCfg { requests: 2000, ..WorkloadCfg::small() };
+        let reqs = gen_requests(&cfg);
+        let mut counts: HashMap<String, usize> = HashMap::new();
+        for r in &reqs {
+            *counts.entry(r.adapter.clone()).or_insert(0) += 1;
+        }
+        let head = counts.get(&adapter_name(0)).copied().unwrap_or(0);
+        let tail = counts.get(&adapter_name(cfg.adapters - 1)).copied().unwrap_or(0);
+        assert!(
+            head > 4 * tail.max(1),
+            "rank-0 adapter ({head}) must dominate rank-{} ({tail})",
+            cfg.adapters - 1
+        );
+        // weights are monotone by construction
+        let w = zipf_weights(8, 1.1);
+        assert!(w.windows(2).all(|p| p[0] > p[1]));
+    }
+
+    #[test]
+    fn grouped_arrival_is_contiguous_per_adapter() {
+        let cfg = WorkloadCfg { arrival: Arrival::Grouped, ..WorkloadCfg::small() };
+        let reqs = gen_requests(&cfg);
+        let mut seen_blocks: Vec<String> = Vec::new();
+        for r in &reqs {
+            if seen_blocks.last().map(|l| l != &r.adapter).unwrap_or(true) {
+                assert!(
+                    !seen_blocks.contains(&r.adapter),
+                    "adapter {} appears in two separate blocks",
+                    r.adapter
+                );
+                seen_blocks.push(r.adapter.clone());
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_alternates_until_buckets_drain() {
+        let cfg = WorkloadCfg {
+            adapters: 4,
+            requests: 64,
+            arrival: Arrival::RoundRobin,
+            ..WorkloadCfg::small()
+        };
+        let reqs = gen_requests(&cfg);
+        assert_eq!(reqs.len(), 64);
+        // In the first full round every distinct adapter appears once
+        // before any repeats.
+        let mut seen = Vec::new();
+        for r in &reqs {
+            if seen.contains(&r.adapter) {
+                break;
+            }
+            seen.push(r.adapter.clone());
+        }
+        let distinct: std::collections::HashSet<&String> =
+            reqs.iter().map(|r| &r.adapter).collect();
+        assert_eq!(seen.len(), distinct.len(), "first round must cover all drawn adapters");
+    }
+
+    #[test]
+    fn populate_store_writes_distinct_adapters() {
+        let dir = std::env::temp_dir().join(format!("fp_workload_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = SharedAdapterStore::open(&dir).unwrap();
+        let cfg = WorkloadCfg { adapters: 4, ..WorkloadCfg::small() };
+        let names = populate_store(&store, &cfg).unwrap();
+        assert_eq!(names.len(), 4);
+        let a = store.load(&names[0]).unwrap();
+        let b = store.load(&names[1]).unwrap();
+        assert_eq!(a.tensors.len(), cfg.sites);
+        let (ta, tb) = (a.tensors[0].1.as_f32().unwrap(), b.tensors[0].1.as_f32().unwrap());
+        assert_ne!(ta, tb, "adapters must have distinct coefficients");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

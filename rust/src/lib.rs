@@ -28,6 +28,18 @@
 //! [`coordinator::serving::SwapCache`]) so a warm adapter swap is a pair of
 //! hash lookups — no disk read, no decode, no inverse DFT.
 //!
+//! ## Serving scheduler
+//!
+//! Queues are served by the concurrent micro-batching scheduler in
+//! [`coordinator::scheduler`]: bounded admission, adapter-affinity
+//! coalescing (deterministic, admission-tick-driven), and a scoped worker
+//! pool sharing the cache stack through lock-partitioned shards
+//! ([`adapter::SharedAdapterStore`], [`coordinator::serving::SharedSwap`]).
+//! Worker threads are claimed from the matmul budget
+//! ([`tensor::par::reserve_threads`]) so nested GEMMs never oversubscribe
+//! the machine. Reproducible workloads (Zipf adapter popularity,
+//! configurable arrival order) live in [`coordinator::workload`].
+//!
 //! ## Feature flags
 //!
 //! * `xla-runtime` — use the real `xla` crate (PJRT) for compiled HLO

@@ -55,7 +55,7 @@ fn print_usage() {
          \x20 table <1|2|3|4|5|6|13>  [--quick --steps N --seeds N]\n\
          \x20 figure <3|4|5|6|7>   [--quick --steps N --seeds N]\n\
          \x20 all [--quick]                      run every table and figure\n\
-         \x20 serve [--adapters N --requests N]  multi-adapter serving demo"
+         \x20 serve [--adapters N --requests N --workers N]  multi-adapter serving demo"
     );
 }
 
@@ -190,7 +190,8 @@ fn probe(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    use fourier_peft::adapter::{AdapterKind, AdapterStore};
+    use fourier_peft::adapter::{AdapterKind, SharedAdapterStore};
+    use fourier_peft::coordinator::scheduler::SchedCfg;
     use fourier_peft::coordinator::serving::{Request, Server};
     use fourier_peft::data::glue::GlueTask;
 
@@ -200,7 +201,7 @@ fn serve(args: &Args) -> Result<()> {
     let artifact = args.str_or("artifact", "enc_base__fourierft_n64__ce");
     let meta = trainer.registry.meta(artifact)?.clone();
     let store_dir = fourier_peft::runs_dir().join("serve_demo");
-    let store = AdapterStore::open(&store_dir)?;
+    let store = SharedAdapterStore::open(&store_dir)?;
     let mut server = Server::new(&trainer, artifact, store, 2024, 8.0)?;
 
     // Publish n adapters: quick fine-tunes on different tasks.
@@ -237,11 +238,25 @@ fn serve(args: &Args) -> Result<()> {
             }
         })
         .collect();
-    let (results, stats) = server.serve(queue)?;
+    // `--workers 0` (the default) falls back to the machine-sized
+    // scheduler config; `--workers 1` is the single-worker scheduler.
+    let workers = args.usize_or("workers", 0);
+    let (results, stats) = if workers == 0 {
+        server.serve(queue)?
+    } else {
+        let cfg = SchedCfg { workers, ..SchedCfg::default() };
+        server.serve_scheduled(queue, &cfg)?
+    };
     println!(
-        "served {} requests in {} batches  swaps {}  swap {:.3}s  exec {:.3}s  => {:.1} req/s",
-        results.len(), stats.batches, stats.swaps, stats.swap_seconds, stats.exec_seconds,
-        stats.throughput_rps()
+        "served {} requests in {} micro-batches (max coalesce {})  swaps {} ({} warm)  \
+         swap {:.3}s  exec {:.3}s  wall {:.3}s  => {:.1} req/s",
+        results.len(), stats.batches, stats.max_micro_batch, stats.swaps, stats.warm_swaps,
+        stats.swap_seconds, stats.exec_seconds, stats.wall_seconds, stats.throughput_rps()
+    );
+    println!(
+        "latency p50 {:.1}ms  p95 {:.1}ms  p99 {:.1}ms  queue depth peak {}  disk reads {}",
+        stats.latency_p50() * 1e3, stats.latency_p95() * 1e3, stats.latency_p99() * 1e3,
+        stats.queue_depth_peak, stats.disk_reads
     );
     println!("store total bytes: {}", fourier_peft::util::fmt_bytes(server.store.total_bytes()? as usize));
     Ok(())

@@ -39,6 +39,26 @@ pub struct ParamSet {
     pub statics: Vec<xla::Literal>,
 }
 
+impl ParamSet {
+    /// Deep copy, for per-worker serve state: the concurrent scheduler
+    /// gives every worker its own `ParamSet` so adapter hot-swaps and the
+    /// eval-time m/v roll never race across threads. Real-runtime
+    /// literals round-trip through host bytes ([`clone_literal`]); the
+    /// compat backend clones host tensors directly.
+    pub fn try_clone(&self) -> Result<ParamSet> {
+        fn dup(v: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            v.iter().map(clone_literal).collect()
+        }
+        Ok(ParamSet {
+            base: dup(&self.base)?,
+            adapt: dup(&self.adapt)?,
+            m: dup(&self.m)?,
+            v: dup(&self.v)?,
+            statics: dup(&self.statics)?,
+        })
+    }
+}
+
 /// Result of one step call.
 pub struct StepOut {
     pub loss: f32,
@@ -200,9 +220,17 @@ impl Executable {
     }
 }
 
-/// Literal has no Clone; round-trip through host bytes.
+/// The real `xla::Literal` has no Clone; round-trip through host bytes.
+#[cfg(feature = "xla-runtime")]
 pub fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
     to_literal(&from_literal(l)?)
+}
+
+/// The compat literal is a host tensor; clone it directly (no shape/dtype
+/// re-encode).
+#[cfg(not(feature = "xla-runtime"))]
+pub fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    Ok(l.clone())
 }
 
 /// Run a base-init module: seed -> base tensors (sorted name order).
@@ -216,4 +244,27 @@ pub fn run_base_init(
     Ok(exe.execute::<xla::Literal>(&[seed_lit])?[0][0]
         .to_literal_sync()?
         .to_tuple()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_set_try_clone_is_deep() {
+        let lit = |v: &[f32]| to_literal(&Tensor::f32(&[v.len()], v.to_vec())).unwrap();
+        let ps = ParamSet {
+            base: vec![lit(&[1.0, 2.0])],
+            adapt: vec![lit(&[3.0])],
+            m: vec![lit(&[0.0])],
+            v: vec![lit(&[0.0])],
+            statics: vec![],
+        };
+        let mut copy = ps.try_clone().unwrap();
+        copy.adapt = vec![lit(&[9.0])];
+        // mutating the copy leaves the original untouched
+        assert_eq!(ps.adapt[0].to_vec::<f32>().unwrap(), vec![3.0]);
+        assert_eq!(copy.base[0].to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(copy.statics.len(), 0);
+    }
 }

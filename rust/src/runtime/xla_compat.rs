@@ -82,8 +82,11 @@ impl NativeType for i32 {
 
 /// Host literal: a dense tensor with shape metadata. The real `xla::Literal`
 /// has no `Clone`; this one keeps the same API surface the coordinator uses
-/// (construction via `vec1` + `reshape`, extraction via `to_vec`).
-#[derive(Debug)]
+/// (construction via `vec1` + `reshape`, extraction via `to_vec`). It *is*
+/// `Clone` (a host-vector copy), which `exec::clone_literal` uses as a fast
+/// path when deep-copying per-worker serve state — callers must still go
+/// through `clone_literal` so the real-runtime build keeps compiling.
+#[derive(Debug, Clone)]
 pub struct Literal {
     tensor: Tensor,
 }

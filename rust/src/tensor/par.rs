@@ -12,9 +12,17 @@
 //! i-k-j kernel so a K-panel of B stays hot in cache while it streams
 //! through its rows of A. Zero A-elements skip the inner row update,
 //! preserving the sparse-friendly behavior of the old kernel.
+//!
+//! Thread-budget coordination: other parallel sections (the serving
+//! scheduler's worker pool in `coordinator::scheduler`) claim threads via
+//! [`reserve_threads`]; [`num_threads`] divides the leftover threads
+//! evenly among the reserved workers, so a GEMM running *inside* a serve
+//! worker gets only its fair share (single-threaded on small hosts)
+//! instead of spawning another full complement of threads per worker.
 
 use super::Tensor;
 use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// K-panel height for the blocked kernel: 256 rows of B at n ≤ 2048 f32
 /// columns is ≤ 2 MB, comfortably L2-resident on anything current.
@@ -24,9 +32,52 @@ const KC: usize = 256;
 /// the whole product; run single-threaded.
 const PAR_THRESHOLD: usize = 1 << 16;
 
-/// Worker count for parallel sections (physical parallelism, ≥ 1).
+/// Threads currently claimed by non-matmul parallel sections (the serving
+/// scheduler's worker pool). See [`reserve_threads`].
+static RESERVED: AtomicUsize = AtomicUsize::new(0);
+
+/// RAII claim of `n` threads from the process-wide budget. While the
+/// reservation is alive, [`num_threads`] hands parallel sections only an
+/// even share of the unreserved threads, so GEMMs nested under serve
+/// workers don't oversubscribe the machine (serve workers × matmul
+/// workers). Dropping the reservation returns the threads.
+#[derive(Debug)]
+pub struct ThreadReservation {
+    n: usize,
+}
+
+/// Claim `n` threads from the matmul budget for the reservation's lifetime.
+pub fn reserve_threads(n: usize) -> ThreadReservation {
+    RESERVED.fetch_add(n, Ordering::SeqCst);
+    ThreadReservation { n }
+}
+
+impl Drop for ThreadReservation {
+    fn drop(&mut self) {
+        RESERVED.fetch_sub(self.n, Ordering::SeqCst);
+    }
+}
+
+/// Threads currently reserved by other parallel sections.
+pub fn reserved_threads() -> usize {
+    RESERVED.load(Ordering::SeqCst)
+}
+
+/// Worker count for parallel sections. With no reservations outstanding:
+/// the physical parallelism. While `r` threads are reserved, each reserved
+/// thread is a worker that may itself run a nested parallel section
+/// concurrently, so the leftover `avail - r` threads are shared evenly
+/// among them — total compute threads stay ≈ `avail` instead of
+/// `r × (avail - r)`. Floored at 1 (on hosts where `r ≥ avail`, nested
+/// sections run single-threaded).
 pub fn num_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let reserved = RESERVED.load(Ordering::SeqCst);
+    if reserved == 0 {
+        avail
+    } else {
+        (avail.saturating_sub(reserved) / reserved).max(1)
+    }
 }
 
 /// C(m×n) = A(m×k) · B(k×n), all row-major f32 slices.
@@ -126,6 +177,32 @@ mod tests {
     fn large_enough_to_cross_the_thread_threshold() {
         let mut rng = Rng::new(7);
         let (m, k, n) = (97, 120, 80); // m not divisible by thread count
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        let got = matmul_f32(&a, &b, m, k, n);
+        let want = matmul_ref(&a, &b, m, k, n);
+        let max = got.iter().zip(&want).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        assert!(max < 1e-3, "max diff {max}");
+    }
+
+    #[test]
+    fn thread_reservation_floors_at_one_and_restores() {
+        let before = reserved_threads();
+        {
+            let _r = reserve_threads(1000);
+            assert!(reserved_threads() >= before + 1000);
+            assert_eq!(num_threads(), 1, "a huge reservation must floor the budget at 1");
+        }
+        // Other tests may hold small reservations concurrently; ours (1000)
+        // must be returned on drop.
+        assert!(reserved_threads() < before + 1000);
+    }
+
+    #[test]
+    fn matmul_is_correct_under_reservation() {
+        let _r = reserve_threads(1000); // force the single-threaded path
+        let mut rng = Rng::new(0x77);
+        let (m, k, n) = (33, 70, 41);
         let a = rng.normal_vec(m * k, 1.0);
         let b = rng.normal_vec(k * n, 1.0);
         let got = matmul_f32(&a, &b, m, k, n);

@@ -8,7 +8,7 @@
 //! plus machine-readable JSON appended to `bench_results.json` when the
 //! `BENCH_JSON` env var points at a path.
 
-use super::{mean_std, median};
+use super::{mean_std, median, percentile};
 use std::time::Instant;
 
 pub struct Bench {
@@ -67,6 +67,38 @@ impl Bench {
     /// Report a throughput measurement computed elsewhere.
     pub fn report_rate(&self, name: &str, items: f64, seconds: f64, unit: &str) {
         println!("{:<44} rate: {:.1} {unit}/s  ({items} in {:.3}s)", name, items / seconds, seconds);
+    }
+
+    /// Report p50/p95/p99 of a latency sample (seconds), e.g. the
+    /// per-request latencies a `ServeStats` collected, with the same
+    /// optional JSON side channel as [`Bench::run`].
+    pub fn report_percentiles(&self, name: &str, latencies: &[f64]) {
+        let p50 = percentile(latencies, 50.0);
+        let p95 = percentile(latencies, 95.0);
+        let p99 = percentile(latencies, 99.0);
+        println!(
+            "{:<44} p50 {}  p95 {}  p99 {}  (n={})",
+            name,
+            fmt_time(p50),
+            fmt_time(p95),
+            fmt_time(p99),
+            latencies.len(),
+        );
+        if let Ok(path) = std::env::var("BENCH_JSON") {
+            let line = format!(
+                "{{\"name\": \"{}\", \"p50_s\": {}, \"p95_s\": {}, \"p99_s\": {}, \"n\": {}}}\n",
+                name,
+                p50,
+                p95,
+                p99,
+                latencies.len()
+            );
+            let _ = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+                .map(|mut f| std::io::Write::write_all(&mut f, line.as_bytes()));
+        }
     }
 }
 

@@ -51,18 +51,31 @@ pub fn mean_std(xs: &[f64]) -> (f64, f64) {
     (mean, var.sqrt())
 }
 
-/// Median (copies + sorts).
+/// Median: the 50th [`percentile`] (under the linear-interpolation
+/// convention the two agree for both odd and even lengths).
 pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// p-th percentile (p in [0, 100]) with linear interpolation between
+/// closest ranks (the numpy `linear` convention: rank = p/100 · (n−1)).
+/// Copies + sorts; empty input returns 0.0 so latency reporting on an
+/// empty serve call degrades gracefully (matching [`median`]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let mid = v.len() / 2;
-    if v.len() % 2 == 0 {
-        (v[mid - 1] + v[mid]) / 2.0
+    let p = p.clamp(0.0, 100.0);
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
     } else {
-        v[mid]
+        let frac = rank - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
     }
 }
 
@@ -87,6 +100,24 @@ mod tests {
     fn median_even_odd() {
         assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
         assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn percentile_known_vectors() {
+        // 1..=100: p50 interpolates between 50 and 51.
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&v, 50.0) - 50.5).abs() < 1e-9);
+        assert!((percentile(&v, 0.0) - 1.0).abs() < 1e-9);
+        assert!((percentile(&v, 100.0) - 100.0).abs() < 1e-9);
+        assert!((percentile(&v, 95.0) - 95.05).abs() < 1e-9);
+        assert!((percentile(&v, 99.0) - 99.01).abs() < 1e-9);
+        // unsorted input is sorted internally
+        assert!((percentile(&[3.0, 1.0, 2.0], 50.0) - 2.0).abs() < 1e-12);
+        // degenerate cases
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.5], 99.0), 7.5);
+        // out-of-range p clamps
+        assert_eq!(percentile(&[1.0, 2.0], 150.0), 2.0);
     }
 
     #[test]

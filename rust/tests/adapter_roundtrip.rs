@@ -9,7 +9,7 @@
 
 use fourier_peft::adapter::merge::{delta_device, delta_host};
 use fourier_peft::runtime::xla;
-use fourier_peft::adapter::{AdapterFile, AdapterKind, AdapterStore};
+use fourier_peft::adapter::{AdapterFile, AdapterKind, SharedAdapterStore};
 use fourier_peft::coordinator::serving::{Request, Server};
 use fourier_peft::coordinator::trainer::Trainer;
 use fourier_peft::data::collate_text;
@@ -45,7 +45,7 @@ fn host_and_device_delta_reconstruction_agree() {
 fn finetune_publish_reload_serve() {
     let trainer = Trainer::open_default().unwrap();
     let artifact = "mlp__fourierft_n128__ce";
-    let store = AdapterStore::open(&tmpdir("serve")).unwrap();
+    let store = SharedAdapterStore::open(&tmpdir("serve")).unwrap();
     let mut server = Server::new(&trainer, artifact, store, 2024, 64.0).unwrap();
 
     // Quick fine-tune on blobs, then publish twice under different names.

@@ -162,6 +162,130 @@ fn cap_evicts_coldest_adapter_and_rebuilds_on_return() {
     assert_eq!(swap.stats.delta_builds, 4);
 }
 
+/// Property test: under arbitrary interleavings of layer accesses,
+/// invalidations, and clears, the cache's LRU order matches a trivial
+/// reference model (MRU-last vector with front eviction), its internal
+/// bookkeeping stays consistent (no phantom names in `order`, every
+/// cached name tracked, cap respected), and both cache layers evict
+/// together.
+#[test]
+fn lru_property_eviction_matches_reference_model() {
+    let (sites, d, n) = (1, 8, 4);
+    let mut rng = Rng::new(0x10F);
+    let pool: Vec<String> = (0..8).map(|i| format!("p{i}")).collect();
+    let mut store = AdapterStore::open(&tmpdir("prop")).unwrap();
+    for name in &pool {
+        store.save(name, &fourierft_adapter(&mut rng, sites, n, 2024)).unwrap();
+    }
+    for cap in [1usize, 2, 3, 5] {
+        let mut swap = SwapCache::with_cap(site_dims(sites, d), cap);
+        let mut model: Vec<String> = Vec::new(); // resident names, MRU-last
+        for step in 0..300 {
+            let name = pool[rng.below(pool.len())].clone();
+            match rng.below(10) {
+                0 => {
+                    swap.invalidate(&name);
+                    model.retain(|m| m != &name);
+                }
+                1 => {
+                    swap.clear();
+                    model.clear();
+                }
+                k => {
+                    // exercise both cache layers; either one touches LRU
+                    if k % 2 == 0 {
+                        swap.deltas(&mut store, &name).unwrap();
+                    } else {
+                        swap.adapt_tensors(&mut store, &name).unwrap();
+                    }
+                    if let Some(pos) = model.iter().position(|m| m == &name) {
+                        let x = model.remove(pos);
+                        model.push(x);
+                    } else {
+                        if model.len() >= cap {
+                            let evicted = model.remove(0);
+                            assert!(
+                                !swap.contains(&evicted),
+                                "cap {cap} step {step}: '{evicted}' must be evicted from both layers"
+                            );
+                        }
+                        model.push(name.clone());
+                    }
+                }
+            }
+            assert!(swap.check_consistent(), "cap {cap} step {step}: invariants broken");
+            assert_eq!(swap.resident(), model, "cap {cap} step {step}: LRU order diverged");
+        }
+    }
+}
+
+#[test]
+fn lru_cap_of_one_alternation() {
+    let (sites, d, n) = (1, 8, 4);
+    let mut rng = Rng::new(0xCA9);
+    let mut store = AdapterStore::open(&tmpdir("cap1")).unwrap();
+    for name in ["a", "b"] {
+        store.save(name, &fourierft_adapter(&mut rng, sites, n, 2024)).unwrap();
+    }
+    let mut swap = SwapCache::with_cap(site_dims(sites, d), 1);
+    for round in 0..5 {
+        swap.deltas(&mut store, "a").unwrap();
+        assert_eq!(swap.resident(), vec!["a".to_string()]);
+        assert!(!swap.contains("b"));
+        swap.deltas(&mut store, "b").unwrap();
+        assert_eq!(swap.resident(), vec!["b".to_string()]);
+        assert!(!swap.contains("a"));
+        assert!(swap.check_consistent(), "round {round}");
+    }
+    // every access was an eviction + rebuild
+    assert_eq!(swap.stats.delta_builds, 10);
+    assert_eq!(swap.stats.delta_hits, 0);
+    // repeated access of the resident name is a hit, not a rebuild
+    swap.deltas(&mut store, "b").unwrap();
+    assert_eq!(swap.stats.delta_hits, 1);
+    assert_eq!(swap.stats.delta_builds, 10);
+}
+
+#[test]
+fn invalidate_and_clear_drop_both_layers_and_keep_order_consistent() {
+    let (sites, d, n) = (1, 8, 4);
+    let mut rng = Rng::new(0x1AB);
+    let mut store = AdapterStore::open(&tmpdir("invclear")).unwrap();
+    for name in ["a", "b", "c"] {
+        store.save(name, &fourierft_adapter(&mut rng, sites, n, 2024)).unwrap();
+    }
+    let mut swap = SwapCache::new(site_dims(sites, d));
+    // populate both layers for every name
+    for name in ["a", "b", "c"] {
+        swap.deltas(&mut store, name).unwrap();
+        swap.adapt_tensors(&mut store, name).unwrap();
+    }
+    assert_eq!(swap.resident(), vec!["a".to_string(), "b".into(), "c".into()]);
+
+    // invalidating a resident name drops both layers and its order slot
+    swap.invalidate("b");
+    assert!(!swap.contains("b"));
+    assert_eq!(swap.resident(), vec!["a".to_string(), "c".into()]);
+    assert!(swap.check_consistent(), "no phantom 'b' may remain in order");
+
+    // invalidating an absent name is a no-op
+    swap.invalidate("nope");
+    assert_eq!(swap.resident(), vec!["a".to_string(), "c".into()]);
+    assert!(swap.check_consistent());
+
+    // clear empties everything
+    swap.clear();
+    assert!(swap.resident().is_empty());
+    assert!(!swap.contains("a") && !swap.contains("c"));
+    assert!(swap.check_consistent());
+
+    // the cache still works after a clear (rebuild counted)
+    let builds = swap.stats.delta_builds;
+    swap.deltas(&mut store, "a").unwrap();
+    assert_eq!(swap.stats.delta_builds, builds + 1);
+    assert_eq!(swap.resident(), vec!["a".to_string()]);
+}
+
 #[test]
 fn lora_and_dense_adapters_reconstruct_through_the_same_cache() {
     let d = 24;
