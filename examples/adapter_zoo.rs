@@ -9,7 +9,7 @@
 //!
 //! Run: `cargo run --example adapter_zoo -- [--steps 60]`
 
-use fourier_peft::adapter::{AdapterFile, AdapterKind, SharedAdapterStore};
+use fourier_peft::adapter::{AdapterFile, SharedAdapterStore};
 use fourier_peft::coordinator::experiments::{glue_run, Opts};
 use fourier_peft::coordinator::serving::{Request, Server};
 use fourier_peft::coordinator::trainer::Trainer;
@@ -27,26 +27,30 @@ fn main() -> anyhow::Result<()> {
     let store = SharedAdapterStore::open(&store_dir)?;
 
     let tasks = [GlueTask::Sst2, GlueTask::Mrpc, GlueTask::Rte, GlueTask::Qnli];
-    let methods: [(&str, &str, AdapterKind); 3] = [
-        ("fourierft", "enc_base__fourierft_n64__ce", AdapterKind::FourierFt),
-        ("lora", "enc_base__lora_r8__ce", AdapterKind::Lora),
-        ("dense", "enc_base__ff__ce", AdapterKind::DenseDelta),
+    // (registered method id, training artifact) — the method id is all the
+    // save path needs; the registry owns the per-method tensor grammar.
+    let methods: [(&str, &str); 3] = [
+        ("fourierft", "enc_base__fourierft_n64__ce"),
+        ("lora", "enc_base__lora_r8__ce"),
+        ("dense", "enc_base__ff__ce"),
     ];
 
     println!("{:<10} {:<8} {:>10} {:>12} {:>8}", "method", "task", "metric", "bytes", "vs fft");
     let mut fft_bytes = 0usize;
-    for (mname, artifact, kind) in methods {
+    for (mname, artifact) in methods {
+        let site_dims = trainer.registry.meta(artifact)?.site_dims();
         for task in tasks {
             let res = glue_run(&trainer, task, artifact, &opts, 0, 1.0)?;
-            let file = AdapterFile {
-                kind,
-                seed: 2024,
-                alpha: 8.0,
-                meta: vec![("task".into(), task.name().into())],
+            let file = AdapterFile::from_named(
+                mname,
+                2024,
+                8.0,
+                vec![("task".into(), task.name().into())],
                 // paper convention: adapters exclude the task head for byte
                 // accounting (heads are tiny and method-independent)
-                tensors: res.adapt.into_iter().filter(|(k, _)| !k.starts_with("head.")).collect(),
-            };
+                res.adapt.into_iter().filter(|(k, _)| !k.starts_with("head.")).collect(),
+                |site| site_dims.get(site).copied(),
+            )?;
             let bytes = store.save(&format!("{mname}_{}", task.name()), &file)?;
             if mname == "fourierft" {
                 fft_bytes = bytes;

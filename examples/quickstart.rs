@@ -8,7 +8,7 @@
 //!
 //! Run: `cargo run --example quickstart`
 
-use fourier_peft::adapter::{AdapterFile, AdapterKind, AdapterStore};
+use fourier_peft::adapter::{AdapterFile, AdapterStore};
 use fourier_peft::coordinator::trainer::{FinetuneCfg, Trainer};
 use fourier_peft::data::blobs;
 use fourier_peft::metrics::classify;
@@ -40,14 +40,18 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- 3. save the adapter --------------------------------------------
+    // format v2 is self-describing: the method id, each tensor's
+    // (site, role), and each site's weight dims go into the file.
     let mut store = AdapterStore::open(&fourier_peft::runs_dir().join("quickstart"))?;
-    let file = AdapterFile {
-        kind: AdapterKind::FourierFt,
-        seed: cfg.entry_seed,
-        alpha: cfg.scaling,
-        meta: vec![("task".into(), "blobs8".into()), ("n".into(), "128".into())],
-        tensors: result.adapt,
-    };
+    let site_dims = trainer.executable(artifact)?.meta.site_dims();
+    let file = AdapterFile::from_named(
+        "fourierft",
+        cfg.entry_seed,
+        cfg.scaling,
+        vec![("task".into(), "blobs8".into()), ("n".into(), "128".into())],
+        result.adapt,
+        |site| site_dims.get(site).copied(),
+    )?;
     let bytes = store.save("blobs8", &file)?;
     println!("adapter saved: {} ({} trainable coefficients/site)", fmt_bytes(bytes), 128);
 
@@ -57,7 +61,10 @@ fn main() -> anyhow::Result<()> {
     let base = trainer.base_for(&exe.meta)?;
     let mut state = exe.init_state(0, base, statics)?;
     let reloaded = store.load("blobs8")?;
-    exe.set_adapt(&mut state, &reloaded.tensors.into_iter().collect())?;
+    exe.set_adapt(
+        &mut state,
+        &reloaded.tensors.into_iter().map(|e| (e.name, e.tensor)).collect(),
+    )?;
 
     let pts = blobs::dataset(64, 0.35, 0xDEED);
     let out = exe.eval(&mut state, cfg.scaling, &blobs::collate(&pts))?;

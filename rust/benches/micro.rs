@@ -19,7 +19,8 @@
 //! when the registry or the `xla-runtime` feature is unavailable, so the
 //! pure-Rust rows always run.
 
-use fourier_peft::adapter::format::{AdapterFile, AdapterKind};
+use fourier_peft::adapter::format::AdapterFile;
+use fourier_peft::adapter::method::{self, MethodHp, SiteSpec};
 use fourier_peft::adapter::store::AdapterStore;
 use fourier_peft::coordinator::serving::SwapCache;
 use fourier_peft::coordinator::trainer::{FinetuneCfg, Trainer};
@@ -70,6 +71,26 @@ fn main() -> anyhow::Result<()> {
         fmt_time(gemm_at_n1024),
     );
 
+    // --- the two new registry methods, through the trait dispatch ---------
+    // (`reconstruct/loca/*` is the iDCT-at-learned-locations GEMM,
+    //  `reconstruct/circulant/*` the O(d²) circulant×diagonal gather.)
+    {
+        let site = SiteSpec { name: "w".into(), d1: d, d2: d };
+        let mut mrng = Rng::new(0x10CA);
+        for n in [16usize, 64, 256, 1024] {
+            let hp = MethodHp { n, rank: 8, init_std: 1.0 };
+            let a =
+                method::init_adapter("loca", &mut mrng, &[site.clone()], &hp, 2024, 8.0, vec![])?;
+            b.run(&format!("reconstruct/loca/d128_n{n}"), || {
+                method::site_deltas(&a).unwrap()
+            });
+        }
+        let a = method::init_adapter(
+            "circulant", &mut mrng, &[site], &MethodHp::default(), 2024, 8.0, vec![],
+        )?;
+        b.run("reconstruct/circulant/d128", || method::site_deltas(&a).unwrap());
+    }
+
     // --- serving swap-cache stack: cold vs warm ΔW swap -------------------
     {
         let dir = std::env::temp_dir().join(format!("fp_bench_swap_{}", std::process::id()));
@@ -79,17 +100,18 @@ fn main() -> anyhow::Result<()> {
         let sites = 8;
         let site_dims: BTreeMap<String, (usize, usize)> =
             (0..sites).map(|i| (format!("blk{i}.attn.wq.w"), (d, d))).collect();
-        let file = AdapterFile {
-            kind: AdapterKind::FourierFt,
-            seed: 2024,
-            alpha: 8.0,
-            meta: vec![("n".into(), n.to_string())],
-            tensors: (0..sites)
+        let file = AdapterFile::from_named(
+            "fourierft",
+            2024,
+            8.0,
+            vec![("n".into(), n.to_string())],
+            (0..sites)
                 .map(|i| (format!("spec.blk{i}.attn.wq.w.c"), {
                     Tensor::f32(&[n], rng.normal_vec(n, 1.0))
                 }))
                 .collect(),
-        };
+            |site| site_dims.get(site).copied(),
+        )?;
         store.save("hot_adapter", &file)?;
 
         let mut cold = SwapCache::new(site_dims.clone());
@@ -185,19 +207,16 @@ fn main() -> anyhow::Result<()> {
     // --- adapter checkpoint save/load ------------------------------------
     let dir = std::env::temp_dir().join("fp_bench_store");
     let _ = std::fs::create_dir_all(&dir);
-    let make = |kind: AdapterKind, tensors: Vec<(String, Tensor)>| AdapterFile {
-        kind,
-        seed: 2024,
-        alpha: 8.0,
-        meta: vec![],
-        tensors,
+    let make = |method: &str, tensors: Vec<(String, Tensor)>| {
+        AdapterFile::from_named(method, 2024, 8.0, vec![], tensors, |_| Some((128, 128)))
+            .expect("builtin method")
     };
     let fft_file = make(
-        AdapterKind::FourierFt,
+        "fourierft",
         (0..8).map(|i| (format!("spec.blk{i}.c"), Tensor::zeros(&[64]))).collect(),
     );
     let lora_file = make(
-        AdapterKind::Lora,
+        "lora",
         (0..8)
             .flat_map(|i| [
                 (format!("lora.blk{i}.a"), Tensor::zeros(&[8, 128])),
@@ -206,7 +225,7 @@ fn main() -> anyhow::Result<()> {
             .collect(),
     );
     let dense_file = make(
-        AdapterKind::DenseDelta,
+        "dense",
         (0..8).map(|i| (format!("delta.blk{i}"), Tensor::zeros(&[128, 128]))).collect(),
     );
     for (name, file) in [("fourierft", &fft_file), ("lora", &lora_file), ("dense", &dense_file)] {

@@ -27,6 +27,30 @@ pub fn bytes_f32(params: usize) -> usize {
     params * 4
 }
 
+/// LoCA trainable parameters: n cosine coefficients per site (the n
+/// selected locations are frozen integer indices — stored, not trained).
+pub fn loca_params(n: usize, layers_t: usize) -> usize {
+    n * layers_t
+}
+
+/// Circulant+diagonal trainable parameters: 2·d per adapted d×d site.
+pub fn circulant_params(d: usize, layers_t: usize) -> usize {
+    2 * d * layers_t
+}
+
+/// Trainable parameters of any *registered* method across L_t adapted
+/// square d×d sites — the registry-driven generalization of the per-method
+/// formulas above, used by the cross-method budget table in
+/// EXPERIMENTS.md §Methods. Errors on unregistered ids.
+pub fn method_params(
+    method: &str,
+    d: usize,
+    layers_t: usize,
+    hp: &super::method::MethodHp,
+) -> anyhow::Result<usize> {
+    Ok(super::method::get(method)?.param_count(d, d, hp) * layers_t)
+}
+
 /// One row of the paper's Table 1.
 #[derive(Debug, Clone)]
 pub struct Table1Row {
@@ -152,5 +176,30 @@ mod tests {
     #[test]
     fn stored_numbers_include_shared_entries() {
         assert_eq!(fourierft_stored(1000, 24), 26_000);
+    }
+
+    #[test]
+    fn registry_params_agree_with_closed_forms() {
+        use crate::adapter::method::MethodHp;
+        let hp = MethodHp { n: 1000, rank: 8, init_std: 1.0 };
+        let (d, lt) = (768usize, 24usize);
+        assert_eq!(method_params("fourierft", d, lt, &hp).unwrap(), fourierft_params(1000, lt));
+        assert_eq!(method_params("lora", d, lt, &hp).unwrap(), lora_params(d, lt, 8));
+        assert_eq!(method_params("loca", d, lt, &hp).unwrap(), loca_params(1000, lt));
+        assert_eq!(method_params("circulant", d, lt, &hp).unwrap(), circulant_params(d, lt));
+        assert_eq!(method_params("bitfit", d, lt, &hp).unwrap(), d * lt);
+        assert_eq!(method_params("dense", d, lt, &hp).unwrap(), d * d * lt);
+        assert!(method_params("nope", d, lt, &hp).is_err());
+    }
+
+    #[test]
+    fn equal_budget_comparison_roberta_base() {
+        // The §Methods table: at RoBERTa-base scale (d=768, L_t=24),
+        // loca n=1000 matches fourierft n=1000 exactly; circulant sits at
+        // 2dL_t = 36,864 — an 8x reduction vs LoRA r=8 without any n knob.
+        assert_eq!(loca_params(1000, 24), fourierft_params(1000, 24));
+        assert_eq!(circulant_params(768, 24), 36_864);
+        let lora = lora_params(768, 24, 8);
+        assert!((lora as f64 / circulant_params(768, 24) as f64 - 8.0).abs() < 1e-9);
     }
 }

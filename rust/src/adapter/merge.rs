@@ -1,21 +1,32 @@
 //! ΔW reconstruction + merge into base weights.
 //!
 //! LoRA-family methods avoid inference latency by merging the learned
-//! change into W0 once (paper Eq. 4). Two paths:
+//! change into W0 once (paper Eq. 4). Method dispatch lives in
+//! [`crate::adapter::method`] — the per-method reconstruction grammar is
+//! defined exactly once there ([`site_deltas`] is a re-export of the
+//! registry's dispatch) and shared by this merge path, the serving swap
+//! cache, and the scheduler's `DeltaRunner`.
 //!
-//! * [`delta_host`] — pure rust (the "mobile RAM" path from the paper's
-//!   intro): rank-n trig IDFT, no XLA.
+//! This module keeps the low-level reconstruction primitives:
+//!
+//! * [`delta_host`] — pure rust FourierFT ΔW (the "mobile RAM" path from
+//!   the paper's intro): rank-n IDFT through the process-wide GEMM plan
+//!   cache, no XLA.
 //! * [`delta_device`] — run the AOT `delta_d{d}_n{n}.hlo.txt` artifact
 //!   (the same L1 Pallas kernel used in training) via PJRT; used by the
 //!   server where the client already exists and d is large.
+//! * [`delta_lora`] — (B @ A) * scaling.
 //!
-//! Both paths agree to f32 tolerance (asserted in tests/adapter_roundtrip).
+//! Host and device paths agree to f32 tolerance (asserted in
+//! tests/adapter_roundtrip).
 
-use super::format::{AdapterFile, AdapterKind};
+use super::format::AdapterFile;
 use crate::fourier::{plan, sample_entries, EntryBias};
 use crate::runtime::{from_literal, to_literal, xla, Client, Registry};
 use crate::tensor::{linalg, Tensor};
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, Result};
+
+pub use super::method::{site_deltas, site_deltas_with_dims};
 
 /// Reconstruct ΔW for one FourierFT site host-side, via the process-wide
 /// GEMM plan cache (twiddle tables built once per (d1, d2, entries) and
@@ -68,81 +79,17 @@ pub fn delta_lora(a: &Tensor, b: &Tensor, scaling: f32) -> Result<Tensor> {
     Ok(out)
 }
 
-/// Reconstruct the per-site ΔW set of a whole adapter file, host-side.
-///
-/// The adapter tensor names encode the target site: `spec.<site>.c`
-/// (fourierft, reconstructed through the global GEMM plan cache via
-/// [`delta_host`]), `lora.<site>.{a,b}`, `delta.<site>` (dense / bitfit).
-/// `dims` maps a site name to its (d1, d2) weight shape (needed for the
-/// spectral kinds); `head.*` tensors are skipped — they replace rather
-/// than add and are handled by the merge/serve callers.
-///
-/// This is the single reconstruction dispatch shared by
-/// [`merge_into_base`] and the serving swap cache
-/// (`coordinator::serving::SwapCache`), so both paths agree on adapter
-/// grammar by construction.
-pub fn site_deltas(
-    adapter: &AdapterFile,
-    dims: &dyn Fn(&str) -> Option<(usize, usize)>,
-) -> Result<Vec<(String, Tensor)>> {
-    let mut out = Vec::new();
-    match adapter.kind {
-        AdapterKind::FourierFt => {
-            let n: usize = adapter
-                .meta_get("n")
-                .and_then(|v| v.parse().ok())
-                .ok_or_else(|| anyhow!("adapter missing n meta"))?;
-            for (name, t) in &adapter.tensors {
-                if let Some(rest) = name.strip_prefix("spec.") {
-                    let site = rest.strip_suffix(".c").unwrap_or(rest);
-                    let (d1, d2) = dims(site)
-                        .ok_or_else(|| anyhow!("unknown adapter site '{site}'"))?;
-                    out.push((
-                        site.to_string(),
-                        delta_host(t, adapter.seed, n, d1, d2, adapter.alpha)?,
-                    ));
-                }
-            }
-        }
-        AdapterKind::Lora => {
-            // pair up a/b by site
-            for (name, a_t) in &adapter.tensors {
-                if let Some(site) = name.strip_prefix("lora.").and_then(|r| r.strip_suffix(".a"))
-                {
-                    let b_name = format!("lora.{site}.b");
-                    let b_t = adapter
-                        .tensors
-                        .iter()
-                        .find(|(n2, _)| n2 == &b_name)
-                        .map(|(_, t)| t)
-                        .ok_or_else(|| anyhow!("missing {b_name}"))?;
-                    out.push((site.to_string(), delta_lora(a_t, b_t, adapter.alpha)?));
-                }
-            }
-        }
-        AdapterKind::DenseDelta | AdapterKind::BitFit => {
-            for (name, t) in &adapter.tensors {
-                if let Some(site) = name.strip_prefix("delta.") {
-                    out.push((site.to_string(), t.clone()));
-                } else if !name.starts_with("head.") {
-                    bail!("unexpected tensor {name} in dense adapter");
-                }
-            }
-        }
-    }
-    Ok(out)
-}
-
 /// Merge a saved adapter into a named set of base weights, host-side.
 ///
-/// `base` maps base tensor name -> weight. ΔW per site comes from
-/// [`site_deltas`]; head tensors (`head.*`) are returned separately —
-/// they replace rather than add.
+/// `base` maps base tensor name -> weight. ΔW per site comes from the
+/// method registry's [`site_deltas_with_dims`] (base-weight shapes serve
+/// as the dims fallback for v1 files without stored dims); head tensors
+/// (role `"head"`) are returned separately — they replace rather than add.
 pub fn merge_into_base(
     adapter: &AdapterFile,
     base: &mut std::collections::BTreeMap<String, Tensor>,
 ) -> Result<Vec<(String, Tensor)>> {
-    let deltas = site_deltas(adapter, &|site| {
+    let deltas = site_deltas_with_dims(adapter, |site| {
         base.get(site).filter(|w| w.shape.len() == 2).map(|w| (w.shape[0], w.shape[1]))
     })?;
     for (site, delta) in deltas {
@@ -150,12 +97,7 @@ pub fn merge_into_base(
             .ok_or_else(|| anyhow!("base missing site {site}"))?
             .add_assign(&delta)?;
     }
-    Ok(adapter
-        .tensors
-        .iter()
-        .filter(|(name, _)| name.starts_with("head."))
-        .cloned()
-        .collect())
+    Ok(adapter.head_tensors())
 }
 
 #[cfg(test)]
@@ -174,16 +116,18 @@ mod tests {
     #[test]
     fn merge_dense_adds_and_returns_heads() {
         let mut base = BTreeMap::from([("w.w".to_string(), Tensor::f32(&[2], vec![1.0, 2.0]))]);
-        let adapter = AdapterFile {
-            kind: AdapterKind::DenseDelta,
-            seed: 0,
-            alpha: 1.0,
-            meta: vec![],
-            tensors: vec![
+        let adapter = AdapterFile::from_named(
+            "dense",
+            0,
+            1.0,
+            vec![],
+            vec![
                 ("delta.w.w".into(), Tensor::f32(&[2], vec![0.5, -0.5])),
                 ("head.w".into(), Tensor::f32(&[1], vec![9.0])),
             ],
-        };
+            |_| None,
+        )
+        .unwrap();
         let heads = merge_into_base(&adapter, &mut base).unwrap();
         assert_eq!(base["w.w"].as_f32().unwrap(), &[1.5, 1.5]);
         assert_eq!(heads.len(), 1);
@@ -196,31 +140,55 @@ mod tests {
             Tensor::f32(&[8, 8], (0..64).map(|i| i as f32).collect()),
         )]);
         let before = base["blk0.attn.wq.w"].clone();
-        let adapter = AdapterFile {
-            kind: AdapterKind::FourierFt,
-            seed: 2024,
-            alpha: 300.0,
-            meta: vec![("n".into(), "4".into())],
-            tensors: vec![("spec.blk0.attn.wq.w.c".into(), Tensor::zeros(&[4]))],
-        };
+        let adapter = AdapterFile::from_named(
+            "fourierft",
+            2024,
+            300.0,
+            vec![("n".into(), "4".into())],
+            vec![("spec.blk0.attn.wq.w.c".into(), Tensor::zeros(&[4]))],
+            |_| None, // dims resolved from the base at merge time
+        )
+        .unwrap();
         merge_into_base(&adapter, &mut base).unwrap();
         assert_eq!(base["blk0.attn.wq.w"], before);
     }
 
     #[test]
     fn merge_fourierft_nonzero_changes_weight_by_alpha_scaled_delta() {
-        let mut base =
-            BTreeMap::from([("w".to_string(), Tensor::zeros(&[16, 16]))]);
+        let mut base = BTreeMap::from([("w".to_string(), Tensor::zeros(&[16, 16]))]);
         let coeffs = Tensor::f32(&[8], vec![1.0; 8]);
-        let adapter = AdapterFile {
-            kind: AdapterKind::FourierFt,
-            seed: 7,
-            alpha: 2.0,
-            meta: vec![("n".into(), "8".into())],
-            tensors: vec![("spec.w.c".into(), coeffs.clone())],
-        };
+        let adapter = AdapterFile::from_named(
+            "fourierft",
+            7,
+            2.0,
+            vec![("n".into(), "8".into())],
+            vec![("spec.w.c".into(), coeffs.clone())],
+            |_| Some((16, 16)),
+        )
+        .unwrap();
         merge_into_base(&adapter, &mut base).unwrap();
         let want = delta_host(&coeffs, 7, 8, 16, 16, 2.0).unwrap();
+        assert_eq!(base["w"], want);
+    }
+
+    #[test]
+    fn merge_uses_stored_dims_when_present() {
+        // A v2 file carries its own site dims: merge works even when the
+        // base map alone could not disambiguate (no callback anywhere).
+        let mut base = BTreeMap::from([("w".to_string(), Tensor::zeros(&[12, 12]))]);
+        let coeffs = Tensor::f32(&[4], vec![0.5; 4]);
+        let adapter = AdapterFile::from_named(
+            "fourierft",
+            3,
+            1.5,
+            vec![],
+            vec![("spec.w.c".into(), coeffs.clone())],
+            |_| Some((12, 12)),
+        )
+        .unwrap();
+        assert_eq!(adapter.site_dims("w"), Some((12, 12)));
+        merge_into_base(&adapter, &mut base).unwrap();
+        let want = delta_host(&coeffs, 3, 4, 12, 12, 1.5).unwrap();
         assert_eq!(base["w"], want);
     }
 }

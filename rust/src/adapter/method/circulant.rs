@@ -1,0 +1,184 @@
+//! `circulant` — circulant × diagonal adapters (after arXiv:2505.00580):
+//! ΔW = α·C(c)·diag(g) with C(c) the circulant matrix whose first column
+//! is c ∈ R^d and g ∈ R^d a per-column gain — 2d parameters for a d×d
+//! site (between bitfit's d and lora's 2dr).
+//!
+//! Elementwise, `C(c)[p, q] = c[(p − q) mod d]`, so
+//!
+//! ```text
+//! ΔW[p, q] = α · c[(p − q) mod d] · g[q]
+//! ```
+//!
+//! and materializing the dense ΔW is a single O(d²) gather — no transform
+//! needed. (The O(d log d) story from the source paper is about *applying*
+//! C(c) to an activation vector via FFT products — C(c) diagonalizes in
+//! the DFT basis of `fourier::dft` — which matters when ΔW is never
+//! materialized; our serving path merges dense ΔW, so the gather is the
+//! right form and is exactly reproducible in integer indexing.)
+
+use super::{DeltaMethod, MethodHp, MethodId, ReconstructCtx, SiteSpec, SiteTensors};
+use crate::tensor::{rng::Rng, Tensor};
+use anyhow::Result;
+
+/// Role of the circulant first column (f32 `[d]`).
+pub const ROLE_CIRC: &str = "circ";
+/// Role of the diagonal gain (f32 `[d]`).
+pub const ROLE_DIAG: &str = "diag";
+
+pub struct Circulant;
+
+impl DeltaMethod for Circulant {
+    fn id(&self) -> MethodId {
+        "circulant"
+    }
+
+    fn roles(&self) -> &'static [&'static str] {
+        &[ROLE_CIRC, ROLE_DIAG]
+    }
+
+    fn site_delta(
+        &self,
+        site: &SiteSpec,
+        tensors: &SiteTensors,
+        ctx: &ReconstructCtx,
+    ) -> Result<Tensor> {
+        anyhow::ensure!(
+            site.d1 == site.d2,
+            "circulant site {} needs a square weight, got {}x{}",
+            site.name,
+            site.d1,
+            site.d2
+        );
+        let d = site.d1;
+        let c = tensors.get(ROLE_CIRC)?.as_f32()?;
+        let g = tensors.get(ROLE_DIAG)?.as_f32()?;
+        anyhow::ensure!(
+            c.len() == d && g.len() == d,
+            "circulant site {}: circ len {} / diag len {} vs d {d}",
+            site.name,
+            c.len(),
+            g.len()
+        );
+        let mut out = vec![0.0f32; d * d];
+        for p in 0..d {
+            let row = &mut out[p * d..(p + 1) * d];
+            for (q, slot) in row.iter_mut().enumerate() {
+                // (p - q) mod d without signed arithmetic
+                let idx = (p + d - q) % d;
+                *slot = ctx.alpha * c[idx] * g[q];
+            }
+        }
+        Ok(Tensor::f32(&[d, d], out))
+    }
+
+    fn param_count(&self, d1: usize, d2: usize, _hp: &MethodHp) -> usize {
+        d1 + d2
+    }
+
+    fn init_tensors(
+        &self,
+        rng: &mut Rng,
+        site: &SiteSpec,
+        hp: &MethodHp,
+    ) -> Result<Vec<(String, Tensor)>> {
+        anyhow::ensure!(
+            site.d1 == site.d2,
+            "circulant site {} needs a square weight, got {}x{}",
+            site.name,
+            site.d1,
+            site.d2
+        );
+        let d = site.d1;
+        let c = Tensor::f32(&[d], rng.normal_vec(d, hp.init_std));
+        let g = Tensor::f32(&[d], rng.normal_vec(d, hp.init_std));
+        Ok(vec![(ROLE_CIRC.to_string(), c), (ROLE_DIAG.to_string(), g)])
+    }
+
+    fn classify_legacy(&self, name: &str) -> Option<(String, String)> {
+        let rest = name.strip_prefix("circ.")?;
+        if let Some(site) = rest.strip_suffix(".c") {
+            return Some((site.to_string(), ROLE_CIRC.to_string()));
+        }
+        rest.strip_suffix(".g").map(|site| (site.to_string(), ROLE_DIAG.to_string()))
+    }
+
+    fn tensor_name(&self, site: &str, role: &str) -> String {
+        match role {
+            ROLE_CIRC => format!("circ.{site}.c"),
+            _ => format!("circ.{site}.g"),
+        }
+    }
+
+    fn infer_dims(&self, tensors: &SiteTensors) -> Option<(usize, usize)> {
+        let c = tensors.try_get(ROLE_CIRC)?;
+        if c.rank() == 1 {
+            Some((c.len(), c.len()))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(c: Vec<f32>, g: Vec<f32>, alpha: f32) -> Tensor {
+        let d = c.len();
+        let ct = Tensor::f32(&[d], c);
+        let gt = Tensor::f32(&[d], g);
+        let site = SiteSpec { name: "w".into(), d1: d, d2: d };
+        let pairs = [(ROLE_CIRC, &ct), (ROLE_DIAG, &gt)];
+        Circulant
+            .site_delta(
+                &site,
+                &SiteTensors::from_pairs(&pairs),
+                &ReconstructCtx { seed: 0, alpha, meta: &[] },
+            )
+            .unwrap()
+    }
+
+    #[test]
+    fn structure_is_circulant_times_diagonal() {
+        let d = 5usize;
+        let c: Vec<f32> = (0..d).map(|i| 1.0 + i as f32).collect();
+        let g: Vec<f32> = (0..d).map(|i| 0.5 + 0.1 * i as f32).collect();
+        let out = run(c.clone(), g.clone(), 2.0);
+        for p in 0..d {
+            for q in 0..d {
+                let want = 2.0 * c[(p + d - q) % d] * g[q];
+                assert_eq!(out.at2(p, q).to_bits(), want.to_bits(), "({p},{q})");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_column_with_unit_gain_is_scaled_identity_shift() {
+        // c = e_1 (c[1] = 1): C(c) is the cyclic shift-down matrix.
+        let d = 4usize;
+        let mut c = vec![0.0f32; d];
+        c[1] = 1.0;
+        let out = run(c, vec![1.0; d], 3.0);
+        for p in 0..d {
+            for q in 0..d {
+                let want = if (p + d - q) % d == 1 { 3.0 } else { 0.0 };
+                assert_eq!(out.at2(p, q), want, "({p},{q})");
+            }
+        }
+    }
+
+    #[test]
+    fn non_square_site_errors() {
+        let ct = Tensor::zeros(&[4]);
+        let gt = Tensor::zeros(&[4]);
+        let site = SiteSpec { name: "w".into(), d1: 4, d2: 8 };
+        let pairs = [(ROLE_CIRC, &ct), (ROLE_DIAG, &gt)];
+        assert!(Circulant
+            .site_delta(
+                &site,
+                &SiteTensors::from_pairs(&pairs),
+                &ReconstructCtx { seed: 0, alpha: 1.0, meta: &[] },
+            )
+            .is_err());
+    }
+}

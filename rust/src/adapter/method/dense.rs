@@ -1,0 +1,138 @@
+//! `dense` / `bitfit` — the trivial end of the method family: the stored
+//! tensor *is* the delta. `dense` stores a full ΔW ∈ R^{d1×d2} per site
+//! (full fine-tune checkpoints, pretraining merges); `bitfit` stores only
+//! bias deltas (rank-1). Alpha is baked into the stored values at save
+//! time, so reconstruction returns them verbatim — v1 semantics preserved,
+//! including the strict rejection of unclassifiable tensors.
+
+use super::{DeltaMethod, MethodHp, MethodId, ReconstructCtx, SiteSpec, SiteTensors};
+use crate::tensor::{rng::Rng, Tensor};
+use anyhow::Result;
+
+/// Role of the stored delta tensor.
+pub const ROLE_DELTA: &str = "delta";
+
+/// Shared implementation behind the `dense` and `bitfit` registry ids.
+pub struct DenseDelta {
+    /// true = `bitfit` (rank-1 bias deltas), false = `dense` (full ΔW).
+    pub bias_only: bool,
+}
+
+impl DeltaMethod for DenseDelta {
+    fn id(&self) -> MethodId {
+        if self.bias_only {
+            "bitfit"
+        } else {
+            "dense"
+        }
+    }
+
+    fn roles(&self) -> &'static [&'static str] {
+        &[ROLE_DELTA]
+    }
+
+    fn strict(&self) -> bool {
+        // v1 dense loading bailed on unexpected tensors; keep that.
+        true
+    }
+
+    fn site_delta(
+        &self,
+        _site: &SiteSpec,
+        tensors: &SiteTensors,
+        _ctx: &ReconstructCtx,
+    ) -> Result<Tensor> {
+        Ok(tensors.get(ROLE_DELTA)?.clone())
+    }
+
+    fn param_count(&self, d1: usize, d2: usize, _hp: &MethodHp) -> usize {
+        if self.bias_only {
+            d2
+        } else {
+            d1 * d2
+        }
+    }
+
+    fn init_tensors(
+        &self,
+        rng: &mut Rng,
+        site: &SiteSpec,
+        hp: &MethodHp,
+    ) -> Result<Vec<(String, Tensor)>> {
+        let t = if self.bias_only {
+            Tensor::f32(&[site.d2], rng.normal_vec(site.d2, hp.init_std))
+        } else {
+            Tensor::f32(
+                &[site.d1, site.d2],
+                rng.normal_vec(site.d1 * site.d2, hp.init_std),
+            )
+        };
+        Ok(vec![(ROLE_DELTA.to_string(), t)])
+    }
+
+    fn classify_legacy(&self, name: &str) -> Option<(String, String)> {
+        name.strip_prefix("delta.").map(|site| (site.to_string(), ROLE_DELTA.to_string()))
+    }
+
+    fn tensor_name(&self, site: &str, role: &str) -> String {
+        debug_assert_eq!(role, ROLE_DELTA);
+        format!("delta.{site}")
+    }
+
+    fn infer_dims(&self, tensors: &SiteTensors) -> Option<(usize, usize)> {
+        let t = tensors.try_get(ROLE_DELTA)?;
+        match t.shape.as_slice() {
+            [d1, d2] => Some((*d1, *d2)),
+            [d] => Some((*d, 1)),
+            _ => None,
+        }
+    }
+
+    fn needs_dims(&self) -> bool {
+        // The stored tensor is the delta; dims are informational only, so
+        // shapes v1 accepted (scalars, rank-3) must keep reconstructing.
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_is_returned_verbatim() {
+        let t = Tensor::f32(&[2, 2], vec![1.0, -2.0, 3.0, -4.0]);
+        let site = SiteSpec { name: "w".into(), d1: 2, d2: 2 };
+        let pairs = [(ROLE_DELTA, &t)];
+        let got = DenseDelta { bias_only: false }
+            .site_delta(
+                &site,
+                &SiteTensors::from_pairs(&pairs),
+                &ReconstructCtx { seed: 0, alpha: 99.0, meta: &[] },
+            )
+            .unwrap();
+        assert_eq!(got, t, "alpha must not be re-applied to stored deltas");
+    }
+
+    #[test]
+    fn ids_and_counts_differ_by_variant() {
+        let dense = DenseDelta { bias_only: false };
+        let bitfit = DenseDelta { bias_only: true };
+        assert_eq!(dense.id(), "dense");
+        assert_eq!(bitfit.id(), "bitfit");
+        let hp = MethodHp::default();
+        assert_eq!(dense.param_count(8, 16, &hp), 128);
+        assert_eq!(bitfit.param_count(8, 16, &hp), 16);
+    }
+
+    #[test]
+    fn dims_inferred_from_delta_shape() {
+        let m = DenseDelta { bias_only: false };
+        let t2 = Tensor::zeros(&[3, 5]);
+        let pairs = [(ROLE_DELTA, &t2)];
+        assert_eq!(m.infer_dims(&SiteTensors::from_pairs(&pairs)), Some((3, 5)));
+        let t1 = Tensor::zeros(&[7]);
+        let pairs = [(ROLE_DELTA, &t1)];
+        assert_eq!(m.infer_dims(&SiteTensors::from_pairs(&pairs)), Some((7, 1)));
+    }
+}

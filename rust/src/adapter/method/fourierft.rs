@@ -1,0 +1,119 @@
+//! `fourierft` — the paper's method: n learned spectral coefficients per
+//! site, ΔW = α·Re(IDFT2(ToDense(E, c))) with the entry matrix E
+//! regenerated from the file seed (never stored). Reconstruction runs
+//! through the process-wide GEMM plan cache
+//! ([`crate::fourier::plan::global`]), so this is bit-identical to the
+//! pre-registry `delta_host` path.
+
+use super::{DeltaMethod, MethodHp, MethodId, ReconstructCtx, SiteSpec, SiteTensors};
+use crate::fourier::{plan, sample_entries, EntryBias};
+use crate::tensor::{rng::Rng, Tensor};
+use anyhow::Result;
+
+/// Role of the per-site coefficient vector (f32 `[n]`).
+pub const ROLE_COEF: &str = "coef";
+
+pub struct FourierFt;
+
+impl DeltaMethod for FourierFt {
+    fn id(&self) -> MethodId {
+        "fourierft"
+    }
+
+    fn roles(&self) -> &'static [&'static str] {
+        &[ROLE_COEF]
+    }
+
+    fn site_delta(
+        &self,
+        site: &SiteSpec,
+        tensors: &SiteTensors,
+        ctx: &ReconstructCtx,
+    ) -> Result<Tensor> {
+        let coeffs = tensors.get(ROLE_COEF)?;
+        let c = coeffs.as_f32()?;
+        let n = c.len();
+        if let Some(meta_n) = ctx.meta_get("n").and_then(|v| v.parse::<usize>().ok()) {
+            anyhow::ensure!(meta_n == n, "coeff len {n} != meta n {meta_n}");
+        }
+        let (rows, cols) = sample_entries(site.d1, site.d2, n, EntryBias::None, ctx.seed);
+        let p = plan::global().get((&rows, &cols), site.d1, site.d2)?;
+        Ok(Tensor::f32(&[site.d1, site.d2], p.reconstruct(c, ctx.alpha)?))
+    }
+
+    fn param_count(&self, _d1: usize, _d2: usize, hp: &MethodHp) -> usize {
+        hp.n
+    }
+
+    fn init_tensors(
+        &self,
+        rng: &mut Rng,
+        site: &SiteSpec,
+        hp: &MethodHp,
+    ) -> Result<Vec<(String, Tensor)>> {
+        anyhow::ensure!(
+            hp.n <= site.d1 * site.d2,
+            "n={} exceeds spectral grid {}x{}",
+            hp.n,
+            site.d1,
+            site.d2
+        );
+        let coeffs = Tensor::f32(&[hp.n], rng.normal_vec(hp.n, hp.init_std));
+        Ok(vec![(ROLE_COEF.to_string(), coeffs)])
+    }
+
+    fn classify_legacy(&self, name: &str) -> Option<(String, String)> {
+        let rest = name.strip_prefix("spec.")?;
+        let site = rest.strip_suffix(".c").unwrap_or(rest);
+        Some((site.to_string(), ROLE_COEF.to_string()))
+    }
+
+    fn tensor_name(&self, site: &str, role: &str) -> String {
+        debug_assert_eq!(role, ROLE_COEF);
+        format!("spec.{site}.c")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::merge::delta_host;
+
+    #[test]
+    fn matches_delta_host_bitwise() {
+        let (d, n, seed, alpha) = (32usize, 16usize, 2024u64, 8.0f32);
+        let mut rng = Rng::new(5);
+        let coeffs = Tensor::f32(&[n], rng.normal_vec(n, 1.0));
+        let want = delta_host(&coeffs, seed, n, d, d, alpha).unwrap();
+        let site = SiteSpec { name: "w".into(), d1: d, d2: d };
+        let pairs = [(ROLE_COEF, &coeffs)];
+        let got = FourierFt
+            .site_delta(
+                &site,
+                &SiteTensors::from_pairs(&pairs),
+                &ReconstructCtx { seed, alpha, meta: &[] },
+            )
+            .unwrap();
+        assert_eq!(want.shape, got.shape);
+        let (a, b) = (want.as_f32().unwrap(), got.as_f32().unwrap());
+        for i in 0..a.len() {
+            assert_eq!(a[i].to_bits(), b[i].to_bits(), "mismatch at {i}");
+        }
+    }
+
+    #[test]
+    fn meta_n_mismatch_errors() {
+        let coeffs = Tensor::zeros(&[4]);
+        let site = SiteSpec { name: "w".into(), d1: 8, d2: 8 };
+        let meta = [("n".to_string(), "8".to_string())];
+        let pairs = [(ROLE_COEF, &coeffs)];
+        let err = FourierFt
+            .site_delta(
+                &site,
+                &SiteTensors::from_pairs(&pairs),
+                &ReconstructCtx { seed: 1, alpha: 1.0, meta: &meta },
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("meta n"));
+    }
+}

@@ -1,0 +1,242 @@
+//! `loca` — location-aware cosine adapters (after LoCA, arXiv:2502.06820):
+//! n learned coefficients at n learned *locations* of the 2-D DCT
+//! spectrum. Where `fourierft` regenerates its entry matrix from a seed
+//! (uniform over the complex DFT grid), `loca` stores its location index
+//! matrix in the file — the locations are themselves optimized during
+//! fine-tuning, so they cannot be re-derived from a seed.
+//!
+//! Reconstruction is the inverse DCT-II restricted to the n stored
+//! locations, factored into one (d1 × n)·(n × d2) GEMM exactly like the
+//! DFT plan in `fourier::plan` (a cosine basis has no imaginary part, so
+//! the stacked sin block drops out and the inner dimension is n, not 2n):
+//!
+//! ```text
+//! ΔW[p, q] = α/(d1 d2) · Σ_l c_l · cos(π j_l (2p+1) / (2 d1))
+//!                              · cos(π k_l (2q+1) / (2 d2))
+//! ```
+//!
+//! Synthetic init samples locations with `fourier::sample_entries` (the
+//! paper's uniform-grid entry sampler) and stores them as an i32 `[2, n]`
+//! tensor, rows then cols — the same layout the DFT entry matrix uses.
+
+use super::{DeltaMethod, MethodHp, MethodId, ReconstructCtx, SiteSpec, SiteTensors};
+use crate::fourier::{sample_entries, EntryBias};
+use crate::tensor::{par, rng::Rng, Tensor};
+use anyhow::Result;
+use std::f64::consts::PI;
+
+/// Role of the coefficient vector (f32 `[n]`).
+pub const ROLE_COEF: &str = "coef";
+/// Role of the location index matrix (i32 `[2, n]`, rows then cols).
+pub const ROLE_LOCS: &str = "locs";
+
+pub struct Loca;
+
+impl DeltaMethod for Loca {
+    fn id(&self) -> MethodId {
+        "loca"
+    }
+
+    fn roles(&self) -> &'static [&'static str] {
+        &[ROLE_COEF, ROLE_LOCS]
+    }
+
+    fn site_delta(
+        &self,
+        site: &SiteSpec,
+        tensors: &SiteTensors,
+        ctx: &ReconstructCtx,
+    ) -> Result<Tensor> {
+        let c = tensors.get(ROLE_COEF)?.as_f32()?;
+        let locs = tensors.get(ROLE_LOCS)?;
+        let n = c.len();
+        anyhow::ensure!(
+            locs.shape == [2, n],
+            "loca site {}: locs shape {:?} != [2, {n}]",
+            site.name,
+            locs.shape
+        );
+        let e = locs.as_i32()?;
+        let (js, ks) = e.split_at(n);
+        let (d1, d2) = (site.d1, site.d2);
+        anyhow::ensure!(d1 > 0 && d2 > 0, "degenerate site dims {d1}x{d2}");
+        // Left factor folds in the scaled coefficients; tables built in
+        // f64 and rounded to f32 (same numerics policy as the DFT plan).
+        let scale = ctx.alpha as f64 / (d1 * d2) as f64;
+        let mut a = vec![0.0f32; d1 * n];
+        let mut b = vec![0.0f32; n * d2];
+        for (l, (&j, &k)) in js.iter().zip(ks.iter()).enumerate() {
+            // Unlike the DFT (periodic mod d), the DCT-II basis has no
+            // frequency aliasing — an out-of-range location is corrupt
+            // data, not an alias of an in-range one. Refuse it.
+            anyhow::ensure!(
+                (0..d1 as i32).contains(&j) && (0..d2 as i32).contains(&k),
+                "loca site {}: location ({j}, {k}) outside the {d1}x{d2} DCT grid",
+                site.name
+            );
+            let j = j as f64;
+            let k = k as f64;
+            let s = c[l] as f64 * scale;
+            for p in 0..d1 {
+                let t = PI * j * (2.0 * p as f64 + 1.0) / (2.0 * d1 as f64);
+                a[p * n + l] = (s * t.cos()) as f32;
+            }
+            let row = &mut b[l * d2..(l + 1) * d2];
+            for (q, slot) in row.iter_mut().enumerate() {
+                let t = PI * k * (2.0 * q as f64 + 1.0) / (2.0 * d2 as f64);
+                *slot = t.cos() as f32;
+            }
+        }
+        Ok(Tensor::f32(&[d1, d2], par::matmul_f32(&a, &b, d1, n, d2)))
+    }
+
+    fn param_count(&self, _d1: usize, _d2: usize, hp: &MethodHp) -> usize {
+        // The coefficients are the trainable parameters; the n selected
+        // locations are frozen integer indices (stored, not trained).
+        hp.n
+    }
+
+    fn init_tensors(
+        &self,
+        rng: &mut Rng,
+        site: &SiteSpec,
+        hp: &MethodHp,
+    ) -> Result<Vec<(String, Tensor)>> {
+        anyhow::ensure!(
+            hp.n <= site.d1 * site.d2,
+            "n={} exceeds DCT grid {}x{}",
+            hp.n,
+            site.d1,
+            site.d2
+        );
+        let (rows, cols) =
+            sample_entries(site.d1, site.d2, hp.n, EntryBias::None, rng.next_u64());
+        let mut e: Vec<i32> = rows;
+        e.extend(cols);
+        let locs = Tensor::i32(&[2, hp.n], e);
+        let coeffs = Tensor::f32(&[hp.n], rng.normal_vec(hp.n, hp.init_std));
+        Ok(vec![(ROLE_COEF.to_string(), coeffs), (ROLE_LOCS.to_string(), locs)])
+    }
+
+    fn classify_legacy(&self, name: &str) -> Option<(String, String)> {
+        let rest = name.strip_prefix("loca.")?;
+        if let Some(site) = rest.strip_suffix(".c") {
+            return Some((site.to_string(), ROLE_COEF.to_string()));
+        }
+        rest.strip_suffix(".e").map(|site| (site.to_string(), ROLE_LOCS.to_string()))
+    }
+
+    fn tensor_name(&self, site: &str, role: &str) -> String {
+        match role {
+            ROLE_COEF => format!("loca.{site}.c"),
+            _ => format!("loca.{site}.e"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Naive double-loop iDCT reference for the GEMM factorization.
+    fn naive(js: &[i32], ks: &[i32], c: &[f32], d1: usize, d2: usize, alpha: f32) -> Vec<f32> {
+        let mut out = vec![0.0f64; d1 * d2];
+        for l in 0..c.len() {
+            let j = js[l] as f64;
+            let k = ks[l] as f64;
+            for p in 0..d1 {
+                let cu = (PI * j * (2.0 * p as f64 + 1.0) / (2.0 * d1 as f64)).cos();
+                for q in 0..d2 {
+                    let cv = (PI * k * (2.0 * q as f64 + 1.0) / (2.0 * d2 as f64)).cos();
+                    out[p * d2 + q] += c[l] as f64 * cu * cv;
+                }
+            }
+        }
+        let scale = alpha as f64 / (d1 * d2) as f64;
+        out.into_iter().map(|x| (x * scale) as f32).collect()
+    }
+
+    fn run(js: Vec<i32>, ks: Vec<i32>, c: Vec<f32>, d1: usize, d2: usize, alpha: f32) -> Tensor {
+        let n = c.len();
+        let mut e = js.clone();
+        e.extend(&ks);
+        let locs = Tensor::i32(&[2, n], e);
+        let coeffs = Tensor::f32(&[n], c);
+        let site = SiteSpec { name: "w".into(), d1, d2 };
+        let pairs = [(ROLE_COEF, &coeffs), (ROLE_LOCS, &locs)];
+        Loca.site_delta(
+            &site,
+            &SiteTensors::from_pairs(&pairs),
+            &ReconstructCtx { seed: 0, alpha, meta: &[] },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn gemm_form_matches_naive_idct() {
+        let mut rng = Rng::new(11);
+        let (d1, d2, n) = (24usize, 20usize, 12usize);
+        let (js, ks) = sample_entries(d1, d2, n, EntryBias::None, 99);
+        let c = rng.normal_vec(n, 1.0);
+        let want = naive(&js, &ks, &c, d1, d2, 3.0);
+        let got = run(js, ks, c, d1, d2, 3.0);
+        let max = want
+            .iter()
+            .zip(got.as_f32().unwrap())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max < 1e-4, "max diff {max}");
+    }
+
+    #[test]
+    fn dc_location_is_constant_matrix() {
+        // (0, 0) is the DCT DC term: ΔW = alpha * c / (d1 d2) everywhere.
+        let got = run(vec![0], vec![0], vec![2.0], 8, 8, 4.0);
+        for &v in got.as_f32().unwrap() {
+            assert!((v - 2.0 * 4.0 / 64.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn out_of_range_locations_are_rejected_not_aliased() {
+        // j = -1 is NOT an alias of j = 1 in the DCT basis (no mod-d
+        // periodicity); wrapping would silently reconstruct the wrong
+        // basis function.
+        let coeffs = Tensor::f32(&[1], vec![1.0]);
+        let locs = Tensor::i32(&[2, 1], vec![-1, 0]);
+        let site = SiteSpec { name: "w".into(), d1: 8, d2: 8 };
+        let pairs = [(ROLE_COEF, &coeffs), (ROLE_LOCS, &locs)];
+        let err = Loca
+            .site_delta(
+                &site,
+                &SiteTensors::from_pairs(&pairs),
+                &ReconstructCtx { seed: 0, alpha: 1.0, meta: &[] },
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("DCT grid"));
+        let locs = Tensor::i32(&[2, 1], vec![8, 0]); // == d1, one past the edge
+        let pairs = [(ROLE_COEF, &coeffs), (ROLE_LOCS, &locs)];
+        assert!(Loca
+            .site_delta(
+                &site,
+                &SiteTensors::from_pairs(&pairs),
+                &ReconstructCtx { seed: 0, alpha: 1.0, meta: &[] },
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        let coeffs = Tensor::zeros(&[3]);
+        let locs = Tensor::zeros_i32(&[2, 2]); // wrong n
+        let site = SiteSpec { name: "w".into(), d1: 8, d2: 8 };
+        let pairs = [(ROLE_COEF, &coeffs), (ROLE_LOCS, &locs)];
+        assert!(Loca
+            .site_delta(
+                &site,
+                &SiteTensors::from_pairs(&pairs),
+                &ReconstructCtx { seed: 0, alpha: 1.0, meta: &[] },
+            )
+            .is_err());
+    }
+}

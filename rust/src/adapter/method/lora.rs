@@ -1,0 +1,131 @@
+//! `lora` — low-rank adapters: per site a down-projection A ∈ R^{r×d2}
+//! and up-projection B ∈ R^{d1×r}; ΔW = α·(B·A).
+//!
+//! Site grouping in the registry dispatch is HashMap-indexed (one pass
+//! over the file's tensors), replacing v1's per-`.a` linear scan for the
+//! matching `.b` — O(sites) instead of O(sites²); regression-tested at
+//! 300 sites in `tests/methods.rs`.
+
+use super::{DeltaMethod, MethodHp, MethodId, ReconstructCtx, SiteSpec, SiteTensors};
+use crate::adapter::merge::delta_lora;
+use crate::tensor::{rng::Rng, Tensor};
+use anyhow::Result;
+
+/// Role of the down-projection (f32 `[r, d2]`).
+pub const ROLE_A: &str = "a";
+/// Role of the up-projection (f32 `[d1, r]`).
+pub const ROLE_B: &str = "b";
+
+pub struct Lora;
+
+impl DeltaMethod for Lora {
+    fn id(&self) -> MethodId {
+        "lora"
+    }
+
+    fn roles(&self) -> &'static [&'static str] {
+        &[ROLE_A, ROLE_B]
+    }
+
+    fn site_delta(
+        &self,
+        site: &SiteSpec,
+        tensors: &SiteTensors,
+        ctx: &ReconstructCtx,
+    ) -> Result<Tensor> {
+        let a = tensors.get(ROLE_A)?;
+        let b = tensors.get(ROLE_B)?;
+        anyhow::ensure!(
+            a.rank() == 2 && b.rank() == 2 && a.shape[0] == b.shape[1],
+            "lora site {}: rank mismatch a {:?} vs b {:?}",
+            site.name,
+            a.shape,
+            b.shape
+        );
+        delta_lora(a, b, ctx.alpha)
+    }
+
+    fn param_count(&self, d1: usize, d2: usize, hp: &MethodHp) -> usize {
+        hp.rank * (d1 + d2)
+    }
+
+    fn init_tensors(
+        &self,
+        rng: &mut Rng,
+        site: &SiteSpec,
+        hp: &MethodHp,
+    ) -> Result<Vec<(String, Tensor)>> {
+        let r = hp.rank.max(1);
+        // Training init would zero B (ΔW = 0); the synthetic init draws
+        // both factors so workloads and parity tests see non-trivial ΔW.
+        let a = Tensor::f32(&[r, site.d2], rng.normal_vec(r * site.d2, hp.init_std));
+        let b = Tensor::f32(&[site.d1, r], rng.normal_vec(site.d1 * r, hp.init_std));
+        Ok(vec![(ROLE_A.to_string(), a), (ROLE_B.to_string(), b)])
+    }
+
+    fn classify_legacy(&self, name: &str) -> Option<(String, String)> {
+        let rest = name.strip_prefix("lora.")?;
+        if let Some(site) = rest.strip_suffix(".a") {
+            return Some((site.to_string(), ROLE_A.to_string()));
+        }
+        rest.strip_suffix(".b").map(|site| (site.to_string(), ROLE_B.to_string()))
+    }
+
+    fn tensor_name(&self, site: &str, role: &str) -> String {
+        format!("lora.{site}.{role}")
+    }
+
+    fn infer_dims(&self, tensors: &SiteTensors) -> Option<(usize, usize)> {
+        let a = tensors.try_get(ROLE_A)?;
+        let b = tensors.try_get(ROLE_B)?;
+        if a.rank() == 2 && b.rank() == 2 {
+            Some((b.shape[0], a.shape[1]))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_matches_manual_product() {
+        let a = Tensor::f32(&[1, 3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::f32(&[2, 1], vec![10.0, 20.0]);
+        let site = SiteSpec { name: "w".into(), d1: 2, d2: 3 };
+        let pairs = [(ROLE_A, &a), (ROLE_B, &b)];
+        let d = Lora
+            .site_delta(
+                &site,
+                &SiteTensors::from_pairs(&pairs),
+                &ReconstructCtx { seed: 0, alpha: 0.5, meta: &[] },
+            )
+            .unwrap();
+        assert_eq!(d.as_f32().unwrap(), &[5.0, 10.0, 15.0, 10.0, 20.0, 30.0]);
+    }
+
+    #[test]
+    fn missing_b_is_an_error() {
+        let a = Tensor::zeros(&[2, 4]);
+        let site = SiteSpec { name: "w".into(), d1: 4, d2: 4 };
+        let pairs = [(ROLE_A, &a)];
+        let err = Lora
+            .site_delta(
+                &site,
+                &SiteTensors::from_pairs(&pairs),
+                &ReconstructCtx { seed: 0, alpha: 1.0, meta: &[] },
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("'b'"));
+    }
+
+    #[test]
+    fn dims_inferred_from_factor_shapes() {
+        let a = Tensor::zeros(&[2, 5]);
+        let b = Tensor::zeros(&[7, 2]);
+        let pairs = [(ROLE_A, &a), (ROLE_B, &b)];
+        assert_eq!(Lora.infer_dims(&SiteTensors::from_pairs(&pairs)), Some((7, 5)));
+    }
+}

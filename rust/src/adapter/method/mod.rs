@@ -1,0 +1,524 @@
+//! Pluggable adapter-method registry — the one dispatch point for every
+//! ΔW-producing PEFT method.
+//!
+//! The paper's idea (learn a few spectral coefficients, recover ΔW by an
+//! inverse transform) is one point in a family of structured
+//! reparameterizations. This module makes the family a first-class,
+//! *open* API: a [`DeltaMethod`] trait plus a process-wide registry
+//! ([`get`] / [`register`] / [`ids`]), so the merge path, the serving swap
+//! caches, the scheduler's `DeltaRunner`, budget arithmetic, and the CLI
+//! all dispatch through one table instead of hand-synced `match` blocks.
+//!
+//! Built-in methods:
+//!
+//! | id          | site tensors (role: shape)          | ΔW reconstruction            |
+//! |-------------|-------------------------------------|------------------------------|
+//! | `fourierft` | `coef`: \[n\]                       | α·Re(IDFT2(ToDense(E, c))) via the GEMM plan cache |
+//! | `lora`      | `a`: \[r, d2\], `b`: \[d1, r\]      | α·(B·A)                      |
+//! | `dense`     | `delta`: \[d1, d2\]                 | stored delta, verbatim       |
+//! | `bitfit`    | `delta`: \[d\]                      | stored bias delta, verbatim  |
+//! | `loca`      | `coef`: \[n\], `locs`: i32 \[2, n\] | α·iDCT2 at learned locations |
+//! | `circulant` | `circ`: \[d\], `diag`: \[d\]        | α·C(c)·diag(g)               |
+//!
+//! # How to add a method
+//!
+//! 1. Implement [`DeltaMethod`]: give it a unique [`id`](DeltaMethod::id),
+//!    declare the per-site tensor [`roles`](DeltaMethod::roles) it stores,
+//!    and write [`site_delta`](DeltaMethod::site_delta) — a *pure* function
+//!    of (site dims, site tensors, file seed/alpha/meta). Purity is what
+//!    makes serving deterministic and warm-swap caching sound.
+//! 2. Provide [`init_tensors`](DeltaMethod::init_tensors) (seeded synthetic
+//!    init, used by workload generators and parity tests),
+//!    [`param_count`](DeltaMethod::param_count) (budget tables), and —
+//!    if your method should ingest legacy-named trainer output —
+//!    [`classify_legacy`](DeltaMethod::classify_legacy) /
+//!    [`tensor_name`](DeltaMethod::tensor_name).
+//! 3. Call [`register`]`(Arc::new(MyMethod))` once at startup (built-ins
+//!    are registered automatically). Every consumer — `site_deltas`, the
+//!    swap caches, `repro serve-host --method my_id`, the benches — picks
+//!    it up with zero further wiring.
+//!
+//! Methods must be deterministic: given the same adapter file bytes the
+//! reconstructed ΔW must be bit-identical across runs, threads, and worker
+//! counts (asserted for all built-ins in `tests/methods.rs` and
+//! `tests/scheduler.rs`).
+
+pub mod circulant;
+pub mod dense;
+pub mod fourierft;
+pub mod loca;
+pub mod lora;
+
+use super::format::{AdapterFile, ROLE_HEAD};
+use crate::tensor::{rng::Rng, Tensor};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+/// Registered method identifier (stable, lowercase, stored in files).
+pub type MethodId = &'static str;
+
+/// One adapted weight site: name + (d1, d2) dims.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SiteSpec {
+    pub name: String,
+    pub d1: usize,
+    pub d2: usize,
+}
+
+/// The tensors of one site, keyed by role.
+pub struct SiteTensors<'a> {
+    map: HashMap<&'a str, &'a Tensor>,
+}
+
+impl<'a> SiteTensors<'a> {
+    pub fn from_pairs(pairs: &[(&'a str, &'a Tensor)]) -> SiteTensors<'a> {
+        SiteTensors { map: pairs.iter().copied().collect() }
+    }
+
+    /// Tensor for `role`, or an error naming what is missing.
+    pub fn get(&self, role: &str) -> Result<&'a Tensor> {
+        self.map
+            .get(role)
+            .copied()
+            .ok_or_else(|| anyhow!("adapter site is missing its '{role}' tensor"))
+    }
+
+    pub fn try_get(&self, role: &str) -> Option<&'a Tensor> {
+        self.map.get(role).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// File-level context handed to [`DeltaMethod::site_delta`]: everything an
+/// adapter checkpoint carries beyond the per-site tensors.
+pub struct ReconstructCtx<'a> {
+    /// Entry/location seed (spectral methods regenerate E from it).
+    pub seed: u64,
+    /// Scaling baked at save time.
+    pub alpha: f32,
+    /// File metadata key-value pairs.
+    pub meta: &'a [(String, String)],
+}
+
+impl ReconstructCtx<'_> {
+    pub fn meta_get(&self, key: &str) -> Option<&str> {
+        self.meta.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Hyperparameters for synthetic init / budget accounting, method-neutral:
+/// each method reads the fields it understands.
+#[derive(Debug, Clone)]
+pub struct MethodHp {
+    /// Spectral coefficients per site (fourierft, loca).
+    pub n: usize,
+    /// Low-rank factor rank (lora).
+    pub rank: usize,
+    /// Std-dev of the synthetic normal init.
+    pub init_std: f32,
+}
+
+impl Default for MethodHp {
+    fn default() -> MethodHp {
+        MethodHp { n: 64, rank: 8, init_std: 1.0 }
+    }
+}
+
+/// A ΔW-producing adapter method. Implementations must be pure in
+/// `site_delta` (bit-identical output for identical inputs) — the serving
+/// caches and the scheduler's determinism guarantees rely on it.
+pub trait DeltaMethod: Send + Sync {
+    /// Unique registry id (also the `method` string stored in v2 files).
+    fn id(&self) -> MethodId;
+
+    /// Site-scoped tensor roles this method stores / consumes.
+    fn roles(&self) -> &'static [&'static str];
+
+    /// When true, site-dispatch rejects tensors it cannot classify
+    /// (v1 dense semantics); when false they are skipped as opaque.
+    fn strict(&self) -> bool {
+        false
+    }
+
+    /// Reconstruct ΔW for one site. Must be a pure function of its
+    /// arguments; the result is cached and served across threads.
+    fn site_delta(
+        &self,
+        site: &SiteSpec,
+        tensors: &SiteTensors,
+        ctx: &ReconstructCtx,
+    ) -> Result<Tensor>;
+
+    /// Trainable parameters for one (d1, d2) site under `hp`.
+    fn param_count(&self, d1: usize, d2: usize, hp: &MethodHp) -> usize;
+
+    /// Seeded synthetic init: (role, tensor) pairs for one site. Used by
+    /// the workload generator, parity tests, and `serve-host`.
+    fn init_tensors(
+        &self,
+        rng: &mut Rng,
+        site: &SiteSpec,
+        hp: &MethodHp,
+    ) -> Result<Vec<(String, Tensor)>>;
+
+    /// Classify a legacy v1 tensor name into (site, role), if it follows
+    /// this method's naming convention.
+    fn classify_legacy(&self, name: &str) -> Option<(String, String)>;
+
+    /// Canonical (legacy-compatible) tensor name for (site, role).
+    fn tensor_name(&self, site: &str, role: &str) -> String;
+
+    /// Best-effort (d1, d2) from the site's own tensor shapes (e.g. dense
+    /// deltas carry their dims; spectral coefficient vectors do not).
+    fn infer_dims(&self, _tensors: &SiteTensors) -> Option<(usize, usize)> {
+        None
+    }
+
+    /// Whether `site_delta` consumes the site dims. Methods returning
+    /// stored tensors verbatim (dense/bitfit) don't, so unresolvable dims
+    /// are not an error for them (v1 required no dims at all there).
+    fn needs_dims(&self) -> bool {
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry.
+
+type Registry = RwLock<HashMap<&'static str, Arc<dyn DeltaMethod>>>;
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| {
+        let mut map: HashMap<&'static str, Arc<dyn DeltaMethod>> = HashMap::new();
+        let builtins: [Arc<dyn DeltaMethod>; 6] = [
+            Arc::new(fourierft::FourierFt),
+            Arc::new(lora::Lora),
+            Arc::new(dense::DenseDelta { bias_only: false }),
+            Arc::new(dense::DenseDelta { bias_only: true }),
+            Arc::new(loca::Loca),
+            Arc::new(circulant::Circulant),
+        ];
+        for m in builtins {
+            map.insert(m.id(), m);
+        }
+        RwLock::new(map)
+    })
+}
+
+/// Aliases accepted by [`get`] (training-artifact method names and v1
+/// spellings that share a reconstruction).
+fn canonical(id: &str) -> &str {
+    match id {
+        "randbasis" | "orthobasis" => "fourierft",
+        "dense-delta" | "ff" => "dense",
+        other => other,
+    }
+}
+
+/// Resolve a method id (or alias) to its implementation. Unknown ids are a
+/// **hard error** — never a silent fallback (that was the v1
+/// `AdapterKind::from_method` bug).
+pub fn get(id: &str) -> Result<Arc<dyn DeltaMethod>> {
+    let key = canonical(id);
+    // Drop the read guard before composing the error: `ids()` re-locks.
+    let found = registry().read().unwrap().get(key).cloned();
+    found.ok_or_else(|| {
+        anyhow!("unknown adapter method '{id}' (registered: {})", ids().join(", "))
+    })
+}
+
+/// Register a new method process-wide. Errors if the id is taken, or if
+/// it collides with a [`get`] alias (the alias rewrite would make the
+/// registered method silently unreachable).
+pub fn register(m: Arc<dyn DeltaMethod>) -> Result<()> {
+    if canonical(m.id()) != m.id() {
+        bail!(
+            "adapter method id '{}' is an alias of '{}' and cannot be registered",
+            m.id(),
+            canonical(m.id())
+        );
+    }
+    let mut reg = registry().write().unwrap();
+    if reg.contains_key(m.id()) {
+        bail!("adapter method '{}' is already registered", m.id());
+    }
+    reg.insert(m.id(), m);
+    Ok(())
+}
+
+/// All registered method ids, sorted.
+pub fn ids() -> Vec<String> {
+    let mut v: Vec<String> =
+        registry().read().unwrap().keys().map(|k| k.to_string()).collect();
+    v.sort();
+    v
+}
+
+/// v1 kind byte → method id (the compat shim's mapping).
+pub fn from_kind_byte(b: u8) -> Result<MethodId> {
+    Ok(match b {
+        0 => "fourierft",
+        1 => "lora",
+        2 => "dense",
+        3 => "bitfit",
+        other => bail!("unknown adapter kind {other}"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Site dispatch — the single reconstruction path shared by merge, the
+// serving swap caches, and the scheduler's DeltaRunner.
+
+/// Reconstruct the per-site ΔW set of an adapter file, host-side, using
+/// dims stored in the file (v2). See [`site_deltas_with_dims`] for v1
+/// files that need a caller-side dims fallback.
+pub fn site_deltas(adapter: &AdapterFile) -> Result<Vec<(String, Tensor)>> {
+    site_deltas_with_dims(adapter, |_| None)
+}
+
+/// [`site_deltas`] with a dims fallback consulted for sites the file does
+/// not carry dims for (v1 checkpoints; the serving cache passes the
+/// artifact-meta map, the merge path passes base-weight shapes). Dim
+/// resolution order: file → `fallback` → the method's shape inference.
+pub fn site_deltas_with_dims(
+    adapter: &AdapterFile,
+    fallback: impl Fn(&str) -> Option<(usize, usize)>,
+) -> Result<Vec<(String, Tensor)>> {
+    let m = get(&adapter.method)?;
+    let ctx =
+        ReconstructCtx { seed: adapter.seed, alpha: adapter.alpha, meta: &adapter.meta };
+    // Group site tensors by role, preserving first-seen site order.
+    let mut order: Vec<&str> = Vec::new();
+    let mut groups: HashMap<&str, Vec<(&str, &Tensor)>> = HashMap::new();
+    for e in &adapter.tensors {
+        if e.role == ROLE_HEAD {
+            continue;
+        }
+        if !e.site.is_empty() && m.roles().contains(&e.role.as_str()) {
+            let g = groups.entry(e.site.as_str()).or_default();
+            if g.is_empty() {
+                order.push(e.site.as_str());
+            }
+            // A duplicate role would silently shadow its predecessor in
+            // the role map — refuse rather than reconstruct half a file.
+            if g.iter().any(|(role, _)| *role == e.role) {
+                bail!("duplicate '{}' tensor for adapter site '{}'", e.role, e.site);
+            }
+            g.push((e.role.as_str(), &e.tensor));
+        } else if m.strict() {
+            bail!("unexpected tensor {} in {} adapter", e.name, m.id());
+        }
+    }
+    // Index the stored dim records once (site_dims() is a linear scan).
+    let stored_dims: HashMap<&str, (usize, usize)> =
+        adapter.sites.iter().map(|s| (s.site.as_str(), (s.d1, s.d2))).collect();
+    let mut out = Vec::with_capacity(order.len());
+    for site in order {
+        let pairs = groups.remove(site).unwrap();
+        let tensors = SiteTensors::from_pairs(&pairs);
+        let resolved = stored_dims
+            .get(site)
+            .copied()
+            .or_else(|| fallback(site))
+            .or_else(|| m.infer_dims(&tensors));
+        let (d1, d2) = match resolved {
+            Some(d) => d,
+            // Verbatim methods never read the dims; (0, 0) marks them
+            // unresolved without failing shapes v1 accepted.
+            None if !m.needs_dims() => (0, 0),
+            None => {
+                return Err(anyhow!(
+                    "unknown adapter site '{site}' (no dims stored or derivable)"
+                ))
+            }
+        };
+        let spec = SiteSpec { name: site.to_string(), d1, d2 };
+        out.push((site.to_string(), m.site_delta(&spec, &tensors, &ctx)?));
+    }
+    Ok(out)
+}
+
+/// Build a complete synthetic adapter file for `method_id`: `sites.len()`
+/// adapted sites initialized from `rng` under `hp`, with per-site dims
+/// recorded. This is the init path the workload generator, the
+/// `serve-host` CLI, and the cross-method parity tests share.
+pub fn init_adapter(
+    method_id: &str,
+    rng: &mut Rng,
+    sites: &[SiteSpec],
+    hp: &MethodHp,
+    seed: u64,
+    alpha: f32,
+    meta: Vec<(String, String)>,
+) -> Result<AdapterFile> {
+    let m = get(method_id)?;
+    let mut tensors = Vec::new();
+    let mut dim_records = Vec::with_capacity(sites.len());
+    for spec in sites {
+        for (role, tensor) in m.init_tensors(rng, spec, hp)? {
+            tensors.push(super::format::TensorEntry {
+                name: m.tensor_name(&spec.name, &role),
+                site: spec.name.clone(),
+                role,
+                tensor,
+            });
+        }
+        dim_records.push(super::format::SiteDims {
+            site: spec.name.clone(),
+            d1: spec.d1,
+            d2: spec.d2,
+        });
+    }
+    Ok(AdapterFile {
+        method: m.id().to_string(),
+        seed,
+        alpha,
+        meta,
+        sites: dim_records,
+        tensors,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_all_builtins() {
+        let ids = ids();
+        for want in ["fourierft", "lora", "dense", "bitfit", "loca", "circulant"] {
+            assert!(ids.iter().any(|i| i == want), "missing builtin {want}");
+        }
+    }
+
+    #[test]
+    fn unknown_id_is_hard_error() {
+        let err = get("definitely_not_registered").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("definitely_not_registered"));
+        assert!(msg.contains("fourierft"), "error should list registered ids");
+    }
+
+    #[test]
+    fn aliases_resolve_to_canonical() {
+        assert_eq!(get("randbasis").unwrap().id(), "fourierft");
+        assert_eq!(get("orthobasis").unwrap().id(), "fourierft");
+        assert_eq!(get("ff").unwrap().id(), "dense");
+    }
+
+    #[test]
+    fn kind_bytes_map_and_reject() {
+        assert_eq!(from_kind_byte(0).unwrap(), "fourierft");
+        assert_eq!(from_kind_byte(1).unwrap(), "lora");
+        assert_eq!(from_kind_byte(2).unwrap(), "dense");
+        assert_eq!(from_kind_byte(3).unwrap(), "bitfit");
+        assert!(from_kind_byte(4).is_err());
+        assert!(from_kind_byte(255).is_err());
+    }
+
+    #[test]
+    fn duplicate_registration_is_rejected() {
+        let err = register(Arc::new(fourierft::FourierFt)).unwrap_err();
+        assert!(format!("{err:#}").contains("already registered"));
+    }
+
+    /// A method whose id is shadowed by a [`get`] alias would be silently
+    /// unreachable (get("ff") rewrites to "dense" before the lookup) —
+    /// registration must refuse it up front.
+    struct AliasShadow;
+
+    impl DeltaMethod for AliasShadow {
+        fn id(&self) -> MethodId {
+            "ff"
+        }
+        fn roles(&self) -> &'static [&'static str] {
+            &[]
+        }
+        fn site_delta(
+            &self,
+            _s: &SiteSpec,
+            _t: &SiteTensors,
+            _c: &ReconstructCtx,
+        ) -> Result<Tensor> {
+            unreachable!("never dispatched")
+        }
+        fn param_count(&self, _d1: usize, _d2: usize, _hp: &MethodHp) -> usize {
+            0
+        }
+        fn init_tensors(
+            &self,
+            _rng: &mut Rng,
+            _s: &SiteSpec,
+            _hp: &MethodHp,
+        ) -> Result<Vec<(String, Tensor)>> {
+            Ok(vec![])
+        }
+        fn classify_legacy(&self, _name: &str) -> Option<(String, String)> {
+            None
+        }
+        fn tensor_name(&self, _site: &str, _role: &str) -> String {
+            String::new()
+        }
+    }
+
+    #[test]
+    fn alias_shadowing_registration_is_rejected() {
+        let err = register(Arc::new(AliasShadow)).unwrap_err();
+        assert!(format!("{err:#}").contains("alias"));
+        // and the alias still resolves to the built-in it aliases
+        assert_eq!(get("ff").unwrap().id(), "dense");
+    }
+
+    #[test]
+    fn duplicate_site_role_is_rejected_not_shadowed() {
+        // Two coefficient tensors for one site: v1 containers could
+        // represent this; a HashMap would keep only the last. Hard error.
+        let coeffs = Tensor::zeros(&[4]);
+        let file = AdapterFile {
+            method: "fourierft".into(),
+            seed: 1,
+            alpha: 1.0,
+            meta: vec![],
+            sites: vec![super::super::format::SiteDims {
+                site: "w".into(),
+                d1: 8,
+                d2: 8,
+            }],
+            tensors: vec![
+                super::super::format::TensorEntry::new("spec.w.c", "w", "coef", coeffs.clone()),
+                super::super::format::TensorEntry::new("spec.w.c", "w", "coef", coeffs),
+            ],
+        };
+        let err = site_deltas(&file).unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate"));
+    }
+
+    #[test]
+    fn init_adapter_records_dims_and_names() {
+        let mut rng = Rng::new(7);
+        let sites =
+            vec![SiteSpec { name: "blk0.w".into(), d1: 16, d2: 16 }];
+        let hp = MethodHp { n: 8, rank: 2, init_std: 1.0 };
+        for id in ["fourierft", "lora", "dense", "loca", "circulant"] {
+            let a = init_adapter(id, &mut rng, &sites, &hp, 2024, 4.0, vec![]).unwrap();
+            assert_eq!(a.method, id);
+            assert_eq!(a.site_dims("blk0.w"), Some((16, 16)));
+            assert!(!a.tensors.is_empty());
+            for e in &a.tensors {
+                assert_eq!(e.site, "blk0.w");
+                assert!(!e.name.is_empty());
+            }
+            let deltas = site_deltas(&a).unwrap();
+            assert_eq!(deltas.len(), 1, "{id}: one site in, one delta out");
+        }
+    }
+}

@@ -1,11 +1,16 @@
 //! Adapter storage & serving — the paper's systems motivation (§1: Civitai
 //! bandwidth, mobile RAM) made concrete:
 //!
-//! * [`format`] — compact binary checkpoint formats: `.fft` stores the
-//!   shared entry matrix once plus per-layer coefficient vectors;
-//!   `.lora` stores (A, B) pairs; `.dense` stores full deltas.
+//! * [`method`] — the pluggable [`method::DeltaMethod`] trait + process-wide
+//!   registry: every ΔW-producing PEFT method (`fourierft`, `lora`,
+//!   `dense`/`bitfit`, `loca`, `circulant`, and anything user-registered)
+//!   dispatches through one table shared by merge, serving, budgets, and
+//!   the CLI. See the module docs for "how to add a method".
+//! * [`format`] — the self-describing binary checkpoint format (v2):
+//!   method id, per-site dims, and per-tensor roles live in the file;
+//!   v1 files load through a read-compat shim.
 //! * [`budget`] — exact trainable-parameter / byte arithmetic reproducing
-//!   the paper's Table 1 for all 14 base-model configurations.
+//!   the paper's Table 1, plus registry-driven cross-method budgets.
 //! * [`store`] — a multi-adapter registry over one frozen base model with
 //!   hot-swap, the unit the serving loop routes requests across.
 //! * [`merge`] — ΔW reconstruction + merge into base weights, either
@@ -15,8 +20,10 @@
 pub mod budget;
 pub mod format;
 pub mod merge;
+pub mod method;
 pub mod store;
 
 pub use budget::{fourierft_params, lora_params, Table1Row, TABLE1};
-pub use format::{AdapterFile, AdapterKind};
+pub use format::{AdapterFile, SiteDims, TensorEntry};
+pub use method::{DeltaMethod, MethodHp, SiteSpec};
 pub use store::{AdapterStore, SharedAdapterStore};

@@ -242,7 +242,6 @@ impl SharedAdapterStore {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::adapter::format::AdapterKind;
     use crate::tensor::Tensor;
 
     fn tmp(tag: &str) -> PathBuf {
@@ -252,13 +251,15 @@ mod tests {
     }
 
     fn adapter(n: usize) -> AdapterFile {
-        AdapterFile {
-            kind: AdapterKind::FourierFt,
-            seed: 2024,
-            alpha: 16.0,
-            meta: vec![("n".into(), n.to_string())],
-            tensors: vec![("spec.w.c".into(), Tensor::zeros(&[n]))],
-        }
+        AdapterFile::from_named(
+            "fourierft",
+            2024,
+            16.0,
+            vec![("n".into(), n.to_string())],
+            vec![("spec.w.c".into(), Tensor::zeros(&[n]))],
+            |_| Some((n, n)),
+        )
+        .unwrap()
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! then starts from the same checkpoint, exactly like the paper.
 
 use super::trainer::{Batch, FinetuneCfg, Trainer};
-use crate::adapter::format::{AdapterFile, AdapterKind};
+use crate::adapter::format::AdapterFile;
 use crate::data::{collate_img, collate_lm, corpus, vision};
 use crate::runtime::{from_literal, to_literal, xla};
 use crate::tensor::{rng::Rng, Tensor};
@@ -41,7 +41,7 @@ pub fn load_or_init_base(trainer: &Trainer, model: &str) -> Result<Vec<xla::Lite
     if path.exists() {
         let file = AdapterFile::load(&path)?;
         let map: BTreeMap<&str, &Tensor> =
-            file.tensors.iter().map(|(k, v)| (k.as_str(), v)).collect();
+            file.tensors.iter().map(|e| (e.name.as_str(), &e.tensor)).collect();
         return tensors_meta
             .iter()
             .map(|tm| {
@@ -142,31 +142,36 @@ pub fn pretrain(trainer: &Trainer, model: &str) -> Result<Vec<Tensor>> {
     anyhow::ensure!(last < first, "pretraining did not reduce loss ({first} -> {last})");
 
     // Merge: base' = base + delta (ff adapters are dense deltas).
-    let adapter = AdapterFile {
-        kind: AdapterKind::DenseDelta,
-        seed: 0,
-        alpha: 1.0,
-        meta: vec![("model".into(), model.into())],
-        tensors: exe.adapt_tensors(&state)?
+    let adapter = AdapterFile::from_named(
+        "dense",
+        0,
+        1.0,
+        vec![("model".into(), model.into())],
+        exe.adapt_tensors(&state)?
             .into_iter()
             .filter(|(k, _)| !k.starts_with("head."))
             .collect(),
-    };
+        |_| None, // dense deltas carry their own dims
+    )?;
     crate::adapter::merge::merge_into_base(&adapter, &mut base_tensors)?;
 
-    let file = AdapterFile {
-        kind: AdapterKind::DenseDelta,
-        seed: 0,
-        alpha: 1.0,
-        meta: vec![
+    // Base checkpoints reuse the container as a plain tensor-set file:
+    // the tensors are full base weights under their own names (opaque to
+    // the method registry; never reconstructed through site_deltas).
+    let file = AdapterFile::from_named(
+        "dense",
+        0,
+        1.0,
+        vec![
             ("model".into(), model.into()),
             ("pretrain_artifact".into(), artifact.into()),
             ("steps".into(), steps.to_string()),
             ("loss_first".into(), format!("{first}")),
             ("loss_last".into(), format!("{last}")),
         ],
-        tensors: base_tensors.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
-    };
+        base_tensors.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+        |_| None,
+    )?;
     file.save(&base_path(model))?;
     Ok(base_tensors.into_values().collect())
 }

@@ -479,6 +479,13 @@ impl<'a> DeltaRunner<'a> {
     /// results are bitwise comparable.
     pub fn eval_one(deltas: &[(String, Tensor)], x: &Tensor) -> Result<Tensor> {
         anyhow::ensure!(!deltas.is_empty(), "adapter reconstructs no sites");
+        anyhow::ensure!(
+            deltas[0].1.rank() == 2,
+            "site {}: rank-{} ΔW cannot be applied by the host runner (needs 2-D weights; \
+             e.g. bitfit bias deltas are merge-only)",
+            deltas[0].0,
+            deltas[0].1.rank()
+        );
         let (d_in, d_out) = (deltas[0].1.shape[0], deltas[0].1.shape[1]);
         anyhow::ensure!(
             x.rank() == 2 && x.shape[1] == d_in,

@@ -50,7 +50,7 @@ use super::scheduler::{self, SchedCfg};
 use super::scheduler::{BatchOut, BatchRunner};
 use super::trainer::{Batch, Trainer};
 use crate::adapter::format::AdapterFile;
-use crate::adapter::merge::site_deltas;
+use crate::adapter::method::site_deltas_with_dims;
 use crate::adapter::store::{shard_index, AdapterStore, SharedAdapterStore};
 use crate::runtime::exec::ParamSet;
 #[cfg(not(feature = "xla-runtime"))]
@@ -274,7 +274,8 @@ impl SwapCache {
         }
         let disk0 = store.disk_reads();
         let file = store.load(name)?;
-        let t: TensorSet = Arc::new(file.tensors.into_iter().collect());
+        let t: TensorSet =
+            Arc::new(file.tensors.into_iter().map(|e| (e.name, e.tensor)).collect());
         self.stats.tensor_builds += 1;
         self.tensors.insert(name.to_string(), t.clone());
         self.touch(name);
@@ -282,10 +283,13 @@ impl SwapCache {
     }
 
     /// Reconstructed per-site ΔW for `name` (merge/export serving path),
-    /// via [`crate::adapter::merge::site_deltas`] — the same dispatch the
-    /// offline merge uses — with site dims from the artifact meta. Cold:
-    /// decode (store LRU) + per-site reconstruction through the global
-    /// GEMM plan cache. Warm: one hash lookup, no disk, no IDFT.
+    /// via the method registry's
+    /// [`crate::adapter::method::site_deltas_with_dims`] — the same
+    /// dispatch the offline merge uses — with site dims from the file
+    /// itself (v2) or the artifact meta (v1 fallback). Cold: decode
+    /// (store LRU) + per-site reconstruction through the method (the
+    /// global GEMM plan cache for spectral kinds). Warm: one hash lookup,
+    /// no disk, no reconstruction.
     pub fn deltas(
         &mut self,
         store: &mut AdapterStore,
@@ -307,7 +311,8 @@ impl SwapCache {
         }
         let disk0 = store.disk_reads();
         let file = store.load(name)?;
-        let d = Arc::new(site_deltas(&file, &|site| self.site_dims.get(site).copied())?);
+        let d =
+            Arc::new(site_deltas_with_dims(&file, |site| self.site_dims.get(site).copied())?);
         self.stats.delta_builds += 1;
         self.deltas.insert(name.to_string(), d.clone());
         self.touch(name);
@@ -462,6 +467,10 @@ pub struct Server<'a> {
     pub artifact: String,
     pub store: SharedAdapterStore,
     pub swap: SharedSwap,
+    /// Adapted site name -> (d1, d2), from the artifact meta; used both as
+    /// the v1 dims fallback at reconstruction time and to stamp dims into
+    /// published v2 files.
+    site_dims: BTreeMap<String, (usize, usize)>,
     state: ParamSet,
     active: Option<String>,
     scaling: f32,
@@ -527,18 +536,13 @@ impl<'a> Server<'a> {
             trainer.make_statics(&exe.meta, entry_seed, crate::fourier::EntryBias::None)?;
         let base = trainer.base_for(&exe.meta)?;
         let state = exe.init_state(0, base, statics)?;
-        let site_dims = exe
-            .meta
-            .inputs_with_role("base")
-            .iter()
-            .filter(|t| t.shape.len() == 2)
-            .map(|t| (t.name.clone(), (t.shape[0], t.shape[1])))
-            .collect();
+        let site_dims: BTreeMap<String, (usize, usize)> = exe.meta.site_dims();
         Ok(Server {
             trainer,
             artifact: artifact.to_string(),
             store,
-            swap: SharedSwap::new(site_dims),
+            swap: SharedSwap::new(site_dims.clone()),
+            site_dims,
             state,
             active: None,
             scaling,
@@ -655,20 +659,23 @@ impl<'a> Server<'a> {
     }
 
     /// Persist the currently-active adapter state under a new name
-    /// (training-service path: fine-tune then publish). Invalidates every
-    /// cache layer for `name` so subsequent swaps see the new contents —
-    /// including scheduler workers mid-stream, via the `Arc` identity
-    /// check in their slots.
-    pub fn publish(&mut self, name: &str, kind: crate::adapter::AdapterKind, seed: u64,
+    /// (training-service path: fine-tune then publish). `method` is any
+    /// registered method id; the device tensors are classified into
+    /// (site, role) records and the artifact's site dims are stamped into
+    /// the v2 file. Invalidates every cache layer for `name` so subsequent
+    /// swaps see the new contents — including scheduler workers
+    /// mid-stream, via the `Arc` identity check in their slots.
+    pub fn publish(&mut self, name: &str, method: &str, seed: u64,
                    meta: Vec<(String, String)>) -> Result<usize> {
         let exe = self.trainer.executable(&self.artifact)?;
-        let file = AdapterFile {
-            kind,
+        let file = AdapterFile::from_named(
+            method,
             seed,
-            alpha: self.scaling,
+            self.scaling,
             meta,
-            tensors: exe.adapt_tensors(&self.state)?,
-        };
+            exe.adapt_tensors(&self.state)?,
+            |site| self.site_dims.get(site).copied(),
+        )?;
         let bytes = self.store.save(name, &file)?;
         // Drop per-name cache layers; the server's own device state
         // already holds these tensors, so an active adapter stays active.
@@ -737,7 +744,7 @@ mod tests {
 
     #[test]
     fn shared_swap_counters_and_invalidation() {
-        use crate::adapter::format::{AdapterFile, AdapterKind};
+        use crate::adapter::format::AdapterFile;
         use crate::tensor::rng::Rng;
 
         let dir = std::env::temp_dir()
@@ -750,16 +757,18 @@ mod tests {
         let swap = SharedSwap::with_shards(site_dims, 4, 8);
         let mut rng = Rng::new(0x5A);
         for name in ["a", "b", "c"] {
-            let file = AdapterFile {
-                kind: AdapterKind::FourierFt,
-                seed: 2024,
-                alpha: 4.0,
-                meta: vec![("n".into(), n.to_string())],
-                tensors: vec![(
+            let file = AdapterFile::from_named(
+                "fourierft",
+                2024,
+                4.0,
+                vec![("n".into(), n.to_string())],
+                vec![(
                     "spec.blk0.attn.wq.w.c".into(),
                     Tensor::f32(&[n], rng.normal_vec(n, 1.0)),
                 )],
-            };
+                |_| Some((d, d)),
+            )
+            .unwrap();
             store.save(name, &file).unwrap();
         }
         // Cold then warm: the trace tells each access apart exactly.

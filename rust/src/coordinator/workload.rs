@@ -15,7 +15,7 @@
 
 use super::serving::Request;
 use super::trainer::Batch;
-use crate::adapter::format::{AdapterFile, AdapterKind};
+use crate::adapter::method::{self, MethodHp, SiteSpec};
 use crate::adapter::store::SharedAdapterStore;
 use crate::tensor::{rng::Rng, Tensor};
 use anyhow::Result;
@@ -51,8 +51,11 @@ pub struct WorkloadCfg {
     pub dim: usize,
     /// Adapted sites per adapter file.
     pub sites: usize,
-    /// Spectral coefficients per site.
+    /// Spectral coefficients per site (fourierft / loca).
     pub n_coeffs: usize,
+    /// Registered adapter-method id the store is populated with
+    /// ([`crate::adapter::method::get`] must resolve it).
+    pub method: String,
 }
 
 impl WorkloadCfg {
@@ -68,6 +71,7 @@ impl WorkloadCfg {
             dim: 32,
             sites: 2,
             n_coeffs: 16,
+            method: "fourierft".into(),
         }
     }
 
@@ -85,6 +89,7 @@ impl WorkloadCfg {
             dim: 64,
             sites: 4,
             n_coeffs: 64,
+            method: "fourierft".into(),
         }
     }
 }
@@ -105,30 +110,31 @@ pub fn zipf_weights(n: usize, s: f64) -> Vec<f64> {
     (0..n).map(|k| 1.0 / ((k + 1) as f64).powf(s)).collect()
 }
 
-/// Write one seeded FourierFT adapter file per rank into the store;
-/// returns the names. Every adapter shares the entry seed (paper: one
-/// entry matrix per model family) but has its own coefficients, so all
+/// Write one seeded adapter file per rank into the store, of the method
+/// `cfg.method` names (any registered id — the init tensors come from the
+/// method's own [`crate::adapter::method::DeltaMethod::init_tensors`]);
+/// returns the names. Spectral adapters share the entry seed (paper: one
+/// entry matrix per model family) but have their own coefficients, so all
 /// ΔW reconstructions share one GEMM plan while remaining distinct.
 pub fn populate_store(store: &SharedAdapterStore, cfg: &WorkloadCfg) -> Result<Vec<String>> {
+    let hp = MethodHp { n: cfg.n_coeffs, rank: 4, init_std: 1.0 };
+    let sites: Vec<SiteSpec> = (0..cfg.sites)
+        .map(|s| SiteSpec { name: format!("blk{s}.attn.wq.w"), d1: cfg.dim, d2: cfg.dim })
+        .collect();
     let mut names = Vec::with_capacity(cfg.adapters);
     for i in 0..cfg.adapters {
         let name = adapter_name(i);
         let mut rng =
             Rng::new(cfg.seed ^ 0xADA7 ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-        let file = AdapterFile {
-            kind: AdapterKind::FourierFt,
-            seed: cfg.seed,
-            alpha: 8.0,
-            meta: vec![("n".into(), cfg.n_coeffs.to_string())],
-            tensors: (0..cfg.sites)
-                .map(|s| {
-                    (
-                        format!("spec.blk{s}.attn.wq.w.c"),
-                        Tensor::f32(&[cfg.n_coeffs], rng.normal_vec(cfg.n_coeffs, 1.0)),
-                    )
-                })
-                .collect(),
-        };
+        let file = method::init_adapter(
+            &cfg.method,
+            &mut rng,
+            &sites,
+            &hp,
+            cfg.seed,
+            8.0,
+            vec![("n".into(), cfg.n_coeffs.to_string())],
+        )?;
         store.save(&name, &file)?;
         names.push(name);
     }
@@ -306,8 +312,30 @@ mod tests {
         let a = store.load(&names[0]).unwrap();
         let b = store.load(&names[1]).unwrap();
         assert_eq!(a.tensors.len(), cfg.sites);
-        let (ta, tb) = (a.tensors[0].1.as_f32().unwrap(), b.tensors[0].1.as_f32().unwrap());
+        assert_eq!(a.site_dims("blk0.attn.wq.w"), Some((cfg.dim, cfg.dim)));
+        let (ta, tb) =
+            (a.tensors[0].tensor.as_f32().unwrap(), b.tensors[0].tensor.as_f32().unwrap());
         assert_ne!(ta, tb, "adapters must have distinct coefficients");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn populate_store_supports_every_builtin_method() {
+        let dir =
+            std::env::temp_dir().join(format!("fp_workload_m_{}", std::process::id()));
+        for m in ["fourierft", "lora", "dense", "loca", "circulant"] {
+            let _ = std::fs::remove_dir_all(&dir);
+            let store = SharedAdapterStore::open(&dir).unwrap();
+            let cfg = WorkloadCfg { adapters: 2, method: m.into(), ..WorkloadCfg::small() };
+            let names = populate_store(&store, &cfg).unwrap();
+            let a = store.load(&names[0]).unwrap();
+            assert_eq!(a.method, m);
+            let deltas = crate::adapter::method::site_deltas(&a).unwrap();
+            assert_eq!(deltas.len(), cfg.sites, "{m}: every site reconstructs");
+            for (_, d) in &deltas {
+                assert_eq!(d.shape, vec![cfg.dim, cfg.dim], "{m}: site dims from file");
+            }
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -28,6 +28,19 @@
 //! [`coordinator::serving::SwapCache`]) so a warm adapter swap is a pair of
 //! hash lookups — no disk read, no decode, no inverse DFT.
 //!
+//! ## Adapter-method registry
+//!
+//! ΔW-producing PEFT methods are pluggable: [`adapter::method`] defines
+//! the [`adapter::method::DeltaMethod`] trait and a process-wide registry
+//! (`get` / `register` / `ids`) that the merge path, both serving cache
+//! layers, the scheduler's `DeltaRunner`, budget arithmetic, and the CLI
+//! all dispatch through. Built-ins: `fourierft`, `lora`, `dense`,
+//! `bitfit`, `loca` (learned-location cosine components), `circulant`
+//! (circulant×diagonal). Adapter files (format v2, [`adapter::format`])
+//! are self-describing — method id, per-tensor (site, role), per-site
+//! dims — with a v1 read-compat shim. See the module docs for how to add
+//! a method.
+//!
 //! ## Serving scheduler
 //!
 //! Queues are served by the concurrent micro-batching scheduler in

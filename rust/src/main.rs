@@ -33,6 +33,8 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("figure") => experiment(args, "figure"),
         Some("all") => all(args),
         Some("serve") => serve(args),
+        Some("serve-host") => serve_host(args),
+        Some("methods") => methods(args),
         Some("probe") => probe(args),
         other => {
             if let Some(cmd) = other {
@@ -55,8 +57,83 @@ fn print_usage() {
          \x20 table <1|2|3|4|5|6|13>  [--quick --steps N --seeds N]\n\
          \x20 figure <3|4|5|6|7>   [--quick --steps N --seeds N]\n\
          \x20 all [--quick]                      run every table and figure\n\
-         \x20 serve [--adapters N --requests N --workers N]  multi-adapter serving demo"
+         \x20 serve [--adapters N --requests N --workers N]  multi-adapter serving demo\n\
+         \x20 serve-host [--method ID --adapters N --requests N --workers N]\n\
+         \x20                                    pure-host scheduler demo, any registered method\n\
+         \x20 methods [--d N --layers N --n N --rank N]      registered adapter methods + budgets"
     );
+}
+
+/// List every registered adapter method with its per-model parameter
+/// budget (the §Methods table of EXPERIMENTS.md, live from the registry).
+fn methods(args: &Args) -> Result<()> {
+    use fourier_peft::adapter::budget::method_params;
+    use fourier_peft::adapter::method::{self, MethodHp};
+
+    let d = args.usize_or("d", 768);
+    let layers = args.usize_or("layers", 24);
+    let hp = MethodHp {
+        n: args.usize_or("n", 1000),
+        rank: args.usize_or("rank", 8),
+        init_std: 1.0,
+    };
+    println!(
+        "registered adapter methods (d={d}, L_t={layers}, n={}, r={}):",
+        hp.n, hp.rank
+    );
+    println!("{:<12} {:>14} {:>12}", "method", "params", "f32 bytes");
+    for id in method::ids() {
+        let p = method_params(&id, d, layers, &hp)?;
+        println!(
+            "{:<12} {:>14} {:>12}",
+            id,
+            p,
+            fourier_peft::util::fmt_bytes(fourier_peft::adapter::budget::bytes_f32(p))
+        );
+    }
+    Ok(())
+}
+
+/// Pure-host serving demo: populate a synthetic store with `--method`
+/// adapters (any registered id — no XLA artifacts needed), then drive the
+/// Zipf workload through the micro-batching scheduler.
+fn serve_host(args: &Args) -> Result<()> {
+    use fourier_peft::adapter::SharedAdapterStore;
+    use fourier_peft::coordinator::scheduler::{serve_scheduled_host, SchedCfg};
+    use fourier_peft::coordinator::serving::SharedSwap;
+    use fourier_peft::coordinator::workload::{self, WorkloadCfg};
+
+    let method = args.str_or("method", "fourierft");
+    let cfg = WorkloadCfg {
+        adapters: args.usize_or("adapters", 32),
+        requests: args.usize_or("requests", 256),
+        method: method.to_string(),
+        ..WorkloadCfg::small()
+    };
+    let dir = fourier_peft::runs_dir().join("serve_host_demo").join(method);
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = SharedAdapterStore::open(&dir)?;
+    workload::populate_store(&store, &cfg)?;
+    let swap = SharedSwap::new(workload::site_dims(&cfg));
+    let sched = SchedCfg {
+        workers: args.usize_or("workers", 2),
+        ..SchedCfg::default()
+    };
+    let queue = workload::gen_requests(&cfg);
+    let (results, stats) = serve_scheduled_host(&swap, &store, queue, &sched)?;
+    println!(
+        "method {method}: served {} requests in {} micro-batches  swaps {} ({} warm)  \
+         wall {:.3}s  => {:.1} req/s",
+        results.len(), stats.batches, stats.swaps, stats.warm_swaps,
+        stats.wall_seconds, stats.throughput_rps()
+    );
+    println!(
+        "latency p50 {:.1}ms  p95 {:.1}ms  p99 {:.1}ms  disk reads {}  store bytes {}",
+        stats.latency_p50() * 1e3, stats.latency_p95() * 1e3, stats.latency_p99() * 1e3,
+        stats.disk_reads,
+        fourier_peft::util::fmt_bytes(store.total_bytes()? as usize)
+    );
+    Ok(())
 }
 
 fn info() -> Result<()> {
@@ -190,7 +267,7 @@ fn probe(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    use fourier_peft::adapter::{AdapterKind, SharedAdapterStore};
+    use fourier_peft::adapter::{AdapterFile, SharedAdapterStore};
     use fourier_peft::coordinator::scheduler::SchedCfg;
     use fourier_peft::coordinator::serving::{Request, Server};
     use fourier_peft::data::glue::GlueTask;
@@ -206,20 +283,22 @@ fn serve(args: &Args) -> Result<()> {
 
     // Publish n adapters: quick fine-tunes on different tasks.
     let tasks = [GlueTask::Rte, GlueTask::Sst2, GlueTask::Mrpc, GlueTask::Qnli];
+    let site_dims = meta.site_dims();
     for i in 0..n_adapters {
         let task = tasks[i % tasks.len()];
         let opts = experiments::Opts { steps: 40, seeds: 1, eval_count: 64, quick: true, scaling_scale: 1.0 };
         let res = experiments::glue_run(&trainer, task, artifact, &opts, i as u64, 1.0)?;
         server.store.save(
             &format!("adapter_{i}_{}", task.name()),
-            &fourier_peft::adapter::AdapterFile {
-                kind: AdapterKind::FourierFt,
-                seed: 2024,
-                alpha: 8.0,
-                meta: vec![("task".into(), task.name().into()),
-                           ("n".into(), meta.method.n.to_string())],
-                tensors: res.adapt,
-            },
+            &AdapterFile::from_named(
+                "fourierft",
+                2024,
+                8.0,
+                vec![("task".into(), task.name().into()),
+                     ("n".into(), meta.method.n.to_string())],
+                res.adapt,
+                |site| site_dims.get(site).copied(),
+            )?,
         )?;
         println!("published adapter_{i}_{} (best metric {:.3})", task.name(), res.best_eval);
     }

@@ -145,6 +145,17 @@ impl ArtifactMeta {
         self.outputs.iter().filter(|t| t.role == role).collect()
     }
 
+    /// (d1, d2) of every adaptable 2-D base weight, keyed by tensor name —
+    /// the site-dims map the serving caches use as a v1 fallback and the
+    /// publish path stamps into v2 adapter files.
+    pub fn site_dims(&self) -> BTreeMap<String, (usize, usize)> {
+        self.inputs_with_role("base")
+            .iter()
+            .filter(|t| t.shape.len() == 2)
+            .map(|t| (t.name.clone(), (t.shape[0], t.shape[1])))
+            .collect()
+    }
+
     /// Shape of the logits output.
     pub fn logits_shape(&self) -> Result<&[usize]> {
         self.outputs

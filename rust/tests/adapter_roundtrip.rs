@@ -9,7 +9,7 @@
 
 use fourier_peft::adapter::merge::{delta_device, delta_host};
 use fourier_peft::runtime::xla;
-use fourier_peft::adapter::{AdapterFile, AdapterKind, SharedAdapterStore};
+use fourier_peft::adapter::{AdapterFile, SharedAdapterStore};
 use fourier_peft::coordinator::serving::{Request, Server};
 use fourier_peft::coordinator::trainer::Trainer;
 use fourier_peft::data::collate_text;
@@ -68,18 +68,21 @@ fn finetune_publish_reload_serve() {
             None,
         )
         .unwrap();
+    let site_dims = exe.meta.site_dims();
     for name in ["blobs_a", "blobs_b"] {
         server
             .store
             .save(
                 name,
-                &AdapterFile {
-                    kind: AdapterKind::FourierFt,
-                    seed: 2024,
-                    alpha: 64.0,
-                    meta: vec![("n".into(), "128".into())],
-                    tensors: res.adapt.clone(),
-                },
+                &AdapterFile::from_named(
+                    "fourierft",
+                    2024,
+                    64.0,
+                    vec![("n".into(), "128".into())],
+                    res.adapt.clone(),
+                    |site| site_dims.get(site).copied(),
+                )
+                .unwrap(),
             )
             .unwrap();
     }
@@ -155,13 +158,15 @@ fn merged_weights_reproduce_adapter_forward() {
         .zip(&base_lits2)
         .map(|(m, l)| (m.name.clone(), fourier_peft::runtime::from_literal(l).unwrap()))
         .collect();
-    let adapter_file = AdapterFile {
-        kind: AdapterKind::FourierFt,
+    let adapter_file = AdapterFile::from_named(
+        "fourierft",
         seed,
         alpha,
-        meta: vec![("n".into(), n.to_string())],
-        tensors: vec![("spec.w2.w.c".into(), coeffs.clone())],
-    };
+        vec![("n".into(), n.to_string())],
+        vec![("spec.w2.w.c".into(), coeffs.clone())],
+        |_| None, // dims resolved from the base map at merge time
+    )
+    .unwrap();
     fourier_peft::adapter::merge::merge_into_base(&adapter_file, &mut base_map).unwrap();
     // sanity: merged weight actually differs from the original
     let delta = delta_host(&coeffs, seed, n, 64, 64, alpha).unwrap();

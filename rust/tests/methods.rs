@@ -1,0 +1,383 @@
+//! Method-registry integration tests, pure host (no XLA needed).
+//!
+//! Pins the PR-3 acceptance claims:
+//! * **cross-method parity**: for every registered method,
+//!   `init → save → load → site_deltas` equals direct per-site
+//!   reconstruction through the trait, bitwise;
+//! * **v1 read compat**: hand-built v1 fixture bytes (kind byte +
+//!   name-convention schema) load with identical payloads under the v2
+//!   reader and reconstruct exactly as the v1 dispatch did;
+//! * **open registry**: a user-defined method registered at runtime is
+//!   served end-to-end through the scheduler with bitwise determinism;
+//! * **LoRA pair-up is O(sites)**: the HashMap site-grouping pairs a/b
+//!   correctly at many sites (regression for the old per-`.a` linear
+//!   scan);
+//! * unknown method ids / kind bytes are hard errors everywhere.
+
+use fourier_peft::adapter::format::{AdapterFile, TensorEntry};
+use fourier_peft::adapter::merge::{delta_host, delta_lora};
+use fourier_peft::adapter::method::{
+    self, DeltaMethod, MethodHp, MethodId, ReconstructCtx, SiteSpec, SiteTensors,
+};
+use fourier_peft::adapter::store::SharedAdapterStore;
+use fourier_peft::coordinator::scheduler::{serve_scheduled_host, serve_sequential_host, SchedCfg};
+use fourier_peft::coordinator::serving::SharedSwap;
+use fourier_peft::coordinator::workload::{self, WorkloadCfg};
+use fourier_peft::tensor::{rng::Rng, Data, Tensor};
+use std::sync::Arc;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("fp_methods_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn assert_tensor_bits(a: &Tensor, b: &Tensor, what: &str) {
+    assert_eq!(a.shape, b.shape, "{what}: shapes differ");
+    match (&a.data, &b.data) {
+        (Data::F32(x), Data::F32(y)) => {
+            for i in 0..x.len() {
+                assert!(
+                    x[i].to_bits() == y[i].to_bits(),
+                    "{what}: f32 element {i}: {} vs {}",
+                    x[i],
+                    y[i]
+                );
+            }
+        }
+        (Data::I32(x), Data::I32(y)) => assert_eq!(x, y, "{what}: i32 payload differs"),
+        _ => panic!("{what}: dtype mismatch"),
+    }
+}
+
+// --- cross-method parity ---------------------------------------------------
+
+/// For every registered built-in: a synthetic adapter built through the
+/// registry, pushed through save → load → site_deltas, must reconstruct
+/// bit-identically to calling the method's `site_delta` directly on the
+/// in-memory tensors.
+#[test]
+fn every_method_roundtrips_save_load_reconstruct_bitwise() {
+    let dir = tmpdir("parity");
+    let hp = MethodHp { n: 12, rank: 3, init_std: 1.0 };
+    let sites = vec![
+        SiteSpec { name: "blk0.attn.wq.w".into(), d1: 20, d2: 20 },
+        SiteSpec { name: "blk1.attn.wv.w".into(), d1: 20, d2: 20 },
+    ];
+    for (k, id) in ["fourierft", "lora", "dense", "bitfit", "loca", "circulant"]
+        .iter()
+        .enumerate()
+    {
+        let mut rng = Rng::new(0xAB ^ k as u64);
+        let file = method::init_adapter(id, &mut rng, &sites, &hp, 2024, 4.5, vec![]).unwrap();
+        let path = dir.join(format!("{id}.adapter"));
+        file.save(&path).unwrap();
+        let loaded = AdapterFile::load(&path).unwrap();
+        assert_eq!(loaded.method, *id);
+        assert_eq!(loaded.sites, file.sites, "{id}: dims must survive the file");
+
+        let from_file = method::site_deltas(&loaded).unwrap();
+        assert_eq!(from_file.len(), sites.len(), "{id}: one delta per site");
+
+        // Direct reconstruction from the in-memory tensors.
+        let m = method::get(id).unwrap();
+        let ctx = ReconstructCtx { seed: file.seed, alpha: file.alpha, meta: &file.meta };
+        for (spec, (site_name, got)) in sites.iter().zip(&from_file) {
+            assert_eq!(&spec.name, site_name, "{id}: site order must be file order");
+            let pairs: Vec<(&str, &Tensor)> = file
+                .tensors
+                .iter()
+                .filter(|e| e.site == spec.name)
+                .map(|e| (e.role.as_str(), &e.tensor))
+                .collect();
+            let want = m.site_delta(spec, &SiteTensors::from_pairs(&pairs), &ctx).unwrap();
+            assert_tensor_bits(&want, got, &format!("{id}/{site_name}"));
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --- v1 read-compat shim ---------------------------------------------------
+
+/// Serialize a v1 (magic "FFT1") adapter file exactly as the pre-registry
+/// writer did: kind byte + name-convention tensors, no sites, no roles.
+fn v1_bytes(kind: u8, seed: u64, alpha: f32, meta: &[(&str, &str)],
+            tensors: &[(&str, &Tensor)]) -> Vec<u8> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend(0x4646_5431u32.to_le_bytes());
+    buf.push(kind);
+    buf.extend([0u8; 3]);
+    buf.extend(seed.to_le_bytes());
+    buf.extend(alpha.to_le_bytes());
+    buf.extend((meta.len() as u32).to_le_bytes());
+    buf.extend((tensors.len() as u32).to_le_bytes());
+    let write_str = |buf: &mut Vec<u8>, s: &str| {
+        buf.extend((s.len() as u32).to_le_bytes());
+        buf.extend(s.as_bytes());
+    };
+    for (k, v) in meta {
+        write_str(&mut buf, k);
+        write_str(&mut buf, v);
+    }
+    for (name, t) in tensors {
+        write_str(&mut buf, name);
+        match &t.data {
+            Data::F32(v) => {
+                buf.push(0);
+                buf.extend((t.shape.len() as u32).to_le_bytes());
+                for &d in &t.shape {
+                    buf.extend((d as u64).to_le_bytes());
+                }
+                for x in v {
+                    buf.extend(x.to_le_bytes());
+                }
+            }
+            Data::I32(v) => {
+                buf.push(1);
+                buf.extend((t.shape.len() as u32).to_le_bytes());
+                for &d in &t.shape {
+                    buf.extend((d as u64).to_le_bytes());
+                }
+                for x in v {
+                    buf.extend(x.to_le_bytes());
+                }
+            }
+        }
+    }
+    buf
+}
+
+#[test]
+fn v1_fourierft_fixture_loads_and_reconstructs_identically() {
+    let (d, n, seed, alpha) = (16usize, 8usize, 2024u64, 7.0f32);
+    let mut rng = Rng::new(44);
+    let coeffs = Tensor::f32(&[n], rng.normal_vec(n, 1.0));
+    let head = Tensor::f32(&[3], vec![1.0, 2.0, 3.0]);
+    let bytes = v1_bytes(
+        0, // FourierFt
+        seed,
+        alpha,
+        &[("n", "8"), ("model", "enc_base")],
+        &[("spec.blk0.attn.wq.w.c", &coeffs), ("head.w", &head)],
+    );
+    let file = AdapterFile::from_bytes(&bytes).unwrap();
+    assert_eq!(file.method, "fourierft");
+    assert_eq!(file.seed, seed);
+    assert_eq!(file.alpha, alpha);
+    assert_eq!(file.meta_get("n"), Some("8"));
+    assert!(file.sites.is_empty(), "v1 never stored dims");
+    assert_eq!(file.tensors[0].name, "spec.blk0.attn.wq.w.c");
+    assert_eq!(file.tensors[0].site, "blk0.attn.wq.w");
+    assert_eq!(file.tensors[0].role, "coef");
+    assert_tensor_bits(&file.tensors[0].tensor, &coeffs, "v1 coeff payload");
+    assert_eq!(file.tensors[1].role, "head");
+    assert_eq!(file.head_tensors().len(), 1);
+
+    // Reconstruction through the registry with the caller-side dims
+    // fallback (what the serving swap cache passes) matches the original
+    // v1 dispatch — delta_host — bitwise.
+    let deltas = method::site_deltas_with_dims(&file, |_| Some((d, d))).unwrap();
+    assert_eq!(deltas.len(), 1);
+    let want = delta_host(&coeffs, seed, n, d, d, alpha).unwrap();
+    assert_tensor_bits(&want, &deltas[0].1, "v1 fourierft reconstruction");
+
+    // And a v2 resave round-trips the identical logical content.
+    let dir = tmpdir("v1v2");
+    let path = dir.join("resave.adapter");
+    file.save(&path).unwrap();
+    let back = AdapterFile::load(&path).unwrap();
+    assert_eq!(back.method, file.method);
+    assert_eq!(back.tensors, file.tensors);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn v1_lora_and_dense_fixtures_load_via_the_shim() {
+    let mut rng = Rng::new(9);
+    let a = Tensor::f32(&[2, 6], rng.normal_vec(12, 1.0));
+    let b = Tensor::f32(&[6, 2], rng.normal_vec(12, 1.0));
+    let bytes = v1_bytes(1, 0, 0.5, &[], &[("lora.w.a", &a), ("lora.w.b", &b)]);
+    let file = AdapterFile::from_bytes(&bytes).unwrap();
+    assert_eq!(file.method, "lora");
+    let deltas = method::site_deltas(&file).unwrap(); // dims inferred from factors
+    let want = delta_lora(&a, &b, 0.5).unwrap();
+    assert_tensor_bits(&want, &deltas[0].1, "v1 lora reconstruction");
+
+    let dt = Tensor::f32(&[4, 4], rng.normal_vec(16, 1.0));
+    let bytes = v1_bytes(2, 0, 1.0, &[], &[("delta.w", &dt), ("head.out", &dt)]);
+    let file = AdapterFile::from_bytes(&bytes).unwrap();
+    assert_eq!(file.method, "dense");
+    let deltas = method::site_deltas(&file).unwrap();
+    assert_tensor_bits(&dt, &deltas[0].1, "v1 dense reconstruction");
+
+    // Unknown kind bytes are rejected, exactly like v1 did.
+    let bad = v1_bytes(9, 0, 1.0, &[], &[]);
+    assert!(AdapterFile::from_bytes(&bad).is_err());
+}
+
+// --- satellite: LoRA pair-up at many sites ---------------------------------
+
+/// 300-site LoRA adapter: every site's (a, b) pair must be matched through
+/// the one-pass HashMap grouping (the old implementation did a linear scan
+/// over all tensors per `.a` — O(sites²) — this is its regression test).
+#[test]
+fn lora_many_sites_pair_up_correctly() {
+    let sites = 300usize;
+    let (r, d) = (2usize, 8usize);
+    let mut rng = Rng::new(0x10A);
+    let mut named: Vec<(String, Tensor)> = Vec::with_capacity(2 * sites);
+    let mut factors: Vec<(Tensor, Tensor)> = Vec::with_capacity(sites);
+    for s in 0..sites {
+        let a = Tensor::f32(&[r, d], rng.normal_vec(r * d, 1.0));
+        let b = Tensor::f32(&[d, r], rng.normal_vec(d * r, 1.0));
+        named.push((format!("lora.blk{s}.w.a"), a.clone()));
+        named.push((format!("lora.blk{s}.w.b"), b.clone()));
+        factors.push((a, b));
+    }
+    let file = AdapterFile::from_named("lora", 0, 2.0, vec![], named, |_| None).unwrap();
+    let deltas = method::site_deltas(&file).unwrap();
+    assert_eq!(deltas.len(), sites);
+    for (s, (site, got)) in deltas.iter().enumerate() {
+        assert_eq!(site, &format!("blk{s}.w"), "site order must be first-seen");
+        let (a, b) = &factors[s];
+        let want = delta_lora(a, b, 2.0).unwrap();
+        assert_tensor_bits(&want, got, &format!("site {s} paired with wrong factors?"));
+    }
+
+    // A missing `.b` is still a hard error, per site.
+    let named: Vec<(String, Tensor)> = vec![("lora.alone.a".into(), Tensor::zeros(&[r, d]))];
+    let file = AdapterFile::from_named("lora", 0, 1.0, vec![], named, |_| Some((d, d))).unwrap();
+    assert!(method::site_deltas(&file).is_err());
+}
+
+// --- open registry ---------------------------------------------------------
+
+/// A do-nothing-fancy user method: stores one f32 vector per site and
+/// reconstructs ΔW = alpha · diag(v). Registered at runtime; must flow
+/// through init / save / load / scheduler serving like any built-in.
+struct DiagOnly;
+
+impl DeltaMethod for DiagOnly {
+    fn id(&self) -> MethodId {
+        "test_diag"
+    }
+
+    fn roles(&self) -> &'static [&'static str] {
+        &["v"]
+    }
+
+    fn site_delta(
+        &self,
+        site: &SiteSpec,
+        tensors: &SiteTensors,
+        ctx: &ReconstructCtx,
+    ) -> anyhow::Result<Tensor> {
+        let v = tensors.get("v")?.as_f32()?;
+        anyhow::ensure!(site.d1 == site.d2 && v.len() == site.d1, "diag needs square site");
+        let d = site.d1;
+        let mut out = vec![0.0f32; d * d];
+        for (i, &x) in v.iter().enumerate() {
+            out[i * d + i] = ctx.alpha * x;
+        }
+        Ok(Tensor::f32(&[d, d], out))
+    }
+
+    fn param_count(&self, d1: usize, _d2: usize, _hp: &MethodHp) -> usize {
+        d1
+    }
+
+    fn init_tensors(
+        &self,
+        rng: &mut Rng,
+        site: &SiteSpec,
+        hp: &MethodHp,
+    ) -> anyhow::Result<Vec<(String, Tensor)>> {
+        Ok(vec![(
+            "v".to_string(),
+            Tensor::f32(&[site.d1], rng.normal_vec(site.d1, hp.init_std)),
+        )])
+    }
+
+    fn classify_legacy(&self, _name: &str) -> Option<(String, String)> {
+        None
+    }
+
+    fn tensor_name(&self, site: &str, _role: &str) -> String {
+        format!("diag.{site}.v")
+    }
+}
+
+#[test]
+fn user_registered_method_serves_through_the_scheduler() {
+    // Idempotent across test orderings: a second registration errors.
+    let _ = method::register(Arc::new(DiagOnly));
+    assert!(method::ids().iter().any(|i| i == "test_diag"));
+
+    let dir = tmpdir("open");
+    let cfg = WorkloadCfg {
+        adapters: 4,
+        requests: 32,
+        method: "test_diag".into(),
+        ..WorkloadCfg::small()
+    };
+    let store = SharedAdapterStore::with_shards(&dir, 4, 16).unwrap();
+    workload::populate_store(&store, &cfg).unwrap();
+    let swap = SharedSwap::with_shards(workload::site_dims(&cfg), 4, 16);
+    let sc = SchedCfg { workers: 2, max_batch: 4, max_wait_ticks: 8, queue_cap: 16 };
+    let (seq, _) = serve_sequential_host(&swap, &store, workload::gen_requests(&cfg)).unwrap();
+    let (par, stats) =
+        serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sc).unwrap();
+    assert_eq!(seq.len(), 32);
+    assert_eq!(par.len(), 32);
+    for ((ia, ta), (ib, tb)) in seq.iter().zip(par.iter()) {
+        assert_eq!(ia, ib);
+        assert_tensor_bits(ta, tb, "user method: sequential vs scheduled");
+    }
+    assert!(stats.swaps > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `bitfit` reconstructs rank-1 bias deltas, which the host serving
+/// runner cannot apply (it multiplies 2-D site weights) — that must be a
+/// clean error through the scheduler, not a shape-indexing panic.
+#[test]
+fn bitfit_serving_errors_cleanly_instead_of_panicking() {
+    let dir = tmpdir("bitfit");
+    let cfg = WorkloadCfg {
+        adapters: 2,
+        requests: 8,
+        method: "bitfit".into(),
+        ..WorkloadCfg::small()
+    };
+    let store = SharedAdapterStore::with_shards(&dir, 2, 8).unwrap();
+    workload::populate_store(&store, &cfg).unwrap();
+    let swap = SharedSwap::with_shards(workload::site_dims(&cfg), 2, 8);
+    let err = serve_sequential_host(&swap, &store, workload::gen_requests(&cfg)).unwrap_err();
+    assert!(format!("{err:#}").contains("2-D"), "want a rank explanation, got: {err:#}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --- hard errors -----------------------------------------------------------
+
+#[test]
+fn unknown_method_everywhere_is_an_error() {
+    assert!(method::get("nope").is_err());
+    assert!(AdapterFile::from_named("nope", 0, 1.0, vec![], vec![], |_| None).is_err());
+    // A v2 file whose method string is unregistered decodes (forward
+    // compat) but refuses to reconstruct.
+    let file = AdapterFile {
+        method: "from_the_future".into(),
+        seed: 0,
+        alpha: 1.0,
+        meta: vec![],
+        sites: vec![],
+        tensors: vec![TensorEntry::new("x", "s", "r", Tensor::zeros(&[2]))],
+    };
+    let dir = tmpdir("unknown");
+    let path = dir.join("f.adapter");
+    file.save(&path).unwrap();
+    let back = AdapterFile::load(&path).unwrap();
+    assert_eq!(back.method, "from_the_future");
+    assert!(method::site_deltas(&back).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}

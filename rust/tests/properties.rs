@@ -266,10 +266,11 @@ fn prop_entry_sampling_valid() {
     }
 }
 
-/// Adapter file round-trip survives random contents.
+/// Adapter file round-trip survives random contents (opaque tensors:
+/// names matching no method convention are preserved verbatim).
 #[test]
 fn prop_adapter_format_roundtrip() {
-    use fourier_peft::adapter::{AdapterFile, AdapterKind};
+    use fourier_peft::adapter::AdapterFile;
     for seed in cases(10) {
         let mut rng = Rng::new(seed);
         let n_tensors = 1 + rng.below(6);
@@ -285,16 +286,19 @@ fn prop_adapter_format_roundtrip() {
                 }
             })
             .collect();
-        let file = AdapterFile {
-            kind: AdapterKind::FourierFt,
+        let file = AdapterFile::from_named(
+            "fourierft",
             seed,
-            alpha: rng.f32() * 300.0,
-            meta: vec![("k".into(), format!("v{seed}"))],
+            rng.f32() * 300.0,
+            vec![("k".into(), format!("v{seed}"))],
             tensors,
-        };
+            |_| None,
+        )
+        .unwrap();
         let path = std::env::temp_dir().join(format!("fp_prop_{seed}.adapter"));
         file.save(&path).unwrap();
         let back = AdapterFile::load(&path).unwrap();
+        assert_eq!(file.method, back.method, "seed {seed}");
         assert_eq!(file.tensors, back.tensors, "seed {seed}");
         assert_eq!(file.alpha, back.alpha);
         assert_eq!(std::fs::metadata(&path).unwrap().len() as usize, file.byte_size());

@@ -16,7 +16,7 @@
 //!   bitwise-identically scheduled vs sequential, with warm-swap
 //!   counters proving the cache stack short-circuits disk + IDFT.
 
-use fourier_peft::adapter::format::{AdapterFile, AdapterKind};
+use fourier_peft::adapter::format::AdapterFile;
 use fourier_peft::adapter::store::SharedAdapterStore;
 use fourier_peft::coordinator::scheduler::{
     group_by_adapter, serve_scheduled_host, serve_sequential_host, DeltaRunner, SchedCfg,
@@ -185,12 +185,12 @@ fn sched_publish_invalidation_rebuilds_from_new_bytes() {
     // `Server::publish` does: store.save (which refreshes the decode
     // cache in place) + swap-cache invalidation.
     let mut rng = Rng::new(0xBEEF);
-    let v2 = AdapterFile {
-        kind: AdapterKind::FourierFt,
-        seed: cfg.seed, // same entry matrix; new coefficients
-        alpha: 8.0,
-        meta: vec![("n".into(), cfg.n_coeffs.to_string())],
-        tensors: (0..cfg.sites)
+    let v2 = AdapterFile::from_named(
+        "fourierft",
+        cfg.seed, // same entry matrix; new coefficients
+        8.0,
+        vec![("n".into(), cfg.n_coeffs.to_string())],
+        (0..cfg.sites)
             .map(|s| {
                 (
                     format!("spec.blk{s}.attn.wq.w.c"),
@@ -198,7 +198,9 @@ fn sched_publish_invalidation_rebuilds_from_new_bytes() {
                 )
             })
             .collect(),
-    };
+        |_| Some((cfg.dim, cfg.dim)),
+    )
+    .unwrap();
     store.save(&hot, &v2).unwrap();
     swap.invalidate(&hot);
     let builds_before = swap.stats().delta_builds;
@@ -254,6 +256,57 @@ fn sched_publish_invalidation_rebuilds_from_new_bytes() {
     assert_eq!(stats3.swaps - stats3.warm_swaps, 1, "exactly one cold swap");
 
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --- acceptance: every registered method serves deterministically --------
+
+/// The determinism claim extended over the method registry: for each
+/// built-in 2-D method, a mixed-adapter queue served sequentially, with 1
+/// worker, and with 4 workers (twice) yields the bitwise-identical
+/// (request id → logits) mapping — i.e. the scheduler + shared cache
+/// stack is method-agnostic, with reconstruction dispatched purely
+/// through the `DeltaMethod` registry.
+#[test]
+fn sched_deterministic_for_every_registered_method() {
+    for method in ["fourierft", "lora", "dense", "loca", "circulant"] {
+        let dir = tmpdir(&format!("m_{method}"));
+        let cfg = WorkloadCfg {
+            adapters: 6,
+            requests: 48,
+            method: method.into(),
+            ..WorkloadCfg::small()
+        };
+        let store = SharedAdapterStore::with_shards(&dir, 4, 32).unwrap();
+        workload::populate_store(&store, &cfg).unwrap();
+        let swap = SharedSwap::with_shards(workload::site_dims(&cfg), 4, 32);
+
+        let sched = |workers: usize| SchedCfg {
+            workers,
+            max_batch: 4,
+            max_wait_ticks: 8,
+            queue_cap: 16,
+        };
+        let (seq, _) =
+            serve_sequential_host(&swap, &store, workload::gen_requests(&cfg)).unwrap();
+        let (r1, _) =
+            serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sched(1))
+                .unwrap();
+        let (r4, _) =
+            serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sched(4))
+                .unwrap();
+        let (r4b, _) =
+            serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sched(4))
+                .unwrap();
+        assert_bitwise_equal(&seq, &r1, &format!("{method}: sequential vs 1-worker"));
+        assert_bitwise_equal(&r1, &r4, &format!("{method}: 1-worker vs 4-worker"));
+        assert_bitwise_equal(&r4, &r4b, &format!("{method}: 4-worker run vs re-run"));
+        // non-trivial output: at least one logit differs from zero
+        assert!(
+            seq.iter().any(|(_, t)| t.as_f32().unwrap().iter().any(|&v| v != 0.0)),
+            "{method}: workload produced all-zero logits"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }
 
 // --- CI stress job (bounded by the seeded workload; ~seconds) ------------

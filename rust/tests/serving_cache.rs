@@ -10,7 +10,7 @@
 //! * publishing under the same name invalidates the caches and the next
 //!   swap sees the new coefficients.
 
-use fourier_peft::adapter::{AdapterFile, AdapterKind, AdapterStore};
+use fourier_peft::adapter::{AdapterFile, AdapterStore};
 use fourier_peft::coordinator::serving::SwapCache;
 use fourier_peft::fourier::plan;
 use fourier_peft::tensor::{rng::Rng, Tensor};
@@ -27,17 +27,21 @@ fn site_dims(sites: usize, d: usize) -> BTreeMap<String, (usize, usize)> {
 }
 
 fn fourierft_adapter(rng: &mut Rng, sites: usize, n: usize, seed: u64) -> AdapterFile {
-    AdapterFile {
-        kind: AdapterKind::FourierFt,
+    // no dims closure: these files model v1-style checkpoints whose dims
+    // come from the swap cache's artifact-meta map at serve time
+    AdapterFile::from_named(
+        "fourierft",
         seed,
-        alpha: 16.0,
-        meta: vec![("n".into(), n.to_string())],
-        tensors: (0..sites)
+        16.0,
+        vec![("n".into(), n.to_string())],
+        (0..sites)
             .map(|i| {
                 (format!("spec.blk{i}.attn.wq.w.c"), Tensor::f32(&[n], rng.normal_vec(n, 1.0)))
             })
             .collect(),
-    }
+        |_| None,
+    )
+    .unwrap()
 }
 
 #[test]
@@ -293,43 +297,51 @@ fn lora_and_dense_adapters_reconstruct_through_the_same_cache() {
     let mut swap = SwapCache::new(site_dims(1, d));
     let mut rng = Rng::new(3);
 
-    let lora = AdapterFile {
-        kind: AdapterKind::Lora,
-        seed: 0,
-        alpha: 0.5,
-        meta: vec![],
-        tensors: vec![
+    let lora = AdapterFile::from_named(
+        "lora",
+        0,
+        0.5,
+        vec![],
+        vec![
             ("lora.blk0.attn.wq.w.a".into(), Tensor::f32(&[2, d], rng.normal_vec(2 * d, 1.0))),
             ("lora.blk0.attn.wq.w.b".into(), Tensor::f32(&[d, 2], rng.normal_vec(2 * d, 1.0))),
         ],
-    };
+        |_| None,
+    )
+    .unwrap();
     store.save("lora_ad", &lora).unwrap();
     let deltas = swap.deltas(&mut store, "lora_ad").unwrap();
     assert_eq!(deltas.len(), 1);
     assert_eq!(deltas[0].1.shape, vec![d, d]);
 
-    let dense = AdapterFile {
-        kind: AdapterKind::DenseDelta,
-        seed: 0,
-        alpha: 1.0,
-        meta: vec![],
-        tensors: vec![(
+    let dense = AdapterFile::from_named(
+        "dense",
+        0,
+        1.0,
+        vec![],
+        vec![(
             "delta.blk0.attn.wq.w".into(),
             Tensor::f32(&[d, d], rng.normal_vec(d * d, 1.0)),
         )],
-    };
+        |_| None,
+    )
+    .unwrap();
     store.save("dense_ad", &dense).unwrap();
     let deltas = swap.deltas(&mut store, "dense_ad").unwrap();
     assert_eq!(deltas[0].1.shape, vec![d, d]);
 
-    // Unknown site is a real error, not a panic.
-    let bad = AdapterFile {
-        kind: AdapterKind::FourierFt,
-        seed: 2024,
-        alpha: 1.0,
-        meta: vec![("n".into(), "4".into())],
-        tensors: vec![("spec.nope.w.c".into(), Tensor::zeros(&[4]))],
-    };
+    // Unknown site is a real error, not a panic (no dims in the file, no
+    // entry in the serve cache's site map, none inferable from a coeff
+    // vector).
+    let bad = AdapterFile::from_named(
+        "fourierft",
+        2024,
+        1.0,
+        vec![("n".into(), "4".into())],
+        vec![("spec.nope.w.c".into(), Tensor::zeros(&[4]))],
+        |_| None,
+    )
+    .unwrap();
     store.save("bad_ad", &bad).unwrap();
     assert!(swap.deltas(&mut store, "bad_ad").is_err());
 }
