@@ -27,7 +27,7 @@ use fourier_peft::coordinator::trainer::{FinetuneCfg, Trainer};
 use fourier_peft::fourier::{
     idft2_real_sparse, idft2_real_sparse_fft, plan, sample_entries, EntryBias, ReconstructPlan,
 };
-use fourier_peft::runtime::{to_literal, xla};
+use fourier_peft::runtime::{to_literal, xla, StepEngine};
 use fourier_peft::tensor::{rng::Rng, Tensor};
 use fourier_peft::util::bench::{fmt_time, Bench};
 use std::collections::{BTreeMap, HashMap};
@@ -236,47 +236,57 @@ fn main() -> anyhow::Result<()> {
                  fourier_peft::util::fmt_bytes(file.byte_size()));
     }
 
-    // --- XLA-backed sections (need artifacts + xla-runtime) ---------------
+    // --- engine-backed sections -------------------------------------------
+    // The default trainer is the pure-host engine, so the training-step
+    // rows below (train/host_step/*) run in every build; the Pallas
+    // reconstruction rows still need artifacts + xla-runtime and skip
+    // gracefully without them.
     let trainer = match Trainer::open_default() {
         Ok(t) => t,
         Err(e) => {
-            println!("skipping XLA-backed benches (registry/runtime unavailable: {e:#})");
+            println!("skipping engine-backed benches (trainer unavailable: {e:#})");
             return Ok(());
         }
     };
-    // The registry can exist while HLO compilation is unavailable (default
-    // build without `xla-runtime`); probe once and skip rather than abort.
-    if let Err(e) = trainer.executable("mlp__fourierft_n128__ce") {
-        println!("skipping XLA-backed benches (cannot compile HLO: {e:#})");
-        return Ok(());
-    }
 
     // XLA (Pallas kernel) reconstruction via the delta artifact
-    for n in [64usize, 1024] {
-        if let Ok(hlo) = trainer.registry.delta_hlo(d, n) {
-            if let Ok(exe) = trainer.client.load_hlo(&hlo) {
-                let (rows, cols) = sample_entries(d, d, n, EntryBias::None, 2024);
-                let mut e = rows.clone();
-                e.extend(&cols);
-                let args = [
-                    to_literal(&Tensor::i32(&[2, n], e))?,
-                    to_literal(&Tensor::f32(&[n], rng.normal_vec(n, 1.0)))?,
-                    to_literal(&Tensor::scalar(8.0))?,
-                ];
-                b.run(&format!("reconstruct/xla_pallas/d128_n{n}"), || {
-                    exe.execute::<xla::Literal>(&args).unwrap()
-                });
+    if let Some(reg) = &trainer.registry {
+        for n in [64usize, 1024] {
+            if let Ok(hlo) = reg.delta_hlo(d, n) {
+                if let Ok(exe) = trainer.client.load_hlo(&hlo) {
+                    let (rows, cols) = sample_entries(d, d, n, EntryBias::None, 2024);
+                    let mut e = rows.clone();
+                    e.extend(&cols);
+                    let args = [
+                        to_literal(&Tensor::i32(&[2, n], e))?,
+                        to_literal(&Tensor::f32(&[n], rng.normal_vec(n, 1.0)))?,
+                        to_literal(&Tensor::scalar(8.0))?,
+                    ];
+                    b.run(&format!("reconstruct/xla_pallas/d128_n{n}"), || {
+                        exe.execute::<xla::Literal>(&args).unwrap()
+                    });
+                }
             }
         }
     }
 
-    // --- fused step latency per model family ------------------------------
+    // --- fused step latency per model family (train/host_step/* rows
+    // track the host training trajectory in BENCH_*.json) -----------------
+    let engine_id = trainer.engine_kind.id();
     for artifact in ["mlp__fourierft_n128__ce", "enc_base__fourierft_n64__ce",
                      "enc_base__lora_r8__ce", "enc_base__ff__ce"] {
-        let exe = trainer.executable(artifact)?;
-        let meta = exe.meta.clone();
+        let exe = match trainer.engine(artifact) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("skipping step benches for {artifact}: {e:#}");
+                continue;
+            }
+        };
+        let meta = exe.meta().clone();
         let (statics, _) = trainer.make_statics(&meta, 2024, EntryBias::None)?;
-        let base = trainer.base_for(&meta)?;
+        // Seed-0 random base: step latency is shape-dependent only, and a
+        // bench must not trigger a multi-minute pretraining run.
+        let base = fourier_peft::runtime::host::zoo::init_base_for(&meta, 0)?;
         let mut state = exe.init_state(0, base, statics)?;
         let batch: HashMap<String, Tensor> = if meta.model.kind == "mlp" {
             fourier_peft::data::blobs::collate(&fourier_peft::data::blobs::dataset(
@@ -287,17 +297,19 @@ fn main() -> anyhow::Result<()> {
                 meta.model.seqlen,
             )
         };
-        b.run(&format!("step/train/{artifact}"), || {
+        let mut step_no = 0u32;
+        b.run(&format!("train/{engine_id}_step/{artifact}"), || {
+            step_no += 1;
             exe.step(
                 &mut state,
-                fourier_peft::runtime::exec::StepScalars {
-                    step: 1.0, lr: 1e-3, lr_head: 1e-3, wd: 0.0, scaling: 8.0,
+                fourier_peft::runtime::StepScalars {
+                    step: step_no as f32, lr: 1e-3, lr_head: 1e-3, wd: 0.0, scaling: 8.0,
                 },
                 &batch,
             )
             .unwrap()
         });
-        b.run(&format!("step/eval/{artifact}"), || {
+        b.run(&format!("eval/{engine_id}_step/{artifact}"), || {
             exe.eval(&mut state, 8.0, &batch).unwrap()
         });
     }

@@ -71,6 +71,56 @@ impl DeltaMethod for Circulant {
         Ok(Tensor::f32(&[d, d], out))
     }
 
+    /// Bilinear adjoint of ΔW[p, q] = α·c[(p − q) mod d]·g[q]:
+    ///
+    /// ```text
+    /// ∂L/∂c[i] = α · Σ_q G[(q + i) mod d, q] · g[q]
+    /// ∂L/∂g[q] = α · Σ_p G[p, q] · c[(p − q) mod d]
+    /// ```
+    ///
+    /// two O(d²) gathers, mirroring the O(d²) forward gather.
+    fn site_delta_grad(
+        &self,
+        site: &SiteSpec,
+        tensors: &SiteTensors,
+        ctx: &ReconstructCtx,
+        upstream: &Tensor,
+    ) -> Result<Vec<(String, Tensor)>> {
+        anyhow::ensure!(
+            site.d1 == site.d2,
+            "circulant site {} needs a square weight, got {}x{}",
+            site.name,
+            site.d1,
+            site.d2
+        );
+        let d = site.d1;
+        let c = tensors.get(ROLE_CIRC)?.as_f32()?;
+        let g = tensors.get(ROLE_DIAG)?.as_f32()?;
+        anyhow::ensure!(
+            c.len() == d && g.len() == d && upstream.shape == [d, d],
+            "circulant site {}: circ len {} / diag len {} / grad shape {:?} vs d {d}",
+            site.name,
+            c.len(),
+            g.len(),
+            upstream.shape
+        );
+        let gr = upstream.as_f32()?;
+        let mut dc = vec![0.0f32; d];
+        let mut dg = vec![0.0f32; d];
+        for p in 0..d {
+            let row = &gr[p * d..(p + 1) * d];
+            for (q, &gv) in row.iter().enumerate() {
+                let idx = (p + d - q) % d;
+                dc[idx] += ctx.alpha * gv * g[q];
+                dg[q] += ctx.alpha * gv * c[idx];
+            }
+        }
+        Ok(vec![
+            (ROLE_CIRC.to_string(), Tensor::f32(&[d], dc)),
+            (ROLE_DIAG.to_string(), Tensor::f32(&[d], dg)),
+        ])
+    }
+
     fn param_count(&self, d1: usize, d2: usize, _hp: &MethodHp) -> usize {
         d1 + d2
     }

@@ -45,6 +45,27 @@ impl DeltaMethod for DenseDelta {
         Ok(tensors.get(ROLE_DELTA)?.clone())
     }
 
+    /// The delta *is* the stored tensor (identity map, alpha baked at save
+    /// time), so the gradient is the upstream gradient verbatim.
+    fn site_delta_grad(
+        &self,
+        site: &SiteSpec,
+        tensors: &SiteTensors,
+        _ctx: &ReconstructCtx,
+        upstream: &Tensor,
+    ) -> Result<Vec<(String, Tensor)>> {
+        let stored = tensors.get(ROLE_DELTA)?;
+        anyhow::ensure!(
+            upstream.shape == stored.shape,
+            "{} site {}: upstream grad shape {:?} != stored delta shape {:?}",
+            self.id(),
+            site.name,
+            upstream.shape,
+            stored.shape
+        );
+        Ok(vec![(ROLE_DELTA.to_string(), upstream.clone())])
+    }
+
     fn param_count(&self, d1: usize, d2: usize, _hp: &MethodHp) -> usize {
         if self.bias_only {
             d2

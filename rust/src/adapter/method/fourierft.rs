@@ -41,6 +41,32 @@ impl DeltaMethod for FourierFt {
         Ok(Tensor::f32(&[site.d1, site.d2], p.reconstruct(c, ctx.alpha)?))
     }
 
+    /// Spectral adjoint: ΔW is linear in c, so ∂L/∂c is the transpose of
+    /// the same IDFT GEMM — [`crate::fourier::ReconstructPlan::coeff_grad`]
+    /// on the *same cached plan* the forward reconstruction used (twiddle
+    /// tables built once per (d1, d2, entries), shared with serving).
+    fn site_delta_grad(
+        &self,
+        site: &SiteSpec,
+        tensors: &SiteTensors,
+        ctx: &ReconstructCtx,
+        upstream: &Tensor,
+    ) -> Result<Vec<(String, Tensor)>> {
+        let n = tensors.get(ROLE_COEF)?.as_f32()?.len();
+        anyhow::ensure!(
+            upstream.shape == [site.d1, site.d2],
+            "fourierft site {}: upstream grad shape {:?} != [{}, {}]",
+            site.name,
+            upstream.shape,
+            site.d1,
+            site.d2
+        );
+        let (rows, cols) = sample_entries(site.d1, site.d2, n, EntryBias::None, ctx.seed);
+        let p = plan::global().get((&rows, &cols), site.d1, site.d2)?;
+        let dc = p.coeff_grad(upstream.as_f32()?, ctx.alpha)?;
+        Ok(vec![(ROLE_COEF.to_string(), Tensor::f32(&[n], dc))])
+    }
+
     fn param_count(&self, _d1: usize, _d2: usize, hp: &MethodHp) -> usize {
         hp.n
     }

@@ -90,6 +90,64 @@ impl DeltaMethod for Loca {
         Ok(Tensor::f32(&[d1, d2], par::matmul_f32(&a, &b, d1, n, d2)))
     }
 
+    /// Cosine adjoint: ΔW is linear in c, so `∂L/∂c_l = α/(d1 d2) ·
+    /// uₗᵀ·G·vₗ` with uₗ/vₗ the DCT-II basis vectors at location
+    /// (jₗ, kₗ). The frozen integer locations get no gradient.
+    fn site_delta_grad(
+        &self,
+        site: &SiteSpec,
+        tensors: &SiteTensors,
+        ctx: &ReconstructCtx,
+        upstream: &Tensor,
+    ) -> Result<Vec<(String, Tensor)>> {
+        let n = tensors.get(ROLE_COEF)?.as_f32()?.len();
+        let locs = tensors.get(ROLE_LOCS)?;
+        anyhow::ensure!(
+            locs.shape == [2, n],
+            "loca site {}: locs shape {:?} != [2, {n}]",
+            site.name,
+            locs.shape
+        );
+        let (d1, d2) = (site.d1, site.d2);
+        anyhow::ensure!(
+            upstream.shape == [d1, d2],
+            "loca site {}: upstream grad shape {:?} != [{d1}, {d2}]",
+            site.name,
+            upstream.shape
+        );
+        let g = upstream.as_f32()?;
+        let e = locs.as_i32()?;
+        let (js, ks) = e.split_at(n);
+        let scale = ctx.alpha as f64 / (d1 * d2) as f64;
+        let mut dc = vec![0.0f32; n];
+        for (l, slot) in dc.iter_mut().enumerate() {
+            let (j, k) = (js[l], ks[l]);
+            anyhow::ensure!(
+                (0..d1 as i32).contains(&j) && (0..d2 as i32).contains(&k),
+                "loca site {}: location ({j}, {k}) outside the {d1}x{d2} DCT grid",
+                site.name
+            );
+            let (j, k) = (j as f64, k as f64);
+            // vₗᵀ applied to each row first, then contracted with uₗ.
+            let mut cv = Vec::with_capacity(d2);
+            for q in 0..d2 {
+                cv.push((PI * k * (2.0 * q as f64 + 1.0) / (2.0 * d2 as f64)).cos());
+            }
+            let mut acc = 0.0f64;
+            for p in 0..d1 {
+                let cu = (PI * j * (2.0 * p as f64 + 1.0) / (2.0 * d1 as f64)).cos();
+                let row = &g[p * d2..(p + 1) * d2];
+                let mut rdot = 0.0f64;
+                for (q, &gv) in row.iter().enumerate() {
+                    rdot += gv as f64 * cv[q];
+                }
+                acc += cu * rdot;
+            }
+            *slot = (acc * scale) as f32;
+        }
+        Ok(vec![(ROLE_COEF.to_string(), Tensor::f32(&[n], dc))])
+    }
+
     fn param_count(&self, _d1: usize, _d2: usize, hp: &MethodHp) -> usize {
         // The coefficients are the trainable parameters; the n selected
         // locations are frozen integer indices (stored, not trained).

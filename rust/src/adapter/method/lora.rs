@@ -45,6 +45,45 @@ impl DeltaMethod for Lora {
         delta_lora(a, b, ctx.alpha)
     }
 
+    /// Low-rank adjoint, the usual two-GEMM rule for ΔW = α·B·A:
+    /// `∂L/∂A = α·Bᵀ·G` and `∂L/∂B = α·G·Aᵀ`.
+    fn site_delta_grad(
+        &self,
+        site: &SiteSpec,
+        tensors: &SiteTensors,
+        ctx: &ReconstructCtx,
+        upstream: &Tensor,
+    ) -> Result<Vec<(String, Tensor)>> {
+        let a = tensors.get(ROLE_A)?;
+        let b = tensors.get(ROLE_B)?;
+        anyhow::ensure!(
+            a.rank() == 2 && b.rank() == 2 && a.shape[0] == b.shape[1],
+            "lora site {}: rank mismatch a {:?} vs b {:?}",
+            site.name,
+            a.shape,
+            b.shape
+        );
+        anyhow::ensure!(
+            upstream.shape == [b.shape[0], a.shape[1]],
+            "lora site {}: upstream grad shape {:?} != [{}, {}]",
+            site.name,
+            upstream.shape,
+            b.shape[0],
+            a.shape[1]
+        );
+        let mut da = crate::tensor::linalg::matmul(
+            &crate::tensor::linalg::transpose(b)?,
+            upstream,
+        )?;
+        da.scale(ctx.alpha)?;
+        let mut db = crate::tensor::linalg::matmul(
+            upstream,
+            &crate::tensor::linalg::transpose(a)?,
+        )?;
+        db.scale(ctx.alpha)?;
+        Ok(vec![(ROLE_A.to_string(), da), (ROLE_B.to_string(), db)])
+    }
+
     fn param_count(&self, d1: usize, d2: usize, hp: &MethodHp) -> usize {
         hp.rank * (d1 + d2)
     }

@@ -157,6 +157,32 @@ pub trait DeltaMethod: Send + Sync {
         ctx: &ReconstructCtx,
     ) -> Result<Tensor>;
 
+    /// Adjoint of [`site_delta`](DeltaMethod::site_delta): given the
+    /// upstream gradient `∂L/∂ΔW` for one site (same shape `site_delta`
+    /// returns), produce the gradients of the site's *trainable* tensors
+    /// as (role, gradient) pairs. Frozen tensors (e.g. `loca`'s integer
+    /// location matrix) are simply omitted from the result.
+    ///
+    /// Every ΔW in the built-in family is (at most bilinearly) dependent
+    /// on its stored tensors, so this is a handful of GEMMs / gathers —
+    /// for `fourierft` literally the transpose of the cached
+    /// [`crate::fourier::ReconstructPlan`] GEMM. The host training engine
+    /// ([`crate::runtime::host`]) dispatches through this to train any
+    /// registered method; methods that don't implement it reconstruct and
+    /// serve fine but are not host-trainable.
+    fn site_delta_grad(
+        &self,
+        _site: &SiteSpec,
+        _tensors: &SiteTensors,
+        _ctx: &ReconstructCtx,
+        _upstream: &Tensor,
+    ) -> Result<Vec<(String, Tensor)>> {
+        bail!(
+            "adapter method '{}' has no site_delta_grad (not trainable by the host engine)",
+            self.id()
+        )
+    }
+
     /// Trainable parameters for one (d1, d2) site under `hp`.
     fn param_count(&self, d1: usize, d2: usize, hp: &MethodHp) -> usize;
 

@@ -22,12 +22,7 @@ use std::sync::Mutex;
 /// one shard.
 pub fn shard_index(name: &str, shards: usize) -> usize {
     debug_assert!(shards > 0);
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for b in name.as_bytes() {
-        h ^= u64::from(*b);
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    (h % shards as u64) as usize
+    (crate::util::fnv64(name) % shards as u64) as usize
 }
 
 pub struct AdapterStore {

@@ -27,7 +27,7 @@ pub fn run(trainer: &Trainer, opts: &Opts) -> Result<Vec<Report>> {
         let mut biases: Vec<EntryBias> = vec![EntryBias::None];
         biases.extend(fcs.iter().map(|&fc| EntryBias::BandPass { fc, w: d / 4.0 }));
         for bias in biases {
-            let meta = trainer.registry.meta(&artifact)?.clone();
+            let meta = trainer.meta_for(&artifact)?;
             let (lr, lr_head, scaling) = method_hp(&meta.method.name, meta.model.d);
             let mut cfg = FinetuneCfg::new(&artifact);
             cfg.lr = lr;
@@ -40,8 +40,8 @@ pub fn run(trainer: &Trainer, opts: &Opts) -> Result<Vec<Report>> {
             let eval_batches =
                 glue_eval_batches(task, meta.model.seqlen, meta.model.batch, opts.eval_count, 0xE7A1);
             let tr = trainer;
-            let mut eval_fn = |exe: &crate::runtime::Executable,
-                               state: &mut crate::runtime::exec::ParamSet,
+            let mut eval_fn = |exe: &dyn crate::runtime::StepEngine,
+                               state: &mut crate::runtime::ParamSet,
                                scaling: f32| {
                 glue_metric(tr, task, exe, state, scaling, &eval_batches)
             };

@@ -24,7 +24,7 @@ pub fn run(trainer: &Trainer, opts: &Opts) -> Result<Vec<Report>> {
         ("enc_base__lora_r1__ce", "LoRA r=1", 256usize),
         ("enc_base__fourierft_n256__ce", "FourierFT n=256", 256),
     ] {
-        let meta = trainer.registry.meta(artifact)?.clone();
+        let meta = trainer.meta_for(artifact)?;
         let (lr, lr_head, scaling) = method_hp(&meta.method.name, meta.model.d);
         let mut cfg = FinetuneCfg::new(artifact);
         cfg.lr = lr;
@@ -40,8 +40,8 @@ pub fn run(trainer: &Trainer, opts: &Opts) -> Result<Vec<Report>> {
         let tr = trainer;
         let mut f1s: Vec<(usize, f64)> = Vec::new();
         let mut step_now = 0usize;
-        let mut eval_fn = |exe: &crate::runtime::Executable,
-                           state: &mut crate::runtime::exec::ParamSet,
+        let mut eval_fn = |exe: &dyn crate::runtime::StepEngine,
+                           state: &mut crate::runtime::ParamSet,
                            scaling: f32|
               -> Result<f64> {
             let (preds, labels, _, _) = tr.eval_classify(exe, state, scaling, &eval_batches)?;

@@ -39,8 +39,8 @@ pub fn run(trainer: &Trainer, opts: &Opts) -> Result<Vec<Report>> {
         cfg.seed = 7;
         let tr = trainer;
         let eval_ref = &eval_batches;
-        let mut eval_fn = move |exe: &crate::runtime::Executable,
-                                state: &mut crate::runtime::exec::ParamSet,
+        let mut eval_fn = move |exe: &dyn crate::runtime::StepEngine,
+                                state: &mut crate::runtime::ParamSet,
                                 scaling: f32|
               -> Result<f64> {
             let (preds, labels, _, _) = tr.eval_classify(exe, state, scaling, eval_ref)?;
@@ -60,7 +60,7 @@ pub fn run(trainer: &Trainer, opts: &Opts) -> Result<Vec<Report>> {
             .find(|(_, acc)| *acc >= 0.95)
             .map(|(s, _)| s.to_string())
             .unwrap_or_else(|| format!(">{steps}"));
-        let meta = trainer.registry.meta(artifact)?;
+        let meta = trainer.meta_for(artifact)?;
         r.row(vec![
             label.to_string(),
             meta.trainable_ex_head.to_string(),

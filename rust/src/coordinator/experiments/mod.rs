@@ -24,8 +24,7 @@ use super::trainer::{Batch, FinetuneCfg, Trainer};
 use crate::data::glue::GlueTask;
 use crate::data::collate_text;
 use crate::metrics::classify;
-use crate::runtime::exec::ParamSet;
-use crate::runtime::Executable;
+use crate::runtime::{ParamSet, StepEngine};
 use crate::tensor::linalg;
 use crate::util::cli::Args;
 use anyhow::Result;
@@ -73,6 +72,10 @@ pub fn method_hp(method: &str, d: usize) -> (f32, f32, f32) {
         // the short step budget needs a larger alpha than the paper's 300
         // to reach comparable effective ΔW magnitude.
         "fourierft" => (5e-2, 2e-3, 512.0),
+        // loca shares fourierft's 1/(d1 d2) reconstruction normalization;
+        // circulant's ΔW = α·C(c)·diag(g) is un-normalized like LoRA.
+        "loca" => (5e-2, 2e-3, 512.0),
+        "circulant" => (5e-3, 1e-3, 1.0),
         // match FourierFT's effective magnitude: Gaussian basis lacks the
         // 1/d^2 normalization, orthogonal basis lacks 1/d.
         "randbasis" => (5e-2, 2e-3, 512.0 / (d * d) as f32),
@@ -104,7 +107,7 @@ pub fn glue_eval_batches(task: GlueTask, seqlen: usize, batch: usize, count: usi
 pub fn glue_metric(
     trainer: &Trainer,
     task: GlueTask,
-    exe: &Executable,
+    exe: &dyn StepEngine,
     state: &mut ParamSet,
     scaling: f32,
     batches: &[Batch],
@@ -127,7 +130,7 @@ pub fn glue_run(
     seed: u64,
     lr_scale: f32,
 ) -> Result<super::trainer::RunResult> {
-    let meta = trainer.registry.meta(artifact)?.clone();
+    let meta = trainer.meta_for(artifact)?;
     let (lr, lr_head, scaling) = method_hp(&meta.method.name, meta.model.d);
     let seqlen = meta.model.seqlen;
     let b = meta.model.batch;
@@ -140,7 +143,7 @@ pub fn glue_run(
     cfg.seed = seed;
     let eval_batches = glue_eval_batches(task, seqlen, b, opts.eval_count, 0xE7A1);
     let tr = trainer;
-    let mut eval_fn = |exe: &Executable, state: &mut ParamSet, scaling: f32| {
+    let mut eval_fn = |exe: &dyn StepEngine, state: &mut ParamSet, scaling: f32| {
         glue_metric(tr, task, exe, state, scaling, &eval_batches)
     };
     trainer.finetune(&cfg, glue_batches(task, seqlen, b, seed), Some(&mut eval_fn))

@@ -14,8 +14,7 @@ use crate::coordinator::report::Report;
 use crate::coordinator::trainer::{Batch, FinetuneCfg, Trainer};
 use crate::data::vision::{self, VisionSet};
 use crate::metrics::fid;
-use crate::runtime::exec::ParamSet;
-use crate::runtime::Executable;
+use crate::runtime::{ParamSet, StepEngine};
 use crate::tensor::{rng::Rng, Tensor};
 use crate::util::fmt_params;
 use anyhow::Result;
@@ -89,14 +88,14 @@ fn broad_pool(count: usize, seed: u64) -> Vec<Vec<f32>> {
 
 /// Iterated denoising from pure noise: k applications of the denoiser.
 fn sample_images(
-    exe: &Executable,
+    exe: &dyn StepEngine,
     state: &mut ParamSet,
     scaling: f32,
     count: usize,
     steps: usize,
     rng: &mut Rng,
 ) -> Result<Vec<Vec<f32>>> {
-    let b = exe.meta.model.batch;
+    let b = exe.meta().model.batch;
     let mut out = Vec::new();
     let dummy_y = Tensor::f32(&[b, PIX], vec![0.0; b * PIX]);
     while out.len() < count {
@@ -135,8 +134,8 @@ pub fn run(trainer: &Trainer, opts: &Opts) -> Result<Vec<Report>> {
 
     // "w/o fine-tuning": the pretrained denoiser sampled directly.
     {
-        let exe = trainer.executable("denoiser__ff__mseimg")?;
-        let base = trainer.base_for(&exe.meta)?;
+        let exe = trainer.engine("denoiser__ff__mseimg")?;
+        let base = trainer.base_for(exe.meta())?;
         let mut state = exe.init_state(0, base, vec![])?;
         let mut srng = Rng::new(0x5A);
         let imgs = sample_images(&exe, &mut state, 1.0, sample_count, 8, &mut srng)?;
@@ -151,7 +150,7 @@ pub fn run(trainer: &Trainer, opts: &Opts) -> Result<Vec<Report>> {
         ("FourierFT (n=64)", "fourierft_n64", 5e-2, 512.0),
     ] {
         let artifact = format!("denoiser__{tag}__mseimg");
-        let meta = trainer.registry.meta(&artifact)?.clone();
+        let meta = trainer.meta_for(&artifact)?;
         let mut cfg = FinetuneCfg::new(&artifact);
         cfg.lr = lr;
         cfg.scaling = scaling;
@@ -166,9 +165,9 @@ pub fn run(trainer: &Trainer, opts: &Opts) -> Result<Vec<Report>> {
             },
             None,
         )?;
-        let exe = trainer.executable(&artifact)?;
-        let (statics, _) = trainer.make_statics(&exe.meta, cfg.entry_seed, cfg.bias)?;
-        let base = trainer.base_for(&exe.meta)?;
+        let exe = trainer.engine(&artifact)?;
+        let (statics, _) = trainer.make_statics(exe.meta(), cfg.entry_seed, cfg.bias)?;
+        let base = trainer.base_for(exe.meta())?;
         let mut state = exe.init_state(cfg.seed as i32, base, statics)?;
         exe.set_adapt(&mut state, &res.adapt.into_iter().collect())?;
         let mut srng = Rng::new(0x5B);

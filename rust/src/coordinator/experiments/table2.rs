@@ -56,7 +56,7 @@ fn run_model(trainer: &Trainer, opts: &Opts, model: &str) -> Result<Report> {
             m.tag_ce.to_string()
         };
         let mut cells = vec![m.label.to_string()];
-        let meta = trainer.registry.find(model, &tag, "ce")?;
+        let meta = trainer.meta_for(&format!("{model}__{tag}__ce"))?;
         cells.push(fmt_params(meta.trainable_ex_head));
         let mut task_scores = Vec::new();
         for task in GlueTask::ALL {

@@ -3,6 +3,7 @@
 //! all five E2E metrics (BLEU / NIST / METEOR / ROUGE-L / CIDEr).
 
 use crate::coordinator::generate;
+use crate::runtime::StepEngine;
 use crate::coordinator::report::Report;
 use crate::coordinator::trainer::{FinetuneCfg, Trainer};
 use crate::data::e2e;
@@ -41,7 +42,7 @@ fn run_model(trainer: &Trainer, opts: &Opts, model: &str) -> Result<Report> {
     let test_count = if opts.quick { 32 } else { 96 };
     for (label, tag) in methods_for(model) {
         let artifact = format!("{model}__{tag}__lm");
-        let meta = trainer.registry.meta(&artifact)?.clone();
+        let meta = trainer.meta_for(&artifact)?;
         let (lr, lr_head, scaling) = method_hp(&meta.method.name, meta.model.d);
         let seqlen = meta.model.seqlen;
         let b = meta.model.batch;
@@ -60,9 +61,9 @@ fn run_model(trainer: &Trainer, opts: &Opts, model: &str) -> Result<Report> {
             None,
         )?;
         // Rebuild the trained state for generation.
-        let exe = trainer.executable(&artifact)?;
-        let (statics, _) = trainer.make_statics(&exe.meta, cfg.entry_seed, cfg.bias)?;
-        let base = trainer.base_for(&exe.meta)?;
+        let exe = trainer.engine(&artifact)?;
+        let (statics, _) = trainer.make_statics(exe.meta(), cfg.entry_seed, cfg.bias)?;
+        let base = trainer.base_for(exe.meta())?;
         let mut state = exe.init_state(cfg.seed as i32, base, statics)?;
         let adapt_map: std::collections::HashMap<String, crate::tensor::Tensor> =
             result.adapt.iter().cloned().collect();

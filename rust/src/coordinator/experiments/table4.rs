@@ -5,6 +5,7 @@
 use crate::coordinator::generate;
 use crate::coordinator::report::Report;
 use crate::coordinator::trainer::{FinetuneCfg, Trainer};
+use crate::runtime::StepEngine;
 use crate::data::{collate_lm, instruct};
 use crate::metrics::judge;
 use crate::util::{fmt_params, mean_std};
@@ -27,7 +28,7 @@ pub fn run(trainer: &Trainer, opts: &Opts) -> Result<Vec<Report>> {
             ("FourierFT", fft),
         ] {
             let artifact = format!("{model}__{tag}__lm");
-            let meta = trainer.registry.meta(&artifact)?.clone();
+            let meta = trainer.meta_for(&artifact)?;
             let (lr, lr_head, scaling) = method_hp(&meta.method.name, meta.model.d);
             let seqlen = meta.model.seqlen;
             let b = meta.model.batch;
@@ -51,9 +52,9 @@ pub fn run(trainer: &Trainer, opts: &Opts) -> Result<Vec<Report>> {
                     },
                     None,
                 )?;
-                let exe = trainer.executable(&artifact)?;
-                let (statics, _) = trainer.make_statics(&exe.meta, cfg.entry_seed, cfg.bias)?;
-                let base = trainer.base_for(&exe.meta)?;
+                let exe = trainer.engine(&artifact)?;
+                let (statics, _) = trainer.make_statics(exe.meta(), cfg.entry_seed, cfg.bias)?;
+                let base = trainer.base_for(exe.meta())?;
                 let mut state = exe.init_state(cfg.seed as i32, base, statics)?;
                 let adapt_map: std::collections::HashMap<_, _> =
                     result.adapt.iter().cloned().collect();

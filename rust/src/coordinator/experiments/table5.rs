@@ -53,7 +53,7 @@ fn run_model(trainer: &Trainer, opts: &Opts, model: &str) -> Result<Report> {
     let steps = if opts.quick { opts.steps } else { opts.steps.max(200) };
     for (label, tag) in methods_for(model) {
         let artifact = format!("{model}__{tag}__ce");
-        let meta = trainer.registry.meta(&artifact)?.clone();
+        let meta = trainer.meta_for(&artifact)?;
         let (lr, lr_head, scaling) = method_hp(&meta.method.name, meta.model.d);
         let b = meta.model.batch;
         let mut cells = vec![label.to_string(), fmt_params(meta.trainable_ex_head)];
@@ -74,8 +74,8 @@ fn run_model(trainer: &Trainer, opts: &Opts, model: &str) -> Result<Report> {
                 .collect();
             let tr = trainer;
             let eval_ref = &eval;
-            let mut eval_fn = move |exe: &crate::runtime::Executable,
-                                    state: &mut crate::runtime::exec::ParamSet,
+            let mut eval_fn = move |exe: &dyn crate::runtime::StepEngine,
+                                    state: &mut crate::runtime::ParamSet,
                                     scaling: f32|
                   -> Result<f64> {
                 let (preds, labels, _, _) = tr.eval_classify(exe, state, scaling, eval_ref)?;

@@ -5,8 +5,7 @@
 //! KV caching is a noted non-goal for the sim scale, see DESIGN.md §6).
 
 use crate::data::vocab::{EOS, PAD};
-use crate::runtime::exec::ParamSet;
-use crate::runtime::Executable;
+use crate::runtime::{ParamSet, StepEngine};
 use crate::tensor::Tensor;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -14,15 +13,15 @@ use std::collections::HashMap;
 /// Greedy-complete a batch of prompts. Returns, per row, the generated
 /// continuation (tokens after the prompt, EOS-truncated inclusive).
 pub fn greedy(
-    exe: &Executable,
+    exe: &dyn StepEngine,
     state: &mut ParamSet,
     scaling: f32,
     prompts: &[Vec<i32>],
     max_new: usize,
 ) -> Result<Vec<Vec<i32>>> {
-    let b = exe.meta.model.batch;
-    let t = exe.meta.model.seqlen;
-    let vocab = exe.meta.model.vocab;
+    let b = exe.meta().model.batch;
+    let t = exe.meta().model.seqlen;
+    let vocab = exe.meta().model.vocab;
     assert!(prompts.len() <= b, "at most {b} prompts per call");
 
     let mut buf = vec![PAD; b * t];
@@ -78,7 +77,7 @@ pub fn greedy(
 
 /// Mean masked LM loss over batches (perplexity basis) at lr = 0.
 pub fn lm_loss(
-    exe: &Executable,
+    exe: &dyn StepEngine,
     state: &mut ParamSet,
     scaling: f32,
     batches: &[HashMap<String, Tensor>],

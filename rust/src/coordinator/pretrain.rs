@@ -5,13 +5,23 @@
 //! for decoders, ImageNet-21k-sim classification for ViTs) and cached as
 //! `.base` tensor-set files under `runs/bases/`. Every fine-tuning run
 //! then starts from the same checkpoint, exactly like the paper.
+//!
+//! Pretraining goes through the [`StepEngine`](crate::runtime::StepEngine)
+//! trait, so it runs on the pure-host engine in the default build. Each
+//! cached `.base` records the engine id that produced it (`engine`
+//! metadata key); loading a base under a different engine is a hard
+//! error — host and XLA numerics differ, and silently mixing them would
+//! contaminate every downstream comparison. Files without the key
+//! predate host pretraining (only XLA could have written them), so they
+//! count as XLA-produced: accepted under `--engine xla`, refused under
+//! the host engine.
 
 use super::trainer::{Batch, FinetuneCfg, Trainer};
 use crate::adapter::format::AdapterFile;
 use crate::data::{collate_img, collate_lm, corpus, vision};
-use crate::runtime::{from_literal, to_literal, xla};
+use crate::runtime::{from_literal, host, ArtifactMeta, EngineKind, StepEngine, StepScalars};
 use crate::tensor::{rng::Rng, Tensor};
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
 /// Pretraining recipe per architecture.
@@ -33,51 +43,100 @@ fn base_path(model: &str) -> std::path::PathBuf {
     crate::runs_dir().join("bases").join(format!("{model}.base"))
 }
 
+/// Seed-0 random base tensors for every `role = "base"` input of `meta`.
+fn random_base(trainer: &Trainer, meta: &ArtifactMeta) -> Result<Vec<Tensor>> {
+    match trainer.engine_kind {
+        EngineKind::Host => host::zoo::init_base_for(meta, 0),
+        EngineKind::Xla => {
+            let (hlo, _) = trainer.registry_ref()?.base_init(&meta.model.name)?;
+            crate::runtime::exec::run_base_init(&trainer.client, &hlo, 0)?
+                .iter()
+                .map(from_literal)
+                .collect()
+        }
+    }
+}
+
 /// Load the cached pretrained base, pretraining it first if absent.
-/// Models without a recipe (mlp) return the seed-0 random init.
-pub fn load_or_init_base(trainer: &Trainer, model: &str) -> Result<Vec<xla::Literal>> {
-    let (hlo, tensors_meta) = trainer.registry.base_init(model)?;
-    let path = base_path(model);
+/// Models without a recipe (mlp) return the seed-0 random init. Frozen
+/// task heads (`_fh` artifacts) are artifact-specific, not part of the
+/// backbone checkpoint; under the host engine they are filled in from the
+/// deterministic zoo init.
+pub fn load_or_init_base(trainer: &Trainer, meta: &ArtifactMeta) -> Result<Vec<Tensor>> {
+    let model = meta.model.name.clone();
+    let path = base_path(&model);
     if path.exists() {
         let file = AdapterFile::load(&path)?;
+        // Files written before the engine key existed were necessarily
+        // XLA-produced (pretraining could not run anywhere else), so a
+        // missing key is acceptable only under the XLA engine; everything
+        // else is a cross-engine mix and must be refused loudly.
+        let recorded = file.meta_get("engine");
+        let compatible = match recorded {
+            Some(e) => e == trainer.engine_kind.id(),
+            None => trainer.engine_kind == EngineKind::Xla,
+        };
+        if !compatible {
+            bail!(
+                "cached base {path:?} was pretrained by the '{}' engine but this \
+                 run uses '{}'; bases are not interchangeable across engines — rerun \
+                 `repro pretrain --model {model} --force --engine {}`",
+                recorded.unwrap_or("xla (legacy, pre-engine-key)"),
+                trainer.engine_kind.id(),
+                trainer.engine_kind.id()
+            );
+        }
         let map: BTreeMap<&str, &Tensor> =
             file.tensors.iter().map(|e| (e.name.as_str(), &e.tensor)).collect();
-        return tensors_meta
+        return meta
+            .inputs_with_role("base")
             .iter()
             .map(|tm| {
-                let t = map
-                    .get(tm.name.as_str())
-                    .with_context(|| format!("base file missing {}", tm.name))?;
-                to_literal(t)
+                if let Some(t) = map.get(tm.name.as_str()) {
+                    anyhow::ensure!(
+                        t.shape == tm.shape,
+                        "base file tensor '{}' shape {:?}, meta wants {:?}",
+                        tm.name,
+                        t.shape,
+                        tm.shape
+                    );
+                    Ok((*t).clone())
+                } else if tm.name.starts_with("head.")
+                    && trainer.engine_kind == EngineKind::Host
+                {
+                    Ok(host::zoo::init_base_tensor(host::zoo::model(&model)?, tm, 0))
+                } else {
+                    bail!("base file {path:?} missing tensor '{}'", tm.name)
+                }
             })
             .collect();
     }
-    let init = crate::runtime::exec::run_base_init(&trainer.client, &hlo, 0)?;
-    if recipe(model).is_none() {
-        return Ok(init);
+    if recipe(&model).is_none() {
+        return random_base(trainer, meta);
     }
     eprintln!("[pretrain] no cached base for {model}; pretraining...");
-    pretrain(trainer, model)?;
+    pretrain(trainer, &model)?;
     // reload via the cache we just wrote
-    load_or_init_base(trainer, model)
+    load_or_init_base(trainer, meta)
 }
 
-/// Pretrain a backbone and cache it. Returns the merged base tensors.
+/// Pretrain a backbone through the step engine and cache it. Returns the
+/// merged base tensors.
 pub fn pretrain(trainer: &Trainer, model: &str) -> Result<Vec<Tensor>> {
     let (artifact, steps, lr) =
         recipe(model).with_context(|| format!("no pretraining recipe for {model}"))?;
-    let exe = trainer.executable(artifact)?;
-    let meta = exe.meta.clone();
-    let (hlo, tensors_meta) = trainer.registry.base_init(model)?;
-    let base_lits = crate::runtime::exec::run_base_init(&trainer.client, &hlo, 0)?;
+    let exe = trainer.engine(artifact)?;
+    let meta = exe.meta().clone();
+    let base = random_base(trainer, &meta)?;
     // snapshot the random base host-side for the merge at the end
-    let mut base_tensors: BTreeMap<String, Tensor> = tensors_meta
+    let mut base_tensors: BTreeMap<String, Tensor> = meta
+        .inputs_with_role("base")
         .iter()
-        .zip(&base_lits)
-        .map(|(tm, l)| Ok((tm.name.clone(), from_literal(l)?)))
-        .collect::<Result<_>>()?;
+        .zip(&base)
+        .map(|(tm, t)| (tm.name.clone(), t.clone()))
+        .collect();
 
-    let mut state = exe.init_state(0, base_lits, vec![])?;
+    let mut state = exe.init_state(0, base, vec![])?;
     let seqlen = meta.model.seqlen;
     let b = meta.model.batch;
     let img = meta.model.img;
@@ -118,7 +177,7 @@ pub fn pretrain(trainer: &Trainer, model: &str) -> Result<Vec<Tensor>> {
         let batch = next(step, &mut rng);
         let out = exe.step(
             &mut state,
-            crate::runtime::exec::StepScalars {
+            StepScalars {
                 step: step as f32,
                 lr,
                 lr_head: lr,
@@ -157,13 +216,15 @@ pub fn pretrain(trainer: &Trainer, model: &str) -> Result<Vec<Tensor>> {
 
     // Base checkpoints reuse the container as a plain tensor-set file:
     // the tensors are full base weights under their own names (opaque to
-    // the method registry; never reconstructed through site_deltas).
+    // the method registry; never reconstructed through site_deltas). The
+    // `engine` key makes cross-engine reuse a load-time error.
     let file = AdapterFile::from_named(
         "dense",
         0,
         1.0,
         vec![
             ("model".into(), model.into()),
+            ("engine".into(), trainer.engine_kind.id().into()),
             ("pretrain_artifact".into(), artifact.into()),
             ("steps".into(), steps.to_string()),
             ("loss_first".into(), format!("{first}")),

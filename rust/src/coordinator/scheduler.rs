@@ -26,14 +26,15 @@
 //! oversubscribe the machine.
 //!
 //! Two executors implement [`BatchRunner`]:
-//! * `coordinator::serving`'s XLA runner (per-worker [`ParamSet`] clones;
-//!   used by `Server::serve`),
+//! * `coordinator::serving`'s engine runner (per-worker [`ParamSet`]
+//!   clones over any [`StepEngine`]; used by `Server::serve`),
 //! * [`DeltaRunner`] here — a pure-host executor over the shared swap
 //!   cache (logits = Σ_sites x · ΔW_site as one fused GEMM per
 //!   micro-batch), which lets the full scheduler + cache stack run and be
 //!   tested without the XLA runtime.
 //!
-//! [`ParamSet`]: crate::runtime::exec::ParamSet
+//! [`ParamSet`]: crate::runtime::ParamSet
+//! [`StepEngine`]: crate::runtime::StepEngine
 
 use super::serving::{account_swap, DeltaSet, Request, ServeStats, SharedSwap};
 use crate::adapter::store::SharedAdapterStore;

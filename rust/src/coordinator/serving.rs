@@ -52,9 +52,7 @@ use super::trainer::{Batch, Trainer};
 use crate::adapter::format::AdapterFile;
 use crate::adapter::method::site_deltas_with_dims;
 use crate::adapter::store::{shard_index, AdapterStore, SharedAdapterStore};
-use crate::runtime::exec::ParamSet;
-#[cfg(not(feature = "xla-runtime"))]
-use crate::runtime::Executable;
+use crate::runtime::{ParamSet, StepEngine};
 use crate::tensor::Tensor;
 use anyhow::Result;
 use std::collections::{BTreeMap, HashMap};
@@ -476,33 +474,34 @@ pub struct Server<'a> {
     scaling: f32,
 }
 
-/// Per-worker XLA eval state: a deep-cloned [`ParamSet`] plus the identity
+/// Per-worker eval state: a deep-cloned [`ParamSet`] plus the identity
 /// of the adapt-tensor set currently loaded into it. The `Arc` identity
 /// check is what makes republication visible mid-stream: `publish`
 /// invalidates the cache entry, the next fetch builds a fresh `Arc`, and
 /// the pointer inequality forces a re-`set_adapt`.
 #[cfg(not(feature = "xla-runtime"))]
-struct XlaSlot {
+struct EngineSlot {
     state: ParamSet,
     active: Option<(String, TensorSet)>,
 }
 
-/// Scheduler executor for the XLA path: swap via the shared cache stack,
-/// then run the artifact's eval per request of the micro-batch on this
-/// worker's own state. Compiled only against the compat backend: the
-/// vendored real-runtime PJRT handle types are not `Send`/`Sync`, so the
-/// `xla-runtime` build serves sequentially (see [`Server::serve_scheduled`]).
+/// Scheduler executor over the step-engine trait: swap via the shared
+/// cache stack, then run the engine's eval per request of the micro-batch
+/// on this worker's own state. Compiled only against the compat backend:
+/// the vendored real-runtime PJRT handle types are not `Send`/`Sync`, so
+/// the `xla-runtime` build serves sequentially (see
+/// [`Server::serve_scheduled`]); the host engine serves concurrently.
 #[cfg(not(feature = "xla-runtime"))]
-struct XlaRunner<'a> {
-    exe: Arc<Executable>,
+struct EngineRunner<'a> {
+    exe: Arc<dyn StepEngine>,
     swap: &'a SharedSwap,
     store: &'a SharedAdapterStore,
     scaling: f32,
-    slots: Vec<Mutex<XlaSlot>>,
+    slots: Vec<Mutex<EngineSlot>>,
 }
 
 #[cfg(not(feature = "xla-runtime"))]
-impl BatchRunner for XlaRunner<'_> {
+impl BatchRunner for EngineRunner<'_> {
     fn run_batch(&self, worker: usize, adapter: &str, reqs: &[Request]) -> Result<BatchOut> {
         let mut guard = self.slots[worker].lock().unwrap();
         let slot = &mut *guard;
@@ -531,12 +530,12 @@ impl<'a> Server<'a> {
         entry_seed: u64,
         scaling: f32,
     ) -> Result<Server<'a>> {
-        let exe = trainer.executable(artifact)?;
+        let exe = trainer.engine(artifact)?;
         let (statics, _) =
-            trainer.make_statics(&exe.meta, entry_seed, crate::fourier::EntryBias::None)?;
-        let base = trainer.base_for(&exe.meta)?;
+            trainer.make_statics(exe.meta(), entry_seed, crate::fourier::EntryBias::None)?;
+        let base = trainer.base_for(exe.meta())?;
         let state = exe.init_state(0, base, statics)?;
-        let site_dims: BTreeMap<String, (usize, usize)> = exe.meta.site_dims();
+        let site_dims: BTreeMap<String, (usize, usize)> = exe.meta().site_dims();
         Ok(Server {
             trainer,
             artifact: artifact.to_string(),
@@ -559,7 +558,7 @@ impl<'a> Server<'a> {
         }
         let t0 = Instant::now();
         let (tensors, trace) = self.swap.adapt_tensors(&self.store, name)?;
-        let exe = self.trainer.executable(&self.artifact)?;
+        let exe = self.trainer.engine(&self.artifact)?;
         exe.set_adapt(&mut self.state, &tensors)?;
         self.active = Some(name.to_string());
         stats.swaps += 1;
@@ -594,14 +593,14 @@ impl<'a> Server<'a> {
         queue: Vec<Request>,
         cfg: &SchedCfg,
     ) -> Result<(Vec<(u64, Tensor)>, ServeStats)> {
-        let exe = self.trainer.executable(&self.artifact)?;
+        let exe = self.trainer.engine(&self.artifact)?;
         let disk0 = self.store.disk_reads();
         let workers = cfg.workers.max(1);
         let mut slots = Vec::with_capacity(workers);
         for _ in 0..workers {
-            slots.push(Mutex::new(XlaSlot { state: self.state.try_clone()?, active: None }));
+            slots.push(Mutex::new(EngineSlot { state: self.state.try_clone()?, active: None }));
         }
-        let runner = XlaRunner {
+        let runner = EngineRunner {
             exe,
             swap: &self.swap,
             store: &self.store,
@@ -638,7 +637,7 @@ impl<'a> Server<'a> {
         let t_start = Instant::now();
         let mut stats = ServeStats { requests: queue.len(), ..Default::default() };
         let disk0 = self.store.disk_reads();
-        let exe = self.trainer.executable(&self.artifact)?;
+        let exe = self.trainer.engine(&self.artifact)?;
         let mut results = Vec::new();
         for (adapter, reqs) in scheduler::group_by_adapter(queue) {
             self.activate(&adapter, &mut stats)?;
@@ -667,7 +666,7 @@ impl<'a> Server<'a> {
     /// mid-stream, via the `Arc` identity check in their slots.
     pub fn publish(&mut self, name: &str, method: &str, seed: u64,
                    meta: Vec<(String, String)>) -> Result<usize> {
-        let exe = self.trainer.executable(&self.artifact)?;
+        let exe = self.trainer.engine(&self.artifact)?;
         let file = AdapterFile::from_named(
             method,
             seed,

@@ -1,17 +1,21 @@
-//! Generic fine-tuning loop over a step artifact.
+//! Generic fine-tuning loop over a step engine.
 //!
-//! The trainer is method-agnostic: the artifact's meta describes every
-//! tensor, `make_statics` produces the frozen method inputs (spectral
-//! entries / ablation bases), and the loop is data-in → step → metrics-out.
-//! Executables are cached per artifact name so sweeps and seed repeats pay
-//! XLA compilation once.
+//! The trainer is method- *and backend*-agnostic: an artifact name
+//! resolves to a [`StepEngine`] (pure-host by default, XLA with
+//! `--engine xla`), `make_statics` produces the frozen method inputs
+//! (spectral entries / ablation bases) as host tensors, and the loop is
+//! data-in → step → metrics-out. Engines are cached per artifact name so
+//! sweeps and seed repeats pay construction (or XLA compilation) once.
 
-use crate::fourier::{sample_entries, EntryBias};
-use crate::runtime::{exec, to_literal, xla, ArtifactMeta, Client, Executable, Registry};
-use crate::tensor::{linalg, rng::Rng, Tensor};
-use anyhow::{Context, Result};
+use crate::fourier::EntryBias;
+use crate::runtime::{
+    engine, host, ArtifactMeta, Client, EngineKind, ParamSet, Registry, StepEngine, StepScalars,
+    XlaEngine,
+};
+use crate::tensor::{rng::Rng, Tensor};
+use anyhow::{anyhow, Result};
 use std::collections::{BTreeMap, HashMap};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 pub type Batch = HashMap<String, Tensor>;
 
@@ -64,96 +68,110 @@ pub struct RunResult {
     pub train_seconds: f64,
 }
 
-/// Trainer: a PJRT client + executable cache + artifact registry.
+/// Per-eval callback: engine + state + scaling → scalar quality metric.
+pub type EvalFn<'a> = &'a mut dyn FnMut(&dyn StepEngine, &mut ParamSet, f32) -> Result<f64>;
+
+/// Trainer: an engine factory + engine cache (+ the artifact registry and
+/// PJRT client when the XLA backend is selected).
 pub struct Trainer {
     pub client: Client,
-    pub registry: Registry,
-    cache: Mutex<BTreeMap<String, std::sync::Arc<Executable>>>,
+    /// Present when `artifacts/` exists; required only by the XLA engine.
+    pub registry: Option<Registry>,
+    pub engine_kind: EngineKind,
+    cache: Mutex<BTreeMap<String, Arc<dyn StepEngine>>>,
 }
 
 impl Trainer {
-    pub fn new(client: Client, registry: Registry) -> Trainer {
-        Trainer { client, registry, cache: Mutex::new(BTreeMap::new()) }
+    pub fn new(client: Client, registry: Option<Registry>, engine_kind: EngineKind) -> Trainer {
+        Trainer { client, registry, engine_kind, cache: Mutex::new(BTreeMap::new()) }
     }
 
+    /// Default trainer: the pure-host engine (no artifacts needed; the
+    /// registry is attached opportunistically for registry-aware callers).
     pub fn open_default() -> Result<Trainer> {
-        let reg = Registry::open(&crate::artifacts_dir())
-            .context("opening artifact registry (run `make artifacts`)")?;
-        Ok(Trainer::new(Client::cpu()?, reg))
+        Trainer::open(EngineKind::Host)
     }
 
-    /// Compile (or fetch cached) the executable for an artifact family.
-    pub fn executable(&self, artifact: &str) -> Result<std::sync::Arc<Executable>> {
+    /// Trainer for an explicit engine kind. The XLA engine requires the
+    /// artifact registry; the host engine runs without one (an absent or
+    /// unreadable `artifacts/` is the norm there, not an error).
+    pub fn open(kind: EngineKind) -> Result<Trainer> {
+        let registry = match Registry::open(&crate::artifacts_dir()) {
+            Ok(r) => Some(r),
+            // Keep the real failure (corrupt meta.json, IO error, missing
+            // dir) attached when the engine actually needs the registry.
+            Err(e) if kind == EngineKind::Xla => {
+                return Err(e.context(
+                    "engine 'xla' needs the artifact registry (run `make artifacts` first)",
+                ))
+            }
+            Err(_) => None,
+        };
+        Ok(Trainer::new(Client::cpu()?, registry, kind))
+    }
+
+    /// The registry, or an actionable error (XLA-only paths).
+    pub fn registry_ref(&self) -> Result<&Registry> {
+        self.registry
+            .as_ref()
+            .ok_or_else(|| anyhow!("no artifact registry (run `make artifacts` first)"))
+    }
+
+    /// Artifact meta for a name: from the registry under the XLA engine,
+    /// synthesized from the built-in model zoo under the host engine.
+    pub fn meta_for(&self, artifact: &str) -> Result<ArtifactMeta> {
+        match self.engine_kind {
+            EngineKind::Host => host::zoo::artifact_meta(artifact),
+            EngineKind::Xla => Ok(self.registry_ref()?.meta(artifact)?.clone()),
+        }
+    }
+
+    /// Build (or fetch cached) the step engine for an artifact family.
+    pub fn engine(&self, artifact: &str) -> Result<Arc<dyn StepEngine>> {
         if let Some(e) = self.cache.lock().unwrap().get(artifact) {
             return Ok(e.clone());
         }
-        let meta = self.registry.meta(artifact)?.clone();
-        let exe = std::sync::Arc::new(Executable::load(&self.client, &self.registry.dir, &meta)?);
-        self.cache.lock().unwrap().insert(artifact.to_string(), exe.clone());
-        Ok(exe)
+        let eng: Arc<dyn StepEngine> = match self.engine_kind {
+            EngineKind::Host => Arc::new(host::HostEngine::from_artifact(artifact)?),
+            EngineKind::Xla => {
+                let reg = self.registry_ref()?;
+                let meta = reg.meta(artifact)?.clone();
+                Arc::new(XlaEngine::load(&self.client, &reg.dir, &meta)?)
+            }
+        };
+        self.cache.lock().unwrap().insert(artifact.to_string(), eng.clone());
+        Ok(eng)
     }
 
-    /// Frozen method inputs (role = "static") for an artifact.
-    ///
-    /// * `fourierft`: the shared entry matrix E (seeded, optional Eq. 5 bias)
-    /// * `randbasis`: Gaussian basis pair B1, B2
-    /// * `orthobasis`: Haar-orthogonal basis pair (QR of Gaussian)
+    /// Frozen method inputs (role = "static") for an artifact, as host
+    /// tensors. Delegates to [`engine::make_statics`], which derives the
+    /// spectral grid from each adapted site's actual (d1, d2).
     pub fn make_statics(
         &self,
         meta: &ArtifactMeta,
         entry_seed: u64,
         bias: EntryBias,
-    ) -> Result<(Vec<xla::Literal>, Option<(Vec<i32>, Vec<i32>)>)> {
-        let statics = meta.inputs_with_role("static");
-        if statics.is_empty() {
-            return Ok((vec![], None));
-        }
-        let d = if meta.model.kind == "mlp" { meta.model.hidden } else { meta.model.d };
-        let n = meta.method.n;
-        let (rows, cols) = sample_entries(d, d, n, bias, entry_seed);
-        let mut e_data = rows.clone();
-        e_data.extend(&cols);
-        let entries_t = Tensor::i32(&[2, n], e_data);
-
-        let mut lits = Vec::new();
-        for t in &statics {
-            match t.name.as_str() {
-                "entries" => lits.push(to_literal(&entries_t)?),
-                "basis1" | "basis2" => {
-                    let dim = t.shape[0];
-                    let tag = if t.name == "basis1" { 1 } else { 2 };
-                    let mut rng = Rng::new(entry_seed ^ (0xBA5E << 8) ^ tag);
-                    let g = Tensor::f32(&[dim, dim], rng.normal_vec(dim * dim, 1.0));
-                    let b = if meta.method.name == "orthobasis" {
-                        linalg::qr_q(&g)?
-                    } else {
-                        g
-                    };
-                    lits.push(to_literal(&b)?);
-                }
-                other => anyhow::bail!("unknown static input {other}"),
-            }
-        }
-        Ok((lits, Some((rows, cols))))
+    ) -> Result<(Vec<Tensor>, Option<(Vec<i32>, Vec<i32>)>)> {
+        engine::make_statics(meta, entry_seed, bias)
     }
 
-    /// Load pretrained base literals for the artifact's model, falling back
+    /// Load pretrained base tensors for the artifact's model, falling back
     /// to the seed-0 random init when no pretrained checkpoint exists.
-    pub fn base_for(&self, meta: &ArtifactMeta) -> Result<Vec<xla::Literal>> {
-        crate::coordinator::pretrain::load_or_init_base(self, &meta.model.name)
+    pub fn base_for(&self, meta: &ArtifactMeta) -> Result<Vec<Tensor>> {
+        crate::coordinator::pretrain::load_or_init_base(self, meta)
     }
 
     /// Run one fine-tune. `next_batch(step, rng)` yields training batches;
-    /// `eval_fn` (if any) maps the trainer+state to a scalar quality metric
+    /// `eval_fn` (if any) maps the engine+state to a scalar quality metric
     /// (higher = better).
     pub fn finetune(
         &self,
         cfg: &FinetuneCfg,
         mut next_batch: impl FnMut(usize, &mut Rng) -> Batch,
-        mut eval_fn: Option<&mut dyn FnMut(&Executable, &mut exec::ParamSet, f32) -> Result<f64>>,
+        mut eval_fn: Option<EvalFn<'_>>,
     ) -> Result<RunResult> {
-        let exe = self.executable(&cfg.artifact)?;
-        let meta = &exe.meta;
+        let exe = self.engine(&cfg.artifact)?;
+        let meta = exe.meta();
         let (statics, entries) = self.make_statics(meta, cfg.entry_seed, cfg.bias)?;
         let base = self.base_for(meta)?;
         let mut state = exe.init_state(cfg.seed as i32, base, statics)?;
@@ -166,7 +184,7 @@ impl Trainer {
             let batch = next_batch(step, &mut rng);
             let out = exe.step(
                 &mut state,
-                exec::StepScalars {
+                StepScalars {
                     step: step as f32,
                     lr: cfg.lr,
                     lr_head: cfg.lr_head,
@@ -180,13 +198,13 @@ impl Trainer {
             let do_eval = cfg.eval_every > 0 && step % cfg.eval_every == 0;
             if do_eval {
                 if let Some(f) = eval_fn.as_deref_mut() {
-                    evals.push((step, f(&exe, &mut state, cfg.scaling)?));
+                    evals.push((step, f(exe.as_ref(), &mut state, cfg.scaling)?));
                 }
             }
         }
         if let Some(f) = eval_fn.as_deref_mut() {
             if evals.last().map(|(s, _)| *s != cfg.steps).unwrap_or(true) {
-                evals.push((cfg.steps, f(&exe, &mut state, cfg.scaling)?));
+                evals.push((cfg.steps, f(exe.as_ref(), &mut state, cfg.scaling)?));
             }
         }
         let train_seconds = t0.elapsed().as_secs_f64();
@@ -211,12 +229,13 @@ impl Trainer {
     /// Returns (predictions, labels, raw scores for regression).
     pub fn eval_classify(
         &self,
-        exe: &Executable,
-        state: &mut exec::ParamSet,
+        exe: &dyn StepEngine,
+        state: &mut ParamSet,
         scaling: f32,
         batches: &[Batch],
     ) -> Result<(Vec<i32>, Vec<i32>, Vec<f32>, Vec<f32>)> {
-        let classes = exe.meta.logits_shape()?[1];
+        let classes = exe.meta().logits_shape()?[1];
+        let is_mse = exe.meta().loss == "mse";
         let mut preds = Vec::new();
         let mut labels = Vec::new();
         let mut scores = Vec::new();
@@ -224,7 +243,7 @@ impl Trainer {
         for batch in batches {
             let out = exe.eval(state, scaling, batch)?;
             let logits = out.logits.as_f32()?;
-            if exe.meta.loss == "mse" {
+            if is_mse {
                 scores.extend(logits.iter().copied());
                 targets.extend(batch["y"].as_f32()?.iter().copied());
             } else {
@@ -233,5 +252,47 @@ impl Trainer {
             }
         }
         Ok((preds, labels, scores, targets))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs;
+
+    /// The default-build trainer must train end-to-end with no registry:
+    /// a short host-engine fine-tune on the Figure-7 blobs task reduces
+    /// the loss.
+    #[test]
+    fn host_finetune_learns_blobs() {
+        let trainer = Trainer::open_default().unwrap();
+        assert_eq!(trainer.engine_kind, EngineKind::Host);
+        let mut cfg = FinetuneCfg::new("mlp__fourierft_n64__ce");
+        cfg.steps = 30;
+        cfg.lr = 5e-2;
+        cfg.lr_head = 2e-3;
+        cfg.scaling = 64.0;
+        cfg.seed = 1;
+        let res = trainer
+            .finetune(
+                &cfg,
+                |step, _| blobs::collate(&blobs::dataset(64, 0.35, 0xF0 ^ (step as u64) << 9)),
+                None,
+            )
+            .unwrap();
+        assert_eq!(res.losses.len(), 30);
+        let first = res.losses[0];
+        let last = *res.losses.last().unwrap();
+        assert!(last < first, "loss should decrease: {first} -> {last}");
+        assert!(res.entries.is_some(), "fourierft run records its entry matrix");
+        assert!(res.adapt.iter().any(|(n, _)| n == "spec.hid.w.c"));
+    }
+
+    #[test]
+    fn engine_cache_returns_same_instance() {
+        let trainer = Trainer::open_default().unwrap();
+        let a = trainer.engine("mlp__lora_r1__ce").unwrap();
+        let b = trainer.engine("mlp__lora_r1__ce").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
     }
 }

@@ -49,6 +49,10 @@ pub struct ReconstructPlan {
     su: Vec<f32>,
     /// 2n × d2: rows 0..n are cos ν_l q, rows n..2n are sin ν_l q.
     bmat: Vec<f32>,
+    /// d2 × 2n: `bmat` transposed, pre-built for the adjoint GEMM in
+    /// [`ReconstructPlan::coeff_grad`] (one transpose per plan, not one
+    /// per backward call).
+    bt: Vec<f32>,
 }
 
 impl ReconstructPlan {
@@ -91,7 +95,14 @@ impl ReconstructPlan {
             bmat[l * d2..(l + 1) * d2].copy_from_slice(&t.0);
             bmat[(n + l) * d2..(n + l + 1) * d2].copy_from_slice(&t.1);
         }
-        Ok(ReconstructPlan { d1, d2, n, cu, su, bmat })
+        let mut bt = vec![0.0f32; d2 * 2 * n];
+        for r in 0..2 * n {
+            let row = &bmat[r * d2..(r + 1) * d2];
+            for (q, &v) in row.iter().enumerate() {
+                bt[q * 2 * n + r] = v;
+            }
+        }
+        Ok(ReconstructPlan { d1, d2, n, cu, su, bmat, bt })
     }
 
     pub fn dims(&self) -> (usize, usize) {
@@ -107,7 +118,45 @@ impl ReconstructPlan {
     /// should prefer the count-capped [`global`] cache over private
     /// per-adapter plans).
     pub fn bytes(&self) -> usize {
-        4 * (self.cu.len() + self.su.len() + self.bmat.len())
+        4 * (self.cu.len() + self.su.len() + self.bmat.len() + self.bt.len())
+    }
+
+    /// Adjoint of [`ReconstructPlan::reconstruct`]: given the upstream
+    /// gradient G = ∂L/∂ΔW (d1×d2 row-major), return ∂L/∂c (length n).
+    ///
+    /// ΔW is linear in c — `ΔW[p, q] = Σ_l s_l (Cu[p,l]·Cv[l,q] −
+    /// Su[p,l]·Sv[l,q])` with `s_l = α c_l / (d1 d2)` — so the gradient is
+    /// the transpose of the same GEMM, evaluated with the *same cached
+    /// twiddle tables* the forward pass built:
+    ///
+    /// ```text
+    /// ∂L/∂c_l = α/(d1 d2) · Σ_p ( Cu[p,l]·(G·Cvᵀ)[p,l] − Su[p,l]·(G·Svᵀ)[p,l] )
+    /// ```
+    ///
+    /// One (d1 × d2)·(d2 × 2n) GEMM (against the transposed right factor)
+    /// plus an O(d1·n) contraction with Cu/Su.
+    pub fn coeff_grad(&self, grad: &[f32], alpha: f32) -> Result<Vec<f32>> {
+        let (d1, d2, n) = (self.d1, self.d2, self.n);
+        anyhow::ensure!(
+            grad.len() == d1 * d2,
+            "plan built for {d1}x{d2} but upstream gradient has {} elements",
+            grad.len()
+        );
+        // T = G · Bᵀ: T[p, l] = Σ_q G[p,q]·Cv[l,q]; T[p, n+l] = Σ_q G[p,q]·Sv[l,q].
+        // Bᵀ is pre-built at plan construction, shared with every backward
+        // call for this (d1, d2, entries).
+        let t = par::matmul_f32(grad, &self.bt, d1, d2, 2 * n);
+        let scale = alpha as f64 / (d1 * d2) as f64;
+        let mut dc = vec![0.0f32; n];
+        for (l, slot) in dc.iter_mut().enumerate() {
+            let mut acc = 0.0f64;
+            for p in 0..d1 {
+                acc += self.cu[p * n + l] as f64 * t[p * 2 * n + l] as f64
+                    - self.su[p * n + l] as f64 * t[p * 2 * n + n + l] as f64;
+            }
+            *slot = (acc * scale) as f32;
+        }
+        Ok(dc)
     }
 
     /// ΔW = α · Re(IDFT2(ToDense(E, c))) as a d1×d2 row-major vec.
@@ -264,6 +313,40 @@ mod tests {
         for i in 0..a.len() {
             assert!((a[i] - b[i]).abs() < 1e-6, "alias mismatch at {i}");
         }
+    }
+
+    #[test]
+    fn coeff_grad_matches_directional_differences() {
+        // ΔW is linear in c, so for any upstream G:
+        //   <G, reconstruct(c + h·e_l)> − <G, reconstruct(c)> = h · coeff_grad(G)[l].
+        let (d1, d2, n) = (20usize, 14usize, 10usize);
+        let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, 42);
+        let plan = ReconstructPlan::new((&rows, &cols), d1, d2).unwrap();
+        let mut rng = Rng::new(3);
+        let c = rng.normal_vec(n, 1.0);
+        let g = rng.normal_vec(d1 * d2, 1.0);
+        let dc = plan.coeff_grad(&g, 5.0).unwrap();
+        let dot = |w: &[f32]| -> f64 {
+            w.iter().zip(&g).map(|(&x, &y)| x as f64 * y as f64).sum()
+        };
+        let h = 0.5f32;
+        for l in 0..n {
+            let mut cp = c.clone();
+            cp[l] += h;
+            let mut cm = c.clone();
+            cm[l] -= h;
+            let fd = (dot(&plan.reconstruct(&cp, 5.0).unwrap())
+                - dot(&plan.reconstruct(&cm, 5.0).unwrap()))
+                / (2.0 * h as f64);
+            let rel = (fd - dc[l] as f64).abs() / (1.0 + fd.abs());
+            assert!(rel < 1e-3, "coeff {l}: fd {fd} vs analytic {}", dc[l]);
+        }
+    }
+
+    #[test]
+    fn coeff_grad_wrong_size_errors() {
+        let plan = ReconstructPlan::new((&[0, 1], &[0, 1]), 8, 8).unwrap();
+        assert!(plan.coeff_grad(&[1.0; 63], 1.0).is_err());
     }
 
     #[test]

@@ -9,12 +9,29 @@
 //! * **L2** (`python/compile/`) — JAX models (MLP / encoder / decoder / ViT)
 //!   with pluggable PEFT methods, fused Adam train/eval steps, AOT-lowered
 //!   to HLO text artifacts.
-//! * **L3** (this crate) — the coordinator: PJRT runtime, synthetic data
-//!   generators, metrics, the adapter store/serving layer, experiment
-//!   drivers for every table and figure in the paper, and benches.
+//! * **L3** (this crate) — the coordinator: the engine-split runtime
+//!   (PJRT *or* pure host), synthetic data generators, metrics, the
+//!   adapter store/serving layer, experiment drivers for every table and
+//!   figure in the paper, and benches.
 //!
 //! Python never runs at train/serve time; `make artifacts` is the only
-//! python invocation.
+//! python invocation — and with the default **host engine** it is not
+//! needed at all.
+//!
+//! ## Step engines
+//!
+//! Training and serving dispatch through the backend-neutral
+//! [`runtime::StepEngine`] trait (`init_state / step / eval /
+//! adapt_tensors / set_adapt` over a host-tensor
+//! [`runtime::ParamSet`]). [`runtime::HostEngine`] is a pure-Rust
+//! forward + analytic-backward implementation over the sim model zoo
+//! ([`runtime::host::zoo`]) with method gradients from each
+//! [`adapter::method::DeltaMethod`]'s `site_delta_grad` adjoint — the
+//! FourierFT backward is the transpose of the cached
+//! [`fourier::ReconstructPlan`] GEMM. [`runtime::XlaEngine`] wraps the
+//! compiled-HLO [`runtime::Executable`]. Select with
+//! `repro … --engine {host,xla}`; host is the default, so the default
+//! build trains every experiment offline.
 //!
 //! ## Reconstruction plan cache
 //!

@@ -9,12 +9,21 @@
 //!   all       [--quick]             every table + figure (EXPERIMENTS.md data)
 //!   serve     [--adapters K ...]    multi-adapter serving demo + stats
 //!
-//! Everything runs from AOT artifacts; python is never invoked.
+//! `--engine host` (the default) trains and serves pure-Rust with no
+//! artifacts; `--engine xla` runs from AOT artifacts. Python is never
+//! invoked either way.
 
 use anyhow::{Context, Result};
 use fourier_peft::coordinator::experiments;
 use fourier_peft::coordinator::trainer::{FinetuneCfg, Trainer};
+use fourier_peft::runtime::EngineKind;
 use fourier_peft::util::cli::Args;
+
+/// Build the trainer for the `--engine {host,xla}` flag (default: host —
+/// the pure-Rust engine that needs no artifacts).
+fn open_trainer(args: &Args) -> Result<Trainer> {
+    Trainer::open(EngineKind::parse(args.str_or("engine", "host"))?)
+}
 
 fn main() {
     let args = Args::from_env();
@@ -26,7 +35,7 @@ fn main() {
 
 fn dispatch(args: &Args) -> Result<()> {
     match args.command() {
-        Some("info") => info(),
+        Some("info") => info(args),
         Some("pretrain") => pretrain(args),
         Some("train") => train(args),
         Some("table") => experiment(args, "table"),
@@ -60,7 +69,13 @@ fn print_usage() {
          \x20 serve [--adapters N --requests N --workers N]  multi-adapter serving demo\n\
          \x20 serve-host [--method ID --adapters N --requests N --workers N]\n\
          \x20                                    pure-host scheduler demo, any registered method\n\
-         \x20 methods [--d N --layers N --n N --rank N]      registered adapter methods + budgets"
+         \x20 methods [--d N --layers N --n N --rank N]      registered adapter methods + budgets\n\
+         \n\
+         global flags:\n\
+         \x20 --engine {host,xla}                host = pure-Rust training engine (default,\n\
+         \x20                                    no artifacts needed); xla = compiled HLO\n\
+         \x20                                    artifacts (needs `make artifacts` + the\n\
+         \x20                                    `xla-runtime` feature)"
     );
 }
 
@@ -136,24 +151,36 @@ fn serve_host(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn info() -> Result<()> {
-    let trainer = Trainer::open_default()?;
+fn info(args: &Args) -> Result<()> {
+    let trainer = open_trainer(args)?;
     println!("platform: {}", trainer.client.platform());
-    println!("artifacts: {}", trainer.registry.dir.display());
-    let names: Vec<&str> = trainer.registry.names().collect();
-    println!("artifact families: {}", names.len());
-    for n in &names {
-        let m = trainer.registry.meta(n)?;
-        println!(
-            "  {n:<44} trainable {:>9} (ex-head {:>9})",
-            m.trainable, m.trainable_ex_head
-        );
+    println!("engine:   {}", trainer.engine_kind.id());
+    match &trainer.registry {
+        Some(reg) => {
+            println!("artifacts: {}", reg.dir.display());
+            let names: Vec<&str> = reg.names().collect();
+            println!("artifact families: {}", names.len());
+            for n in &names {
+                let m = reg.meta(n)?;
+                println!(
+                    "  {n:<44} trainable {:>9} (ex-head {:>9})",
+                    m.trainable, m.trainable_ex_head
+                );
+            }
+        }
+        None => {
+            println!("artifacts: none (host-engine model zoo only)");
+            println!("host models:");
+            for m in fourier_peft::runtime::host::zoo::MODELS {
+                println!("  {:<12} kind {:<9} d {:>4}  layers {}", m.name, m.kind, m.d, m.layers);
+            }
+        }
     }
     Ok(())
 }
 
 fn pretrain(args: &Args) -> Result<()> {
-    let trainer = Trainer::open_default()?;
+    let trainer = open_trainer(args)?;
     let model = args.required("model")?;
     fourier_peft::coordinator::pretrain::ensure_pretrained(&trainer, model, args.bool("force"))?;
     println!("base for {model} ready under {}", fourier_peft::runs_dir().join("bases").display());
@@ -161,9 +188,9 @@ fn pretrain(args: &Args) -> Result<()> {
 }
 
 fn train(args: &Args) -> Result<()> {
-    let trainer = Trainer::open_default()?;
+    let trainer = open_trainer(args)?;
     let artifact = args.required("artifact")?;
-    let meta = trainer.registry.meta(artifact)?.clone();
+    let meta = trainer.meta_for(artifact)?;
     let (lr_d, lrh_d, sc_d) =
         experiments::method_hp(&meta.method.name, meta.model.d.max(meta.model.hidden));
     let mut cfg = FinetuneCfg::new(artifact);
@@ -229,25 +256,37 @@ fn experiment(args: &Args, prefix: &str) -> Result<()> {
         .positional
         .get(1)
         .with_context(|| format!("usage: repro {prefix} <n>"))?;
-    let trainer = Trainer::open_default()?;
+    let trainer = open_trainer(args)?;
     experiments::run(&trainer, &format!("{prefix}{id}"), args)?;
     Ok(())
 }
 
 fn all(args: &Args) -> Result<()> {
-    let trainer = Trainer::open_default()?;
+    let trainer = open_trainer(args)?;
+    let mut failed = Vec::new();
     for id in ["table1", "figure3", "figure7", "table2", "figure4", "figure5",
                "figure6", "table6", "table3", "table4", "table5", "table13", "figure1"] {
         println!("\n########## {id} ##########");
-        experiments::run(&trainer, id, args)?;
+        // One experiment failing (e.g. table6's XLA-only random-basis
+        // ablation under --engine host) must not abort the sweep.
+        if let Err(e) = experiments::run(&trainer, id, args) {
+            eprintln!("[all] {id} failed: {e:#}");
+            failed.push(id);
+        }
     }
+    anyhow::ensure!(
+        failed.is_empty(),
+        "{} experiment(s) failed: {}",
+        failed.len(),
+        failed.join(", ")
+    );
     Ok(())
 }
 
 /// Debug command: one glue_run with explicit knobs, printing the eval
 /// trajectory. `repro probe --artifact A --task T [--steps N --lr-scale F]`
 fn probe(args: &Args) -> Result<()> {
-    let trainer = Trainer::open_default()?;
+    let trainer = open_trainer(args)?;
     let artifact = args.required("artifact")?;
     let task = fourier_peft::data::glue::GlueTask::from_name(args.str_or("task", "sst2"))
         .context("unknown --task")?;
@@ -272,11 +311,11 @@ fn serve(args: &Args) -> Result<()> {
     use fourier_peft::coordinator::serving::{Request, Server};
     use fourier_peft::data::glue::GlueTask;
 
-    let trainer = Trainer::open_default()?;
+    let trainer = open_trainer(args)?;
     let n_adapters = args.usize_or("adapters", 4);
     let n_requests = args.usize_or("requests", 32);
     let artifact = args.str_or("artifact", "enc_base__fourierft_n64__ce");
-    let meta = trainer.registry.meta(artifact)?.clone();
+    let meta = trainer.meta_for(artifact)?;
     let store_dir = fourier_peft::runs_dir().join("serve_demo");
     let store = SharedAdapterStore::open(&store_dir)?;
     let mut server = Server::new(&trainer, artifact, store, 2024, 8.0)?;

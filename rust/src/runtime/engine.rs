@@ -1,0 +1,355 @@
+//! Backend-neutral step engine: the one trait every training / serving
+//! consumer dispatches through.
+//!
+//! Historically the whole step path (`Trainer`, `pretrain`, the experiment
+//! drivers, the `Server`) was hard-wired to XLA `Executable`s and
+//! `xla::Literal` state, which meant the default offline build could
+//! reconstruct and serve adapters but never *train* them. This module
+//! splits that coupling:
+//!
+//! * [`StepEngine`] — `init_state / step / eval / adapt_tensors /
+//!   set_adapt` over a backend-neutral [`ParamSet`] holding host
+//!   [`Tensor`]s. Two implementations exist:
+//!   [`XlaEngine`](super::exec::XlaEngine), a thin wrapper over the
+//!   compiled-HLO [`Executable`](super::exec::Executable) (usable only
+//!   with the `xla-runtime` feature + `artifacts/`), and
+//!   [`HostEngine`](super::host::HostEngine), a pure-Rust forward +
+//!   analytic-backward engine over the sim model zoo that trains in the
+//!   default build.
+//! * [`make_statics`] — the frozen method inputs (spectral entry matrix,
+//!   ablation bases) as host tensors, engine-independent. The entry grid
+//!   is derived from each adapted site's actual (d1, d2) recorded in the
+//!   artifact meta (fold-min across sites), fixing the old square-dims
+//!   assumption `sample_entries(d, d, …)`.
+//!
+//! Selection is a CLI flag (`repro … --engine {host,xla}`); `host` is the
+//! default so every default-build binary trains end-to-end.
+
+use super::artifact::ArtifactMeta;
+use crate::fourier::{sample_entries, EntryBias};
+use crate::tensor::{linalg, rng::Rng, Tensor};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Scalar hyperparameters fed to every step call.
+#[derive(Debug, Clone, Copy)]
+pub struct StepScalars {
+    /// 1-based Adam step count.
+    pub step: f32,
+    pub lr: f32,
+    /// Task-head learning rate (the paper tunes it separately; dense head
+    /// weights want a much smaller rate than spectral coefficients).
+    pub lr_head: f32,
+    pub wd: f32,
+    /// FourierFT alpha, or LoRA alpha/r, per method semantics.
+    pub scaling: f32,
+}
+
+/// Result of one step call.
+pub struct StepOut {
+    pub loss: f32,
+    pub logits: Tensor,
+}
+
+/// Mutable training state at the engine boundary: host tensors aligned
+/// with the artifact meta's per-role input order. Backends that need
+/// device representations (XLA literals) convert at the trait edge.
+#[derive(Debug, Clone)]
+pub struct ParamSet {
+    pub base: Vec<Tensor>,
+    pub adapt: Vec<Tensor>,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    pub statics: Vec<Tensor>,
+}
+
+impl ParamSet {
+    /// Deep copy, for per-worker serve state. Host tensors clone directly;
+    /// the `Result` return is kept so call sites stay uniform with the
+    /// old literal-backed state (whose real-runtime clone could fail).
+    pub fn try_clone(&self) -> Result<ParamSet> {
+        Ok(self.clone())
+    }
+}
+
+/// Conditional `Send + Sync` bound for engine trait objects: the compat
+/// backend (and the host engine) are thread-safe, so the concurrent
+/// scheduler can share one engine across workers; the vendored real
+/// `xla` crate's PJRT handles are not, so the `xla-runtime` build drops
+/// the bound (and serves sequentially — see `Server::serve_scheduled`).
+#[cfg(not(feature = "xla-runtime"))]
+pub trait EngineBound: Send + Sync {}
+#[cfg(not(feature = "xla-runtime"))]
+impl<T: Send + Sync> EngineBound for T {}
+#[cfg(feature = "xla-runtime")]
+pub trait EngineBound {}
+#[cfg(feature = "xla-runtime")]
+impl<T> EngineBound for T {}
+
+/// A training/eval backend for one artifact family.
+///
+/// The contract mirrors the fused HLO step artifact: `step` rolls the
+/// Adam state forward and returns (loss, logits); `eval` is a
+/// side-effect-free forward pass; `adapt_tensors` / `set_adapt` move the
+/// trainable tensors across the boundary by name (adapter publish /
+/// hot-swap). All tensors at this boundary are host [`Tensor`]s.
+pub trait StepEngine: EngineBound {
+    /// Engine identifier (`"host"` / `"xla"`), recorded in cached `.base`
+    /// files so bases from different engines are never silently mixed.
+    fn id(&self) -> &'static str;
+
+    /// The artifact meta this engine was built for (tensor-level ABI).
+    fn meta(&self) -> &ArtifactMeta;
+
+    /// Seeded init of the trainable state: fresh (adapt, m, v) around the
+    /// given base and statics.
+    fn init_state(&self, seed: i32, base: Vec<Tensor>, statics: Vec<Tensor>)
+        -> Result<ParamSet>;
+
+    /// One fused train step. Mutates `state` (adapt/m/v roll forward).
+    fn step(
+        &self,
+        state: &mut ParamSet,
+        scalars: StepScalars,
+        batch: &HashMap<String, Tensor>,
+    ) -> Result<StepOut>;
+
+    /// Pure evaluation on a batch; `state` is unchanged on return.
+    fn eval(
+        &self,
+        state: &mut ParamSet,
+        scaling: f32,
+        batch: &HashMap<String, Tensor>,
+    ) -> Result<StepOut>;
+
+    /// Extract the current adapt tensors as (name, tensor) pairs.
+    fn adapt_tensors(&self, state: &ParamSet) -> Result<Vec<(String, Tensor)>> {
+        let metas = self.meta().inputs_with_role("adapt");
+        anyhow::ensure!(
+            metas.len() == state.adapt.len(),
+            "state has {} adapt tensors, meta wants {}",
+            state.adapt.len(),
+            metas.len()
+        );
+        Ok(metas
+            .iter()
+            .zip(&state.adapt)
+            .map(|(m, t)| (m.name.clone(), t.clone()))
+            .collect())
+    }
+
+    /// Replace adapt tensors from host tensors (adapter hot-load path).
+    fn set_adapt(&self, state: &mut ParamSet, tensors: &HashMap<String, Tensor>) -> Result<()> {
+        let metas = self.meta().inputs_with_role("adapt");
+        let mut new_adapt = Vec::with_capacity(metas.len());
+        for m in metas {
+            let t = tensors
+                .get(&m.name)
+                .ok_or_else(|| anyhow!("missing adapt tensor '{}'", m.name))?;
+            anyhow::ensure!(
+                t.shape == m.shape,
+                "adapt tensor '{}' shape {:?}, engine wants {:?}",
+                m.name,
+                t.shape,
+                m.shape
+            );
+            new_adapt.push(t.clone());
+        }
+        state.adapt = new_adapt;
+        Ok(())
+    }
+}
+
+/// Which [`StepEngine`] implementation a `Trainer` builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure-Rust forward + analytic backward ([`super::host`]); trains in
+    /// the default build with no artifacts.
+    Host,
+    /// Compiled HLO artifacts via PJRT (needs `artifacts/` and, to
+    /// actually execute, the `xla-runtime` feature).
+    Xla,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        match s {
+            "host" => Ok(EngineKind::Host),
+            "xla" => Ok(EngineKind::Xla),
+            other => Err(anyhow!("unknown engine '{other}' (expected 'host' or 'xla')")),
+        }
+    }
+
+    pub fn id(self) -> &'static str {
+        match self {
+            EngineKind::Host => "host",
+            EngineKind::Xla => "xla",
+        }
+    }
+}
+
+/// Spectral grid (d1, d2) for the shared entry matrix of `meta`.
+///
+/// Every adapted site's actual dims are read from the artifact meta (the
+/// method's legacy-name classifier maps adapt-tensor names to site names,
+/// whose base weights carry shapes); the fold-min across sites keeps the
+/// sampled frequencies valid at every site when dims differ. Falls back
+/// to the model-kind heuristic (`hidden` for mlp/denoiser, else `d`) for
+/// metas that expose no classifiable sites.
+pub fn entry_grid_dims(meta: &ArtifactMeta) -> (usize, usize) {
+    let fb = if meta.model.kind == "mlp" || meta.model.kind == "denoiser" {
+        meta.model.hidden
+    } else {
+        meta.model.d
+    };
+    let method = match crate::adapter::method::get(&meta.method.name) {
+        Ok(m) => m,
+        Err(_) => return (fb, fb),
+    };
+    let site_dims = meta.site_dims();
+    let mut dims: Option<(usize, usize)> = None;
+    for t in meta.inputs_with_role("adapt") {
+        if let Some((site, _)) = method.classify_legacy(&t.name) {
+            if let Some(&(a, b)) = site_dims.get(&site) {
+                dims = Some(match dims {
+                    None => (a, b),
+                    Some((x, y)) => (x.min(a), y.min(b)),
+                });
+            }
+        }
+    }
+    dims.unwrap_or((fb, fb))
+}
+
+/// Frozen method inputs (role = "static") for an artifact, as host
+/// tensors (engine-independent; backends convert if they need device
+/// literals):
+///
+/// * `fourierft` / `loca`: the shared entry matrix E (seeded, optional
+///   Eq. 5 bias) over the per-site grid from [`entry_grid_dims`]
+/// * `randbasis`: Gaussian basis pair B1, B2
+/// * `orthobasis`: Haar-orthogonal basis pair (QR of Gaussian)
+///
+/// Returns the static tensors in meta order plus the sampled entry
+/// (rows, cols) when an entry matrix was produced.
+///
+/// Caveat (pre-existing, engine-independent): adapter files store only
+/// the entry *seed*, and reconstruction resamples with
+/// [`EntryBias::None`] — so adapters trained with a biased entry matrix
+/// (the Figure 5 ablation) reconstruct correctly only inside the run
+/// that trained them, not from a published file.
+pub fn make_statics(
+    meta: &ArtifactMeta,
+    entry_seed: u64,
+    bias: EntryBias,
+) -> Result<(Vec<Tensor>, Option<(Vec<i32>, Vec<i32>)>)> {
+    let statics = meta.inputs_with_role("static");
+    if statics.is_empty() {
+        return Ok((vec![], None));
+    }
+    let n = meta.method.n;
+    let (d1, d2) = entry_grid_dims(meta);
+    let (rows, cols) = sample_entries(d1, d2, n, bias, entry_seed);
+    let mut e_data = rows.clone();
+    e_data.extend(&cols);
+    let entries_t = Tensor::i32(&[2, n], e_data);
+
+    let mut out = Vec::new();
+    let mut used_entries = false;
+    for t in &statics {
+        match t.name.as_str() {
+            "entries" => {
+                used_entries = true;
+                out.push(entries_t.clone());
+            }
+            "basis1" | "basis2" => {
+                let dim = t.shape[0];
+                let tag = if t.name == "basis1" { 1 } else { 2 };
+                let mut rng = Rng::new(entry_seed ^ (0xBA5E << 8) ^ tag);
+                let g = Tensor::f32(&[dim, dim], rng.normal_vec(dim * dim, 1.0));
+                let b = if meta.method.name == "orthobasis" { linalg::qr_q(&g)? } else { g };
+                out.push(b);
+            }
+            other => anyhow::bail!("unknown static input {other}"),
+        }
+    }
+    Ok((out, used_entries.then_some((rows, cols))))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{MethodMeta, ModelMeta, TensorMeta};
+
+    fn meta_with_sites(sites: &[(&str, usize, usize)], n: usize) -> ArtifactMeta {
+        let mut inputs = Vec::new();
+        for (name, d1, d2) in sites {
+            inputs.push(TensorMeta {
+                name: name.to_string(),
+                role: "base".into(),
+                dtype: "f32".into(),
+                shape: vec![*d1, *d2],
+            });
+            inputs.push(TensorMeta {
+                name: format!("spec.{name}.c"),
+                role: "adapt".into(),
+                dtype: "f32".into(),
+                shape: vec![n],
+            });
+        }
+        inputs.push(TensorMeta {
+            name: "entries".into(),
+            role: "static".into(),
+            dtype: "i32".into(),
+            shape: vec![2, n],
+        });
+        ArtifactMeta {
+            name: "test__fourierft__ce".into(),
+            loss: "ce".into(),
+            model: ModelMeta { kind: "encoder".into(), d: 999, ..Default::default() },
+            method: MethodMeta { name: "fourierft".into(), n, ..Default::default() },
+            inputs,
+            outputs: vec![],
+            step_hlo: String::new(),
+            init_hlo: String::new(),
+            trainable: 0,
+            trainable_ex_head: 0,
+        }
+    }
+
+    #[test]
+    fn entry_grid_uses_per_site_dims_not_model_d() {
+        // One 24x16 and one 16x24 site: the shared grid must be the
+        // fold-min (16, 16), never the bogus model d = 999.
+        let meta = meta_with_sites(&[("a.w", 24, 16), ("b.w", 16, 24)], 8);
+        assert_eq!(entry_grid_dims(&meta), (16, 16));
+    }
+
+    #[test]
+    fn statics_entries_are_valid_for_non_square_sites() {
+        let meta = meta_with_sites(&[("a.w", 24, 16)], 12);
+        let (statics, entries) = make_statics(&meta, 2024, EntryBias::None).unwrap();
+        assert_eq!(statics.len(), 1);
+        assert_eq!(statics[0].shape, vec![2, 12]);
+        let (rows, cols) = entries.unwrap();
+        assert!(rows.iter().all(|&r| (0..24).contains(&r)));
+        assert!(cols.iter().all(|&c| (0..16).contains(&c)));
+    }
+
+    #[test]
+    fn engine_kind_parses_and_rejects() {
+        assert_eq!(EngineKind::parse("host").unwrap(), EngineKind::Host);
+        assert_eq!(EngineKind::parse("xla").unwrap(), EngineKind::Xla);
+        assert_eq!(EngineKind::Host.id(), "host");
+        assert!(EngineKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn no_statics_is_empty() {
+        let mut meta = meta_with_sites(&[("a.w", 8, 8)], 4);
+        meta.inputs.retain(|t| t.role != "static");
+        let (statics, entries) = make_statics(&meta, 1, EntryBias::None).unwrap();
+        assert!(statics.is_empty());
+        assert!(entries.is_none());
+    }
+}

@@ -5,33 +5,29 @@
 //! `(base, adapt, m, v, statics, scalars, batch)`; running it with `lr = 0`
 //! is a pure eval (the L2 lowering guarantees this — see train.py).
 //!
-//! State tensors are kept as `xla::Literal`s between steps: the output
-//! tuple is decomposed and its adapt/m/v slots become next step's inputs
-//! verbatim, so there is no host re-encode in the loop.
+//! State tensors are kept as `xla::Literal`s between steps in a
+//! [`LiteralSet`]: the output tuple is decomposed and its adapt/m/v slots
+//! become next step's inputs verbatim, so there is no host re-encode in
+//! the inner loop. The backend-neutral face of this module is
+//! [`XlaEngine`], which implements [`StepEngine`] by converting the host
+//! [`ParamSet`](super::engine::ParamSet) to literals at the trait edge —
+//! one host↔device round-trip per call, the price of a boundary the host
+//! engine doesn't pay. Perf-critical XLA consumers can still use
+//! [`Executable`] directly.
 
 use super::artifact::ArtifactMeta;
+use super::engine::{ParamSet, StepEngine};
+pub use super::engine::{StepOut, StepScalars};
 use super::{from_literal, to_literal, xla, Client};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 
-/// Scalar hyperparameters fed to every step call.
-#[derive(Debug, Clone, Copy)]
-pub struct StepScalars {
-    /// 1-based Adam step count.
-    pub step: f32,
-    pub lr: f32,
-    /// Task-head learning rate (the paper tunes it separately; dense head
-    /// weights want a much smaller rate than spectral coefficients).
-    pub lr_head: f32,
-    pub wd: f32,
-    /// FourierFT alpha, or LoRA alpha/r, per method semantics.
-    pub scaling: f32,
-}
-
-/// Mutable training state: literals aligned with the meta's per-role order.
-pub struct ParamSet {
+/// Mutable training state in device-literal form: literals aligned with
+/// the meta's per-role order. Internal to the XLA backend — everything
+/// above the engine trait holds host tensors.
+pub struct LiteralSet {
     pub base: Vec<xla::Literal>,
     pub adapt: Vec<xla::Literal>,
     pub m: Vec<xla::Literal>,
@@ -39,17 +35,15 @@ pub struct ParamSet {
     pub statics: Vec<xla::Literal>,
 }
 
-impl ParamSet {
-    /// Deep copy, for per-worker serve state: the concurrent scheduler
-    /// gives every worker its own `ParamSet` so adapter hot-swaps and the
-    /// eval-time m/v roll never race across threads. Real-runtime
-    /// literals round-trip through host bytes ([`clone_literal`]); the
-    /// compat backend clones host tensors directly.
-    pub fn try_clone(&self) -> Result<ParamSet> {
+impl LiteralSet {
+    /// Deep copy. Real-runtime literals round-trip through host bytes
+    /// ([`clone_literal`]); the compat backend clones host tensors
+    /// directly.
+    pub fn try_clone(&self) -> Result<LiteralSet> {
         fn dup(v: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
             v.iter().map(clone_literal).collect()
         }
-        Ok(ParamSet {
+        Ok(LiteralSet {
             base: dup(&self.base)?,
             adapt: dup(&self.adapt)?,
             m: dup(&self.m)?,
@@ -57,12 +51,6 @@ impl ParamSet {
             statics: dup(&self.statics)?,
         })
     }
-}
-
-/// Result of one step call.
-pub struct StepOut {
-    pub loss: f32,
-    pub logits: Tensor,
 }
 
 pub struct Executable {
@@ -91,7 +79,7 @@ impl Executable {
         seed: i32,
         base: Vec<xla::Literal>,
         statics: Vec<xla::Literal>,
-    ) -> Result<ParamSet> {
+    ) -> Result<LiteralSet> {
         let seed_lit = to_literal(&Tensor::scalar_i32(seed))?;
         let out = self.init.execute::<xla::Literal>(&[seed_lit])?[0][0]
             .to_literal_sync()?
@@ -104,13 +92,13 @@ impl Executable {
         let adapt: Vec<_> = it.by_ref().take(k).collect();
         let m: Vec<_> = it.by_ref().take(k).collect();
         let v: Vec<_> = it.collect();
-        Ok(ParamSet { base, adapt, m, v, statics })
+        Ok(LiteralSet { base, adapt, m, v, statics })
     }
 
     /// One fused train/eval step. Mutates `state` (adapt/m/v roll forward).
     pub fn step(
         &self,
-        state: &mut ParamSet,
+        state: &mut LiteralSet,
         scalars: StepScalars,
         batch: &HashMap<String, Tensor>,
     ) -> Result<StepOut> {
@@ -175,7 +163,7 @@ impl Executable {
     /// Pure evaluation: lr = 0 forward pass on a batch; adapt/m/v restored.
     pub fn eval(
         &self,
-        state: &mut ParamSet,
+        state: &mut LiteralSet,
         scaling: f32,
         batch: &HashMap<String, Tensor>,
     ) -> Result<StepOut> {
@@ -196,7 +184,7 @@ impl Executable {
     }
 
     /// Extract the current adapt tensors as host tensors, keyed by name.
-    pub fn adapt_tensors(&self, state: &ParamSet) -> Result<Vec<(String, Tensor)>> {
+    pub fn adapt_tensors(&self, state: &LiteralSet) -> Result<Vec<(String, Tensor)>> {
         let metas = self.meta.inputs_with_role("adapt");
         metas
             .iter()
@@ -206,7 +194,7 @@ impl Executable {
     }
 
     /// Replace adapt tensors from host tensors (adapter hot-load path).
-    pub fn set_adapt(&self, state: &mut ParamSet, tensors: &HashMap<String, Tensor>) -> Result<()> {
+    pub fn set_adapt(&self, state: &mut LiteralSet, tensors: &HashMap<String, Tensor>) -> Result<()> {
         let metas = self.meta.inputs_with_role("adapt");
         let mut new_adapt = Vec::with_capacity(metas.len());
         for m in metas {
@@ -246,14 +234,109 @@ pub fn run_base_init(
         .to_tuple()?)
 }
 
+// ---------------------------------------------------------------------------
+// Engine-trait face of the XLA backend.
+
+/// [`StepEngine`] over a compiled [`Executable`]: host tensors at the
+/// trait boundary, literals inside. Each call converts the full state
+/// (base/adapt/m/v/statics) to literals and the rolled adapt/m/v back —
+/// simple and correct; latency-sensitive XLA loops should keep using
+/// [`Executable`] + [`LiteralSet`] directly.
+pub struct XlaEngine {
+    exe: Executable,
+}
+
+impl XlaEngine {
+    pub fn load(client: &Client, artifacts_dir: &Path, meta: &ArtifactMeta) -> Result<XlaEngine> {
+        Ok(XlaEngine { exe: Executable::load(client, artifacts_dir, meta)? })
+    }
+
+    fn to_literals(ts: &[Tensor]) -> Result<Vec<xla::Literal>> {
+        ts.iter().map(to_literal).collect()
+    }
+
+    fn to_tensors(ls: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        ls.iter().map(from_literal).collect()
+    }
+
+    fn literal_state(&self, state: &ParamSet) -> Result<LiteralSet> {
+        Ok(LiteralSet {
+            base: Self::to_literals(&state.base)?,
+            adapt: Self::to_literals(&state.adapt)?,
+            m: Self::to_literals(&state.m)?,
+            v: Self::to_literals(&state.v)?,
+            statics: Self::to_literals(&state.statics)?,
+        })
+    }
+}
+
+impl StepEngine for XlaEngine {
+    fn id(&self) -> &'static str {
+        "xla"
+    }
+
+    fn meta(&self) -> &ArtifactMeta {
+        &self.exe.meta
+    }
+
+    fn init_state(
+        &self,
+        seed: i32,
+        base: Vec<Tensor>,
+        statics: Vec<Tensor>,
+    ) -> Result<ParamSet> {
+        let lit = self.exe.init_state(
+            seed,
+            Self::to_literals(&base)?,
+            Self::to_literals(&statics)?,
+        )?;
+        Ok(ParamSet {
+            base,
+            adapt: Self::to_tensors(&lit.adapt)?,
+            m: Self::to_tensors(&lit.m)?,
+            v: Self::to_tensors(&lit.v)?,
+            statics,
+        })
+    }
+
+    fn step(
+        &self,
+        state: &mut ParamSet,
+        scalars: StepScalars,
+        batch: &HashMap<String, Tensor>,
+    ) -> Result<StepOut> {
+        let mut lit = self.literal_state(state)?;
+        let out = self.exe.step(&mut lit, scalars, batch)?;
+        state.adapt = Self::to_tensors(&lit.adapt)?;
+        state.m = Self::to_tensors(&lit.m)?;
+        state.v = Self::to_tensors(&lit.v)?;
+        Ok(out)
+    }
+
+    fn eval(
+        &self,
+        state: &mut ParamSet,
+        scaling: f32,
+        batch: &HashMap<String, Tensor>,
+    ) -> Result<StepOut> {
+        // The literal state is a throwaway copy, so nothing to restore.
+        let mut lit = self.literal_state(state)?;
+        self.exe.step(
+            &mut lit,
+            StepScalars { step: 1.0, lr: 0.0, lr_head: 0.0, wd: 0.0, scaling },
+            batch,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn param_set_try_clone_is_deep() {
+    fn literal_set_try_clone_is_deep() {
         let lit = |v: &[f32]| to_literal(&Tensor::f32(&[v.len()], v.to_vec())).unwrap();
-        let ps = ParamSet {
+        let ps = LiteralSet {
             base: vec![lit(&[1.0, 2.0])],
             adapt: vec![lit(&[3.0])],
             m: vec![lit(&[0.0])],

@@ -1,0 +1,574 @@
+//! Pure-host training engine: the default-build [`StepEngine`] that makes
+//! every sim-zoo fine-tune run with no XLA toolchain and no artifacts.
+//!
+//! * [`zoo`] — the Rust mirror of `python/compile/configs.py`: model
+//!   table, method-tag parsing, synthesized [`ArtifactMeta`]s, seeded
+//!   name-stable base init.
+//! * [`model`] — forward + analytic backward for the two trunk families
+//!   (mlp/denoiser, residual-mixer transformer), Adam-ready gradients.
+//! * [`HostEngine`] — glues them behind the engine trait: effective
+//!   weights `W_eff = W₀ + ΔW(θ)` are materialized through the adapter
+//!   method registry, and method-parameter gradients come from each
+//!   method's [`site_delta_grad`](crate::adapter::method::DeltaMethod::site_delta_grad)
+//!   adjoint.
+//!
+//! # The spectral adjoint
+//!
+//! FourierFT's ΔW is *linear* in the n learned spectral coefficients:
+//!
+//! ```text
+//! ΔW[p, q] = α/(d1·d2) · Σ_l c_l · cos(ω_l p + ν_l q)
+//!          = (A(c) · B)[p, q]
+//! ```
+//!
+//! with `A(c) = [Cu·diag(s) | −Su·diag(s)]`, `s = α·c/(d1·d2)`, and
+//! `B = [Cv; Sv]` the cached twiddle tables of the forward
+//! [`ReconstructPlan`](crate::fourier::ReconstructPlan) GEMM. By the chain
+//! rule, with `G = ∂L/∂ΔW` flowing back from the trunk,
+//!
+//! ```text
+//! ∂L/∂c_l = Σ_pq G[p,q] · ∂ΔW[p,q]/∂c_l
+//!         = α/(d1·d2) · Σ_p ( Cu[p,l]·(G·Cvᵀ)[p,l] − Su[p,l]·(G·Svᵀ)[p,l] )
+//! ```
+//!
+//! i.e. the **transpose of the same GEMM** — one `(d1×d2)·(d2×2n)`
+//! product against `Bᵀ` followed by an O(d1·n) contraction, reusing the
+//! twiddle tables the forward pass already built
+//! ([`ReconstructPlan::coeff_grad`](crate::fourier::ReconstructPlan::coeff_grad)).
+//! The same argument gives `loca` its n-column cosine adjoint (no sin
+//! block), `lora` the usual two-GEMM rule `∂A = α·Bᵀ·G`, `∂B = α·G·Aᵀ`,
+//! and `dense`/`bitfit`/`circulant` direct gathers. Finite-difference
+//! validation for every 2-D method lives in `tests/host_engine.rs`
+//! (≤ 1e-3 relative error).
+//!
+//! # Determinism
+//!
+//! Base and adapt inits are keyed by (seed, model/artifact, tensor name);
+//! batches come from the seeded data generators; the blocked GEMM
+//! computes each output element in a fixed order regardless of thread
+//! count. A re-run with the same seed is therefore bitwise identical —
+//! asserted in `tests/host_engine.rs`.
+
+pub mod model;
+pub mod zoo;
+
+use super::artifact::ArtifactMeta;
+use super::engine::{ParamSet, StepEngine, StepOut, StepScalars};
+use crate::adapter::method::{self, DeltaMethod, ReconstructCtx, SiteSpec, SiteTensors};
+use crate::fourier::plan;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// How one adapted site's ΔW (and its adjoint) is produced.
+enum BindKind {
+    /// FourierFT through the statics entry matrix + the process-wide
+    /// plan cache (supports Eq. 5 biased entries, shares twiddle tables
+    /// with serving). `coef` is the adapt index of the coefficient vec.
+    Fourier { coef: usize },
+    /// Any other registered method, via `site_delta` / `site_delta_grad`.
+    /// The dispatch passes `ReconstructCtx { seed: 0, … }`: none of the
+    /// generic built-ins reads the seed (loca stores its locations as a
+    /// tensor precisely so it has no seed dependence), and a custom
+    /// method that wants host training must follow the same rule — derive
+    /// ΔW from stored tensors only, not from `ctx.seed`, or its served
+    /// reconstruction (which uses the adapter file's seed) would silently
+    /// diverge from what was trained.
+    Generic { method: Arc<dyn DeltaMethod>, roles: Vec<(String, usize)> },
+}
+
+/// One adapted site: base tensor + method tensors + dims.
+struct Binding {
+    site: String,
+    base: usize,
+    d1: usize,
+    d2: usize,
+    kind: BindKind,
+}
+
+/// Pure-Rust step engine over the sim model zoo.
+pub struct HostEngine {
+    meta: ArtifactMeta,
+    net: model::Net,
+    bindings: Vec<Binding>,
+    needs: model::Needs,
+    adapt_names: Vec<String>,
+    /// Position of the shared entry matrix in the statics group.
+    entries_static: Option<usize>,
+}
+
+impl HostEngine {
+    /// Build the engine for an artifact name (`model__method__loss`).
+    pub fn from_artifact(artifact: &str) -> Result<HostEngine> {
+        let parsed = zoo::parse(artifact)?;
+        let meta = zoo::artifact_meta(artifact)?;
+        let base_metas = meta.inputs_with_role("base");
+        let adapt_metas = meta.inputs_with_role("adapt");
+        let base_idx: HashMap<String, usize> =
+            base_metas.iter().enumerate().map(|(i, t)| (t.name.clone(), i)).collect();
+        let adapt_idx: HashMap<String, usize> =
+            adapt_metas.iter().enumerate().map(|(i, t)| (t.name.clone(), i)).collect();
+        let adapt_names: Vec<String> = adapt_metas.iter().map(|t| t.name.clone()).collect();
+        let entries_static = meta
+            .inputs_with_role("static")
+            .iter()
+            .position(|t| t.name == "entries");
+
+        let net = model::Net::build(
+            parsed.model,
+            &parsed.loss,
+            &base_idx,
+            &adapt_idx,
+            parsed.method.name == "adapter",
+        )?;
+
+        let site_dims = |name: &str| -> Result<(usize, usize)> {
+            let i = *base_idx
+                .get(name)
+                .ok_or_else(|| anyhow!("adapted site '{name}' is not a base tensor"))?;
+            let shape = &base_metas[i].shape;
+            Ok((shape[0], shape.get(1).copied().unwrap_or(1)))
+        };
+        let adapt_of = |name: String| -> Result<usize> {
+            adapt_idx
+                .get(&name)
+                .copied()
+                .ok_or_else(|| anyhow!("missing adapt tensor '{name}'"))
+        };
+
+        let mut bindings = Vec::new();
+        match parsed.method.name.as_str() {
+            "fourierft" => {
+                let reg = method::get("fourierft")?;
+                for site in zoo::adapted_sites(parsed.model) {
+                    let (d1, d2) = site_dims(&site)?;
+                    bindings.push(Binding {
+                        base: base_idx[&site],
+                        d1,
+                        d2,
+                        kind: BindKind::Fourier {
+                            coef: adapt_of(reg.tensor_name(&site, "coef"))?,
+                        },
+                        site,
+                    });
+                }
+            }
+            "loca" | "lora" | "circulant" => {
+                let reg = method::get(&parsed.method.name)?;
+                for site in zoo::adapted_sites(parsed.model) {
+                    let (d1, d2) = site_dims(&site)?;
+                    let roles = reg
+                        .roles()
+                        .iter()
+                        .map(|r| Ok((r.to_string(), adapt_of(reg.tensor_name(&site, r))?)))
+                        .collect::<Result<Vec<_>>>()?;
+                    bindings.push(Binding {
+                        base: base_idx[&site],
+                        d1,
+                        d2,
+                        kind: BindKind::Generic { method: reg.clone(), roles },
+                        site,
+                    });
+                }
+            }
+            "bitfit" => {
+                let reg = method::get("bitfit")?;
+                for site in zoo::bias_sites(parsed.model) {
+                    let (d1, d2) = site_dims(&site)?;
+                    let roles = vec![("delta".to_string(), adapt_of(reg.tensor_name(&site, "delta"))?)];
+                    bindings.push(Binding {
+                        base: base_idx[&site],
+                        d1,
+                        d2,
+                        kind: BindKind::Generic { method: reg.clone(), roles },
+                        site,
+                    });
+                }
+            }
+            "ff" => {
+                let reg = method::get("dense")?;
+                for bt in zoo::base_schema(parsed.model) {
+                    let (d1, d2) = site_dims(&bt.name)?;
+                    let roles =
+                        vec![("delta".to_string(), adapt_of(reg.tensor_name(&bt.name, "delta"))?)];
+                    bindings.push(Binding {
+                        base: base_idx[&bt.name],
+                        d1,
+                        d2,
+                        kind: BindKind::Generic { method: reg.clone(), roles },
+                        site: bt.name,
+                    });
+                }
+            }
+            // lp trains only the head; adapter trains its bottlenecks
+            // directly inside the trunk (no ΔW site).
+            "lp" | "adapter" => {}
+            other => bail!("host engine cannot train method '{other}'"),
+        }
+
+        // The shared entry matrix is sampled once on the fold-min grid
+        // (engine::entry_grid_dims), but adapter-file reconstruction
+        // resamples per-site from the seed. Those agree only when every
+        // Fourier site shares one (d1, d2) — true for the whole zoo —
+        // so refuse heterogeneous-dims fourierft up front rather than
+        // train coefficients that would silently reconstruct differently
+        // at serve time.
+        let mut fourier_dims: Option<(usize, usize)> = None;
+        for b in &bindings {
+            if matches!(b.kind, BindKind::Fourier { .. }) {
+                match fourier_dims {
+                    None => fourier_dims = Some((b.d1, b.d2)),
+                    Some(dims) if dims != (b.d1, b.d2) => bail!(
+                        "fourierft sites with heterogeneous dims ({:?} vs {:?}): the \
+                         shared entry matrix would diverge from per-site serving \
+                         reconstruction",
+                        dims,
+                        (b.d1, b.d2)
+                    ),
+                    Some(_) => {}
+                }
+            }
+        }
+
+        let mut needs = model::Needs { head: parsed.method.head, ..Default::default() };
+        for b in &bindings {
+            if base_metas[b.base].shape.len() == 2 {
+                needs.w.insert(b.base);
+            } else {
+                needs.b.insert(b.base);
+            }
+        }
+        Ok(HostEngine { meta, net, bindings, needs, adapt_names, entries_static })
+    }
+
+    fn entries<'a>(&self, state: &'a ParamSet) -> Result<&'a Tensor> {
+        let i = self
+            .entries_static
+            .ok_or_else(|| anyhow!("artifact {} has no 'entries' static", self.meta.name))?;
+        state
+            .statics
+            .get(i)
+            .ok_or_else(|| anyhow!("state is missing the 'entries' static (got {} statics)", state.statics.len()))
+    }
+
+    /// Materialize `W_eff = W₀ + ΔW` for every bound site.
+    fn effective(&self, state: &ParamSet, scaling: f32) -> Result<HashMap<usize, Vec<f32>>> {
+        let ctx = ReconstructCtx { seed: 0, alpha: scaling, meta: &[] };
+        let mut eff = HashMap::new();
+        for b in &self.bindings {
+            let delta = match &b.kind {
+                BindKind::Fourier { coef } => {
+                    let e = self.entries(state)?.as_i32()?;
+                    let n = e.len() / 2;
+                    let p = plan::global().get((&e[..n], &e[n..]), b.d1, b.d2)?;
+                    let c = state.adapt[*coef].as_f32()?;
+                    Tensor::f32(&[b.d1, b.d2], p.reconstruct(c, scaling)?)
+                }
+                BindKind::Generic { method, roles } => {
+                    let pairs: Vec<(&str, &Tensor)> =
+                        roles.iter().map(|(r, i)| (r.as_str(), &state.adapt[*i])).collect();
+                    let spec = SiteSpec { name: b.site.clone(), d1: b.d1, d2: b.d2 };
+                    method.site_delta(&spec, &SiteTensors::from_pairs(&pairs), &ctx)?
+                }
+            };
+            let base = &state.base[b.base];
+            anyhow::ensure!(
+                delta.shape == base.shape,
+                "site {}: ΔW shape {:?} vs base shape {:?}",
+                b.site,
+                delta.shape,
+                base.shape
+            );
+            let mut w = base.as_f32()?.to_vec();
+            for (slot, &dv) in w.iter_mut().zip(delta.as_f32()?) {
+                *slot += dv;
+            }
+            eff.insert(b.base, w);
+        }
+        Ok(eff)
+    }
+
+    /// Route ∂L/∂W_eff through each method's adjoint into per-adapt-tensor
+    /// gradients, merged with the trunk's direct (head / adapter) grads.
+    fn adapt_grads(
+        &self,
+        state: &ParamSet,
+        mut grads: model::Grads,
+        scaling: f32,
+    ) -> Result<HashMap<usize, Vec<f32>>> {
+        let ctx = ReconstructCtx { seed: 0, alpha: scaling, meta: &[] };
+        let mut out = std::mem::take(&mut grads.adapt);
+        for b in &self.bindings {
+            let g = grads
+                .base
+                .remove(&b.base)
+                .ok_or_else(|| anyhow!("backward produced no gradient for site {}", b.site))?;
+            let g_t = Tensor::f32(&state.base[b.base].shape, g);
+            match &b.kind {
+                BindKind::Fourier { coef } => {
+                    let e = self.entries(state)?.as_i32()?;
+                    let n = e.len() / 2;
+                    let p = plan::global().get((&e[..n], &e[n..]), b.d1, b.d2)?;
+                    out.insert(*coef, p.coeff_grad(g_t.as_f32()?, scaling)?);
+                }
+                BindKind::Generic { method, roles } => {
+                    let pairs: Vec<(&str, &Tensor)> =
+                        roles.iter().map(|(r, i)| (r.as_str(), &state.adapt[*i])).collect();
+                    let spec = SiteSpec { name: b.site.clone(), d1: b.d1, d2: b.d2 };
+                    let role_grads =
+                        method.site_delta_grad(&spec, &SiteTensors::from_pairs(&pairs), &ctx, &g_t)?;
+                    for (role, gt) in role_grads {
+                        let idx = roles
+                            .iter()
+                            .find(|(r, _)| *r == role)
+                            .map(|(_, i)| *i)
+                            .ok_or_else(|| {
+                                anyhow!("site {}: adjoint returned unknown role '{role}'", b.site)
+                            })?;
+                        out.insert(idx, gt.as_f32()?.to_vec());
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Decoupled-weight-decay Adam over the adapt tensors that received a
+    /// gradient; `head.*` tensors use the separate head learning rate.
+    fn adam(
+        &self,
+        state: &mut ParamSet,
+        grads: &HashMap<usize, Vec<f32>>,
+        s: StepScalars,
+    ) -> Result<()> {
+        const B1: f32 = 0.9;
+        const B2: f32 = 0.999;
+        const EPS: f32 = 1e-8;
+        let bc1 = 1.0 - B1.powf(s.step);
+        let bc2 = 1.0 - B2.powf(s.step);
+        let ParamSet { adapt, m, v, .. } = state;
+        for (i, name) in self.adapt_names.iter().enumerate() {
+            let Some(g) = grads.get(&i) else { continue };
+            let lr = if name.starts_with("head.") { s.lr_head } else { s.lr };
+            let theta = adapt[i].as_f32_mut()?;
+            anyhow::ensure!(
+                g.len() == theta.len(),
+                "gradient for '{name}' has {} elements, tensor has {}",
+                g.len(),
+                theta.len()
+            );
+            let mi = m[i].as_f32_mut()?;
+            let vi = v[i].as_f32_mut()?;
+            for j in 0..theta.len() {
+                let gj = g[j];
+                mi[j] = B1 * mi[j] + (1.0 - B1) * gj;
+                vi[j] = B2 * vi[j] + (1.0 - B2) * gj * gj;
+                let mh = mi[j] / bc1;
+                let vh = vi[j] / bc2;
+                theta[j] -= lr * (mh / (vh.sqrt() + EPS) + s.wd * theta[j]);
+            }
+        }
+        Ok(())
+    }
+
+    fn validate_state_inputs(&self, base: &[Tensor], statics: &[Tensor]) -> Result<()> {
+        let base_metas = self.meta.inputs_with_role("base");
+        anyhow::ensure!(
+            base.len() == base_metas.len(),
+            "engine got {} base tensors, meta wants {}",
+            base.len(),
+            base_metas.len()
+        );
+        for (tm, t) in base_metas.iter().zip(base) {
+            anyhow::ensure!(
+                t.shape == tm.shape,
+                "base tensor '{}' shape {:?}, meta wants {:?}",
+                tm.name,
+                t.shape,
+                tm.shape
+            );
+        }
+        let n_statics = self.meta.inputs_with_role("static").len();
+        anyhow::ensure!(
+            statics.len() == n_statics,
+            "engine got {} statics, meta wants {n_statics}",
+            statics.len()
+        );
+        Ok(())
+    }
+
+    /// Gradients of the current state on one batch, keyed by adapt tensor
+    /// name — exposed for finite-difference validation in tests and not
+    /// part of the engine trait.
+    pub fn grads_by_name(
+        &self,
+        state: &ParamSet,
+        scaling: f32,
+        batch: &HashMap<String, Tensor>,
+    ) -> Result<HashMap<String, Vec<f32>>> {
+        let eff = self.effective(state, scaling)?;
+        let w = model::Weights { base: &state.base, eff: &eff };
+        let fwd = self.net.forward(&w, &state.adapt, batch, true)?;
+        let tape = fwd.tape.expect("tape requested");
+        let grads = self.net.backward(&w, &state.adapt, &tape, &self.needs)?;
+        let by_idx = self.adapt_grads(state, grads, scaling)?;
+        Ok(by_idx
+            .into_iter()
+            .map(|(i, g)| (self.adapt_names[i].clone(), g))
+            .collect())
+    }
+}
+
+impl StepEngine for HostEngine {
+    fn id(&self) -> &'static str {
+        "host"
+    }
+
+    fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    fn init_state(
+        &self,
+        seed: i32,
+        base: Vec<Tensor>,
+        statics: Vec<Tensor>,
+    ) -> Result<ParamSet> {
+        self.validate_state_inputs(&base, &statics)?;
+        let entries = self.entries_static.map(|i| &statics[i]);
+        let mut adapt = Vec::new();
+        let mut m = Vec::new();
+        let mut v = Vec::new();
+        for tm in self.meta.inputs_with_role("adapt") {
+            adapt.push(model::init_adapt_tensor(&self.meta.name, tm, seed as i64, entries)?);
+            m.push(Tensor::zeros(&tm.shape));
+            v.push(Tensor::zeros(&tm.shape));
+        }
+        Ok(ParamSet { base, adapt, m, v, statics })
+    }
+
+    fn step(
+        &self,
+        state: &mut ParamSet,
+        scalars: StepScalars,
+        batch: &HashMap<String, Tensor>,
+    ) -> Result<StepOut> {
+        let eff = self.effective(state, scalars.scaling)?;
+        let (loss, logits, by_idx) = {
+            let w = model::Weights { base: &state.base, eff: &eff };
+            let fwd = self.net.forward(&w, &state.adapt, batch, true)?;
+            let tape = fwd.tape.expect("tape requested");
+            let grads = self.net.backward(&w, &state.adapt, &tape, &self.needs)?;
+            (fwd.loss, fwd.logits, self.adapt_grads(state, grads, scalars.scaling)?)
+        };
+        self.adam(state, &by_idx, scalars)?;
+        Ok(StepOut { loss, logits })
+    }
+
+    fn eval(
+        &self,
+        state: &mut ParamSet,
+        scaling: f32,
+        batch: &HashMap<String, Tensor>,
+    ) -> Result<StepOut> {
+        let eff = self.effective(state, scaling)?;
+        let w = model::Weights { base: &state.base, eff: &eff };
+        let fwd = self.net.forward(&w, &state.adapt, batch, false)?;
+        Ok(StepOut { loss: fwd.loss, logits: fwd.logits })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mlp_batch(seed: u64) -> HashMap<String, Tensor> {
+        crate::data::blobs::collate(&crate::data::blobs::dataset(64, 0.35, seed))
+    }
+
+    #[test]
+    fn mlp_engine_builds_inits_and_steps() {
+        let eng = HostEngine::from_artifact("mlp__fourierft_n32__ce").unwrap();
+        let base = zoo::init_base_for(eng.meta(), 0).unwrap();
+        let (statics, _) = crate::runtime::engine::make_statics(
+            eng.meta(),
+            2024,
+            crate::fourier::EntryBias::None,
+        )
+        .unwrap();
+        let mut state = eng.init_state(0, base, statics).unwrap();
+        let scalars =
+            StepScalars { step: 1.0, lr: 5e-2, lr_head: 2e-3, wd: 0.0, scaling: 64.0 };
+        let out = eng.step(&mut state, scalars, &mlp_batch(1)).unwrap();
+        assert!(out.loss.is_finite());
+        assert_eq!(out.logits.shape, vec![64, 8]);
+        // coefficients moved off the zero init
+        let coef_idx =
+            eng.adapt_names.iter().position(|n| n == "spec.hid.w.c").unwrap();
+        assert!(state.adapt[coef_idx].frob_norm() > 0.0);
+    }
+
+    #[test]
+    fn eval_is_side_effect_free() {
+        let eng = HostEngine::from_artifact("mlp__lora_r2__ce").unwrap();
+        let base = zoo::init_base_for(eng.meta(), 0).unwrap();
+        let mut state = eng.init_state(0, base, vec![]).unwrap();
+        let snapshot = state.clone();
+        let batch = mlp_batch(2);
+        let a = eng.eval(&mut state, 2.0, &batch).unwrap();
+        let b = eng.eval(&mut state, 2.0, &batch).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        for (x, y) in snapshot.adapt.iter().zip(&state.adapt) {
+            assert_eq!(x, y, "eval must not mutate adapt tensors");
+        }
+    }
+
+    #[test]
+    fn set_adapt_roundtrips_through_trait() {
+        let eng = HostEngine::from_artifact("mlp__circulant__ce").unwrap();
+        let base = zoo::init_base_for(eng.meta(), 0).unwrap();
+        let mut state = eng.init_state(3, base, vec![]).unwrap();
+        let tensors: HashMap<String, Tensor> =
+            eng.adapt_tensors(&state).unwrap().into_iter().collect();
+        assert!(tensors.contains_key("circ.hid.w.c"));
+        eng.set_adapt(&mut state, &tensors).unwrap();
+        // missing tensor is an error
+        let empty = HashMap::new();
+        assert!(eng.set_adapt(&mut state, &empty).is_err());
+    }
+
+    #[test]
+    fn frozen_head_stays_frozen() {
+        let eng = HostEngine::from_artifact("mlp__fourierft_n16_fh__ce").unwrap();
+        let base = zoo::init_base_for(eng.meta(), 0).unwrap();
+        let (statics, _) = crate::runtime::engine::make_statics(
+            eng.meta(),
+            7,
+            crate::fourier::EntryBias::None,
+        )
+        .unwrap();
+        let head_before = base[eng
+            .meta()
+            .inputs_with_role("base")
+            .iter()
+            .position(|t| t.name == "head.w")
+            .unwrap()]
+        .clone();
+        let mut state = eng.init_state(0, base, statics).unwrap();
+        let scalars =
+            StepScalars { step: 1.0, lr: 5e-2, lr_head: 2e-3, wd: 0.0, scaling: 64.0 };
+        for s in 1..4 {
+            let mut sc = scalars;
+            sc.step = s as f32;
+            eng.step(&mut state, sc, &mlp_batch(s as u64)).unwrap();
+        }
+        let head_pos = eng
+            .meta()
+            .inputs_with_role("base")
+            .iter()
+            .position(|t| t.name == "head.w")
+            .unwrap();
+        assert_eq!(state.base[head_pos], head_before, "frozen head must not train");
+    }
+}

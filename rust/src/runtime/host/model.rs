@@ -1,0 +1,1106 @@
+//! Host-engine networks: forward + analytic backward for the sim model
+//! zoo, hand-derived over the blocked GEMMs in [`crate::tensor::par`].
+//!
+//! Two trunk families cover every zoo model:
+//!
+//! * **mlp / denoiser** — `x → relu(x·W_in + b_in) → relu(a₁·W_hid +
+//!   b_hid) → head`, the Figure-7 / DreamBooth-sim shapes with the single
+//!   adapted `hid.w` site.
+//! * **encoder / decoder / vit** — embedding (token+position, or
+//!   patch+position), one parameter-free cross-token [`Mix`] (mean over
+//!   the sequence for encoder/vit, causal prefix mean for decoder — the
+//!   attention stand-in that keeps lm/mlm from degenerating into
+//!   conditional-unigram models), then `layers` residual blocks with two
+//!   adapted projections per block (the paper's q/v sites):
+//!
+//!   ```text
+//!   h ← h + relu(h·(W_q + ΔW_q) + b_q)
+//!   h ← h + relu(h·(W_v + ΔW_v) + b_v)
+//!   ```
+//!
+//!   Classification/regression heads mean-pool over tokens; lm/mlm heads
+//!   project every position to the vocabulary. (The blocks are residual
+//!   MLP mixers, not attention — the sim protocol compares *adapter
+//!   parameterizations* on a fixed backbone, and a mixer keeps the
+//!   hand-written backward small and exactly reproducible. Host-side
+//!   generation/LM numbers are therefore *not* comparable to `--engine
+//!   xla` runs or the paper; the comparison *structure* across methods
+//!   is.)
+//!
+//! Backward is a plain tape: every pre-activation is kept from the
+//! forward pass, and ∂L/∂W_eff is produced only for sites something
+//! trains (the engine's site bindings, biases for bitfit/ff, embeddings
+//! for ff). All reductions run in the same order every call, so training
+//! is bitwise deterministic for a fixed seed.
+
+use super::zoo::{self, ModelCfg};
+use crate::tensor::{par, Tensor};
+use anyhow::{anyhow, bail, Result};
+use std::collections::{HashMap, HashSet};
+
+/// Where a logical tensor lives in the engine state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Loc {
+    Base(usize),
+    Adapt(usize),
+}
+
+/// Indices of one transformer block's tensors.
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub wq: usize,
+    pub bq: usize,
+    pub wv: usize,
+    pub bv: usize,
+    /// Houlsby bottleneck (adapt indices of `adpt.blk{i}.{d,u}`), if the
+    /// method is `adapter`.
+    pub adpt: Option<(usize, usize)>,
+}
+
+/// Index layout of the mlp/denoiser trunk.
+#[derive(Debug, Clone)]
+pub struct MlpIdx {
+    pub in_w: usize,
+    pub in_b: usize,
+    pub hid_w: usize,
+    pub hid_b: usize,
+    pub adpt: Option<(usize, usize)>,
+}
+
+/// Embedding layout of the transformer trunk.
+#[derive(Debug, Clone)]
+pub enum Embed {
+    /// `tok_emb[x] + pos_emb` (encoder / decoder).
+    Tokens { tok: usize, pos: usize },
+    /// `patchify(x)·patch_emb + pos_emb` (vit).
+    Patch { emb: usize, pos: usize },
+}
+
+/// Parameter-free token mixing applied once after the embedding, standing
+/// in for attention's cross-token information flow: without it every
+/// position would be a function of its own (token, position) pair alone
+/// and the lm/mlm objectives would collapse to conditional-unigram
+/// models. Linear and parameter-free, so the backward pass is the exact
+/// transpose and needs no tape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mix {
+    /// No mixing (mlp / denoiser trunks have one "token").
+    None,
+    /// `h_r += mean_s(h_s)` over the full sequence (encoder / vit —
+    /// bidirectional, like unmasked attention).
+    Full,
+    /// `h_r += mean_{s ≤ r}(h_s)` (decoder — causal prefix mean, so
+    /// greedy generation never peeks ahead).
+    Causal,
+}
+
+/// Apply [`Mix`] to `[b, t, d]` activations.
+fn mix_fwd(mix: Mix, h: &[f32], b: usize, t: usize, d: usize) -> Vec<f32> {
+    let mut out = h.to_vec();
+    match mix {
+        Mix::None => {}
+        Mix::Full => {
+            for bi in 0..b {
+                let seq = &h[bi * t * d..(bi + 1) * t * d];
+                let mut mean = vec![0.0f32; d];
+                for r in 0..t {
+                    add_into(&mut mean, &seq[r * d..(r + 1) * d]);
+                }
+                for v in &mut mean {
+                    *v /= t as f32;
+                }
+                let oseq = &mut out[bi * t * d..(bi + 1) * t * d];
+                for r in 0..t {
+                    add_into(&mut oseq[r * d..(r + 1) * d], &mean);
+                }
+            }
+        }
+        Mix::Causal => {
+            for bi in 0..b {
+                let mut sum = vec![0.0f32; d];
+                for r in 0..t {
+                    let idx = (bi * t + r) * d;
+                    add_into(&mut sum, &h[idx..idx + d]);
+                    let inv = 1.0 / (r as f32 + 1.0);
+                    let orow = &mut out[idx..idx + d];
+                    for (o, &s) in orow.iter_mut().zip(&sum) {
+                        *o += s * inv;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Transpose of [`mix_fwd`]: with `y = (I + M)·x`, `∂L/∂x = (I + Mᵀ)·∂L/∂y`.
+/// `Full`'s M is symmetric (uniform averaging), `Causal`'s transpose is a
+/// weighted suffix sum: `∂L/∂x_s = ∂L/∂y_s + Σ_{r ≥ s} ∂L/∂y_r / (r+1)`.
+fn mix_bwd(mix: Mix, dy: &[f32], b: usize, t: usize, d: usize) -> Vec<f32> {
+    match mix {
+        Mix::None | Mix::Full => mix_fwd(mix, dy, b, t, d),
+        Mix::Causal => {
+            let mut out = dy.to_vec();
+            for bi in 0..b {
+                let mut acc = vec![0.0f32; d];
+                for r in (0..t).rev() {
+                    let idx = (bi * t + r) * d;
+                    let inv = 1.0 / (r as f32 + 1.0);
+                    let drow = &dy[idx..idx + d];
+                    for (a, &dv) in acc.iter_mut().zip(drow) {
+                        *a += dv * inv;
+                    }
+                    // out already holds dy_r; add the (r-inclusive) suffix sum.
+                    let orow = &mut out[idx..idx + d];
+                    for (o, &a) in orow.iter_mut().zip(&acc) {
+                        *o += a;
+                    }
+                }
+            }
+            out
+        }
+    }
+}
+
+/// Loss family of an artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Loss {
+    Ce,
+    Mse,
+    /// Masked per-position cross-entropy (lm and mlm share the math).
+    Lm,
+    MseImg,
+}
+
+impl Loss {
+    pub fn parse(s: &str) -> Result<Loss> {
+        Ok(match s {
+            "ce" => Loss::Ce,
+            "mse" => Loss::Mse,
+            "lm" | "mlm" => Loss::Lm,
+            "mseimg" => Loss::MseImg,
+            other => bail!("unknown loss '{other}'"),
+        })
+    }
+}
+
+/// What the backward pass must produce.
+#[derive(Debug, Default)]
+pub struct Needs {
+    /// Base indices of 2-D weights whose ∂L/∂W_eff is consumed.
+    pub w: HashSet<usize>,
+    /// Base indices of biases whose ∂L/∂b_eff is consumed.
+    pub b: HashSet<usize>,
+    /// Task-head gradients (head trained).
+    pub head: bool,
+}
+
+/// Gradients out of one backward pass.
+#[derive(Debug, Default)]
+pub struct Grads {
+    /// ∂L/∂(effective base tensor), keyed by base index — the upstream
+    /// gradients the method adjoints (`site_delta_grad`) consume.
+    pub base: HashMap<usize, Vec<f32>>,
+    /// Direct adapt-tensor gradients (task head, Houlsby adapters),
+    /// keyed by adapt index.
+    pub adapt: HashMap<usize, Vec<f32>>,
+}
+
+/// Resolved effective weights: base tensors with ΔW folded in where a
+/// method adapts the site.
+pub struct Weights<'a> {
+    pub base: &'a [Tensor],
+    pub eff: &'a HashMap<usize, Vec<f32>>,
+}
+
+impl Weights<'_> {
+    pub fn get(&self, i: usize) -> Result<&[f32]> {
+        match self.eff.get(&i) {
+            Some(v) => Ok(v.as_slice()),
+            None => self.base[i].as_f32(),
+        }
+    }
+}
+
+/// One zoo network: trunk layout + loss, with all tensor indices resolved
+/// against the artifact meta's role groups.
+pub struct Net {
+    pub model: &'static ModelCfg,
+    pub loss: Loss,
+    pub head_w: Loc,
+    pub head_b: Loc,
+    pub embed: Option<Embed>,
+    pub mix: Mix,
+    pub blocks: Vec<Block>,
+    pub mlp: Option<MlpIdx>,
+}
+
+/// Activation tape of one forward pass (transformer trunk).
+struct BlockTape {
+    h_in: Vec<f32>,
+    uq: Vec<f32>,
+    h_mid: Vec<f32>,
+    uv: Vec<f32>,
+    h_out: Vec<f32>,
+    z: Option<Vec<f32>>,
+    a3: Option<Vec<f32>>,
+}
+
+/// Full tape: enough to run backward without recomputing anything.
+pub struct Tape {
+    rows: usize,
+    // transformer trunk
+    toks: Option<Vec<usize>>,
+    patch: Option<Vec<f32>>,
+    blocks: Vec<BlockTape>,
+    h_last: Vec<f32>,
+    pooled: Option<Vec<f32>>,
+    // mlp trunk
+    x: Option<Vec<f32>>,
+    u1: Option<Vec<f32>>,
+    a1: Option<Vec<f32>>,
+    u2: Option<Vec<f32>>,
+    a2: Option<Vec<f32>>,
+    // shared adapter-after-trunk slots (mlp trunk only)
+    z: Option<Vec<f32>>,
+    a3: Option<Vec<f32>>,
+    /// What the head consumed: pooled / h_last / post-adapter a2.
+    head_in: Vec<f32>,
+    /// ∂L/∂logits, already normalized.
+    pub dlogits: Vec<f32>,
+}
+
+/// Forward output.
+pub struct Fwd {
+    pub loss: f32,
+    pub logits: Tensor,
+    pub tape: Option<Tape>,
+}
+
+// ---------------------------------------------------------------------------
+// Small dense helpers (row-major slices).
+
+fn transpose(v: &[f32], m: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = v[i * n + j];
+        }
+    }
+    out
+}
+
+fn add_bias_rows(y: &mut [f32], b: &[f32], rows: usize, n: usize) {
+    for r in 0..rows {
+        let row = &mut y[r * n..(r + 1) * n];
+        for (slot, &bv) in row.iter_mut().zip(b) {
+            *slot += bv;
+        }
+    }
+}
+
+fn relu(v: &[f32]) -> Vec<f32> {
+    v.iter().map(|&x| if x > 0.0 { x } else { 0.0 }).collect()
+}
+
+/// dy ⊙ 1[pre > 0], returning a new vector.
+fn relu_bwd(dy: &[f32], pre: &[f32]) -> Vec<f32> {
+    dy.iter().zip(pre).map(|(&d, &p)| if p > 0.0 { d } else { 0.0 }).collect()
+}
+
+fn colsum(dy: &[f32], rows: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    for r in 0..rows {
+        let row = &dy[r * n..(r + 1) * n];
+        for (slot, &v) in out.iter_mut().zip(row) {
+            *slot += v;
+        }
+    }
+    out
+}
+
+fn add_into(dst: &mut [f32], src: &[f32]) {
+    for (a, b) in dst.iter_mut().zip(src) {
+        *a += b;
+    }
+}
+
+/// `Xᵀ·dY`: the weight gradient of `Y = X·W` (X: [rows, k], dY: [rows, n]).
+fn weight_grad(x: &[f32], dy: &[f32], rows: usize, k: usize, n: usize) -> Vec<f32> {
+    par::matmul_f32(&transpose(x, rows, k), dy, k, rows, n)
+}
+
+/// Softmax cross-entropy over `rows` rows with optional per-row weights;
+/// returns (mean loss, normalized ∂L/∂logits).
+fn softmax_ce(
+    logits: &[f32],
+    rows: usize,
+    classes: usize,
+    targets: &[i32],
+    weights: Option<&[f32]>,
+) -> Result<(f32, Vec<f32>)> {
+    let total_w: f64 = match weights {
+        Some(w) => w.iter().map(|&x| x as f64).sum(),
+        None => rows as f64,
+    };
+    let mut dl = vec![0.0f32; rows * classes];
+    if total_w <= 0.0 {
+        return Ok((0.0, dl));
+    }
+    let mut loss = 0.0f64;
+    for r in 0..rows {
+        let w = weights.map(|w| w[r]).unwrap_or(1.0);
+        if w == 0.0 {
+            continue;
+        }
+        let y = targets[r];
+        anyhow::ensure!(
+            (0..classes as i32).contains(&y),
+            "target {y} out of range for {classes} classes"
+        );
+        let row = &logits[r * classes..(r + 1) * classes];
+        let max = row.iter().cloned().fold(f32::MIN, f32::max);
+        let mut sum = 0.0f64;
+        for &v in row {
+            sum += ((v - max) as f64).exp();
+        }
+        loss += w as f64 * (sum.ln() + max as f64 - row[y as usize] as f64);
+        let drow = &mut dl[r * classes..(r + 1) * classes];
+        for (c, slot) in drow.iter_mut().enumerate() {
+            let p = ((row[c] - max) as f64).exp() / sum;
+            let onehot = if c as i32 == y { 1.0 } else { 0.0 };
+            *slot = (w as f64 * (p - onehot) / total_w) as f32;
+        }
+    }
+    Ok(((loss / total_w) as f32, dl))
+}
+
+/// Mean squared error over all elements; returns (loss, ∂L/∂pred).
+fn mse(pred: &[f32], target: &[f32]) -> (f32, Vec<f32>) {
+    let n = pred.len().max(1) as f64;
+    let mut loss = 0.0f64;
+    let mut dl = vec![0.0f32; pred.len()];
+    for i in 0..pred.len() {
+        let diff = pred[i] as f64 - target[i] as f64;
+        loss += diff * diff;
+        dl[i] = (2.0 * diff / n) as f32;
+    }
+    ((loss / n) as f32, dl)
+}
+
+// ---------------------------------------------------------------------------
+
+impl Net {
+    /// Resolve the trunk layout from a synthesized artifact meta.
+    pub fn build(
+        model: &'static ModelCfg,
+        loss: &str,
+        base_idx: &HashMap<String, usize>,
+        adapt_idx: &HashMap<String, usize>,
+        has_houlsby: bool,
+    ) -> Result<Net> {
+        let loss = Loss::parse(loss)?;
+        let bi = |name: &str| -> Result<usize> {
+            base_idx.get(name).copied().ok_or_else(|| anyhow!("missing base tensor '{name}'"))
+        };
+        let loc = |name: &str| -> Result<Loc> {
+            if let Some(&i) = adapt_idx.get(name) {
+                Ok(Loc::Adapt(i))
+            } else {
+                Ok(Loc::Base(bi(name)?))
+            }
+        };
+        let houlsby = |site: &str| -> Option<(usize, usize)> {
+            if !has_houlsby {
+                return None;
+            }
+            let d = adapt_idx.get(&format!("adpt.{site}.d")).copied()?;
+            let u = adapt_idx.get(&format!("adpt.{site}.u")).copied()?;
+            Some((d, u))
+        };
+        let mut net = Net {
+            model,
+            loss,
+            head_w: loc("head.w")?,
+            head_b: loc("head.b")?,
+            embed: None,
+            mix: Mix::None,
+            blocks: Vec::new(),
+            mlp: None,
+        };
+        match model.kind {
+            "mlp" | "denoiser" => {
+                net.mlp = Some(MlpIdx {
+                    in_w: bi("in.w")?,
+                    in_b: bi("in.b")?,
+                    hid_w: bi("hid.w")?,
+                    hid_b: bi("hid.b")?,
+                    adpt: houlsby("hid"),
+                });
+            }
+            "encoder" | "decoder" | "vit" => {
+                net.embed = Some(if model.kind == "vit" {
+                    Embed::Patch { emb: bi("patch_emb")?, pos: bi("pos_emb")? }
+                } else {
+                    Embed::Tokens { tok: bi("tok_emb")?, pos: bi("pos_emb")? }
+                });
+                net.mix = if model.kind == "decoder" { Mix::Causal } else { Mix::Full };
+                for i in 0..model.layers {
+                    net.blocks.push(Block {
+                        wq: bi(&format!("blk{i}.wq"))?,
+                        bq: bi(&format!("blk{i}.bq"))?,
+                        wv: bi(&format!("blk{i}.wv"))?,
+                        bv: bi(&format!("blk{i}.bv"))?,
+                        adpt: houlsby(&format!("blk{i}")),
+                    });
+                }
+            }
+            other => bail!("host engine has no trunk for model kind '{other}'"),
+        }
+        Ok(net)
+    }
+
+    fn tensor_at<'a>(
+        &self,
+        loc: Loc,
+        base: &'a [Tensor],
+        adapt: &'a [Tensor],
+    ) -> &'a Tensor {
+        match loc {
+            Loc::Base(i) => &base[i],
+            Loc::Adapt(i) => &adapt[i],
+        }
+    }
+
+    /// Forward pass (and loss gradient when `want_tape`).
+    pub fn forward(
+        &self,
+        w: &Weights,
+        adapt: &[Tensor],
+        batch: &HashMap<String, Tensor>,
+        want_tape: bool,
+    ) -> Result<Fwd> {
+        let get_batch = |name: &str| -> Result<&Tensor> {
+            batch.get(name).ok_or_else(|| anyhow!("batch missing tensor '{name}'"))
+        };
+        let head_w_t = self.tensor_at(self.head_w, w.base, adapt).clone();
+        let head_b_t = self.tensor_at(self.head_b, w.base, adapt).clone();
+        // A trained head reads from `adapt` directly; a frozen (or
+        // ff-delta'd) head reads through the effective-weight map.
+        let head_w: &[f32] = match self.head_w {
+            Loc::Base(i) => w.get(i)?,
+            Loc::Adapt(_) => head_w_t.as_f32()?,
+        };
+        let head_b: &[f32] = match self.head_b {
+            Loc::Base(i) => w.get(i)?,
+            Loc::Adapt(_) => head_b_t.as_f32()?,
+        };
+
+        if let Some(mlp) = &self.mlp {
+            return self.forward_mlp(mlp, w, adapt, batch, head_w, head_b, want_tape);
+        }
+
+        // --- transformer trunk -------------------------------------------
+        let m = self.model;
+        let (b, t, d) = (m.batch, m.tokens(), m.d);
+        let rows = b * t;
+        let embed = self.embed.as_ref().expect("transformer net has an embedding");
+        let mut toks: Option<Vec<usize>> = None;
+        let mut patch: Option<Vec<f32>> = None;
+        let mut h = vec![0.0f32; rows * d];
+        match embed {
+            Embed::Tokens { tok, pos } => {
+                let x = get_batch("x")?;
+                anyhow::ensure!(
+                    x.shape == [b, t],
+                    "batch 'x' shape {:?}, model wants [{b}, {t}]",
+                    x.shape
+                );
+                let ids = x.as_i32()?;
+                let te = w.get(*tok)?;
+                let pe = w.get(*pos)?;
+                let mut tvec = Vec::with_capacity(rows);
+                for r in 0..rows {
+                    let id = ids[r];
+                    anyhow::ensure!(
+                        (0..m.vocab as i32).contains(&id),
+                        "token id {id} out of range for vocab {}",
+                        m.vocab
+                    );
+                    let id = id as usize;
+                    tvec.push(id);
+                    let row = &mut h[r * d..(r + 1) * d];
+                    let te_row = &te[id * d..(id + 1) * d];
+                    let pe_row = &pe[(r % t) * d..(r % t + 1) * d];
+                    for j in 0..d {
+                        row[j] = te_row[j] + pe_row[j];
+                    }
+                }
+                toks = Some(tvec);
+            }
+            Embed::Patch { emb, pos } => {
+                let x = get_batch("x")?;
+                anyhow::ensure!(
+                    x.shape == [b, m.img, m.img, 3],
+                    "batch 'x' shape {:?}, model wants [{b}, {}, {}, 3]",
+                    x.shape,
+                    m.img,
+                    m.img
+                );
+                let px = x.as_f32()?;
+                let g = m.img / m.patch;
+                let ppc = m.patch * m.patch * m.channels;
+                let mut p_mat = vec![0.0f32; rows * ppc];
+                for bi_ in 0..b {
+                    for gy in 0..g {
+                        for gx in 0..g {
+                            let r = (bi_ * g + gy) * g + gx;
+                            let dst = &mut p_mat[r * ppc..(r + 1) * ppc];
+                            let mut k = 0;
+                            for py in 0..m.patch {
+                                for pxi in 0..m.patch {
+                                    for c in 0..m.channels {
+                                        let yy = gy * m.patch + py;
+                                        let xx = gx * m.patch + pxi;
+                                        dst[k] = px[((bi_ * m.img + yy) * m.img + xx) * 3 + c];
+                                        k += 1;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                h = par::matmul_f32(&p_mat, w.get(*emb)?, rows, ppc, d);
+                let pe = w.get(*pos)?;
+                for r in 0..rows {
+                    let row = &mut h[r * d..(r + 1) * d];
+                    let pe_row = &pe[(r % t) * d..(r % t + 1) * d];
+                    add_into(row, pe_row);
+                }
+                patch = Some(p_mat);
+            }
+        }
+        // Cross-token information flow (attention stand-in).
+        h = mix_fwd(self.mix, &h, b, t, d);
+
+        let mut block_tapes = Vec::with_capacity(self.blocks.len());
+        for blk in &self.blocks {
+            let h_in = h;
+            let mut uq = par::matmul_f32(&h_in, w.get(blk.wq)?, rows, d, d);
+            add_bias_rows(&mut uq, w.get(blk.bq)?, rows, d);
+            let aq = relu(&uq);
+            let mut h_mid = h_in.clone();
+            add_into(&mut h_mid, &aq);
+            let mut uv = par::matmul_f32(&h_mid, w.get(blk.wv)?, rows, d, d);
+            add_bias_rows(&mut uv, w.get(blk.bv)?, rows, d);
+            let av = relu(&uv);
+            let mut h_out = h_mid.clone();
+            add_into(&mut h_out, &av);
+            let (mut z, mut a3) = (None, None);
+            h = if let Some((di, ui)) = blk.adpt {
+                let dmat = adapt[di].as_f32()?;
+                let umat = adapt[ui].as_f32()?;
+                let mw = adapt[di].shape[1];
+                let zz = par::matmul_f32(&h_out, dmat, rows, d, mw);
+                let aa = relu(&zz);
+                let up = par::matmul_f32(&aa, umat, rows, mw, d);
+                let mut hf = h_out.clone();
+                add_into(&mut hf, &up);
+                z = Some(zz);
+                a3 = Some(aa);
+                hf
+            } else {
+                h_out.clone()
+            };
+            block_tapes.push(BlockTape { h_in, uq, h_mid, uv, h_out, z, a3 });
+        }
+        let h_last = h;
+
+        // --- head ---------------------------------------------------------
+        let (head_rows, pooled, head_in): (usize, Option<Vec<f32>>, Vec<f32>) =
+            match self.loss {
+                Loss::Lm => (rows, None, h_last.clone()),
+                _ => {
+                    let mut p = vec![0.0f32; b * d];
+                    for r in 0..rows {
+                        let dst = &mut p[(r / t) * d..(r / t + 1) * d];
+                        let src = &h_last[r * d..(r + 1) * d];
+                        for j in 0..d {
+                            dst[j] += src[j] / t as f32;
+                        }
+                    }
+                    (b, Some(p.clone()), p)
+                }
+            };
+        let classes = head_b.len();
+        let mut logits = par::matmul_f32(&head_in, head_w, head_rows, d, classes);
+        add_bias_rows(&mut logits, head_b, head_rows, classes);
+
+        // --- loss ---------------------------------------------------------
+        let (loss, dlogits, logits_t) = match self.loss {
+            Loss::Ce => {
+                let y = get_batch("y")?.as_i32()?;
+                let (l, dl) = softmax_ce(&logits, b, classes, y, None)?;
+                (l, dl, Tensor::f32(&[b, classes], logits))
+            }
+            Loss::Mse => {
+                let y = get_batch("y")?.as_f32()?;
+                let (l, dl) = mse(&logits, y);
+                (l, dl, Tensor::f32(&[b, 1], logits))
+            }
+            Loss::Lm => {
+                let y = get_batch("y")?.as_i32()?;
+                let mask = get_batch("mask")?.as_f32()?;
+                let (l, dl) = softmax_ce(&logits, rows, classes, y, Some(mask))?;
+                (l, dl, Tensor::f32(&[b, t, classes], logits))
+            }
+            Loss::MseImg => unreachable!("mseimg is an mlp-trunk loss"),
+        };
+
+        let tape = want_tape.then_some(Tape {
+            rows,
+            toks,
+            patch,
+            blocks: block_tapes,
+            h_last,
+            pooled,
+            x: None,
+            u1: None,
+            a1: None,
+            u2: None,
+            a2: None,
+            z: None,
+            a3: None,
+            head_in,
+            dlogits,
+        });
+        Ok(Fwd { loss, logits: logits_t, tape })
+    }
+
+    /// mlp / denoiser trunk.
+    #[allow(clippy::too_many_arguments)]
+    fn forward_mlp(
+        &self,
+        idx: &MlpIdx,
+        w: &Weights,
+        adapt: &[Tensor],
+        batch: &HashMap<String, Tensor>,
+        head_w: &[f32],
+        head_b: &[f32],
+        want_tape: bool,
+    ) -> Result<Fwd> {
+        let m = self.model;
+        let b = m.batch;
+        let in_dim = if m.kind == "mlp" { 2 } else { m.pix() };
+        let h = m.hidden;
+        let x_t = batch.get("x").ok_or_else(|| anyhow!("batch missing tensor 'x'"))?;
+        anyhow::ensure!(
+            x_t.shape == [b, in_dim],
+            "batch 'x' shape {:?}, model wants [{b}, {in_dim}]",
+            x_t.shape
+        );
+        let x = x_t.as_f32()?.to_vec();
+        let mut u1 = par::matmul_f32(&x, w.get(idx.in_w)?, b, in_dim, h);
+        add_bias_rows(&mut u1, w.get(idx.in_b)?, b, h);
+        let a1 = relu(&u1);
+        let mut u2 = par::matmul_f32(&a1, w.get(idx.hid_w)?, b, h, h);
+        add_bias_rows(&mut u2, w.get(idx.hid_b)?, b, h);
+        let a2 = relu(&u2);
+        let (mut z, mut a3) = (None, None);
+        let head_in: Vec<f32> = if let Some((di, ui)) = idx.adpt {
+            let dmat = adapt[di].as_f32()?;
+            let umat = adapt[ui].as_f32()?;
+            let mw = adapt[di].shape[1];
+            let zz = par::matmul_f32(&a2, dmat, b, h, mw);
+            let aa = relu(&zz);
+            let up = par::matmul_f32(&aa, umat, b, mw, h);
+            let mut hf = a2.clone();
+            add_into(&mut hf, &up);
+            z = Some(zz);
+            a3 = Some(aa);
+            hf
+        } else {
+            a2.clone()
+        };
+        let out_dim = head_b.len();
+        let mut logits = par::matmul_f32(&head_in, head_w, b, h, out_dim);
+        add_bias_rows(&mut logits, head_b, b, out_dim);
+
+        let (loss, dlogits, logits_t) = match self.loss {
+            Loss::Ce => {
+                let y = batch.get("y").ok_or_else(|| anyhow!("batch missing 'y'"))?.as_i32()?;
+                let (l, dl) = softmax_ce(&logits, b, out_dim, y, None)?;
+                (l, dl, Tensor::f32(&[b, out_dim], logits))
+            }
+            Loss::MseImg => {
+                let y = batch.get("y").ok_or_else(|| anyhow!("batch missing 'y'"))?.as_f32()?;
+                let (l, dl) = mse(&logits, y);
+                (l, dl, Tensor::f32(&[b, out_dim], logits))
+            }
+            other => bail!("mlp trunk does not support loss {other:?}"),
+        };
+        let tape = want_tape.then_some(Tape {
+            rows: b,
+            toks: None,
+            patch: None,
+            blocks: Vec::new(),
+            h_last: Vec::new(),
+            pooled: None,
+            x: Some(x),
+            u1: Some(u1),
+            a1: Some(a1),
+            u2: Some(u2),
+            a2: Some(a2),
+            z,
+            a3,
+            head_in,
+            dlogits,
+        });
+        Ok(Fwd { loss, logits: logits_t, tape })
+    }
+
+    /// Backward pass over a tape: fill `Grads` for everything in `needs`
+    /// plus the Houlsby adapter tensors (always trained when present).
+    pub fn backward(
+        &self,
+        w: &Weights,
+        adapt: &[Tensor],
+        tape: &Tape,
+        needs: &Needs,
+    ) -> Result<Grads> {
+        let mut grads = Grads::default();
+        let m = self.model;
+        let head_w_t = self.tensor_at(self.head_w, w.base, adapt).clone();
+        let head_w: &[f32] = match self.head_w {
+            Loc::Base(i) => w.get(i)?,
+            Loc::Adapt(_) => head_w_t.as_f32()?,
+        };
+        let d_in = m.head_in();
+        let classes = head_w_t.shape[1];
+        let head_rows = tape.head_in.len() / d_in;
+
+        // --- head ---------------------------------------------------------
+        if needs.head {
+            let dw = weight_grad(&tape.head_in, &tape.dlogits, head_rows, d_in, classes);
+            let db = colsum(&tape.dlogits, head_rows, classes);
+            if let Loc::Adapt(i) = self.head_w {
+                grads.adapt.insert(i, dw);
+            }
+            if let Loc::Adapt(i) = self.head_b {
+                grads.adapt.insert(i, db);
+            }
+        } else if let Loc::Base(i) = self.head_w {
+            // ff on a frozen-head artifact never happens (ff trains the
+            // head as adapt), but a dense delta on head.* would land here.
+            if needs.w.contains(&i) {
+                grads
+                    .base
+                    .insert(i, weight_grad(&tape.head_in, &tape.dlogits, head_rows, d_in, classes));
+            }
+        }
+        let mut dhead_in =
+            par::matmul_f32(&tape.dlogits, &transpose(head_w, d_in, classes), head_rows, classes, d_in);
+        if let (Loc::Base(i), false) = (self.head_b, needs.head) {
+            if needs.b.contains(&i) {
+                grads.base.insert(i, colsum(&tape.dlogits, head_rows, classes));
+            }
+        }
+
+        if let Some(idx) = &self.mlp {
+            return self.backward_mlp(idx, w, adapt, tape, needs, grads, dhead_in);
+        }
+
+        // --- transformer trunk -------------------------------------------
+        let (t, d) = (m.tokens(), m.d);
+        let rows = tape.rows;
+        // un-pool (ce/mse) or pass through (lm)
+        let mut dh: Vec<f32> = if tape.pooled.is_some() {
+            let mut v = vec![0.0f32; rows * d];
+            for r in 0..rows {
+                let src = &dhead_in[(r / t) * d..(r / t + 1) * d];
+                let dst = &mut v[r * d..(r + 1) * d];
+                for j in 0..d {
+                    dst[j] = src[j] / t as f32;
+                }
+            }
+            v
+        } else {
+            std::mem::take(&mut dhead_in)
+        };
+
+        for (blk, bt) in self.blocks.iter().zip(&tape.blocks).rev() {
+            // Houlsby adapter: h = h_out + relu(h_out·D)·U
+            let dh_out: Vec<f32> = if let Some((di, ui)) = blk.adpt {
+                let dmat = adapt[di].as_f32()?;
+                let umat = adapt[ui].as_f32()?;
+                let mw = adapt[di].shape[1];
+                let (z, a3) = (
+                    bt.z.as_ref().expect("adapter tape missing z"),
+                    bt.a3.as_ref().expect("adapter tape missing a3"),
+                );
+                let du = weight_grad(a3, &dh, rows, mw, d);
+                let da3 = par::matmul_f32(&dh, &transpose(umat, mw, d), rows, d, mw);
+                let dz = relu_bwd(&da3, z);
+                let dd = weight_grad(&bt.h_out, &dz, rows, d, mw);
+                let mut out = dh.clone();
+                add_into(&mut out, &par::matmul_f32(&dz, &transpose(dmat, d, mw), rows, mw, d));
+                grads.adapt.insert(di, dd);
+                grads.adapt.insert(ui, du);
+                out
+            } else {
+                dh
+            };
+            // v sub-block
+            let duv = relu_bwd(&dh_out, &bt.uv);
+            if needs.w.contains(&blk.wv) {
+                grads.base.insert(blk.wv, weight_grad(&bt.h_mid, &duv, rows, d, d));
+            }
+            if needs.b.contains(&blk.bv) {
+                grads.base.insert(blk.bv, colsum(&duv, rows, d));
+            }
+            let mut dh_mid = dh_out;
+            add_into(&mut dh_mid, &par::matmul_f32(&duv, &transpose(w.get(blk.wv)?, d, d), rows, d, d));
+            // q sub-block
+            let duq = relu_bwd(&dh_mid, &bt.uq);
+            if needs.w.contains(&blk.wq) {
+                grads.base.insert(blk.wq, weight_grad(&bt.h_in, &duq, rows, d, d));
+            }
+            if needs.b.contains(&blk.bq) {
+                grads.base.insert(blk.bq, colsum(&duq, rows, d));
+            }
+            let mut dh_in = dh_mid;
+            add_into(&mut dh_in, &par::matmul_f32(&duq, &transpose(w.get(blk.wq)?, d, d), rows, d, d));
+            dh = dh_in;
+        }
+        // back through the cross-token mixing (exact transpose)
+        dh = mix_bwd(self.mix, &dh, rows / t, t, d);
+
+        // --- embedding grads (ff only) -----------------------------------
+        match self.embed.as_ref().expect("transformer net has an embedding") {
+            Embed::Tokens { tok, pos } => {
+                if needs.w.contains(tok) {
+                    let toks = tape.toks.as_ref().expect("token tape missing");
+                    let mut dte = vec![0.0f32; m.vocab * d];
+                    for r in 0..rows {
+                        let dst = &mut dte[toks[r] * d..(toks[r] + 1) * d];
+                        add_into(dst, &dh[r * d..(r + 1) * d]);
+                    }
+                    grads.base.insert(*tok, dte);
+                }
+                if needs.w.contains(pos) {
+                    let mut dpe = vec![0.0f32; t * d];
+                    for r in 0..rows {
+                        let dst = &mut dpe[(r % t) * d..(r % t + 1) * d];
+                        add_into(dst, &dh[r * d..(r + 1) * d]);
+                    }
+                    grads.base.insert(*pos, dpe);
+                }
+            }
+            Embed::Patch { emb, pos } => {
+                if needs.w.contains(emb) {
+                    let p = tape.patch.as_ref().expect("patch tape missing");
+                    let ppc = m.patch * m.patch * m.channels;
+                    grads.base.insert(*emb, weight_grad(p, &dh, rows, ppc, d));
+                }
+                if needs.w.contains(pos) {
+                    let mut dpe = vec![0.0f32; t * d];
+                    for r in 0..rows {
+                        let dst = &mut dpe[(r % t) * d..(r % t + 1) * d];
+                        add_into(dst, &dh[r * d..(r + 1) * d]);
+                    }
+                    grads.base.insert(*pos, dpe);
+                }
+            }
+        }
+        Ok(grads)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn backward_mlp(
+        &self,
+        idx: &MlpIdx,
+        w: &Weights,
+        adapt: &[Tensor],
+        tape: &Tape,
+        needs: &Needs,
+        mut grads: Grads,
+        dhead_in: Vec<f32>,
+    ) -> Result<Grads> {
+        let m = self.model;
+        let b = tape.rows;
+        let in_dim = if m.kind == "mlp" { 2 } else { m.pix() };
+        let h = m.hidden;
+        let (x, u1, a1, u2, a2) = (
+            tape.x.as_ref().expect("mlp tape missing x"),
+            tape.u1.as_ref().expect("mlp tape missing u1"),
+            tape.a1.as_ref().expect("mlp tape missing a1"),
+            tape.u2.as_ref().expect("mlp tape missing u2"),
+            tape.a2.as_ref().expect("mlp tape missing a2"),
+        );
+        // adapter after the hidden layer
+        let da2: Vec<f32> = if let Some((di, ui)) = idx.adpt {
+            let dmat = adapt[di].as_f32()?;
+            let umat = adapt[ui].as_f32()?;
+            let mw = adapt[di].shape[1];
+            let (z, a3) = (
+                tape.z.as_ref().expect("adapter tape missing z"),
+                tape.a3.as_ref().expect("adapter tape missing a3"),
+            );
+            let du = weight_grad(a3, &dhead_in, b, mw, h);
+            let da3 = par::matmul_f32(&dhead_in, &transpose(umat, mw, h), b, h, mw);
+            let dz = relu_bwd(&da3, z);
+            let dd = weight_grad(a2, &dz, b, h, mw);
+            let mut out = dhead_in.clone();
+            add_into(&mut out, &par::matmul_f32(&dz, &transpose(dmat, h, mw), b, mw, h));
+            grads.adapt.insert(di, dd);
+            grads.adapt.insert(ui, du);
+            out
+        } else {
+            dhead_in
+        };
+        let du2 = relu_bwd(&da2, u2);
+        if needs.w.contains(&idx.hid_w) {
+            grads.base.insert(idx.hid_w, weight_grad(a1, &du2, b, h, h));
+        }
+        if needs.b.contains(&idx.hid_b) {
+            grads.base.insert(idx.hid_b, colsum(&du2, b, h));
+        }
+        let da1 = par::matmul_f32(&du2, &transpose(w.get(idx.hid_w)?, h, h), b, h, h);
+        let du1 = relu_bwd(&da1, u1);
+        if needs.w.contains(&idx.in_w) {
+            grads.base.insert(idx.in_w, weight_grad(x, &du1, b, in_dim, h));
+        }
+        if needs.b.contains(&idx.in_b) {
+            grads.base.insert(idx.in_b, colsum(&du1, b, h));
+        }
+        Ok(grads)
+    }
+}
+
+/// Seeded init of one adapt tensor (trainable method/head tensors).
+/// Keyed by (artifact, tensor name) so re-runs are bitwise identical and
+/// init order never matters.
+pub fn init_adapt_tensor(
+    meta_name: &str,
+    tm: &crate::runtime::artifact::TensorMeta,
+    seed: i64,
+    statics_entries: Option<&Tensor>,
+) -> Result<Tensor> {
+    let mut rng = crate::tensor::rng::Rng::new(
+        (seed as u64) ^ 0xADA7_0001 ^ zoo::fnv64(meta_name) ^ zoo::fnv64(&tm.name),
+    );
+    let name = tm.name.as_str();
+    // Frozen integer DCT locations: copied from the shared entry matrix.
+    if tm.dtype == "i32" {
+        let e = statics_entries
+            .ok_or_else(|| anyhow!("adapt tensor '{name}' needs the 'entries' static"))?;
+        anyhow::ensure!(
+            e.shape == tm.shape,
+            "entries shape {:?} vs adapt '{name}' shape {:?}",
+            e.shape,
+            tm.shape
+        );
+        return Ok(e.clone());
+    }
+    let t = if name == "head.w" {
+        Tensor::f32(&tm.shape, rng.normal_vec(tm.numel(), (2.0 / tm.shape[0] as f32).sqrt()))
+    } else if name.starts_with("lora.") && name.ends_with(".a") {
+        // Kaiming-style A, zero B: ΔW starts at 0 (LoRA's init recipe).
+        Tensor::f32(&tm.shape, rng.normal_vec(tm.numel(), (1.0 / tm.shape[1] as f32).sqrt()))
+    } else if name.starts_with("adpt.") && name.ends_with(".d") {
+        Tensor::f32(&tm.shape, rng.normal_vec(tm.numel(), (2.0 / tm.shape[0] as f32).sqrt()))
+    } else if name.starts_with("circ.") && name.ends_with(".g") {
+        // Unit gains with zero circulant column: ΔW = 0 but ∂L/∂c ≠ 0.
+        Tensor::f32(&tm.shape, vec![1.0; tm.numel()])
+    } else {
+        // Spectral coefficients, dense/bias deltas, lora B, adapter U,
+        // head bias: zero — every method starts at ΔW = 0.
+        Tensor::zeros(&tm.shape)
+    };
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_ce_gradient_sums_to_zero_per_row() {
+        let logits = vec![0.3, -0.2, 1.1, 0.0, 0.5, -0.5];
+        let (loss, dl) = softmax_ce(&logits, 2, 3, &[2, 0], None).unwrap();
+        assert!(loss > 0.0);
+        for r in 0..2 {
+            let s: f32 = dl[r * 3..(r + 1) * 3].iter().sum();
+            assert!(s.abs() < 1e-6, "row {r} grad sum {s}");
+        }
+    }
+
+    #[test]
+    fn softmax_ce_masked_rows_contribute_nothing() {
+        let logits = vec![0.3, -0.2, 9.9, 9.9, 0.5, -0.5];
+        let (_, dl) = softmax_ce(&logits, 3, 2, &[1, 0, 0], Some(&[1.0, 0.0, 1.0])).unwrap();
+        assert!(dl[2] == 0.0 && dl[3] == 0.0, "masked row must have zero grad");
+        let (l_all_masked, dl0) = softmax_ce(&logits, 3, 2, &[1, 0, 0], Some(&[0.0; 3])).unwrap();
+        assert_eq!(l_all_masked, 0.0);
+        assert!(dl0.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn mse_matches_manual() {
+        let (l, dl) = mse(&[1.0, 3.0], &[0.0, 1.0]);
+        assert!((l - (1.0 + 4.0) / 2.0).abs() < 1e-6);
+        assert!((dl[0] - 1.0).abs() < 1e-6 && (dl[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mix_backward_is_exact_transpose() {
+        // ⟨A·x, y⟩ = ⟨x, Aᵀ·y⟩ for the linear mixing map A = I + M.
+        let (b, t, d) = (2usize, 5usize, 3usize);
+        let mut rng = crate::tensor::rng::Rng::new(21);
+        for mix in [Mix::Full, Mix::Causal, Mix::None] {
+            let x = rng.normal_vec(b * t * d, 1.0);
+            let y = rng.normal_vec(b * t * d, 1.0);
+            let lhs: f64 = mix_fwd(mix, &x, b, t, d)
+                .iter()
+                .zip(&y)
+                .map(|(&a, &v)| a as f64 * v as f64)
+                .sum();
+            let rhs: f64 = x
+                .iter()
+                .zip(&mix_bwd(mix, &y, b, t, d))
+                .map(|(&a, &v)| a as f64 * v as f64)
+                .sum();
+            assert!((lhs - rhs).abs() < 1e-3, "{mix:?}: <Ax,y>={lhs} vs <x,Aᵀy>={rhs}");
+        }
+    }
+
+    #[test]
+    fn causal_mix_never_looks_ahead() {
+        // Perturbing the last token must leave earlier positions bitwise
+        // unchanged — the property greedy decoding relies on.
+        let (b, t, d) = (1usize, 4usize, 2usize);
+        let x0 = vec![0.5f32; b * t * d];
+        let mut x = x0.clone();
+        let base = mix_fwd(Mix::Causal, &x, b, t, d);
+        x[(t - 1) * d] += 1.0;
+        let bumped = mix_fwd(Mix::Causal, &x, b, t, d);
+        for i in 0..(t - 1) * d {
+            assert_eq!(base[i].to_bits(), bumped[i].to_bits(), "position {i} saw the future");
+        }
+        // ...and the full mix does mix: position 0 must change.
+        let full_base = mix_fwd(Mix::Full, &x0, b, t, d);
+        let full_bumped = mix_fwd(Mix::Full, &x, b, t, d);
+        assert_ne!(full_base[0].to_bits(), full_bumped[0].to_bits());
+    }
+
+    #[test]
+    fn transpose_and_weight_grad_shapes() {
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let t = transpose(&x, 2, 3);
+        assert_eq!(t, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        let dy = vec![1.0, 0.0, 0.0, 1.0]; // 2x2
+        let dw = weight_grad(&x, &dy, 2, 3, 2);
+        // dW = Xᵀ·dY: [[1,4],[2,5],[3,6]]
+        assert_eq!(dw, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+    }
+}

@@ -1,0 +1,602 @@
+//! Host-engine model zoo: the Rust mirror of `python/compile/configs.py`.
+//!
+//! The XLA path learns its tensor-level ABI from `artifacts/*.meta.json`;
+//! the host engine has no artifacts, so this module *synthesizes* the
+//! same [`ArtifactMeta`] from an artifact name
+//! (`"<model>__<method_tag>__<loss>"`, e.g. `enc_base__fourierft_n64__ce`)
+//! and the static model table below. Everything downstream — statics
+//! sampling, site-dims maps, adapter publishing, budget tables — consumes
+//! the meta exactly as if an artifact registry had produced it.
+//!
+//! Base (backbone) tensors are initialized per *name* with a seeded,
+//! order-independent PRNG stream, so the backbone init is identical
+//! across every artifact of a model — the property the cached
+//! `runs/bases/*.base` checkpoints rely on.
+
+use crate::adapter::method;
+use crate::runtime::artifact::{ArtifactMeta, MethodMeta, ModelMeta, TensorMeta};
+use crate::tensor::{rng::Rng, Tensor};
+use anyhow::{anyhow, bail, Result};
+
+/// Architecture of one sim model (mirrors `configs.ModelCfg`).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelCfg {
+    pub name: &'static str,
+    pub kind: &'static str, // mlp | encoder | decoder | vit | denoiser
+    pub d: usize,
+    pub layers: usize,
+    pub vocab: usize,
+    pub seqlen: usize,
+    pub classes: usize,
+    pub img: usize,
+    pub patch: usize,
+    pub channels: usize,
+    pub hidden: usize,
+    pub batch: usize,
+}
+
+impl ModelCfg {
+    /// Sequence length seen by the transformer blocks.
+    pub fn tokens(&self) -> usize {
+        if self.kind == "vit" {
+            (self.img / self.patch) * (self.img / self.patch)
+        } else {
+            self.seqlen
+        }
+    }
+
+    /// Flattened pixels per image (denoiser input/output width).
+    pub fn pix(&self) -> usize {
+        self.img * self.img * self.channels
+    }
+
+    /// Width of the representation the task head consumes.
+    pub fn head_in(&self) -> usize {
+        match self.kind {
+            "mlp" | "denoiser" => self.hidden,
+            _ => self.d,
+        }
+    }
+
+    fn is_transformer(&self) -> bool {
+        matches!(self.kind, "encoder" | "decoder" | "vit")
+    }
+}
+
+const DEF: ModelCfg = ModelCfg {
+    name: "",
+    kind: "",
+    d: 128,
+    layers: 4,
+    vocab: 1000,
+    seqlen: 32,
+    classes: 4,
+    img: 32,
+    patch: 4,
+    channels: 3,
+    hidden: 64,
+    batch: 32,
+};
+
+/// The sim model zoo (same names/dims as `configs.py`).
+pub const MODELS: &[ModelCfg] = &[
+    ModelCfg { name: "mlp", kind: "mlp", hidden: 64, classes: 8, batch: 64, ..DEF },
+    ModelCfg { name: "enc_base", kind: "encoder", d: 128, layers: 4, classes: 3, ..DEF },
+    ModelCfg { name: "enc_large", kind: "encoder", d: 192, layers: 6, classes: 3, ..DEF },
+    ModelCfg { name: "dec_med", kind: "decoder", d: 128, layers: 4, seqlen: 48, ..DEF },
+    ModelCfg { name: "dec_large", kind: "decoder", d: 192, layers: 6, seqlen: 48, ..DEF },
+    ModelCfg { name: "denoiser", kind: "denoiser", hidden: 256, img: 16, ..DEF },
+    ModelCfg { name: "vit_base", kind: "vit", d: 128, layers: 4, classes: 200, ..DEF },
+    ModelCfg { name: "vit_large", kind: "vit", d: 192, layers: 6, classes: 200, ..DEF },
+];
+
+pub fn model(name: &str) -> Result<&'static ModelCfg> {
+    MODELS
+        .iter()
+        .find(|m| m.name == name)
+        .ok_or_else(|| anyhow!("unknown host model '{name}' (known: mlp, enc_base, enc_large, dec_med, dec_large, denoiser, vit_base, vit_large)"))
+}
+
+/// One parsed PEFT method tag (mirrors `configs.MethodCfg`).
+#[derive(Debug, Clone)]
+pub struct MethodSpec {
+    /// Base method name: ff | lp | bitfit | adapter | lora | fourierft |
+    /// loca | circulant.
+    pub name: String,
+    pub r: usize,
+    pub n: usize,
+    pub m: usize,
+    /// Train the task head (`_fh` tags freeze a random head — the
+    /// Figure 7 expressivity protocol).
+    pub head: bool,
+}
+
+/// Parse a method tag like `fourierft_n64`, `lora_r8_fh`, `adapter_m8`.
+pub fn parse_tag(tag: &str) -> Result<MethodSpec> {
+    let (core, head) = match tag.strip_suffix("_fh") {
+        Some(rest) => (rest, false),
+        None => (tag, true),
+    };
+    let mut spec = MethodSpec { name: core.to_string(), r: 0, n: 0, m: 0, head };
+    let parse_num = |s: &str, what: &str| -> Result<usize> {
+        s.parse().map_err(|_| anyhow!("bad {what} in method tag '{tag}'"))
+    };
+    if let Some(rest) = core.strip_prefix("lora_r") {
+        spec.name = "lora".into();
+        spec.r = parse_num(rest, "rank")?;
+    } else if let Some(rest) = core.strip_prefix("fourierft_n") {
+        spec.name = "fourierft".into();
+        spec.n = parse_num(rest, "n")?;
+    } else if let Some(rest) = core.strip_prefix("loca_n") {
+        spec.name = "loca".into();
+        spec.n = parse_num(rest, "n")?;
+    } else if let Some(rest) = core.strip_prefix("adapter_m") {
+        spec.name = "adapter".into();
+        spec.m = parse_num(rest, "m")?;
+    } else if let Some(rest) = core.strip_prefix("randbasis_n") {
+        spec.name = "randbasis".into();
+        spec.n = parse_num(rest, "n")?;
+    } else if let Some(rest) = core.strip_prefix("orthobasis_n") {
+        spec.name = "orthobasis".into();
+        spec.n = parse_num(rest, "n")?;
+    } else if !matches!(core, "ff" | "lp" | "bitfit" | "circulant") {
+        bail!("unknown method tag '{tag}'");
+    }
+    Ok(spec)
+}
+
+/// One parsed artifact name.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    pub model: &'static ModelCfg,
+    pub method: MethodSpec,
+    pub loss: String,
+}
+
+/// Parse `"<model>__<method_tag>__<loss>"` and reject combinations the
+/// host engine cannot run (the `randbasis`/`orthobasis` Table-6 ablations
+/// are lowered only as XLA artifacts).
+pub fn parse(artifact: &str) -> Result<Parsed> {
+    let parts: Vec<&str> = artifact.split("__").collect();
+    if parts.len() != 3 {
+        bail!("artifact name '{artifact}' is not <model>__<method>__<loss>");
+    }
+    let model = model(parts[0])?;
+    let method = parse_tag(parts[1])?;
+    if matches!(method.name.as_str(), "randbasis" | "orthobasis") {
+        bail!(
+            "method '{}' is an XLA-only ablation (random basis statics); \
+             use --engine xla for artifact '{artifact}'",
+            method.name
+        );
+    }
+    let loss = parts[2].to_string();
+    if !matches!(loss.as_str(), "ce" | "mse" | "lm" | "mlm" | "mseimg") {
+        bail!("unknown loss '{loss}' in artifact '{artifact}'");
+    }
+    match (model.kind, loss.as_str()) {
+        ("mlp", "ce")
+        | ("encoder", "ce" | "mse" | "mlm")
+        | ("decoder", "lm")
+        | ("vit", "ce")
+        | ("denoiser", "mseimg") => {}
+        (kind, l) => bail!("host engine has no {kind} model with loss '{l}'"),
+    }
+    Ok(Parsed { model, method, loss })
+}
+
+/// Backbone tensor schema for one model (name order is the `.base`
+/// checkpoint order).
+pub fn base_schema(m: &ModelCfg) -> Vec<TensorMeta> {
+    let t = |name: String, shape: Vec<usize>| TensorMeta {
+        name,
+        role: "base".into(),
+        dtype: "f32".into(),
+        shape,
+    };
+    let mut out = Vec::new();
+    match m.kind {
+        "mlp" => {
+            out.push(t("in.w".into(), vec![2, m.hidden]));
+            out.push(t("in.b".into(), vec![m.hidden]));
+            out.push(t("hid.w".into(), vec![m.hidden, m.hidden]));
+            out.push(t("hid.b".into(), vec![m.hidden]));
+        }
+        "denoiser" => {
+            out.push(t("in.w".into(), vec![m.pix(), m.hidden]));
+            out.push(t("in.b".into(), vec![m.hidden]));
+            out.push(t("hid.w".into(), vec![m.hidden, m.hidden]));
+            out.push(t("hid.b".into(), vec![m.hidden]));
+        }
+        "encoder" | "decoder" => {
+            out.push(t("tok_emb".into(), vec![m.vocab, m.d]));
+            out.push(t("pos_emb".into(), vec![m.seqlen, m.d]));
+            push_blocks(&mut out, m);
+        }
+        "vit" => {
+            out.push(t("patch_emb".into(), vec![m.patch * m.patch * m.channels, m.d]));
+            out.push(t("pos_emb".into(), vec![m.tokens(), m.d]));
+            push_blocks(&mut out, m);
+        }
+        other => unreachable!("unknown model kind {other}"),
+    }
+    out
+}
+
+fn push_blocks(out: &mut Vec<TensorMeta>, m: &ModelCfg) {
+    for i in 0..m.layers {
+        for (suffix, shape) in [
+            ("wq", vec![m.d, m.d]),
+            ("bq", vec![m.d]),
+            ("wv", vec![m.d, m.d]),
+            ("bv", vec![m.d]),
+        ] {
+            out.push(TensorMeta {
+                name: format!("blk{i}.{suffix}"),
+                role: "base".into(),
+                dtype: "f32".into(),
+                shape,
+            });
+        }
+    }
+}
+
+/// Task-head (w, b) shapes for (model, loss).
+pub fn head_shapes(m: &ModelCfg, loss: &str) -> (Vec<usize>, Vec<usize>) {
+    let d_in = m.head_in();
+    let out = match loss {
+        "ce" => m.classes,
+        "mse" => 1,
+        "lm" | "mlm" => m.vocab,
+        "mseimg" => m.pix(),
+        other => unreachable!("unknown loss {other}"),
+    };
+    (vec![d_in, out], vec![out])
+}
+
+/// The 2-D weight sites ΔW methods adapt (paper: the q/v projections; the
+/// single hidden layer for mlp/denoiser).
+pub fn adapted_sites(m: &ModelCfg) -> Vec<String> {
+    if m.is_transformer() {
+        (0..m.layers)
+            .flat_map(|i| [format!("blk{i}.wq"), format!("blk{i}.wv")])
+            .collect()
+    } else {
+        vec!["hid.w".to_string()]
+    }
+}
+
+/// The bias sites `bitfit` adapts.
+pub fn bias_sites(m: &ModelCfg) -> Vec<String> {
+    if m.is_transformer() {
+        (0..m.layers)
+            .flat_map(|i| [format!("blk{i}.bq"), format!("blk{i}.bv")])
+            .collect()
+    } else {
+        vec!["hid.b".to_string()]
+    }
+}
+
+/// Houlsby-adapter insertion points (one bottleneck per block / after the
+/// hidden layer), named by prefix: `adpt.<site>.{d,u}`.
+pub fn adapter_sites(m: &ModelCfg) -> Vec<String> {
+    if m.is_transformer() {
+        (0..m.layers).map(|i| format!("blk{i}")).collect()
+    } else {
+        vec!["hid".to_string()]
+    }
+}
+
+/// The batch tensors (name, dtype, shape) for (model, loss).
+fn batch_schema(m: &ModelCfg, loss: &str) -> Vec<TensorMeta> {
+    let t = |name: &str, dtype: &str, shape: Vec<usize>| TensorMeta {
+        name: name.into(),
+        role: "batch".into(),
+        dtype: dtype.into(),
+        shape,
+    };
+    let b = m.batch;
+    match (m.kind, loss) {
+        ("mlp", _) => vec![t("x", "f32", vec![b, 2]), t("y", "i32", vec![b])],
+        ("denoiser", _) => {
+            vec![t("x", "f32", vec![b, m.pix()]), t("y", "f32", vec![b, m.pix()])]
+        }
+        ("vit", _) => {
+            vec![t("x", "f32", vec![b, m.img, m.img, 3]), t("y", "i32", vec![b])]
+        }
+        (_, "mse") => vec![t("x", "i32", vec![b, m.seqlen]), t("y", "f32", vec![b])],
+        (_, "ce") => vec![t("x", "i32", vec![b, m.seqlen]), t("y", "i32", vec![b])],
+        (_, "lm" | "mlm") => vec![
+            t("x", "i32", vec![b, m.seqlen]),
+            t("y", "i32", vec![b, m.seqlen]),
+            t("mask", "f32", vec![b, m.seqlen]),
+        ],
+        (kind, l) => unreachable!("no batch schema for {kind}/{l}"),
+    }
+}
+
+/// Logits output shape for (model, loss).
+fn logits_shape(m: &ModelCfg, loss: &str) -> Vec<usize> {
+    match loss {
+        "ce" => vec![m.batch, m.classes],
+        "mse" => vec![m.batch, 1],
+        "lm" | "mlm" => vec![m.batch, m.seqlen, m.vocab],
+        "mseimg" => vec![m.batch, m.pix()],
+        other => unreachable!("unknown loss {other}"),
+    }
+}
+
+/// Adapt-tensor schema for (model, method, loss): the method's per-site
+/// tensors (named via the registry's legacy naming so saved adapters
+/// classify on publish), plus the task head when it is trained.
+pub fn adapt_schema(p: &Parsed) -> Result<Vec<TensorMeta>> {
+    let m = p.model;
+    let t = |name: String, dtype: &str, shape: Vec<usize>| TensorMeta {
+        name,
+        role: "adapt".into(),
+        dtype: dtype.into(),
+        shape,
+    };
+    let mut out = Vec::new();
+    match p.method.name.as_str() {
+        "fourierft" => {
+            let reg = method::get("fourierft")?;
+            for site in adapted_sites(m) {
+                out.push(t(reg.tensor_name(&site, "coef"), "f32", vec![p.method.n]));
+            }
+        }
+        "loca" => {
+            let reg = method::get("loca")?;
+            for site in adapted_sites(m) {
+                out.push(t(reg.tensor_name(&site, "coef"), "f32", vec![p.method.n]));
+                out.push(t(reg.tensor_name(&site, "locs"), "i32", vec![2, p.method.n]));
+            }
+        }
+        "lora" => {
+            let reg = method::get("lora")?;
+            let (d1, d2) = site_dims_of(m);
+            for site in adapted_sites(m) {
+                out.push(t(reg.tensor_name(&site, "a"), "f32", vec![p.method.r, d2]));
+                out.push(t(reg.tensor_name(&site, "b"), "f32", vec![d1, p.method.r]));
+            }
+        }
+        "circulant" => {
+            let reg = method::get("circulant")?;
+            let (d1, _) = site_dims_of(m);
+            for site in adapted_sites(m) {
+                out.push(t(reg.tensor_name(&site, "circ"), "f32", vec![d1]));
+                out.push(t(reg.tensor_name(&site, "diag"), "f32", vec![d1]));
+            }
+        }
+        "bitfit" => {
+            let reg = method::get("bitfit")?;
+            let width = site_width(m);
+            for site in bias_sites(m) {
+                out.push(t(reg.tensor_name(&site, "delta"), "f32", vec![width]));
+            }
+        }
+        "ff" => {
+            let reg = method::get("dense")?;
+            for bt in base_schema(m) {
+                out.push(t(reg.tensor_name(&bt.name, "delta"), "f32", bt.shape));
+            }
+        }
+        "adapter" => {
+            let w = m.head_in();
+            for site in adapter_sites(m) {
+                out.push(t(format!("adpt.{site}.d"), "f32", vec![w, p.method.m]));
+                out.push(t(format!("adpt.{site}.u"), "f32", vec![p.method.m, w]));
+            }
+        }
+        "lp" => {}
+        other => bail!("host engine cannot train method '{other}'"),
+    }
+    if p.method.head {
+        let (hw, hb) = head_shapes(m, &p.loss);
+        out.push(t("head.w".into(), "f32", hw));
+        out.push(t("head.b".into(), "f32", hb));
+    }
+    Ok(out)
+}
+
+/// (d1, d2) of the adapted weight sites (square within every zoo model).
+fn site_dims_of(m: &ModelCfg) -> (usize, usize) {
+    let w = site_width(m);
+    (w, w)
+}
+
+fn site_width(m: &ModelCfg) -> usize {
+    if m.is_transformer() {
+        m.d
+    } else {
+        m.hidden
+    }
+}
+
+/// Synthesize the full [`ArtifactMeta`] for an artifact name.
+pub fn artifact_meta(artifact: &str) -> Result<ArtifactMeta> {
+    let p = parse(artifact)?;
+    let m = p.model;
+    let mut inputs = base_schema(m);
+    // A frozen head (lp never freezes; `_fh` tags do) lives with the base
+    // tensors: present in the forward pass, untouched by the optimizer.
+    if !p.method.head {
+        let (hw, hb) = head_shapes(m, &p.loss);
+        inputs.push(TensorMeta { name: "head.w".into(), role: "base".into(), dtype: "f32".into(), shape: hw });
+        inputs.push(TensorMeta { name: "head.b".into(), role: "base".into(), dtype: "f32".into(), shape: hb });
+    }
+    let adapt = adapt_schema(&p)?;
+    let trainable: usize =
+        adapt.iter().filter(|t| t.dtype == "f32").map(|t| t.numel()).sum();
+    let trainable_ex_head: usize = adapt
+        .iter()
+        .filter(|t| t.dtype == "f32" && !t.name.starts_with("head."))
+        .map(|t| t.numel())
+        .sum();
+    inputs.extend(adapt);
+    if matches!(p.method.name.as_str(), "fourierft" | "loca") {
+        inputs.push(TensorMeta {
+            name: "entries".into(),
+            role: "static".into(),
+            dtype: "i32".into(),
+            shape: vec![2, p.method.n],
+        });
+    }
+    for s in ["step", "lr", "lr_head", "wd", "scaling"] {
+        inputs.push(TensorMeta { name: s.into(), role: "scalar".into(), dtype: "f32".into(), shape: vec![] });
+    }
+    inputs.extend(batch_schema(m, &p.loss));
+
+    let outputs = vec![
+        TensorMeta { name: "loss".into(), role: "loss".into(), dtype: "f32".into(), shape: vec![] },
+        TensorMeta {
+            name: "logits".into(),
+            role: "logits".into(),
+            dtype: "f32".into(),
+            shape: logits_shape(m, &p.loss),
+        },
+    ];
+
+    Ok(ArtifactMeta {
+        name: artifact.to_string(),
+        loss: p.loss.clone(),
+        model: ModelMeta {
+            name: m.name.into(),
+            kind: m.kind.into(),
+            d: m.d,
+            layers: m.layers,
+            vocab: m.vocab,
+            seqlen: m.seqlen,
+            classes: m.classes,
+            batch: m.batch,
+            img: m.img,
+            patch: m.patch,
+            channels: m.channels,
+            hidden: m.hidden,
+        },
+        method: MethodMeta { name: p.method.name.clone(), r: p.method.r, n: p.method.n, m: p.method.m },
+        inputs,
+        outputs,
+        step_hlo: String::new(),
+        init_hlo: String::new(),
+        trainable,
+        trainable_ex_head,
+    })
+}
+
+/// FNV-1a, for name-stable per-tensor init streams (the crate-wide name
+/// hash, re-exported here because every host init call site keys on it).
+pub use crate::util::fnv64;
+
+/// Seeded init of one base tensor, keyed by (model, tensor name) so the
+/// stream is order-independent: every artifact of a model sees the same
+/// backbone init, and frozen `_fh` heads are reproducible.
+pub fn init_base_tensor(m: &ModelCfg, tm: &TensorMeta, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed ^ 0xBA5E_0001 ^ fnv64(m.name) ^ fnv64(&tm.name));
+    let numel = tm.numel();
+    // Biases start at zero.
+    if tm.shape.len() == 1 && (tm.name.ends_with(".b") || tm.name.starts_with("blk")) {
+        return Tensor::zeros(&tm.shape);
+    }
+    let std = match tm.name.as_str() {
+        "tok_emb" => 0.5,
+        "pos_emb" => 0.1,
+        // Residual-branch weights scaled 1/sqrt(2L) (GPT-2 trick) so the
+        // un-normalized trunk keeps activation variance bounded in depth.
+        n if n.starts_with("blk") => {
+            (2.0 / m.d as f32).sqrt() / (2.0 * m.layers as f32).sqrt()
+        }
+        // He init for plain fan-in layers (in.w, patch_emb, hid.w, head.w).
+        _ => (2.0 / tm.shape[0] as f32).sqrt(),
+    };
+    Tensor::f32(&tm.shape, rng.normal_vec(numel, std))
+}
+
+/// Fresh seeded base tensors for every `role = "base"` input of `meta`
+/// (backbone + any frozen head), in meta order.
+pub fn init_base_for(meta: &ArtifactMeta, seed: u64) -> Result<Vec<Tensor>> {
+    let m = model(&meta.model.name)?;
+    Ok(meta.inputs_with_role("base").iter().map(|tm| init_base_tensor(m, tm, seed)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_known_artifacts() {
+        for name in [
+            "mlp__fourierft_n128__ce",
+            "mlp__fourierft_n128_fh__ce",
+            "enc_base__lora_r8__ce",
+            "enc_base__ff__mlm",
+            "enc_base__bitfit__ce",
+            "enc_base__adapter_m8__ce",
+            "enc_base__loca_n64__ce",
+            "enc_base__circulant__ce",
+            "dec_med__fourierft_n64__lm",
+            "vit_base__lp__ce",
+            "denoiser__ff__mseimg",
+        ] {
+            let meta = artifact_meta(name).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert_eq!(meta.name, name);
+            assert!(meta.logits_shape().is_ok(), "{name} has no logits");
+        }
+    }
+
+    #[test]
+    fn rejects_xla_only_and_malformed() {
+        assert!(artifact_meta("enc_base__randbasis_n64__ce").is_err());
+        assert!(artifact_meta("enc_base__orthobasis_n64__ce").is_err());
+        assert!(artifact_meta("nope__ff__ce").is_err());
+        assert!(artifact_meta("enc_base__ff").is_err());
+        assert!(artifact_meta("enc_base__ff__nolos").is_err());
+        assert!(artifact_meta("mlp__ff__lm").is_err());
+    }
+
+    #[test]
+    fn fh_moves_head_to_base() {
+        let with = artifact_meta("mlp__fourierft_n128__ce").unwrap();
+        let frozen = artifact_meta("mlp__fourierft_n128_fh__ce").unwrap();
+        assert!(with.inputs_with_role("adapt").iter().any(|t| t.name == "head.w"));
+        assert!(frozen.inputs_with_role("base").iter().any(|t| t.name == "head.w"));
+        assert!(!frozen.inputs_with_role("adapt").iter().any(|t| t.name == "head.w"));
+        // param parity with the Figure 7 protocol: n=128 at the single
+        // adapted site, nothing else trainable when the head is frozen.
+        assert_eq!(frozen.trainable, 128);
+        assert_eq!(frozen.trainable_ex_head, 128);
+    }
+
+    #[test]
+    fn loca_locations_are_not_counted_trainable() {
+        let meta = artifact_meta("enc_base__loca_n64__ce").unwrap();
+        // 8 sites x 64 coefficients + head (128*3 + 3); the i32 location
+        // matrices are excluded.
+        let head = 128 * 3 + 3;
+        assert_eq!(meta.trainable, 8 * 64 + head);
+        assert_eq!(meta.trainable_ex_head, 8 * 64);
+    }
+
+    #[test]
+    fn base_init_is_name_stable_and_seeded() {
+        let m = model("enc_base").unwrap();
+        let schema = base_schema(m);
+        let a = init_base_tensor(m, &schema[0], 0);
+        let b = init_base_tensor(m, &schema[0], 0);
+        assert_eq!(a, b);
+        let c = init_base_tensor(m, &schema[0], 1);
+        assert_ne!(a, c);
+        // biases are zero
+        let bias = schema.iter().find(|t| t.name == "blk0.bq").unwrap();
+        assert!(init_base_tensor(m, bias, 0).as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn meta_site_dims_cover_adapted_sites() {
+        let meta = artifact_meta("enc_base__fourierft_n64__ce").unwrap();
+        let dims = meta.site_dims();
+        for site in adapted_sites(model("enc_base").unwrap()) {
+            assert_eq!(dims.get(&site), Some(&(128, 128)), "{site}");
+        }
+    }
+}

@@ -1,7 +1,8 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//! Runtime backends behind the [`StepEngine`] trait ([`engine`]):
+//! the pure-host training engine ([`host`]) and the PJRT/XLA path below.
 //!
-//! This is the only module that touches the `xla` crate. The flow (see
-//! /opt/xla-example/load_hlo) is:
+//! The XLA side is the only code that touches the `xla` crate. The flow
+//! (see /opt/xla-example/load_hlo) is:
 //!
 //!   HLO text --HloModuleProto::from_text_file--> XlaComputation
 //!            --PjRtClient::cpu().compile--> PjRtLoadedExecutable
@@ -15,7 +16,9 @@
 //! `make artifacts` and the binary is self-contained afterwards.
 
 pub mod artifact;
+pub mod engine;
 pub mod exec;
+pub mod host;
 #[cfg(not(feature = "xla-runtime"))]
 pub mod xla_compat;
 
@@ -29,7 +32,9 @@ pub use ::xla;
 pub use xla_compat as xla;
 
 pub use artifact::{ArtifactMeta, Registry, TensorMeta};
-pub use exec::{Executable, ParamSet};
+pub use engine::{EngineKind, ParamSet, StepEngine, StepOut, StepScalars};
+pub use exec::{Executable, XlaEngine};
+pub use host::HostEngine;
 
 use crate::tensor::{Data, Tensor};
 use anyhow::Result;

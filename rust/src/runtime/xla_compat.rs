@@ -80,53 +80,91 @@ impl NativeType for i32 {
     }
 }
 
-/// Host literal: a dense tensor with shape metadata. The real `xla::Literal`
-/// has no `Clone`; this one keeps the same API surface the coordinator uses
-/// (construction via `vec1` + `reshape`, extraction via `to_vec`). It *is*
-/// `Clone` (a host-vector copy), which `exec::clone_literal` uses as a fast
-/// path when deep-copying per-worker serve state — callers must still go
-/// through `clone_literal` so the real-runtime build keeps compiling.
+/// Host literal: a dense tensor with shape metadata, or a tuple of
+/// literals. The real `xla::Literal` has no `Clone`; this one keeps the
+/// same API surface the coordinator uses (construction via `vec1` +
+/// `reshape` / [`Literal::tuple`], extraction via `to_vec` /
+/// `to_tuple`). It *is* `Clone` (a host-vector copy), which
+/// `exec::clone_literal` uses as a fast path when deep-copying per-worker
+/// serve state — callers must still go through `clone_literal` so the
+/// real-runtime build keeps compiling.
+///
+/// Tuple support mirrors the real literal's semantics (HLO computations
+/// return their outputs as one tuple), so engine-neutral code can
+/// decompose results without feature-forked error handling.
 #[derive(Debug, Clone)]
 pub struct Literal {
-    tensor: Tensor,
+    repr: Repr,
+}
+
+#[derive(Debug, Clone)]
+enum Repr {
+    Array(Tensor),
+    Tuple(Vec<Literal>),
 }
 
 impl Literal {
     /// Rank-1 literal from a host slice (or anything slice-like).
     pub fn vec1<T: NativeType>(v: impl AsRef<[T]>) -> Literal {
         let v = v.as_ref();
-        Literal { tensor: Tensor { shape: vec![v.len()], data: T::wrap(v.to_vec()) } }
+        Literal {
+            repr: Repr::Array(Tensor { shape: vec![v.len()], data: T::wrap(v.to_vec()) }),
+        }
+    }
+
+    /// Tuple literal from element literals (what executing a fused step
+    /// artifact returns on the real runtime).
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { repr: Repr::Tuple(elements) }
+    }
+
+    fn array(&self, what: &str) -> Result<&Tensor> {
+        match &self.repr {
+            Repr::Array(t) => Ok(t),
+            Repr::Tuple(v) => bail!("{what} on a tuple literal of {} elements", v.len()),
+        }
     }
 
     pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let tensor = self.array("reshape")?;
         let shape: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
         let numel: usize = shape.iter().product();
-        if numel != self.tensor.len() {
-            bail!("reshape {:?} on literal of {} elements", dims, self.tensor.len());
+        if numel != tensor.len() {
+            bail!("reshape {:?} on literal of {} elements", dims, tensor.len());
         }
-        Ok(Literal { tensor: Tensor { shape, data: self.tensor.data.clone() } })
+        Ok(Literal { repr: Repr::Array(Tensor { shape, data: tensor.data.clone() }) })
     }
 
     pub fn array_shape(&self) -> Result<ArrayShape> {
-        let ty = match self.tensor.data {
+        let tensor = self.array("array_shape")?;
+        let ty = match tensor.data {
             Data::F32(_) => ElementType::F32,
             Data::I32(_) => ElementType::S32,
         };
-        Ok(ArrayShape { dims: self.tensor.shape.iter().map(|&d| d as i64).collect(), ty })
+        Ok(ArrayShape { dims: tensor.shape.iter().map(|&d| d as i64).collect(), ty })
     }
 
     pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
-        Ok(T::unwrap(&self.tensor.data)?.to_vec())
+        Ok(T::unwrap(&self.array("to_vec")?.data)?.to_vec())
     }
 
-    /// Decompose a tuple literal. Tuples only arise from executing HLO
-    /// artifacts, which the fallback cannot do.
+    /// Decompose a tuple literal into its elements. Mirrors the real
+    /// runtime: calling it on an array literal is an error, not a
+    /// single-element tuple.
     pub fn to_tuple(self) -> Result<Vec<Literal>> {
-        bail!("tuple literals require the `xla-runtime` feature")
+        match self.repr {
+            Repr::Tuple(v) => Ok(v),
+            Repr::Array(t) => bail!("to_tuple on an array literal of shape {:?}", t.shape),
+        }
     }
 
+    /// Decompose a 1-tuple into its single element.
     pub fn to_tuple1(self) -> Result<Literal> {
-        bail!("tuple literals require the `xla-runtime` feature")
+        let mut v = self.to_tuple()?;
+        if v.len() != 1 {
+            bail!("to_tuple1 on a tuple of {} elements", v.len());
+        }
+        Ok(v.pop().unwrap())
     }
 }
 
@@ -222,6 +260,30 @@ mod tests {
     #[test]
     fn reshape_len_mismatch_errors() {
         assert!(Literal::vec1(&[1i32, 2]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn tuple_literals_compose_and_decompose() {
+        let a = Literal::vec1(&[1.0f32, 2.0]);
+        let b = Literal::vec1(&[7i32]);
+        let tup = Literal::tuple(vec![a, b]);
+        // array ops on a tuple are errors, mirroring the real runtime
+        assert!(tup.array_shape().is_err());
+        assert!(tup.to_vec::<f32>().is_err());
+        let parts = tup.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(parts[1].to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn to_tuple1_unwraps_singletons_only() {
+        let one = Literal::tuple(vec![Literal::vec1(&[3.0f32])]);
+        assert_eq!(one.to_tuple1().unwrap().to_vec::<f32>().unwrap(), vec![3.0]);
+        let two = Literal::tuple(vec![Literal::vec1(&[1i32]), Literal::vec1(&[2i32])]);
+        assert!(two.to_tuple1().is_err());
+        // array literals are not 1-tuples
+        assert!(Literal::vec1(&[1.0f32]).to_tuple().is_err());
     }
 
     #[test]

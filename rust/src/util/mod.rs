@@ -7,6 +7,17 @@ pub mod json;
 
 use std::time::Instant;
 
+/// FNV-1a over a string — the one name-hash shared by the adapter-store
+/// shard router and the host engine's name-stable init streams.
+pub fn fnv64(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// Wall-clock a closure, returning (result, seconds).
 pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
     let t0 = Instant::now();

@@ -8,10 +8,10 @@
 #![cfg(feature = "xla-runtime")]
 
 use fourier_peft::adapter::merge::{delta_device, delta_host};
-use fourier_peft::runtime::xla;
 use fourier_peft::adapter::{AdapterFile, SharedAdapterStore};
 use fourier_peft::coordinator::serving::{Request, Server};
 use fourier_peft::coordinator::trainer::Trainer;
+use fourier_peft::runtime::{EngineKind, StepEngine};
 use fourier_peft::data::collate_text;
 use fourier_peft::data::glue::GlueTask;
 use fourier_peft::fourier::{sample_entries, EntryBias};
@@ -25,7 +25,7 @@ fn tmpdir(tag: &str) -> std::path::PathBuf {
 
 #[test]
 fn host_and_device_delta_reconstruction_agree() {
-    let trainer = Trainer::open_default().unwrap();
+    let trainer = Trainer::open(EngineKind::Xla).unwrap();
     let (d, n) = (128usize, 64usize);
     let seed = 2024u64;
     let (rows, cols) = sample_entries(d, d, n, EntryBias::None, seed);
@@ -35,7 +35,7 @@ fn host_and_device_delta_reconstruction_agree() {
 
     let host = delta_host(&coeffs, seed, n, d, d, alpha).unwrap();
     let device =
-        delta_device(&trainer.client, &trainer.registry, (&rows, &cols), &coeffs, d, alpha)
+        delta_device(&trainer.client, trainer.registry_ref().unwrap(), (&rows, &cols), &coeffs, d, alpha)
             .unwrap();
     let diff = host.max_abs_diff(&device).unwrap();
     assert!(diff < 1e-3, "host vs device ΔW differ by {diff}");
@@ -43,13 +43,13 @@ fn host_and_device_delta_reconstruction_agree() {
 
 #[test]
 fn finetune_publish_reload_serve() {
-    let trainer = Trainer::open_default().unwrap();
+    let trainer = Trainer::open(EngineKind::Xla).unwrap();
     let artifact = "mlp__fourierft_n128__ce";
     let store = SharedAdapterStore::open(&tmpdir("serve")).unwrap();
     let mut server = Server::new(&trainer, artifact, store, 2024, 64.0).unwrap();
 
     // Quick fine-tune on blobs, then publish twice under different names.
-    let exe = trainer.executable(artifact).unwrap();
+    let exe = trainer.engine(artifact).unwrap();
     let cfg = {
         let mut c = fourier_peft::coordinator::trainer::FinetuneCfg::new(artifact);
         c.lr = 0.02;
@@ -68,7 +68,7 @@ fn finetune_publish_reload_serve() {
             None,
         )
         .unwrap();
-    let site_dims = exe.meta.site_dims();
+    let site_dims = exe.meta().site_dims();
     for name in ["blobs_a", "blobs_b"] {
         server
             .store
@@ -121,25 +121,29 @@ fn merged_weights_reproduce_adapter_forward() {
     // Host-side merge W0 + ΔW must equal what the runtime computes with the
     // adapter active: compare logits from (merged base + zero adapter) vs
     // (base + trained adapter). Uses the MLP model for tight tolerances.
-    let trainer = Trainer::open_default().unwrap();
+    let trainer = Trainer::open(EngineKind::Xla).unwrap();
     let artifact = "mlp__fourierft_n128__ce";
-    let exe = trainer.executable(artifact).unwrap();
+    let exe = trainer.engine(artifact).unwrap();
     let seed = 2024u64;
     let (statics, entries) = trainer
-        .make_statics(&exe.meta, seed, EntryBias::None)
+        .make_statics(exe.meta(), seed, EntryBias::None)
         .unwrap();
     let (rows, cols) = entries.unwrap();
 
     // random trained-ish coefficients
     let mut rng = Rng::new(8);
-    let n = exe.meta.method.n;
+    let n = exe.meta().method.n;
     let coeffs = Tensor::f32(&[n], rng.normal_vec(n, 0.5));
     let alpha = 16.0f32;
 
     // Path A: adapter active on the device.
-    let (base_hlo, base_meta) = trainer.registry.base_init("mlp").unwrap();
+    let (base_hlo, base_meta) = trainer.registry_ref().unwrap().base_init("mlp").unwrap();
     let base_lits = fourier_peft::runtime::exec::run_base_init(&trainer.client, &base_hlo, 5).unwrap();
-    let mut state = exe.init_state(0, base_lits, statics.clone()).unwrap();
+    let base: Vec<Tensor> = base_lits
+        .iter()
+        .map(|l| fourier_peft::runtime::from_literal(l).unwrap())
+        .collect();
+    let mut state = exe.init_state(0, base, statics.clone()).unwrap();
     let mut adapt: std::collections::HashMap<String, Tensor> = exe
         .adapt_tensors(&state)
         .unwrap()
@@ -173,11 +177,8 @@ fn merged_weights_reproduce_adapter_forward() {
     assert!(delta.frob_norm() > 1e-3);
     let _ = (&rows, &cols);
 
-    let merged_lits: Vec<xla::Literal> = base_meta
-        .iter()
-        .map(|m| fourier_peft::runtime::to_literal(&base_map[&m.name]).unwrap())
-        .collect();
-    let mut state_b = exe.init_state(0, merged_lits, statics).unwrap();
+    let merged: Vec<Tensor> = base_meta.iter().map(|m| base_map[&m.name].clone()).collect();
+    let mut state_b = exe.init_state(0, merged, statics).unwrap();
     adapt.insert("spec.w2.w.c".into(), Tensor::zeros(&[n]));
     exe.set_adapt(&mut state_b, &adapt).unwrap();
     let out_b = exe.eval(&mut state_b, alpha, &batch).unwrap();

@@ -1,0 +1,72 @@
+//! Engine-id guard on cached pretrained bases.
+//!
+//! Lives in its own test binary because it mutates the process-global
+//! `FOURIER_PEFT_RUNS` environment variable: integration-test binaries
+//! run as separate processes, so the mutation can never race another
+//! test's `runs_dir()` reads (within this binary the two tests are
+//! serialized through a mutex).
+
+use fourier_peft::adapter::format::AdapterFile;
+use fourier_peft::coordinator::pretrain::load_or_init_base;
+use fourier_peft::coordinator::trainer::Trainer;
+use fourier_peft::runtime::{host, EngineKind};
+use fourier_peft::tensor::Tensor;
+use std::sync::Mutex;
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Write a fake enc_base `.base` file with the given metadata into a
+/// fresh runs dir, point `FOURIER_PEFT_RUNS` at it, and try to load it
+/// under the host engine.
+fn try_load_with_meta(tag: &str, meta: Vec<(String, String)>) -> anyhow::Result<Vec<Tensor>> {
+    let _guard = ENV_LOCK.lock().unwrap();
+    let dir = std::env::temp_dir().join(format!("fp_engine_guard_{tag}_{}", std::process::id()));
+    let bases = dir.join("bases");
+    std::fs::create_dir_all(&bases).unwrap();
+    let file = AdapterFile::from_named(
+        "dense",
+        0,
+        1.0,
+        meta,
+        vec![("tok_emb".into(), Tensor::zeros(&[1000, 128]))],
+        |_| None,
+    )
+    .unwrap();
+    file.save(&bases.join("enc_base.base")).unwrap();
+
+    let prev = std::env::var_os("FOURIER_PEFT_RUNS");
+    std::env::set_var("FOURIER_PEFT_RUNS", &dir);
+    let trainer = Trainer::open_default().unwrap();
+    assert_eq!(trainer.engine_kind, EngineKind::Host);
+    let meta = host::zoo::artifact_meta("enc_base__fourierft_n64__ce").unwrap();
+    let result = load_or_init_base(&trainer, &meta);
+    match prev {
+        Some(v) => std::env::set_var("FOURIER_PEFT_RUNS", v),
+        None => std::env::remove_var("FOURIER_PEFT_RUNS"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    result
+}
+
+/// A base stamped with a different engine id must be refused.
+#[test]
+fn cross_engine_base_reuse_is_refused() {
+    let err = try_load_with_meta(
+        "stamped",
+        vec![("model".into(), "enc_base".into()), ("engine".into(), "xla".into())],
+    )
+    .expect_err("xla-pretrained base must not load under the host engine");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("engine"), "unexpected error: {msg}");
+}
+
+/// A legacy base with no engine key predates host pretraining entirely
+/// (only XLA could have produced it), so the host engine refuses it too —
+/// the silent-mix hole would otherwise reopen for every pre-existing file.
+#[test]
+fn legacy_unstamped_base_is_refused_under_host() {
+    let err = try_load_with_meta("legacy", vec![("model".into(), "enc_base".into())])
+        .expect_err("legacy (unstamped) base must not load under the host engine");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("legacy") || msg.contains("engine"), "unexpected error: {msg}");
+}

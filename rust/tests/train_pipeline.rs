@@ -10,13 +10,14 @@
 
 use fourier_peft::coordinator::experiments::{self, Opts};
 use fourier_peft::coordinator::trainer::{FinetuneCfg, Trainer};
+use fourier_peft::runtime::EngineKind;
 use fourier_peft::data::glue::GlueTask;
 
 #[test]
 fn glue_finetune_beats_chance() {
     // Uses the shared runs dir so the pretrained encoder base is cached
     // across test invocations (first run pretrains it, ~1 min).
-    let trainer = Trainer::open_default().unwrap();
+    let trainer = Trainer::open(EngineKind::Xla).unwrap();
     let opts = Opts { steps: 150, seeds: 1, eval_count: 128, quick: true, scaling_scale: 1.0 };
     let res = experiments::glue_run(
         &trainer,
@@ -39,7 +40,7 @@ fn fourierft_beats_matched_lora_on_blobs() {
     // Paper Fig. 7: equal parameter budget (128 params at the single
     // trainable site, head frozen), FourierFT reaches high accuracy where
     // rank-1 LoRA plateaus. Assert the ordering, with margin.
-    let trainer = Trainer::open_default().unwrap();
+    let trainer = Trainer::open(EngineKind::Xla).unwrap();
     let eval_pts = fourier_peft::data::blobs::dataset(512, 0.35, 0xE);
     let eval_batches: Vec<_> = eval_pts.chunks(64).map(fourier_peft::data::blobs::collate).collect();
 
@@ -52,8 +53,8 @@ fn fourierft_beats_matched_lora_on_blobs() {
         cfg.seed = 7;
         let tr = &trainer;
         let eval_ref = &eval_batches;
-        let mut eval_fn = move |exe: &fourier_peft::runtime::Executable,
-                                state: &mut fourier_peft::runtime::exec::ParamSet,
+        let mut eval_fn = move |exe: &dyn fourier_peft::runtime::StepEngine,
+                                state: &mut fourier_peft::runtime::ParamSet,
                                 scaling: f32|
               -> anyhow::Result<f64> {
             let (preds, labels, _, _) = tr.eval_classify(exe, state, scaling, eval_ref)?;
@@ -87,7 +88,7 @@ fn fourierft_beats_matched_lora_on_blobs() {
 fn larger_n_learns_sst2_well() {
     // Capacity scaling (Fig. 4 in miniature): n=256 at 200 steps should be
     // comfortably above the n=64/150-step threshold asserted above.
-    let trainer = Trainer::open_default().unwrap();
+    let trainer = Trainer::open(EngineKind::Xla).unwrap();
     let opts = Opts { steps: 200, seeds: 1, eval_count: 256, quick: true, scaling_scale: 1.0 };
     let res = experiments::glue_run(
         &trainer, GlueTask::Sst2, "enc_base__fourierft_n256__ce", &opts, 0, 1.0).unwrap();
