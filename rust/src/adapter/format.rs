@@ -1,15 +1,16 @@
-//! Binary adapter checkpoint format (v2) + v1 read-compat shim.
+//! Binary adapter checkpoint format (v3) + v1/v2 read-compat shims.
 //!
 //! The paper's pitch is storage: a FourierFT fine-tune of RoBERTa-base is
 //! 18.8 KB vs LoRA's 574 KB. This module is the concrete artifact: a
 //! little-endian binary container with a small header, a JSON-free
 //! metadata section, and raw tensor payloads.
 //!
-//! ## v2 layout (all little-endian)
+//! ## v3 layout (all little-endian)
 //!
 //! ```text
-//! magic   u32   0x46465432  ("FFT2")
+//! magic   u32   0x46465433  ("FFT3")
 //! method  str   registered method id ("fourierft", "lora", "loca", ...)
+//! version u64   monotonic publish version (0 = never published)
 //! seed    u64   entry/location seed (spectral methods) or 0
 //! alpha   f32   scaling value baked at save time
 //! n_meta  u32   #key-value strings
@@ -27,6 +28,15 @@
 //! site carries its (d1, d2) weight dims — so reconstruction
 //! ([`crate::adapter::method::site_deltas`]) needs neither a dims callback
 //! nor tensor-name suffix guessing.
+//!
+//! ## v2 compat
+//!
+//! v2 files (magic `"FFT2"`) are v3 without the `version` word; the shim
+//! reads them payload-identically and reports version 0, exactly like a
+//! freshly constructed in-memory file. The version is **stamped at
+//! publish** by [`crate::adapter::store::AdapterStore::publish`], never by
+//! construction, so plain `save` round-trips preserve whatever version the
+//! file carries.
 //!
 //! ## v1 compat
 //!
@@ -53,6 +63,7 @@ use std::path::Path;
 
 const MAGIC_V1: u32 = 0x4646_5431;
 const MAGIC_V2: u32 = 0x4646_5432;
+const MAGIC_V3: u32 = 0x4646_5433;
 
 /// Role name of task-head tensors (replace rather than add at merge time).
 pub const ROLE_HEAD: &str = "head";
@@ -90,15 +101,20 @@ impl TensorEntry {
     }
 }
 
-/// An adapter checkpoint in memory (format v2).
+/// An adapter checkpoint in memory (format v3).
 #[derive(Debug, Clone)]
 pub struct AdapterFile {
     /// Registered method id ([`crate::adapter::method::get`] resolves it).
     pub method: String,
+    /// Monotonic publish version, stamped by
+    /// [`crate::adapter::store::AdapterStore::publish`]. 0 means the file
+    /// was never published (fresh construction, or a v1/v2 checkpoint
+    /// loaded through a compat shim).
+    pub version: u64,
     pub seed: u64,
     pub alpha: f32,
     pub meta: Vec<(String, String)>,
-    /// Per-site weight dims (v2; empty for files loaded via the v1 shim).
+    /// Per-site weight dims (v2+; empty for files loaded via the v1 shim).
     pub sites: Vec<SiteDims>,
     pub tensors: Vec<TensorEntry>,
 }
@@ -149,7 +165,15 @@ impl AdapterFile {
                 sites.push(SiteDims { site: site.to_string(), d1, d2 });
             }
         }
-        Ok(AdapterFile { method: m.id().to_string(), seed, alpha, meta, sites, tensors })
+        Ok(AdapterFile {
+            method: m.id().to_string(),
+            version: 0,
+            seed,
+            alpha,
+            meta,
+            sites,
+            tensors,
+        })
     }
 
     pub fn meta_get(&self, key: &str) -> Option<&str> {
@@ -172,7 +196,8 @@ impl AdapterFile {
 
     /// Total serialized size in bytes (exact, = what `save` writes).
     pub fn byte_size(&self) -> usize {
-        let mut sz = 4 + (4 + self.method.len()) + 8 + 4 + 4 + 4 + 4;
+        // magic + method str + version + seed + alpha + three counts.
+        let mut sz = 4 + (4 + self.method.len()) + 8 + 8 + 4 + 4 + 4 + 4;
         for (k, v) in &self.meta {
             sz += 4 + k.len() + 4 + v.len();
         }
@@ -188,8 +213,9 @@ impl AdapterFile {
 
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut buf: Vec<u8> = Vec::with_capacity(self.byte_size());
-        buf.extend(MAGIC_V2.to_le_bytes());
+        buf.extend(MAGIC_V3.to_le_bytes());
         write_str(&mut buf, &self.method);
+        buf.extend(self.version.to_le_bytes());
         buf.extend(self.seed.to_le_bytes());
         buf.extend(self.alpha.to_le_bytes());
         buf.extend((self.meta.len() as u32).to_le_bytes());
@@ -227,14 +253,27 @@ impl AdapterFile {
     pub fn from_bytes(b: &[u8]) -> Result<AdapterFile> {
         let mut r = Reader { b, i: 0 };
         match r.u32()? {
+            MAGIC_V3 => Self::read_v3(&mut r),
             MAGIC_V2 => Self::read_v2(&mut r),
             MAGIC_V1 => Self::read_v1(&mut r),
             _ => bail!("bad magic: not a fourier-peft adapter file"),
         }
     }
 
+    fn read_v3(r: &mut Reader) -> Result<AdapterFile> {
+        let method_id = r.string()?;
+        let version = r.u64()?;
+        Self::read_body(r, method_id, version)
+    }
+
+    /// v2 shim: identical to v3 minus the version word; loads as
+    /// version 0 with byte-identical payloads.
     fn read_v2(r: &mut Reader) -> Result<AdapterFile> {
         let method_id = r.string()?;
+        Self::read_body(r, method_id, 0)
+    }
+
+    fn read_body(r: &mut Reader, method_id: String, version: u64) -> Result<AdapterFile> {
         let seed = r.u64()?;
         let alpha = f32::from_le_bytes(r.bytes(4)?.try_into().unwrap());
         let n_meta = r.u32()? as usize;
@@ -259,7 +298,7 @@ impl AdapterFile {
             let tensor = read_tensor(r)?;
             tensors.push(TensorEntry { name, site, role, tensor });
         }
-        Ok(AdapterFile { method: method_id, seed, alpha, meta, sites, tensors })
+        Ok(AdapterFile { method: method_id, version, seed, alpha, meta, sites, tensors })
     }
 
     /// v1 shim: u8 kind byte + name-convention schema. Payloads load
@@ -287,6 +326,7 @@ impl AdapterFile {
         }
         Ok(AdapterFile {
             method: method_id.to_string(),
+            version: 0,
             seed,
             alpha,
             meta,
@@ -435,15 +475,42 @@ mod tests {
 
     #[test]
     fn roundtrip_preserves_everything() {
-        let a = sample();
+        let mut a = sample();
+        assert_eq!(a.version, 0, "construction never stamps a version");
+        a.version = 41; // as if stamped by a publish
         let dir = std::env::temp_dir().join("fourier_peft_test_fmt");
         let path = dir.join("a.fft");
         a.save(&path).unwrap();
         let b = AdapterFile::load(&path).unwrap();
         assert_eq!(a.method, b.method);
+        assert_eq!(a.version, b.version);
         assert_eq!(a.seed, b.seed);
         assert_eq!(a.alpha, b.alpha);
         assert_eq!(a.meta, b.meta);
+        assert_eq!(a.sites, b.sites);
+        assert_eq!(a.tensors, b.tensors);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn v2_bytes_load_as_version_zero_with_identical_payloads() {
+        // Serialize v3, then splice out the version word and rewrite the
+        // magic: that *is* the v2 layout. The shim must read it with
+        // version 0 and byte-identical everything else.
+        let a = sample();
+        let dir = std::env::temp_dir().join("fourier_peft_test_fmt_v2");
+        let path = dir.join("v2.fft");
+        a.save(&path).unwrap();
+        let v3 = std::fs::read(&path).unwrap();
+        let method_end = 4 + 4 + a.method.len();
+        let mut v2 = Vec::with_capacity(v3.len() - 8);
+        v2.extend(MAGIC_V2.to_le_bytes());
+        v2.extend(&v3[4..method_end]); // method string
+        v2.extend(&v3[method_end + 8..]); // skip the version word
+        let b = AdapterFile::from_bytes(&v2).unwrap();
+        assert_eq!(b.version, 0);
+        assert_eq!(a.method, b.method);
+        assert_eq!(a.seed, b.seed);
         assert_eq!(a.sites, b.sites);
         assert_eq!(a.tensors, b.tensors);
         std::fs::remove_file(&path).unwrap();

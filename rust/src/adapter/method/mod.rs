@@ -406,6 +406,7 @@ pub fn init_adapter(
     }
     Ok(AdapterFile {
         method: m.id().to_string(),
+        version: 0,
         seed,
         alpha,
         meta,
@@ -511,6 +512,7 @@ mod tests {
         let coeffs = Tensor::zeros(&[4]);
         let file = AdapterFile {
             method: "fourierft".into(),
+            version: 0,
             seed: 1,
             alpha: 1.0,
             meta: vec![],

@@ -6,13 +6,16 @@
 //!   `dense`/`bitfit`, `loca`, `circulant`, and anything user-registered)
 //!   dispatches through one table shared by merge, serving, budgets, and
 //!   the CLI. See the module docs for "how to add a method".
-//! * [`format`] — the self-describing binary checkpoint format (v2):
-//!   method id, per-site dims, and per-tensor roles live in the file;
-//!   v1 files load through a read-compat shim.
+//! * [`format`] — the self-describing binary checkpoint format (v3):
+//!   method id, monotonic publish version, per-site dims, and per-tensor
+//!   roles live in the file; v1/v2 files load through read-compat shims
+//!   (reporting version 0).
 //! * [`budget`] — exact trainable-parameter / byte arithmetic reproducing
 //!   the paper's Table 1, plus registry-driven cross-method budgets.
 //! * [`store`] — a multi-adapter registry over one frozen base model with
-//!   hot-swap, the unit the serving loop routes requests across.
+//!   hot-swap and a versioned publish lifecycle (immutable per-version
+//!   history, keep-K GC, byte-identical rollback, `name@v` pinned loads),
+//!   the unit the serving loop routes requests across.
 //! * [`merge`] — ΔW reconstruction + merge into base weights, either
 //!   host-side (rust-native IDFT, zero XLA dependency — the "mobile" path)
 //!   or on-device via the `delta_*.hlo.txt` artifact.

@@ -1,4 +1,5 @@
-//! Multi-adapter store: many fine-tunes over one frozen base.
+//! Multi-adapter store: many fine-tunes over one frozen base, with a
+//! versioned publish lifecycle.
 //!
 //! This is the serving-side unit the paper's storage argument is about:
 //! a Civitai-style registry holds hundreds of adapters per base model;
@@ -9,12 +10,37 @@
 //! so concurrent serve workers loading *distinct* adapters never contend
 //! on one decode-cache lock — the shared-access surface the micro-batching
 //! scheduler in `coordinator::scheduler` executes against.
+//!
+//! ## Versioned publish lifecycle
+//!
+//! [`AdapterStore::publish`] stamps a monotonic per-name version into the
+//! file (format v3), writes an **immutable history copy** under
+//! `.versions/<name>@<v>.adapter`, and atomically points the bare
+//! `<name>.adapter` at the new bytes (tmp + rename). The last
+//! `keep_versions` history files are retained (older ones GC'd), which is
+//! what makes [`AdapterStore::rollback`] — a byte-identical restore of the
+//! newest retained version older than current — possible at any time.
+//!
+//! A **versioned ref** `"<name>@<v>"` loads the immutable history copy of
+//! that exact version through the ordinary [`AdapterStore::load`] /
+//! decode-cache path, so the serving stack can pin in-flight work to the
+//! version it admitted against while later admissions read the republished
+//! current bytes — no layer above needs version plumbing beyond the ref
+//! string (see `coordinator::pipeline`).
 
 use super::format::AdapterFile;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
+
+/// Separator between an adapter name and a pinned version in a versioned
+/// ref (`"task_rte@3"`). Reserved: [`AdapterStore::save`] and
+/// [`AdapterStore::publish`] refuse bare names containing it.
+pub const VERSION_SEP: char = '@';
+
+/// Subdirectory holding the immutable per-version history copies.
+const VERSIONS_DIR: &str = ".versions";
 
 /// Stable shard index for an adapter name: FNV-1a over the name bytes,
 /// reduced mod `shards`. Used by both [`SharedAdapterStore`] and the
@@ -25,11 +51,29 @@ pub fn shard_index(name: &str, shards: usize) -> usize {
     (crate::util::fnv64(name) % shards as u64) as usize
 }
 
+/// Split a possibly-versioned ref into (base name, pinned version).
+/// `"a@3"` → `("a", Some(3))`; `"a"` (or a malformed suffix) → the whole
+/// string with `None`.
+pub fn split_versioned(name: &str) -> (&str, Option<u64>) {
+    if let Some(i) = name.rfind(VERSION_SEP) {
+        if let Ok(v) = name[i + 1..].parse::<u64>() {
+            return (&name[..i], Some(v));
+        }
+    }
+    (name, None)
+}
+
+/// The versioned ref `"<name>@<version>"` for a pinned load.
+pub fn versioned_ref(name: &str, version: u64) -> String {
+    format!("{name}{VERSION_SEP}{version}")
+}
+
 pub struct AdapterStore {
     dir: PathBuf,
     cache: BTreeMap<String, AdapterFile>,
     cache_order: Vec<String>,
     cache_cap: usize,
+    keep_versions: usize,
     pub hits: u64,
     pub misses: u64,
 }
@@ -42,6 +86,7 @@ impl AdapterStore {
             cache: BTreeMap::new(),
             cache_order: Vec::new(),
             cache_cap: 32,
+            keep_versions: 4,
             hits: 0,
             misses: 0,
         })
@@ -52,15 +97,183 @@ impl AdapterStore {
         self
     }
 
+    /// History depth: how many published versions per adapter stay on disk
+    /// (the rollback window). Minimum 1 — the current version always has a
+    /// history copy.
+    pub fn with_keep_versions(mut self, keep: usize) -> AdapterStore {
+        self.keep_versions = keep.max(1);
+        self
+    }
+
+    pub fn keep_versions(&self) -> usize {
+        self.keep_versions
+    }
+
     fn path_of(&self, name: &str) -> PathBuf {
-        self.dir.join(format!("{name}.adapter"))
+        match split_versioned(name) {
+            (base, Some(v)) => self.version_path(base, v),
+            _ => self.dir.join(format!("{name}.adapter")),
+        }
+    }
+
+    fn version_path(&self, base: &str, version: u64) -> PathBuf {
+        self.dir.join(VERSIONS_DIR).join(format!("{base}{VERSION_SEP}{version}.adapter"))
     }
 
     pub fn save(&mut self, name: &str, adapter: &AdapterFile) -> Result<usize> {
+        ensure!(
+            !name.contains(VERSION_SEP),
+            "adapter name '{name}' may not contain '{VERSION_SEP}' (reserved for version refs)"
+        );
         let path = self.path_of(name);
         adapter.save(&path)?;
         self.touch(name, adapter.clone());
         Ok(adapter.byte_size())
+    }
+
+    /// Publish the next version of `name`: stamp `max(retained, current)+1`
+    /// into the file, write the immutable history copy, then atomically
+    /// repoint the bare name (tmp + rename, so a concurrent reader of the
+    /// current path never sees a torn file) and GC history beyond
+    /// `keep_versions`. Returns (version, serialized bytes).
+    pub fn publish(&mut self, name: &str, adapter: &AdapterFile) -> Result<(u64, usize)> {
+        let (version, bytes, _) = self.publish_with_gc(name, adapter)?;
+        Ok((version, bytes))
+    }
+
+    /// [`AdapterStore::publish`] plus the list of history versions the
+    /// keep-K GC deleted. The sharded wrapper needs it: a versioned ref
+    /// hashes to its *own* shard, so this store's local cache cleanup
+    /// cannot reach a ref decoded through another shard —
+    /// [`SharedAdapterStore::publish`] re-invalidates each deleted ref in
+    /// the shard that owns it.
+    pub fn publish_with_gc(
+        &mut self,
+        name: &str,
+        adapter: &AdapterFile,
+    ) -> Result<(u64, usize, Vec<u64>)> {
+        ensure!(
+            !name.contains(VERSION_SEP),
+            "cannot publish '{name}': '{VERSION_SEP}' is reserved for version refs"
+        );
+        let version = self.latest_version(name)? + 1;
+        let mut stamped = adapter.clone();
+        stamped.version = version;
+        stamped.save(&self.version_path(name, version))?;
+        let tmp = self.dir.join(format!(".{name}.adapter.tmp"));
+        stamped.save(&tmp)?;
+        std::fs::rename(&tmp, self.path_of(name))?;
+        let bytes = stamped.byte_size();
+        self.touch(name, stamped);
+        let removed = self.gc_versions(name)?;
+        Ok((version, bytes, removed))
+    }
+
+    /// Retained history versions of `name`, ascending. Empty for adapters
+    /// that were only ever `save`d (never published).
+    pub fn versions(&self, name: &str) -> Result<Vec<u64>> {
+        let dir = self.dir.join(VERSIONS_DIR);
+        let mut out = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&dir) {
+            let prefix = format!("{name}{VERSION_SEP}");
+            for entry in rd {
+                let p = entry?.path();
+                if !p.extension().map(|e| e == "adapter").unwrap_or(false) {
+                    continue;
+                }
+                if let Some(rest) = p
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .and_then(|s| s.strip_prefix(&prefix))
+                {
+                    if let Ok(v) = rest.parse::<u64>() {
+                        out.push(v);
+                    }
+                }
+            }
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+
+    /// Version stamped in the current (bare-name) file. 0 for never-
+    /// published adapters; error if `name` does not exist at all.
+    pub fn current_version(&mut self, name: &str) -> Result<u64> {
+        Ok(self.load(name)?.version)
+    }
+
+    /// Highest version this name has ever been published at: the max over
+    /// retained history and the current file (0 when neither exists, so
+    /// the first publish is version 1).
+    pub fn latest_version(&mut self, name: &str) -> Result<u64> {
+        let hist = self.versions(name)?.last().copied().unwrap_or(0);
+        let cur = self.load(name).map(|f| f.version).unwrap_or(0);
+        Ok(hist.max(cur))
+    }
+
+    /// Roll the current pointer back to the newest retained version older
+    /// than the current one, restoring its bytes **identically** (file
+    /// copy of the immutable history file). Returns the restored version.
+    /// Version numbering stays monotonic: the next publish still gets
+    /// `latest + 1`, never a reused number.
+    pub fn rollback(&mut self, name: &str) -> Result<u64> {
+        ensure!(
+            !name.contains(VERSION_SEP),
+            "cannot roll back the version ref '{name}' (pass the bare adapter name)"
+        );
+        let cur = self.current_version(name)?;
+        let prev = self
+            .versions(name)?
+            .into_iter()
+            .filter(|&v| v < cur)
+            .max()
+            .ok_or_else(|| {
+                anyhow!("adapter '{name}': no version older than {cur} retained to roll back to")
+            })?;
+        let tmp = self.dir.join(format!(".{name}.adapter.tmp"));
+        std::fs::copy(self.version_path(name, prev), &tmp)?;
+        std::fs::rename(&tmp, self.dir.join(format!("{name}.adapter")))?;
+        self.invalidate(name);
+        Ok(prev)
+    }
+
+    /// Versioning invariants, checked by the lifecycle property tests:
+    /// retained history is strictly increasing and within the keep bound,
+    /// and the current file's stamped version never exceeds the newest
+    /// retained version (equality after publish; smaller after rollback).
+    pub fn check_versions_consistent(&mut self, name: &str) -> bool {
+        let vs = match self.versions(name) {
+            Ok(v) => v,
+            Err(_) => return false,
+        };
+        if !vs.windows(2).all(|w| w[0] < w[1]) || vs.len() > self.keep_versions {
+            return false;
+        }
+        match vs.last() {
+            None => true,
+            Some(&newest) => match self.current_version(name) {
+                Ok(cur) => cur <= newest,
+                Err(_) => false,
+            },
+        }
+    }
+
+    /// Delete history files beyond the newest `keep_versions` and drop
+    /// their decode-cache entries; returns the deleted versions. (A stale
+    /// cache entry for a GC'd version would not be *wrong* — versions are
+    /// immutable — but dropping it keeps cache residency aligned with
+    /// disk.)
+    fn gc_versions(&mut self, name: &str) -> Result<Vec<u64>> {
+        let vs = self.versions(name)?;
+        let mut removed = Vec::new();
+        if vs.len() > self.keep_versions {
+            for &v in &vs[..vs.len() - self.keep_versions] {
+                let _ = std::fs::remove_file(self.version_path(name, v));
+                self.invalidate(&versioned_ref(name, v));
+                removed.push(v);
+            }
+        }
+        Ok(removed)
     }
 
     /// Load an adapter, via the LRU cache. A hit returns the decoded file
@@ -159,16 +372,31 @@ impl SharedAdapterStore {
     }
 
     /// Open with `shards` partitions, each holding an LRU decode cache of
-    /// `cache_cap_per_shard` adapters.
+    /// `cache_cap_per_shard` adapters (default rollback window).
     pub fn with_shards(
         dir: &Path,
         shards: usize,
         cache_cap_per_shard: usize,
     ) -> Result<SharedAdapterStore> {
+        SharedAdapterStore::with_shards_keep(dir, shards, cache_cap_per_shard, 4)
+    }
+
+    /// [`SharedAdapterStore::with_shards`] with an explicit per-adapter
+    /// version-history depth (the rollback window of every shard).
+    pub fn with_shards_keep(
+        dir: &Path,
+        shards: usize,
+        cache_cap_per_shard: usize,
+        keep_versions: usize,
+    ) -> Result<SharedAdapterStore> {
         let n = shards.max(1);
         let mut v = Vec::with_capacity(n);
         for _ in 0..n {
-            v.push(Mutex::new(AdapterStore::open(dir)?.with_cache_cap(cache_cap_per_shard)));
+            v.push(Mutex::new(
+                AdapterStore::open(dir)?
+                    .with_cache_cap(cache_cap_per_shard)
+                    .with_keep_versions(keep_versions),
+            ));
         }
         Ok(SharedAdapterStore { dir: dir.to_path_buf(), shards: v })
     }
@@ -201,6 +429,50 @@ impl SharedAdapterStore {
 
     pub fn load(&self, name: &str) -> Result<AdapterFile> {
         self.with_shard(name, |s| s.load(name))
+    }
+
+    /// Publish the next version of `name` (see [`AdapterStore::publish`]).
+    /// The whole stamp → history copy → atomic repoint → GC sequence runs
+    /// under the owning shard's lock, so concurrent publishes of one name
+    /// serialize and version numbers never collide. Versioned refs hash
+    /// to their own shards, so the refs of GC'd versions are then dropped
+    /// from the shards that own them (sequential lock acquisition — the
+    /// base shard is released first, no nesting).
+    pub fn publish(&self, name: &str, adapter: &AdapterFile) -> Result<(u64, usize)> {
+        let (version, bytes, removed) =
+            self.with_shard(name, |s| s.publish_with_gc(name, adapter))?;
+        for v in removed {
+            let r = versioned_ref(name, v);
+            self.with_shard(&r, |s| s.invalidate(&r));
+        }
+        Ok((version, bytes))
+    }
+
+    /// Retained history versions of `name`, ascending.
+    pub fn versions(&self, name: &str) -> Result<Vec<u64>> {
+        self.with_shard(name, |s| s.versions(name))
+    }
+
+    /// Version stamped in the current (bare-name) file.
+    pub fn current_version(&self, name: &str) -> Result<u64> {
+        self.with_shard(name, |s| s.current_version(name))
+    }
+
+    /// Highest version `name` has ever been published at.
+    pub fn latest_version(&self, name: &str) -> Result<u64> {
+        self.with_shard(name, |s| s.latest_version(name))
+    }
+
+    /// Byte-identical restore of the newest retained version older than
+    /// current (see [`AdapterStore::rollback`]); atomic per name via the
+    /// shard lock.
+    pub fn rollback(&self, name: &str) -> Result<u64> {
+        self.with_shard(name, |s| s.rollback(name))
+    }
+
+    /// Versioning invariants for `name` (lifecycle property tests).
+    pub fn check_versions_consistent(&self, name: &str) -> bool {
+        self.with_shard(name, |s| s.check_versions_consistent(name))
     }
 
     /// Drop `name` from its shard's decode cache.
@@ -359,6 +631,117 @@ mod tests {
         let names: Vec<String> = store.list().unwrap().into_iter().map(|(n, _)| n).collect();
         assert_eq!(names, vec!["x", "y"]);
         assert_eq!(store.total_bytes().unwrap(), 2 * adapter(64).byte_size() as u64);
+    }
+
+    #[test]
+    fn split_versioned_parses_refs_and_leaves_bare_names() {
+        assert_eq!(split_versioned("task_rte"), ("task_rte", None));
+        assert_eq!(split_versioned("task_rte@3"), ("task_rte", Some(3)));
+        assert_eq!(split_versioned("a@b@12"), ("a@b", Some(12)));
+        // malformed suffixes stay opaque
+        assert_eq!(split_versioned("odd@name"), ("odd@name", None));
+        assert_eq!(versioned_ref("x", 7), "x@7");
+    }
+
+    #[test]
+    fn publish_stamps_monotonic_versions_and_serves_pinned_refs() {
+        let mut store = AdapterStore::open(&tmp("ver_a")).unwrap();
+        let (v1, _) = store.publish("t", &adapter(8)).unwrap();
+        let (v2, _) = store.publish("t", &adapter(16)).unwrap();
+        assert_eq!((v1, v2), (1, 2));
+        assert_eq!(store.current_version("t").unwrap(), 2);
+        assert_eq!(store.versions("t").unwrap(), vec![1, 2]);
+        // bare load sees the current version; a pinned ref sees its own
+        let cur = store.load("t").unwrap();
+        assert_eq!(cur.version, 2);
+        assert_eq!(cur.meta_get("n"), Some("16"));
+        let pinned = store.load(&versioned_ref("t", 1)).unwrap();
+        assert_eq!(pinned.version, 1);
+        assert_eq!(pinned.meta_get("n"), Some("8"));
+        assert!(store.check_versions_consistent("t"));
+        // plain saves and publishes both refuse reserved names
+        assert!(store.save("x@1", &adapter(8)).is_err());
+        assert!(store.publish("x@1", &adapter(8)).is_err());
+    }
+
+    #[test]
+    fn keep_k_gc_retains_only_the_newest_versions() {
+        let mut store = AdapterStore::open(&tmp("ver_b")).unwrap().with_keep_versions(2);
+        for _ in 0..5 {
+            store.publish("t", &adapter(8)).unwrap();
+        }
+        assert_eq!(store.versions("t").unwrap(), vec![4, 5]);
+        assert_eq!(store.current_version("t").unwrap(), 5);
+        assert!(store.check_versions_consistent("t"));
+        // GC'd versions are gone from disk and the decode cache
+        store.invalidate(&versioned_ref("t", 1));
+        assert!(store.load(&versioned_ref("t", 1)).is_err());
+        assert!(store.load(&versioned_ref("t", 4)).is_ok());
+    }
+
+    #[test]
+    fn rollback_restores_prior_bytes_and_stays_monotonic() {
+        let mut store = AdapterStore::open(&tmp("ver_c")).unwrap();
+        store.publish("t", &adapter(8)).unwrap();
+        store.publish("t", &adapter(16)).unwrap();
+        let restored = store.rollback("t").unwrap();
+        assert_eq!(restored, 1);
+        let cur = store.load("t").unwrap();
+        assert_eq!(cur.version, 1);
+        assert_eq!(cur.meta_get("n"), Some("8"));
+        // byte-identical restore: current file equals the retained copy
+        let pinned = store.load(&versioned_ref("t", 1)).unwrap();
+        assert_eq!(cur.tensors, pinned.tensors);
+        assert!(store.check_versions_consistent("t"));
+        // no older version retained => rollback is a hard error
+        assert!(store.rollback("t").is_err());
+        // publishing after a rollback never reuses a version number
+        let (v3, _) = store.publish("t", &adapter(32)).unwrap();
+        assert_eq!(v3, 3);
+        // never-published / missing names error cleanly
+        let mut fresh = AdapterStore::open(&tmp("ver_d")).unwrap();
+        assert!(fresh.rollback("nope").is_err());
+        fresh.save("plain", &adapter(8)).unwrap();
+        assert_eq!(fresh.current_version("plain").unwrap(), 0);
+        assert!(fresh.rollback("plain").is_err(), "no history => nothing to roll back to");
+    }
+
+    #[test]
+    fn shared_store_publish_and_rollback_route_through_shards() {
+        let store = SharedAdapterStore::with_shards_keep(&tmp("sh_ver"), 4, 16, 3).unwrap();
+        for name in ["p", "q"] {
+            assert_eq!(store.publish(name, &adapter(8)).unwrap().0, 1);
+            assert_eq!(store.publish(name, &adapter(16)).unwrap().0, 2);
+        }
+        assert_eq!(store.current_version("p").unwrap(), 2);
+        assert_eq!(store.latest_version("q").unwrap(), 2);
+        assert_eq!(store.rollback("p").unwrap(), 1);
+        assert_eq!(store.current_version("p").unwrap(), 1);
+        // q is untouched by p's rollback
+        assert_eq!(store.current_version("q").unwrap(), 2);
+        assert!(store.check_versions_consistent("p"));
+        assert!(store.check_versions_consistent("q"));
+        // history files never appear in the top-level listing
+        let names: Vec<String> = store.list().unwrap().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["p", "q"]);
+    }
+
+    #[test]
+    fn shared_store_gc_drops_refs_cached_in_other_shards() {
+        let store = SharedAdapterStore::with_shards_keep(&tmp("sh_gc"), 4, 16, 2).unwrap();
+        store.publish("t", &adapter(8)).unwrap();
+        // Decode the v1 ref through the shared store: it caches in the
+        // ref's own shard, not the base name's.
+        assert_eq!(store.load(&versioned_ref("t", 1)).unwrap().version, 1);
+        store.publish("t", &adapter(16)).unwrap();
+        store.publish("t", &adapter(32)).unwrap(); // keep 2 => GC deletes v1
+        assert_eq!(store.versions("t").unwrap(), vec![2, 3]);
+        // The deleted version must be gone everywhere: the history file
+        // AND the decode-cache entry in whichever shard owned the ref
+        // (the publishing shard's local GC cannot reach it on its own).
+        assert!(!store.cached(&versioned_ref("t", 1)));
+        assert!(store.load(&versioned_ref("t", 1)).is_err());
+        assert!(store.load(&versioned_ref("t", 2)).is_ok());
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 pub mod experiments;
 pub mod generate;
+pub mod pipeline;
 pub mod pretrain;
 pub mod report;
 pub mod scheduler;

@@ -1,0 +1,720 @@
+//! Online adapter-lifecycle coordinator: background train → versioned
+//! publish → serve, with atomic hot-swap and rollback.
+//!
+//! The paper's storage pitch (0.064M params per LLaMA2-7B fine-tune vs
+//! LoRA's 33.5M) only pays off operationally if a serving deployment can
+//! retrain and republish thousands of per-customer adapters *while live
+//! traffic keeps flowing*. This module closes that loop over the pieces
+//! the previous PRs built:
+//!
+//! ```text
+//!            ┌── train worker pool (host StepEngine, JobRunner) ──┐
+//!   names ──▶│ warm-start from prev version ▶ AdapterFile         │
+//!            └──────────────┬────────────────────────────────────-┘
+//!                           ▼ store.publish  (version = latest+1,
+//!                           │                 history copy, tmp+rename,
+//!                           │                 keep-K GC)
+//!                           ▼ swap.invalidate(bare name only)
+//!   requests ──pin to name@current──▶ micro-batching scheduler ──▶ logits
+//! ```
+//!
+//! **Version pinning.** Every request is pinned at admission to its
+//! adapter's then-current version by rewriting the adapter to the ref
+//! `name@v` ([`workload::pin_requests`]). Pinned refs address immutable
+//! history copies ([`crate::adapter::store`]), and the swap-cache keys are
+//! whole ref strings, so a publish that lands mid-wave cannot corrupt an
+//! in-flight micro-batch: batches admitted against version N finish on N,
+//! the next admission round reads N+1, and **no unrelated cache entry is
+//! flushed**. This is what makes every served response replayable — a
+//! pure function of (pinned version bytes, request) — which
+//! `tests/pipeline.rs` asserts bitwise against a sequential replay,
+//! across worker counts and re-runs, and across a rollback.
+//!
+//! **Determinism.** Jobs are seeded by (adapter name, generation), so the
+//! published bytes are independent of which train worker ran them;
+//! publishes land between serving waves (training overlaps serving, the
+//! publish barrier is the wave edge), so the pin decision itself is
+//! reproducible. Roll the store back ([`Pipeline::rollback`]) and the
+//! bare name byte-identically serves the previous generation again.
+//!
+//! Driven by `repro pipeline --adapters N --publish-every S --workers W`
+//! (per-publish latency rows land in `BENCH_*.json`) and by the
+//! `pipeline-smoke` CI job.
+
+use super::scheduler::{serve_scheduled_host, DeltaRunner, SchedCfg};
+use super::serving::{Request, ServeStats, SharedSwap};
+#[cfg(not(feature = "xla-runtime"))]
+use super::trainer::Trainer;
+use super::workload;
+use crate::adapter::format::AdapterFile;
+use crate::adapter::method::{self, MethodHp, SiteSpec};
+use crate::adapter::store::SharedAdapterStore;
+#[cfg(not(feature = "xla-runtime"))]
+use crate::fourier::EntryBias;
+use crate::runtime::ArtifactMeta;
+#[cfg(not(feature = "xla-runtime"))]
+use crate::runtime::StepScalars;
+use crate::tensor::{rng::Rng, Tensor};
+use anyhow::{anyhow, ensure, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Shape of one pipeline run.
+#[derive(Debug, Clone)]
+pub struct PipelineCfg {
+    /// Host-zoo artifact family the engine jobs train
+    /// (`model__method__loss`; the model must be an `mlp` variant — the
+    /// blobs task is the pipeline's training stream).
+    pub artifact: String,
+    /// Adapters in the registry (`zipf_0000` … per
+    /// [`workload::adapter_name`]).
+    pub adapters: usize,
+    /// Total requests across the run.
+    pub requests: usize,
+    /// Requests per serving wave; publishes land at wave edges.
+    pub publish_every: usize,
+    /// Adapters retrained (round-robin) while each wave serves.
+    pub republish_per_wave: usize,
+    /// Scheduler executor threads.
+    pub serve_workers: usize,
+    /// Background training threads.
+    pub train_workers: usize,
+    /// Train steps per job.
+    pub steps: usize,
+    /// Version-history depth per adapter (the rollback window).
+    pub keep_versions: usize,
+    /// Rows per request batch tensor.
+    pub batch: usize,
+    /// Zipf exponent of adapter popularity.
+    pub zipf_s: f64,
+    pub seed: u64,
+}
+
+impl PipelineCfg {
+    /// Small config for fast deterministic tests and the CI smoke job.
+    pub fn small() -> PipelineCfg {
+        PipelineCfg {
+            artifact: "mlp__fourierft_n64__ce".into(),
+            adapters: 4,
+            requests: 48,
+            publish_every: 12,
+            republish_per_wave: 2,
+            serve_workers: 2,
+            train_workers: 2,
+            steps: 2,
+            keep_versions: 8,
+            batch: 2,
+            zipf_s: 1.1,
+            seed: 2024,
+        }
+    }
+}
+
+/// One train-then-publish job executor. Implementations must be pure in
+/// (name, generation, prev): the produced file's bytes may not depend on
+/// which worker thread ran the job or when — that is what keeps the whole
+/// lifecycle replayable.
+pub trait JobRunner: Sync {
+    /// Produce the next adapter checkpoint for `name`. `prev` is the
+    /// currently-published file (warm-start source); `None` on the first
+    /// generation.
+    fn run_job(&self, name: &str, generation: u64, prev: Option<&AdapterFile>)
+        -> Result<AdapterFile>;
+}
+
+/// The real trainer: a short host-`StepEngine` fine-tune per job, over
+/// one engine instance shared (and cached) across all jobs and worker
+/// threads via the [`Trainer`]'s engine cache. Version N+1 warm-starts
+/// from version N's published tensors (`set_adapt`); generation 1 starts
+/// from the engine's seeded init — the per-method `init_tensors`-shaped
+/// state the zoo synthesizes.
+///
+/// Compiled only against the compat backend: the vendored real-runtime
+/// PJRT handles are not `Send`/`Sync`, so a `Trainer` cannot cross the
+/// background-pool threads under the `xla-runtime` feature (same
+/// restriction as the scheduler's engine runner).
+#[cfg(not(feature = "xla-runtime"))]
+pub struct EngineTrainJob<'a> {
+    pub trainer: &'a Trainer,
+    pub artifact: String,
+    pub steps: usize,
+    pub lr: f32,
+    pub lr_head: f32,
+    pub scaling: f32,
+    pub entry_seed: u64,
+    pub seed: u64,
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+impl EngineTrainJob<'_> {
+    /// Conventional knobs for the mlp/blobs task.
+    pub fn new(trainer: &Trainer, artifact: &str, steps: usize, seed: u64) -> EngineTrainJob<'_> {
+        EngineTrainJob {
+            trainer,
+            artifact: artifact.to_string(),
+            steps,
+            lr: 5e-2,
+            lr_head: 2e-3,
+            scaling: 64.0,
+            entry_seed: 2024,
+            seed,
+        }
+    }
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+impl JobRunner for EngineTrainJob<'_> {
+    fn run_job(
+        &self,
+        name: &str,
+        generation: u64,
+        prev: Option<&AdapterFile>,
+    ) -> Result<AdapterFile> {
+        let exe = self.trainer.engine(&self.artifact)?;
+        let meta = exe.meta();
+        ensure!(
+            meta.model.kind == "mlp",
+            "pipeline engine jobs train the mlp/blobs task; artifact '{}' is kind '{}'",
+            self.artifact,
+            meta.model.kind
+        );
+        let (statics, _) = self.trainer.make_statics(meta, self.entry_seed, EntryBias::None)?;
+        let base = self.trainer.base_for(meta)?;
+        // Job seed depends only on (name, run seed): bytes are identical
+        // no matter which worker thread runs the job or in which order.
+        let job_seed = crate::util::fnv64(name) ^ self.seed;
+        let mut state = exe.init_state((job_seed & 0x7FFF_FFFF) as i32, base, statics)?;
+        if let Some(prev) = prev {
+            let tensors: HashMap<String, Tensor> =
+                prev.tensors.iter().map(|e| (e.name.clone(), e.tensor.clone())).collect();
+            exe.set_adapt(&mut state, &tensors)?;
+        }
+        let b = meta.model.batch.max(8);
+        for step in 1..=self.steps.max(1) {
+            let s = job_seed ^ (generation << 17) ^ ((step as u64) << 5) ^ 0xB10B;
+            let batch = crate::data::blobs::collate(&crate::data::blobs::dataset(b, 0.35, s));
+            let out = exe.step(
+                &mut state,
+                StepScalars {
+                    step: step as f32,
+                    lr: self.lr,
+                    lr_head: self.lr_head,
+                    wd: 0.0,
+                    scaling: self.scaling,
+                },
+                &batch,
+            )?;
+            ensure!(out.loss.is_finite(), "job '{name}' gen {generation}: loss diverged");
+        }
+        let site_dims = meta.site_dims();
+        let method_id = method::get(&meta.method.name)?.id();
+        AdapterFile::from_named(
+            method_id,
+            self.entry_seed,
+            self.scaling,
+            vec![
+                ("artifact".into(), self.artifact.clone()),
+                ("n".into(), meta.method.n.to_string()),
+                ("generation".into(), generation.to_string()),
+            ],
+            exe.adapt_tensors(&state)?,
+            |site| site_dims.get(site).copied(),
+        )
+    }
+}
+
+/// Method-agnostic stand-in trainer: generation 1 is the method's own
+/// seeded [`method::init_adapter`] (the `init_tensors` path); later
+/// generations are a deterministic refinement of the previous version's
+/// f32 tensors. Lets the lifecycle tests drive every registered
+/// `DeltaMethod` through the full versioned pipeline without paying for
+/// a real fine-tune per method.
+pub struct SyntheticJob {
+    pub method: String,
+    pub sites: Vec<SiteSpec>,
+    pub hp: MethodHp,
+    pub entry_seed: u64,
+    pub alpha: f32,
+    pub seed: u64,
+}
+
+impl JobRunner for SyntheticJob {
+    fn run_job(
+        &self,
+        name: &str,
+        generation: u64,
+        prev: Option<&AdapterFile>,
+    ) -> Result<AdapterFile> {
+        let mut rng =
+            Rng::new(self.seed ^ crate::util::fnv64(name) ^ generation.wrapping_mul(0x9E37));
+        match prev {
+            None => method::init_adapter(
+                &self.method,
+                &mut rng,
+                &self.sites,
+                &self.hp,
+                self.entry_seed,
+                self.alpha,
+                vec![("generation".into(), generation.to_string())],
+            ),
+            Some(prev) => {
+                let mut next = prev.clone();
+                next.version = 0; // the store stamps the real version
+                next.meta = vec![("generation".into(), generation.to_string())];
+                for e in &mut next.tensors {
+                    // Integer tensors (e.g. loca locations) stay frozen,
+                    // exactly like a real fine-tune would keep them.
+                    if let Ok(v) = e.tensor.as_f32_mut() {
+                        for x in v.iter_mut() {
+                            *x += 0.05 * rng.normal();
+                        }
+                    }
+                }
+                Ok(next)
+            }
+        }
+    }
+}
+
+/// One publish that went live: which adapter, which version, and what the
+/// job/publish halves cost.
+#[derive(Debug, Clone)]
+pub struct PublishRecord {
+    pub adapter: String,
+    pub version: u64,
+    /// Training (job execution) seconds, off the serving path.
+    pub train_seconds: f64,
+    /// Publish seconds: version stamp + history copy + atomic repoint +
+    /// GC + bare-name cache invalidation — the serving-visible cost.
+    pub publish_seconds: f64,
+    pub bytes: usize,
+}
+
+/// Outcome of a full [`Pipeline::run`].
+#[derive(Debug)]
+pub struct PipelineReport {
+    /// (request id, logits), sorted by id, across all waves.
+    pub results: Vec<(u64, Tensor)>,
+    /// (request id, versioned ref it was pinned to), sorted by id.
+    pub pins: Vec<(u64, String)>,
+    /// Serving stats merged across waves (latencies concatenated,
+    /// wall/exec summed, peaks maxed).
+    pub stats: ServeStats,
+    pub publishes: Vec<PublishRecord>,
+    pub waves: usize,
+}
+
+impl PipelineReport {
+    /// p-th percentile of the per-publish (serving-visible) latency.
+    pub fn publish_latency_percentile(&self, p: f64) -> f64 {
+        let lat: Vec<f64> = self.publishes.iter().map(|r| r.publish_seconds).collect();
+        crate::util::percentile(&lat, p)
+    }
+}
+
+/// The serving input dimension of an artifact: every **adapted** site
+/// (adapt-role tensor classified through the method's naming rules, the
+/// same resolution `engine::entry_grid_dims` uses) must share square
+/// (d, d) weight dims for the ΔW-application runner.
+pub fn serve_dim(meta: &ArtifactMeta) -> Result<usize> {
+    let m = method::get(&meta.method.name)?;
+    let site_dims = meta.site_dims();
+    let mut dims: Vec<(usize, usize)> = Vec::new();
+    for t in meta.inputs_with_role("adapt") {
+        if let Some((site, _)) = m.classify_legacy(&t.name) {
+            if let Some(&d) = site_dims.get(&site) {
+                dims.push(d);
+            }
+        }
+    }
+    let &(d1, d2) = dims.first().ok_or_else(|| {
+        anyhow!("artifact '{}' adapts no classifiable sites", meta.name)
+    })?;
+    ensure!(
+        d1 == d2 && dims.iter().all(|&(a, b)| (a, b) == (d1, d2)),
+        "artifact '{}': pipeline serving needs uniform square adapted-site dims, got {:?}",
+        meta.name,
+        dims
+    );
+    Ok(d1)
+}
+
+/// The [`workload::WorkloadCfg`] matching a pipeline config (`dim` comes
+/// from [`serve_dim`] of the trained artifact).
+pub fn workload_cfg(cfg: &PipelineCfg, dim: usize) -> workload::WorkloadCfg {
+    workload::WorkloadCfg {
+        adapters: cfg.adapters,
+        requests: cfg.requests,
+        zipf_s: cfg.zipf_s,
+        arrival: workload::Arrival::Random,
+        seed: cfg.seed,
+        batch: cfg.batch,
+        dim,
+        sites: 1,
+        n_coeffs: 16,
+        method: "fourierft".into(),
+    }
+}
+
+/// The live lifecycle state: versioned store + version-scoped swap cache
+/// + the adapter name roster.
+pub struct Pipeline {
+    pub store: SharedAdapterStore,
+    pub swap: SharedSwap,
+    pub names: Vec<String>,
+}
+
+impl Pipeline {
+    /// Open a pipeline over `dir` with `adapters` canonical names and a
+    /// `keep_versions`-deep rollback window. `keep_versions` must be at
+    /// least 2: a background publish GCs history beyond the keep window,
+    /// and the previous version must survive until every wave pinned to
+    /// it has drained (it is also the rollback target).
+    pub fn open(
+        dir: &Path,
+        site_dims: BTreeMap<String, (usize, usize)>,
+        adapters: usize,
+        keep_versions: usize,
+    ) -> Result<Pipeline> {
+        ensure!(
+            keep_versions >= 2,
+            "pipeline keep_versions must be >= 2: with a window of 1 a concurrent publish \
+             would GC the very version in-flight batches are pinned to"
+        );
+        let store = SharedAdapterStore::with_shards_keep(dir, 8, 64, keep_versions)?;
+        let swap = SharedSwap::with_shards(site_dims, 8, 64);
+        let names = (0..adapters).map(workload::adapter_name).collect();
+        Ok(Pipeline { store, swap, names })
+    }
+
+    /// Train and publish one generation of `jobs` on `train_workers`
+    /// background threads. Jobs are seeded by (name, generation), so the
+    /// published bytes are independent of thread assignment; each publish
+    /// is atomic per name (store shard lock + tmp/rename) and invalidates
+    /// only that name's bare cache entries — pinned versions stay
+    /// resident by immutability. Records are returned in name order.
+    pub fn publish_generation(
+        &self,
+        jobs: &[String],
+        generation: u64,
+        runner: &dyn JobRunner,
+        train_workers: usize,
+    ) -> Result<Vec<PublishRecord>> {
+        if jobs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let workers = train_workers.clamp(1, jobs.len());
+        let next = AtomicUsize::new(0);
+        let records: Mutex<Vec<PublishRecord>> = Mutex::new(Vec::with_capacity(jobs.len()));
+        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let next = &next;
+                let records = &records;
+                let first_err = &first_err;
+                s.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    match self.train_and_publish(&jobs[i], generation, runner) {
+                        Ok(rec) => records.lock().unwrap().push(rec),
+                        Err(e) => {
+                            let mut g = first_err.lock().unwrap();
+                            if g.is_none() {
+                                *g = Some(e);
+                            }
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        if let Some(e) = first_err.into_inner().unwrap() {
+            return Err(e);
+        }
+        let mut recs = records.into_inner().unwrap();
+        recs.sort_by(|a, b| a.adapter.cmp(&b.adapter));
+        Ok(recs)
+    }
+
+    fn train_and_publish(
+        &self,
+        name: &str,
+        generation: u64,
+        runner: &dyn JobRunner,
+    ) -> Result<PublishRecord> {
+        let prev = self.store.load(name).ok(); // miss = first generation
+        let t0 = Instant::now();
+        let file = runner.run_job(name, generation, prev.as_ref())?;
+        let train_seconds = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let (version, bytes) = self.store.publish(name, &file)?;
+        self.swap.invalidate(name);
+        let publish_seconds = t1.elapsed().as_secs_f64();
+        Ok(PublishRecord {
+            adapter: name.to_string(),
+            version,
+            train_seconds,
+            publish_seconds,
+            bytes,
+        })
+    }
+
+    /// Current version of every adapter — the admission-time pin map.
+    pub fn pin_map(&self) -> Result<HashMap<String, u64>> {
+        let mut m = HashMap::with_capacity(self.names.len());
+        for n in &self.names {
+            m.insert(n.clone(), self.store.current_version(n)?);
+        }
+        Ok(m)
+    }
+
+    /// Roll one adapter back to its previous published version
+    /// (byte-identical restore) and invalidate its bare-name cache entry;
+    /// pinned refs are untouched. Returns the version now current.
+    pub fn rollback(&self, name: &str) -> Result<u64> {
+        let v = self.store.rollback(name)?;
+        self.swap.invalidate(name);
+        Ok(v)
+    }
+
+    /// Run the full lifecycle: generation-1 publishes for every adapter,
+    /// then the queue in waves of `cfg.publish_every` — each wave pins at
+    /// admission and serves through the micro-batching scheduler while
+    /// the next generation trains on the background pool; publishes land
+    /// at the wave edge (training overlaps serving, publishing does not
+    /// overlap pinning, so pins are reproducible run-to-run).
+    pub fn run(
+        &self,
+        cfg: &PipelineCfg,
+        runner: &dyn JobRunner,
+        queue: Vec<Request>,
+    ) -> Result<PipelineReport> {
+        ensure!(cfg.publish_every > 0, "publish_every must be > 0");
+        let mut publishes =
+            self.publish_generation(&self.names, 1, runner, cfg.train_workers)?;
+
+        let mut waves_q: Vec<Vec<Request>> = Vec::new();
+        let mut cur: Vec<Request> = Vec::new();
+        for r in queue {
+            cur.push(r);
+            if cur.len() == cfg.publish_every {
+                waves_q.push(std::mem::take(&mut cur));
+            }
+        }
+        if !cur.is_empty() {
+            waves_q.push(cur);
+        }
+
+        let sched = SchedCfg { workers: cfg.serve_workers.max(1), ..SchedCfg::default() };
+        let n_waves = waves_q.len();
+        let mut results: Vec<(u64, Tensor)> = Vec::new();
+        let mut pins: Vec<(u64, String)> = Vec::new();
+        let mut stats = ServeStats::default();
+        for (w, mut wave) in waves_q.into_iter().enumerate() {
+            // Pin every admitted request to its adapter's current version.
+            let pin = self.pin_map()?;
+            workload::pin_requests(&mut wave, |name| pin.get(name).copied());
+            for r in &wave {
+                pins.push((r.id, r.adapter.clone()));
+            }
+
+            // Round-robin slice of adapters to retrain while serving.
+            let retrain: Vec<String> = if w + 1 < n_waves && cfg.republish_per_wave > 0 {
+                (0..cfg.republish_per_wave.min(self.names.len()))
+                    .map(|k| {
+                        self.names[(w * cfg.republish_per_wave + k) % self.names.len()].clone()
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
+
+            let generation = w as u64 + 2;
+            let (serve_out, wave_pubs) = std::thread::scope(|s| {
+                let trainer = (!retrain.is_empty()).then(|| {
+                    let retrain = &retrain;
+                    s.spawn(move || {
+                        self.publish_generation(retrain, generation, runner, cfg.train_workers)
+                    })
+                });
+                let serve_out = serve_scheduled_host(&self.swap, &self.store, wave, &sched);
+                let pubs =
+                    trainer.map(|h| h.join().expect("pipeline trainer thread panicked"));
+                (serve_out, pubs)
+            });
+            let (wave_results, wave_stats) = serve_out?;
+            if let Some(p) = wave_pubs {
+                publishes.extend(p?);
+            }
+            merge_stats(&mut stats, wave_stats);
+            results.extend(wave_results);
+        }
+        results.sort_by_key(|&(id, _)| id);
+        pins.sort_by_key(|&(id, _)| id);
+        Ok(PipelineReport { results, pins, stats, publishes, waves: n_waves })
+    }
+
+    /// Sequential replay oracle: recompute each response from its pinned
+    /// ref's ΔW through the same per-request kernel the scheduler fuses
+    /// ([`DeltaRunner::eval_one`]). Bitwise-comparable to
+    /// [`PipelineReport::results`] regardless of worker count or publish
+    /// timing — pinned versions are immutable.
+    pub fn replay(
+        &self,
+        queue: &[Request],
+        pins: &[(u64, String)],
+    ) -> Result<Vec<(u64, Tensor)>> {
+        let pin: HashMap<u64, &str> = pins.iter().map(|(i, r)| (*i, r.as_str())).collect();
+        let mut out = Vec::with_capacity(queue.len());
+        for req in queue {
+            let r = pin
+                .get(&req.id)
+                .ok_or_else(|| anyhow!("request {} was never pinned", req.id))?;
+            let (deltas, _) = self.swap.deltas(&self.store, r)?;
+            let x = req
+                .batch
+                .get("x")
+                .ok_or_else(|| anyhow!("request {} has no 'x' tensor", req.id))?;
+            out.push((req.id, DeltaRunner::eval_one(deltas.as_slice(), x)?));
+        }
+        out.sort_by_key(|&(id, _)| id);
+        Ok(out)
+    }
+}
+
+/// Fold one wave's stats into the running total: counters sum, latencies
+/// concatenate, peaks max, per-adapter counts merge by (pinned) name.
+fn merge_stats(into: &mut ServeStats, s: ServeStats) {
+    into.requests += s.requests;
+    into.batches += s.batches;
+    into.swaps += s.swaps;
+    into.warm_swaps += s.warm_swaps;
+    into.swap_seconds += s.swap_seconds;
+    into.exec_seconds += s.exec_seconds;
+    into.wall_seconds += s.wall_seconds;
+    into.disk_reads += s.disk_reads;
+    into.queue_depth_peak = into.queue_depth_peak.max(s.queue_depth_peak);
+    into.full_flushes += s.full_flushes;
+    into.wait_flushes += s.wait_flushes;
+    into.final_flushes += s.final_flushes;
+    into.max_micro_batch = into.max_micro_batch.max(s.max_micro_batch);
+    into.latencies.extend(s.latencies);
+    for (name, c) in s.per_adapter {
+        match into.per_adapter.iter_mut().find(|(n, _)| *n == name) {
+            Some((_, tot)) => *tot += c,
+            None => into.per_adapter.push((name, c)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("fp_pipe_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn synth(seed: u64) -> SyntheticJob {
+        SyntheticJob {
+            method: "fourierft".into(),
+            sites: vec![SiteSpec { name: "blk0.attn.wq.w".into(), d1: 16, d2: 16 }],
+            hp: MethodHp { n: 8, rank: 2, init_std: 1.0 },
+            entry_seed: 2024,
+            alpha: 8.0,
+            seed,
+        }
+    }
+
+    fn site_dims16() -> BTreeMap<String, (usize, usize)> {
+        [("blk0.attn.wq.w".to_string(), (16usize, 16usize))].into_iter().collect()
+    }
+
+    #[test]
+    fn publish_generation_bumps_every_name_once() {
+        let pipe = Pipeline::open(&tmp("gen"), site_dims16(), 3, 4).unwrap();
+        let job = synth(7);
+        let recs = pipe.publish_generation(&pipe.names, 1, &job, 2).unwrap();
+        assert_eq!(recs.len(), 3);
+        for (rec, name) in recs.iter().zip(&pipe.names) {
+            assert_eq!(&rec.adapter, name, "records are name-ordered");
+            assert_eq!(rec.version, 1);
+            assert!(rec.bytes > 0);
+        }
+        let recs2 = pipe.publish_generation(&pipe.names, 2, &job, 2).unwrap();
+        assert!(recs2.iter().all(|r| r.version == 2));
+        assert_eq!(pipe.pin_map().unwrap()[&pipe.names[0]], 2);
+    }
+
+    #[test]
+    fn job_output_is_independent_of_worker_count() {
+        let job = synth(9);
+        let pipe_a = Pipeline::open(&tmp("det_a"), site_dims16(), 4, 4).unwrap();
+        let pipe_b = Pipeline::open(&tmp("det_b"), site_dims16(), 4, 4).unwrap();
+        pipe_a.publish_generation(&pipe_a.names, 1, &job, 1).unwrap();
+        pipe_b.publish_generation(&pipe_b.names, 1, &job, 4).unwrap();
+        for name in &pipe_a.names {
+            let a = pipe_a.store.load(name).unwrap();
+            let b = pipe_b.store.load(name).unwrap();
+            assert_eq!(a.version, b.version);
+            assert_eq!(a.tensors, b.tensors, "{name}: bytes depend on worker count");
+        }
+    }
+
+    #[cfg(not(feature = "xla-runtime"))]
+    #[test]
+    fn serve_dim_resolves_the_adapted_site_not_every_base_weight() {
+        let trainer = Trainer::open_default().unwrap();
+        let meta = trainer.meta_for("mlp__fourierft_n64__ce").unwrap();
+        // mlp adapts only hid.w (hidden × hidden = 64 × 64); the base
+        // also holds non-square weights (in.w is 2 × hidden) which must
+        // not confuse the resolution.
+        assert_eq!(serve_dim(&meta).unwrap(), 64);
+        assert!(meta.site_dims().values().any(|&(a, b)| a != b));
+    }
+
+    #[test]
+    fn keep_window_of_one_is_refused() {
+        // A 1-deep history window would let a concurrent publish GC the
+        // version in-flight batches are pinned to — Pipeline::open must
+        // reject it up front (found in review; see store GC semantics).
+        let err = Pipeline::open(&tmp("keep1"), site_dims16(), 2, 1).unwrap_err();
+        assert!(format!("{err:#}").contains("keep_versions"));
+        assert!(Pipeline::open(&tmp("keep2"), site_dims16(), 2, 2).is_ok());
+    }
+
+    #[test]
+    fn merge_stats_sums_counters_and_maxes_peaks() {
+        let mut total = ServeStats::default();
+        let a = ServeStats {
+            requests: 3,
+            batches: 2,
+            queue_depth_peak: 5,
+            latencies: vec![0.1, 0.2],
+            per_adapter: vec![("x".into(), 3)],
+            ..Default::default()
+        };
+        let b = ServeStats {
+            requests: 4,
+            batches: 1,
+            queue_depth_peak: 2,
+            latencies: vec![0.3],
+            per_adapter: vec![("x".into(), 1), ("y".into(), 3)],
+            ..Default::default()
+        };
+        merge_stats(&mut total, a);
+        merge_stats(&mut total, b);
+        assert_eq!(total.requests, 7);
+        assert_eq!(total.batches, 3);
+        assert_eq!(total.queue_depth_peak, 5);
+        assert_eq!(total.latencies.len(), 3);
+        assert_eq!(total.per_adapter, vec![("x".to_string(), 4), ("y".to_string(), 3)]);
+    }
+}

@@ -29,12 +29,20 @@
 //!    IDFT recompute on a warm swap; twiddle tables shared across
 //!    adapters with the same entry matrix).
 //!
-//! [`Server::publish`] invalidates every layer for the republished name;
-//! workers detect the republication on their next micro-batch because the
-//! cached `Arc` identity changes, so no stale ΔW or spectral tensors are
-//! ever served. Scheduler output is deterministic given a workload: the
-//! (request id → logits) mapping is identical across runs and worker
-//! counts (asserted in `tests/scheduler.rs`).
+//! [`Server::publish`] stamps a monotonic version into the store
+//! ([`crate::adapter::store::AdapterStore::publish`]) and invalidates
+//! **only the bare-name** entry in every layer — invalidation is
+//! *version-scoped*. Cache keys are whole ref strings, and a pinned ref
+//! `"name@N"` addresses the immutable version-N history copy, so
+//! in-flight micro-batches admitted against version N keep serving N
+//! while new admissions resolve the republished current bytes; a publish
+//! never flushes unrelated names or pinned versions (asserted in
+//! `tests/pipeline.rs`). Workers on bare names detect the republication
+//! on their next micro-batch because the cached `Arc` identity changes,
+//! so no stale ΔW or spectral tensors are ever served. Scheduler output
+//! is deterministic given a workload: the (request id → logits) mapping
+//! is identical across runs and worker counts (asserted in
+//! `tests/scheduler.rs`).
 //!
 //! Note on the XLA path: the vendored real-runtime PJRT handle types are
 //! not `Send`/`Sync`, so with the `xla-runtime` feature enabled
@@ -51,7 +59,7 @@ use super::scheduler::{BatchOut, BatchRunner};
 use super::trainer::{Batch, Trainer};
 use crate::adapter::format::AdapterFile;
 use crate::adapter::method::site_deltas_with_dims;
-use crate::adapter::store::{shard_index, AdapterStore, SharedAdapterStore};
+use crate::adapter::store::{shard_index, split_versioned, AdapterStore, SharedAdapterStore};
 use crate::runtime::{ParamSet, StepEngine};
 use crate::tensor::Tensor;
 use anyhow::Result;
@@ -317,11 +325,30 @@ impl SwapCache {
         Ok((d, SwapTrace { rebuilt: true, disk_read: store.disk_reads() > disk0 }))
     }
 
-    /// Drop all cached state for `name` (republish / external overwrite).
+    /// Drop all cached state for exactly `name` (republish / external
+    /// overwrite). Invalidation is version-scoped: keys are whole ref
+    /// strings, so invalidating a bare name leaves pinned `name@N`
+    /// entries resident (immutable versions never go stale) and vice
+    /// versa.
     pub fn invalidate(&mut self, name: &str) {
         self.tensors.remove(name);
         self.deltas.remove(name);
         self.order.retain(|n| n != name);
+    }
+
+    /// Drop the bare entry **and** every pinned `base@N` entry of one
+    /// adapter (adapter deletion / forced full refresh). Other names are
+    /// untouched — this is still not a global flush.
+    pub fn invalidate_family(&mut self, base: &str) {
+        let names: Vec<String> = self
+            .order
+            .iter()
+            .filter(|n| split_versioned(n.as_str()).0 == base)
+            .cloned()
+            .collect();
+        for n in names {
+            self.invalidate(&n);
+        }
     }
 
     pub fn clear(&mut self) {
@@ -427,9 +454,19 @@ impl SharedSwap {
         store.with_shard(name, |st| shard.deltas_traced(st, name))
     }
 
-    /// Drop all cached state for `name` in its owning shard.
+    /// Drop all cached state for exactly `name` in its owning shard
+    /// (version-scoped: pinned `name@N` entries live under their own ref
+    /// keys and survive a bare-name invalidation).
     pub fn invalidate(&self, name: &str) {
         self.shards[self.shard_of(name)].lock().unwrap().invalidate(name);
+    }
+
+    /// Drop the bare entry and every pinned version entry of `base`
+    /// across all shards (versioned refs hash to their own shards).
+    pub fn invalidate_family(&self, base: &str) {
+        for s in &self.shards {
+            s.lock().unwrap().invalidate_family(base);
+        }
     }
 
     pub fn clear(&self) {
@@ -657,15 +694,18 @@ impl<'a> Server<'a> {
         Ok((results, stats))
     }
 
-    /// Persist the currently-active adapter state under a new name
-    /// (training-service path: fine-tune then publish). `method` is any
-    /// registered method id; the device tensors are classified into
-    /// (site, role) records and the artifact's site dims are stamped into
-    /// the v2 file. Invalidates every cache layer for `name` so subsequent
-    /// swaps see the new contents — including scheduler workers
-    /// mid-stream, via the `Arc` identity check in their slots.
+    /// Persist the currently-active adapter state as the **next version**
+    /// of `name` (training-service path: fine-tune then publish).
+    /// `method` is any registered method id; the device tensors are
+    /// classified into (site, role) records and the artifact's site dims
+    /// are stamped into the v3 file alongside the monotonic version.
+    /// Invalidates only the bare-name cache layers, so subsequent swaps
+    /// see the new contents — including scheduler workers mid-stream, via
+    /// the `Arc` identity check in their slots — while version-pinned
+    /// refs keep serving the generation they were admitted against.
+    /// Returns (version, serialized bytes).
     pub fn publish(&mut self, name: &str, method: &str, seed: u64,
-                   meta: Vec<(String, String)>) -> Result<usize> {
+                   meta: Vec<(String, String)>) -> Result<(u64, usize)> {
         let exe = self.trainer.engine(&self.artifact)?;
         let file = AdapterFile::from_named(
             method,
@@ -675,11 +715,26 @@ impl<'a> Server<'a> {
             exe.adapt_tensors(&self.state)?,
             |site| self.site_dims.get(site).copied(),
         )?;
-        let bytes = self.store.save(name, &file)?;
-        // Drop per-name cache layers; the server's own device state
+        let out = self.store.publish(name, &file)?;
+        // Drop the bare-name cache layers; the server's own device state
         // already holds these tensors, so an active adapter stays active.
         self.swap.invalidate(name);
-        Ok(bytes)
+        Ok(out)
+    }
+
+    /// Restore the previous published version of `name` byte-identically
+    /// (see [`crate::adapter::store::AdapterStore::rollback`]) and drop
+    /// the bare-name cache layers so the next swap serves the restored
+    /// bytes. Returns the version now current.
+    pub fn rollback(&mut self, name: &str) -> Result<u64> {
+        let version = self.store.rollback(name)?;
+        self.swap.invalidate(name);
+        if self.active.as_deref() == Some(name) {
+            // The server's own state still holds the rolled-back
+            // generation's tensors; force a re-swap on next activation.
+            self.active = None;
+        }
+        Ok(version)
     }
 }
 
@@ -786,6 +841,58 @@ mod tests {
         assert!(resident.contains(&"b".to_string()));
         let (_, t3) = swap.deltas(&store, "a").unwrap();
         assert!(t3.rebuilt);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn publish_invalidation_is_version_scoped() {
+        use crate::adapter::method::{self, MethodHp, SiteSpec};
+        use crate::adapter::store::versioned_ref;
+        use crate::tensor::rng::Rng;
+
+        let dir = std::env::temp_dir().join(format!("fp_verswap_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = SharedAdapterStore::with_shards(&dir, 4, 16).unwrap();
+        let d = 8usize;
+        let sites = vec![SiteSpec { name: "blk0.attn.wq.w".into(), d1: d, d2: d }];
+        let site_dims: BTreeMap<String, (usize, usize)> =
+            [("blk0.attn.wq.w".to_string(), (d, d))].into_iter().collect();
+        let swap = SharedSwap::with_shards(site_dims, 4, 16);
+        let hp = MethodHp { n: 4, rank: 2, init_std: 1.0 };
+        let mut rng = Rng::new(0xCAFE);
+        let mk = |rng: &mut Rng| {
+            method::init_adapter("fourierft", rng, &sites, &hp, 2024, 4.0, vec![]).unwrap()
+        };
+        store.publish("hot", &mk(&mut rng)).unwrap();
+        store.publish("hot", &mk(&mut rng)).unwrap();
+        store.publish("cold", &mk(&mut rng)).unwrap();
+
+        // Warm the bare entry, a pinned version, and an unrelated name.
+        swap.deltas(&store, "hot").unwrap();
+        let (pinned_before, _) = swap.deltas(&store, &versioned_ref("hot", 1)).unwrap();
+        swap.deltas(&store, "cold").unwrap();
+
+        // Republish: only the bare-name entry drops.
+        store.publish("hot", &mk(&mut rng)).unwrap();
+        swap.invalidate("hot");
+        let resident = swap.resident();
+        assert!(!resident.contains(&"hot".to_string()));
+        assert!(resident.contains(&versioned_ref("hot", 1)), "pinned version must survive");
+        assert!(resident.contains(&"cold".to_string()), "unrelated names must survive");
+
+        // The surviving pinned entry is the same Arc (not rebuilt), and
+        // the bare name rebuilds against the new version.
+        let (pinned_after, trace) = swap.deltas(&store, &versioned_ref("hot", 1)).unwrap();
+        assert!(!trace.rebuilt);
+        assert!(Arc::ptr_eq(&pinned_before, &pinned_after));
+        let (_, bare_trace) = swap.deltas(&store, "hot").unwrap();
+        assert!(bare_trace.rebuilt);
+
+        // Family invalidation drops bare + every pinned ref of one name.
+        swap.invalidate_family("hot");
+        let resident = swap.resident();
+        assert!(resident.iter().all(|n| !n.starts_with("hot")));
+        assert!(resident.contains(&"cold".to_string()));
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -141,6 +141,21 @@ pub fn populate_store(store: &SharedAdapterStore, cfg: &WorkloadCfg) -> Result<V
     Ok(names)
 }
 
+/// Pin requests to adapter versions at admission time: rewrite each
+/// request's adapter to the versioned ref `name@v` the resolver returns
+/// (`None` leaves the bare name, e.g. for adapters outside the versioned
+/// registry). Pinning at admission is what makes a mid-traffic publish
+/// safe: a pinned ref addresses the immutable version-`v` history copy,
+/// so batches admitted against version N finish on N while later
+/// admissions resolve N+1 (see `coordinator::pipeline`).
+pub fn pin_requests(queue: &mut [Request], pin: impl Fn(&str) -> Option<u64>) {
+    for req in queue.iter_mut() {
+        if let Some(v) = pin(&req.adapter) {
+            req.adapter = crate::adapter::store::versioned_ref(&req.adapter, v);
+        }
+    }
+}
+
 /// Generate the request queue: Zipf-sampled adapter per request,
 /// id-derived batch contents, arrival order per `cfg.arrival`. Calling
 /// this twice with the same config yields bit-identical queues.
@@ -299,6 +314,27 @@ mod tests {
         let distinct: std::collections::HashSet<&String> =
             reqs.iter().map(|r| &r.adapter).collect();
         assert_eq!(seen.len(), distinct.len(), "first round must cover all drawn adapters");
+    }
+
+    #[test]
+    fn pin_requests_rewrites_only_resolved_names() {
+        let cfg = WorkloadCfg { adapters: 4, requests: 32, ..WorkloadCfg::small() };
+        let mut queue = gen_requests(&cfg);
+        let bare: Vec<String> = queue.iter().map(|r| r.adapter.clone()).collect();
+        pin_requests(&mut queue, |name| {
+            if name == adapter_name(0) {
+                Some(7)
+            } else {
+                None
+            }
+        });
+        for (req, orig) in queue.iter().zip(&bare) {
+            if orig == &adapter_name(0) {
+                assert_eq!(req.adapter, format!("{orig}@7"));
+            } else {
+                assert_eq!(&req.adapter, orig, "unresolved names must stay bare");
+            }
+        }
     }
 
     #[test]

@@ -43,6 +43,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("all") => all(args),
         Some("serve") => serve(args),
         Some("serve-host") => serve_host(args),
+        Some("pipeline") => pipeline(args),
         Some("methods") => methods(args),
         Some("probe") => probe(args),
         other => {
@@ -69,6 +70,10 @@ fn print_usage() {
          \x20 serve [--adapters N --requests N --workers N]  multi-adapter serving demo\n\
          \x20 serve-host [--method ID --adapters N --requests N --workers N]\n\
          \x20                                    pure-host scheduler demo, any registered method\n\
+         \x20 pipeline [--adapters N --requests N --publish-every S --workers W\n\
+         \x20           --train-workers T --steps K --keep V --artifact A]\n\
+         \x20                                    online lifecycle: background train -> versioned\n\
+         \x20                                    publish -> serve, with per-publish latency rows\n\
          \x20 methods [--d N --layers N --n N --rank N]      registered adapter methods + budgets\n\
          \n\
          global flags:\n\
@@ -148,6 +153,98 @@ fn serve_host(args: &Args) -> Result<()> {
         stats.disk_reads,
         fourier_peft::util::fmt_bytes(store.total_bytes()? as usize)
     );
+    Ok(())
+}
+
+/// Real-runtime fallback: the background training pool needs a
+/// thread-shareable engine, which the vendored PJRT handles cannot
+/// provide (same restriction as the concurrent serve path).
+#[cfg(feature = "xla-runtime")]
+fn pipeline(_args: &Args) -> Result<()> {
+    anyhow::bail!(
+        "`repro pipeline` drives host-engine training jobs on a background worker pool; \
+         the xla-runtime build has no thread-safe engine — rebuild without the feature"
+    )
+}
+
+/// Online adapter lifecycle: host-engine training jobs on a background
+/// pool, versioned publishes hot-swapped into the live scheduler path,
+/// per-publish latency accounting. `BENCH_JSON=path` appends the latency
+/// rows (`pipeline/publish_latency`, `pipeline/serve_latency`) as
+/// machine-readable JSON — the rows the `pipeline-smoke` CI job uploads.
+#[cfg(not(feature = "xla-runtime"))]
+fn pipeline(args: &Args) -> Result<()> {
+    use fourier_peft::coordinator::pipeline::{
+        self, EngineTrainJob, Pipeline, PipelineCfg,
+    };
+    use fourier_peft::coordinator::workload;
+
+    let trainer = open_trainer(args)?;
+    let cfg = PipelineCfg {
+        artifact: args.str_or("artifact", "mlp__fourierft_n64__ce").to_string(),
+        adapters: args.usize_or("adapters", 8),
+        requests: args.usize_or("requests", 256),
+        publish_every: args.usize_or("publish-every", 64),
+        republish_per_wave: args.usize_or("republish", 2),
+        serve_workers: args.usize_or("workers", 2),
+        train_workers: args.usize_or("train-workers", 2),
+        steps: args.usize_or("steps", 5),
+        keep_versions: args.usize_or("keep", 4),
+        batch: args.usize_or("batch", 2),
+        zipf_s: args.f64_or("zipf", 1.1),
+        seed: args.u64_or("seed", 2024),
+    };
+    let meta = trainer.meta_for(&cfg.artifact)?;
+    let dim = pipeline::serve_dim(&meta)?;
+    let dir = fourier_peft::runs_dir().join("pipeline_demo");
+    let _ = std::fs::remove_dir_all(&dir);
+    let pipe = Pipeline::open(&dir, meta.site_dims(), cfg.adapters, cfg.keep_versions)?;
+    let job = EngineTrainJob::new(&trainer, &cfg.artifact, cfg.steps, cfg.seed);
+    let queue = workload::gen_requests(&pipeline::workload_cfg(&cfg, dim));
+    let report = pipe.run(&cfg, &job, queue)?;
+
+    let stats = &report.stats;
+    println!(
+        "pipeline: {} adapters x {} requests in {} waves  ({} publishes, keep {})",
+        cfg.adapters, stats.requests, report.waves, report.publishes.len(), cfg.keep_versions
+    );
+    println!(
+        "serve: {} micro-batches  swaps {} ({} warm)  disk reads {}  wall {:.3}s  \
+         => {:.1} req/s",
+        stats.batches, stats.swaps, stats.warm_swaps, stats.disk_reads,
+        stats.wall_seconds, stats.throughput_rps()
+    );
+    println!(
+        "serve latency p50 {:.1}ms  p95 {:.1}ms  p99 {:.1}ms",
+        stats.latency_p50() * 1e3, stats.latency_p95() * 1e3, stats.latency_p99() * 1e3
+    );
+    println!(
+        "publish latency p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms  \
+         (train per job p50 {:.1}ms)",
+        report.publish_latency_percentile(50.0) * 1e3,
+        report.publish_latency_percentile(95.0) * 1e3,
+        report.publish_latency_percentile(99.0) * 1e3,
+        fourier_peft::util::percentile(
+            &report.publishes.iter().map(|r| r.train_seconds).collect::<Vec<_>>(),
+            50.0,
+        ) * 1e3,
+    );
+    for rec in &report.publishes {
+        println!(
+            "  published {:<10} v{:<3} {:>8}  train {:.1}ms  publish {:.2}ms",
+            rec.adapter,
+            rec.version,
+            fourier_peft::util::fmt_bytes(rec.bytes),
+            rec.train_seconds * 1e3,
+            rec.publish_seconds * 1e3
+        );
+    }
+    // Machine-readable rows (appended when BENCH_JSON is set).
+    let bench = fourier_peft::util::bench::Bench::quick();
+    bench.report_percentiles("pipeline/serve_latency", &stats.latencies);
+    let pub_lat: Vec<f64> =
+        report.publishes.iter().map(|r| r.publish_seconds).collect();
+    bench.report_percentiles("pipeline/publish_latency", &pub_lat);
     Ok(())
 }
 

@@ -72,12 +72,17 @@ pub fn median(xs: &[f64]) -> f64 {
 /// closest ranks (the numpy `linear` convention: rank = p/100 · (n−1)).
 /// Copies + sorts; empty input returns 0.0 so latency reporting on an
 /// empty serve call degrades gracefully (matching [`median`]).
+///
+/// Total-order sort (`f64::total_cmp`), so a NaN sample — e.g. a latency
+/// row derived from a zero-duration division — sorts last instead of
+/// panicking the comparator; a NaN `p` returns 0.0 rather than indexing
+/// through a NaN rank.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    if xs.is_empty() || p.is_nan() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let p = p.clamp(0.0, 100.0);
     let rank = p / 100.0 * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
@@ -129,6 +134,31 @@ mod tests {
         assert_eq!(percentile(&[7.5], 99.0), 7.5);
         // out-of-range p clamps
         assert_eq!(percentile(&[1.0, 2.0], 150.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_edge_cases_empty_single_unsorted_nan() {
+        // empty => 0.0 at every p, including the extremes
+        for p in [0.0, 50.0, 100.0] {
+            assert_eq!(percentile(&[], p), 0.0);
+        }
+        // single sample => that sample at every p
+        for p in [0.0, 37.0, 100.0] {
+            assert_eq!(percentile(&[4.25], p), 4.25);
+        }
+        // unsorted (and reverse-sorted) input sorts internally
+        assert!((percentile(&[9.0, 1.0, 5.0, 3.0, 7.0], 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile(&[4.0, 3.0, 2.0, 1.0], 50.0) - 2.5).abs() < 1e-12);
+        // a NaN sample must not panic the sort; it orders last, so low
+        // percentiles still interpolate over the finite samples
+        let with_nan = [3.0, 1.0, f64::NAN, 2.0];
+        assert!((percentile(&with_nan, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&with_nan, 50.0) - 2.5).abs() < 1e-12);
+        // NaN p degrades to 0.0 instead of producing a NaN rank
+        assert_eq!(percentile(&[1.0, 2.0], f64::NAN), 0.0);
+        // ±inf p clamps like any out-of-range p
+        assert_eq!(percentile(&[1.0, 2.0], f64::INFINITY), 2.0);
+        assert_eq!(percentile(&[1.0, 2.0], f64::NEG_INFINITY), 1.0);
     }
 
     #[test]

@@ -1,0 +1,132 @@
+//! Format-fixture regression tests: the committed v1/v2/v3 adapter files
+//! under `tests/fixtures/` are frozen bytes from each format generation.
+//! They pin the read-compat contract forever:
+//!
+//! * v1 (kind byte + name-convention schema) and v2 (method string +
+//!   site/role schema) files load with **byte-identical payloads** and
+//!   report **version 0**;
+//! * the v3 fixture carries a stamped publish version and round-trips it;
+//! * all three reconstruct the identical ΔW bitwise (same coefficients,
+//!   same entry seed, same alpha), regardless of which generation wrote
+//!   them.
+
+use fourier_peft::adapter::format::AdapterFile;
+use fourier_peft::adapter::merge::delta_host;
+use fourier_peft::adapter::method;
+use fourier_peft::tensor::Tensor;
+
+/// The payload every fixture stores (all values exactly representable).
+const COEF: [f32; 8] = [0.5, -1.25, 2.0, -3.5, 0.125, 4.75, -0.625, 1.0];
+const SITE: &str = "blk0.attn.wq.w";
+const NAME: &str = "spec.blk0.attn.wq.w.c";
+const SEED: u64 = 2024;
+const ALPHA: f32 = 16.0;
+const D: usize = 16;
+
+fn assert_payload_bits(t: &Tensor, what: &str) {
+    let v = t.as_f32().unwrap();
+    assert_eq!(v.len(), COEF.len(), "{what}: payload length");
+    for (i, (got, want)) in v.iter().zip(COEF.iter()).enumerate() {
+        assert!(
+            got.to_bits() == want.to_bits(),
+            "{what}: coefficient {i}: {got} vs {want} not byte-identical"
+        );
+    }
+}
+
+fn reference_delta() -> Tensor {
+    let coeffs = Tensor::f32(&[COEF.len()], COEF.to_vec());
+    delta_host(&coeffs, SEED, COEF.len(), D, D, ALPHA).unwrap()
+}
+
+fn assert_delta_bits(got: &[(String, Tensor)], what: &str) {
+    assert_eq!(got.len(), 1, "{what}: one site");
+    assert_eq!(got[0].0, SITE);
+    let want = reference_delta();
+    let (a, b) = (got[0].1.as_f32().unwrap(), want.as_f32().unwrap());
+    assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        assert!(
+            a[i].to_bits() == b[i].to_bits(),
+            "{what}: ΔW element {i} not bitwise identical"
+        );
+    }
+}
+
+#[test]
+fn v1_fixture_loads_byte_identically_as_version_zero() {
+    let file =
+        AdapterFile::from_bytes(include_bytes!("fixtures/v1_fourierft.adapter")).unwrap();
+    assert_eq!(file.method, "fourierft");
+    assert_eq!(file.version, 0, "v1 files must report version 0");
+    assert_eq!(file.seed, SEED);
+    assert_eq!(file.alpha, ALPHA);
+    assert_eq!(file.meta_get("n"), Some("8"));
+    assert!(file.sites.is_empty(), "v1 never stored dims");
+    assert_eq!(file.tensors.len(), 1);
+    assert_eq!(file.tensors[0].name, NAME);
+    assert_eq!(file.tensors[0].site, SITE);
+    assert_eq!(file.tensors[0].role, "coef");
+    assert_payload_bits(&file.tensors[0].tensor, "v1");
+    // dims come from the caller (the serving cache's artifact-meta map)
+    let deltas = method::site_deltas_with_dims(&file, |_| Some((D, D))).unwrap();
+    assert_delta_bits(&deltas, "v1");
+}
+
+#[test]
+fn v2_fixture_loads_byte_identically_as_version_zero() {
+    let file =
+        AdapterFile::from_bytes(include_bytes!("fixtures/v2_fourierft.adapter")).unwrap();
+    assert_eq!(file.method, "fourierft");
+    assert_eq!(file.version, 0, "v2 files must report version 0");
+    assert_eq!(file.seed, SEED);
+    assert_eq!(file.alpha, ALPHA);
+    assert_eq!(file.meta_get("n"), Some("8"));
+    assert_eq!(file.site_dims(SITE), Some((D, D)), "v2 stores dims in the file");
+    assert_eq!(file.tensors.len(), 1);
+    assert_eq!(file.tensors[0].role, "coef");
+    assert_payload_bits(&file.tensors[0].tensor, "v2");
+    // dims resolve from the file itself — no fallback needed
+    let deltas = method::site_deltas(&file).unwrap();
+    assert_delta_bits(&deltas, "v2");
+}
+
+#[test]
+fn v3_fixture_carries_its_stamped_version() {
+    let bytes: &[u8] = include_bytes!("fixtures/v3_fourierft.adapter");
+    let file = AdapterFile::from_bytes(bytes).unwrap();
+    assert_eq!(file.method, "fourierft");
+    assert_eq!(file.version, 7, "v3 publish stamp must survive the load");
+    assert_eq!(file.seed, SEED);
+    assert_eq!(file.site_dims(SITE), Some((D, D)));
+    assert_payload_bits(&file.tensors[0].tensor, "v3");
+    let deltas = method::site_deltas(&file).unwrap();
+    assert_delta_bits(&deltas, "v3");
+    // the current writer produces exactly these bytes for this content
+    assert_eq!(bytes.len(), file.byte_size(), "byte_size must match the fixture");
+    let dir = std::env::temp_dir().join(format!("fp_fixture_{}", std::process::id()));
+    let path = dir.join("resave.adapter");
+    file.save(&path).unwrap();
+    assert_eq!(std::fs::read(&path).unwrap(), bytes, "resave must be byte-identical");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn all_generations_reconstruct_the_same_delta() {
+    let v1 =
+        AdapterFile::from_bytes(include_bytes!("fixtures/v1_fourierft.adapter")).unwrap();
+    let v2 =
+        AdapterFile::from_bytes(include_bytes!("fixtures/v2_fourierft.adapter")).unwrap();
+    let v3 =
+        AdapterFile::from_bytes(include_bytes!("fixtures/v3_fourierft.adapter")).unwrap();
+    let d1 = method::site_deltas_with_dims(&v1, |_| Some((D, D))).unwrap();
+    let d2 = method::site_deltas(&v2).unwrap();
+    let d3 = method::site_deltas(&v3).unwrap();
+    for (a, b) in [(&d1, &d2), (&d2, &d3)] {
+        let (x, y) = (a[0].1.as_f32().unwrap(), b[0].1.as_f32().unwrap());
+        assert_eq!(x.len(), y.len());
+        for i in 0..x.len() {
+            assert!(x[i].to_bits() == y[i].to_bits(), "cross-generation ΔW diverged at {i}");
+        }
+    }
+}

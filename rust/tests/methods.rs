@@ -367,6 +367,7 @@ fn unknown_method_everywhere_is_an_error() {
     // compat) but refuses to reconstruct.
     let file = AdapterFile {
         method: "from_the_future".into(),
+        version: 0,
         seed: 0,
         alpha: 1.0,
         meta: vec![],

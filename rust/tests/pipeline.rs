@@ -1,0 +1,401 @@
+//! Versioned adapter-lifecycle integration tests, pure host (no XLA):
+//! the background train → publish → serve pipeline of
+//! `coordinator::pipeline` over the versioned store and the
+//! version-scoped swap cache.
+//!
+//! Pins the PR-5 acceptance claims:
+//! * **deterministic lifecycle**: with publishes interleaved mid-traffic,
+//!   every response is bitwise equal to the sequential replay of
+//!   whichever version its batch was pinned to — across {1, 4} serve
+//!   workers and a re-run, with identical pins;
+//! * **rollback** restores the previous version's outputs bitwise;
+//! * **store versioning** (monotonic versions, keep-K GC, rollback,
+//!   `check_versions_consistent`) matches a naive reference model under
+//!   seeded op sequences, in the style of `tests/serving_cache.rs`;
+//! * **version-scoped invalidation**: a publish drops exactly the
+//!   bare-name cache entry — pinned `name@N` entries and unrelated names
+//!   survive, checked against a reference resident-set model.
+
+use fourier_peft::adapter::format::AdapterFile;
+use fourier_peft::adapter::method::{MethodHp, SiteSpec};
+use fourier_peft::adapter::store::{split_versioned, versioned_ref, AdapterStore};
+use fourier_peft::adapter::SharedAdapterStore;
+use fourier_peft::coordinator::pipeline::{
+    self, Pipeline, PipelineCfg, PipelineReport, SyntheticJob,
+};
+use fourier_peft::coordinator::scheduler::{serve_scheduled_host, SchedCfg};
+use fourier_peft::coordinator::serving::{Request, SwapCache};
+use fourier_peft::coordinator::trainer::Trainer;
+use fourier_peft::coordinator::workload::{self, WorkloadCfg};
+use fourier_peft::tensor::{rng::Rng, Tensor};
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("fp_pipeline_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn assert_bitwise_equal(a: &[(u64, Tensor)], b: &[(u64, Tensor)], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: result counts differ");
+    for ((ia, ta), (ib, tb)) in a.iter().zip(b.iter()) {
+        assert_eq!(ia, ib, "{what}: id order differs");
+        let (va, vb) = (ta.as_f32().unwrap(), tb.as_f32().unwrap());
+        assert_eq!(va.len(), vb.len(), "{what}: shapes differ at id {ia}");
+        for i in 0..va.len() {
+            assert!(
+                va[i].to_bits() == vb[i].to_bits(),
+                "{what}: id {ia} element {i}: {} vs {} not bitwise identical",
+                va[i],
+                vb[i]
+            );
+        }
+    }
+}
+
+// --- tentpole acceptance: deterministic end-to-end lifecycle --------------
+
+// The engine-backed lifecycle needs the thread-shareable host engine
+// (`EngineTrainJob` is compiled out under `xla-runtime`, like the
+// scheduler's engine runner); the synthetic-job tests below run in both
+// builds.
+#[cfg(not(feature = "xla-runtime"))]
+fn run_lifecycle(tag: &str, serve_workers: usize) -> (PipelineReport, Vec<Request>, Pipeline) {
+    use fourier_peft::coordinator::pipeline::EngineTrainJob;
+    let trainer = Trainer::open_default().unwrap();
+    let cfg = PipelineCfg { serve_workers, ..PipelineCfg::small() };
+    let meta = trainer.meta_for(&cfg.artifact).unwrap();
+    let dim = pipeline::serve_dim(&meta).unwrap();
+    let pipe =
+        Pipeline::open(&tmpdir(tag), meta.site_dims(), cfg.adapters, cfg.keep_versions).unwrap();
+    let job = EngineTrainJob::new(&trainer, &cfg.artifact, cfg.steps, cfg.seed);
+    let queue = workload::gen_requests(&pipeline::workload_cfg(&cfg, dim));
+    let report = pipe.run(&cfg, &job, queue.clone()).unwrap();
+    (report, queue, pipe)
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+#[test]
+fn pipeline_lifecycle_bitwise_vs_replay_across_workers() {
+    let (r1, q1, p1) = run_lifecycle("lc1", 1);
+    let (r4, _, _) = run_lifecycle("lc4", 4);
+    let (r4b, _, _) = run_lifecycle("lc4b", 4);
+
+    // Pins (which version each request was admitted against) are
+    // reproducible, and so are the served logits — bitwise.
+    assert_eq!(r1.pins, r4.pins, "pins must not depend on worker count");
+    assert_eq!(r4.pins, r4b.pins, "pins must not depend on the run");
+    assert_bitwise_equal(&r1.results, &r4.results, "1-worker vs 4-worker");
+    assert_bitwise_equal(&r4.results, &r4b.results, "4-worker run vs re-run");
+
+    // Every response equals the sequential replay of its pinned version.
+    let replayed = p1.replay(&q1, &r1.pins).unwrap();
+    assert_bitwise_equal(&r1.results, &replayed, "scheduler vs sequential replay");
+
+    // Publishes really interleaved with traffic: some batch was pinned to
+    // a republished (>= 2) version, and the full publish roster landed.
+    assert!(
+        r1.pins
+            .iter()
+            .any(|(_, r)| matches!(split_versioned(r).1, Some(v) if v >= 2)),
+        "no request ever saw a republished version — publish cadence broken"
+    );
+    let cfg = PipelineCfg::small();
+    let waves = (cfg.requests + cfg.publish_every - 1) / cfg.publish_every;
+    assert_eq!(r1.publishes.len(), cfg.adapters + (waves - 1) * cfg.republish_per_wave);
+    assert_eq!(r1.results.len(), cfg.requests);
+    assert_eq!(r1.stats.requests, cfg.requests);
+
+    // Store invariants: versions monotonic, current = newest retained.
+    for name in &p1.names {
+        let vs = p1.store.versions(name).unwrap();
+        assert!(!vs.is_empty());
+        assert!(vs.windows(2).all(|w| w[0] < w[1]), "{name}: versions not monotonic");
+        assert!(p1.store.check_versions_consistent(name), "{name}: inconsistent");
+        assert_eq!(p1.store.current_version(name).unwrap(), *vs.last().unwrap());
+    }
+
+    // Retraining produced genuinely different bytes: v1 and v2 of a
+    // republished adapter reconstruct different ΔW.
+    let retrained = p1
+        .names
+        .iter()
+        .find(|n| p1.store.versions(n.as_str()).unwrap().len() >= 2)
+        .expect("some adapter must have been republished");
+    let (d1, _) = p1.swap.deltas(&p1.store, &versioned_ref(retrained, 1)).unwrap();
+    let (d2, _) = p1.swap.deltas(&p1.store, &versioned_ref(retrained, 2)).unwrap();
+    assert!(
+        d1[0].1.max_abs_diff(&d2[0].1).unwrap() > 0.0,
+        "{retrained}: warm-started retraining changed nothing"
+    );
+}
+
+// --- tentpole acceptance: rollback ----------------------------------------
+
+#[test]
+fn pipeline_lifecycle_rollback_restores_bitwise_prior_outputs() {
+    let pipe = Pipeline::open(
+        &tmpdir("rb"),
+        [("blk0.attn.wq.w".to_string(), (16usize, 16usize))].into_iter().collect(),
+        3,
+        4,
+    )
+    .unwrap();
+    let job = SyntheticJob {
+        method: "fourierft".into(),
+        sites: vec![SiteSpec { name: "blk0.attn.wq.w".into(), d1: 16, d2: 16 }],
+        hp: MethodHp { n: 8, rank: 2, init_std: 1.0 },
+        entry_seed: 2024,
+        alpha: 8.0,
+        seed: 77,
+    };
+    pipe.publish_generation(&pipe.names, 1, &job, 2).unwrap();
+
+    let wl = WorkloadCfg {
+        adapters: 3,
+        requests: 24,
+        dim: 16,
+        batch: 2,
+        ..WorkloadCfg::small()
+    };
+    let sched = SchedCfg { workers: 2, max_batch: 4, max_wait_ticks: 8, queue_cap: 16 };
+    let serve_pinned = |pipe: &Pipeline| {
+        let mut q = workload::gen_requests(&wl);
+        let pin = pipe.pin_map().unwrap();
+        workload::pin_requests(&mut q, |n| pin.get(n).copied());
+        serve_scheduled_host(&pipe.swap, &pipe.store, q, &sched).unwrap().0
+    };
+
+    let v1_out = serve_pinned(&pipe);
+    pipe.publish_generation(&pipe.names, 2, &job, 2).unwrap();
+    let v2_out = serve_pinned(&pipe);
+    // the new generation really serves different logits
+    assert!(
+        v1_out.iter().zip(&v2_out).any(|((_, a), (_, b))| {
+            a.as_f32()
+                .unwrap()
+                .iter()
+                .zip(b.as_f32().unwrap())
+                .any(|(x, y)| x.to_bits() != y.to_bits())
+        }),
+        "generation 2 served identical logits to generation 1"
+    );
+
+    // Rollback: every adapter back to version 1, bitwise.
+    for name in &pipe.names {
+        assert_eq!(pipe.rollback(name).unwrap(), 1);
+        assert_eq!(pipe.store.current_version(name).unwrap(), 1);
+        assert!(pipe.store.check_versions_consistent(name));
+    }
+    let v3_out = serve_pinned(&pipe);
+    assert_bitwise_equal(&v1_out, &v3_out, "rollback must restore prior outputs");
+    // nothing older than version 1 is retained
+    assert!(pipe.rollback(&pipe.names[0]).is_err());
+}
+
+// --- every registered 2-D method ships through the versioned pipeline -----
+
+#[test]
+fn pipeline_serves_every_builtin_method_versioned() {
+    for method in ["fourierft", "lora", "dense", "loca", "circulant"] {
+        let pipe = Pipeline::open(
+            &tmpdir(&format!("m_{method}")),
+            [("blk0.attn.wq.w".to_string(), (16usize, 16usize))].into_iter().collect(),
+            2,
+            4,
+        )
+        .unwrap();
+        let job = SyntheticJob {
+            method: method.into(),
+            sites: vec![SiteSpec { name: "blk0.attn.wq.w".into(), d1: 16, d2: 16 }],
+            hp: MethodHp { n: 6, rank: 2, init_std: 1.0 },
+            entry_seed: 2024,
+            alpha: 4.0,
+            seed: 5,
+        };
+        pipe.publish_generation(&pipe.names, 1, &job, 2).unwrap();
+        pipe.publish_generation(&pipe.names, 2, &job, 2).unwrap();
+        let wl = WorkloadCfg {
+            adapters: 2,
+            requests: 16,
+            dim: 16,
+            batch: 2,
+            ..WorkloadCfg::small()
+        };
+        let mut q = workload::gen_requests(&wl);
+        let pin = pipe.pin_map().unwrap();
+        workload::pin_requests(&mut q, |n| pin.get(n).copied());
+        let sched = SchedCfg { workers: 2, max_batch: 4, max_wait_ticks: 8, queue_cap: 16 };
+        let (out, _) =
+            serve_scheduled_host(&pipe.swap, &pipe.store, q.clone(), &sched).unwrap();
+        assert_eq!(out.len(), 16, "{method}: every request served");
+        // pinned to version 2, and replayable from the pinned bytes
+        assert!(q.iter().all(|r| split_versioned(&r.adapter).1 == Some(2)), "{method}");
+        let pins: Vec<(u64, String)> = q.iter().map(|r| (r.id, r.adapter.clone())).collect();
+        let replayed = pipe.replay(&q, &pins).unwrap();
+        assert_bitwise_equal(&out, &replayed, &format!("{method}: replay"));
+    }
+}
+
+// --- satellite: store versioning vs a naive reference model ---------------
+
+fn marked_adapter(marker: f32) -> AdapterFile {
+    AdapterFile::from_named(
+        "fourierft",
+        2024,
+        4.0,
+        vec![("marker".into(), format!("{marker}"))],
+        vec![("spec.blk0.attn.wq.w.c".into(), Tensor::f32(&[4], vec![marker; 4]))],
+        |_| Some((8, 8)),
+    )
+    .unwrap()
+}
+
+#[derive(Default)]
+struct NameModel {
+    latest: u64,
+    current: Option<u64>,
+    history: Vec<u64>,
+}
+
+#[test]
+fn store_versioning_matches_reference_model() {
+    for keep in [1usize, 2, 4] {
+        let store =
+            SharedAdapterStore::with_shards_keep(&tmpdir(&format!("model_k{keep}")), 4, 32, keep)
+                .unwrap();
+        let names = ["alpha", "beta", "gamma"];
+        let mut model: HashMap<&str, NameModel> = HashMap::new();
+        let mut markers: HashMap<(String, u64), f32> = HashMap::new();
+        let mut rng = Rng::new(0x5EED ^ keep as u64);
+        for step in 0..250 {
+            let name = names[rng.below(names.len())];
+            let m = model.entry(name).or_default();
+            match rng.below(4) {
+                0 | 1 => {
+                    // publish
+                    let marker = step as f32;
+                    let (v, bytes) = store.publish(name, &marked_adapter(marker)).unwrap();
+                    assert_eq!(v, m.latest + 1, "step {step}: versions must be monotonic");
+                    assert!(bytes > 0);
+                    m.latest = v;
+                    m.current = Some(v);
+                    m.history.push(v);
+                    if m.history.len() > keep {
+                        let cut = m.history.len() - keep;
+                        m.history.drain(..cut);
+                    }
+                    markers.insert((name.to_string(), v), marker);
+                }
+                2 => {
+                    // rollback
+                    let want = m.current.and_then(|cur| {
+                        m.history.iter().copied().filter(|&v| v < cur).max()
+                    });
+                    match (store.rollback(name), want) {
+                        (Ok(v), Some(w)) => {
+                            assert_eq!(v, w, "step {step}: wrong rollback target");
+                            m.current = Some(w);
+                        }
+                        (Err(_), None) => {}
+                        (Ok(v), None) => {
+                            panic!("step {step}: rollback to {v} with no retained target")
+                        }
+                        (Err(e), Some(w)) => {
+                            panic!("step {step}: rollback to {w} failed: {e:#}")
+                        }
+                    }
+                }
+                _ => {
+                    // verify against the model
+                    match m.current {
+                        Some(cur) => {
+                            let f = store.load(name).unwrap();
+                            assert_eq!(f.version, cur, "step {step}: wrong current version");
+                            let want = markers[&(name.to_string(), cur)];
+                            assert_eq!(
+                                f.meta_get("marker"),
+                                Some(format!("{want}").as_str()),
+                                "step {step}: current bytes are not version {cur}'s"
+                            );
+                        }
+                        None => assert!(store.load(name).is_err()),
+                    }
+                    assert_eq!(
+                        store.versions(name).unwrap(),
+                        m.history,
+                        "step {step}: retained history diverged (keep {keep})"
+                    );
+                }
+            }
+            assert!(
+                store.check_versions_consistent(name),
+                "step {step}: invariants broken for '{name}' (keep {keep})"
+            );
+        }
+    }
+}
+
+// --- satellite: version-scoped swap invalidation vs reference model -------
+
+#[test]
+fn version_scoped_swap_cache_matches_reference_model() {
+    let mut store =
+        AdapterStore::open(&tmpdir("swapmodel")).unwrap().with_keep_versions(64);
+    let dims: BTreeMap<String, (usize, usize)> =
+        [("blk0.attn.wq.w".to_string(), (8usize, 8usize))].into_iter().collect();
+    let mut swap = SwapCache::with_cap(dims, 256);
+    let names = ["a", "b", "c"];
+    let mut latest: HashMap<&str, u64> = HashMap::new();
+    for name in names {
+        let (v, _) = store.publish(name, &marked_adapter(1.0)).unwrap();
+        latest.insert(name, v);
+    }
+    let mut model: HashSet<String> = HashSet::new();
+    let mut rng = Rng::new(0xC0DE);
+    for step in 0..200 {
+        let name = names[rng.below(names.len())];
+        match rng.below(5) {
+            0 | 1 => {
+                // bare access resolves the current version
+                swap.deltas(&mut store, name).unwrap();
+                model.insert(name.to_string());
+            }
+            2 => {
+                // pinned access of a retained version
+                let v = 1 + rng.below(latest[name] as usize) as u64;
+                let r = versioned_ref(name, v);
+                swap.deltas(&mut store, &r).unwrap();
+                model.insert(r);
+            }
+            3 => {
+                // publish: only the bare entry drops
+                let (v, _) =
+                    store.publish(name, &marked_adapter(step as f32 + 2.0)).unwrap();
+                swap.invalidate(name);
+                latest.insert(name, v);
+                model.remove(name);
+            }
+            _ => {
+                // full family invalidation (adapter deletion path)
+                swap.invalidate_family(name);
+                model.retain(|k| split_versioned(k).0 != name);
+            }
+        }
+        assert!(swap.check_consistent(), "step {step}: LRU invariants broken");
+        let mut resident = swap.resident();
+        resident.sort();
+        let mut want: Vec<String> = model.iter().cloned().collect();
+        want.sort();
+        assert_eq!(resident, want, "step {step}: resident set diverged from model");
+    }
+    // And the scoping claim itself, explicitly: warm a pin, republish,
+    // assert the pin survives while the bare entry rebuilt.
+    let pin = versioned_ref("a", 1);
+    swap.deltas(&mut store, &pin).unwrap();
+    store.publish("a", &marked_adapter(999.0)).unwrap();
+    swap.invalidate("a");
+    assert!(swap.contains(&pin), "publish must not flush pinned versions");
+    let (_, trace) = swap.deltas_traced(&mut store, "a").unwrap();
+    assert!(trace.rebuilt, "bare name must rebuild after a publish");
+}
