@@ -63,6 +63,28 @@ fn main() -> anyhow::Result<()> {
             gemm_at_n1024 = gemm;
         }
     }
+
+    // --- factored (no-materialize) apply vs dense reconstruct+apply ------
+    // Dense applies x·ΔW after materializing ΔW (d² MACs/row + the
+    // reconstruct); factored runs the same product as two stacked GEMMs
+    // straight from the plan (2n(d1+d2) MACs/row, no d² intermediate).
+    // The crossover in n documented in EXPERIMENTS.md §Perf comes from
+    // these rows: factored wins iff 2n(d1+d2) < d1·d2.
+    for (dd, batch) in [(128usize, 8usize), (768, 8), (768, 32)] {
+        for n in [16usize, 128] {
+            let (rows, cols) = sample_entries(dd, dd, n, EntryBias::None, 2024);
+            let c = rng.normal_vec(n, 1.0);
+            let p = plan::global().get((&rows, &cols), dd, dd)?;
+            let x = rng.normal_vec(batch * dd, 1.0);
+            b.run(&format!("reconstruct/dense_apply/d{dd}_n{n}_b{batch}"), || {
+                let dw = p.reconstruct(&c, 8.0).unwrap();
+                fourier_peft::tensor::par::matmul_f32(&x, &dw, batch, dd, dd)
+            });
+            b.run(&format!("reconstruct/factored/d{dd}_n{n}_b{batch}"), || {
+                p.apply(&x, batch, &c, 8.0).unwrap()
+            });
+        }
+    }
     println!(
         "{:<44} {:.1}x  (trig {} vs gemm {})",
         "reconstruct/speedup_gemm_vs_trig/d128_n1024",
@@ -141,7 +163,7 @@ fn main() -> anyhow::Result<()> {
     // --- micro-batching scheduler vs sequential serve (500-adapter Zipf) --
     {
         use fourier_peft::adapter::store::SharedAdapterStore;
-        use fourier_peft::coordinator::scheduler::{self, SchedCfg};
+        use fourier_peft::coordinator::scheduler::{self, ApplyMode, SchedCfg};
         use fourier_peft::coordinator::serving::SharedSwap;
         use fourier_peft::coordinator::workload::{self, WorkloadCfg};
 
@@ -152,22 +174,33 @@ fn main() -> anyhow::Result<()> {
         workload::populate_store(&store, &wl)?;
         let swap = SharedSwap::with_shards(workload::site_dims(&wl), 8, 128);
         let queue = workload::gen_requests(&wl);
+        let sched = |workers: usize, apply: ApplyMode| SchedCfg {
+            workers,
+            max_batch: 32,
+            max_wait_ticks: 256,
+            queue_cap: 1024,
+            apply,
+        };
 
         // Warm the cache stack once so every row below measures the
         // serving steady state (cold-build cost is `serving/swap_cold/*`'s
         // story; warm-swap counters below prove the rows stay warm).
-        let warm_cfg =
-            SchedCfg { workers: 2, max_batch: 32, max_wait_ticks: 256, queue_cap: 1024 };
-        scheduler::serve_scheduled_host(&swap, &store, queue.clone(), &warm_cfg)?;
+        scheduler::serve_scheduled_host(&swap, &store, queue.clone(), &sched(2, ApplyMode::Dense))?;
+        scheduler::serve_scheduled_host(
+            &swap,
+            &store,
+            queue.clone(),
+            &sched(2, ApplyMode::Factored),
+        )?;
 
         let qb = Bench::quick();
         let seq_t = qb.run("serving/sched_seq/zipf500", || {
-            scheduler::serve_sequential_host(&swap, &store, queue.clone()).unwrap()
+            scheduler::serve_sequential_host(&swap, &store, queue.clone(), ApplyMode::Dense)
+                .unwrap()
         });
         let mut par4_t = f64::NAN;
         for workers in [1usize, 2, 4, 8] {
-            let cfg =
-                SchedCfg { workers, max_batch: 32, max_wait_ticks: 256, queue_cap: 1024 };
+            let cfg = sched(workers, ApplyMode::Dense);
             let t = qb.run(&format!("serving/sched_par/zipf500_w{workers}"), || {
                 scheduler::serve_scheduled_host(&swap, &store, queue.clone(), &cfg).unwrap()
             });
@@ -183,12 +216,27 @@ fn main() -> anyhow::Result<()> {
             fmt_time(par4_t),
         );
 
+        // Factored + auto dispatch on the same workload. At zipf500's
+        // geometry (d=64, n=64) the factored apply costs 2n(d1+d2) = 4×
+        // the dense MACs, so auto stays dense — these rows document the
+        // cost model's *negative* verdict; the n=128/d=768 block below
+        // shows the positive one.
+        for (apply, tag) in
+            [(ApplyMode::Factored, "sched_factored"), (ApplyMode::Auto, "sched_auto")]
+        {
+            let cfg = sched(4, apply);
+            qb.run(&format!("serving/{tag}/zipf500_w4"), || {
+                scheduler::serve_scheduled_host(&swap, &store, queue.clone(), &cfg).unwrap()
+            });
+        }
+
         // Latency percentiles + warm-swap counters from one instrumented
         // run per path: the cache stack must short-circuit all disk and
         // IDFT work while the scheduler parallelizes execution.
-        let cfg4 = SchedCfg { workers: 4, max_batch: 32, max_wait_ticks: 256, queue_cap: 1024 };
+        let cfg4 = sched(4, ApplyMode::Dense);
         let (_, par_stats) = scheduler::serve_scheduled_host(&swap, &store, queue.clone(), &cfg4)?;
-        let (_, seq_stats) = scheduler::serve_sequential_host(&swap, &store, queue.clone())?;
+        let (_, seq_stats) =
+            scheduler::serve_sequential_host(&swap, &store, queue.clone(), ApplyMode::Dense)?;
         qb.report_percentiles("serving/sched_seq/latency", &seq_stats.latencies);
         qb.report_percentiles("serving/sched_par/latency_w4", &par_stats.latencies);
         let sw = swap.stats();
@@ -200,6 +248,75 @@ fn main() -> anyhow::Result<()> {
             par_stats.disk_reads,
             sw.delta_hits,
             sw.delta_builds,
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // --- factored serving at spectral-friendly geometry (n=128, d=768) ----
+    // The paper-scale shape: RoBERTa-ish d=768 weights adapted by n=128
+    // spectral coefficients. Factored apply is 2n(d1+d2)/d1·d2 ≈ 2/3 of
+    // the dense MACs *and* skips the per-adapter d² ΔW residency, so the
+    // warm per-request cost and the byte counters both drop. Adapter
+    // count is reduced to 24 (dense ΔW is 2.25MB per site — 500 adapters
+    // of comparator would need GBs).
+    {
+        use fourier_peft::adapter::store::SharedAdapterStore;
+        use fourier_peft::coordinator::scheduler::{self, ApplyMode, SchedCfg};
+        use fourier_peft::coordinator::serving::SharedSwap;
+        use fourier_peft::coordinator::workload::{self, WorkloadCfg};
+
+        let dir = std::env::temp_dir().join(format!("fp_bench_fact_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let wl = WorkloadCfg {
+            adapters: 24,
+            requests: 192,
+            dim: 768,
+            sites: 1,
+            n_coeffs: 128,
+            batch: 8,
+            method: "fourierft".into(),
+            ..WorkloadCfg::zipf500()
+        };
+        let store = SharedAdapterStore::with_shards(&dir, 8, 64)?;
+        workload::populate_store(&store, &wl)?;
+        let queue = workload::gen_requests(&wl);
+        let qb = Bench::quick();
+        let sched = |apply: ApplyMode| SchedCfg {
+            workers: 4,
+            max_batch: 32,
+            max_wait_ticks: 256,
+            queue_cap: 1024,
+            apply,
+        };
+
+        let mut times = [f64::NAN; 2];
+        for (i, (apply, tag)) in
+            [(ApplyMode::Dense, "sched_par"), (ApplyMode::Factored, "sched_factored")]
+                .into_iter()
+                .enumerate()
+        {
+            // Separate swap per mode so each row's residency is its own.
+            let swap = SharedSwap::with_shards(workload::site_dims(&wl), 8, 64);
+            let cfg = sched(apply);
+            scheduler::serve_scheduled_host(&swap, &store, queue.clone(), &cfg)?; // warm
+            times[i] = qb.run(&format!("serving/{tag}/n128_d768_w4"), || {
+                scheduler::serve_scheduled_host(&swap, &store, queue.clone(), &cfg).unwrap()
+            });
+            let sw = swap.stats();
+            println!(
+                "{:<44} delta {} factors {} peak {}",
+                format!("serving/{tag}/residency_n128_d768"),
+                fourier_peft::util::fmt_bytes(sw.delta_bytes as usize),
+                fourier_peft::util::fmt_bytes(sw.factor_bytes as usize),
+                fourier_peft::util::fmt_bytes(sw.peak_bytes as usize),
+            );
+        }
+        println!(
+            "{:<44} {:.1}x  (dense {} vs factored {})",
+            "serving/factored_speedup_vs_dense/n128_d768",
+            times[0] / times[1],
+            fmt_time(times[0]),
+            fmt_time(times[1]),
         );
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -16,7 +16,7 @@
 //! materialized; our serving path merges dense ΔW, so the gather is the
 //! right form and is exactly reproducible in integer indexing.)
 
-use super::{DeltaMethod, MethodHp, MethodId, ReconstructCtx, SiteSpec, SiteTensors};
+use super::{DeltaMethod, MethodHp, MethodId, ReconstructCtx, SiteFactors, SiteSpec, SiteTensors};
 use crate::tensor::{rng::Rng, Tensor};
 use anyhow::Result;
 
@@ -69,6 +69,41 @@ impl DeltaMethod for Circulant {
             }
         }
         Ok(Tensor::f32(&[d, d], out))
+    }
+
+    /// The two stored vectors *are* the factors: resident state is 2d
+    /// floats instead of the d² gather product. The factored apply is the
+    /// same O(d²) flops as dense (a gather has no rank to exploit) — auto
+    /// dispatch keeps circulant on the dense path; forcing `factored`
+    /// trades the d² resident bytes for recomputing the gather per batch.
+    fn site_factors(
+        &self,
+        site: &SiteSpec,
+        tensors: &SiteTensors,
+        ctx: &ReconstructCtx,
+    ) -> Result<Option<SiteFactors>> {
+        anyhow::ensure!(
+            site.d1 == site.d2,
+            "circulant site {} needs a square weight, got {}x{}",
+            site.name,
+            site.d1,
+            site.d2
+        );
+        let d = site.d1;
+        let c = tensors.get(ROLE_CIRC)?.as_f32()?;
+        let g = tensors.get(ROLE_DIAG)?.as_f32()?;
+        anyhow::ensure!(
+            c.len() == d && g.len() == d,
+            "circulant site {}: circ len {} / diag len {} vs d {d}",
+            site.name,
+            c.len(),
+            g.len()
+        );
+        Ok(Some(SiteFactors::CirculantDiag {
+            circ: c.to_vec(),
+            diag: g.to_vec(),
+            alpha: ctx.alpha,
+        }))
     }
 
     /// Bilinear adjoint of ΔW[p, q] = α·c[(p − q) mod d]·g[q]:

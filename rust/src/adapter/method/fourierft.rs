@@ -5,7 +5,7 @@
 //! ([`crate::fourier::plan::global`]), so this is bit-identical to the
 //! pre-registry `delta_host` path.
 
-use super::{DeltaMethod, MethodHp, MethodId, ReconstructCtx, SiteSpec, SiteTensors};
+use super::{DeltaMethod, MethodHp, MethodId, ReconstructCtx, SiteFactors, SiteSpec, SiteTensors};
 use crate::fourier::{plan, sample_entries, EntryBias};
 use crate::tensor::{rng::Rng, Tensor};
 use anyhow::Result;
@@ -39,6 +39,28 @@ impl DeltaMethod for FourierFt {
         let (rows, cols) = sample_entries(site.d1, site.d2, n, EntryBias::None, ctx.seed);
         let p = plan::global().get((&rows, &cols), site.d1, site.d2)?;
         Ok(Tensor::f32(&[site.d1, site.d2], p.reconstruct(c, ctx.alpha)?))
+    }
+
+    /// The plan already *is* the factorization — ΔW = A·B with
+    /// A = [Cu·diag(s) | −Su·diag(s)] (d1×2n) and B the stacked cos/sin
+    /// right factor (2n×d2) — so the factored form is just the n
+    /// coefficients plus the shared cached plan: per-adapter resident
+    /// state shrinks from d1·d2 floats to n.
+    fn site_factors(
+        &self,
+        site: &SiteSpec,
+        tensors: &SiteTensors,
+        ctx: &ReconstructCtx,
+    ) -> Result<Option<SiteFactors>> {
+        let coeffs = tensors.get(ROLE_COEF)?;
+        let c = coeffs.as_f32()?;
+        let n = c.len();
+        if let Some(meta_n) = ctx.meta_get("n").and_then(|v| v.parse::<usize>().ok()) {
+            anyhow::ensure!(meta_n == n, "coeff len {n} != meta n {meta_n}");
+        }
+        let (rows, cols) = sample_entries(site.d1, site.d2, n, EntryBias::None, ctx.seed);
+        let p = plan::global().get((&rows, &cols), site.d1, site.d2)?;
+        Ok(Some(SiteFactors::Spectral { coeffs: c.to_vec(), alpha: ctx.alpha, plan: p }))
     }
 
     /// Spectral adjoint: ΔW is linear in c, so ∂L/∂c is the transpose of

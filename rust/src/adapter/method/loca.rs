@@ -19,7 +19,7 @@
 //! paper's uniform-grid entry sampler) and stores them as an i32 `[2, n]`
 //! tensor, rows then cols — the same layout the DFT entry matrix uses.
 
-use super::{DeltaMethod, MethodHp, MethodId, ReconstructCtx, SiteSpec, SiteTensors};
+use super::{DeltaMethod, MethodHp, MethodId, ReconstructCtx, SiteFactors, SiteSpec, SiteTensors};
 use crate::fourier::{sample_entries, EntryBias};
 use crate::tensor::{par, rng::Rng, Tensor};
 use anyhow::Result;
@@ -29,6 +29,50 @@ use std::f64::consts::PI;
 pub const ROLE_COEF: &str = "coef";
 /// Role of the location index matrix (i32 `[2, n]`, rows then cols).
 pub const ROLE_LOCS: &str = "locs";
+
+/// Build the two cosine factors a (d1×n, coefficient-folded) and
+/// b (n×d2) shared by the dense reconstruction (`a·b`) and the factored
+/// serving path ([`SiteFactors::LowRank`] with scale 1) — one builder so
+/// the two paths are bitwise views of the same tables.
+fn cosine_factors(
+    site: &SiteSpec,
+    c: &[f32],
+    js: &[i32],
+    ks: &[i32],
+    alpha: f32,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let (d1, d2) = (site.d1, site.d2);
+    anyhow::ensure!(d1 > 0 && d2 > 0, "degenerate site dims {d1}x{d2}");
+    let n = c.len();
+    // Left factor folds in the scaled coefficients; tables built in
+    // f64 and rounded to f32 (same numerics policy as the DFT plan).
+    let scale = alpha as f64 / (d1 * d2) as f64;
+    let mut a = vec![0.0f32; d1 * n];
+    let mut b = vec![0.0f32; n * d2];
+    for (l, (&j, &k)) in js.iter().zip(ks.iter()).enumerate() {
+        // Unlike the DFT (periodic mod d), the DCT-II basis has no
+        // frequency aliasing — an out-of-range location is corrupt
+        // data, not an alias of an in-range one. Refuse it.
+        anyhow::ensure!(
+            (0..d1 as i32).contains(&j) && (0..d2 as i32).contains(&k),
+            "loca site {}: location ({j}, {k}) outside the {d1}x{d2} DCT grid",
+            site.name
+        );
+        let j = j as f64;
+        let k = k as f64;
+        let s = c[l] as f64 * scale;
+        for p in 0..d1 {
+            let t = PI * j * (2.0 * p as f64 + 1.0) / (2.0 * d1 as f64);
+            a[p * n + l] = (s * t.cos()) as f32;
+        }
+        let row = &mut b[l * d2..(l + 1) * d2];
+        for (q, slot) in row.iter_mut().enumerate() {
+            let t = PI * k * (2.0 * q as f64 + 1.0) / (2.0 * d2 as f64);
+            *slot = t.cos() as f32;
+        }
+    }
+    Ok((a, b))
+}
 
 pub struct Loca;
 
@@ -59,35 +103,36 @@ impl DeltaMethod for Loca {
         let e = locs.as_i32()?;
         let (js, ks) = e.split_at(n);
         let (d1, d2) = (site.d1, site.d2);
-        anyhow::ensure!(d1 > 0 && d2 > 0, "degenerate site dims {d1}x{d2}");
-        // Left factor folds in the scaled coefficients; tables built in
-        // f64 and rounded to f32 (same numerics policy as the DFT plan).
-        let scale = ctx.alpha as f64 / (d1 * d2) as f64;
-        let mut a = vec![0.0f32; d1 * n];
-        let mut b = vec![0.0f32; n * d2];
-        for (l, (&j, &k)) in js.iter().zip(ks.iter()).enumerate() {
-            // Unlike the DFT (periodic mod d), the DCT-II basis has no
-            // frequency aliasing — an out-of-range location is corrupt
-            // data, not an alias of an in-range one. Refuse it.
-            anyhow::ensure!(
-                (0..d1 as i32).contains(&j) && (0..d2 as i32).contains(&k),
-                "loca site {}: location ({j}, {k}) outside the {d1}x{d2} DCT grid",
-                site.name
-            );
-            let j = j as f64;
-            let k = k as f64;
-            let s = c[l] as f64 * scale;
-            for p in 0..d1 {
-                let t = PI * j * (2.0 * p as f64 + 1.0) / (2.0 * d1 as f64);
-                a[p * n + l] = (s * t.cos()) as f32;
-            }
-            let row = &mut b[l * d2..(l + 1) * d2];
-            for (q, slot) in row.iter_mut().enumerate() {
-                let t = PI * k * (2.0 * q as f64 + 1.0) / (2.0 * d2 as f64);
-                *slot = t.cos() as f32;
-            }
-        }
+        let (a, b) = cosine_factors(site, c, js, ks, ctx.alpha)?;
         Ok(Tensor::f32(&[d1, d2], par::matmul_f32(&a, &b, d1, n, d2)))
+    }
+
+    /// The cosine expansion is a rank-n product already: U = a (d1×n,
+    /// coefficients folded in), V = b (n×d2), scale = 1. Residency drops
+    /// from d1·d2 to n·(d1+d2) floats per site.
+    fn site_factors(
+        &self,
+        site: &SiteSpec,
+        tensors: &SiteTensors,
+        ctx: &ReconstructCtx,
+    ) -> Result<Option<SiteFactors>> {
+        let c = tensors.get(ROLE_COEF)?.as_f32()?;
+        let locs = tensors.get(ROLE_LOCS)?;
+        let n = c.len();
+        anyhow::ensure!(
+            locs.shape == [2, n],
+            "loca site {}: locs shape {:?} != [2, {n}]",
+            site.name,
+            locs.shape
+        );
+        let e = locs.as_i32()?;
+        let (js, ks) = e.split_at(n);
+        let (a, b) = cosine_factors(site, c, js, ks, ctx.alpha)?;
+        Ok(Some(SiteFactors::LowRank {
+            u: Tensor::f32(&[site.d1, n], a),
+            v: Tensor::f32(&[n, site.d2], b),
+            scale: 1.0,
+        }))
     }
 
     /// Cosine adjoint: ΔW is linear in c, so `∂L/∂c_l = α/(d1 d2) ·

@@ -6,7 +6,7 @@
 //! matching `.b` — O(sites) instead of O(sites²); regression-tested at
 //! 300 sites in `tests/methods.rs`.
 
-use super::{DeltaMethod, MethodHp, MethodId, ReconstructCtx, SiteSpec, SiteTensors};
+use super::{DeltaMethod, MethodHp, MethodId, ReconstructCtx, SiteFactors, SiteSpec, SiteTensors};
 use crate::adapter::merge::delta_lora;
 use crate::tensor::{rng::Rng, Tensor};
 use anyhow::Result;
@@ -43,6 +43,26 @@ impl DeltaMethod for Lora {
             b.shape
         );
         delta_lora(a, b, ctx.alpha)
+    }
+
+    /// LoRA is born factored: U = B, V = A, scale = α. Resident state is
+    /// r·(d1+d2) floats instead of the d1·d2 dense product.
+    fn site_factors(
+        &self,
+        site: &SiteSpec,
+        tensors: &SiteTensors,
+        ctx: &ReconstructCtx,
+    ) -> Result<Option<SiteFactors>> {
+        let a = tensors.get(ROLE_A)?;
+        let b = tensors.get(ROLE_B)?;
+        anyhow::ensure!(
+            a.rank() == 2 && b.rank() == 2 && a.shape[0] == b.shape[1],
+            "lora site {}: rank mismatch a {:?} vs b {:?}",
+            site.name,
+            a.shape,
+            b.shape
+        );
+        Ok(Some(SiteFactors::LowRank { u: b.clone(), v: a.clone(), scale: ctx.alpha }))
     }
 
     /// Low-rank adjoint, the usual two-GEMM rule for ΔW = α·B·A:

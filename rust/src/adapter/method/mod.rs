@@ -42,6 +42,12 @@
 //! reconstructed ΔW must be bit-identical across runs, threads, and worker
 //! counts (asserted for all built-ins in `tests/methods.rs` and
 //! `tests/scheduler.rs`).
+//!
+//! Structured methods additionally expose their ΔW in factored form via
+//! [`DeltaMethod::site_factors`] / [`site_factors_with_dims`] — see
+//! [`SiteFactors`] for the serving math and the determinism contract the
+//! factored path is held to. Dense/bitfit stay on the `None` default and
+//! serve through the materialized delta.
 
 pub mod circulant;
 pub mod dense;
@@ -50,7 +56,8 @@ pub mod loca;
 pub mod lora;
 
 use super::format::{AdapterFile, ROLE_HEAD};
-use crate::tensor::{rng::Rng, Tensor};
+use crate::fourier::plan::ReconstructPlan;
+use crate::tensor::{linalg, par, rng::Rng, Tensor};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, OnceLock, RwLock};
@@ -111,6 +118,167 @@ pub struct ReconstructCtx<'a> {
 impl ReconstructCtx<'_> {
     pub fn meta_get(&self, key: &str) -> Option<&str> {
         self.meta.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+/// The factored form of one site's ΔW — what a method serves *without*
+/// materializing the dense d1×d2 matrix.
+///
+/// Every structured method in the built-in family is a (sum of) low-rank
+/// or gather products, so applying to a row batch x (rows×d1) costs
+/// O(rows·r·(d1+d2)) instead of O(rows·d1·d2) plus the dense build:
+///
+/// * [`LowRank`](SiteFactors::LowRank) — ΔW = scale·(U·V), U d1×r,
+///   V r×d2 (`lora`: U = B, V = A, scale = α; `loca`: the coefficient-
+///   folded cosine factors, scale = 1).
+/// * [`Spectral`](SiteFactors::Spectral) — `fourierft`: the n stored
+///   coefficients plus the *shared* [`ReconstructPlan`] (process-wide
+///   plan cache): the per-adapter resident state is just the n floats,
+///   the twiddle tables amortize across every adapter on the same
+///   (d1, d2, entries).
+/// * [`CirculantDiag`](SiteFactors::CirculantDiag) — `circulant`:
+///   2d floats; apply is the O(d²) gather (no memory for the dense form,
+///   same flops as dense).
+///
+/// # Determinism contract
+///
+/// [`apply`](SiteFactors::apply) must be bitwise-stable across reruns,
+/// thread counts, and batch composition: every GEMM stage runs through
+/// [`par::matmul_f32`], whose per-output-element summation order is fixed
+/// regardless of threading, and the gather path accumulates in a fixed
+/// p-ascending order. Against the dense product `x · site_delta(..)` the
+/// result is bitwise-equal for `CirculantDiag` (identical op order) and
+/// within ~1e-6 relative for the GEMM-factored forms (f32 products
+/// associate differently). [`materialize`](SiteFactors::materialize)
+/// reproduces the method's dense `site_delta` output **bitwise** for all
+/// built-in factored methods (asserted in `tests/factored.rs`).
+pub enum SiteFactors {
+    /// ΔW = scale · (U·V), U: f32 `[d1, r]`, V: f32 `[r, d2]`.
+    LowRank { u: Tensor, v: Tensor, scale: f32 },
+    /// ΔW = α·Re(IDFT2(ToDense(E, c))) through the shared GEMM plan.
+    Spectral { coeffs: Vec<f32>, alpha: f32, plan: Arc<ReconstructPlan> },
+    /// ΔW[p, q] = α · circ\[(p − q) mod d\] · diag\[q\].
+    CirculantDiag { circ: Vec<f32>, diag: Vec<f32>, alpha: f32 },
+}
+
+impl SiteFactors {
+    /// (d1, d2) of the ΔW these factors represent.
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            SiteFactors::LowRank { u, v, .. } => (u.shape[0], v.shape[1]),
+            SiteFactors::Spectral { plan, .. } => plan.dims(),
+            SiteFactors::CirculantDiag { circ, .. } => (circ.len(), circ.len()),
+        }
+    }
+
+    /// Bytes of *per-adapter* resident state. For `Spectral` this is the
+    /// coefficient vector only: the twiddle tables live in the process-
+    /// wide plan cache and are shared by every adapter on the same
+    /// (d1, d2, entries), so they amortize out of per-adapter residency
+    /// (`ReconstructPlan::bytes` reports the shared footprint).
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            SiteFactors::LowRank { u, v, .. } => u.byte_size() + v.byte_size(),
+            SiteFactors::Spectral { coeffs, .. } => coeffs.len() * 4,
+            SiteFactors::CirculantDiag { circ, diag, .. } => (circ.len() + diag.len()) * 4,
+        }
+    }
+
+    /// Multiply-adds per batch row of [`apply`](SiteFactors::apply) — the
+    /// cost-model input the scheduler's auto dispatch compares against the
+    /// dense d1·d2 per row.
+    pub fn apply_cost(&self) -> usize {
+        match self {
+            SiteFactors::LowRank { u, v, .. } => u.shape[1] * (u.shape[0] + v.shape[1]),
+            SiteFactors::Spectral { plan, .. } => {
+                let (d1, d2) = plan.dims();
+                2 * plan.n() * (d1 + d2)
+            }
+            SiteFactors::CirculantDiag { circ, .. } => circ.len() * circ.len(),
+        }
+    }
+
+    /// y = x·ΔW without materializing ΔW. `x` is rows×d1 row-major; the
+    /// result is rows×d2. Bitwise-stable across reruns and worker counts
+    /// (see the type-level determinism contract).
+    pub fn apply(&self, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let (d1, d2) = self.dims();
+        anyhow::ensure!(
+            x.len() == rows * d1,
+            "factored apply: input has {} elements, expected {rows}x{d1}",
+            x.len()
+        );
+        match self {
+            SiteFactors::LowRank { u, v, scale } => {
+                let r = u.shape[1];
+                anyhow::ensure!(
+                    v.shape[0] == r,
+                    "factored apply: u {:?} vs v {:?} inner-dim mismatch",
+                    u.shape,
+                    v.shape
+                );
+                let t = par::matmul_f32(x, u.as_f32()?, rows, d1, r);
+                let mut y = par::matmul_f32(&t, v.as_f32()?, rows, r, d2);
+                if *scale != 1.0 {
+                    for yi in &mut y {
+                        *yi *= scale;
+                    }
+                }
+                Ok(y)
+            }
+            SiteFactors::Spectral { coeffs, alpha, plan } => plan.apply(x, rows, coeffs, *alpha),
+            SiteFactors::CirculantDiag { circ, diag, alpha } => {
+                // Replicates the accumulation of the blocked GEMM over the
+                // gather-built dense ΔW exactly (p ascending, zero-skip,
+                // dense element = (α·circ[idx])·diag[q]) so the factored
+                // path is bitwise-equal to the dense one for this method.
+                let d = circ.len();
+                let mut y = vec![0.0f32; rows * d];
+                for (xr, yr) in x.chunks_exact(d).zip(y.chunks_exact_mut(d)) {
+                    for (p, &xp) in xr.iter().enumerate() {
+                        if xp == 0.0 {
+                            continue;
+                        }
+                        for (q, slot) in yr.iter_mut().enumerate() {
+                            let idx = (p + d - q) % d;
+                            *slot += xp * (alpha * circ[idx] * diag[q]);
+                        }
+                    }
+                }
+                Ok(y)
+            }
+        }
+    }
+
+    /// The dense ΔW these factors represent — **bitwise-equal** to the
+    /// originating method's `site_delta` (same kernels, same op order).
+    pub fn materialize(&self) -> Result<Tensor> {
+        match self {
+            SiteFactors::LowRank { u, v, scale } => {
+                // Mirrors `merge::delta_lora` exactly: matmul, then scale
+                // (scaling by 1.0 is a bitwise identity, so the loca form
+                // with a pre-folded left factor round-trips too).
+                let mut out = linalg::matmul(u, v)?;
+                out.scale(*scale)?;
+                Ok(out)
+            }
+            SiteFactors::Spectral { coeffs, alpha, plan } => {
+                let (d1, d2) = plan.dims();
+                Ok(Tensor::f32(&[d1, d2], plan.reconstruct(coeffs, *alpha)?))
+            }
+            SiteFactors::CirculantDiag { circ, diag, alpha } => {
+                let d = circ.len();
+                let mut out = vec![0.0f32; d * d];
+                for p in 0..d {
+                    let row = &mut out[p * d..(p + 1) * d];
+                    for (q, slot) in row.iter_mut().enumerate() {
+                        let idx = (p + d - q) % d;
+                        *slot = alpha * circ[idx] * diag[q];
+                    }
+                }
+                Ok(Tensor::f32(&[d, d], out))
+            }
+        }
     }
 }
 
@@ -181,6 +349,24 @@ pub trait DeltaMethod: Send + Sync {
             "adapter method '{}' has no site_delta_grad (not trainable by the host engine)",
             self.id()
         )
+    }
+
+    /// Factored form of [`site_delta`](DeltaMethod::site_delta) for
+    /// no-materialize serving, or `None` when the method has no useful
+    /// factorization (dense/bitfit: the stored tensor *is* the delta).
+    ///
+    /// When `Some`, the returned [`SiteFactors`] must satisfy the
+    /// determinism contract documented on the type: `apply` bitwise-stable
+    /// across reruns/workers, `materialize` bitwise-equal to `site_delta`.
+    /// Like `site_delta`, this must be a pure function of its arguments —
+    /// the factor cache tier serves the result across threads.
+    fn site_factors(
+        &self,
+        _site: &SiteSpec,
+        _tensors: &SiteTensors,
+        _ctx: &ReconstructCtx,
+    ) -> Result<Option<SiteFactors>> {
+        Ok(None)
     }
 
     /// Trainable parameters for one (d1, d2) site under `hp`.
@@ -311,17 +497,14 @@ pub fn site_deltas(adapter: &AdapterFile) -> Result<Vec<(String, Tensor)>> {
     site_deltas_with_dims(adapter, |_| None)
 }
 
-/// [`site_deltas`] with a dims fallback consulted for sites the file does
-/// not carry dims for (v1 checkpoints; the serving cache passes the
-/// artifact-meta map, the merge path passes base-weight shapes). Dim
-/// resolution order: file → `fallback` → the method's shape inference.
-pub fn site_deltas_with_dims(
-    adapter: &AdapterFile,
-    fallback: impl Fn(&str) -> Option<(usize, usize)>,
-) -> Result<Vec<(String, Tensor)>> {
-    let m = get(&adapter.method)?;
-    let ctx =
-        ReconstructCtx { seed: adapter.seed, alpha: adapter.alpha, meta: &adapter.meta };
+/// Group an adapter's tensors into per-site role sets (first-seen site
+/// order) and resolve each site's dims — the shared front half of both
+/// dispatchers ([`site_deltas_with_dims`] / [`site_factors_with_dims`]).
+fn grouped_sites<'a>(
+    adapter: &'a AdapterFile,
+    m: &dyn DeltaMethod,
+    fallback: &dyn Fn(&str) -> Option<(usize, usize)>,
+) -> Result<Vec<(SiteSpec, Vec<(&'a str, &'a Tensor)>)>> {
     // Group site tensors by role, preserving first-seen site order.
     let mut order: Vec<&str> = Vec::new();
     let mut groups: HashMap<&str, Vec<(&str, &Tensor)>> = HashMap::new();
@@ -368,9 +551,57 @@ pub fn site_deltas_with_dims(
             }
         };
         let spec = SiteSpec { name: site.to_string(), d1, d2 };
-        out.push((site.to_string(), m.site_delta(&spec, &tensors, &ctx)?));
+        out.push((spec, pairs));
     }
     Ok(out)
+}
+
+/// [`site_deltas`] with a dims fallback consulted for sites the file does
+/// not carry dims for (v1 checkpoints; the serving cache passes the
+/// artifact-meta map, the merge path passes base-weight shapes). Dim
+/// resolution order: file → `fallback` → the method's shape inference.
+pub fn site_deltas_with_dims(
+    adapter: &AdapterFile,
+    fallback: impl Fn(&str) -> Option<(usize, usize)>,
+) -> Result<Vec<(String, Tensor)>> {
+    let m = get(&adapter.method)?;
+    let ctx =
+        ReconstructCtx { seed: adapter.seed, alpha: adapter.alpha, meta: &adapter.meta };
+    let mut out = Vec::new();
+    for (spec, pairs) in grouped_sites(adapter, m.as_ref(), &fallback)? {
+        let tensors = SiteTensors::from_pairs(&pairs);
+        out.push((spec.name.clone(), m.site_delta(&spec, &tensors, &ctx)?));
+    }
+    Ok(out)
+}
+
+/// Factored counterpart of [`site_deltas`]: the per-site [`SiteFactors`]
+/// of an adapter file, or `None` when the file's method does not factor
+/// (dense/bitfit) — callers then fall back to the dense delta path.
+pub fn site_factors(adapter: &AdapterFile) -> Result<Option<Vec<(String, SiteFactors)>>> {
+    site_factors_with_dims(adapter, |_| None)
+}
+
+/// [`site_factors`] with the same dims fallback as
+/// [`site_deltas_with_dims`]. All-or-nothing per file: if any site fails
+/// to factor the whole adapter reports `None` (a file never serves half
+/// factored, half dense).
+pub fn site_factors_with_dims(
+    adapter: &AdapterFile,
+    fallback: impl Fn(&str) -> Option<(usize, usize)>,
+) -> Result<Option<Vec<(String, SiteFactors)>>> {
+    let m = get(&adapter.method)?;
+    let ctx =
+        ReconstructCtx { seed: adapter.seed, alpha: adapter.alpha, meta: &adapter.meta };
+    let mut out = Vec::new();
+    for (spec, pairs) in grouped_sites(adapter, m.as_ref(), &fallback)? {
+        let tensors = SiteTensors::from_pairs(&pairs);
+        match m.site_factors(&spec, &tensors, &ctx)? {
+            Some(f) => out.push((spec.name.clone(), f)),
+            None => return Ok(None),
+        }
+    }
+    Ok(Some(out))
 }
 
 /// Build a complete synthetic adapter file for `method_id`: `sites.len()`

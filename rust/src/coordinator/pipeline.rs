@@ -41,7 +41,7 @@
 //! (per-publish latency rows land in `BENCH_*.json`) and by the
 //! `pipeline-smoke` CI job.
 
-use super::scheduler::{serve_scheduled_host, DeltaRunner, SchedCfg};
+use super::scheduler::{eval_ref, serve_scheduled_host, ApplyMode, SchedCfg};
 use super::serving::{Request, ServeStats, SharedSwap};
 #[cfg(not(feature = "xla-runtime"))]
 use super::trainer::Trainer;
@@ -91,6 +91,9 @@ pub struct PipelineCfg {
     /// Zipf exponent of adapter popularity.
     pub zipf_s: f64,
     pub seed: u64,
+    /// Dense vs factored ΔW application on the serving path (the replay
+    /// oracle follows the same mode, so replays stay bitwise-comparable).
+    pub serve_apply: ApplyMode,
 }
 
 impl PipelineCfg {
@@ -109,6 +112,7 @@ impl PipelineCfg {
             batch: 2,
             zipf_s: 1.1,
             seed: 2024,
+            serve_apply: ApplyMode::Auto,
         }
     }
 }
@@ -510,7 +514,11 @@ impl Pipeline {
             waves_q.push(cur);
         }
 
-        let sched = SchedCfg { workers: cfg.serve_workers.max(1), ..SchedCfg::default() };
+        let sched = SchedCfg {
+            workers: cfg.serve_workers.max(1),
+            apply: cfg.serve_apply,
+            ..SchedCfg::default()
+        };
         let n_waves = waves_q.len();
         let mut results: Vec<(u64, Tensor)> = Vec::new();
         let mut pins: Vec<(u64, String)> = Vec::new();
@@ -560,14 +568,15 @@ impl Pipeline {
     }
 
     /// Sequential replay oracle: recompute each response from its pinned
-    /// ref's ΔW through the same per-request kernel the scheduler fuses
-    /// ([`DeltaRunner::eval_one`]). Bitwise-comparable to
-    /// [`PipelineReport::results`] regardless of worker count or publish
-    /// timing — pinned versions are immutable.
+    /// ref's state through the same per-request dispatch the scheduler
+    /// fuses ([`eval_ref`] under `apply`). Bitwise-comparable to
+    /// [`PipelineReport::results`] served in the same mode, regardless of
+    /// worker count or publish timing — pinned versions are immutable.
     pub fn replay(
         &self,
         queue: &[Request],
         pins: &[(u64, String)],
+        apply: ApplyMode,
     ) -> Result<Vec<(u64, Tensor)>> {
         let pin: HashMap<u64, &str> = pins.iter().map(|(i, r)| (*i, r.as_str())).collect();
         let mut out = Vec::with_capacity(queue.len());
@@ -575,12 +584,11 @@ impl Pipeline {
             let r = pin
                 .get(&req.id)
                 .ok_or_else(|| anyhow!("request {} was never pinned", req.id))?;
-            let (deltas, _) = self.swap.deltas(&self.store, r)?;
             let x = req
                 .batch
                 .get("x")
                 .ok_or_else(|| anyhow!("request {} has no 'x' tensor", req.id))?;
-            out.push((req.id, DeltaRunner::eval_one(deltas.as_slice(), x)?));
+            out.push((req.id, eval_ref(&self.swap, &self.store, r, x, apply)?));
         }
         out.sort_by_key(|&(id, _)| id);
         Ok(out)
@@ -589,7 +597,12 @@ impl Pipeline {
 
 /// Fold one wave's stats into the running total: counters sum, latencies
 /// concatenate, peaks max, per-adapter counts merge by (pinned) name.
+/// Byte residency fields are end-of-wave snapshots of the *same* shared
+/// cache, not per-wave deltas, so they max rather than sum.
 fn merge_stats(into: &mut ServeStats, s: ServeStats) {
+    into.delta_bytes = into.delta_bytes.max(s.delta_bytes);
+    into.factor_bytes = into.factor_bytes.max(s.factor_bytes);
+    into.peak_bytes = into.peak_bytes.max(s.peak_bytes);
     into.requests += s.requests;
     into.batches += s.batches;
     into.swaps += s.swaps;
@@ -699,6 +712,9 @@ mod tests {
             queue_depth_peak: 5,
             latencies: vec![0.1, 0.2],
             per_adapter: vec![("x".into(), 3)],
+            delta_bytes: 100,
+            factor_bytes: 10,
+            peak_bytes: 150,
             ..Default::default()
         };
         let b = ServeStats {
@@ -707,6 +723,9 @@ mod tests {
             queue_depth_peak: 2,
             latencies: vec![0.3],
             per_adapter: vec![("x".into(), 1), ("y".into(), 3)],
+            delta_bytes: 80,
+            factor_bytes: 40,
+            peak_bytes: 120,
             ..Default::default()
         };
         merge_stats(&mut total, a);
@@ -716,5 +735,9 @@ mod tests {
         assert_eq!(total.queue_depth_peak, 5);
         assert_eq!(total.latencies.len(), 3);
         assert_eq!(total.per_adapter, vec![("x".to_string(), 4), ("y".to_string(), 3)]);
+        // Residency snapshots max (same shared cache observed per wave).
+        assert_eq!(total.delta_bytes, 100);
+        assert_eq!(total.factor_bytes, 40);
+        assert_eq!(total.peak_bytes, 150);
     }
 }

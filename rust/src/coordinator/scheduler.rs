@@ -30,19 +30,72 @@
 //!   clones over any [`StepEngine`]; used by `Server::serve`),
 //! * [`DeltaRunner`] here — a pure-host executor over the shared swap
 //!   cache (logits = Σ_sites x · ΔW_site as one fused GEMM per
-//!   micro-batch), which lets the full scheduler + cache stack run and be
-//!   tested without the XLA runtime.
+//!   micro-batch — or, under [`ApplyMode::Factored`]/[`ApplyMode::Auto`],
+//!   two stacked GEMMs per site straight from the method's factors with
+//!   no dense ΔW ever materialized), which lets the full scheduler +
+//!   cache stack run and be tested without the XLA runtime.
 //!
 //! [`ParamSet`]: crate::runtime::ParamSet
 //! [`StepEngine`]: crate::runtime::StepEngine
 
-use super::serving::{account_swap, DeltaSet, Request, ServeStats, SharedSwap};
+use super::serving::{DeltaSet, FactorSet, Request, ServeStats, SharedSwap, SwapTrace};
+use crate::adapter::method::SiteFactors;
 use crate::adapter::store::SharedAdapterStore;
 use crate::tensor::{par, Tensor};
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
+
+/// How the pure-host executor applies an adapter's per-site update to a
+/// micro-batch.
+///
+/// **Determinism.** Each mode is individually bitwise-deterministic
+/// across reruns and worker counts: the factored apply runs the same
+/// fixed-order kernels as the dense path
+/// ([`crate::tensor::par::matmul_f32`] sums over `k` in ascending order
+/// regardless of thread count), and `Auto`'s cost model depends only on
+/// adapter geometry — never on batch size, batch composition, or worker
+/// count — so the per-adapter choice is a constant of the deployment.
+/// Across modes, factored outputs agree with dense within f32
+/// re-association tolerance (bitwise for circulant, whose gather
+/// replicates the dense op order; see `tests/factored.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ApplyMode {
+    /// Per-adapter flops cost model: use factors iff strictly fewer
+    /// multiply-adds per input row than the dense fused GEMM
+    /// (Σ_sites [`SiteFactors::apply_cost`] < Σ_sites d1·d2).
+    #[default]
+    Auto,
+    /// Always materialize and apply dense ΔW (the pre-factored path).
+    Dense,
+    /// Apply factors whenever the method provides them; methods without
+    /// a factorization (dense, bitfit) fall back to dense ΔW.
+    Factored,
+}
+
+impl std::str::FromStr for ApplyMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<ApplyMode> {
+        match s {
+            "auto" => Ok(ApplyMode::Auto),
+            "dense" => Ok(ApplyMode::Dense),
+            "factored" => Ok(ApplyMode::Factored),
+            other => anyhow::bail!("unknown apply mode '{other}' (want auto|dense|factored)"),
+        }
+    }
+}
+
+impl std::fmt::Display for ApplyMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ApplyMode::Auto => "auto",
+            ApplyMode::Dense => "dense",
+            ApplyMode::Factored => "factored",
+        })
+    }
+}
 
 /// Scheduler knobs. Defaults are sized for the host this process runs on.
 #[derive(Debug, Clone)]
@@ -59,6 +112,8 @@ pub struct SchedCfg {
     pub max_wait_ticks: usize,
     /// Capacity of the bounded admission queue (producer backpressure).
     pub queue_cap: usize,
+    /// Dense vs factored ΔW application (see [`ApplyMode`]).
+    pub apply: ApplyMode,
 }
 
 impl Default for SchedCfg {
@@ -68,6 +123,7 @@ impl Default for SchedCfg {
             max_batch: 16,
             max_wait_ticks: 64,
             queue_cap: 1024,
+            apply: ApplyMode::Auto,
         }
     }
 }
@@ -439,13 +495,127 @@ pub fn run<R: BatchRunner>(
 // ---------------------------------------------------------------------------
 // Pure-host executor: ΔW application through the shared cache stack.
 
-/// Per-worker slot of [`DeltaRunner`]: the adapter whose ΔW set this
-/// worker last applied, by name and `Arc` identity. Re-publication
-/// invalidates the shared cache entry, so the next fetch yields a new
-/// `Arc` and the identity check counts a fresh swap.
+/// The per-adapter state a host worker holds and applies: the dense ΔW
+/// set or the factored per-site state, as chosen by the [`ApplyMode`]
+/// dispatch.
+#[derive(Clone)]
+enum ActiveSet {
+    Dense(DeltaSet),
+    Factored(FactorSet),
+}
+
+impl ActiveSet {
+    /// Same cached object: same variant *and* same `Arc` identity (the
+    /// identity check `serving::account_swap` performs on the dense path).
+    fn same(&self, other: &ActiveSet) -> bool {
+        match (self, other) {
+            (ActiveSet::Dense(a), ActiveSet::Dense(b)) => Arc::ptr_eq(a, b),
+            (ActiveSet::Factored(a), ActiveSet::Factored(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+
+    /// First-site input width, for request shape validation.
+    fn d_in(&self, adapter: &str) -> Result<usize> {
+        match self {
+            ActiveSet::Dense(d) => {
+                anyhow::ensure!(!d.is_empty(), "adapter '{adapter}' reconstructs no sites");
+                Ok(d[0].1.shape[0])
+            }
+            ActiveSet::Factored(f) => {
+                anyhow::ensure!(!f.is_empty(), "adapter '{adapter}' factors no sites");
+                Ok(f[0].1.dims().0)
+            }
+        }
+    }
+
+    /// `y = Σ_sites apply(x)` through whichever form is resident.
+    fn eval(&self, x: &Tensor) -> Result<Tensor> {
+        match self {
+            ActiveSet::Dense(d) => DeltaRunner::eval_one(d.as_slice(), x),
+            ActiveSet::Factored(f) => DeltaRunner::eval_one_factored(f.as_slice(), x),
+        }
+    }
+}
+
+/// `serving::account_swap` over [`ActiveSet`]: same transition rule (adapter
+/// name or cached-object identity changed ⇒ one swap, warm iff the fetch
+/// avoided disk), extended so a dense↔factored flip on the same adapter
+/// also counts — the worker really does load different state.
+fn account_swap_set(
+    active: &mut Option<(String, ActiveSet)>,
+    adapter: &str,
+    fetched: &ActiveSet,
+    trace: SwapTrace,
+) -> (usize, usize) {
+    let changed = match active {
+        Some((name, set)) => name.as_str() != adapter || !set.same(fetched),
+        None => true,
+    };
+    if !changed {
+        return (0, 0);
+    }
+    *active = Some((adapter.to_string(), fetched.clone()));
+    (1, usize::from(!trace.disk_read))
+}
+
+/// Flops cost model for [`ApplyMode::Auto`]: factored wins iff its
+/// per-input-row multiply-add count is *strictly* below the dense fused
+/// GEMM's across all sites. Batch size cancels out of the comparison, so
+/// the decision is a pure function of adapter geometry — identical for
+/// every request, batch composition, and worker count. Ties go dense
+/// (circulant's gather is exactly d² MACs, same as dense, so it stays on
+/// the dense path and keeps its bitwise-reproducible merge form).
+fn factored_wins(factors: &[(String, SiteFactors)]) -> bool {
+    let mut fac = 0usize;
+    let mut dense = 0usize;
+    for (_, f) in factors {
+        let (d1, d2) = f.dims();
+        fac += f.apply_cost();
+        dense += d1 * d2;
+    }
+    fac < dense
+}
+
+/// Fetch the state `mode` calls for through the shared cache stack.
+/// `Factored` and `Auto` fall back to dense ΔW when the method doesn't
+/// factor (the cache remembers the negative result) or, for `Auto`, when
+/// the cost model says dense is cheaper. A fallback's trace OR-combines
+/// both fetches so warm-swap accounting stays honest.
+fn fetch_active(
+    swap: &SharedSwap,
+    store: &SharedAdapterStore,
+    adapter: &str,
+    mode: ApplyMode,
+) -> Result<(ActiveSet, SwapTrace)> {
+    let dense = |trace0: SwapTrace| -> Result<(ActiveSet, SwapTrace)> {
+        let (d, t) = swap.deltas(store, adapter)?;
+        let trace = SwapTrace {
+            rebuilt: trace0.rebuilt || t.rebuilt,
+            disk_read: trace0.disk_read || t.disk_read,
+        };
+        Ok((ActiveSet::Dense(d), trace))
+    };
+    match mode {
+        ApplyMode::Dense => dense(SwapTrace::default()),
+        ApplyMode::Factored => match swap.factors(store, adapter)? {
+            (Some(f), trace) => Ok((ActiveSet::Factored(f), trace)),
+            (None, trace) => dense(trace),
+        },
+        ApplyMode::Auto => match swap.factors(store, adapter)? {
+            (Some(f), trace) if factored_wins(&f) => Ok((ActiveSet::Factored(f), trace)),
+            (_, trace) => dense(trace),
+        },
+    }
+}
+
+/// Per-worker slot of [`DeltaRunner`]: the adapter whose ΔW (or factor)
+/// set this worker last applied, by name and `Arc` identity.
+/// Re-publication invalidates the shared cache entry, so the next fetch
+/// yields a new `Arc` and the identity check counts a fresh swap.
 #[derive(Default)]
 struct DeltaSlot {
-    active: Option<(String, DeltaSet)>,
+    active: Option<(String, ActiveSet)>,
 }
 
 /// Pure-host [`BatchRunner`]: fetches an adapter's reconstructed per-site
@@ -459,6 +629,7 @@ struct DeltaSlot {
 pub struct DeltaRunner<'a> {
     swap: &'a SharedSwap,
     store: &'a SharedAdapterStore,
+    apply: ApplyMode,
     slots: Vec<Mutex<DeltaSlot>>,
 }
 
@@ -467,10 +638,12 @@ impl<'a> DeltaRunner<'a> {
         swap: &'a SharedSwap,
         store: &'a SharedAdapterStore,
         workers: usize,
+        apply: ApplyMode,
     ) -> DeltaRunner<'a> {
         DeltaRunner {
             swap,
             store,
+            apply,
             slots: (0..workers.max(1)).map(|_| Mutex::new(DeltaSlot::default())).collect(),
         }
     }
@@ -508,6 +681,39 @@ impl<'a> DeltaRunner<'a> {
         }
         Ok(Tensor::f32(&[rows, d_out], y))
     }
+
+    /// Factored counterpart of [`DeltaRunner::eval_one`]:
+    /// `y = Σ_sites (x · U_site) · V_site` without ever materializing
+    /// ΔW — two stacked GEMMs per site through
+    /// [`SiteFactors::apply`]. Per-site outputs accumulate in site order
+    /// and each row's value is independent of which other rows share the
+    /// stack, so scheduled output over factors is bitwise-stable across
+    /// batch compositions, worker counts, and reruns — the same contract
+    /// as the dense path, pinned in `tests/factored.rs`.
+    pub fn eval_one_factored(factors: &[(String, SiteFactors)], x: &Tensor) -> Result<Tensor> {
+        anyhow::ensure!(!factors.is_empty(), "adapter factors no sites");
+        let (d_in, d_out) = factors[0].1.dims();
+        anyhow::ensure!(
+            x.rank() == 2 && x.shape[1] == d_in,
+            "x shape {:?} vs site dims ({d_in}, {d_out})",
+            x.shape
+        );
+        let rows = x.shape[0];
+        let xs = x.as_f32()?;
+        let mut y = vec![0.0f32; rows * d_out];
+        for (site, f) in factors {
+            anyhow::ensure!(
+                f.dims() == (d_in, d_out),
+                "site {site}: inconsistent dims {:?}",
+                f.dims()
+            );
+            let part = f.apply(xs, rows)?;
+            for (yi, pi) in y.iter_mut().zip(part.iter()) {
+                *yi += *pi;
+            }
+        }
+        Ok(Tensor::f32(&[rows, d_out], y))
+    }
 }
 
 impl BatchRunner for DeltaRunner<'_> {
@@ -515,12 +721,11 @@ impl BatchRunner for DeltaRunner<'_> {
         let mut guard = self.slots[worker].lock().unwrap();
         let slot = &mut *guard;
         let t0 = Instant::now();
-        let (deltas, trace) = self.swap.deltas(self.store, adapter)?;
-        let (swaps, warm_swaps) = account_swap(&mut slot.active, adapter, &deltas, trace);
+        let (active, trace) = fetch_active(self.swap, self.store, adapter, self.apply)?;
+        let (swaps, warm_swaps) = account_swap_set(&mut slot.active, adapter, &active, trace);
         let swap_seconds = t0.elapsed().as_secs_f64();
 
-        anyhow::ensure!(!deltas.is_empty(), "adapter '{adapter}' reconstructs no sites");
-        let d_in = deltas[0].1.shape[0];
+        let d_in = active.d_in(adapter)?;
         let mut rows_of = Vec::with_capacity(reqs.len());
         let mut total_rows = 0usize;
         for req in reqs {
@@ -539,14 +744,14 @@ impl BatchRunner for DeltaRunner<'_> {
         }
         // Stack the micro-batch into one (total_rows × d_in) operand and
         // run it through the same per-site kernel as the per-request path
-        // (`eval_one`): row results are bitwise identical, dispatch is
-        // amortized across the coalesced requests.
+        // (`eval_one` / `eval_one_factored`): row results are bitwise
+        // identical, dispatch is amortized across the coalesced requests.
         let mut xs = Vec::with_capacity(total_rows * d_in);
         for req in reqs {
             xs.extend_from_slice(req.batch.get("x").unwrap().as_f32()?);
         }
         let stacked = Tensor::f32(&[total_rows, d_in], xs);
-        let fused = DeltaRunner::eval_one(deltas.as_slice(), &stacked)?;
+        let fused = active.eval(&stacked)?;
         let d_out = fused.shape[1];
         let y = fused.as_f32()?;
         let mut results = Vec::with_capacity(reqs.len());
@@ -560,24 +765,42 @@ impl BatchRunner for DeltaRunner<'_> {
     }
 }
 
+/// Evaluate one request batch against an adapter ref exactly as the host
+/// executor would under `apply` — the building block of the pipeline's
+/// sequential replay oracle, so replays stay bitwise-comparable to
+/// scheduled serving in every mode.
+pub fn eval_ref(
+    swap: &SharedSwap,
+    store: &SharedAdapterStore,
+    adapter: &str,
+    x: &Tensor,
+    apply: ApplyMode,
+) -> Result<Tensor> {
+    let (set, _) = fetch_active(swap, store, adapter, apply)?;
+    set.eval(x)
+}
+
 /// Sequential pure-host baseline: HashMap grouping (first-seen order) +
-/// one ΔW fetch per group + per-request execution — the pre-scheduler
+/// one state fetch per group + per-request execution — the pre-scheduler
 /// `serve` shape over the same shared cache stack, for baseline benches
-/// and bitwise cross-checks.
+/// and bitwise cross-checks. Shares [`fetch_active`] with the scheduled
+/// path, so for any `apply` mode the sequential and scheduled results
+/// are bitwise comparable.
 pub fn serve_sequential_host(
     swap: &SharedSwap,
     store: &SharedAdapterStore,
     queue: Vec<Request>,
+    apply: ApplyMode,
 ) -> Result<(Vec<(u64, Tensor)>, ServeStats)> {
     let t_start = Instant::now();
     let mut stats = ServeStats { requests: queue.len(), ..Default::default() };
     let disk0 = store.disk_reads();
-    let mut active: Option<(String, DeltaSet)> = None;
+    let mut active: Option<(String, ActiveSet)> = None;
     let mut results: Vec<(u64, Tensor)> = Vec::with_capacity(stats.requests);
     for (adapter, reqs) in group_by_adapter(queue) {
         let t0 = Instant::now();
-        let (deltas, trace) = swap.deltas(store, &adapter)?;
-        let (swaps, warm_swaps) = account_swap(&mut active, &adapter, &deltas, trace);
+        let (set, trace) = fetch_active(swap, store, &adapter, apply)?;
+        let (swaps, warm_swaps) = account_swap_set(&mut active, &adapter, &set, trace);
         stats.swaps += swaps;
         stats.warm_swaps += warm_swaps;
         stats.swap_seconds += t0.elapsed().as_secs_f64();
@@ -588,7 +811,7 @@ pub fn serve_sequential_host(
                 .batch
                 .get("x")
                 .ok_or_else(|| anyhow::anyhow!("request {} has no 'x' tensor", req.id))?;
-            let out = DeltaRunner::eval_one(deltas.as_slice(), x)?;
+            let out = set.eval(x)?;
             stats.exec_seconds += t1.elapsed().as_secs_f64();
             stats.batches += 1;
             stats.latencies.push(t_start.elapsed().as_secs_f64());
@@ -596,14 +819,16 @@ pub fn serve_sequential_host(
         }
     }
     stats.disk_reads = store.disk_reads() - disk0;
+    stats.record_residency(&swap.stats());
     stats.wall_seconds = t_start.elapsed().as_secs_f64();
     results.sort_by_key(|&(id, _)| id);
     Ok((results, stats))
 }
 
-/// Pure-host scheduled serve: [`run`] with a [`DeltaRunner`], recording
-/// the store's disk-read delta. This is the path the scheduler benches
-/// and the default-build integration tests drive.
+/// Pure-host scheduled serve: [`run`] with a [`DeltaRunner`] in
+/// `cfg.apply` mode, recording the store's disk-read delta and the cache
+/// stack's byte residency. This is the path the scheduler benches and
+/// the default-build integration tests drive.
 pub fn serve_scheduled_host(
     swap: &SharedSwap,
     store: &SharedAdapterStore,
@@ -611,9 +836,10 @@ pub fn serve_scheduled_host(
     cfg: &SchedCfg,
 ) -> Result<(Vec<(u64, Tensor)>, ServeStats)> {
     let disk0 = store.disk_reads();
-    let runner = DeltaRunner::new(swap, store, cfg.workers);
+    let runner = DeltaRunner::new(swap, store, cfg.workers, cfg.apply);
     let (results, mut stats) = run(cfg, queue, &runner)?;
     stats.disk_reads = store.disk_reads() - disk0;
+    stats.record_residency(&swap.stats());
     Ok((results, stats))
 }
 
@@ -702,7 +928,13 @@ mod tests {
     fn run_serves_every_request_exactly_once_and_counts_sum() {
         let queue: Vec<Request> =
             (0..100).map(|i| req(i, &format!("ad{}", i % 7))).collect();
-        let cfg = SchedCfg { workers: 3, max_batch: 8, max_wait_ticks: 16, queue_cap: 32 };
+        let cfg = SchedCfg {
+            workers: 3,
+            max_batch: 8,
+            max_wait_ticks: 16,
+            queue_cap: 32,
+            apply: ApplyMode::Auto,
+        };
         let (results, stats) = run(&cfg, queue, &EchoRunner).unwrap();
         assert_eq!(results.len(), 100);
         for (i, (id, t)) in results.iter().enumerate() {
@@ -728,7 +960,13 @@ mod tests {
     fn run_batching_is_identical_across_worker_counts() {
         let make_queue =
             || (0..200).map(|i| req(i, &format!("ad{}", (i * 7) % 13))).collect::<Vec<_>>();
-        let cfg1 = SchedCfg { workers: 1, max_batch: 4, max_wait_ticks: 8, queue_cap: 16 };
+        let cfg1 = SchedCfg {
+            workers: 1,
+            max_batch: 4,
+            max_wait_ticks: 8,
+            queue_cap: 16,
+            apply: ApplyMode::Auto,
+        };
         let cfg4 = SchedCfg { workers: 4, ..cfg1.clone() };
         let (r1, s1) = run(&cfg1, make_queue(), &EchoRunner).unwrap();
         let (r4, s4) = run(&cfg4, make_queue(), &EchoRunner).unwrap();
@@ -752,7 +990,13 @@ mod tests {
         // nothing would flush until the final drain.
         let queue: Vec<Request> =
             (0..40).map(|i| req(i, &format!("ad{}", i % 8))).collect();
-        let cfg = SchedCfg { workers: 2, max_batch: 1000, max_wait_ticks: 10, queue_cap: 64 };
+        let cfg = SchedCfg {
+            workers: 2,
+            max_batch: 1000,
+            max_wait_ticks: 10,
+            queue_cap: 64,
+            apply: ApplyMode::Auto,
+        };
         let (results, stats) = run(&cfg, queue, &EchoRunner).unwrap();
         assert_eq!(results.len(), 40);
         assert_eq!(stats.full_flushes, 0);
@@ -760,9 +1004,48 @@ mod tests {
     }
 
     #[test]
+    fn apply_mode_parses_and_displays() {
+        let table = [
+            ("auto", ApplyMode::Auto),
+            ("dense", ApplyMode::Dense),
+            ("factored", ApplyMode::Factored),
+        ];
+        for (s, m) in table {
+            assert_eq!(s.parse::<ApplyMode>().unwrap(), m);
+            assert_eq!(m.to_string(), s);
+        }
+        assert!("fast".parse::<ApplyMode>().is_err());
+        assert_eq!(ApplyMode::default(), ApplyMode::Auto);
+    }
+
+    #[test]
+    fn cost_model_prefers_factored_only_when_strictly_cheaper() {
+        let lowrank = |d1: usize, r: usize, d2: usize| SiteFactors::LowRank {
+            u: Tensor::zeros(&[d1, r]),
+            v: Tensor::zeros(&[r, d2]),
+            scale: 1.0,
+        };
+        // r(d1+d2) = 2·16 = 32 < 64 = d1·d2: factored wins.
+        assert!(factored_wins(&[("w".into(), lowrank(8, 2, 8))]));
+        // r(d1+d2) = 4·16 = 64 = d1·d2: a tie goes dense (strict <).
+        assert!(!factored_wins(&[("w".into(), lowrank(8, 4, 8))]));
+        // A losing site can drag down a winning one: totals decide.
+        assert!(!factored_wins(&[
+            ("a".into(), lowrank(8, 2, 8)),
+            ("b".into(), lowrank(8, 8, 8)),
+        ]));
+    }
+
+    #[test]
     fn worker_error_propagates() {
         let queue = vec![req(0, "ok"), req(1, "bad"), req(2, "ok")];
-        let cfg = SchedCfg { workers: 2, max_batch: 4, max_wait_ticks: 4, queue_cap: 8 };
+        let cfg = SchedCfg {
+            workers: 2,
+            max_batch: 4,
+            max_wait_ticks: 4,
+            queue_cap: 8,
+            apply: ApplyMode::Auto,
+        };
         let err = run(&cfg, queue, &FailRunner).unwrap_err();
         assert!(format!("{err:#}").contains("injected failure"));
     }

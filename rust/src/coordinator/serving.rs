@@ -16,7 +16,7 @@
 //!    below through lock-partitioned shards, so warm swaps on *distinct*
 //!    adapters never serialize.
 //!
-//! Swap cost is three layers of cache, so the steady state is a pair of
+//! Swap cost is layered caching, so the steady state is a pair of
 //! `HashMap` lookups instead of disk-read + decode + inverse DFT:
 //!
 //! 1. [`crate::adapter::SharedAdapterStore`] — sharded LRU of decoded
@@ -27,7 +27,19 @@
 //!    built through the process-wide GEMM plan cache
 //!    ([`crate::fourier::plan::global`]) for the merge/export path (no
 //!    IDFT recompute on a warm swap; twiddle tables shared across
-//!    adapters with the same entry matrix).
+//!    adapters with the same entry matrix),
+//! 4. [`SwapCache::factors`] — the **factored** per-site state
+//!    ([`crate::adapter::method::SiteFactors`]) for no-materialize
+//!    serving: per adapter this is O(r·(d1+d2)) floats (or just the n
+//!    coefficients for spectral methods) instead of the d1·d2 dense ΔW.
+//!    Methods that don't factor (dense/bitfit) cache a `None` so the
+//!    fallback decision is itself warm.
+//!
+//! The delta and factor layers carry byte-accurate residency counters
+//! ([`SwapCacheStats::delta_bytes`] / [`SwapCacheStats::factor_bytes`] /
+//! [`SwapCacheStats::peak_bytes`]), and LRU eviction breaks coldness ties
+//! by byte size (of the two coldest names the byte-larger one goes first;
+//! full byte-budget eviction is future work).
 //!
 //! [`Server::publish`] stamps a monotonic version into the store
 //! ([`crate::adapter::store::AdapterStore::publish`]) and invalidates
@@ -58,7 +70,7 @@ use super::scheduler::{self, SchedCfg};
 use super::scheduler::{BatchOut, BatchRunner};
 use super::trainer::{Batch, Trainer};
 use crate::adapter::format::AdapterFile;
-use crate::adapter::method::site_deltas_with_dims;
+use crate::adapter::method::{site_deltas_with_dims, site_factors_with_dims, SiteFactors};
 use crate::adapter::store::{shard_index, split_versioned, AdapterStore, SharedAdapterStore};
 use crate::runtime::{ParamSet, StepEngine};
 use crate::tensor::Tensor;
@@ -77,6 +89,10 @@ pub struct Request {
 
 /// Reconstructed per-site ΔW set for one adapter, shared across workers.
 pub type DeltaSet = Arc<Vec<(String, Tensor)>>;
+
+/// Factored per-site state for one adapter (no-materialize serving),
+/// shared across workers.
+pub type FactorSet = Arc<Vec<(String, SiteFactors)>>;
 
 /// Device-form adapt tensor set for one adapter, shared across workers.
 pub type TensorSet = Arc<HashMap<String, Tensor>>;
@@ -113,6 +129,13 @@ pub struct ServeStats {
     /// Per-request latency in seconds (admission → micro-batch completion;
     /// the sequential path measures serve-start → request completion).
     pub latencies: Vec<f64>,
+    /// Dense ΔW bytes resident in the swap cache when the call finished.
+    pub delta_bytes: u64,
+    /// Factored adapter-state bytes resident when the call finished.
+    pub factor_bytes: u64,
+    /// Peak resident bytes (deltas + factors) over the cache lifetime,
+    /// summed across shards — an upper bound on the true global peak.
+    pub peak_bytes: u64,
 }
 
 impl ServeStats {
@@ -148,6 +171,15 @@ impl ServeStats {
     pub fn latency_p99(&self) -> f64 {
         self.latency_percentile(99.0)
     }
+
+    /// Copy the cache-residency byte counters out of a swap-cache
+    /// snapshot (called at the end of every serve path so `repro serve` /
+    /// `repro pipeline` can report residency without re-querying caches).
+    pub fn record_residency(&mut self, cs: &SwapCacheStats) {
+        self.delta_bytes = cs.delta_bytes;
+        self.factor_bytes = cs.factor_bytes;
+        self.peak_bytes = cs.peak_bytes;
+    }
 }
 
 /// Cache counters for [`SwapCache`].
@@ -157,15 +189,33 @@ pub struct SwapCacheStats {
     pub tensor_builds: u64,
     pub delta_hits: u64,
     pub delta_builds: u64,
+    pub factor_hits: u64,
+    pub factor_builds: u64,
+    /// Bytes of dense ΔW currently resident in the delta layer.
+    pub delta_bytes: u64,
+    /// Bytes of per-adapter factored state currently resident in the
+    /// factor layer (spectral plans are shared process-wide and excluded —
+    /// see [`SiteFactors::resident_bytes`]).
+    pub factor_bytes: u64,
+    /// Peak of `delta_bytes + factor_bytes` over the cache's lifetime.
+    pub peak_bytes: u64,
 }
 
 impl SwapCacheStats {
     /// Accumulate another shard's counters (see [`SharedSwap::stats`]).
+    /// Hit/build counts and current residency sum exactly; summed
+    /// per-shard peaks are an upper bound on the true global peak (shards
+    /// don't peak simultaneously).
     pub fn merge(&mut self, other: &SwapCacheStats) {
         self.tensor_hits += other.tensor_hits;
         self.tensor_builds += other.tensor_builds;
         self.delta_hits += other.delta_hits;
         self.delta_builds += other.delta_builds;
+        self.factor_hits += other.factor_hits;
+        self.factor_builds += other.factor_builds;
+        self.delta_bytes += other.delta_bytes;
+        self.factor_bytes += other.factor_bytes;
+        self.peak_bytes += other.peak_bytes;
     }
 }
 
@@ -217,10 +267,26 @@ pub struct SwapCache {
     site_dims: BTreeMap<String, (usize, usize)>,
     tensors: HashMap<String, TensorSet>,
     deltas: HashMap<String, DeltaSet>,
+    /// Factored layer. `None` is a cached *negative* result: the adapter's
+    /// method has no factorization, so callers fall back to `deltas`
+    /// without re-decoding the file on every batch.
+    factors: HashMap<String, Option<FactorSet>>,
     /// LRU order over adapter names, most-recently-used last.
     order: Vec<String>,
     cap: usize,
     pub stats: SwapCacheStats,
+}
+
+/// Resident bytes of one dense ΔW set.
+fn delta_set_bytes(d: &DeltaSet) -> u64 {
+    d.iter().map(|(_, t)| t.byte_size() as u64).sum()
+}
+
+/// Resident bytes of one cached factor entry (0 for the negative cache).
+fn factor_set_bytes(f: &Option<FactorSet>) -> u64 {
+    f.as_ref()
+        .map(|fs| fs.iter().map(|(_, sf)| sf.resident_bytes() as u64).sum())
+        .unwrap_or(0)
 }
 
 impl SwapCache {
@@ -234,14 +300,51 @@ impl SwapCache {
             site_dims,
             tensors: HashMap::new(),
             deltas: HashMap::new(),
+            factors: HashMap::new(),
             order: Vec::new(),
             cap: cap.max(1),
             stats: SwapCacheStats::default(),
         }
     }
 
-    /// Mark `name` most-recently-used, evicting the coldest name (both
-    /// cache layers) if a new name exceeds the cap.
+    /// Total resident bytes of one name across all layers (eviction
+    /// tie-break input).
+    fn entry_bytes(&self, name: &str) -> u64 {
+        let t: u64 = self
+            .tensors
+            .get(name)
+            .map(|ts| ts.values().map(|x| x.byte_size() as u64).sum())
+            .unwrap_or(0);
+        let d = self.deltas.get(name).map(delta_set_bytes).unwrap_or(0);
+        let f = self.factors.get(name).map(factor_set_bytes).unwrap_or(0);
+        t + d + f
+    }
+
+    /// Drop every cache layer of `name`, keeping the byte counters exact.
+    fn drop_layers(&mut self, name: &str) {
+        self.tensors.remove(name);
+        if let Some(d) = self.deltas.remove(name) {
+            self.stats.delta_bytes -= delta_set_bytes(&d);
+        }
+        if let Some(f) = self.factors.remove(name) {
+            self.stats.factor_bytes -= factor_set_bytes(&f);
+        }
+    }
+
+    /// Record the current residency high-water mark.
+    fn note_peak(&mut self) {
+        let cur = self.stats.delta_bytes + self.stats.factor_bytes;
+        if cur > self.stats.peak_bytes {
+            self.stats.peak_bytes = cur;
+        }
+    }
+
+    /// Mark `name` most-recently-used, evicting one resident name (all
+    /// cache layers) if a new name exceeds the cap. Eviction is LRU with a
+    /// byte tie-break over a window of the two coldest names: the
+    /// byte-larger of the two goes first, equal sizes fall back to pure
+    /// coldness — so a 768×768 fourierft delta never outlives a 64×64
+    /// bitfit row merely because the tiny row is marginally colder.
     fn touch(&mut self, name: &str) {
         if let Some(pos) = self.order.iter().position(|n| n == name) {
             let n = self.order.remove(pos);
@@ -249,9 +352,15 @@ impl SwapCache {
             return;
         }
         if self.order.len() >= self.cap {
-            let evict = self.order.remove(0);
-            self.tensors.remove(&evict);
-            self.deltas.remove(&evict);
+            let evict_idx = if self.order.len() >= 2
+                && self.entry_bytes(&self.order[1]) > self.entry_bytes(&self.order[0])
+            {
+                1
+            } else {
+                0
+            };
+            let evict = self.order.remove(evict_idx);
+            self.drop_layers(&evict);
         }
         self.order.push(name.to_string());
     }
@@ -317,12 +426,54 @@ impl SwapCache {
         }
         let disk0 = store.disk_reads();
         let file = store.load(name)?;
-        let d =
+        let d: DeltaSet =
             Arc::new(site_deltas_with_dims(&file, |site| self.site_dims.get(site).copied())?);
         self.stats.delta_builds += 1;
+        self.stats.delta_bytes += delta_set_bytes(&d);
         self.deltas.insert(name.to_string(), d.clone());
+        self.note_peak();
         self.touch(name);
         Ok((d, SwapTrace { rebuilt: true, disk_read: store.disk_reads() > disk0 }))
+    }
+
+    /// Factored per-site state for `name` (no-materialize serving path),
+    /// or `None` when the adapter's method doesn't factor (dense/bitfit) —
+    /// the negative result is cached too, so the dense fallback decision
+    /// is itself a warm hash lookup. Built through the method registry's
+    /// [`crate::adapter::method::site_factors_with_dims`] with the same
+    /// dims fallback as the delta layer; invalidation and LRU order are
+    /// shared with the other layers, so PR 5's version-scoped publish
+    /// semantics carry over unchanged.
+    pub fn factors(
+        &mut self,
+        store: &mut AdapterStore,
+        name: &str,
+    ) -> Result<Option<FactorSet>> {
+        Ok(self.factors_traced(store, name)?.0)
+    }
+
+    /// [`SwapCache::factors`] plus an exact account of what the access did.
+    pub fn factors_traced(
+        &mut self,
+        store: &mut AdapterStore,
+        name: &str,
+    ) -> Result<(Option<FactorSet>, SwapTrace)> {
+        if let Some(f) = self.factors.get(name).cloned() {
+            self.stats.factor_hits += 1;
+            self.touch(name);
+            return Ok((f, SwapTrace::default()));
+        }
+        let disk0 = store.disk_reads();
+        let file = store.load(name)?;
+        let f: Option<FactorSet> =
+            site_factors_with_dims(&file, |site| self.site_dims.get(site).copied())?
+                .map(Arc::new);
+        self.stats.factor_builds += 1;
+        self.stats.factor_bytes += factor_set_bytes(&f);
+        self.factors.insert(name.to_string(), f.clone());
+        self.note_peak();
+        self.touch(name);
+        Ok((f, SwapTrace { rebuilt: true, disk_read: store.disk_reads() > disk0 }))
     }
 
     /// Drop all cached state for exactly `name` (republish / external
@@ -331,8 +482,7 @@ impl SwapCache {
     /// entries resident (immutable versions never go stale) and vice
     /// versa.
     pub fn invalidate(&mut self, name: &str) {
-        self.tensors.remove(name);
-        self.deltas.remove(name);
+        self.drop_layers(name);
         self.order.retain(|n| n != name);
     }
 
@@ -354,7 +504,10 @@ impl SwapCache {
     pub fn clear(&mut self) {
         self.tensors.clear();
         self.deltas.clear();
+        self.factors.clear();
         self.order.clear();
+        self.stats.delta_bytes = 0;
+        self.stats.factor_bytes = 0;
     }
 
     /// Resident adapter names in LRU order, coldest first (for tests and
@@ -363,9 +516,11 @@ impl SwapCache {
         self.order.clone()
     }
 
-    /// True if either cache layer holds `name`.
+    /// True if any cache layer holds `name`.
     pub fn contains(&self, name: &str) -> bool {
-        self.tensors.contains_key(name) || self.deltas.contains_key(name)
+        self.tensors.contains_key(name)
+            || self.deltas.contains_key(name)
+            || self.factors.contains_key(name)
     }
 
     pub fn cap(&self) -> usize {
@@ -376,21 +531,23 @@ impl SwapCache {
     /// cached name appears in `order` exactly once, `order` holds no
     /// phantom names (entries backing neither layer), and the cap holds.
     pub fn check_consistent(&self) -> bool {
-        let no_phantom = self
-            .order
-            .iter()
-            .all(|n| self.tensors.contains_key(n) || self.deltas.contains_key(n));
+        let no_phantom = self.order.iter().all(|n| self.contains(n));
         let all_tracked = self
             .tensors
             .keys()
             .chain(self.deltas.keys())
+            .chain(self.factors.keys())
             .all(|n| self.order.iter().any(|o| o == n));
         let unique = {
             let mut sorted = self.order.clone();
             sorted.sort();
             sorted.windows(2).all(|w| w[0] != w[1])
         };
-        no_phantom && all_tracked && unique && self.order.len() <= self.cap
+        let bytes_exact = self.stats.delta_bytes
+            == self.deltas.values().map(delta_set_bytes).sum::<u64>()
+            && self.stats.factor_bytes
+                == self.factors.values().map(factor_set_bytes).sum::<u64>();
+        no_phantom && all_tracked && unique && bytes_exact && self.order.len() <= self.cap
     }
 }
 
@@ -452,6 +609,18 @@ impl SharedSwap {
     ) -> Result<(DeltaSet, SwapTrace)> {
         let mut shard = self.shards[self.shard_of(name)].lock().unwrap();
         store.with_shard(name, |st| shard.deltas_traced(st, name))
+    }
+
+    /// Factored per-site state for `name` through the sharded cache
+    /// (`None` = the adapter's method does not factor; the negative
+    /// result is cached in the owning shard too).
+    pub fn factors(
+        &self,
+        store: &SharedAdapterStore,
+        name: &str,
+    ) -> Result<(Option<FactorSet>, SwapTrace)> {
+        let mut shard = self.shards[self.shard_of(name)].lock().unwrap();
+        store.with_shard(name, |st| shard.factors_traced(st, name))
     }
 
     /// Drop all cached state for exactly `name` in its owning shard
@@ -646,6 +815,7 @@ impl<'a> Server<'a> {
         };
         let (results, mut stats) = scheduler::run(cfg, queue, &runner)?;
         stats.disk_reads = self.store.disk_reads() - disk0;
+        stats.record_residency(&self.swap.stats());
         Ok((results, stats))
     }
 
@@ -690,6 +860,7 @@ impl<'a> Server<'a> {
         }
         stats.disk_reads = self.store.disk_reads() - disk0;
         stats.wall_seconds = t_start.elapsed().as_secs_f64();
+        stats.record_residency(&self.swap.stats());
         results.sort_by_key(|&(id, _)| id);
         Ok((results, stats))
     }
@@ -785,15 +956,38 @@ mod tests {
 
     #[test]
     fn swap_cache_stats_merge_sums_fields() {
-        let mut a =
-            SwapCacheStats { tensor_hits: 1, tensor_builds: 2, delta_hits: 3, delta_builds: 4 };
-        let b =
-            SwapCacheStats { tensor_hits: 10, tensor_builds: 20, delta_hits: 30, delta_builds: 40 };
+        let mut a = SwapCacheStats {
+            tensor_hits: 1,
+            tensor_builds: 2,
+            delta_hits: 3,
+            delta_builds: 4,
+            factor_hits: 5,
+            factor_builds: 6,
+            delta_bytes: 7,
+            factor_bytes: 8,
+            peak_bytes: 9,
+        };
+        let b = SwapCacheStats {
+            tensor_hits: 10,
+            tensor_builds: 20,
+            delta_hits: 30,
+            delta_builds: 40,
+            factor_hits: 50,
+            factor_builds: 60,
+            delta_bytes: 70,
+            factor_bytes: 80,
+            peak_bytes: 90,
+        };
         a.merge(&b);
         assert_eq!(a.tensor_hits, 11);
         assert_eq!(a.tensor_builds, 22);
         assert_eq!(a.delta_hits, 33);
         assert_eq!(a.delta_builds, 44);
+        assert_eq!(a.factor_hits, 55);
+        assert_eq!(a.factor_builds, 66);
+        assert_eq!(a.delta_bytes, 77);
+        assert_eq!(a.factor_bytes, 88);
+        assert_eq!(a.peak_bytes, 99);
     }
 
     #[test]

@@ -159,6 +159,50 @@ impl ReconstructPlan {
         Ok(dc)
     }
 
+    /// Apply ΔW to a row batch **without materializing it**:
+    ///
+    /// ```text
+    /// y = x·ΔW = [ (x·Cu)⊙s | −(x·Su)⊙s ] · B,   s_l = α c_l / (d1 d2),
+    /// ```
+    ///
+    /// i.e. two GEMMs against the cached twiddle tables — O(rows·2n·(d1+d2))
+    /// multiply-adds instead of the O(rows·d1·d2) dense product plus the
+    /// O(d1·2n·d2) build. `x` is rows×d1 row-major; the result is rows×d2.
+    ///
+    /// Determinism: both stages run through [`par::matmul_f32`], whose
+    /// per-output-element summation order is fixed regardless of thread
+    /// count, so the result is bitwise-stable across reruns and worker
+    /// counts. It agrees with `x · reconstruct(c, α)` to ~1e-6 relative
+    /// (f32 GEMMs associate differently), not bitwise.
+    pub fn apply(&self, x: &[f32], rows: usize, coeffs: &[f32], alpha: f32) -> Result<Vec<f32>> {
+        let (d1, d2, n) = (self.d1, self.d2, self.n);
+        anyhow::ensure!(
+            coeffs.len() == n,
+            "plan built for n={n} but got {} coefficients",
+            coeffs.len()
+        );
+        anyhow::ensure!(
+            x.len() == rows * d1,
+            "input batch has {} elements, expected {rows}x{d1}",
+            x.len()
+        );
+        let scale = alpha as f64 / (d1 * d2) as f64;
+        let s: Vec<f32> = coeffs.iter().map(|&c| (c as f64 * scale) as f32).collect();
+        let xc = par::matmul_f32(x, &self.cu, rows, d1, n);
+        let xs = par::matmul_f32(x, &self.su, rows, d1, n);
+        let mut t = vec![0.0f32; rows * 2 * n];
+        for r in 0..rows {
+            let tc = &xc[r * n..(r + 1) * n];
+            let ts = &xs[r * n..(r + 1) * n];
+            let tr = &mut t[r * 2 * n..(r + 1) * 2 * n];
+            for l in 0..n {
+                tr[l] = tc[l] * s[l];
+                tr[n + l] = -(ts[l] * s[l]);
+            }
+        }
+        Ok(par::matmul_f32(&t, &self.bmat, rows, 2 * n, d2))
+    }
+
     /// ΔW = α · Re(IDFT2(ToDense(E, c))) as a d1×d2 row-major vec.
     pub fn reconstruct(&self, coeffs: &[f32], alpha: f32) -> Result<Vec<f32>> {
         anyhow::ensure!(
@@ -341,6 +385,33 @@ mod tests {
             let rel = (fd - dc[l] as f64).abs() / (1.0 + fd.abs());
             assert!(rel < 1e-3, "coeff {l}: fd {fd} vs analytic {}", dc[l]);
         }
+    }
+
+    #[test]
+    fn factored_apply_matches_dense_product_and_is_rerun_stable() {
+        let (d1, d2, n, rows) = (48usize, 32usize, 24usize, 5usize);
+        let (js, ks) = sample_entries(d1, d2, n, EntryBias::None, 11);
+        let plan = ReconstructPlan::new((&js, &ks), d1, d2).unwrap();
+        let mut rng = Rng::new(9);
+        let c = rng.normal_vec(n, 1.0);
+        let x = rng.normal_vec(rows * d1, 1.0);
+        let dense = plan.reconstruct(&c, 6.0).unwrap();
+        let want = par::matmul_f32(&x, &dense, rows, d1, d2);
+        let got = plan.apply(&x, rows, &c, 6.0).unwrap();
+        assert_eq!(got.len(), rows * d2);
+        let denom = want.iter().map(|v| v.abs()).fold(0.0f32, f32::max).max(1.0);
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() / denom < 1e-6, "dense {a} vs factored {b}");
+        }
+        let again = plan.apply(&x, rows, &c, 6.0).unwrap();
+        assert_eq!(got, again, "factored apply must be bitwise rerun-stable");
+    }
+
+    #[test]
+    fn factored_apply_rejects_bad_shapes() {
+        let plan = ReconstructPlan::new((&[0, 1], &[0, 1]), 8, 8).unwrap();
+        assert!(plan.apply(&[0.0; 16], 2, &[1.0], 1.0).is_err());
+        assert!(plan.apply(&[0.0; 15], 2, &[1.0, 2.0], 1.0).is_err());
     }
 
     #[test]

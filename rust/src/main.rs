@@ -68,10 +68,14 @@ fn print_usage() {
          \x20 figure <3|4|5|6|7>   [--quick --steps N --seeds N]\n\
          \x20 all [--quick]                      run every table and figure\n\
          \x20 serve [--adapters N --requests N --workers N]  multi-adapter serving demo\n\
-         \x20 serve-host [--method ID --adapters N --requests N --workers N]\n\
-         \x20                                    pure-host scheduler demo, any registered method\n\
+         \x20 serve-host [--method ID --adapters N --requests N --workers N\n\
+         \x20             --apply {{auto,dense,factored}} --dim D --n N --sites S --batch B]\n\
+         \x20                                    pure-host scheduler demo, any registered method;\n\
+         \x20                                    --apply picks dense vs factored (no-materialize)\n\
+         \x20                                    serving, auto = per-adapter flops cost model\n\
          \x20 pipeline [--adapters N --requests N --publish-every S --workers W\n\
-         \x20           --train-workers T --steps K --keep V --artifact A]\n\
+         \x20           --train-workers T --steps K --keep V --artifact A\n\
+         \x20           --apply {{auto,dense,factored}}]\n\
          \x20                                    online lifecycle: background train -> versioned\n\
          \x20                                    publish -> serve, with per-publish latency rows\n\
          \x20 methods [--d N --layers N --n N --rank N]      registered adapter methods + budgets\n\
@@ -116,19 +120,32 @@ fn methods(args: &Args) -> Result<()> {
 
 /// Pure-host serving demo: populate a synthetic store with `--method`
 /// adapters (any registered id — no XLA artifacts needed), then drive the
-/// Zipf workload through the micro-batching scheduler.
+/// Zipf workload through the micro-batching scheduler. `--apply
+/// {auto,dense,factored}` selects dense vs factored ΔW application;
+/// `--dim/--n/--sites/--batch` reshape the workload geometry so the
+/// crossover is reachable from the CLI. The `response digest` line is an
+/// FNV-1a over the id-sorted logits bits: bit-identical across reruns and
+/// worker counts for a fixed mode, and across modes whose applies agree
+/// bitwise (the property the scheduler-stress CI job gates on).
 fn serve_host(args: &Args) -> Result<()> {
     use fourier_peft::adapter::SharedAdapterStore;
-    use fourier_peft::coordinator::scheduler::{serve_scheduled_host, SchedCfg};
+    use fourier_peft::coordinator::scheduler::{serve_scheduled_host, ApplyMode, SchedCfg};
     use fourier_peft::coordinator::serving::SharedSwap;
     use fourier_peft::coordinator::workload::{self, WorkloadCfg};
 
     let method = args.str_or("method", "fourierft");
+    let apply: ApplyMode = args.str_or("apply", "auto").parse()?;
+    let base = WorkloadCfg::small();
     let cfg = WorkloadCfg {
         adapters: args.usize_or("adapters", 32),
         requests: args.usize_or("requests", 256),
         method: method.to_string(),
-        ..WorkloadCfg::small()
+        dim: args.usize_or("dim", base.dim),
+        sites: args.usize_or("sites", base.sites),
+        n_coeffs: args.usize_or("n", base.n_coeffs),
+        batch: args.usize_or("batch", base.batch),
+        seed: args.u64_or("seed", base.seed),
+        ..base
     };
     let dir = fourier_peft::runs_dir().join("serve_host_demo").join(method);
     let _ = std::fs::remove_dir_all(&dir);
@@ -137,13 +154,14 @@ fn serve_host(args: &Args) -> Result<()> {
     let swap = SharedSwap::new(workload::site_dims(&cfg));
     let sched = SchedCfg {
         workers: args.usize_or("workers", 2),
+        apply,
         ..SchedCfg::default()
     };
     let queue = workload::gen_requests(&cfg);
     let (results, stats) = serve_scheduled_host(&swap, &store, queue, &sched)?;
     println!(
-        "method {method}: served {} requests in {} micro-batches  swaps {} ({} warm)  \
-         wall {:.3}s  => {:.1} req/s",
+        "method {method} (apply {apply}): served {} requests in {} micro-batches  \
+         swaps {} ({} warm)  wall {:.3}s  => {:.1} req/s",
         results.len(), stats.batches, stats.swaps, stats.warm_swaps,
         stats.wall_seconds, stats.throughput_rps()
     );
@@ -153,6 +171,20 @@ fn serve_host(args: &Args) -> Result<()> {
         stats.disk_reads,
         fourier_peft::util::fmt_bytes(store.total_bytes()? as usize)
     );
+    println!(
+        "cache residency: dense {}  factors {}  peak {}",
+        fourier_peft::util::fmt_bytes(stats.delta_bytes as usize),
+        fourier_peft::util::fmt_bytes(stats.factor_bytes as usize),
+        fourier_peft::util::fmt_bytes(stats.peak_bytes as usize)
+    );
+    let mut digest = fourier_peft::util::FNV64_INIT;
+    for (id, t) in &results {
+        digest = fourier_peft::util::fnv64_fold(digest, &id.to_le_bytes());
+        for v in t.as_f32()? {
+            digest = fourier_peft::util::fnv64_fold(digest, &v.to_bits().to_le_bytes());
+        }
+    }
+    println!("response digest {digest:016x}");
     Ok(())
 }
 
@@ -193,6 +225,7 @@ fn pipeline(args: &Args) -> Result<()> {
         batch: args.usize_or("batch", 2),
         zipf_s: args.f64_or("zipf", 1.1),
         seed: args.u64_or("seed", 2024),
+        serve_apply: args.str_or("apply", "auto").parse()?,
     };
     let meta = trainer.meta_for(&cfg.artifact)?;
     let dim = pipeline::serve_dim(&meta)?;
@@ -217,6 +250,13 @@ fn pipeline(args: &Args) -> Result<()> {
     println!(
         "serve latency p50 {:.1}ms  p95 {:.1}ms  p99 {:.1}ms",
         stats.latency_p50() * 1e3, stats.latency_p95() * 1e3, stats.latency_p99() * 1e3
+    );
+    println!(
+        "cache residency: dense {}  factors {}  peak {}  (apply {})",
+        fourier_peft::util::fmt_bytes(stats.delta_bytes as usize),
+        fourier_peft::util::fmt_bytes(stats.factor_bytes as usize),
+        fourier_peft::util::fmt_bytes(stats.peak_bytes as usize),
+        cfg.serve_apply
     );
     println!(
         "publish latency p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms  \

@@ -64,6 +64,11 @@ impl Tensor {
         self.shape.len()
     }
 
+    /// Payload size in bytes (both dtypes are 4-byte elements).
+    pub fn byte_size(&self) -> usize {
+        self.len() * 4
+    }
+
     pub fn dtype(&self) -> &'static str {
         match self.data {
             Data::F32(_) => "f32",

@@ -7,15 +7,24 @@ pub mod json;
 
 use std::time::Instant;
 
-/// FNV-1a over a string — the one name-hash shared by the adapter-store
-/// shard router and the host engine's name-stable init streams.
-pub fn fnv64(s: &str) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for b in s.bytes() {
+/// FNV-1a offset basis — seed value for [`fnv64_fold`] chains.
+pub const FNV64_INIT: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Incremental FNV-1a: fold `bytes` into a running hash. Used by the
+/// serving CLI to digest id-sorted response bits into one line the CI
+/// scheduler-stress job can compare across apply modes and worker counts.
+pub fn fnv64_fold(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
         h ^= u64::from(b);
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
     h
+}
+
+/// FNV-1a over a string — the one name-hash shared by the adapter-store
+/// shard router and the host engine's name-stable init streams.
+pub fn fnv64(s: &str) -> u64 {
+    fnv64_fold(FNV64_INIT, s.as_bytes())
 }
 
 /// Wall-clock a closure, returning (result, seconds).

@@ -1,0 +1,272 @@
+//! Factored no-materialize serving tests — the PR-6 acceptance claims:
+//!
+//! * every structured built-in method (`fourierft`, `lora`, `loca`,
+//!   `circulant`) exposes [`SiteFactors`] whose `materialize()` is
+//!   **bitwise-equal** to the method's dense `site_delta`, while
+//!   `dense`/`bitfit` stay on the `None` fallback;
+//! * the factored `apply` matches the dense product `x · ΔW` bitwise for
+//!   `circulant` (identical op order) and within ~1e-5 relative L2 for
+//!   the GEMM-factored forms (f32 products associate differently);
+//! * per-adapter factored residency is a fraction of the dense ΔW bytes —
+//!   for `fourierft` at the workload geometry the factor layer holds
+//!   ≤ 25% of the delta layer's bytes (byte-accurate cache counters);
+//! * the scheduler serves the factored path **deterministically**:
+//!   bitwise-identical (request id → logits) across the sequential
+//!   baseline, {1, 4} workers, and a re-run, under both `--apply
+//!   factored` and `--apply auto`, for every registered 2-D method.
+
+use fourier_peft::adapter::format::AdapterFile;
+use fourier_peft::adapter::method::{self, MethodHp, SiteSpec};
+use fourier_peft::adapter::store::SharedAdapterStore;
+use fourier_peft::coordinator::scheduler::{
+    serve_scheduled_host, serve_sequential_host, ApplyMode, SchedCfg,
+};
+use fourier_peft::coordinator::serving::SharedSwap;
+use fourier_peft::coordinator::workload::{self, WorkloadCfg};
+use fourier_peft::tensor::{par, rng::Rng, Tensor};
+
+/// The built-in methods that factor (everything but dense/bitfit).
+const FACTORED: [&str; 4] = ["fourierft", "lora", "loca", "circulant"];
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("fp_factored_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// One-site synthetic adapter for `method` at a d×d site, seeded.
+fn test_adapter(method: &str, d: usize) -> AdapterFile {
+    let mut rng = Rng::new(0xFAC7);
+    let sites = vec![SiteSpec { name: "blk0.attn.wq.w".into(), d1: d, d2: d }];
+    let hp = MethodHp { n: 8, rank: 2, init_std: 1.0 };
+    method::init_adapter(method, &mut rng, &sites, &hp, 2024, 4.0, vec![]).unwrap()
+}
+
+fn assert_bitwise_equal(a: &[(u64, Tensor)], b: &[(u64, Tensor)], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: result counts differ");
+    for ((ia, ta), (ib, tb)) in a.iter().zip(b.iter()) {
+        assert_eq!(ia, ib, "{what}: id order differs");
+        let (va, vb) = (ta.as_f32().unwrap(), tb.as_f32().unwrap());
+        assert_eq!(va.len(), vb.len(), "{what}: shapes differ at id {ia}");
+        for i in 0..va.len() {
+            assert!(
+                va[i].to_bits() == vb[i].to_bits(),
+                "{what}: id {ia} element {i}: {} vs {} not bitwise identical",
+                va[i],
+                vb[i]
+            );
+        }
+    }
+}
+
+// --- materialize parity ----------------------------------------------------
+
+#[test]
+fn factors_materialize_bitwise_equals_site_delta() {
+    for m in FACTORED {
+        let a = test_adapter(m, 16);
+        let dense = method::site_deltas(&a).unwrap();
+        let factors = method::site_factors(&a)
+            .unwrap()
+            .unwrap_or_else(|| panic!("{m}: structured method must factor"));
+        assert_eq!(dense.len(), factors.len(), "{m}: site counts differ");
+        for ((sd, dt), (sf, f)) in dense.iter().zip(factors.iter()) {
+            assert_eq!(sd, sf, "{m}: site order differs");
+            let mat = f.materialize().unwrap();
+            assert_eq!(mat.shape, dt.shape, "{m}: materialized shape");
+            assert_eq!(f.dims(), (dt.shape[0], dt.shape[1]), "{m}: dims()");
+            let (va, vb) = (mat.as_f32().unwrap(), dt.as_f32().unwrap());
+            for i in 0..va.len() {
+                assert!(
+                    va[i].to_bits() == vb[i].to_bits(),
+                    "{m}: element {i}: materialize {} vs site_delta {} not bitwise",
+                    va[i],
+                    vb[i]
+                );
+            }
+        }
+    }
+    // dense/bitfit have no useful factorization: the whole-file dispatch
+    // reports None so callers fall back to the materialized delta path.
+    for m in ["dense", "bitfit"] {
+        let a = test_adapter(m, 16);
+        assert!(method::site_factors(&a).unwrap().is_none(), "{m} must not factor");
+    }
+}
+
+// --- apply parity ----------------------------------------------------------
+
+#[test]
+fn factored_apply_matches_dense_product() {
+    let (rows, d) = (3usize, 16usize);
+    for m in FACTORED {
+        let a = test_adapter(m, d);
+        let dense = method::site_deltas(&a).unwrap();
+        let factors = method::site_factors(&a).unwrap().unwrap();
+        let mut rng = Rng::new(0x99);
+        let x = rng.normal_vec(rows * d, 1.0);
+        for ((_, dt), (_, f)) in dense.iter().zip(factors.iter()) {
+            let want = par::matmul_f32(&x, dt.as_f32().unwrap(), rows, d, d);
+            let got = f.apply(&x, rows).unwrap();
+            assert_eq!(got.len(), want.len(), "{m}: apply output length");
+            if m == "circulant" {
+                // the gather replicates the dense GEMM's accumulation
+                // order exactly — bitwise, not approximate
+                for i in 0..got.len() {
+                    assert!(
+                        got[i].to_bits() == want[i].to_bits(),
+                        "{m}: element {i}: {} vs {} not bitwise identical",
+                        got[i],
+                        want[i]
+                    );
+                }
+            } else {
+                // two stacked GEMMs re-associate the f32 products; the
+                // contract is closeness, not bit equality
+                let (mut num, mut den) = (0.0f64, 0.0f64);
+                for i in 0..got.len() {
+                    let e = f64::from(got[i]) - f64::from(want[i]);
+                    num += e * e;
+                    den += f64::from(want[i]) * f64::from(want[i]);
+                }
+                let rel = (num / den.max(1e-30)).sqrt();
+                assert!(rel <= 1e-5, "{m}: factored apply drifted: rel L2 {rel:e}");
+            }
+            // reruns of the same apply are bitwise-stable (the scheduler's
+            // determinism contract leans on this)
+            let again = f.apply(&x, rows).unwrap();
+            for i in 0..got.len() {
+                assert_eq!(got[i].to_bits(), again[i].to_bits(), "{m}: rerun unstable");
+            }
+        }
+    }
+}
+
+// --- residency -------------------------------------------------------------
+
+#[test]
+fn factored_residency_is_a_fraction_of_dense() {
+    // Per-site property: factored resident state never exceeds the dense
+    // ΔW bytes for any structured built-in.
+    for m in FACTORED {
+        let a = test_adapter(m, 16);
+        let dense = method::site_deltas(&a).unwrap();
+        let factors = method::site_factors(&a).unwrap().unwrap();
+        for ((_, dt), (_, f)) in dense.iter().zip(factors.iter()) {
+            assert!(
+                f.resident_bytes() <= dt.byte_size(),
+                "{m}: factors ({}B) heavier than dense ({}B)",
+                f.resident_bytes(),
+                dt.byte_size()
+            );
+        }
+    }
+
+    // Byte-accurate cache counters: warm both layers for the fourierft
+    // workload and check the factor layer holds ≤ 25% of the delta
+    // layer's bytes (n coefficients vs d² floats per site).
+    let dir = tmpdir("res");
+    let cfg = WorkloadCfg { adapters: 8, requests: 8, ..WorkloadCfg::small() };
+    let store = SharedAdapterStore::with_shards(&dir, 4, 32).unwrap();
+    let names = workload::populate_store(&store, &cfg).unwrap();
+    let swap = SharedSwap::with_shards(workload::site_dims(&cfg), 4, 32);
+    for n in &names {
+        swap.deltas(&store, n).unwrap();
+        swap.factors(&store, n).unwrap();
+    }
+    let st = swap.stats();
+    assert!(st.delta_bytes > 0, "delta layer must be resident");
+    assert!(st.factor_bytes > 0, "factor layer must be resident");
+    assert!(
+        st.factor_bytes * 4 <= st.delta_bytes,
+        "factored residency {}B must be ≤ 25% of dense {}B",
+        st.factor_bytes,
+        st.delta_bytes
+    );
+    // peak tracks the high-water mark of both layers together
+    assert!(st.peak_bytes >= st.delta_bytes + st.factor_bytes);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --- scheduler determinism over the factored path --------------------------
+
+/// The PR-2 determinism acceptance re-run over `--apply factored` and
+/// `--apply auto`: for every registered 2-D method the (request id →
+/// logits) mapping is bitwise-identical across the sequential baseline,
+/// worker counts, and a re-run. `dense` exercises the forced-factored →
+/// dense fallback; the spectral methods exercise the stacked-GEMM apply.
+#[test]
+fn sched_factored_deterministic_across_workers_and_reruns() {
+    for m in ["fourierft", "lora", "dense", "loca", "circulant"] {
+        let dir = tmpdir(&format!("det_{m}"));
+        let cfg = WorkloadCfg {
+            adapters: 6,
+            requests: 48,
+            method: m.into(),
+            ..WorkloadCfg::small()
+        };
+        let store = SharedAdapterStore::with_shards(&dir, 4, 32).unwrap();
+        workload::populate_store(&store, &cfg).unwrap();
+        let swap = SharedSwap::with_shards(workload::site_dims(&cfg), 4, 32);
+        for mode in [ApplyMode::Factored, ApplyMode::Auto] {
+            let sched = |workers: usize| SchedCfg {
+                workers,
+                max_batch: 4,
+                max_wait_ticks: 8,
+                queue_cap: 16,
+                apply: mode,
+            };
+            let (seq, _) =
+                serve_sequential_host(&swap, &store, workload::gen_requests(&cfg), mode)
+                    .unwrap();
+            let (r1, _) =
+                serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sched(1))
+                    .unwrap();
+            let (r4, _) =
+                serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sched(4))
+                    .unwrap();
+            let (r4b, _) =
+                serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sched(4))
+                    .unwrap();
+            assert_bitwise_equal(&seq, &r1, &format!("{m}/{mode}: sequential vs 1-worker"));
+            assert_bitwise_equal(&r1, &r4, &format!("{m}/{mode}: 1-worker vs 4-worker"));
+            assert_bitwise_equal(&r4, &r4b, &format!("{m}/{mode}: 4-worker run vs re-run"));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Where the factored op order matches dense exactly, the two modes must
+/// agree bitwise end-to-end: `circulant` (the gather replicates the dense
+/// GEMM) and `dense` (forced-factored falls back to the dense path).
+#[test]
+fn sched_factored_bitwise_equals_dense_for_gather_and_fallback() {
+    for m in ["circulant", "dense"] {
+        let dir = tmpdir(&format!("par_{m}"));
+        let cfg = WorkloadCfg {
+            adapters: 4,
+            requests: 32,
+            method: m.into(),
+            ..WorkloadCfg::small()
+        };
+        let store = SharedAdapterStore::with_shards(&dir, 4, 32).unwrap();
+        workload::populate_store(&store, &cfg).unwrap();
+        let swap = SharedSwap::with_shards(workload::site_dims(&cfg), 4, 32);
+        let (dense, _) = serve_sequential_host(
+            &swap,
+            &store,
+            workload::gen_requests(&cfg),
+            ApplyMode::Dense,
+        )
+        .unwrap();
+        let (fact, _) = serve_sequential_host(
+            &swap,
+            &store,
+            workload::gen_requests(&cfg),
+            ApplyMode::Factored,
+        )
+        .unwrap();
+        assert_bitwise_equal(&dense, &fact, &format!("{m}: dense vs factored"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

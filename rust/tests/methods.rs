@@ -20,7 +20,9 @@ use fourier_peft::adapter::method::{
     self, DeltaMethod, MethodHp, MethodId, ReconstructCtx, SiteSpec, SiteTensors,
 };
 use fourier_peft::adapter::store::SharedAdapterStore;
-use fourier_peft::coordinator::scheduler::{serve_scheduled_host, serve_sequential_host, SchedCfg};
+use fourier_peft::coordinator::scheduler::{
+    serve_scheduled_host, serve_sequential_host, ApplyMode, SchedCfg,
+};
 use fourier_peft::coordinator::serving::SharedSwap;
 use fourier_peft::coordinator::workload::{self, WorkloadCfg};
 use fourier_peft::tensor::{rng::Rng, Data, Tensor};
@@ -323,8 +325,16 @@ fn user_registered_method_serves_through_the_scheduler() {
     let store = SharedAdapterStore::with_shards(&dir, 4, 16).unwrap();
     workload::populate_store(&store, &cfg).unwrap();
     let swap = SharedSwap::with_shards(workload::site_dims(&cfg), 4, 16);
-    let sc = SchedCfg { workers: 2, max_batch: 4, max_wait_ticks: 8, queue_cap: 16 };
-    let (seq, _) = serve_sequential_host(&swap, &store, workload::gen_requests(&cfg)).unwrap();
+    let sc = SchedCfg {
+        workers: 2,
+        max_batch: 4,
+        max_wait_ticks: 8,
+        queue_cap: 16,
+        apply: ApplyMode::Dense,
+    };
+    let (seq, _) =
+        serve_sequential_host(&swap, &store, workload::gen_requests(&cfg), ApplyMode::Dense)
+            .unwrap();
     let (par, stats) =
         serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sc).unwrap();
     assert_eq!(seq.len(), 32);
@@ -352,7 +362,9 @@ fn bitfit_serving_errors_cleanly_instead_of_panicking() {
     let store = SharedAdapterStore::with_shards(&dir, 2, 8).unwrap();
     workload::populate_store(&store, &cfg).unwrap();
     let swap = SharedSwap::with_shards(workload::site_dims(&cfg), 2, 8);
-    let err = serve_sequential_host(&swap, &store, workload::gen_requests(&cfg)).unwrap_err();
+    let err =
+        serve_sequential_host(&swap, &store, workload::gen_requests(&cfg), ApplyMode::Dense)
+            .unwrap_err();
     assert!(format!("{err:#}").contains("2-D"), "want a rank explanation, got: {err:#}");
     let _ = std::fs::remove_dir_all(&dir);
 }

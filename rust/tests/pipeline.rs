@@ -23,7 +23,7 @@ use fourier_peft::adapter::SharedAdapterStore;
 use fourier_peft::coordinator::pipeline::{
     self, Pipeline, PipelineCfg, PipelineReport, SyntheticJob,
 };
-use fourier_peft::coordinator::scheduler::{serve_scheduled_host, SchedCfg};
+use fourier_peft::coordinator::scheduler::{serve_scheduled_host, ApplyMode, SchedCfg};
 use fourier_peft::coordinator::serving::{Request, SwapCache};
 use fourier_peft::coordinator::trainer::Trainer;
 use fourier_peft::coordinator::workload::{self, WorkloadCfg};
@@ -88,8 +88,9 @@ fn pipeline_lifecycle_bitwise_vs_replay_across_workers() {
     assert_bitwise_equal(&r1.results, &r4.results, "1-worker vs 4-worker");
     assert_bitwise_equal(&r4.results, &r4b.results, "4-worker run vs re-run");
 
-    // Every response equals the sequential replay of its pinned version.
-    let replayed = p1.replay(&q1, &r1.pins).unwrap();
+    // Every response equals the sequential replay of its pinned version,
+    // under the same apply mode the pipeline served with (Auto).
+    let replayed = p1.replay(&q1, &r1.pins, ApplyMode::Auto).unwrap();
     assert_bitwise_equal(&r1.results, &replayed, "scheduler vs sequential replay");
 
     // Publishes really interleaved with traffic: some batch was pinned to
@@ -158,7 +159,13 @@ fn pipeline_lifecycle_rollback_restores_bitwise_prior_outputs() {
         batch: 2,
         ..WorkloadCfg::small()
     };
-    let sched = SchedCfg { workers: 2, max_batch: 4, max_wait_ticks: 8, queue_cap: 16 };
+    let sched = SchedCfg {
+        workers: 2,
+        max_batch: 4,
+        max_wait_ticks: 8,
+        queue_cap: 16,
+        apply: ApplyMode::Dense,
+    };
     let serve_pinned = |pipe: &Pipeline| {
         let mut q = workload::gen_requests(&wl);
         let pin = pipe.pin_map().unwrap();
@@ -225,14 +232,21 @@ fn pipeline_serves_every_builtin_method_versioned() {
         let mut q = workload::gen_requests(&wl);
         let pin = pipe.pin_map().unwrap();
         workload::pin_requests(&mut q, |n| pin.get(n).copied());
-        let sched = SchedCfg { workers: 2, max_batch: 4, max_wait_ticks: 8, queue_cap: 16 };
+        let sched = SchedCfg {
+            workers: 2,
+            max_batch: 4,
+            max_wait_ticks: 8,
+            queue_cap: 16,
+            apply: ApplyMode::Auto,
+        };
         let (out, _) =
             serve_scheduled_host(&pipe.swap, &pipe.store, q.clone(), &sched).unwrap();
         assert_eq!(out.len(), 16, "{method}: every request served");
         // pinned to version 2, and replayable from the pinned bytes
         assert!(q.iter().all(|r| split_versioned(&r.adapter).1 == Some(2)), "{method}");
         let pins: Vec<(u64, String)> = q.iter().map(|r| (r.id, r.adapter.clone())).collect();
-        let replayed = pipe.replay(&q, &pins).unwrap();
+        // replay under the same mode ⇒ same dispatch ⇒ bitwise equal
+        let replayed = pipe.replay(&q, &pins, ApplyMode::Auto).unwrap();
         assert_bitwise_equal(&out, &replayed, &format!("{method}: replay"));
     }
 }

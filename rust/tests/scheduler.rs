@@ -19,7 +19,8 @@
 use fourier_peft::adapter::format::AdapterFile;
 use fourier_peft::adapter::store::SharedAdapterStore;
 use fourier_peft::coordinator::scheduler::{
-    group_by_adapter, serve_scheduled_host, serve_sequential_host, DeltaRunner, SchedCfg,
+    group_by_adapter, serve_scheduled_host, serve_sequential_host, ApplyMode, DeltaRunner,
+    SchedCfg,
 };
 use fourier_peft::coordinator::serving::{Request, ServeStats, SharedSwap};
 use fourier_peft::coordinator::workload::{self, Arrival, WorkloadCfg};
@@ -95,9 +96,11 @@ fn sched_deterministic_across_runs_and_worker_counts() {
         max_batch: 8,
         max_wait_ticks: 32,
         queue_cap: 64,
+        apply: ApplyMode::Dense,
     };
     let (seq, seq_stats) =
-        serve_sequential_host(&swap, &store, workload::gen_requests(&cfg)).unwrap();
+        serve_sequential_host(&swap, &store, workload::gen_requests(&cfg), ApplyMode::Dense)
+            .unwrap();
     let (r1, s1) =
         serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sched(1)).unwrap();
     let (r4, s4) =
@@ -138,8 +141,16 @@ fn sched_deterministic_under_adversarial_arrival() {
     workload::populate_store(&store, &cfg).unwrap();
     let swap = SharedSwap::with_shards(workload::site_dims(&cfg), 4, 32);
 
-    let sc = SchedCfg { workers: 4, max_batch: 4, max_wait_ticks: 8, queue_cap: 16 };
-    let (seq, _) = serve_sequential_host(&swap, &store, workload::gen_requests(&cfg)).unwrap();
+    let sc = SchedCfg {
+        workers: 4,
+        max_batch: 4,
+        max_wait_ticks: 8,
+        queue_cap: 16,
+        apply: ApplyMode::Dense,
+    };
+    let (seq, _) =
+        serve_sequential_host(&swap, &store, workload::gen_requests(&cfg), ApplyMode::Dense)
+            .unwrap();
     let (par, stats) =
         serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sc).unwrap();
     assert_bitwise_equal(&seq, &par, "round-robin arrival");
@@ -165,7 +176,13 @@ fn sched_publish_invalidation_rebuilds_from_new_bytes() {
     let swap = SharedSwap::with_shards(workload::site_dims(&cfg), 4, 32);
     let hot = names[0].clone();
 
-    let sc = SchedCfg { workers: 1, max_batch: 8, max_wait_ticks: 16, queue_cap: 32 };
+    let sc = SchedCfg {
+        workers: 1,
+        max_batch: 8,
+        max_wait_ticks: 16,
+        queue_cap: 32,
+        apply: ApplyMode::Dense,
+    };
 
     // Phase 1: serve; `hot` becomes the worker's active adapter.
     let queue1 = workload::gen_requests(&cfg);
@@ -285,9 +302,11 @@ fn sched_deterministic_for_every_registered_method() {
             max_batch: 4,
             max_wait_ticks: 8,
             queue_cap: 16,
+            apply: ApplyMode::Dense,
         };
         let (seq, _) =
-            serve_sequential_host(&swap, &store, workload::gen_requests(&cfg)).unwrap();
+            serve_sequential_host(&swap, &store, workload::gen_requests(&cfg), ApplyMode::Dense)
+                .unwrap();
         let (r1, _) =
             serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sched(1))
                 .unwrap();
@@ -328,7 +347,13 @@ fn sched_stress_zipf500_warm_cache_and_bitwise_parity() {
     let queue = workload::gen_requests(&cfg);
     let distinct: std::collections::HashSet<&String> =
         queue.iter().map(|r| &r.adapter).collect();
-    let sc = SchedCfg { workers: 4, max_batch: 32, max_wait_ticks: 256, queue_cap: 1024 };
+    let sc = SchedCfg {
+        workers: 4,
+        max_batch: 32,
+        max_wait_ticks: 256,
+        queue_cap: 1024,
+        apply: ApplyMode::Dense,
+    };
 
     // Cold pass: every distinct adapter costs exactly one disk read.
     let (cold_res, cold_stats) =
@@ -348,7 +373,8 @@ fn sched_stress_zipf500_warm_cache_and_bitwise_parity() {
 
     // Parity: scheduled (4 workers) ≡ sequential, bitwise, on the warm
     // stack; and the determinism acceptance re-asserted at scale.
-    let (seq_res, _) = serve_sequential_host(&swap, &store, queue.clone()).unwrap();
+    let (seq_res, _) =
+        serve_sequential_host(&swap, &store, queue.clone(), ApplyMode::Dense).unwrap();
     assert_bitwise_equal(&cold_res, &warm_res, "cold vs warm");
     assert_bitwise_equal(&warm_res, &seq_res, "4-worker vs sequential");
 

@@ -166,6 +166,56 @@ fn cap_evicts_coldest_adapter_and_rebuilds_on_return() {
     assert_eq!(swap.stats.delta_builds, 4);
 }
 
+/// Eviction tie-break regression: of the two coldest resident names the
+/// byte-larger one goes first, so a big dense ΔW does not outlive a tiny
+/// one merely because the tiny one is marginally colder; equal sizes
+/// fall back to pure coldness.
+#[test]
+fn eviction_tie_break_prefers_byte_larger() {
+    let adapter = |rng: &mut Rng, site: &str| {
+        AdapterFile::from_named(
+            "fourierft",
+            2024,
+            16.0,
+            vec![("n".into(), "4".to_string())],
+            vec![(format!("spec.{site}.c"), Tensor::f32(&[4], rng.normal_vec(4, 1.0)))],
+            |_| None,
+        )
+        .unwrap()
+    };
+    // one 8×8 site (256B ΔW) vs one 32×32 site (4096B ΔW)
+    let dims: BTreeMap<String, (usize, usize)> =
+        [("s.w".to_string(), (8usize, 8usize)), ("b.w".to_string(), (32, 32))]
+            .into_iter()
+            .collect();
+    let mut rng = Rng::new(0x7E);
+    let mut store = AdapterStore::open(&tmpdir("tiebreak")).unwrap();
+    store.save("small", &adapter(&mut rng, "s.w")).unwrap();
+    store.save("small2", &adapter(&mut rng, "s.w")).unwrap();
+    store.save("big", &adapter(&mut rng, "b.w")).unwrap();
+    store.save("third", &adapter(&mut rng, "s.w")).unwrap();
+
+    // coldest = small, second-coldest = big: the byte-larger `big` is
+    // evicted even though `small` is colder
+    let mut swap = SwapCache::with_cap(dims.clone(), 2);
+    swap.deltas(&mut store, "small").unwrap();
+    swap.deltas(&mut store, "big").unwrap();
+    swap.deltas(&mut store, "third").unwrap();
+    assert!(swap.contains("small"), "colder-but-smaller entry must survive");
+    assert!(!swap.contains("big"), "byte-larger of the two coldest goes first");
+    assert_eq!(swap.resident(), vec!["small".to_string(), "third".into()]);
+    assert!(swap.check_consistent());
+
+    // equal sizes: pure coldness decides (the old LRU behavior)
+    let mut swap = SwapCache::with_cap(dims, 2);
+    swap.deltas(&mut store, "small").unwrap();
+    swap.deltas(&mut store, "small2").unwrap();
+    swap.deltas(&mut store, "third").unwrap();
+    assert!(!swap.contains("small"), "equal bytes fall back to coldness");
+    assert_eq!(swap.resident(), vec!["small2".to_string(), "third".into()]);
+    assert!(swap.check_consistent());
+}
+
 /// Property test: under arbitrary interleavings of layer accesses,
 /// invalidations, and clears, the cache's LRU order matches a trivial
 /// reference model (MRU-last vector with front eviction), its internal
@@ -195,13 +245,14 @@ fn lru_property_eviction_matches_reference_model() {
                     swap.clear();
                     model.clear();
                 }
-                k => {
-                    // exercise both cache layers; either one touches LRU
-                    if k % 2 == 0 {
-                        swap.deltas(&mut store, &name).unwrap();
-                    } else {
-                        swap.adapt_tensors(&mut store, &name).unwrap();
-                    }
+                _ => {
+                    // touch BOTH cache layers so every resident name has
+                    // identical entry bytes: eviction's byte tie-break
+                    // then degrades to pure coldness, which is what the
+                    // reference model tracks (the tie-break itself is
+                    // pinned in `eviction_tie_break_prefers_byte_larger`)
+                    swap.deltas(&mut store, &name).unwrap();
+                    swap.adapt_tensors(&mut store, &name).unwrap();
                     if let Some(pos) = model.iter().position(|m| m == &name) {
                         let x = model.remove(pos);
                         model.push(x);
