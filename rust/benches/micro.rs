@@ -163,9 +163,11 @@ fn main() -> anyhow::Result<()> {
     // --- micro-batching scheduler vs sequential serve (500-adapter Zipf) --
     {
         use fourier_peft::adapter::store::SharedAdapterStore;
-        use fourier_peft::coordinator::scheduler::{self, ApplyMode, SchedCfg};
+        use fourier_peft::coordinator::scheduler::{
+            self, serve_open_loop_host, AdmissionCfg, ApplyMode, SchedCfg,
+        };
         use fourier_peft::coordinator::serving::SharedSwap;
-        use fourier_peft::coordinator::workload::{self, WorkloadCfg};
+        use fourier_peft::coordinator::workload::{self, ArrivalKind, OpenLoopCfg, WorkloadCfg};
 
         let dir = std::env::temp_dir().join(format!("fp_bench_sched_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
@@ -173,7 +175,7 @@ fn main() -> anyhow::Result<()> {
         let store = SharedAdapterStore::with_shards(&dir, 8, 128)?;
         workload::populate_store(&store, &wl)?;
         let swap = SharedSwap::with_shards(workload::site_dims(&wl), 8, 128);
-        let queue = workload::gen_requests(&wl);
+        let queue = workload::gen_requests(&wl).unwrap();
         let sched = |workers: usize, apply: ApplyMode| SchedCfg {
             workers,
             max_batch: 32,
@@ -249,6 +251,41 @@ fn main() -> anyhow::Result<()> {
             sw.delta_hits,
             sw.delta_builds,
         );
+
+        // Open-loop rows over the same warmed Zipf stack. `poisson_w4`
+        // offers a sustainable load (no shedding — the row prices the
+        // virtual-clock router, SLO bookkeeping, and admission pass);
+        // `burst_overload_w4` slams a 16x burst into a shallow queue so
+        // the shed path itself is on the measured path.
+        let adm_ok =
+            AdmissionCfg { service_ticks: 16, queue_depth: 4096, ..AdmissionCfg::default() };
+        let poisson = workload::gen_arrivals(&OpenLoopCfg::poisson(40.0, 4096), queue.clone())?;
+        qb.run("serving/open_loop/poisson_w4", || {
+            serve_open_loop_host(&swap, &store, poisson.clone(), &cfg4, &adm_ok).unwrap()
+        });
+        let adm_tight =
+            AdmissionCfg { service_ticks: 16, queue_depth: 32, ..AdmissionCfg::default() };
+        let burst = workload::gen_arrivals(
+            &OpenLoopCfg {
+                kind: ArrivalKind::Burst,
+                burst_factor: 16.0,
+                ..OpenLoopCfg::poisson(200.0, 256)
+            },
+            queue.clone(),
+        )?;
+        qb.run("serving/open_loop/burst_overload_w4", || {
+            serve_open_loop_host(&swap, &store, burst.clone(), &cfg4, &adm_tight).unwrap()
+        });
+        let (_, ol) = serve_open_loop_host(&swap, &store, burst.clone(), &cfg4, &adm_tight)?;
+        println!(
+            "{:<44} offered {} shed {} ({:.1}%) goodput {} ({:.0} req/s)",
+            "serving/open_loop/burst_overload_counters",
+            ol.offered,
+            ol.shed,
+            100.0 * ol.shed_rate(),
+            ol.goodput,
+            ol.goodput_rps(),
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -279,7 +316,7 @@ fn main() -> anyhow::Result<()> {
         };
         let store = SharedAdapterStore::with_shards(&dir, 8, 64)?;
         workload::populate_store(&store, &wl)?;
-        let queue = workload::gen_requests(&wl);
+        let queue = workload::gen_requests(&wl).unwrap();
         let qb = Bench::quick();
         let sched = |apply: ApplyMode| SchedCfg {
             workers: 4,

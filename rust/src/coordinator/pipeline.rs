@@ -41,8 +41,10 @@
 //! (per-publish latency rows land in `BENCH_*.json`) and by the
 //! `pipeline-smoke` CI job.
 
-use super::scheduler::{eval_ref, serve_scheduled_host, ApplyMode, SchedCfg};
-use super::serving::{Request, ServeStats, SharedSwap};
+use super::scheduler::{
+    eval_ref, serve_open_loop_host, serve_scheduled_host, AdmissionCfg, ApplyMode, SchedCfg,
+};
+use super::serving::{Request, ServeStats, SharedSwap, TimedRequest};
 #[cfg(not(feature = "xla-runtime"))]
 use super::trainer::Trainer;
 use super::workload;
@@ -94,6 +96,12 @@ pub struct PipelineCfg {
     /// Dense vs factored ΔW application on the serving path (the replay
     /// oracle follows the same mode, so replays stay bitwise-comparable).
     pub serve_apply: ApplyMode,
+    /// Open-loop arrival process. `None` keeps the original closed-loop
+    /// behavior bitwise (positional ticks, no deadlines, no shedding).
+    pub arrival: Option<workload::OpenLoopCfg>,
+    /// Admission policy for the open-loop path (ignored when `arrival`
+    /// is `None`).
+    pub admission: AdmissionCfg,
 }
 
 impl PipelineCfg {
@@ -113,6 +121,8 @@ impl PipelineCfg {
             zipf_s: 1.1,
             seed: 2024,
             serve_apply: ApplyMode::Auto,
+            arrival: None,
+            admission: AdmissionCfg::default(),
         }
     }
 }
@@ -492,6 +502,15 @@ impl Pipeline {
     /// the next generation trains on the background pool; publishes land
     /// at the wave edge (training overlaps serving, publishing does not
     /// overlap pinning, so pins are reproducible run-to-run).
+    ///
+    /// With `cfg.arrival` set, each wave instead runs open-loop: requests
+    /// carry virtual arrival/deadline ticks ([`workload::gen_arrivals`]),
+    /// admission may shed under `cfg.admission`, and batches also flush
+    /// on deadline pressure. Pinning happens **before** admission, so the
+    /// shed set and every pin are pure functions of the arrival sequence
+    /// and publish schedule — reproducible across worker counts and
+    /// re-runs. Shed requests still appear in `pins` (they were pinned at
+    /// admission); replay callers skip ids listed in `stats.shed_ids`.
     pub fn run(
         &self,
         cfg: &PipelineCfg,
@@ -502,9 +521,17 @@ impl Pipeline {
         let mut publishes =
             self.publish_generation(&self.names, 1, runner, cfg.train_workers)?;
 
-        let mut waves_q: Vec<Vec<Request>> = Vec::new();
-        let mut cur: Vec<Request> = Vec::new();
-        for r in queue {
+        let timed: Vec<TimedRequest> = match &cfg.arrival {
+            Some(ol) => workload::gen_arrivals(ol, queue)?,
+            None => queue
+                .into_iter()
+                .enumerate()
+                .map(|(i, req)| TimedRequest::closed(i as u64, req))
+                .collect(),
+        };
+        let mut waves_q: Vec<Vec<TimedRequest>> = Vec::new();
+        let mut cur: Vec<TimedRequest> = Vec::new();
+        for r in timed {
             cur.push(r);
             if cur.len() == cfg.publish_every {
                 waves_q.push(std::mem::take(&mut cur));
@@ -524,11 +551,13 @@ impl Pipeline {
         let mut pins: Vec<(u64, String)> = Vec::new();
         let mut stats = ServeStats::default();
         for (w, mut wave) in waves_q.into_iter().enumerate() {
-            // Pin every admitted request to its adapter's current version.
+            // Pin every request to its adapter's current version — shed
+            // requests included, so shedding acts on pinned refs and the
+            // pins list itself is arrival-order deterministic.
             let pin = self.pin_map()?;
-            workload::pin_requests(&mut wave, |name| pin.get(name).copied());
-            for r in &wave {
-                pins.push((r.id, r.adapter.clone()));
+            workload::pin_timed_requests(&mut wave, |name| pin.get(name).copied());
+            for t in &wave {
+                pins.push((t.req.id, t.req.adapter.clone()));
             }
 
             // Round-robin slice of adapters to retrain while serving.
@@ -550,7 +579,21 @@ impl Pipeline {
                         self.publish_generation(retrain, generation, runner, cfg.train_workers)
                     })
                 });
-                let serve_out = serve_scheduled_host(&self.swap, &self.store, wave, &sched);
+                let serve_out = match &cfg.arrival {
+                    Some(_) => serve_open_loop_host(
+                        &self.swap,
+                        &self.store,
+                        wave,
+                        &sched,
+                        &cfg.admission,
+                    ),
+                    None => serve_scheduled_host(
+                        &self.swap,
+                        &self.store,
+                        wave.into_iter().map(|t| t.req).collect(),
+                        &sched,
+                    ),
+                };
                 let pubs =
                     trainer.map(|h| h.join().expect("pipeline trainer thread panicked"));
                 (serve_out, pubs)
@@ -615,12 +658,32 @@ fn merge_stats(into: &mut ServeStats, s: ServeStats) {
     into.full_flushes += s.full_flushes;
     into.wait_flushes += s.wait_flushes;
     into.final_flushes += s.final_flushes;
+    into.deadline_flushes += s.deadline_flushes;
     into.max_micro_batch = into.max_micro_batch.max(s.max_micro_batch);
     into.latencies.extend(s.latencies);
     for (name, c) in s.per_adapter {
         match into.per_adapter.iter_mut().find(|(n, _)| *n == name) {
             Some((_, tot)) => *tot += c,
             None => into.per_adapter.push((name, c)),
+        }
+    }
+    // Open-loop accounting: counters sum, shed ids stay one sorted set,
+    // virtual latencies concatenate (per-tenant percentiles are computed
+    // over the merged vector at report time).
+    into.offered += s.offered;
+    into.shed += s.shed;
+    into.shed_queue_full += s.shed_queue_full;
+    into.shed_rate_limited += s.shed_rate_limited;
+    into.goodput += s.goodput;
+    into.deadline_misses += s.deadline_misses;
+    into.chan_drops += s.chan_drops;
+    into.shed_ids.extend(s.shed_ids);
+    into.shed_ids.sort_unstable();
+    into.vlat_ticks.extend(s.vlat_ticks);
+    for (name, c) in s.per_tenant_shed {
+        match into.per_tenant_shed.iter_mut().find(|(n, _)| *n == name) {
+            Some((_, tot)) => *tot += c,
+            None => into.per_tenant_shed.push((name, c)),
         }
     }
 }
@@ -715,6 +778,13 @@ mod tests {
             delta_bytes: 100,
             factor_bytes: 10,
             peak_bytes: 150,
+            offered: 5,
+            shed: 2,
+            shed_queue_full: 2,
+            shed_ids: vec![1, 9],
+            per_tenant_shed: vec![("x".into(), 2)],
+            goodput: 3,
+            vlat_ticks: vec![("x".into(), 4)],
             ..Default::default()
         };
         let b = ServeStats {
@@ -726,6 +796,14 @@ mod tests {
             delta_bytes: 80,
             factor_bytes: 40,
             peak_bytes: 120,
+            offered: 5,
+            shed: 1,
+            shed_rate_limited: 1,
+            shed_ids: vec![4],
+            per_tenant_shed: vec![("x".into(), 1)],
+            goodput: 3,
+            deadline_misses: 1,
+            vlat_ticks: vec![("y".into(), 7)],
             ..Default::default()
         };
         merge_stats(&mut total, a);
@@ -739,5 +817,15 @@ mod tests {
         assert_eq!(total.delta_bytes, 100);
         assert_eq!(total.factor_bytes, 40);
         assert_eq!(total.peak_bytes, 150);
+        // Open-loop accounting: sums, one sorted shed set, merged tenants.
+        assert_eq!(total.offered, 10);
+        assert_eq!(total.shed, 3);
+        assert_eq!(total.shed_queue_full, 2);
+        assert_eq!(total.shed_rate_limited, 1);
+        assert_eq!(total.shed_ids, vec![1, 4, 9]);
+        assert_eq!(total.per_tenant_shed, vec![("x".to_string(), 3)]);
+        assert_eq!(total.goodput, 6);
+        assert_eq!(total.deadline_misses, 1);
+        assert_eq!(total.vlat_ticks.len(), 2);
     }
 }

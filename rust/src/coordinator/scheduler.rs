@@ -20,6 +20,22 @@
 //! (adapter bytes, request batch), so the merged, id-sorted output is
 //! bit-identical for 1 or N workers (asserted in `tests/scheduler.rs`).
 //!
+//! **Open loop.** [`run`] serves a closed-loop queue (every request
+//! present up front, no deadlines). [`run_timed`] serves
+//! [`TimedRequest`]s from an open-loop arrival process
+//! (`coordinator::workload::gen_arrivals`): the router tracks *virtual
+//! time* (the newest arrival tick seen) and additionally flushes a group
+//! when its oldest member's deadline comes within the configured slack —
+//! so a tail tenant's half-full batch is not held hostage to the tick
+//! count while a Zipf-hot tenant fills batch after batch. Flushed batches
+//! enter the work queue ordered by oldest arrival, so stragglers also
+//! *execute* ahead of younger hot-tenant batches. Overload is handled
+//! before the router by [`admit`]: a virtual-time single-server queue
+//! bound plus per-tenant token buckets shed excess load explicitly
+//! ([`ShedReason`]), and because both are pure functions of the arrival
+//! sequence, the shed id set is bitwise identical across {sequential,
+//! 1-worker, N-worker, re-run} (asserted in `tests/open_loop.rs`).
+//!
 //! **Thread budget.** [`run`] reserves its worker count from the matmul
 //! thread budget ([`crate::tensor::par::reserve_threads`]) so GEMMs nested
 //! under serve workers (ΔW rebuilds, fused micro-batch products) don't
@@ -38,7 +54,9 @@
 //! [`ParamSet`]: crate::runtime::ParamSet
 //! [`StepEngine`]: crate::runtime::StepEngine
 
-use super::serving::{DeltaSet, FactorSet, Request, ServeStats, SharedSwap, SwapTrace};
+use super::serving::{
+    DeltaSet, FactorSet, Request, ServeStats, SharedSwap, SwapTrace, TimedRequest,
+};
 use crate::adapter::method::SiteFactors;
 use crate::adapter::store::SharedAdapterStore;
 use crate::tensor::{par, Tensor};
@@ -173,9 +191,16 @@ pub fn group_by_adapter(queue: Vec<Request>) -> Vec<(String, Vec<Request>)> {
 // ---------------------------------------------------------------------------
 // Bounded MPMC channel (Mutex + Condvar; the offline vendor set has no
 // crossbeam). Close-able; `pop` drains remaining items after close.
+// Entries carry an ordering key: FIFO pushes use key 0 and rely on the
+// monotone insert sequence; the router pushes micro-batches keyed by their
+// oldest virtual arrival so tail-tenant stragglers execute before younger
+// hot-tenant batches (fairness — affects execution order and latency only,
+// never results).
 
 struct ChanState<T> {
-    q: VecDeque<T>,
+    /// (ordering key, insert seq, item), kept sorted by (key, seq).
+    q: VecDeque<(u64, u64, T)>,
+    seq: u64,
     closed: bool,
     peak: usize,
 }
@@ -190,36 +215,53 @@ struct Chan<T> {
 impl<T> Chan<T> {
     fn new(cap: usize) -> Chan<T> {
         Chan {
-            state: Mutex::new(ChanState { q: VecDeque::new(), closed: false, peak: 0 }),
+            state: Mutex::new(ChanState { q: VecDeque::new(), seq: 0, closed: false, peak: 0 }),
             cap: cap.max(1),
             added: Condvar::new(),
             removed: Condvar::new(),
         }
     }
 
-    /// Blocking push; drops the item if the channel is already closed
-    /// (only the producer closes, so this is unreachable in practice).
-    fn push(&self, item: T) {
+    /// Blocking FIFO push. Returns `false` if the channel was already
+    /// closed and the item was dropped — callers must observe this (the
+    /// scheduler counts it in `ServeStats::chan_drops`) so requests can
+    /// never vanish silently.
+    #[must_use]
+    fn push(&self, item: T) -> bool {
+        self.push_keyed(0, item)
+    }
+
+    /// Blocking push ordered by `key` (stable within equal keys). Returns
+    /// `false` if the channel was already closed and the item was dropped.
+    #[must_use]
+    fn push_keyed(&self, key: u64, item: T) -> bool {
         let mut st = self.state.lock().unwrap();
         while st.q.len() >= self.cap && !st.closed {
             st = self.removed.wait(st).unwrap();
         }
         if st.closed {
-            return;
+            return false;
         }
-        st.q.push_back(item);
+        let seq = st.seq;
+        st.seq += 1;
+        // Insert before the first strictly larger key: the queue stays
+        // sorted by (key, seq) because earlier equal-key entries keep
+        // their smaller seq.
+        let pos = st.q.iter().position(|(k, _, _)| *k > key).unwrap_or(st.q.len());
+        st.q.insert(pos, (key, seq, item));
         if st.q.len() > st.peak {
             st.peak = st.q.len();
         }
         drop(st);
         self.added.notify_one();
+        true
     }
 
     /// Blocking pop; `None` once the channel is closed *and* drained.
     fn pop(&self) -> Option<T> {
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(item) = st.q.pop_front() {
+            if let Some((_, _, item)) = st.q.pop_front() {
                 drop(st);
                 self.removed.notify_one();
                 return Some(item);
@@ -255,6 +297,145 @@ impl<T> Drop for CloseOnDrop<'_, T> {
 }
 
 // ---------------------------------------------------------------------------
+// Admission control: virtual-time queue bound + per-tenant token buckets.
+
+/// Why admission shed a request (see [`admit`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The virtual single-server queue was at its depth bound — overload.
+    QueueFull,
+    /// The tenant's token bucket was empty — per-tenant rate limit.
+    RateLimited,
+}
+
+impl std::fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::RateLimited => "rate_limited",
+        })
+    }
+}
+
+/// Admission / SLO knobs for open-loop serving. Everything is in virtual
+/// ticks, so admission decisions are a pure function of the arrival
+/// sequence — never of wall clock, worker count, or machine speed.
+#[derive(Debug, Clone)]
+pub struct AdmissionCfg {
+    /// Modeled service cost of one request in virtual ticks (the virtual
+    /// single-server queue drains one request per `service_ticks`).
+    pub service_ticks: u64,
+    /// Depth bound on the virtual queue, in requests: an arrival that
+    /// would find this many requests still owed is shed
+    /// ([`ShedReason::QueueFull`]) instead of queued unboundedly.
+    pub queue_depth: usize,
+    /// Per-tenant token refill per 1000 virtual ticks; `0.0` disables the
+    /// rate limit.
+    pub tenant_rate_per_ktick: f64,
+    /// Token-bucket capacity (burst allowance) per tenant.
+    pub tenant_burst: f64,
+    /// SLO slack for the router's deadline flush: a group flushes once
+    /// its oldest member's deadline is within this many virtual ticks of
+    /// the current virtual time.
+    pub flush_slack_ticks: u64,
+}
+
+impl Default for AdmissionCfg {
+    fn default() -> AdmissionCfg {
+        AdmissionCfg {
+            service_ticks: 8,
+            queue_depth: 64,
+            tenant_rate_per_ktick: 0.0,
+            tenant_burst: 16.0,
+            flush_slack_ticks: 8,
+        }
+    }
+}
+
+/// The outcome of running a timed queue through [`admit`].
+pub struct Admission {
+    /// Requests that passed admission, in arrival order.
+    pub admitted: Vec<TimedRequest>,
+    /// `(request id, tenant, reason)` per shed request, in arrival order.
+    pub shed: Vec<(u64, String, ShedReason)>,
+}
+
+/// Admission control over a virtual-time arrival sequence: shed rather
+/// than queue unboundedly. Two pure, single-threaded mechanisms:
+///
+/// 1. **Bounded virtual queue** — a single-server queue model that owes
+///    `service_ticks` of virtual work per admitted request. An arrival at
+///    tick `t` finds `ceil((work_finish − t) / service_ticks)` requests
+///    still owed; at `queue_depth` the arrival is shed
+///    ([`ShedReason::QueueFull`]). Under overload (arrival rate above
+///    `1/service_ticks`) the backlog saturates at the bound and the
+///    excess is shed instead of blocking the producer.
+/// 2. **Per-tenant token buckets** — refilled in virtual time at
+///    `tenant_rate_per_ktick`, capped at `tenant_burst`; an empty bucket
+///    sheds ([`ShedReason::RateLimited`]) before the request can occupy
+///    queue space, so one hot tenant cannot crowd out the tail.
+///
+/// Both depend only on `(arrive_tick, tenant)` of the sequence, so the
+/// admitted and shed sets are bitwise identical across reruns and worker
+/// counts — shedding joins the determinism contract rather than breaking
+/// it.
+pub fn admit(queue: Vec<TimedRequest>, cfg: &AdmissionCfg) -> Admission {
+    let service = cfg.service_ticks.max(1);
+    let depth_bound = cfg.queue_depth.max(1) as u64;
+    let mut admitted = Vec::with_capacity(queue.len());
+    let mut shed: Vec<(u64, String, ShedReason)> = Vec::new();
+    // Virtual tick at which the modeled server finishes all admitted work.
+    let mut work_finish: u64 = 0;
+    // tenant -> (tokens, last refill tick).
+    let mut buckets: HashMap<String, (f64, u64)> = HashMap::new();
+    for tr in queue {
+        let t = tr.arrive_tick;
+        if cfg.tenant_rate_per_ktick > 0.0 {
+            let b = buckets
+                .entry(tr.req.adapter.clone())
+                .or_insert((cfg.tenant_burst, t));
+            let dt = t.saturating_sub(b.1) as f64;
+            b.0 = (b.0 + dt * cfg.tenant_rate_per_ktick / 1000.0).min(cfg.tenant_burst);
+            b.1 = t;
+            if b.0 < 1.0 {
+                shed.push((tr.req.id, tr.req.adapter.clone(), ShedReason::RateLimited));
+                continue;
+            }
+            b.0 -= 1.0;
+        }
+        let backlog = work_finish.saturating_sub(t);
+        let queued = backlog.div_ceil(service);
+        if queued >= depth_bound {
+            shed.push((tr.req.id, tr.req.adapter.clone(), ShedReason::QueueFull));
+            continue;
+        }
+        work_finish = work_finish.max(t) + service;
+        admitted.push(tr);
+    }
+    Admission { admitted, shed }
+}
+
+/// Fold an [`Admission`]'s shed accounting into serve stats (shared by
+/// the scheduled and sequential open-loop paths so their shed reporting
+/// is identical by construction).
+fn fold_admission(stats: &mut ServeStats, offered: usize, shed: Vec<(u64, String, ShedReason)>) {
+    stats.offered = offered;
+    stats.shed = shed.len();
+    for (id, tenant, reason) in shed {
+        match reason {
+            ShedReason::QueueFull => stats.shed_queue_full += 1,
+            ShedReason::RateLimited => stats.shed_rate_limited += 1,
+        }
+        match stats.per_tenant_shed.iter_mut().find(|(t, _)| *t == tenant) {
+            Some((_, c)) => *c += 1,
+            None => stats.per_tenant_shed.push((tenant, 1)),
+        }
+        stats.shed_ids.push(id);
+    }
+    stats.shed_ids.sort_unstable();
+}
+
+// ---------------------------------------------------------------------------
 // Router: adapter-affinity batcher.
 
 struct MicroBatch {
@@ -266,7 +447,16 @@ struct MicroBatch {
 struct Group {
     reqs: Vec<Request>,
     admitted: Vec<Instant>,
+    /// Virtual arrival tick per request (parallel to `reqs`).
+    arrives: Vec<u64>,
+    /// Deadline tick per request (parallel to `reqs`; `u64::MAX` = none).
+    deadlines: Vec<u64>,
     first_tick: u64,
+    /// Earliest virtual arrival in the group — the work-queue priority
+    /// key, so old stragglers execute before younger hot-tenant batches.
+    oldest_arrive: u64,
+    /// Earliest deadline in the group — the SLO flush trigger.
+    deadline_min: u64,
 }
 
 #[derive(Default)]
@@ -275,20 +465,47 @@ struct RouterOut {
     full_flushes: usize,
     wait_flushes: usize,
     final_flushes: usize,
+    /// Groups flushed by the SLO rule (oldest deadline within slack).
+    deadline_flushes: usize,
     max_micro_batch: usize,
+    /// Requests whose group flushed at or before their deadline.
+    goodput: usize,
+    /// Requests whose group flushed after their deadline had passed.
+    deadline_misses: usize,
+    /// (tenant, flush vtick − arrive vtick) per request, in flush order.
+    vlats: Vec<(String, u64)>,
+    /// Micro-batch requests dropped on a closed work queue (0 in a
+    /// healthy run; workers outlive the router by construction).
+    chan_drops: usize,
 }
 
-fn flush(work: &Chan<MicroBatch>, out: &mut RouterOut, adapter: String, g: Group) {
+/// Flush one group at virtual time `vnow`: record per-request virtual
+/// queueing latency and deadline outcome, then enqueue the micro-batch
+/// keyed by its oldest arrival (execution-order fairness).
+fn flush(work: &Chan<MicroBatch>, out: &mut RouterOut, adapter: String, g: Group, vnow: u64) {
     if g.reqs.len() > out.max_micro_batch {
         out.max_micro_batch = g.reqs.len();
     }
-    work.push(MicroBatch { adapter, reqs: g.reqs, admitted: g.admitted });
+    for (arrive, deadline) in g.arrives.iter().zip(g.deadlines.iter()) {
+        out.vlats.push((adapter.clone(), vnow.saturating_sub(*arrive)));
+        if vnow <= *deadline {
+            out.goodput += 1;
+        } else {
+            out.deadline_misses += 1;
+        }
+    }
+    let n = g.reqs.len();
+    let mb = MicroBatch { adapter, reqs: g.reqs, admitted: g.admitted };
+    if !work.push_keyed(g.oldest_arrive, mb) {
+        out.chan_drops += n;
+    }
 }
 
 fn route(
-    admission: &Chan<(Request, Instant)>,
+    admission: &Chan<(TimedRequest, Instant)>,
     work: &Chan<MicroBatch>,
     cfg: &SchedCfg,
+    slack: u64,
 ) -> RouterOut {
     let mut out = RouterOut::default();
     // Open (not yet flushed) groups by adapter, plus their creation order
@@ -300,9 +517,17 @@ fn route(
     let mut counts_idx: HashMap<String, usize> = HashMap::new();
     let max_batch = cfg.max_batch.max(1);
     let mut tick: u64 = 0;
+    // Current virtual time: the newest arrival tick seen (arrivals are
+    // generated in nondecreasing tick order, so this is monotone).
+    let mut vnow: u64 = 0;
+    // Open groups holding at least one finite deadline — gates the SLO
+    // scan so the closed-loop path (all deadlines MAX) pays nothing.
+    let mut slo_groups: usize = 0;
 
-    while let Some((req, t)) = admission.pop() {
+    while let Some((tr, t)) = admission.pop() {
         tick += 1;
+        vnow = vnow.max(tr.arrive_tick);
+        let TimedRequest { arrive_tick, deadline_tick, req } = tr;
         // Per-adapter accounting, first-seen order (HashMap-indexed).
         let idx = match counts_idx.get(&req.adapter) {
             Some(&i) => i,
@@ -320,15 +545,32 @@ fn route(
             age.push_back((tick, adapter.clone()));
             open.insert(
                 adapter.clone(),
-                Group { reqs: Vec::new(), admitted: Vec::new(), first_tick: tick },
+                Group {
+                    reqs: Vec::new(),
+                    admitted: Vec::new(),
+                    arrives: Vec::new(),
+                    deadlines: Vec::new(),
+                    first_tick: tick,
+                    oldest_arrive: arrive_tick,
+                    deadline_min: u64::MAX,
+                },
             );
         }
         let g = open.get_mut(&adapter).unwrap();
         g.reqs.push(req);
         g.admitted.push(t);
+        g.arrives.push(arrive_tick);
+        g.deadlines.push(deadline_tick);
+        if deadline_tick != u64::MAX && g.deadline_min == u64::MAX {
+            slo_groups += 1;
+        }
+        g.deadline_min = g.deadline_min.min(deadline_tick);
         if g.reqs.len() >= max_batch {
             let g = open.remove(&adapter).unwrap();
-            flush(work, &mut out, adapter, g);
+            if g.deadline_min != u64::MAX {
+                slo_groups -= 1;
+            }
+            flush(work, &mut out, adapter, g, vnow);
             out.full_flushes += 1;
         }
 
@@ -349,10 +591,38 @@ fn route(
             if tick.saturating_sub(first_tick) >= cfg.max_wait_ticks as u64 {
                 age.pop_front();
                 let g = open.remove(&name).unwrap();
-                flush(work, &mut out, name, g);
+                if g.deadline_min != u64::MAX {
+                    slo_groups -= 1;
+                }
+                flush(work, &mut out, name, g, vnow);
                 out.wait_flushes += 1;
             } else {
                 break;
+            }
+        }
+
+        // SLO rule: flush any open group whose oldest deadline is within
+        // `slack` virtual ticks of now, in group-creation order (the
+        // `age` order, so the flush sequence is deterministic). Unlike
+        // the straggler scan this cannot early-break: deadlines are not
+        // ordered by group age.
+        if slo_groups > 0 {
+            let mut due: Vec<(u64, String)> = Vec::new();
+            for (ft, name) in age.iter() {
+                if let Some(g) = open.get(name) {
+                    if g.first_tick == *ft
+                        && g.deadline_min != u64::MAX
+                        && g.deadline_min <= vnow.saturating_add(slack)
+                    {
+                        due.push((*ft, name.clone()));
+                    }
+                }
+            }
+            for (_, name) in due {
+                let g = open.remove(&name).unwrap();
+                slo_groups -= 1;
+                flush(work, &mut out, name, g, vnow);
+                out.deadline_flushes += 1;
             }
         }
     }
@@ -364,7 +634,7 @@ fn route(
             continue;
         }
         let g = open.remove(&name).unwrap();
-        flush(work, &mut out, name, g);
+        flush(work, &mut out, name, g, vnow);
         out.final_flushes += 1;
     }
     out
@@ -408,15 +678,39 @@ fn worker_loop<R: BatchRunner>(
     Ok(out)
 }
 
-/// Run a request queue through the micro-batching pipeline: admit in
-/// order through the bounded queue, coalesce per adapter, execute on
-/// `cfg.workers` scoped threads via `runner`. Returns (id, logits) sorted
-/// by id plus full [`ServeStats`] (latency percentiles, queue depth,
-/// coalescing and swap accounting). `disk_reads` is left at 0 — callers
-/// owning a store record the delta (see `serve_scheduled_host`).
+/// Run a closed-loop request queue through the micro-batching pipeline:
+/// admit in order through the bounded queue, coalesce per adapter,
+/// execute on `cfg.workers` scoped threads via `runner`. Returns (id,
+/// logits) sorted by id plus full [`ServeStats`] (latency percentiles,
+/// queue depth, coalescing and swap accounting). `disk_reads` is left at
+/// 0 — callers owning a store record the delta (see
+/// `serve_scheduled_host`). Equivalent to [`run_timed`] over
+/// [`TimedRequest::closed`] wrappers: arrival tick = queue position, no
+/// deadlines, so the SLO rule never fires and batching is exactly the
+/// pre-open-loop behavior.
 pub fn run<R: BatchRunner>(
     cfg: &SchedCfg,
     queue: Vec<Request>,
+    runner: &R,
+) -> Result<(Vec<(u64, Tensor)>, ServeStats)> {
+    let timed = queue
+        .into_iter()
+        .enumerate()
+        .map(|(i, req)| TimedRequest::closed(i as u64, req))
+        .collect();
+    run_timed(cfg, 0, timed, runner)
+}
+
+/// [`run`] over an open-loop timed queue: identical pipeline, plus the
+/// router's virtual clock, the SLO flush rule (`flush_slack_ticks` of
+/// [`AdmissionCfg`]), deadline/goodput accounting, and
+/// oldest-arrival-first work-queue ordering. Callers shedding load run
+/// [`admit`] first and pass only the admitted requests (see
+/// [`serve_open_loop_host`]).
+pub fn run_timed<R: BatchRunner>(
+    cfg: &SchedCfg,
+    flush_slack_ticks: u64,
+    queue: Vec<TimedRequest>,
     runner: &R,
 ) -> Result<(Vec<(u64, Tensor)>, ServeStats)> {
     let t_start = Instant::now();
@@ -425,16 +719,16 @@ pub fn run<R: BatchRunner>(
     // Claim our threads from the matmul budget for the duration.
     let _reservation = par::reserve_threads(workers);
 
-    let admission: Chan<(Request, Instant)> = Chan::new(cfg.queue_cap);
+    let admission: Chan<(TimedRequest, Instant)> = Chan::new(cfg.queue_cap);
     let work: Chan<MicroBatch> = Chan::new(usize::MAX);
 
-    let (router_out, worker_outs) = std::thread::scope(|s| {
+    let (router_out, worker_outs, producer_drops) = std::thread::scope(|s| {
         let router = {
             let admission = &admission;
             let work = &work;
             s.spawn(move || {
                 let _close = CloseOnDrop(work);
-                route(admission, work, cfg)
+                route(admission, work, cfg, flush_slack_ticks)
             })
         };
         let mut handles = Vec::with_capacity(workers);
@@ -443,26 +737,37 @@ pub fn run<R: BatchRunner>(
             handles.push(s.spawn(move || worker_loop(w, work, runner)));
         }
         // Producer: this thread feeds the admission queue (blocking when
-        // it is full), stamping each request's admission time.
-        for req in queue {
-            admission.push((req, Instant::now()));
+        // it is full), stamping each request's admission time. The queue
+        // only closes after this loop, so a failed push (item dropped on
+        // a closed channel) is counted, never silent.
+        let mut producer_drops = 0usize;
+        for tr in queue {
+            if !admission.push((tr, Instant::now())) {
+                producer_drops += 1;
+            }
         }
         admission.close();
         let router_out = router.join().expect("scheduler router panicked");
         let worker_outs: Vec<Result<WorkerOut>> =
             handles.into_iter().map(|h| h.join().expect("scheduler worker panicked")).collect();
-        (router_out, worker_outs)
+        (router_out, worker_outs, producer_drops)
     });
 
     let mut results: Vec<(u64, Tensor)> = Vec::with_capacity(n_req);
     let mut stats = ServeStats {
         requests: n_req,
+        offered: n_req,
         per_adapter: router_out.per_adapter,
         full_flushes: router_out.full_flushes,
         wait_flushes: router_out.wait_flushes,
         final_flushes: router_out.final_flushes,
+        deadline_flushes: router_out.deadline_flushes,
         max_micro_batch: router_out.max_micro_batch,
         queue_depth_peak: admission.peak(),
+        goodput: router_out.goodput,
+        deadline_misses: router_out.deadline_misses,
+        vlat_ticks: router_out.vlats,
+        chan_drops: router_out.chan_drops + producer_drops,
         ..Default::default()
     };
     let mut first_err: Option<anyhow::Error> = None;
@@ -843,6 +1148,53 @@ pub fn serve_scheduled_host(
     Ok((results, stats))
 }
 
+/// Open-loop pure-host serve: [`admit`] sheds excess load, then the
+/// admitted requests run through [`run_timed`] with a [`DeltaRunner`].
+/// Under overload the call sheds and keeps going instead of queueing
+/// unboundedly; the returned stats carry goodput, shed accounting
+/// (including the tick-derived shed id set), and per-tenant virtual
+/// latencies alongside the usual serve counters.
+pub fn serve_open_loop_host(
+    swap: &SharedSwap,
+    store: &SharedAdapterStore,
+    queue: Vec<TimedRequest>,
+    cfg: &SchedCfg,
+    adm: &AdmissionCfg,
+) -> Result<(Vec<(u64, Tensor)>, ServeStats)> {
+    let offered = queue.len();
+    let admission = admit(queue, adm);
+    let disk0 = store.disk_reads();
+    let runner = DeltaRunner::new(swap, store, cfg.workers, cfg.apply);
+    let (results, mut stats) =
+        run_timed(cfg, adm.flush_slack_ticks, admission.admitted, &runner)?;
+    stats.disk_reads = store.disk_reads() - disk0;
+    stats.record_residency(&swap.stats());
+    fold_admission(&mut stats, offered, admission.shed);
+    Ok((results, stats))
+}
+
+/// Sequential oracle for the open-loop path: the *same* [`admit`] pass,
+/// then the admitted requests served one by one through
+/// [`serve_sequential_host`]. Because admission is a pure function of the
+/// timed queue, the answered set and the shed id set are bitwise
+/// comparable against [`serve_open_loop_host`] at any worker count —
+/// the open-loop arm of the determinism contract. (Goodput / virtual
+/// latency are batching concepts and stay zero here.)
+pub fn serve_open_loop_sequential_host(
+    swap: &SharedSwap,
+    store: &SharedAdapterStore,
+    queue: Vec<TimedRequest>,
+    apply: ApplyMode,
+    adm: &AdmissionCfg,
+) -> Result<(Vec<(u64, Tensor)>, ServeStats)> {
+    let offered = queue.len();
+    let admission = admit(queue, adm);
+    let reqs: Vec<Request> = admission.admitted.into_iter().map(|tr| tr.req).collect();
+    let (results, mut stats) = serve_sequential_host(swap, store, reqs, apply)?;
+    fold_admission(&mut stats, offered, admission.shed);
+    Ok((results, stats))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -884,13 +1236,39 @@ mod tests {
     #[test]
     fn chan_push_pop_close_drains() {
         let c: Chan<u32> = Chan::new(8);
-        c.push(1);
-        c.push(2);
+        assert!(c.push(1));
+        assert!(c.push(2));
         c.close();
         assert_eq!(c.pop(), Some(1));
         assert_eq!(c.pop(), Some(2));
         assert_eq!(c.pop(), None);
         assert_eq!(c.peak(), 2);
+    }
+
+    #[test]
+    fn chan_push_after_close_reports_the_drop() {
+        let c: Chan<u32> = Chan::new(8);
+        assert!(c.push(1));
+        c.close();
+        assert!(!c.push(2), "push on a closed channel must report the dropped item");
+        assert_eq!(c.pop(), Some(1), "pre-close items still drain");
+        assert_eq!(c.pop(), None, "the dropped item must not appear");
+    }
+
+    #[test]
+    fn chan_keyed_orders_by_key_then_fifo() {
+        let c: Chan<&'static str> = Chan::new(8);
+        assert!(c.push_keyed(5, "e1"));
+        assert!(c.push_keyed(2, "b1"));
+        assert!(c.push_keyed(5, "e2"));
+        assert!(c.push_keyed(0, "a"));
+        c.close();
+        // Smallest key first; equal keys keep insertion order.
+        assert_eq!(c.pop(), Some("a"));
+        assert_eq!(c.pop(), Some("b1"));
+        assert_eq!(c.pop(), Some("e1"));
+        assert_eq!(c.pop(), Some("e2"));
+        assert_eq!(c.pop(), None);
     }
 
     #[test]
@@ -900,7 +1278,7 @@ mod tests {
             let cr = &c;
             let producer = s.spawn(move || {
                 for i in 0..50u32 {
-                    cr.push(i);
+                    assert!(cr.push(i));
                 }
                 cr.close();
             });
@@ -948,7 +1326,9 @@ mod tests {
         // first-seen order: ad0, ad1, ...
         let names: Vec<&str> = stats.per_adapter.iter().map(|(n, _)| n.as_str()).collect();
         assert_eq!(names, vec!["ad0", "ad1", "ad2", "ad3", "ad4", "ad5", "ad6"]);
-        // flush accounting is complete and bounded
+        // flush accounting is complete and bounded (closed-loop: the SLO
+        // rule never fires, so deadline_flushes stays 0)
+        assert_eq!(stats.deadline_flushes, 0);
         assert_eq!(stats.batches, stats.full_flushes + stats.wait_flushes + stats.final_flushes);
         assert!(stats.max_micro_batch <= cfg.max_batch);
         assert!(stats.queue_depth_peak <= cfg.queue_cap);
@@ -1048,5 +1428,140 @@ mod tests {
         };
         let err = run(&cfg, queue, &FailRunner).unwrap_err();
         assert!(format!("{err:#}").contains("injected failure"));
+    }
+
+    fn treq(id: u64, adapter: &str, arrive: u64, deadline: u64) -> TimedRequest {
+        TimedRequest { arrive_tick: arrive, deadline_tick: deadline, req: req(id, adapter) }
+    }
+
+    #[test]
+    fn admit_sheds_under_overload_and_is_deterministic() {
+        // One arrival per tick against a 10-tick service cost: the
+        // virtual queue saturates at the depth bound and everything past
+        // it sheds as QueueFull.
+        let make = || (0..100).map(|i| treq(i, &format!("t{}", i % 4), i, i + 50)).collect();
+        let cfg = AdmissionCfg {
+            service_ticks: 10,
+            queue_depth: 4,
+            tenant_rate_per_ktick: 0.0,
+            ..AdmissionCfg::default()
+        };
+        let a = admit(make(), &cfg);
+        assert!(!a.shed.is_empty(), "overload must shed");
+        assert!(!a.admitted.is_empty(), "shedding must not starve everything");
+        assert_eq!(a.admitted.len() + a.shed.len(), 100);
+        assert!(a.shed.iter().all(|(_, _, r)| *r == ShedReason::QueueFull));
+        // Pure function of the arrival sequence: rerun is identical.
+        let b = admit(make(), &cfg);
+        let ids = |x: &Admission| {
+            (
+                x.admitted.iter().map(|t| t.req.id).collect::<Vec<_>>(),
+                x.shed.iter().map(|(id, _, _)| *id).collect::<Vec<_>>(),
+            )
+        };
+        assert_eq!(ids(&a), ids(&b));
+    }
+
+    #[test]
+    fn admit_rate_limit_sheds_hot_tenant_only() {
+        // A hot tenant fires every tick; the tail tenant every 100 ticks.
+        // With a burst of 2 and a slow refill, only the hot tenant sheds.
+        let mut queue = Vec::new();
+        for i in 0..200u64 {
+            queue.push(treq(i, "hot", i, i + 1000));
+        }
+        queue.push(treq(1000, "tail", 50, 1050));
+        queue.push(treq(1001, "tail", 150, 1150));
+        queue.sort_by_key(|t| t.arrive_tick);
+        let cfg = AdmissionCfg {
+            service_ticks: 1,
+            queue_depth: 1000,
+            tenant_rate_per_ktick: 10.0, // one token per 100 ticks
+            tenant_burst: 2.0,
+            ..AdmissionCfg::default()
+        };
+        let a = admit(queue, &cfg);
+        assert!(a.shed.iter().all(|(_, t, r)| t == "hot" && *r == ShedReason::RateLimited));
+        assert!(a.shed.len() > 150, "the hot tenant must be rate-limited hard");
+        let tail_served =
+            a.admitted.iter().filter(|t| t.req.adapter == "tail").count();
+        assert_eq!(tail_served, 2, "the tail tenant never sheds");
+    }
+
+    #[test]
+    fn slo_rule_flushes_before_wait_budget() {
+        // max_batch and max_wait_ticks too large to ever fire: only the
+        // SLO rule can flush before the final drain.
+        let queue: Vec<TimedRequest> =
+            (0..40).map(|i| treq(i, &format!("ad{}", i % 4), i, i + 6)).collect();
+        let cfg = SchedCfg {
+            workers: 2,
+            max_batch: 1000,
+            max_wait_ticks: 100_000,
+            queue_cap: 64,
+            apply: ApplyMode::Auto,
+        };
+        let (results, stats) = run_timed(&cfg, 2, queue, &EchoRunner).unwrap();
+        assert_eq!(results.len(), 40);
+        assert!(stats.deadline_flushes > 0, "deadlines must force flushes");
+        assert_eq!(stats.full_flushes, 0);
+        assert_eq!(stats.wait_flushes, 0);
+        assert_eq!(
+            stats.batches,
+            stats.deadline_flushes + stats.final_flushes,
+            "every flush is accounted to exactly one rule"
+        );
+        assert_eq!(stats.goodput + stats.deadline_misses, 40);
+        assert_eq!(stats.vlat_ticks.len(), 40);
+        // With a 6-tick deadline and 2 ticks of slack, no request waits
+        // longer than its deadline span in virtual time.
+        assert!(stats.vlat_ticks.iter().all(|(_, v)| *v <= 6));
+    }
+
+    /// Regression test for the router's lazy stale-age path: a group that
+    /// flushes full and then reopens for the same adapter leaves a stale
+    /// `(first_tick, name)` entry in the age deque. The stale entry must
+    /// neither double-flush the reopened group nor block the straggler
+    /// scan behind it.
+    #[test]
+    fn stale_age_entry_never_double_flushes_or_blocks_stragglers() {
+        // Queue (ticks 1..=6): h h | h a b c
+        //  - "h" flushes full at tick 2 (max_batch 2), leaving stale (1, "h").
+        //  - "h" reopens at tick 3 → fresh entry (3, "h").
+        //  - "a","b","c" open at ticks 4,5,6.
+        // With max_wait_ticks = 3, the straggler scan at tick 6 must pop
+        // the stale (1, "h") and flush the reopened group (6 - 3 >= 3);
+        // a stale-blocked scan would leave "h" waiting for the drain, a
+        // double flush would answer its requests twice.
+        let queue = vec![
+            req(0, "h"),
+            req(1, "h"),
+            req(2, "h"),
+            req(3, "a"),
+            req(4, "b"),
+            req(5, "c"),
+        ];
+        let cfg = SchedCfg {
+            workers: 2,
+            max_batch: 2,
+            max_wait_ticks: 3,
+            queue_cap: 16,
+            apply: ApplyMode::Auto,
+        };
+        let (results, stats) = run(&cfg, queue.clone(), &EchoRunner).unwrap();
+        let ids: Vec<u64> = results.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5], "every request answered exactly once");
+        assert_eq!(stats.full_flushes, 1, "the first 'h' pair flushes full");
+        assert_eq!(stats.wait_flushes, 1, "the reopened 'h' flushes via the straggler scan");
+        assert_eq!(stats.final_flushes, 3, "a, b, c drain at end of queue");
+        assert_eq!(stats.batches, 5);
+        // Deterministic across worker counts and reruns.
+        let cfg4 = SchedCfg { workers: 4, ..cfg.clone() };
+        let (r4, s4) = run(&cfg4, queue, &EchoRunner).unwrap();
+        assert_eq!(r4.iter().map(|(id, _)| *id).collect::<Vec<_>>(), ids);
+        assert_eq!(
+            (s4.full_flushes, s4.wait_flushes, s4.final_flushes),
+            (stats.full_flushes, stats.wait_flushes, stats.final_flushes)
+        );
     }
 }

@@ -76,6 +76,7 @@ use crate::runtime::{ParamSet, StepEngine};
 use crate::tensor::Tensor;
 use anyhow::Result;
 use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -85,6 +86,30 @@ pub struct Request {
     pub id: u64,
     pub adapter: String,
     pub batch: Batch,
+}
+
+/// A [`Request`] stamped with virtual-time arrival and SLO metadata by an
+/// open-loop arrival process (see `coordinator::workload::gen_arrivals`).
+/// Arrival and deadline are **virtual ticks**, not wall clock, so every
+/// admission, batching, and shedding decision derived from them is a pure
+/// function of the queue — bitwise reproducible across runs and worker
+/// counts (the contract `tests/open_loop.rs` pins).
+#[derive(Debug, Clone)]
+pub struct TimedRequest {
+    /// Virtual arrival tick (monotone non-decreasing within a queue).
+    pub arrive_tick: u64,
+    /// The request's SLO: it should be flushed into a micro-batch no
+    /// later than this virtual tick. `u64::MAX` means no deadline
+    /// (closed-loop requests).
+    pub deadline_tick: u64,
+    pub req: Request,
+}
+
+impl TimedRequest {
+    /// Closed-loop wrapper: arrival tick = queue position, no deadline.
+    pub fn closed(i: u64, req: Request) -> TimedRequest {
+        TimedRequest { arrive_tick: i, deadline_tick: u64::MAX, req }
+    }
 }
 
 /// Reconstructed per-site ΔW set for one adapter, shared across workers.
@@ -133,9 +158,43 @@ pub struct ServeStats {
     pub delta_bytes: u64,
     /// Factored adapter-state bytes resident when the call finished.
     pub factor_bytes: u64,
-    /// Peak resident bytes (deltas + factors) over the cache lifetime,
-    /// summed across shards — an upper bound on the true global peak.
+    /// Peak resident bytes (deltas + factors) over the cache lifetime.
+    /// [`SharedSwap::stats`] reports the exact global high-water mark
+    /// (coherently tracked across shards); a bare per-[`SwapCache`]
+    /// snapshot reports that cache's own exact peak.
     pub peak_bytes: u64,
+    // ---- open-loop / admission accounting (closed-loop serves leave the
+    // shed fields zero and `offered == requests`) ----
+    /// Requests offered to admission (admitted + shed).
+    pub offered: usize,
+    /// Requests shed by admission control (never executed).
+    pub shed: usize,
+    /// Shed because the bounded virtual queue was full (overload).
+    pub shed_queue_full: usize,
+    /// Shed because the tenant exceeded its rate limit.
+    pub shed_rate_limited: usize,
+    /// Ids of shed requests, sorted ascending. Tick-derived, so identical
+    /// across {sequential, 1-worker, N-worker, re-run} — the shed half of
+    /// the determinism contract (`tests/open_loop.rs`).
+    pub shed_ids: Vec<u64>,
+    /// Shed requests per tenant (adapter ref), in first-shed order.
+    pub per_tenant_shed: Vec<(String, usize)>,
+    /// Admitted requests whose micro-batch flushed by their deadline
+    /// (closed-loop requests have no deadline and always count).
+    pub goodput: usize,
+    /// Admitted requests flushed after their deadline had passed.
+    pub deadline_misses: usize,
+    /// Micro-batches flushed by the SLO rule (oldest deadline near).
+    pub deadline_flushes: usize,
+    /// Items dropped because a channel was pushed after close. Always 0 in
+    /// a healthy run; counted so shed accounting can never lose requests
+    /// invisibly.
+    pub chan_drops: usize,
+    /// Per-request virtual queueing latency in ticks (arrival → flush),
+    /// tagged with the tenant, in flush order. The basis for per-tenant
+    /// tail-latency reporting; deterministic, unlike wall-clock
+    /// `latencies`.
+    pub vlat_ticks: Vec<(String, u64)>,
 }
 
 impl ServeStats {
@@ -180,6 +239,63 @@ impl ServeStats {
         self.factor_bytes = cs.factor_bytes;
         self.peak_bytes = cs.peak_bytes;
     }
+
+    /// Fraction of offered requests shed by admission (0.0 when nothing
+    /// was offered, i.e. closed-loop serves that never ran admission).
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.offered as f64
+        }
+    }
+
+    /// Deadline-met requests per wall-clock second (same basis rules as
+    /// [`ServeStats::throughput_rps`]).
+    pub fn goodput_rps(&self) -> f64 {
+        let total = if self.wall_seconds > 0.0 {
+            self.wall_seconds
+        } else {
+            self.swap_seconds + self.exec_seconds
+        };
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.goodput as f64 / total
+        }
+    }
+
+    /// Per-tenant virtual-latency samples grouped from `vlat_ticks`, in
+    /// first-seen tenant order.
+    pub fn vlat_by_tenant(&self) -> Vec<(String, Vec<f64>)> {
+        let mut order: Vec<String> = Vec::new();
+        let mut by: HashMap<&str, Vec<f64>> = HashMap::new();
+        for (tenant, v) in &self.vlat_ticks {
+            if !by.contains_key(tenant.as_str()) {
+                order.push(tenant.clone());
+            }
+            by.entry(tenant.as_str()).or_default().push(*v as f64);
+        }
+        order
+            .into_iter()
+            .map(|t| {
+                let vs = by.remove(t.as_str()).unwrap_or_default();
+                (t, vs)
+            })
+            .collect()
+    }
+
+    /// p-th percentile of one tenant's virtual queueing latency in ticks
+    /// (0.0 if the tenant has no samples).
+    pub fn tenant_vlat_percentile(&self, tenant: &str, p: f64) -> f64 {
+        let vs: Vec<f64> = self
+            .vlat_ticks
+            .iter()
+            .filter(|(t, _)| t == tenant)
+            .map(|(_, v)| *v as f64)
+            .collect();
+        crate::util::percentile(&vs, p)
+    }
 }
 
 /// Cache counters for [`SwapCache`].
@@ -203,9 +319,12 @@ pub struct SwapCacheStats {
 
 impl SwapCacheStats {
     /// Accumulate another shard's counters (see [`SharedSwap::stats`]).
-    /// Hit/build counts and current residency sum exactly; summed
-    /// per-shard peaks are an upper bound on the true global peak (shards
-    /// don't peak simultaneously).
+    /// Hit/build counts and current residency sum exactly. Peaks do
+    /// **not** sum: shards don't peak simultaneously, so the old
+    /// `+=` overstated true peak residency by up to a factor of the
+    /// shard count. The merged value keeps the max per-shard peak — a
+    /// lower bound on the global peak — and [`SharedSwap::stats`]
+    /// overwrites it with the exact coherently-tracked global peak.
     pub fn merge(&mut self, other: &SwapCacheStats) {
         self.tensor_hits += other.tensor_hits;
         self.tensor_builds += other.tensor_builds;
@@ -215,7 +334,7 @@ impl SwapCacheStats {
         self.factor_builds += other.factor_builds;
         self.delta_bytes += other.delta_bytes;
         self.factor_bytes += other.factor_bytes;
-        self.peak_bytes += other.peak_bytes;
+        self.peak_bytes = self.peak_bytes.max(other.peak_bytes);
     }
 }
 
@@ -556,8 +675,19 @@ impl SwapCache {
 /// [`SwapCache`], so concurrent warm swaps on distinct adapters don't
 /// serialize on one lock. LRU caps and counters are per shard; a name's
 /// state always lives in exactly one shard, so invalidation is exact.
+/// Total residency and its high-water mark are additionally tracked in
+/// cross-shard atomics so [`SharedSwap::stats`] reports the *exact*
+/// global peak instead of a per-shard aggregate.
 pub struct SharedSwap {
     shards: Vec<Mutex<SwapCache>>,
+    /// Exact delta+factor bytes resident across all shards (updated after
+    /// every residency-changing shard op).
+    resident: AtomicU64,
+    /// Lifetime high-water mark of `resident`. Unlike summing per-shard
+    /// peaks (which overstates — shards don't peak simultaneously), this
+    /// observes every committed residency increase, so it is the true
+    /// global peak.
+    peak: AtomicU64,
 }
 
 impl SharedSwap {
@@ -576,6 +706,8 @@ impl SharedSwap {
             shards: (0..n)
                 .map(|_| Mutex::new(SwapCache::with_cap(site_dims.clone(), cap_per_shard)))
                 .collect(),
+            resident: AtomicU64::new(0),
+            peak: AtomicU64::new(0),
         }
     }
 
@@ -585,6 +717,27 @@ impl SharedSwap {
 
     fn shard_of(&self, name: &str) -> usize {
         shard_index(name, self.shards.len())
+    }
+
+    /// Run a shard op and fold its residency change into the cross-shard
+    /// counters. The atomic update happens after the shard lock drops;
+    /// `resident` therefore tracks *committed* residency, and `peak` is
+    /// the exact high-water mark of that counter (every increase passes
+    /// through the `fetch_add` + `fetch_max` pair).
+    fn with_shard_tracked<T>(&self, idx: usize, f: impl FnOnce(&mut SwapCache) -> T) -> T {
+        let mut shard = self.shards[idx].lock().unwrap();
+        let before = shard.stats.delta_bytes + shard.stats.factor_bytes;
+        let out = f(&mut shard);
+        let after = shard.stats.delta_bytes + shard.stats.factor_bytes;
+        drop(shard);
+        if after > before {
+            let grew = after - before;
+            let cur = self.resident.fetch_add(grew, Ordering::SeqCst) + grew;
+            self.peak.fetch_max(cur, Ordering::SeqCst);
+        } else if before > after {
+            self.resident.fetch_sub(before - after, Ordering::SeqCst);
+        }
+        out
     }
 
     /// Device-form adapt tensors for `name` through the sharded cache +
@@ -597,8 +750,9 @@ impl SharedSwap {
         store: &SharedAdapterStore,
         name: &str,
     ) -> Result<(TensorSet, SwapTrace)> {
-        let mut shard = self.shards[self.shard_of(name)].lock().unwrap();
-        store.with_shard(name, |st| shard.adapt_tensors_traced(st, name))
+        self.with_shard_tracked(self.shard_of(name), |shard| {
+            store.with_shard(name, |st| shard.adapt_tensors_traced(st, name))
+        })
     }
 
     /// Reconstructed per-site ΔW for `name` through the sharded cache.
@@ -607,8 +761,9 @@ impl SharedSwap {
         store: &SharedAdapterStore,
         name: &str,
     ) -> Result<(DeltaSet, SwapTrace)> {
-        let mut shard = self.shards[self.shard_of(name)].lock().unwrap();
-        store.with_shard(name, |st| shard.deltas_traced(st, name))
+        self.with_shard_tracked(self.shard_of(name), |shard| {
+            store.with_shard(name, |st| shard.deltas_traced(st, name))
+        })
     }
 
     /// Factored per-site state for `name` through the sharded cache
@@ -619,38 +774,50 @@ impl SharedSwap {
         store: &SharedAdapterStore,
         name: &str,
     ) -> Result<(Option<FactorSet>, SwapTrace)> {
-        let mut shard = self.shards[self.shard_of(name)].lock().unwrap();
-        store.with_shard(name, |st| shard.factors_traced(st, name))
+        self.with_shard_tracked(self.shard_of(name), |shard| {
+            store.with_shard(name, |st| shard.factors_traced(st, name))
+        })
     }
 
     /// Drop all cached state for exactly `name` in its owning shard
     /// (version-scoped: pinned `name@N` entries live under their own ref
     /// keys and survive a bare-name invalidation).
     pub fn invalidate(&self, name: &str) {
-        self.shards[self.shard_of(name)].lock().unwrap().invalidate(name);
+        self.with_shard_tracked(self.shard_of(name), |shard| shard.invalidate(name));
     }
 
     /// Drop the bare entry and every pinned version entry of `base`
     /// across all shards (versioned refs hash to their own shards).
     pub fn invalidate_family(&self, base: &str) {
-        for s in &self.shards {
-            s.lock().unwrap().invalidate_family(base);
+        for i in 0..self.shards.len() {
+            self.with_shard_tracked(i, |shard| shard.invalidate_family(base));
         }
     }
 
     pub fn clear(&self) {
-        for s in &self.shards {
-            s.lock().unwrap().clear();
+        for i in 0..self.shards.len() {
+            self.with_shard_tracked(i, |shard| shard.clear());
         }
     }
 
-    /// Counters aggregated across shards.
+    /// Counters aggregated across shards. Hit/build counts and residency
+    /// are exact sums; `peak_bytes` is overwritten with the coherently
+    /// tracked global high-water mark (see [`SwapCacheStats::merge`] for
+    /// why per-shard peaks can't just be summed).
     pub fn stats(&self) -> SwapCacheStats {
         let mut out = SwapCacheStats::default();
         for s in &self.shards {
             out.merge(&s.lock().unwrap().stats);
         }
+        out.peak_bytes = self.peak.load(Ordering::SeqCst);
         out
+    }
+
+    /// Raw per-shard counter snapshots, in shard order (introspection /
+    /// tests; the peak fix is pinned by comparing these against
+    /// [`SharedSwap::stats`]).
+    pub fn shard_stats(&self) -> Vec<SwapCacheStats> {
+        self.shards.iter().map(|s| s.lock().unwrap().stats).collect()
     }
 
     /// Resident adapter names across all shards (no particular global
@@ -987,7 +1154,9 @@ mod tests {
         assert_eq!(a.factor_builds, 66);
         assert_eq!(a.delta_bytes, 77);
         assert_eq!(a.factor_bytes, 88);
-        assert_eq!(a.peak_bytes, 99);
+        // Peaks take the max, not the sum: shards don't peak at the same
+        // instant, so summing overstated true peak residency (the old bug).
+        assert_eq!(a.peak_bytes, 90);
     }
 
     #[test]

@@ -11,9 +11,18 @@
 //! configurable arrival order to steer the coalescing behavior from
 //! best-case (grouped) to adversarial (round-robin).
 //!
+//! On top of the *order* there is the *timing*: [`gen_arrivals`] stamps a
+//! queue with virtual-time arrival ticks from a seeded
+//! Poisson/burst/diurnal process ([`ArrivalKind`]) plus per-request SLO
+//! deadlines, turning the closed-loop queue into an open-loop one. Time
+//! is virtual (integer ticks drawn from the deterministic [`Rng`]), so
+//! arrival generation — and everything downstream that keys off it:
+//! admission, shedding, SLO flushes — is bit-stable across runs and
+//! machines.
+//!
 //! [`Rng`]: crate::tensor::rng::Rng
 
-use super::serving::Request;
+use super::serving::{Request, TimedRequest};
 use super::trainer::Batch;
 use crate::adapter::method::{self, MethodHp, SiteSpec};
 use crate::adapter::store::SharedAdapterStore;
@@ -159,7 +168,18 @@ pub fn pin_requests(queue: &mut [Request], pin: impl Fn(&str) -> Option<u64>) {
 /// Generate the request queue: Zipf-sampled adapter per request,
 /// id-derived batch contents, arrival order per `cfg.arrival`. Calling
 /// this twice with the same config yields bit-identical queues.
-pub fn gen_requests(cfg: &WorkloadCfg) -> Vec<Request> {
+///
+/// Errors on a degenerate config instead of misbehaving at runtime:
+/// `adapters == 0` (the rank clamp `i.min(adapters - 1)` used to
+/// underflow) and non-finite `zipf_s` (NaN weights used to panic inside
+/// the cumulative-weight search).
+pub fn gen_requests(cfg: &WorkloadCfg) -> Result<Vec<Request>> {
+    anyhow::ensure!(cfg.adapters > 0, "workload needs at least one adapter (adapters == 0)");
+    anyhow::ensure!(
+        cfg.zipf_s.is_finite(),
+        "zipf_s must be finite, got {} (non-finite exponents make every weight NaN)",
+        cfg.zipf_s
+    );
     let weights = zipf_weights(cfg.adapters, cfg.zipf_s);
     let mut cum = Vec::with_capacity(weights.len());
     let mut acc = 0.0f64;
@@ -168,11 +188,18 @@ pub fn gen_requests(cfg: &WorkloadCfg) -> Vec<Request> {
         cum.push(acc);
     }
     let total = acc;
+    anyhow::ensure!(
+        total.is_finite() && total > 0.0,
+        "zipf weights must sum to a positive finite total, got {total} (zipf_s = {})",
+        cfg.zipf_s
+    );
     let mut rng = Rng::new(cfg.seed ^ 0x5E12);
     let mut draws: Vec<usize> = (0..cfg.requests)
         .map(|_| {
             let t = rng.f64() * total;
-            match cum.binary_search_by(|c| c.partial_cmp(&t).unwrap()) {
+            // total_cmp: a total order even if a weight were non-finite,
+            // so the search itself can never panic.
+            match cum.binary_search_by(|c| c.total_cmp(&t)) {
                 Ok(i) => i,
                 Err(i) => i.min(cfg.adapters - 1),
             }
@@ -217,7 +244,7 @@ pub fn gen_requests(cfg: &WorkloadCfg) -> Vec<Request> {
         }
     }
 
-    draws
+    Ok(draws
         .into_iter()
         .enumerate()
         .map(|(i, a)| {
@@ -234,7 +261,169 @@ pub fn gen_requests(cfg: &WorkloadCfg) -> Vec<Request> {
             batch.insert("x".into(), x);
             Request { id: i as u64, adapter: adapter_name(a), batch }
         })
-        .collect()
+        .collect())
+}
+
+// ---------------------------------------------------------------------------
+// Open-loop arrival processes.
+
+/// The arrival process stamping virtual arrival ticks onto a queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Closed loop: arrival tick = queue position, no deadlines (the
+    /// pre-open-loop behavior, bitwise).
+    Closed,
+    /// Stationary Poisson process: i.i.d. exponential inter-arrival gaps
+    /// at `rate_per_ktick`.
+    Poisson,
+    /// Periodic bursts: rate multiplied by `burst_factor` during the
+    /// first `duty` fraction of every `period_ticks` window — the
+    /// overload scenario.
+    Burst,
+    /// Smooth day/night swing: sinusoidal rate between the base rate and
+    /// `burst_factor` × base over `period_ticks`.
+    Diurnal,
+}
+
+impl std::str::FromStr for ArrivalKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<ArrivalKind> {
+        match s {
+            "closed" => Ok(ArrivalKind::Closed),
+            "poisson" => Ok(ArrivalKind::Poisson),
+            "burst" => Ok(ArrivalKind::Burst),
+            "diurnal" => Ok(ArrivalKind::Diurnal),
+            other => {
+                anyhow::bail!("unknown arrival '{other}' (want closed|poisson|burst|diurnal)")
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ArrivalKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ArrivalKind::Closed => "closed",
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Burst => "burst",
+            ArrivalKind::Diurnal => "diurnal",
+        })
+    }
+}
+
+/// Open-loop timing shape: arrival process, offered rate, and the
+/// per-request SLO. All in virtual ticks.
+#[derive(Debug, Clone)]
+pub struct OpenLoopCfg {
+    pub kind: ArrivalKind,
+    /// Mean arrivals per 1000 virtual ticks (the base rate; burst and
+    /// diurnal modulate it).
+    pub rate_per_ktick: f64,
+    /// Per-request SLO: deadline = arrival + this many ticks.
+    pub deadline_ticks: u64,
+    /// Peak rate multiplier for `Burst` / `Diurnal`.
+    pub burst_factor: f64,
+    /// Burst / diurnal cycle length in virtual ticks.
+    pub period_ticks: u64,
+    /// Fraction of each `Burst` period spent at the burst rate.
+    pub duty: f64,
+    /// Arrival-gap RNG seed (independent of the workload seed, so the
+    /// same request queue can be replayed under different timings).
+    pub seed: u64,
+}
+
+impl OpenLoopCfg {
+    /// A stationary Poisson process at `rate_per_ktick` with the given
+    /// deadline; burst/diurnal fields at their defaults.
+    pub fn poisson(rate_per_ktick: f64, deadline_ticks: u64) -> OpenLoopCfg {
+        OpenLoopCfg {
+            kind: ArrivalKind::Poisson,
+            rate_per_ktick,
+            deadline_ticks,
+            burst_factor: 8.0,
+            period_ticks: 512,
+            duty: 0.25,
+            seed: 2024,
+        }
+    }
+}
+
+/// Stamp a request queue with virtual arrival ticks and deadlines from
+/// the configured arrival process. Arrival ticks are nondecreasing;
+/// generation is a pure function of `(ol, reqs order)` — exponential gaps
+/// come from the crate's deterministic [`Rng`], so two calls produce
+/// bit-identical timings (the foundation of reproducible shedding).
+pub fn gen_arrivals(ol: &OpenLoopCfg, reqs: Vec<Request>) -> Result<Vec<TimedRequest>> {
+    if ol.kind == ArrivalKind::Closed {
+        return Ok(reqs
+            .into_iter()
+            .enumerate()
+            .map(|(i, req)| TimedRequest::closed(i as u64, req))
+            .collect());
+    }
+    anyhow::ensure!(
+        ol.rate_per_ktick.is_finite() && ol.rate_per_ktick > 0.0,
+        "open-loop arrival rate must be positive and finite, got {}",
+        ol.rate_per_ktick
+    );
+    anyhow::ensure!(
+        ol.burst_factor.is_finite() && ol.burst_factor >= 1.0,
+        "burst_factor must be >= 1, got {}",
+        ol.burst_factor
+    );
+    let base = ol.rate_per_ktick / 1000.0; // arrivals per tick
+    let period = ol.period_ticks.max(1) as f64;
+    let duty = ol.duty.clamp(0.0, 1.0);
+    let mut rng = Rng::new(ol.seed ^ 0xA331);
+    let mut t = 0.0f64;
+    Ok(reqs
+        .into_iter()
+        .map(|req| {
+            // Instantaneous rate at virtual time t (thinning-free: the
+            // gap is drawn at the rate in effect when it starts, which
+            // keeps generation one-pass and deterministic).
+            let mult = match ol.kind {
+                ArrivalKind::Poisson => 1.0,
+                ArrivalKind::Burst => {
+                    let phase = (t % period) / period;
+                    if phase < duty {
+                        ol.burst_factor
+                    } else {
+                        1.0
+                    }
+                }
+                ArrivalKind::Diurnal => {
+                    let phase = t % period / period;
+                    1.0 + (ol.burst_factor - 1.0)
+                        * 0.5
+                        * (1.0 + (2.0 * std::f64::consts::PI * phase).sin())
+                }
+                ArrivalKind::Closed => unreachable!("handled above"),
+            };
+            let rate = base * mult;
+            // Exponential inter-arrival gap: -ln(1 - u) / rate, u ∈ [0, 1).
+            let u = rng.f64();
+            t += -(1.0 - u).ln() / rate;
+            let arrive = t as u64;
+            TimedRequest {
+                arrive_tick: arrive,
+                deadline_tick: arrive.saturating_add(ol.deadline_ticks),
+                req,
+            }
+        })
+        .collect())
+}
+
+/// [`pin_requests`] over a timed queue: same versioned-ref rewrite, with
+/// arrival/deadline stamps untouched (pinning changes *what* a request
+/// resolves to, never *when* it happened).
+pub fn pin_timed_requests(queue: &mut [TimedRequest], pin: impl Fn(&str) -> Option<u64>) {
+    for tr in queue.iter_mut() {
+        if let Some(v) = pin(&tr.req.adapter) {
+            tr.req.adapter = crate::adapter::store::versioned_ref(&tr.req.adapter, v);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -244,8 +433,8 @@ mod tests {
     #[test]
     fn generation_is_deterministic() {
         let cfg = WorkloadCfg::small();
-        let a = gen_requests(&cfg);
-        let b = gen_requests(&cfg);
+        let a = gen_requests(&cfg).unwrap();
+        let b = gen_requests(&cfg).unwrap();
         assert_eq!(a.len(), b.len());
         for (ra, rb) in a.iter().zip(b.iter()) {
             assert_eq!(ra.id, rb.id);
@@ -258,7 +447,7 @@ mod tests {
     #[test]
     fn zipf_head_is_heavier_than_tail() {
         let cfg = WorkloadCfg { requests: 2000, ..WorkloadCfg::small() };
-        let reqs = gen_requests(&cfg);
+        let reqs = gen_requests(&cfg).unwrap();
         let mut counts: HashMap<String, usize> = HashMap::new();
         for r in &reqs {
             *counts.entry(r.adapter.clone()).or_insert(0) += 1;
@@ -278,7 +467,7 @@ mod tests {
     #[test]
     fn grouped_arrival_is_contiguous_per_adapter() {
         let cfg = WorkloadCfg { arrival: Arrival::Grouped, ..WorkloadCfg::small() };
-        let reqs = gen_requests(&cfg);
+        let reqs = gen_requests(&cfg).unwrap();
         let mut seen_blocks: Vec<String> = Vec::new();
         for r in &reqs {
             if seen_blocks.last().map(|l| l != &r.adapter).unwrap_or(true) {
@@ -300,7 +489,7 @@ mod tests {
             arrival: Arrival::RoundRobin,
             ..WorkloadCfg::small()
         };
-        let reqs = gen_requests(&cfg);
+        let reqs = gen_requests(&cfg).unwrap();
         assert_eq!(reqs.len(), 64);
         // In the first full round every distinct adapter appears once
         // before any repeats.
@@ -319,7 +508,7 @@ mod tests {
     #[test]
     fn pin_requests_rewrites_only_resolved_names() {
         let cfg = WorkloadCfg { adapters: 4, requests: 32, ..WorkloadCfg::small() };
-        let mut queue = gen_requests(&cfg);
+        let mut queue = gen_requests(&cfg).unwrap();
         let bare: Vec<String> = queue.iter().map(|r| r.adapter.clone()).collect();
         pin_requests(&mut queue, |name| {
             if name == adapter_name(0) {
@@ -353,6 +542,145 @@ mod tests {
             (a.tensors[0].tensor.as_f32().unwrap(), b.tensors[0].tensor.as_f32().unwrap());
         assert_ne!(ta, tb, "adapters must have distinct coefficients");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gen_requests_rejects_degenerate_configs() {
+        // adapters == 0 used to underflow `i.min(adapters - 1)`.
+        let cfg = WorkloadCfg { adapters: 0, ..WorkloadCfg::small() };
+        let err = gen_requests(&cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("at least one adapter"));
+        // NaN zipf_s used to panic inside the cumulative-weight search.
+        let cfg = WorkloadCfg { zipf_s: f64::NAN, ..WorkloadCfg::small() };
+        let err = gen_requests(&cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("zipf_s must be finite"));
+        let cfg = WorkloadCfg { zipf_s: f64::INFINITY, ..WorkloadCfg::small() };
+        assert!(gen_requests(&cfg).is_err());
+        // The boundary case adapters == 1 is fine: every draw clamps to 0.
+        let cfg = WorkloadCfg { adapters: 1, requests: 8, ..WorkloadCfg::small() };
+        let reqs = gen_requests(&cfg).unwrap();
+        assert!(reqs.iter().all(|r| r.adapter == adapter_name(0)));
+    }
+
+    #[test]
+    fn arrivals_are_deterministic_and_monotone() {
+        let cfg = WorkloadCfg::small();
+        for kind in [ArrivalKind::Poisson, ArrivalKind::Burst, ArrivalKind::Diurnal] {
+            let ol = OpenLoopCfg { kind, ..OpenLoopCfg::poisson(200.0, 64) };
+            let a = gen_arrivals(&ol, gen_requests(&cfg).unwrap()).unwrap();
+            let b = gen_arrivals(&ol, gen_requests(&cfg).unwrap()).unwrap();
+            assert_eq!(a.len(), cfg.requests);
+            for (ta, tb) in a.iter().zip(b.iter()) {
+                assert_eq!(ta.arrive_tick, tb.arrive_tick, "{kind}: bit-stable ticks");
+                assert_eq!(ta.deadline_tick, tb.deadline_tick);
+                assert_eq!(ta.req.id, tb.req.id);
+            }
+            assert!(
+                a.windows(2).all(|w| w[0].arrive_tick <= w[1].arrive_tick),
+                "{kind}: arrival ticks must be nondecreasing"
+            );
+            assert!(a
+                .iter()
+                .all(|t| t.deadline_tick == t.arrive_tick + ol.deadline_ticks));
+        }
+    }
+
+    #[test]
+    fn closed_arrivals_are_positional_with_no_deadline() {
+        let cfg = WorkloadCfg { requests: 32, ..WorkloadCfg::small() };
+        let ol = OpenLoopCfg { kind: ArrivalKind::Closed, ..OpenLoopCfg::poisson(100.0, 8) };
+        let timed = gen_arrivals(&ol, gen_requests(&cfg).unwrap()).unwrap();
+        for (i, t) in timed.iter().enumerate() {
+            assert_eq!(t.arrive_tick, i as u64);
+            assert_eq!(t.deadline_tick, u64::MAX);
+        }
+    }
+
+    #[test]
+    fn burst_arrivals_cluster_harder_than_poisson() {
+        let cfg = WorkloadCfg { requests: 2000, ..WorkloadCfg::small() };
+        let base = OpenLoopCfg::poisson(100.0, 64);
+        let pois = gen_arrivals(&base, gen_requests(&cfg).unwrap()).unwrap();
+        let burst = gen_arrivals(
+            &OpenLoopCfg { kind: ArrivalKind::Burst, burst_factor: 16.0, ..base.clone() },
+            gen_requests(&cfg).unwrap(),
+        )
+        .unwrap();
+        // Peak local density: most arrivals inside any 64-tick window.
+        let peak = |ts: &[TimedRequest]| {
+            let ticks: Vec<u64> = ts.iter().map(|t| t.arrive_tick).collect();
+            let mut best = 0usize;
+            let mut lo = 0usize;
+            for hi in 0..ticks.len() {
+                while ticks[hi] - ticks[lo] > 64 {
+                    lo += 1;
+                }
+                best = best.max(hi - lo + 1);
+            }
+            best
+        };
+        assert!(
+            peak(&burst) > peak(&pois),
+            "burst windows must pack arrivals denser than stationary poisson \
+             (burst {} vs poisson {})",
+            peak(&burst),
+            peak(&pois)
+        );
+    }
+
+    #[test]
+    fn gen_arrivals_rejects_bad_rates() {
+        let cfg = WorkloadCfg { requests: 4, ..WorkloadCfg::small() };
+        let mk = || gen_requests(&cfg).unwrap();
+        let mut ol = OpenLoopCfg::poisson(0.0, 8);
+        assert!(gen_arrivals(&ol, mk()).is_err(), "zero rate");
+        ol.rate_per_ktick = f64::NAN;
+        assert!(gen_arrivals(&ol, mk()).is_err(), "NaN rate");
+        ol.rate_per_ktick = 100.0;
+        ol.burst_factor = 0.5;
+        ol.kind = ArrivalKind::Burst;
+        assert!(gen_arrivals(&ol, mk()).is_err(), "burst_factor < 1");
+    }
+
+    #[test]
+    fn arrival_kind_parses_and_displays() {
+        for (s, k) in [
+            ("closed", ArrivalKind::Closed),
+            ("poisson", ArrivalKind::Poisson),
+            ("burst", ArrivalKind::Burst),
+            ("diurnal", ArrivalKind::Diurnal),
+        ] {
+            assert_eq!(s.parse::<ArrivalKind>().unwrap(), k);
+            assert_eq!(k.to_string(), s);
+        }
+        assert!("steady".parse::<ArrivalKind>().is_err());
+    }
+
+    #[test]
+    fn pin_timed_requests_rewrites_refs_and_keeps_timing() {
+        let cfg = WorkloadCfg { adapters: 4, requests: 32, ..WorkloadCfg::small() };
+        let ol = OpenLoopCfg::poisson(100.0, 16);
+        let mut timed = gen_arrivals(&ol, gen_requests(&cfg).unwrap()).unwrap();
+        let before: Vec<(u64, u64, String)> = timed
+            .iter()
+            .map(|t| (t.arrive_tick, t.deadline_tick, t.req.adapter.clone()))
+            .collect();
+        pin_timed_requests(&mut timed, |name| {
+            if name == adapter_name(1) {
+                Some(3)
+            } else {
+                None
+            }
+        });
+        for (t, (arrive, deadline, orig)) in timed.iter().zip(&before) {
+            assert_eq!(t.arrive_tick, *arrive, "pinning must not touch timing");
+            assert_eq!(t.deadline_tick, *deadline);
+            if orig == &adapter_name(1) {
+                assert_eq!(t.req.adapter, format!("{orig}@3"));
+            } else {
+                assert_eq!(&t.req.adapter, orig);
+            }
+        }
     }
 
     #[test]

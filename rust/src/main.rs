@@ -69,15 +69,22 @@ fn print_usage() {
          \x20 all [--quick]                      run every table and figure\n\
          \x20 serve [--adapters N --requests N --workers N]  multi-adapter serving demo\n\
          \x20 serve-host [--method ID --adapters N --requests N --workers N\n\
-         \x20             --apply {{auto,dense,factored}} --dim D --n N --sites S --batch B]\n\
+         \x20             --apply {{auto,dense,factored}} --dim D --n N --sites S --batch B\n\
+         \x20             --arrival {{closed,poisson,burst,diurnal}} --rate R --deadline-ticks D\n\
+         \x20             --burst-factor F --period P --duty F --service-ticks S\n\
+         \x20             --queue-depth Q --tenant-rate R --tenant-burst B --slack T]\n\
          \x20                                    pure-host scheduler demo, any registered method;\n\
          \x20                                    --apply picks dense vs factored (no-materialize)\n\
-         \x20                                    serving, auto = per-adapter flops cost model\n\
+         \x20                                    serving, auto = per-adapter flops cost model;\n\
+         \x20                                    --arrival != closed runs open-loop with SLO\n\
+         \x20                                    admission + load shedding (prints shed digest)\n\
          \x20 pipeline [--adapters N --requests N --publish-every S --workers W\n\
          \x20           --train-workers T --steps K --keep V --artifact A\n\
-         \x20           --apply {{auto,dense,factored}}]\n\
+         \x20           --apply {{auto,dense,factored}}\n\
+         \x20           --arrival {{closed,poisson,burst,diurnal}} --rate R --deadline-ticks D]\n\
          \x20                                    online lifecycle: background train -> versioned\n\
-         \x20                                    publish -> serve, with per-publish latency rows\n\
+         \x20                                    publish -> serve, with per-publish latency rows;\n\
+         \x20                                    open-loop arrivals shed at admission per wave\n\
          \x20 methods [--d N --layers N --n N --rank N]      registered adapter methods + budgets\n\
          \n\
          global flags:\n\
@@ -127,11 +134,21 @@ fn methods(args: &Args) -> Result<()> {
 /// FNV-1a over the id-sorted logits bits: bit-identical across reruns and
 /// worker counts for a fixed mode, and across modes whose applies agree
 /// bitwise (the property the scheduler-stress CI job gates on).
+///
+/// `--arrival {closed,poisson,burst,diurnal}` switches to open-loop
+/// serving: virtual-time arrivals at `--rate` per kilotick with
+/// per-request `--deadline-ticks` SLOs, admission control (`--service-ticks
+/// --queue-depth --tenant-rate --tenant-burst`), and deadline-pressure
+/// flushes (`--slack`). The extra `shed digest` line is an FNV-1a over the
+/// sorted shed request ids — the reproducible-shedding half of the
+/// determinism contract the CI burst scenario gates on.
 fn serve_host(args: &Args) -> Result<()> {
     use fourier_peft::adapter::SharedAdapterStore;
-    use fourier_peft::coordinator::scheduler::{serve_scheduled_host, ApplyMode, SchedCfg};
+    use fourier_peft::coordinator::scheduler::{
+        serve_open_loop_host, serve_scheduled_host, AdmissionCfg, ApplyMode, SchedCfg,
+    };
     use fourier_peft::coordinator::serving::SharedSwap;
-    use fourier_peft::coordinator::workload::{self, WorkloadCfg};
+    use fourier_peft::coordinator::workload::{self, ArrivalKind, OpenLoopCfg, WorkloadCfg};
 
     let method = args.str_or("method", "fourierft");
     let apply: ApplyMode = args.str_or("apply", "auto").parse()?;
@@ -157,8 +174,31 @@ fn serve_host(args: &Args) -> Result<()> {
         apply,
         ..SchedCfg::default()
     };
-    let queue = workload::gen_requests(&cfg);
-    let (results, stats) = serve_scheduled_host(&swap, &store, queue, &sched)?;
+    let queue = workload::gen_requests(&cfg)?;
+    let arrival: ArrivalKind = args.str_or("arrival", "closed").parse()?;
+    let (results, stats) = if arrival == ArrivalKind::Closed {
+        serve_scheduled_host(&swap, &store, queue, &sched)?
+    } else {
+        let service_ticks = args.u64_or("service-ticks", 8);
+        let ol = OpenLoopCfg {
+            kind: arrival,
+            rate_per_ktick: args.f64_or("rate", 250.0),
+            deadline_ticks: args.u64_or("deadline-ticks", 96),
+            burst_factor: args.f64_or("burst-factor", 8.0),
+            period_ticks: args.u64_or("period", 512),
+            duty: args.f64_or("duty", 0.25),
+            seed: cfg.seed,
+        };
+        let adm = AdmissionCfg {
+            service_ticks,
+            queue_depth: args.usize_or("queue-depth", 64),
+            tenant_rate_per_ktick: args.f64_or("tenant-rate", 0.0),
+            tenant_burst: args.f64_or("tenant-burst", 16.0),
+            flush_slack_ticks: args.u64_or("slack", service_ticks),
+        };
+        let timed = workload::gen_arrivals(&ol, queue)?;
+        serve_open_loop_host(&swap, &store, timed, &sched, &adm)?
+    };
     println!(
         "method {method} (apply {apply}): served {} requests in {} micro-batches  \
          swaps {} ({} warm)  wall {:.3}s  => {:.1} req/s",
@@ -177,6 +217,28 @@ fn serve_host(args: &Args) -> Result<()> {
         fourier_peft::util::fmt_bytes(stats.factor_bytes as usize),
         fourier_peft::util::fmt_bytes(stats.peak_bytes as usize)
     );
+    if arrival != ArrivalKind::Closed {
+        println!(
+            "open loop ({arrival}): offered {}  admitted {}  shed {} \
+             (queue_full {}, rate_limited {})  shed rate {:.1}%",
+            stats.offered, results.len(), stats.shed, stats.shed_queue_full,
+            stats.shed_rate_limited, stats.shed_rate() * 100.0
+        );
+        println!(
+            "slo: goodput {}/{} admitted ({:.1} req/s)  deadline flushes {}  misses {}  \
+             chan drops {}",
+            stats.goodput, results.len(), stats.goodput_rps(), stats.deadline_flushes,
+            stats.deadline_misses, stats.chan_drops
+        );
+        let worst = stats
+            .vlat_by_tenant()
+            .into_iter()
+            .map(|(t, vs)| (t, fourier_peft::util::percentile(&vs, 99.0)))
+            .max_by(|a, b| a.1.total_cmp(&b.1));
+        if let Some((tenant, p99)) = worst {
+            println!("worst per-tenant p99 virtual latency: {tenant} at {p99:.0} ticks");
+        }
+    }
     let mut digest = fourier_peft::util::FNV64_INIT;
     for (id, t) in &results {
         digest = fourier_peft::util::fnv64_fold(digest, &id.to_le_bytes());
@@ -185,6 +247,13 @@ fn serve_host(args: &Args) -> Result<()> {
         }
     }
     println!("response digest {digest:016x}");
+    if arrival != ArrivalKind::Closed {
+        let mut sdig = fourier_peft::util::FNV64_INIT;
+        for id in &stats.shed_ids {
+            sdig = fourier_peft::util::fnv64_fold(sdig, &id.to_le_bytes());
+        }
+        println!("shed digest {sdig:016x} over {} shed ids", stats.shed_ids.len());
+    }
     Ok(())
 }
 
@@ -209,9 +278,12 @@ fn pipeline(args: &Args) -> Result<()> {
     use fourier_peft::coordinator::pipeline::{
         self, EngineTrainJob, Pipeline, PipelineCfg,
     };
-    use fourier_peft::coordinator::workload;
+    use fourier_peft::coordinator::scheduler::AdmissionCfg;
+    use fourier_peft::coordinator::workload::{self, ArrivalKind, OpenLoopCfg};
 
     let trainer = open_trainer(args)?;
+    let arrival: ArrivalKind = args.str_or("arrival", "closed").parse()?;
+    let service_ticks = args.u64_or("service-ticks", 8);
     let cfg = PipelineCfg {
         artifact: args.str_or("artifact", "mlp__fourierft_n64__ce").to_string(),
         adapters: args.usize_or("adapters", 8),
@@ -226,6 +298,22 @@ fn pipeline(args: &Args) -> Result<()> {
         zipf_s: args.f64_or("zipf", 1.1),
         seed: args.u64_or("seed", 2024),
         serve_apply: args.str_or("apply", "auto").parse()?,
+        arrival: (arrival != ArrivalKind::Closed).then(|| OpenLoopCfg {
+            kind: arrival,
+            rate_per_ktick: args.f64_or("rate", 250.0),
+            deadline_ticks: args.u64_or("deadline-ticks", 96),
+            burst_factor: args.f64_or("burst-factor", 8.0),
+            period_ticks: args.u64_or("period", 512),
+            duty: args.f64_or("duty", 0.25),
+            seed: args.u64_or("seed", 2024),
+        }),
+        admission: AdmissionCfg {
+            service_ticks,
+            queue_depth: args.usize_or("queue-depth", 64),
+            tenant_rate_per_ktick: args.f64_or("tenant-rate", 0.0),
+            tenant_burst: args.f64_or("tenant-burst", 16.0),
+            flush_slack_ticks: args.u64_or("slack", service_ticks),
+        },
     };
     let meta = trainer.meta_for(&cfg.artifact)?;
     let dim = pipeline::serve_dim(&meta)?;
@@ -233,7 +321,7 @@ fn pipeline(args: &Args) -> Result<()> {
     let _ = std::fs::remove_dir_all(&dir);
     let pipe = Pipeline::open(&dir, meta.site_dims(), cfg.adapters, cfg.keep_versions)?;
     let job = EngineTrainJob::new(&trainer, &cfg.artifact, cfg.steps, cfg.seed);
-    let queue = workload::gen_requests(&pipeline::workload_cfg(&cfg, dim));
+    let queue = workload::gen_requests(&pipeline::workload_cfg(&cfg, dim))?;
     let report = pipe.run(&cfg, &job, queue)?;
 
     let stats = &report.stats;
@@ -251,6 +339,16 @@ fn pipeline(args: &Args) -> Result<()> {
         "serve latency p50 {:.1}ms  p95 {:.1}ms  p99 {:.1}ms",
         stats.latency_p50() * 1e3, stats.latency_p95() * 1e3, stats.latency_p99() * 1e3
     );
+    if cfg.arrival.is_some() {
+        println!(
+            "open loop ({arrival}): offered {}  admitted {}  shed {} \
+             (queue_full {}, rate_limited {})  shed rate {:.1}%  goodput {}  \
+             deadline misses {}",
+            stats.offered, stats.requests, stats.shed, stats.shed_queue_full,
+            stats.shed_rate_limited, stats.shed_rate() * 100.0, stats.goodput,
+            stats.deadline_misses
+        );
+    }
     println!(
         "cache residency: dense {}  factors {}  peak {}  (apply {})",
         fourier_peft::util::fmt_bytes(stats.delta_bytes as usize),

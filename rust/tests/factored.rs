@@ -216,18 +216,11 @@ fn sched_factored_deterministic_across_workers_and_reruns() {
                 queue_cap: 16,
                 apply: mode,
             };
-            let (seq, _) =
-                serve_sequential_host(&swap, &store, workload::gen_requests(&cfg), mode)
-                    .unwrap();
-            let (r1, _) =
-                serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sched(1))
-                    .unwrap();
-            let (r4, _) =
-                serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sched(4))
-                    .unwrap();
-            let (r4b, _) =
-                serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sched(4))
-                    .unwrap();
+            let gen = || workload::gen_requests(&cfg).unwrap();
+            let (seq, _) = serve_sequential_host(&swap, &store, gen(), mode).unwrap();
+            let (r1, _) = serve_scheduled_host(&swap, &store, gen(), &sched(1)).unwrap();
+            let (r4, _) = serve_scheduled_host(&swap, &store, gen(), &sched(4)).unwrap();
+            let (r4b, _) = serve_scheduled_host(&swap, &store, gen(), &sched(4)).unwrap();
             assert_bitwise_equal(&seq, &r1, &format!("{m}/{mode}: sequential vs 1-worker"));
             assert_bitwise_equal(&r1, &r4, &format!("{m}/{mode}: 1-worker vs 4-worker"));
             assert_bitwise_equal(&r4, &r4b, &format!("{m}/{mode}: 4-worker run vs re-run"));
@@ -255,14 +248,14 @@ fn sched_factored_bitwise_equals_dense_for_gather_and_fallback() {
         let (dense, _) = serve_sequential_host(
             &swap,
             &store,
-            workload::gen_requests(&cfg),
+            workload::gen_requests(&cfg).unwrap(),
             ApplyMode::Dense,
         )
         .unwrap();
         let (fact, _) = serve_sequential_host(
             &swap,
             &store,
-            workload::gen_requests(&cfg),
+            workload::gen_requests(&cfg).unwrap(),
             ApplyMode::Factored,
         )
         .unwrap();

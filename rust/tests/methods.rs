@@ -332,11 +332,9 @@ fn user_registered_method_serves_through_the_scheduler() {
         queue_cap: 16,
         apply: ApplyMode::Dense,
     };
-    let (seq, _) =
-        serve_sequential_host(&swap, &store, workload::gen_requests(&cfg), ApplyMode::Dense)
-            .unwrap();
-    let (par, stats) =
-        serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sc).unwrap();
+    let gen = || workload::gen_requests(&cfg).unwrap();
+    let (seq, _) = serve_sequential_host(&swap, &store, gen(), ApplyMode::Dense).unwrap();
+    let (par, stats) = serve_scheduled_host(&swap, &store, gen(), &sc).unwrap();
     assert_eq!(seq.len(), 32);
     assert_eq!(par.len(), 32);
     for ((ia, ta), (ib, tb)) in seq.iter().zip(par.iter()) {
@@ -362,9 +360,8 @@ fn bitfit_serving_errors_cleanly_instead_of_panicking() {
     let store = SharedAdapterStore::with_shards(&dir, 2, 8).unwrap();
     workload::populate_store(&store, &cfg).unwrap();
     let swap = SharedSwap::with_shards(workload::site_dims(&cfg), 2, 8);
-    let err =
-        serve_sequential_host(&swap, &store, workload::gen_requests(&cfg), ApplyMode::Dense)
-            .unwrap_err();
+    let gen = || workload::gen_requests(&cfg).unwrap();
+    let err = serve_sequential_host(&swap, &store, gen(), ApplyMode::Dense).unwrap_err();
     assert!(format!("{err:#}").contains("2-D"), "want a rank explanation, got: {err:#}");
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1,0 +1,352 @@
+//! Open-loop serving integration tests — the PR-7 acceptance claims:
+//!
+//! * under sustained overload the scheduler **sheds instead of
+//!   blocking**: admitted requests are answered bitwise-identically
+//!   across {sequential, 1, 4} workers and a re-run, and the shed id set
+//!   is identical across all of them (admission is a pure function of
+//!   the arrival sequence);
+//! * per-tenant rate limits shed the hot tenant's overflow while the
+//!   Zipf tail keeps flowing untouched;
+//! * deadline-aware flushing bounds per-tenant virtual tail latency in a
+//!   hot-key storm even when size/wait flushes would never fire;
+//! * the `closed` arrival wrap is a strict no-op: identical results and
+//!   flush ledger to the pre-open-loop scheduler;
+//! * a publish storm during a burst (pipeline republishing every wave
+//!   while admission sheds) keeps pins, shed ids, and served logits
+//!   reproducible across worker counts, and the survivors replay
+//!   bitwise from their pinned versions.
+
+use fourier_peft::adapter::method::{MethodHp, SiteSpec};
+use fourier_peft::adapter::SharedAdapterStore;
+use fourier_peft::coordinator::pipeline::{Pipeline, PipelineCfg, SyntheticJob};
+use fourier_peft::coordinator::scheduler::{
+    serve_open_loop_host, serve_open_loop_sequential_host, serve_scheduled_host, AdmissionCfg,
+    ApplyMode, SchedCfg,
+};
+use fourier_peft::coordinator::serving::{SharedSwap, TimedRequest};
+use fourier_peft::coordinator::workload::{self, ArrivalKind, OpenLoopCfg, WorkloadCfg};
+use fourier_peft::tensor::Tensor;
+use std::collections::HashSet;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("fp_openloop_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn assert_bitwise_equal(a: &[(u64, Tensor)], b: &[(u64, Tensor)], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: result counts differ");
+    for ((ia, ta), (ib, tb)) in a.iter().zip(b.iter()) {
+        assert_eq!(ia, ib, "{what}: id order differs");
+        let (va, vb) = (ta.as_f32().unwrap(), tb.as_f32().unwrap());
+        assert_eq!(va.len(), vb.len(), "{what}: shapes differ at id {ia}");
+        for i in 0..va.len() {
+            assert!(
+                va[i].to_bits() == vb[i].to_bits(),
+                "{what}: id {ia} element {i}: {} vs {} not bitwise identical",
+                va[i],
+                vb[i]
+            );
+        }
+    }
+}
+
+/// Store + swap warmed for `cfg`'s adapters under a fresh tempdir.
+fn setup(tag: &str, cfg: &WorkloadCfg) -> (SharedAdapterStore, SharedSwap, std::path::PathBuf) {
+    let dir = tmpdir(tag);
+    let store = SharedAdapterStore::with_shards(&dir, 4, 32).unwrap();
+    workload::populate_store(&store, cfg).unwrap();
+    let swap = SharedSwap::with_shards(workload::site_dims(cfg), 4, 32);
+    (store, swap, dir)
+}
+
+// --- tentpole: overload sheds, deterministically ---------------------------
+
+/// A 16× burst against an 8-tick virtual server with an 8-deep queue must
+/// shed, and everything observable — which ids are answered, which ids
+/// are shed, and the answered logits — must be bitwise identical across
+/// the sequential oracle, {1, 4} workers, and a 4-worker re-run.
+#[test]
+fn open_loop_overload_sheds_and_stays_bitwise_deterministic() {
+    let cfg = WorkloadCfg { adapters: 8, requests: 200, ..WorkloadCfg::small() };
+    let ol = OpenLoopCfg {
+        kind: ArrivalKind::Burst,
+        burst_factor: 16.0,
+        ..OpenLoopCfg::poisson(400.0, 64)
+    };
+    let adm = AdmissionCfg { service_ticks: 8, queue_depth: 8, ..AdmissionCfg::default() };
+    let (store, swap, dir) = setup("det", &cfg);
+    let timed = || workload::gen_arrivals(&ol, workload::gen_requests(&cfg).unwrap()).unwrap();
+    let sched = |workers: usize| SchedCfg {
+        workers,
+        max_batch: 8,
+        max_wait_ticks: 32,
+        queue_cap: 64,
+        apply: ApplyMode::Dense,
+    };
+
+    let (seq, s0) =
+        serve_open_loop_sequential_host(&swap, &store, timed(), ApplyMode::Dense, &adm).unwrap();
+    let (r1, s1) = serve_open_loop_host(&swap, &store, timed(), &sched(1), &adm).unwrap();
+    let (r4, s4) = serve_open_loop_host(&swap, &store, timed(), &sched(4), &adm).unwrap();
+    let (r4b, s4b) = serve_open_loop_host(&swap, &store, timed(), &sched(4), &adm).unwrap();
+
+    // Overload really shed, but did not collapse: some work was answered.
+    assert_eq!(s1.offered, 200, "every generated request is offered");
+    assert!(s1.shed > 0, "16x burst against queue_depth 8 must shed");
+    assert!(!r1.is_empty(), "shedding must not starve admitted work");
+    assert_eq!(s1.requests + s1.shed, s1.offered, "admitted + shed covers offered");
+    assert_eq!(s1.shed, s1.shed_queue_full + s1.shed_rate_limited, "shed reasons sum");
+    assert_eq!(s1.chan_drops, 0, "no response may be dropped on a closed channel");
+    // The flush ledger stays closed under the new deadline-flush kind.
+    assert_eq!(
+        s1.batches,
+        s1.full_flushes + s1.wait_flushes + s1.final_flushes + s1.deadline_flushes,
+        "every batch is exactly one flush"
+    );
+
+    // Admitted responses are bitwise identical everywhere.
+    assert_bitwise_equal(&seq, &r1, "sequential vs 1-worker");
+    assert_bitwise_equal(&r1, &r4, "1-worker vs 4-worker");
+    assert_bitwise_equal(&r4, &r4b, "4-worker run vs re-run");
+
+    // The shed id set is non-empty, sorted, duplicate-free, and identical
+    // across the oracle, worker counts, and the re-run.
+    assert!(!s1.shed_ids.is_empty());
+    assert!(s1.shed_ids.windows(2).all(|w| w[0] < w[1]), "shed ids sorted + unique");
+    assert_eq!(s0.shed_ids, s1.shed_ids, "sequential vs 1-worker shed set");
+    assert_eq!(s1.shed_ids, s4.shed_ids, "1-worker vs 4-worker shed set");
+    assert_eq!(s4.shed_ids, s4b.shed_ids, "4-worker run vs re-run shed set");
+
+    // Answered ∪ shed partitions the offered id space exactly.
+    let mut ids: HashSet<u64> = r1.iter().map(|&(id, _)| id).collect();
+    assert_eq!(ids.len(), r1.len(), "answered ids unique");
+    for id in &s1.shed_ids {
+        assert!(ids.insert(*id), "id {id} both answered and shed");
+    }
+    assert_eq!(ids.len(), 200, "answered + shed covers every offered id");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --- per-tenant rate limits ------------------------------------------------
+
+/// With a per-tenant budget far under the hot tenant's Zipf share and a
+/// queue too deep to matter, all shedding is rate-limit shedding, it
+/// lands on the hot tenant, and at least one tail tenant flows untouched.
+#[test]
+fn open_loop_rate_limit_sheds_hot_tenant_not_the_tail() {
+    let cfg = WorkloadCfg { adapters: 6, requests: 240, zipf_s: 1.6, ..WorkloadCfg::small() };
+    let ol = OpenLoopCfg::poisson(50.0, 400);
+    let adm = AdmissionCfg {
+        service_ticks: 1,
+        queue_depth: 100_000,
+        tenant_rate_per_ktick: 20.0,
+        tenant_burst: 4.0,
+        flush_slack_ticks: 8,
+    };
+    let (store, swap, dir) = setup("rate", &cfg);
+    let sched = SchedCfg {
+        workers: 2,
+        max_batch: 8,
+        max_wait_ticks: 32,
+        queue_cap: 64,
+        apply: ApplyMode::Dense,
+    };
+    let queue = workload::gen_requests(&cfg).unwrap();
+    let hot = workload::adapter_name(0);
+    let offered_hot = queue.iter().filter(|r| r.adapter == hot).count();
+    let timed = workload::gen_arrivals(&ol, queue).unwrap();
+    let (results, stats) = serve_open_loop_host(&swap, &store, timed, &sched, &adm).unwrap();
+
+    assert!(stats.shed_rate_limited > 0, "hot tenant must exceed its budget");
+    assert_eq!(stats.shed_queue_full, 0, "queue_depth 100k must never fill");
+    assert_eq!(stats.requests + stats.shed, stats.offered);
+    assert_eq!(results.len(), stats.requests);
+
+    // The hot tenant is throttled, not blackholed.
+    let hot_shed = stats
+        .per_tenant_shed
+        .iter()
+        .find(|(t, _)| *t == hot)
+        .map(|&(_, c)| c)
+        .expect("the Zipf head must appear in per-tenant shed counts");
+    assert!(hot_shed > 0 && hot_shed < offered_hot, "hot tenant throttled, not blackholed");
+
+    // Some served tenant never shed at all — the tail is unharmed.
+    let shed_tenants: HashSet<&str> =
+        stats.per_tenant_shed.iter().map(|(t, _)| t.as_str()).collect();
+    assert!(
+        stats.per_adapter.iter().any(|(t, _)| !shed_tenants.contains(t.as_str())),
+        "at least one tail tenant must flow entirely under its rate budget"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --- deadline flushes bound the tail ---------------------------------------
+
+/// Hot-key storm: 9 of every 10 requests hit one adapter, so size/wait
+/// flushes (max_batch 1000, max_wait 100k ticks) would hold the batch
+/// open forever. Only the deadline rule fires, and it bounds every
+/// tenant's virtual p99 under the 12-tick deadline — goodput is 100%.
+#[test]
+fn open_loop_deadline_flush_bounds_tail_latency_in_hot_key_storm() {
+    let cfg = WorkloadCfg { adapters: 2, requests: 80, ..WorkloadCfg::small() };
+    let (store, swap, dir) = setup("storm", &cfg);
+    let (hot, tail) = (workload::adapter_name(0), workload::adapter_name(1));
+    let timed: Vec<TimedRequest> = workload::gen_requests(&cfg)
+        .unwrap()
+        .into_iter()
+        .enumerate()
+        .map(|(i, mut req)| {
+            req.adapter = if i % 10 == 9 { tail.clone() } else { hot.clone() };
+            TimedRequest { arrive_tick: i as u64, deadline_tick: i as u64 + 12, req }
+        })
+        .collect();
+    let sched = SchedCfg {
+        workers: 2,
+        max_batch: 1000,
+        max_wait_ticks: 100_000,
+        queue_cap: 1000,
+        apply: ApplyMode::Dense,
+    };
+    let adm = AdmissionCfg {
+        service_ticks: 1,
+        queue_depth: 100_000,
+        flush_slack_ticks: 4,
+        ..AdmissionCfg::default()
+    };
+    let (results, stats) = serve_open_loop_host(&swap, &store, timed, &sched, &adm).unwrap();
+
+    assert_eq!(results.len(), 80, "nothing sheds at service 1 / depth 100k");
+    assert!(stats.deadline_flushes > 0, "only the deadline rule can flush this storm");
+    assert_eq!(stats.full_flushes, 0, "max_batch 1000 never fills");
+    assert_eq!(stats.wait_flushes, 0, "max_wait 100k ticks never expires");
+    assert_eq!(stats.batches, stats.deadline_flushes + stats.final_flushes);
+
+    // Every tenant's virtual p99 sits under deadline - arrive = 12 ticks;
+    // with slack 4 the flush fires 8 ticks after the oldest arrival.
+    for (tenant, lats) in stats.vlat_by_tenant() {
+        assert!(!lats.is_empty(), "{tenant}: no recorded virtual latencies");
+        let p99 = stats.tenant_vlat_percentile(&tenant, 99.0);
+        assert!(p99 <= 12.0, "{tenant}: virtual p99 {p99} ticks blows the 12-tick deadline");
+    }
+    assert!(stats.tenant_vlat_percentile(&tail, 99.0) <= 12.0, "the 10% tail is not starved");
+    assert_eq!(stats.goodput, 80, "every flush lands inside its deadline");
+    assert_eq!(stats.deadline_misses, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --- closed wrap is a no-op ------------------------------------------------
+
+/// `--arrival closed` through the open-loop entry point must match the
+/// closed-loop scheduler exactly: same logits bitwise, no shedding, no
+/// deadline flushes, and an identical flush ledger.
+#[test]
+fn open_loop_closed_wrap_matches_the_closed_loop_scheduler_bitwise() {
+    let cfg = WorkloadCfg { adapters: 6, requests: 48, ..WorkloadCfg::small() };
+    let (store, swap, dir) = setup("closed", &cfg);
+    let sched = SchedCfg {
+        workers: 4,
+        max_batch: 4,
+        max_wait_ticks: 8,
+        queue_cap: 16,
+        apply: ApplyMode::Dense,
+    };
+    // Positional arrival ticks advance 1/request while the virtual server
+    // drains 1 per service_ticks, so the backlog grows ~7 ticks/request;
+    // the closed wrap must never shed, hence the effectively-infinite
+    // queue. Rate limits stay off (the Default).
+    let adm = AdmissionCfg { queue_depth: 1_000_000, ..AdmissionCfg::default() };
+    let ol = OpenLoopCfg { kind: ArrivalKind::Closed, ..OpenLoopCfg::poisson(100.0, 8) };
+
+    let gen = || workload::gen_requests(&cfg).unwrap();
+    let (closed, sc) = serve_scheduled_host(&swap, &store, gen(), &sched).unwrap();
+    let timed = workload::gen_arrivals(&ol, gen()).unwrap();
+    let (open, so) = serve_open_loop_host(&swap, &store, timed, &sched, &adm).unwrap();
+
+    assert_bitwise_equal(&closed, &open, "closed-loop vs open-loop closed wrap");
+    assert_eq!(so.shed, 0, "the closed wrap must never shed");
+    assert!(so.shed_ids.is_empty());
+    assert_eq!(so.deadline_flushes, 0, "no deadlines, no deadline flushes");
+    assert_eq!(so.offered, sc.requests);
+    assert_eq!(so.requests, sc.requests);
+    assert_eq!(so.full_flushes, sc.full_flushes, "size-flush ledger must match");
+    assert_eq!(so.wait_flushes, sc.wait_flushes, "wait-flush ledger must match");
+    assert_eq!(so.final_flushes, sc.final_flushes, "final-flush ledger must match");
+    assert_eq!(so.batches, sc.batches);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --- adversarial: publish storm during a burst -----------------------------
+
+/// The pipeline republishes every adapter at every wave edge while a 16×
+/// burst overloads a 6-deep admission queue. Pins, shed ids, and served
+/// logits must be identical across {1, 4} serve workers and a re-run,
+/// and the surviving requests must replay bitwise from their pins.
+#[test]
+fn open_loop_publish_storm_during_burst_is_reproducible() {
+    let job = SyntheticJob {
+        method: "fourierft".into(),
+        sites: vec![SiteSpec { name: "blk0.attn.wq.w".into(), d1: 16, d2: 16 }],
+        hp: MethodHp { n: 8, rank: 2, init_std: 1.0 },
+        entry_seed: 2024,
+        alpha: 8.0,
+        seed: 77,
+    };
+    let wl = WorkloadCfg { adapters: 4, requests: 96, dim: 16, batch: 2, ..WorkloadCfg::small() };
+    let cfg = |serve_workers: usize| PipelineCfg {
+        serve_workers,
+        adapters: 4,
+        requests: 96,
+        publish_every: 24,
+        republish_per_wave: 4,
+        serve_apply: ApplyMode::Dense,
+        arrival: Some(OpenLoopCfg {
+            kind: ArrivalKind::Burst,
+            burst_factor: 16.0,
+            ..OpenLoopCfg::poisson(400.0, 48)
+        }),
+        admission: AdmissionCfg { service_ticks: 6, queue_depth: 6, ..AdmissionCfg::default() },
+        ..PipelineCfg::small()
+    };
+    let run = |tag: &str, workers: usize| {
+        let dims = [("blk0.attn.wq.w".to_string(), (16usize, 16usize))].into_iter().collect();
+        let pipe = Pipeline::open(&tmpdir(tag), dims, 4, 4).unwrap();
+        let queue = workload::gen_requests(&wl).unwrap();
+        let report = pipe.run(&cfg(workers), &job, queue.clone()).unwrap();
+        (report, queue, pipe)
+    };
+
+    let (r1, q1, p1) = run("ps1", 1);
+    let (r4, _, _) = run("ps4", 4);
+    let (r4b, _, _) = run("ps4b", 4);
+
+    // The storm really happened: overload shed every wave, and more
+    // publishes landed than there are adapters.
+    assert!(r1.stats.shed > 0, "burst against queue_depth 6 must shed");
+    assert_eq!(r1.results.len() + r1.stats.shed, 96, "answered + shed covers the queue");
+    assert_eq!(r1.publishes.len(), 16, "4 initial + 4 republished per wave edge");
+    assert_eq!(r1.waves, 4);
+
+    // Reproducibility across workers and re-runs: pins, shed ids, logits.
+    assert_eq!(r1.pins, r4.pins, "pins must not depend on worker count");
+    assert_eq!(r4.pins, r4b.pins, "pins must not depend on the run");
+    assert_eq!(r1.stats.shed_ids, r4.stats.shed_ids, "shed set vs worker count");
+    assert_eq!(r4.stats.shed_ids, r4b.stats.shed_ids, "shed set vs re-run");
+    assert_bitwise_equal(&r1.results, &r4.results, "1-worker vs 4-worker");
+    assert_bitwise_equal(&r4.results, &r4b.results, "4-worker run vs re-run");
+
+    // Shed requests were still pinned (admission pins before shedding),
+    // and the pin list covers the whole queue in id order.
+    assert_eq!(r1.pins.len(), 96, "every request is pinned, shed or not");
+    let pinned: HashSet<u64> = r1.pins.iter().map(|&(id, _)| id).collect();
+    for id in &r1.stats.shed_ids {
+        assert!(pinned.contains(id), "shed id {id} must still carry a pin");
+    }
+
+    // Survivors replay bitwise from their pinned versions.
+    let shed: HashSet<u64> = r1.stats.shed_ids.iter().copied().collect();
+    let survivors: Vec<_> = q1.iter().filter(|r| !shed.contains(&r.id)).cloned().collect();
+    let replayed = p1.replay(&survivors, &r1.pins, ApplyMode::Dense).unwrap();
+    assert_bitwise_equal(&r1.results, &replayed, "served vs sequential replay of survivors");
+}

@@ -69,7 +69,7 @@ fn run_lifecycle(tag: &str, serve_workers: usize) -> (PipelineReport, Vec<Reques
     let pipe =
         Pipeline::open(&tmpdir(tag), meta.site_dims(), cfg.adapters, cfg.keep_versions).unwrap();
     let job = EngineTrainJob::new(&trainer, &cfg.artifact, cfg.steps, cfg.seed);
-    let queue = workload::gen_requests(&pipeline::workload_cfg(&cfg, dim));
+    let queue = workload::gen_requests(&pipeline::workload_cfg(&cfg, dim)).unwrap();
     let report = pipe.run(&cfg, &job, queue.clone()).unwrap();
     (report, queue, pipe)
 }
@@ -167,7 +167,7 @@ fn pipeline_lifecycle_rollback_restores_bitwise_prior_outputs() {
         apply: ApplyMode::Dense,
     };
     let serve_pinned = |pipe: &Pipeline| {
-        let mut q = workload::gen_requests(&wl);
+        let mut q = workload::gen_requests(&wl).unwrap();
         let pin = pipe.pin_map().unwrap();
         workload::pin_requests(&mut q, |n| pin.get(n).copied());
         serve_scheduled_host(&pipe.swap, &pipe.store, q, &sched).unwrap().0
@@ -229,7 +229,7 @@ fn pipeline_serves_every_builtin_method_versioned() {
             batch: 2,
             ..WorkloadCfg::small()
         };
-        let mut q = workload::gen_requests(&wl);
+        let mut q = workload::gen_requests(&wl).unwrap();
         let pin = pipe.pin_map().unwrap();
         workload::pin_requests(&mut q, |n| pin.get(n).copied());
         let sched = SchedCfg {

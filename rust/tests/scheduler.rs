@@ -98,15 +98,11 @@ fn sched_deterministic_across_runs_and_worker_counts() {
         queue_cap: 64,
         apply: ApplyMode::Dense,
     };
-    let (seq, seq_stats) =
-        serve_sequential_host(&swap, &store, workload::gen_requests(&cfg), ApplyMode::Dense)
-            .unwrap();
-    let (r1, s1) =
-        serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sched(1)).unwrap();
-    let (r4, s4) =
-        serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sched(4)).unwrap();
-    let (r4b, s4b) =
-        serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sched(4)).unwrap();
+    let gen = || workload::gen_requests(&cfg).unwrap();
+    let (seq, seq_stats) = serve_sequential_host(&swap, &store, gen(), ApplyMode::Dense).unwrap();
+    let (r1, s1) = serve_scheduled_host(&swap, &store, gen(), &sched(1)).unwrap();
+    let (r4, s4) = serve_scheduled_host(&swap, &store, gen(), &sched(4)).unwrap();
+    let (r4b, s4b) = serve_scheduled_host(&swap, &store, gen(), &sched(4)).unwrap();
 
     // identical (request id -> logits) mapping, bitwise, across the
     // sequential baseline, worker counts, and repeated runs
@@ -148,11 +144,9 @@ fn sched_deterministic_under_adversarial_arrival() {
         queue_cap: 16,
         apply: ApplyMode::Dense,
     };
-    let (seq, _) =
-        serve_sequential_host(&swap, &store, workload::gen_requests(&cfg), ApplyMode::Dense)
-            .unwrap();
-    let (par, stats) =
-        serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sc).unwrap();
+    let gen = || workload::gen_requests(&cfg).unwrap();
+    let (seq, _) = serve_sequential_host(&swap, &store, gen(), ApplyMode::Dense).unwrap();
+    let (par, stats) = serve_scheduled_host(&swap, &store, gen(), &sc).unwrap();
     assert_bitwise_equal(&seq, &par, "round-robin arrival");
     assert_eq!(total_per_adapter(&stats), cfg.requests);
     assert!(stats.queue_depth_peak <= sc.queue_cap);
@@ -185,7 +179,7 @@ fn sched_publish_invalidation_rebuilds_from_new_bytes() {
     };
 
     // Phase 1: serve; `hot` becomes the worker's active adapter.
-    let queue1 = workload::gen_requests(&cfg);
+    let queue1 = workload::gen_requests(&cfg).unwrap();
     let hot_ids: Vec<u64> =
         queue1.iter().filter(|r| r.adapter == hot).map(|r| r.id).collect();
     assert!(!hot_ids.is_empty(), "workload must exercise the hot adapter");
@@ -304,18 +298,11 @@ fn sched_deterministic_for_every_registered_method() {
             queue_cap: 16,
             apply: ApplyMode::Dense,
         };
-        let (seq, _) =
-            serve_sequential_host(&swap, &store, workload::gen_requests(&cfg), ApplyMode::Dense)
-                .unwrap();
-        let (r1, _) =
-            serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sched(1))
-                .unwrap();
-        let (r4, _) =
-            serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sched(4))
-                .unwrap();
-        let (r4b, _) =
-            serve_scheduled_host(&swap, &store, workload::gen_requests(&cfg), &sched(4))
-                .unwrap();
+        let gen = || workload::gen_requests(&cfg).unwrap();
+        let (seq, _) = serve_sequential_host(&swap, &store, gen(), ApplyMode::Dense).unwrap();
+        let (r1, _) = serve_scheduled_host(&swap, &store, gen(), &sched(1)).unwrap();
+        let (r4, _) = serve_scheduled_host(&swap, &store, gen(), &sched(4)).unwrap();
+        let (r4b, _) = serve_scheduled_host(&swap, &store, gen(), &sched(4)).unwrap();
         assert_bitwise_equal(&seq, &r1, &format!("{method}: sequential vs 1-worker"));
         assert_bitwise_equal(&r1, &r4, &format!("{method}: 1-worker vs 4-worker"));
         assert_bitwise_equal(&r4, &r4b, &format!("{method}: 4-worker run vs re-run"));
@@ -344,7 +331,7 @@ fn sched_stress_zipf500_warm_cache_and_bitwise_parity() {
     }
     let swap = SharedSwap::with_shards(workload::site_dims(&cfg), 8, 128);
 
-    let queue = workload::gen_requests(&cfg);
+    let queue = workload::gen_requests(&cfg).unwrap();
     let distinct: std::collections::HashSet<&String> =
         queue.iter().map(|r| &r.adapter).collect();
     let sc = SchedCfg {

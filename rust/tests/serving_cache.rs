@@ -10,8 +10,8 @@
 //! * publishing under the same name invalidates the caches and the next
 //!   swap sees the new coefficients.
 
-use fourier_peft::adapter::{AdapterFile, AdapterStore};
-use fourier_peft::coordinator::serving::SwapCache;
+use fourier_peft::adapter::{AdapterFile, AdapterStore, SharedAdapterStore};
+use fourier_peft::coordinator::serving::{SharedSwap, SwapCache};
 use fourier_peft::fourier::plan;
 use fourier_peft::tensor::{rng::Rng, Tensor};
 use std::collections::BTreeMap;
@@ -339,6 +339,95 @@ fn invalidate_and_clear_drop_both_layers_and_keep_order_consistent() {
     swap.deltas(&mut store, "a").unwrap();
     assert_eq!(swap.stats.delta_builds, builds + 1);
     assert_eq!(swap.resident(), vec!["a".to_string()]);
+}
+
+// --- sharded vs unsharded peak accounting (merge bugfix) ------------------
+
+/// `SwapCacheStats::merge` used to SUM per-shard `peak_bytes`, reporting
+/// a "peak" no single moment ever reached. The shared counters now track
+/// the true cross-shard high-water mark: the same single-threaded access
+/// sequence must report the same peak no matter how many shards the
+/// cache is split into.
+#[test]
+fn sharded_and_unsharded_caches_agree_on_peak_bytes() {
+    let (sites, d, n) = (2, 32, 16);
+    let names: Vec<String> = (0..6).map(|i| format!("ad{i}")).collect();
+    let store = SharedAdapterStore::with_shards(&tmpdir("peak"), 4, 32).unwrap();
+    let mut rng = Rng::new(0x9EAC);
+    for name in &names {
+        store.save(name, &fourierft_adapter(&mut rng, sites, n, 2024)).unwrap();
+    }
+
+    let drive = |swap: &SharedSwap| {
+        for name in &names {
+            swap.deltas(&store, name).unwrap();
+        }
+        // Monotone fill: the peak is exactly the current residency.
+        let s = swap.stats();
+        assert_eq!(s.peak_bytes, s.delta_bytes + s.factor_bytes);
+        // Drop half and rebuild: residency dips and returns — the peak
+        // must hold at the full-residency high-water mark, not grow.
+        for name in names.iter().take(3) {
+            swap.invalidate(name);
+        }
+        for name in names.iter().take(3) {
+            swap.deltas(&store, name).unwrap();
+        }
+        swap.stats()
+    };
+
+    let sharded = drive(&SharedSwap::with_shards(site_dims(sites, d), 4, 64));
+    let single = drive(&SharedSwap::with_shards(site_dims(sites, d), 1, 64));
+    assert!(sharded.peak_bytes > 0);
+    assert_eq!(
+        sharded.peak_bytes, single.peak_bytes,
+        "peak residency must not depend on shard count"
+    );
+    assert_eq!(sharded.delta_bytes, single.delta_bytes);
+    assert_eq!(sharded.factor_bytes, single.factor_bytes);
+}
+
+/// The overstatement the old merge produced, demonstrated live: one ΔW
+/// resident at a time, alternating between two shards — the sum of
+/// per-shard peaks (the old formula) is double the true peak.
+#[test]
+fn summed_per_shard_peaks_overstate_the_true_peak() {
+    let (sites, d, n) = (1, 24, 8);
+    let store = SharedAdapterStore::with_shards(&tmpdir("overstate"), 4, 32).unwrap();
+    let mut rng = Rng::new(0x0E55);
+    store.save("first", &fourierft_adapter(&mut rng, sites, n, 2024)).unwrap();
+
+    // Shard assignment is a pure function of the name: probe with
+    // throwaway swaps to find a name living in a different shard.
+    let dims = || site_dims(sites, d);
+    let shard_of = |name: &str| {
+        let probe = SharedSwap::with_shards(dims(), 8, 64);
+        probe.deltas(&store, name).unwrap();
+        probe.shard_stats().iter().position(|s| s.delta_bytes > 0).unwrap()
+    };
+    let home = shard_of("first");
+    let other = (0..64)
+        .map(|i| format!("probe{i}"))
+        .find(|cand| {
+            store.save(cand, &fourierft_adapter(&mut rng, sites, n, 2024)).unwrap();
+            shard_of(cand) != home
+        })
+        .expect("some probe name must hash to another shard");
+
+    let swap = SharedSwap::with_shards(dims(), 8, 64);
+    swap.deltas(&store, "first").unwrap();
+    let one = swap.stats().peak_bytes;
+    assert!(one > 0);
+    swap.invalidate("first");
+    swap.deltas(&store, &other).unwrap();
+
+    // Same geometry both times, never resident together: the true peak
+    // stays at one ΔW while each shard's local peak is also one ΔW.
+    let stats = swap.stats();
+    assert_eq!(stats.peak_bytes, one, "true peak: one ΔW resident at a time");
+    let summed: u64 = swap.shard_stats().iter().map(|s| s.peak_bytes).sum();
+    assert_eq!(summed, 2 * one, "the old sum-of-peaks formula doubles it");
+    assert!(summed > stats.peak_bytes);
 }
 
 #[test]
