@@ -1,0 +1,73 @@
+//! Cluster scale-out benchmark (`cargo bench --bench cluster`).
+//!
+//! Serves the zipf500 Poisson open-loop workload on simulated clusters
+//! of 1 / 2 / 4 nodes (replicas 2, 4 workers per node) and reports:
+//!
+//! * `cluster/scaleout/zipf500_n{1,2,4}` — wall time of one full serve
+//!   wave (sequential node execution: this is total simulation cost,
+//!   ≈ constant across node counts since total work is constant);
+//! * `cluster/scaleout/goodput_ratio_n{2,4}` — the scale-out figure of
+//!   merit: goodput per second of cluster *makespan* (max per-node wall
+//!   — each simulated node notionally owns a whole machine), relative
+//!   to the single-node baseline. The cluster-smoke CI job gates
+//!   `n4 ≥ 1.5×`; placement balance puts the expectation near `1/max
+//!   node share ≈ 3×` at zipf 1.1 skew.
+//!
+//! Every serve wave is the same pinned request set — the response
+//! digests agree across node counts (gated in CI via the `repro
+//! cluster` CLI), so the rows compare identical work, not merely
+//! similar work.
+
+use fourier_peft::cluster::{Cluster, ClusterCfg};
+use fourier_peft::coordinator::scheduler::{AdmissionCfg, ApplyMode, SchedCfg};
+use fourier_peft::coordinator::workload::{self, OpenLoopCfg, WorkloadCfg};
+use fourier_peft::util::bench::Bench;
+use fourier_peft::util::median;
+
+fn main() -> anyhow::Result<()> {
+    let qb = Bench { warmup: 1, samples: 3 };
+    let wl = WorkloadCfg::zipf500();
+    // Sustainable Poisson load (matches `serving/open_loop/poisson_w4`):
+    // the rows price routing + serving, not the shed path.
+    let ol = OpenLoopCfg::poisson(40.0, 4096);
+    let adm = AdmissionCfg { service_ticks: 16, queue_depth: 4096, ..AdmissionCfg::default() };
+    let sched = SchedCfg { workers: 4, apply: ApplyMode::Auto, ..SchedCfg::default() };
+    let arrivals = workload::gen_arrivals(&ol, workload::gen_requests(&wl)?)?;
+
+    let mut goodput_rps = Vec::new();
+    for n in [1usize, 2, 4] {
+        let dir = std::env::temp_dir()
+            .join(format!("fp_bench_cluster_n{n}_{}", std::process::id()));
+        let cluster = Cluster::build(&dir, &wl, ClusterCfg::new(n, n.min(2)))?;
+        let mut rates = Vec::new();
+        qb.run(&format!("cluster/scaleout/zipf500_n{n}"), || {
+            let (_, stats) = cluster.serve_open_loop(arrivals.clone(), &sched, &adm).unwrap();
+            rates.push(stats.goodput_rps());
+        });
+        let (_, stats) = cluster.serve_open_loop(arrivals.clone(), &sched, &adm)?;
+        println!(
+            "{:<44} makespan {:.3}s (node-seconds {:.3})  goodput {}/{}  \
+             failovers {}  promoted {}  synced {}",
+            format!("cluster/scaleout/counters_n{n}"),
+            stats.wall_max_seconds,
+            stats.total.wall_seconds,
+            stats.total.goodput,
+            stats.total.offered,
+            stats.failovers,
+            stats.promoted.len(),
+            stats.synced,
+        );
+        goodput_rps.push(median(&rates));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    let base = goodput_rps[0].max(f64::MIN_POSITIVE);
+    for (i, n) in [2usize, 4].into_iter().enumerate() {
+        println!(
+            "{:<44} {:.2}x (goodput per makespan-second vs n1)",
+            format!("cluster/scaleout/goodput_ratio_n{n}"),
+            goodput_rps[i + 1] / base,
+        );
+    }
+    Ok(())
+}

@@ -42,14 +42,10 @@ pub const VERSION_SEP: char = '@';
 /// Subdirectory holding the immutable per-version history copies.
 const VERSIONS_DIR: &str = ".versions";
 
-/// Stable shard index for an adapter name: FNV-1a over the name bytes,
-/// reduced mod `shards`. Used by both [`SharedAdapterStore`] and the
-/// serving swap cache so a name's cached state always lives in exactly
-/// one shard.
-pub fn shard_index(name: &str, shards: usize) -> usize {
-    debug_assert!(shards > 0);
-    (crate::util::fnv64(name) % shards as u64) as usize
-}
+// The stable name-shard hash moved to `util::hash` (one FNV-1a for shard
+// routing, the cluster placement ring, and the CI digests); re-exported
+// here because the serving layer and tests import it from the store.
+pub use crate::util::hash::shard_index;
 
 /// Split a possibly-versioned ref into (base name, pinned version).
 /// `"a@3"` → `("a", Some(3))`; `"a"` (or a malformed suffix) → the whole
@@ -167,6 +163,33 @@ impl AdapterStore {
         self.touch(name, stamped);
         let removed = self.gc_versions(name)?;
         Ok((version, bytes, removed))
+    }
+
+    /// Adopt an already-stamped version of `name` replicated from another
+    /// store (cluster rebalance / replica sync): write the immutable
+    /// history copy at the file's stamped version and, when that version
+    /// is not older than the local current, atomically repoint the bare
+    /// name. Unlike [`AdapterStore::publish`] the version number is the
+    /// **caller's** — replicas must agree on numbering, so sync never
+    /// re-stamps. Returns the installed version.
+    pub fn install_version(&mut self, name: &str, adapter: &AdapterFile) -> Result<u64> {
+        ensure!(
+            !name.contains(VERSION_SEP),
+            "cannot install into '{name}': '{VERSION_SEP}' is reserved for version refs"
+        );
+        ensure!(
+            adapter.version > 0,
+            "install_version('{name}') needs a published (version-stamped) file"
+        );
+        adapter.save(&self.version_path(name, adapter.version))?;
+        let cur = self.load(name).map(|f| f.version).unwrap_or(0);
+        if adapter.version >= cur {
+            let tmp = self.dir.join(format!(".{name}.adapter.tmp"));
+            adapter.save(&tmp)?;
+            std::fs::rename(&tmp, self.dir.join(format!("{name}.adapter")))?;
+            self.touch(name, adapter.clone());
+        }
+        Ok(adapter.version)
     }
 
     /// Retained history versions of `name`, ascending. Empty for adapters
@@ -418,8 +441,17 @@ impl SharedAdapterStore {
     /// primitive everything else routes through; callers composing multiple
     /// operations atomically per name (e.g. the swap cache's
     /// load-and-build) use it directly.
+    ///
+    /// Poison-tolerant: a worker that panicked while holding a shard lock
+    /// (e.g. one node of a cluster simulation dying mid-batch) must not
+    /// cascade-poison every later serve on the store. The store's state is
+    /// a cache over immutable on-disk files, so the worst a half-applied
+    /// mutation can leave behind is a droppable cache entry — recovery via
+    /// [`std::sync::PoisonError::into_inner`] is safe.
     pub fn with_shard<R>(&self, name: &str, f: impl FnOnce(&mut AdapterStore) -> R) -> R {
-        let mut guard = self.shards[self.shard_of(name)].lock().unwrap();
+        let mut guard = self.shards[self.shard_of(name)]
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         f(&mut guard)
     }
 
@@ -446,6 +478,18 @@ impl SharedAdapterStore {
             self.with_shard(&r, |s| s.invalidate(&r));
         }
         Ok((version, bytes))
+    }
+
+    /// Adopt an already-stamped version replicated from another store
+    /// (see [`AdapterStore::install_version`]); runs under the owning
+    /// shard's lock, then drops the versioned ref's stale cache entry
+    /// from the shard that owns *it* (versioned refs hash independently
+    /// of their base name).
+    pub fn install_version(&self, name: &str, adapter: &AdapterFile) -> Result<u64> {
+        let version = self.with_shard(name, |s| s.install_version(name, adapter))?;
+        let r = versioned_ref(name, version);
+        self.with_shard(&r, |s| s.invalidate(&r));
+        Ok(version)
     }
 
     /// Retained history versions of `name`, ascending.
@@ -487,22 +531,22 @@ impl SharedAdapterStore {
 
     /// Disk reads across all shards (every decode-cache miss is one).
     pub fn disk_reads(&self) -> u64 {
-        self.shards.iter().map(|s| s.lock().unwrap().disk_reads()).sum()
+        self.shards.iter().map(|s| crate::util::lock_recover(s).disk_reads()).sum()
     }
 
     /// Decode-cache hits across all shards.
     pub fn cache_hits(&self) -> u64 {
-        self.shards.iter().map(|s| s.lock().unwrap().hits).sum()
+        self.shards.iter().map(|s| crate::util::lock_recover(s).hits).sum()
     }
 
     /// All adapters on disk, with byte sizes (directory scan; shard-free).
     pub fn list(&self) -> Result<Vec<(String, u64)>> {
-        self.shards[0].lock().unwrap().list()
+        crate::util::lock_recover(&self.shards[0]).list()
     }
 
     /// Total bytes across all stored adapters.
     pub fn total_bytes(&self) -> Result<u64> {
-        self.shards[0].lock().unwrap().total_bytes()
+        crate::util::lock_recover(&self.shards[0]).total_bytes()
     }
 }
 

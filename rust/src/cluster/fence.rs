@@ -1,0 +1,160 @@
+//! Per-adapter version fence: two-phase publish propagation.
+//!
+//! The hazard: during a publish storm, replica A may already hold `v2`
+//! of an adapter while replica B still serves `v1`. If admission pinned
+//! "whatever version the serving replica happens to have", two requests
+//! from one client could straddle generations — and worse, the *same*
+//! request would produce different bits depending on which replica the
+//! router picked, breaking the cluster's replica-invariance contract.
+//!
+//! The fence removes the hazard by splitting publish into two phases:
+//!
+//! 1. **stage** — the new version is written to every replica's store
+//!    ([`crate::adapter::AdapterStore::publish`] on the first replica
+//!    assigns the number; [`crate::adapter::AdapterStore::install_version`]
+//!    copies the identical stamped bytes to the rest). Staging is
+//!    invisible to admission: the fence still pins the old version, and
+//!    every replica retains the old version's immutable history file, so
+//!    in-flight *and* newly admitted requests keep resolving `name@old`
+//!    bitwise-identically on any replica.
+//! 2. **flip** — once every replica has acknowledged the stage, the
+//!    fence entry swaps to the new version in one map write. Requests
+//!    admitted after the flip pin `name@new`; requests admitted before
+//!    keep their `name@old` pin and still resolve it everywhere. No
+//!    request ever observes a mixed generation.
+//!
+//! [`VersionFence::flip`] refuses to flip unless the staged replica set
+//! covers the adapter's current replica assignment — a partial stage
+//! (e.g. a node failing mid-publish) leaves the fence on the old version
+//! rather than racing ahead of a replica that never got the bytes.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::lock_recover;
+
+/// The cluster's admission-visible version map plus in-flight stages.
+/// Interior mutability so serving (`&Cluster`) can read pins while a
+/// publisher thread stages; both maps are guarded by poison-tolerant
+/// locks (a publisher panic must not wedge admission).
+#[derive(Debug, Default)]
+pub struct VersionFence {
+    /// base name -> version admission pins right now.
+    current: Mutex<BTreeMap<String, u64>>,
+    /// base name -> (staged version, replica nodes that have the bytes).
+    staged: Mutex<BTreeMap<String, (u64, Vec<usize>)>>,
+}
+
+impl VersionFence {
+    pub fn new(init: impl IntoIterator<Item = (String, u64)>) -> VersionFence {
+        VersionFence {
+            current: Mutex::new(init.into_iter().collect()),
+            staged: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Version admission pins for `base` right now (`None` for unknown
+    /// adapters — the router leaves those requests unpinned).
+    pub fn pinned(&self, base: &str) -> Option<u64> {
+        lock_recover(&self.current).get(base).copied()
+    }
+
+    /// Snapshot of the whole pin map (one lock acquisition, so a serve
+    /// call pins every request of a queue against a single generation
+    /// observation).
+    pub fn pin_map(&self) -> BTreeMap<String, u64> {
+        lock_recover(&self.current).clone()
+    }
+
+    /// Phase 1 bookkeeping: record that `node` now holds `version` of
+    /// `base`. All replicas of one in-flight publish must agree on the
+    /// number (they share the first replica's stamp); a second publish
+    /// of the same adapter must not start while one is staged.
+    pub fn note_staged(&self, base: &str, version: u64, node: usize) -> Result<()> {
+        let cur = self.pinned(base).unwrap_or(0);
+        ensure!(
+            version > cur,
+            "stage of '{base}' v{version} is not ahead of the fence (current v{cur})"
+        );
+        let mut staged = lock_recover(&self.staged);
+        match staged.get_mut(base) {
+            None => {
+                staged.insert(base.to_string(), (version, vec![node]));
+            }
+            Some((v, nodes)) => {
+                ensure!(
+                    *v == version,
+                    "version fence divergence on '{base}': node {node} staged v{version} \
+                     while v{} is already in flight",
+                    *v
+                );
+                if !nodes.contains(&node) {
+                    nodes.push(node);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// In-flight stage of `base`, if any: (version, nodes holding it).
+    pub fn staged(&self, base: &str) -> Option<(u64, Vec<usize>)> {
+        lock_recover(&self.staged).get(base).cloned()
+    }
+
+    /// Phase 2: atomically repoint admission to the staged version.
+    /// Refuses unless every node in `replicas` acknowledged the stage —
+    /// a partial stage keeps serving the old generation instead of
+    /// racing ahead of a replica that never got the bytes.
+    pub fn flip(&self, base: &str, replicas: &[usize]) -> Result<u64> {
+        let mut staged = lock_recover(&self.staged);
+        let Some((version, have)) = staged.get(base).cloned() else {
+            bail!("flip of '{base}' with nothing staged");
+        };
+        let missing: Vec<usize> = replicas.iter().copied().filter(|n| !have.contains(n)).collect();
+        ensure!(
+            missing.is_empty(),
+            "cannot flip '{base}' to v{version}: replicas {missing:?} have not staged it"
+        );
+        staged.remove(base);
+        drop(staged);
+        lock_recover(&self.current).insert(base.to_string(), version);
+        Ok(version)
+    }
+
+    /// Register a new adapter (or fast-forward after a sync) without the
+    /// two-phase dance — used at cluster build where every node is
+    /// populated before serving starts.
+    pub fn set(&self, base: &str, version: u64) {
+        lock_recover(&self.current).insert(base.to_string(), version);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partial_stage_cannot_flip() {
+        let fence = VersionFence::new([("a".to_string(), 1)]);
+        fence.note_staged("a", 2, 0).unwrap();
+        let err = fence.flip("a", &[0, 1]).unwrap_err().to_string();
+        assert!(err.contains("have not staged"), "got: {err}");
+        assert_eq!(fence.pinned("a"), Some(1), "fence must stay on the old generation");
+        fence.note_staged("a", 2, 1).unwrap();
+        assert_eq!(fence.flip("a", &[0, 1]).unwrap(), 2);
+        assert_eq!(fence.pinned("a"), Some(2));
+        assert_eq!(fence.staged("a"), None, "flip consumes the stage");
+    }
+
+    #[test]
+    fn divergent_or_stale_stage_is_rejected() {
+        let fence = VersionFence::new([("a".to_string(), 3)]);
+        assert!(fence.note_staged("a", 3, 0).is_err(), "stage must be ahead of the fence");
+        fence.note_staged("a", 4, 0).unwrap();
+        let err = fence.note_staged("a", 5, 1).unwrap_err().to_string();
+        assert!(err.contains("divergence"), "got: {err}");
+        assert!(fence.flip("b", &[0]).is_err(), "nothing staged for 'b'");
+    }
+}

@@ -1,0 +1,40 @@
+//! Sharded multi-node serving cluster, simulated in one process.
+//!
+//! FourierFT's ~0.06M-parameter adapters make fleets of *millions* of
+//! per-user adapters realistic — the regime where a single-process
+//! scheduler stops being the story and placement/routing across nodes
+//! becomes the system. This layer sits above the single-node stack
+//! (PR 5 versioned lifecycle, PR 6 factored residency, PR 7 open-loop
+//! admission) and composes it unmodified:
+//!
+//! * [`placement`] — consistent-hash ring (virtual nodes, R-way
+//!   replication, Zipf-hot promotion from observed counts);
+//! * [`router`] — pin → admit globally → place: deterministic replica
+//!   pick per request, with fail-stop failover;
+//! * [`fence`] — two-phase publish propagation (stage on all replicas,
+//!   atomically flip) so no request ever observes a mixed generation;
+//! * [`sim`] — the [`Cluster`] itself: N nodes, each with its own
+//!   [`crate::adapter::SharedAdapterStore`] +
+//!   [`crate::coordinator::serving::SharedSwap`] + scheduler pool, plus
+//!   seeded failure / join / rebalance scenarios and [`ClusterStats`]
+//!   aggregation.
+//!
+//! **The determinism contract, inherited not invented:** a request
+//! pinned at admission (`name@v`) produces a bitwise-identical response
+//! regardless of which replica serves it, how many nodes exist, or what
+//! the failure schedule was (survivors only) — because every replica
+//! resolves the same immutable version file and the single-node
+//! scheduler is already bitwise-deterministic (`tests/open_loop.rs`).
+//! The shed-id set is likewise invariant: admission runs once, globally,
+//! before placement. `tests/cluster.rs` pins both across
+//! `nodes {1,2,4} × replicas {1,2}`, failure schedules, and re-runs.
+
+pub mod fence;
+pub mod placement;
+pub mod router;
+pub mod sim;
+
+pub use fence::VersionFence;
+pub use placement::{moved_keys, replica_counts, Ring};
+pub use router::{route, RoutePlan};
+pub use sim::{Cluster, ClusterCfg, ClusterStats, Node, RebalanceReport};

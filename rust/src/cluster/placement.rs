@@ -1,0 +1,211 @@
+//! Consistent-hash placement: virtual-node ring + hot-adapter promotion.
+//!
+//! Placement answers one question — *which nodes own adapter `name`?* —
+//! and must answer it identically in every process, session, and replay,
+//! because the cluster determinism contract (bitwise-identical responses
+//! regardless of node count) reduces to "the same pinned request always
+//! reaches a node holding the same immutable `name@v` bytes". Everything
+//! here is therefore a pure function of [`crate::util::hash::fnv64`]:
+//!
+//! * each node contributes `vnodes` points on the u64 circle, hashed from
+//!   a stable label (`"node{id}#vn{k}"`), so one physical node's load is
+//!   the union of many small arcs and joins/leaves move only the arcs
+//!   adjacent to the changed node's points (≈1/N of keys, the classic
+//!   consistent-hashing bound, property-tested in `tests/cluster.rs`);
+//! * a key's **primary** is the first point clockwise of `fnv64(key)`;
+//!   its **replica set** continues clockwise collecting the first R
+//!   *distinct* nodes, so replicas land on different physical nodes;
+//! * Zipf-hot adapters are promoted to extra replicas by
+//!   [`replica_counts`] from *observed* request counts — the router
+//!   spreads a hot adapter's traffic over its widened replica set while
+//!   cold adapters stay at the base replication factor.
+
+use std::collections::BTreeMap;
+
+use crate::util::hash::fnv64;
+
+/// A consistent-hash ring over physical node ids.
+///
+/// Points are `(hash, node)` pairs sorted by hash; lookups binary-search
+/// the first point at or after the key's hash (wrapping). Ties on the
+/// hash value (astronomically unlikely, but determinism must not hinge
+/// on luck) break by node id via the tuple sort.
+#[derive(Debug, Clone)]
+pub struct Ring {
+    vnodes: usize,
+    points: Vec<(u64, usize)>,
+    nodes: Vec<usize>,
+}
+
+fn vnode_point(node: usize, k: usize) -> u64 {
+    fnv64(&format!("node{node}#vn{k}"))
+}
+
+impl Ring {
+    /// Ring over `nodes` with `vnodes` points each (`vnodes` is clamped
+    /// to ≥ 1). Node ids need not be contiguous — the cluster keeps dead
+    /// nodes' ids reserved so survivors never get renumbered.
+    pub fn new(nodes: &[usize], vnodes: usize) -> Ring {
+        let mut ring = Ring { vnodes: vnodes.max(1), points: Vec::new(), nodes: Vec::new() };
+        for &n in nodes {
+            ring.add_node(n);
+        }
+        ring
+    }
+
+    /// Node ids currently on the ring, ascending.
+    pub fn nodes(&self) -> &[usize] {
+        &self.nodes
+    }
+
+    pub fn contains(&self, node: usize) -> bool {
+        self.nodes.binary_search(&node).is_ok()
+    }
+
+    /// Add a node's virtual points. No-op if already present.
+    pub fn add_node(&mut self, node: usize) {
+        if let Err(slot) = self.nodes.binary_search(&node) {
+            self.nodes.insert(slot, node);
+            self.points.extend((0..self.vnodes).map(|k| (vnode_point(node, k), node)));
+            self.points.sort_unstable();
+        }
+    }
+
+    /// Remove a node's virtual points. No-op if absent.
+    pub fn remove_node(&mut self, node: usize) {
+        if let Ok(slot) = self.nodes.binary_search(&node) {
+            self.nodes.remove(slot);
+            self.points.retain(|&(_, n)| n != node);
+        }
+    }
+
+    /// First point clockwise of `fnv64(key)` (wrapping past u64::MAX).
+    /// `None` on an empty ring.
+    pub fn primary(&self, key: &str) -> Option<usize> {
+        self.replicas(key, 1).first().copied()
+    }
+
+    /// The first `r` *distinct* nodes clockwise of the key's hash — the
+    /// key's replica set, primary first. Returns fewer than `r` nodes
+    /// when the ring has fewer than `r` nodes.
+    pub fn replicas(&self, key: &str, r: usize) -> Vec<usize> {
+        if self.points.is_empty() || r == 0 {
+            return Vec::new();
+        }
+        let h = fnv64(key);
+        let start = self.points.partition_point(|&(p, _)| p < h) % self.points.len();
+        let want = r.min(self.nodes.len());
+        let mut out = Vec::with_capacity(want);
+        for i in 0..self.points.len() {
+            let (_, node) = self.points[(start + i) % self.points.len()];
+            if !out.contains(&node) {
+                out.push(node);
+                if out.len() == want {
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Per-adapter replica counts from observed request counts: every name
+/// gets `base`; names whose count exceeds `hot_factor ×` the mean count
+/// get `base + hot_extra` (capped later by ring size in
+/// [`Ring::replicas`]). Deterministic: the counts map is ordered and the
+/// threshold is pure arithmetic. Returns only the promoted names; absent
+/// names implicitly have `base` replicas.
+pub fn replica_counts(
+    counts: &BTreeMap<String, usize>,
+    base: usize,
+    hot_extra: usize,
+    hot_factor: f64,
+) -> BTreeMap<String, usize> {
+    if counts.is_empty() || hot_extra == 0 {
+        return BTreeMap::new();
+    }
+    let mean = counts.values().sum::<usize>() as f64 / counts.len() as f64;
+    let threshold = hot_factor * mean;
+    counts
+        .iter()
+        .filter(|(_, &c)| c as f64 > threshold)
+        .map(|(name, _)| (name.clone(), base + hot_extra))
+        .collect()
+}
+
+/// Keys whose replica set gained owners going from `before` to `after`
+/// (node join, or failed-node removal): `(key, new_owners)` per moved
+/// key, where `new_owners` are the nodes in the `after` set that were
+/// not in the `before` set. The rebalance layer syncs exactly these —
+/// consistent hashing's point is that this list stays ≈ 1/N of all keys.
+pub fn moved_keys(
+    before: &Ring,
+    after: &Ring,
+    keys: &[String],
+    r: usize,
+) -> Vec<(String, Vec<usize>)> {
+    let mut out = Vec::new();
+    for key in keys {
+        let old = before.replicas(key, r);
+        let new_owners: Vec<usize> =
+            after.replicas(key, r).into_iter().filter(|n| !old.contains(n)).collect();
+        if !new_owners.is_empty() {
+            out.push((key.clone(), new_owners));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replicas_are_distinct_primary_first() {
+        let ring = Ring::new(&[0, 1, 2, 3], 32);
+        for key in ["zipf_0000", "zipf_0407", "task_rte"] {
+            let reps = ring.replicas(key, 3);
+            assert_eq!(reps.len(), 3);
+            let mut dedup = reps.clone();
+            dedup.dedup();
+            assert_eq!(dedup, reps, "replica set must be distinct nodes");
+            assert_eq!(reps[0], ring.primary(key).unwrap());
+        }
+        // More replicas than nodes: clamp, not panic.
+        assert_eq!(ring.replicas("zipf_0000", 9).len(), 4);
+    }
+
+    #[test]
+    fn empty_and_single_node_rings() {
+        let empty = Ring::new(&[], 16);
+        assert_eq!(empty.primary("x"), None);
+        assert!(empty.replicas("x", 2).is_empty());
+        let one = Ring::new(&[7], 16);
+        assert_eq!(one.primary("x"), Some(7));
+        assert_eq!(one.replicas("x", 2), vec![7]);
+    }
+
+    #[test]
+    fn add_remove_roundtrip_restores_placement() {
+        let base = Ring::new(&[0, 1, 2], 32);
+        let mut ring = base.clone();
+        ring.add_node(3);
+        ring.remove_node(3);
+        for i in 0..100 {
+            let key = format!("k{i}");
+            assert_eq!(ring.primary(&key), base.primary(&key));
+        }
+        assert_eq!(ring.nodes(), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn replica_counts_promote_only_hot_names() {
+        let counts: BTreeMap<String, usize> =
+            [("hot".into(), 900), ("warm".into(), 60), ("cold".into(), 40)].into();
+        let plan = replica_counts(&counts, 2, 1, 2.0);
+        assert_eq!(plan.get("hot"), Some(&3), "900 > 2 × mean(333) promotes");
+        assert!(!plan.contains_key("warm"));
+        assert!(!plan.contains_key("cold"));
+        assert!(replica_counts(&counts, 2, 0, 2.0).is_empty(), "hot_extra 0 disables");
+    }
+}

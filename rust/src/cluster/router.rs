@@ -1,0 +1,175 @@
+//! Admission-side request routing: pinned queue → per-node sub-queues.
+//!
+//! Ordering is the whole design: **pin → admit globally → place**.
+//!
+//! Admission runs *once*, over the full arrival sequence, with the
+//! user's [`crate::coordinator::scheduler::AdmissionCfg`] — before any
+//! placement decision. Admission is a pure function of the arrival
+//! sequence (PR 7), so the shed set — and therefore the shed-id digest
+//! the CI gate compares — is invariant to node count, replication
+//! factor, and failure schedule. Running admission per node instead
+//! would make the shed set a function of placement (each node sees a
+//! thinner arrival stream), and `--nodes 1` vs `--nodes 4` would shed
+//! different requests: exactly the non-determinism the contract forbids.
+//!
+//! Placement then routes every offered request (admitted *and* shed) to
+//! one node: shed requests are attributed to the node that would have
+//! served them, so per-node `offered`/`shed` counters sum exactly to the
+//! global figures ([`crate::cluster::ClusterStats`] relies on this).
+//!
+//! The replica pick hashes `(base name, request id)` — one adapter's
+//! traffic spreads across its replica set, hot-promoted adapters across
+//! a wider one — and fails over deterministically when the picked
+//! replica is dead at the request's arrival tick: first to the live
+//! members of the replica set, then (R=1 or all replicas dead) to the
+//! first live node on the full ring walk. Which node serves a request
+//! can depend on the failure schedule; the response bits cannot, because
+//! every candidate resolves the same immutable `name@v` file.
+
+use std::collections::{BTreeMap, HashMap};
+
+use anyhow::{ensure, Result};
+
+use crate::adapter::store::split_versioned;
+use crate::cluster::placement::Ring;
+use crate::coordinator::scheduler::ShedReason;
+use crate::coordinator::serving::TimedRequest;
+use crate::util::hash::{fnv64, fnv64_fold_u64};
+
+/// The routing outcome: one admitted sub-queue and one attributed shed
+/// list per node slot (indexed by node id; dead or unused slots hold
+/// empty vectors).
+pub struct RoutePlan {
+    /// Admitted requests per node, in arrival order.
+    pub per_node: Vec<Vec<TimedRequest>>,
+    /// Shed requests attributed to the node that would have served them.
+    pub shed_per_node: Vec<Vec<(u64, String, ShedReason)>>,
+    /// Requests whose hashed replica pick was dead at their arrival tick
+    /// and were re-routed to another live node.
+    pub failovers: usize,
+}
+
+/// Route every offered request to a node. `shed` is the global
+/// admission's shed list (`(id, tenant, reason)`); requests whose id
+/// appears there land in `shed_per_node` instead of a serve queue.
+/// `replicas` is the base replication factor, widened per adapter by the
+/// `promoted` plan ([`crate::cluster::placement::replica_counts`]).
+/// `live_at(node, tick)` is the fail-stop oracle.
+pub fn route(
+    ring: &Ring,
+    node_slots: usize,
+    queue: Vec<TimedRequest>,
+    shed: &[(u64, String, ShedReason)],
+    replicas: usize,
+    promoted: &BTreeMap<String, usize>,
+    live_at: impl Fn(usize, u64) -> bool,
+) -> Result<RoutePlan> {
+    let shed_reason: HashMap<u64, ShedReason> =
+        shed.iter().map(|&(id, _, reason)| (id, reason)).collect();
+    let mut plan = RoutePlan {
+        per_node: (0..node_slots).map(|_| Vec::new()).collect(),
+        shed_per_node: (0..node_slots).map(|_| Vec::new()).collect(),
+        failovers: 0,
+    };
+    for tr in queue {
+        let (base, _) = split_versioned(&tr.req.adapter);
+        let r = promoted.get(base).copied().unwrap_or(replicas).max(1);
+        let cands = ring.replicas(base, r);
+        ensure!(!cands.is_empty(), "cannot route '{base}': ring has no nodes");
+        let spread = fnv64_fold_u64(fnv64(base), tr.req.id);
+        let mut node = cands[(spread % cands.len() as u64) as usize];
+        if !live_at(node, tr.arrive_tick) {
+            plan.failovers += 1;
+            let live: Vec<usize> =
+                cands.iter().copied().filter(|&n| live_at(n, tr.arrive_tick)).collect();
+            node = if let Some(&n) = live.get((spread % live.len().max(1) as u64) as usize) {
+                n
+            } else {
+                // Whole replica set dead: walk the full ring for any
+                // survivor so R=1 clusters degrade instead of erroring.
+                let walk = ring.replicas(base, ring.nodes().len());
+                match walk.into_iter().find(|&n| live_at(n, tr.arrive_tick)) {
+                    Some(n) => n,
+                    None => anyhow::bail!(
+                        "no live node for '{base}' at tick {} — whole cluster is down",
+                        tr.arrive_tick
+                    ),
+                }
+            };
+        }
+        ensure!(node < node_slots, "ring node {node} outside cluster slots 0..{node_slots}");
+        match shed_reason.get(&tr.req.id) {
+            Some(&reason) => {
+                plan.shed_per_node[node].push((tr.req.id, tr.req.adapter.clone(), reason))
+            }
+            None => plan.per_node[node].push(tr),
+        }
+    }
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::serving::Request;
+    use crate::tensor::Tensor;
+
+    fn tr(id: u64, adapter: &str, tick: u64) -> TimedRequest {
+        let mut batch = crate::coordinator::trainer::Batch::new();
+        batch.insert("x".to_string(), Tensor::zeros(&[1, 2]));
+        TimedRequest {
+            arrive_tick: tick,
+            deadline_tick: tick + 64,
+            req: Request { id, adapter: adapter.to_string(), batch },
+        }
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_respects_replica_sets() {
+        let ring = Ring::new(&[0, 1, 2, 3], 32);
+        let queue: Vec<TimedRequest> =
+            (0..200).map(|i| tr(i, &format!("zipf_{:04}@1", i % 7), i)).collect();
+        let plan = route(&ring, 4, queue.clone(), &[], 2, &BTreeMap::new(), |_, _| true).unwrap();
+        let plan2 = route(&ring, 4, queue, &[], 2, &BTreeMap::new(), |_, _| true).unwrap();
+        assert_eq!(plan.failovers, 0);
+        for n in 0..4 {
+            let ids: Vec<u64> = plan.per_node[n].iter().map(|t| t.req.id).collect();
+            let ids2: Vec<u64> = plan2.per_node[n].iter().map(|t| t.req.id).collect();
+            assert_eq!(ids, ids2, "same inputs must route identically");
+            for t in &plan.per_node[n] {
+                let (base, _) = split_versioned(&t.req.adapter);
+                assert!(
+                    ring.replicas(base, 2).contains(&n),
+                    "request for {base} routed off its replica set"
+                );
+            }
+        }
+        assert_eq!(plan.per_node.iter().map(Vec::len).sum::<usize>(), 200);
+    }
+
+    #[test]
+    fn dead_replica_fails_over_to_live_one_after_its_tick() {
+        let ring = Ring::new(&[0, 1], 32);
+        let queue: Vec<TimedRequest> = (0..100).map(|i| tr(i, "zipf_0000@1", i)).collect();
+        let fail_tick = 50;
+        let alive = |n: usize, t: u64| n != 1 || t < fail_tick;
+        let plan = route(&ring, 2, queue, &[], 2, &BTreeMap::new(), alive).unwrap();
+        for t in &plan.per_node[1] {
+            assert!(t.arrive_tick < fail_tick, "dead node got a post-failure request");
+        }
+        let served: usize = plan.per_node.iter().map(Vec::len).sum();
+        assert_eq!(served, 100, "failover must not drop requests");
+    }
+
+    #[test]
+    fn shed_requests_are_attributed_not_served() {
+        let ring = Ring::new(&[0, 1], 32);
+        let queue: Vec<TimedRequest> = (0..20).map(|i| tr(i, "zipf_0001@1", i)).collect();
+        let shed = vec![(3u64, "zipf_0001@1".to_string(), ShedReason::QueueFull)];
+        let plan = route(&ring, 2, queue, &shed, 1, &BTreeMap::new(), |_, _| true).unwrap();
+        let served: usize = plan.per_node.iter().map(Vec::len).sum();
+        let attributed: usize = plan.shed_per_node.iter().map(Vec::len).sum();
+        assert_eq!((served, attributed), (19, 1));
+        assert!(plan.per_node.iter().flatten().all(|t| t.req.id != 3));
+    }
+}

@@ -1,0 +1,514 @@
+//! The simulated cluster: N nodes in one process, each a full serving
+//! stack, plus the failure / rebalance scenario machinery.
+//!
+//! Every [`Node`] owns the same trio a real serving host would — a
+//! [`SharedAdapterStore`] over its own directory, a [`SharedSwap`] cache
+//! stack, and (during a serve call) a scheduler worker pool — so the
+//! cluster layer composes *only* public single-node entry points and
+//! inherits their determinism proofs wholesale. A serve call is:
+//!
+//! 1. **pin** — one [`VersionFence::pin_map`] snapshot rewrites every
+//!    request to `name@v` (PR 5 semantics): the generation each request
+//!    will observe is fixed at admission, before placement.
+//! 2. **admit globally** — the user's [`AdmissionCfg`] runs once over
+//!    the full arrival sequence (see [`crate::cluster::router`] for why
+//!    per-node admission would break digest invariance).
+//! 3. **promote + route** — observed counts widen hot adapters' replica
+//!    sets ([`placement::replica_counts`]), missing replica bytes are
+//!    synced, and the router assigns every offered request to a node.
+//! 4. **serve per node** — each node runs
+//!    [`serve_open_loop_host`] over its sub-queue with a *never-shed*
+//!    admission config (the global pass already decided shedding; the
+//!    node keeps the caller's `service_ticks`/`flush_slack_ticks` so
+//!    virtual-time flush behavior matches the single-node path exactly).
+//!    Nodes execute sequentially — each simulated node notionally owns a
+//!    whole machine, so cluster makespan is the *max* per-node wall
+//!    ([`ClusterStats::wall_max_seconds`]), not the sum, and per-node
+//!    runs never contend for the test host's cores.
+//! 5. **aggregate** — results merge id-sorted; per-node [`ServeStats`]
+//!    fold into a cluster total via [`ServeStats::merge`] (sums for
+//!    offered/shed/goodput, maxes for `queue_depth_peak`/`peak_bytes`).
+//!
+//! Failures are fail-stop at a tick: a node with `failed_at = T` serves
+//! the requests routed to it that arrived before `T`; arrivals at or
+//! after `T` deterministically fail over to the next live replica.
+//! [`Cluster::rebalance`] then removes dead nodes from the ring and
+//! syncs exactly the keys whose replica sets changed (≈1/N — the
+//! consistent-hashing payoff), with the cold-cache refill on the new
+//! owners observable through [`SwapCacheStats`].
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::adapter::store::versioned_ref;
+use crate::adapter::{AdapterFile, SharedAdapterStore};
+use crate::cluster::fence::VersionFence;
+use crate::cluster::placement::{self, moved_keys, Ring};
+use crate::cluster::router::{self, RoutePlan};
+use crate::coordinator::scheduler::{
+    admit, serve_open_loop_host, AdmissionCfg, SchedCfg, ShedReason,
+};
+use crate::coordinator::serving::{ServeStats, SharedSwap, SwapCacheStats, TimedRequest};
+use crate::coordinator::workload::{pin_timed_requests, populate_store, site_dims, WorkloadCfg};
+use crate::tensor::Tensor;
+
+/// Cluster shape + policy knobs. Everything downstream of these is
+/// deterministic, so two clusters built from equal configs and equal
+/// workloads are bitwise-interchangeable.
+#[derive(Debug, Clone)]
+pub struct ClusterCfg {
+    pub nodes: usize,
+    /// Base replication factor R (clamped to the live node count).
+    pub replicas: usize,
+    /// Virtual-node points per node on the placement ring.
+    pub vnodes: usize,
+    /// Extra replicas granted to promoted-hot adapters (0 disables).
+    pub hot_extra: usize,
+    /// Promote when an adapter's observed request count exceeds
+    /// `hot_factor ×` the mean count.
+    pub hot_factor: f64,
+    /// Store / swap shards per node (lock partitioning within a node).
+    pub store_shards: usize,
+    /// Decode/swap cache capacity per shard per node.
+    pub cache_cap: usize,
+    /// Publish history retained per adapter per node (keep-K GC).
+    pub keep_versions: usize,
+    /// Fail-stop schedule: `(tick, node)` — the node serves arrivals
+    /// strictly before the tick, never at or after it.
+    pub fail_at: Vec<(u64, usize)>,
+}
+
+impl ClusterCfg {
+    pub fn new(nodes: usize, replicas: usize) -> ClusterCfg {
+        ClusterCfg {
+            nodes,
+            replicas,
+            vnodes: 64,
+            hot_extra: 1,
+            hot_factor: 8.0,
+            store_shards: 4,
+            cache_cap: 64,
+            keep_versions: 4,
+            fail_at: Vec::new(),
+        }
+    }
+}
+
+/// One simulated serving node: its own store directory, cache stack,
+/// and fail-stop status.
+pub struct Node {
+    pub id: usize,
+    pub store: SharedAdapterStore,
+    pub swap: SharedSwap,
+    /// Fail-stop tick, if scheduled: the node is dead for arrivals at or
+    /// after this tick.
+    pub failed_at: Option<u64>,
+}
+
+impl Node {
+    pub fn live_at(&self, tick: u64) -> bool {
+        self.failed_at.is_none_or(|t| tick < t)
+    }
+}
+
+/// Per-wave rebalance / membership-change outcome.
+#[derive(Debug, Default)]
+pub struct RebalanceReport {
+    /// Node ids removed from the ring (fail-stop cleanup).
+    pub removed: Vec<usize>,
+    /// Adapters whose replica set changed (the consistent-hash movement
+    /// bound says ≈ keys/N of these per membership change).
+    pub moved: usize,
+    /// `(adapter, node)` replica copies actually transferred (a move is
+    /// free when the target already holds the pinned version).
+    pub synced: usize,
+}
+
+/// Cluster-level accounting for one serve wave.
+pub struct ClusterStats {
+    /// Per-node serve stats, indexed by node id. Dead / unrouted nodes
+    /// hold a default entry, so sums over this vector are exact.
+    pub per_node: Vec<ServeStats>,
+    /// Per-node swap-cache snapshots taken after the wave.
+    pub per_node_swap: Vec<SwapCacheStats>,
+    /// [`ServeStats::merge`] fold over `per_node`: offered / shed /
+    /// goodput sum exactly to the global admission figures;
+    /// `queue_depth_peak` / `peak_bytes` are cross-node maxes;
+    /// `wall_seconds` is the *sum* of per-node walls (node-seconds).
+    pub total: ServeStats,
+    /// Max per-node wall — the cluster makespan under the one-machine-
+    /// per-node model, and the denominator of [`ClusterStats::goodput_rps`].
+    pub wall_max_seconds: f64,
+    /// Requests re-routed off a dead replica pick.
+    pub failovers: usize,
+    /// Adapters promoted to extra replicas this wave.
+    pub promoted: Vec<String>,
+    /// Replica copies transferred to back the promotions.
+    pub synced: usize,
+}
+
+impl ClusterStats {
+    /// Deadline-met requests per second of cluster makespan — the
+    /// scale-out figure of merit (`cluster/scaleout/*` bench rows).
+    pub fn goodput_rps(&self) -> f64 {
+        if self.wall_max_seconds > 0.0 {
+            self.total.goodput as f64 / self.wall_max_seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// Served requests per second of cluster makespan.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_max_seconds > 0.0 {
+            self.total.requests as f64 / self.wall_max_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The simulated cluster. See the module docs for the serve pipeline.
+pub struct Cluster {
+    pub cfg: ClusterCfg,
+    pub nodes: Vec<Node>,
+    pub ring: Ring,
+    pub fence: VersionFence,
+    dir: PathBuf,
+    site_dims: BTreeMap<String, (usize, usize)>,
+    names: Vec<String>,
+}
+
+impl Cluster {
+    /// Build an N-node cluster under `dir`: every node gets its own
+    /// store directory populated with the workload's seeded adapters
+    /// (bit-identical across nodes — the generator is name-seeded) and
+    /// version 1 of each published, so `name@1` resolves identically
+    /// everywhere; the fence starts at v1 for every name. Any existing
+    /// `dir` contents are removed first.
+    pub fn build(dir: &Path, wl: &WorkloadCfg, cfg: ClusterCfg) -> Result<Cluster> {
+        ensure!(cfg.nodes > 0, "cluster needs at least one node");
+        ensure!(cfg.replicas > 0, "replication factor must be >= 1");
+        for &(tick, node) in &cfg.fail_at {
+            ensure!(node < cfg.nodes, "fail-at tick {tick} names unknown node {node}");
+        }
+        let _ = std::fs::remove_dir_all(dir);
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating cluster dir {}", dir.display()))?;
+        let dims = site_dims(wl);
+        let mut nodes = Vec::with_capacity(cfg.nodes);
+        let mut names = Vec::new();
+        for id in 0..cfg.nodes {
+            let node = make_node(dir, id, &dims, &cfg)?;
+            names = populate_store(&node.store, wl)?;
+            for name in &names {
+                let file = node.store.load(name)?;
+                let (v, _) = node.store.publish(name, &file)?;
+                ensure!(v == 1, "fresh node {id} published '{name}' at v{v}, expected v1");
+            }
+            nodes.push(node);
+        }
+        let mut cluster = Cluster {
+            ring: Ring::new(&(0..cfg.nodes).collect::<Vec<_>>(), cfg.vnodes),
+            fence: VersionFence::new(names.iter().map(|n| (n.clone(), 1))),
+            nodes,
+            cfg,
+            dir: dir.to_path_buf(),
+            site_dims: dims,
+            names,
+        };
+        let schedule = cluster.cfg.fail_at.clone();
+        for (tick, node) in schedule {
+            cluster.fail_node(node, tick);
+        }
+        Ok(cluster)
+    }
+
+    /// Adapter base names the cluster was built with.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// The base replica set of `name` (ring order, primary first),
+    /// clamped to the ring size.
+    pub fn owners(&self, name: &str) -> Vec<usize> {
+        self.ring.replicas(name, self.cfg.replicas)
+    }
+
+    /// Serve one open-loop wave: pin → admit globally → promote + route →
+    /// per-node serve → aggregate. Returns the id-sorted responses and
+    /// the cluster accounting. Responses are bitwise-invariant to node
+    /// count, replication factor, and the failure schedule (survivors
+    /// serve the same immutable `name@v` bytes); the shed-id set is
+    /// decided by the global admission pass and shared by all shapes.
+    pub fn serve_open_loop(
+        &self,
+        mut queue: Vec<TimedRequest>,
+        cfg: &SchedCfg,
+        adm: &AdmissionCfg,
+    ) -> Result<(Vec<(u64, Tensor)>, ClusterStats)> {
+        let pins = self.fence.pin_map();
+        pin_timed_requests(&mut queue, |name| pins.get(name).copied());
+        let admission = admit(queue.clone(), adm);
+
+        // Hot promotion from observed counts, then make sure every
+        // promoted extra replica holds the pinned bytes before routing.
+        let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+        for tr in &queue {
+            let (base, _) = crate::adapter::store::split_versioned(&tr.req.adapter);
+            *counts.entry(base.to_string()).or_insert(0) += 1;
+        }
+        let promoted = placement::replica_counts(
+            &counts,
+            self.cfg.replicas,
+            self.cfg.hot_extra,
+            self.cfg.hot_factor,
+        );
+        let mut synced = 0usize;
+        for (name, &r) in &promoted {
+            let wide = self.ring.replicas(name, r);
+            for &extra in wide.iter().skip(self.cfg.replicas.min(wide.len())) {
+                if self.sync_to(name, extra)? {
+                    synced += 1;
+                }
+            }
+        }
+
+        let plan = router::route(
+            &self.ring,
+            self.nodes.len(),
+            queue,
+            &admission.shed,
+            self.cfg.replicas,
+            &promoted,
+            |n, t| self.nodes[n].live_at(t),
+        )?;
+        let (results, stats) = self.run_plan(plan, cfg, adm, promoted, synced)?;
+        Ok((results, stats))
+    }
+
+    /// Execute a route plan node by node and aggregate. The per-node
+    /// admission config never sheds (depth unbounded, rate limit off) —
+    /// the global pass already decided the shed set — but keeps the
+    /// caller's virtual-time parameters so flush / goodput accounting
+    /// matches the single-node scheduler exactly.
+    fn run_plan(
+        &self,
+        mut plan: RoutePlan,
+        cfg: &SchedCfg,
+        adm: &AdmissionCfg,
+        promoted: BTreeMap<String, usize>,
+        synced: usize,
+    ) -> Result<(Vec<(u64, Tensor)>, ClusterStats)> {
+        let node_adm = AdmissionCfg {
+            service_ticks: adm.service_ticks,
+            queue_depth: usize::MAX,
+            tenant_rate_per_ktick: 0.0,
+            tenant_burst: adm.tenant_burst,
+            flush_slack_ticks: adm.flush_slack_ticks,
+        };
+        let mut results: Vec<(u64, Tensor)> = Vec::new();
+        let mut per_node: Vec<ServeStats> = Vec::with_capacity(self.nodes.len());
+        let mut per_node_swap: Vec<SwapCacheStats> = Vec::with_capacity(self.nodes.len());
+        let mut wall_max = 0.0f64;
+        for node in &self.nodes {
+            let sub = std::mem::take(&mut plan.per_node[node.id]);
+            let mut stats = if sub.is_empty() {
+                ServeStats::default()
+            } else {
+                let (res, stats) =
+                    serve_open_loop_host(&node.swap, &node.store, sub, cfg, &node_adm)?;
+                results.extend(res);
+                stats
+            };
+            // Fold the shed requests attributed to this node: the global
+            // admission shed them, so the node's own (never-shed) pass
+            // did not see them; per-node offered/shed must still sum to
+            // the global figures.
+            for (id, tenant, reason) in std::mem::take(&mut plan.shed_per_node[node.id]) {
+                stats.offered += 1;
+                stats.shed += 1;
+                match reason {
+                    ShedReason::QueueFull => stats.shed_queue_full += 1,
+                    ShedReason::RateLimited => stats.shed_rate_limited += 1,
+                }
+                stats.shed_ids.push(id);
+                match stats.per_tenant_shed.iter_mut().find(|(t, _)| *t == tenant) {
+                    Some((_, c)) => *c += 1,
+                    None => stats.per_tenant_shed.push((tenant, 1)),
+                }
+            }
+            stats.shed_ids.sort_unstable();
+            wall_max = wall_max.max(stats.wall_seconds);
+            per_node_swap.push(node.swap.stats());
+            per_node.push(stats);
+        }
+        results.sort_unstable_by_key(|&(id, _)| id);
+        let mut total = ServeStats::default();
+        for s in &per_node {
+            total.merge(s.clone());
+        }
+        Ok((
+            results,
+            ClusterStats {
+                per_node,
+                per_node_swap,
+                total,
+                wall_max_seconds: wall_max,
+                failovers: plan.failovers,
+                promoted: promoted.into_keys().collect(),
+                synced,
+            },
+        ))
+    }
+
+    /// Two-phase publish: stage the new generation on every base replica
+    /// of `name` (the first replica's store assigns the version number;
+    /// the rest install its identical stamped bytes), then atomically
+    /// flip the fence. Requests admitted before the flip keep resolving
+    /// the old `name@v` on every replica; requests after pin the new one.
+    pub fn publish(&self, name: &str, adapter: &AdapterFile) -> Result<u64> {
+        let owners = self.owners(name);
+        ensure!(!owners.is_empty(), "publish of '{name}' on an empty ring");
+        for &node in &owners {
+            self.stage_on(node, name, adapter)?;
+        }
+        self.flip(name)
+    }
+
+    /// Phase 1 on one replica. The first stager runs a real
+    /// [`SharedAdapterStore::publish`] (assigning `current + 1`); later
+    /// stagers copy the staged bytes from a node that already has them,
+    /// so every replica holds the byte-identical stamped file. `adapter`
+    /// is only read by the first stager. Idempotent per (name, node).
+    pub fn stage_on(&self, node: usize, name: &str, adapter: &AdapterFile) -> Result<u64> {
+        ensure!(node < self.nodes.len(), "stage on unknown node {node}");
+        let v = match self.fence.staged(name) {
+            None => self.nodes[node].store.publish(name, adapter)?.0,
+            Some((v, have)) => {
+                if have.contains(&node) {
+                    return Ok(v);
+                }
+                let src = *have.first().context("staged entry with no holder")?;
+                let file = self.nodes[src].store.load(&versioned_ref(name, v))?;
+                self.nodes[node].store.install_version(name, &file)?
+            }
+        };
+        self.fence.note_staged(name, v, node)?;
+        Ok(v)
+    }
+
+    /// Phase 2: flip the fence to the staged generation. Fails (leaving
+    /// the old generation serving) unless every current base replica has
+    /// staged it.
+    pub fn flip(&self, name: &str) -> Result<u64> {
+        self.fence.flip(name, &self.owners(name))
+    }
+
+    /// Schedule / record a fail-stop: the node serves arrivals strictly
+    /// before `tick` and nothing after. Keeps the earliest tick if
+    /// already scheduled. The ring keeps the node's points until
+    /// [`Cluster::rebalance`] — routing works around the corpse via
+    /// failover in the meantime, which is exactly the degraded window a
+    /// real cluster has between a crash and its repair action.
+    pub fn fail_node(&mut self, node: usize, tick: u64) {
+        if let Some(n) = self.nodes.get_mut(node) {
+            n.failed_at = Some(n.failed_at.map_or(tick, |t| t.min(tick)));
+        }
+    }
+
+    /// Remove every failed node from the ring and copy the adapters
+    /// whose replica sets gained a survivor owner. Movement is the
+    /// consistent-hash minimum (only arcs adjacent to the dead nodes'
+    /// points change hands); the transfer count is reported so tests can
+    /// pin the ≈keys/N bound, and the new owners' cold caches refill on
+    /// the next wave (visible in [`SwapCacheStats`]).
+    pub fn rebalance(&mut self) -> Result<RebalanceReport> {
+        let before = self.ring.clone();
+        let removed: Vec<usize> = self
+            .nodes
+            .iter()
+            .filter(|n| n.failed_at.is_some() && self.ring.contains(n.id))
+            .map(|n| n.id)
+            .collect();
+        for &id in &removed {
+            self.ring.remove_node(id);
+        }
+        ensure!(!self.ring.nodes().is_empty(), "rebalance would remove every node");
+        self.sync_moved(&before, removed)
+    }
+
+    /// Bring one fresh (empty-store) node into the ring and copy it the
+    /// adapters it now owns — ≈keys/(N+1) of them, everything else stays
+    /// put. Returns the new node id and the movement report.
+    pub fn join_node(&mut self) -> Result<(usize, RebalanceReport)> {
+        let id = self.nodes.len();
+        let node = make_node(&self.dir, id, &self.site_dims, &self.cfg)?;
+        self.nodes.push(node);
+        let before = self.ring.clone();
+        self.ring.add_node(id);
+        let report = self.sync_moved(&before, Vec::new())?;
+        Ok((id, report))
+    }
+
+    fn sync_moved(&self, before: &Ring, removed: Vec<usize>) -> Result<RebalanceReport> {
+        let moved = moved_keys(before, &self.ring, &self.names, self.cfg.replicas);
+        let mut synced = 0usize;
+        for (name, new_owners) in &moved {
+            for &to in new_owners {
+                if self.sync_to(name, to)? {
+                    synced += 1;
+                }
+            }
+        }
+        Ok(RebalanceReport { removed, moved: moved.len(), synced })
+    }
+
+    /// Copy the fence-pinned generation of `name` onto node `to` from
+    /// any survivor that holds it. Returns false (no copy) when `to`
+    /// already has the version. Sources exclude nodes with a scheduled
+    /// fail-stop: replica repair must work from survivors only.
+    fn sync_to(&self, name: &str, to: usize) -> Result<bool> {
+        let v = self
+            .fence
+            .pinned(name)
+            .with_context(|| format!("sync of unknown adapter '{name}'"))?;
+        if self.nodes[to].store.versions(name)?.contains(&v) {
+            return Ok(false);
+        }
+        let src = self
+            .nodes
+            .iter()
+            .find(|n| {
+                n.id != to
+                    && n.failed_at.is_none()
+                    && n.store.versions(name).map(|vs| vs.contains(&v)).unwrap_or(false)
+            })
+            .with_context(|| format!("no live source holds '{name}@{v}' for node {to}"))?;
+        let file = src.store.load(&versioned_ref(name, v))?;
+        self.nodes[to].store.install_version(name, &file)?;
+        Ok(true)
+    }
+}
+
+/// One node's directory + store + swap. `populate` happens at the call
+/// site: build fills every node; join starts empty (cold) and receives
+/// only the keys it owns via sync.
+fn make_node(
+    dir: &Path,
+    id: usize,
+    dims: &BTreeMap<String, (usize, usize)>,
+    cfg: &ClusterCfg,
+) -> Result<Node> {
+    let ndir = dir.join(format!("node{id}"));
+    let store = SharedAdapterStore::with_shards_keep(
+        &ndir,
+        cfg.store_shards,
+        cfg.cache_cap,
+        cfg.keep_versions,
+    )?;
+    let swap = SharedSwap::with_shards(dims.clone(), cfg.store_shards, cfg.cache_cap);
+    Ok(Node { id, store, swap, failed_at: None })
+}

@@ -602,7 +602,7 @@ impl Pipeline {
             if let Some(p) = wave_pubs {
                 publishes.extend(p?);
             }
-            merge_stats(&mut stats, wave_stats);
+            stats.merge(wave_stats);
             results.extend(wave_results);
         }
         results.sort_by_key(|&(id, _)| id);
@@ -635,56 +635,6 @@ impl Pipeline {
         }
         out.sort_by_key(|&(id, _)| id);
         Ok(out)
-    }
-}
-
-/// Fold one wave's stats into the running total: counters sum, latencies
-/// concatenate, peaks max, per-adapter counts merge by (pinned) name.
-/// Byte residency fields are end-of-wave snapshots of the *same* shared
-/// cache, not per-wave deltas, so they max rather than sum.
-fn merge_stats(into: &mut ServeStats, s: ServeStats) {
-    into.delta_bytes = into.delta_bytes.max(s.delta_bytes);
-    into.factor_bytes = into.factor_bytes.max(s.factor_bytes);
-    into.peak_bytes = into.peak_bytes.max(s.peak_bytes);
-    into.requests += s.requests;
-    into.batches += s.batches;
-    into.swaps += s.swaps;
-    into.warm_swaps += s.warm_swaps;
-    into.swap_seconds += s.swap_seconds;
-    into.exec_seconds += s.exec_seconds;
-    into.wall_seconds += s.wall_seconds;
-    into.disk_reads += s.disk_reads;
-    into.queue_depth_peak = into.queue_depth_peak.max(s.queue_depth_peak);
-    into.full_flushes += s.full_flushes;
-    into.wait_flushes += s.wait_flushes;
-    into.final_flushes += s.final_flushes;
-    into.deadline_flushes += s.deadline_flushes;
-    into.max_micro_batch = into.max_micro_batch.max(s.max_micro_batch);
-    into.latencies.extend(s.latencies);
-    for (name, c) in s.per_adapter {
-        match into.per_adapter.iter_mut().find(|(n, _)| *n == name) {
-            Some((_, tot)) => *tot += c,
-            None => into.per_adapter.push((name, c)),
-        }
-    }
-    // Open-loop accounting: counters sum, shed ids stay one sorted set,
-    // virtual latencies concatenate (per-tenant percentiles are computed
-    // over the merged vector at report time).
-    into.offered += s.offered;
-    into.shed += s.shed;
-    into.shed_queue_full += s.shed_queue_full;
-    into.shed_rate_limited += s.shed_rate_limited;
-    into.goodput += s.goodput;
-    into.deadline_misses += s.deadline_misses;
-    into.chan_drops += s.chan_drops;
-    into.shed_ids.extend(s.shed_ids);
-    into.shed_ids.sort_unstable();
-    into.vlat_ticks.extend(s.vlat_ticks);
-    for (name, c) in s.per_tenant_shed {
-        match into.per_tenant_shed.iter_mut().find(|(n, _)| *n == name) {
-            Some((_, tot)) => *tot += c,
-            None => into.per_tenant_shed.push((name, c)),
-        }
     }
 }
 
@@ -806,8 +756,8 @@ mod tests {
             vlat_ticks: vec![("y".into(), 7)],
             ..Default::default()
         };
-        merge_stats(&mut total, a);
-        merge_stats(&mut total, b);
+        total.merge(a);
+        total.merge(b);
         assert_eq!(total.requests, 7);
         assert_eq!(total.batches, 3);
         assert_eq!(total.queue_depth_peak, 5);

@@ -1023,7 +1023,7 @@ impl<'a> DeltaRunner<'a> {
 
 impl BatchRunner for DeltaRunner<'_> {
     fn run_batch(&self, worker: usize, adapter: &str, reqs: &[Request]) -> Result<BatchOut> {
-        let mut guard = self.slots[worker].lock().unwrap();
+        let mut guard = crate::util::lock_recover(&self.slots[worker]);
         let slot = &mut *guard;
         let t0 = Instant::now();
         let (active, trace) = fetch_active(self.swap, self.store, adapter, self.apply)?;

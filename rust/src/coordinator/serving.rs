@@ -296,6 +296,95 @@ impl ServeStats {
             .collect();
         crate::util::percentile(&vs, p)
     }
+
+    /// Fold another serve's counters into this one — the aggregation used
+    /// by the pipeline (waves of one serve loop) and the cluster layer
+    /// (per-node stats into `ClusterStats`). The semantics matter and are
+    /// easy to get wrong in both directions:
+    ///
+    /// * **Sums**: request/batch/swap/flush counts, wall/swap/exec
+    ///   seconds, disk reads, and the open-loop `offered`/`shed`/
+    ///   `goodput`/miss/drop counters — disjoint work, so totals add.
+    ///   (`wall_seconds` therefore aggregates to total *node-seconds*; a
+    ///   cluster's end-to-end makespan is the max over nodes and is
+    ///   tracked separately by `ClusterStats`.)
+    /// * **Maxes**: `queue_depth_peak`, `delta_bytes`, `factor_bytes`,
+    ///   `peak_bytes`, `max_micro_batch` — high-water marks of caches
+    ///   and queues that do not peak simultaneously; summing them
+    ///   overstates (the same bug [`SwapCacheStats::merge`] fixed for
+    ///   per-shard peaks).
+    /// * **Set/level unions**: `latencies` and `vlat_ticks` concatenate
+    ///   (percentiles are computed over the merged vector at report
+    ///   time); `shed_ids` merge into one sorted set; `per_adapter` /
+    ///   `per_tenant_shed` merge by name.
+    pub fn merge(&mut self, s: ServeStats) {
+        self.delta_bytes = self.delta_bytes.max(s.delta_bytes);
+        self.factor_bytes = self.factor_bytes.max(s.factor_bytes);
+        self.peak_bytes = self.peak_bytes.max(s.peak_bytes);
+        self.requests += s.requests;
+        self.batches += s.batches;
+        self.swaps += s.swaps;
+        self.warm_swaps += s.warm_swaps;
+        self.swap_seconds += s.swap_seconds;
+        self.exec_seconds += s.exec_seconds;
+        self.wall_seconds += s.wall_seconds;
+        self.disk_reads += s.disk_reads;
+        self.queue_depth_peak = self.queue_depth_peak.max(s.queue_depth_peak);
+        self.full_flushes += s.full_flushes;
+        self.wait_flushes += s.wait_flushes;
+        self.final_flushes += s.final_flushes;
+        self.deadline_flushes += s.deadline_flushes;
+        self.max_micro_batch = self.max_micro_batch.max(s.max_micro_batch);
+        self.latencies.extend(s.latencies);
+        for (name, c) in s.per_adapter {
+            match self.per_adapter.iter_mut().find(|(n, _)| *n == name) {
+                Some((_, tot)) => *tot += c,
+                None => self.per_adapter.push((name, c)),
+            }
+        }
+        self.offered += s.offered;
+        self.shed += s.shed;
+        self.shed_queue_full += s.shed_queue_full;
+        self.shed_rate_limited += s.shed_rate_limited;
+        self.goodput += s.goodput;
+        self.deadline_misses += s.deadline_misses;
+        self.chan_drops += s.chan_drops;
+        self.shed_ids.extend(s.shed_ids);
+        self.shed_ids.sort_unstable();
+        self.shed_ids.dedup();
+        self.vlat_ticks.extend(s.vlat_ticks);
+        for (name, c) in s.per_tenant_shed {
+            match self.per_tenant_shed.iter_mut().find(|(n, _)| *n == name) {
+                Some((_, tot)) => *tot += c,
+                None => self.per_tenant_shed.push((name, c)),
+            }
+        }
+    }
+}
+
+/// FNV-1a digest over id-ordered `(id, logits)` pairs: fold each id, then
+/// the raw bits of every output f32. Bit-identical responses — the
+/// determinism contract across worker counts, apply modes, replicas, and
+/// node counts — reduce to one comparable line; this is the exact digest
+/// the CI scheduler-stress and cluster-smoke gates grep for.
+pub fn response_digest(results: &[(u64, Tensor)]) -> Result<u64> {
+    let mut digest = crate::util::hash::FNV64_INIT;
+    for (id, t) in results {
+        digest = crate::util::hash::fnv64_fold_u64(digest, *id);
+        for v in t.as_f32()? {
+            digest = crate::util::hash::fnv64_fold(digest, &v.to_bits().to_le_bytes());
+        }
+    }
+    Ok(digest)
+}
+
+/// FNV-1a digest over sorted shed request ids — the reproducible-shedding
+/// half of the open-loop determinism contract, one comparable line per
+/// run (`shed digest <hex> over <n> shed ids` in the CLIs).
+pub fn shed_digest(ids: &[u64]) -> u64 {
+    ids.iter().fold(crate::util::hash::FNV64_INIT, |h, id| {
+        crate::util::hash::fnv64_fold_u64(h, *id)
+    })
 }
 
 /// Cache counters for [`SwapCache`].
@@ -725,7 +814,7 @@ impl SharedSwap {
     /// the exact high-water mark of that counter (every increase passes
     /// through the `fetch_add` + `fetch_max` pair).
     fn with_shard_tracked<T>(&self, idx: usize, f: impl FnOnce(&mut SwapCache) -> T) -> T {
-        let mut shard = self.shards[idx].lock().unwrap();
+        let mut shard = crate::util::lock_recover(&self.shards[idx]);
         let before = shard.stats.delta_bytes + shard.stats.factor_bytes;
         let out = f(&mut shard);
         let after = shard.stats.delta_bytes + shard.stats.factor_bytes;
@@ -807,7 +896,7 @@ impl SharedSwap {
     pub fn stats(&self) -> SwapCacheStats {
         let mut out = SwapCacheStats::default();
         for s in &self.shards {
-            out.merge(&s.lock().unwrap().stats);
+            out.merge(&crate::util::lock_recover(s).stats);
         }
         out.peak_bytes = self.peak.load(Ordering::SeqCst);
         out
@@ -817,7 +906,7 @@ impl SharedSwap {
     /// tests; the peak fix is pinned by comparing these against
     /// [`SharedSwap::stats`]).
     pub fn shard_stats(&self) -> Vec<SwapCacheStats> {
-        self.shards.iter().map(|s| s.lock().unwrap().stats).collect()
+        self.shards.iter().map(|s| crate::util::lock_recover(s).stats).collect()
     }
 
     /// Resident adapter names across all shards (no particular global
@@ -825,7 +914,7 @@ impl SharedSwap {
     pub fn resident(&self) -> Vec<String> {
         let mut out = Vec::new();
         for s in &self.shards {
-            out.extend(s.lock().unwrap().resident());
+            out.extend(crate::util::lock_recover(s).resident());
         }
         out
     }
@@ -876,7 +965,7 @@ struct EngineRunner<'a> {
 #[cfg(not(feature = "xla-runtime"))]
 impl BatchRunner for EngineRunner<'_> {
     fn run_batch(&self, worker: usize, adapter: &str, reqs: &[Request]) -> Result<BatchOut> {
-        let mut guard = self.slots[worker].lock().unwrap();
+        let mut guard = crate::util::lock_recover(&self.slots[worker]);
         let slot = &mut *guard;
         let t0 = Instant::now();
         let (tensors, trace) = self.swap.adapt_tensors(self.store, adapter)?;
@@ -1079,6 +1168,92 @@ impl<'a> Server<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// A worker that panics while holding a swap-shard lock poisons the
+    /// mutex; every later serve on that shard used to cascade-panic. The
+    /// poison-tolerant locks must keep the shared swap fully usable.
+    #[test]
+    fn poisoned_shard_lock_recovers_instead_of_cascading() {
+        let swap = SharedSwap::with_shards(BTreeMap::new(), 2, 8);
+        let joined = std::thread::scope(|s| {
+            s.spawn(|| {
+                swap.with_shard_tracked(0, |_| -> () { panic!("injected worker panic") });
+            })
+            .join()
+        });
+        assert!(joined.is_err(), "the injected panic must reach join()");
+        // Every shard op — including on the poisoned shard 0 — must still
+        // work instead of propagating the poison.
+        let _ = swap.stats();
+        assert_eq!(swap.shard_stats().len(), 2);
+        assert!(swap.resident().is_empty());
+        swap.invalidate("zipf_0000");
+        swap.invalidate_family("zipf_0000");
+        swap.clear();
+    }
+
+    #[test]
+    fn serve_stats_merge_sums_counters_and_maxes_peaks() {
+        let mut total = ServeStats::default();
+        let a = ServeStats {
+            requests: 3,
+            offered: 5,
+            shed: 2,
+            shed_queue_full: 2,
+            shed_ids: vec![1, 9],
+            queue_depth_peak: 5,
+            peak_bytes: 150,
+            delta_bytes: 100,
+            wall_seconds: 1.0,
+            goodput: 3,
+            per_tenant_shed: vec![("x".into(), 2)],
+            ..Default::default()
+        };
+        let b = ServeStats {
+            requests: 4,
+            offered: 6,
+            shed: 1,
+            shed_rate_limited: 1,
+            shed_ids: vec![4],
+            queue_depth_peak: 3,
+            peak_bytes: 90,
+            delta_bytes: 40,
+            wall_seconds: 2.0,
+            goodput: 4,
+            per_tenant_shed: vec![("x".into(), 1)],
+            ..Default::default()
+        };
+        total.merge(a);
+        total.merge(b);
+        // sums
+        assert_eq!(total.requests, 7);
+        assert_eq!(total.offered, 11);
+        assert_eq!(total.shed, 3);
+        assert_eq!(total.shed_queue_full, 2);
+        assert_eq!(total.shed_rate_limited, 1);
+        assert_eq!(total.goodput, 7);
+        assert!((total.wall_seconds - 3.0).abs() < 1e-12);
+        assert_eq!(total.per_tenant_shed, vec![("x".to_string(), 3)]);
+        // maxes — NOT sums
+        assert_eq!(total.queue_depth_peak, 5);
+        assert_eq!(total.peak_bytes, 150);
+        assert_eq!(total.delta_bytes, 100);
+        // shed ids: one sorted duplicate-free set
+        assert_eq!(total.shed_ids, vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn digest_helpers_are_order_and_bit_sensitive() {
+        let r1 = vec![(0u64, Tensor::scalar(1.0)), (1, Tensor::scalar(2.0))];
+        let r2 = vec![(1u64, Tensor::scalar(2.0)), (0, Tensor::scalar(1.0))];
+        let d1 = response_digest(&r1).unwrap();
+        assert_eq!(d1, response_digest(&r1).unwrap(), "deterministic");
+        assert_ne!(d1, response_digest(&r2).unwrap(), "id order is part of the digest");
+        let r3 = vec![(0u64, Tensor::scalar(1.0 + f32::EPSILON)), (1, Tensor::scalar(2.0))];
+        assert_ne!(d1, response_digest(&r3).unwrap(), "one ulp must change the digest");
+        assert_eq!(shed_digest(&[]), crate::util::hash::FNV64_INIT);
+        assert_ne!(shed_digest(&[1, 2]), shed_digest(&[2, 1]));
+    }
 
     #[test]
     fn throughput_zero_time_guard() {

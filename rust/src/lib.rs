@@ -70,6 +70,16 @@
 //! the machine. Reproducible workloads (Zipf adapter popularity,
 //! configurable arrival order) live in [`coordinator::workload`].
 //!
+//! ## Cluster simulation
+//!
+//! [`cluster`] scales the serving stack out to N simulated nodes in one
+//! process — consistent-hash placement with virtual nodes and hot-replica
+//! promotion ([`cluster::placement`]), deterministic admission-side
+//! routing ([`cluster::router`]), two-phase version-fenced publish
+//! propagation ([`cluster::fence`]), and seeded failure / rebalance
+//! scenarios ([`cluster::sim`]). Responses are bitwise-invariant to node
+//! count, replication, and failure schedule; see `repro cluster`.
+//!
 //! ## Feature flags
 //!
 //! * `xla-runtime` — use the real `xla` crate (PJRT) for compiled HLO
@@ -81,6 +91,7 @@
 //! (§Perf has the trig / FFT / GEMM crossover and swap-cost tables).
 
 pub mod adapter;
+pub mod cluster;
 pub mod coordinator;
 pub mod data;
 pub mod fourier;

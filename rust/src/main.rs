@@ -8,6 +8,7 @@
 //!   figure    N [--quick ...]       regenerate paper figure N
 //!   all       [--quick]             every table + figure (EXPERIMENTS.md data)
 //!   serve     [--adapters K ...]    multi-adapter serving demo + stats
+//!   cluster   [--nodes N ...]       sharded multi-node serving simulation
 //!
 //! `--engine host` (the default) trains and serves pure-Rust with no
 //! artifacts; `--engine xla` runs from AOT artifacts. Python is never
@@ -43,6 +44,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("all") => all(args),
         Some("serve") => serve(args),
         Some("serve-host") => serve_host(args),
+        Some("cluster") => cluster(args),
         Some("pipeline") => pipeline(args),
         Some("methods") => methods(args),
         Some("probe") => probe(args),
@@ -78,6 +80,17 @@ fn print_usage() {
          \x20                                    serving, auto = per-adapter flops cost model;\n\
          \x20                                    --arrival != closed runs open-loop with SLO\n\
          \x20                                    admission + load shedding (prints shed digest)\n\
+         \x20 cluster [--nodes N --replicas R --vnodes V --hot-extra E --hot-factor F\n\
+         \x20          --fail-at tick:node[,tick:node...] --rebalance\n\
+         \x20          --method ID --adapters N --requests N --workers W --apply MODE\n\
+         \x20          --dim D --n N --sites S --batch B --seed S\n\
+         \x20          --arrival {{poisson,burst,diurnal,closed}} --rate R --deadline-ticks D\n\
+         \x20          --burst-factor F --period P --duty F --service-ticks S\n\
+         \x20          --queue-depth Q --tenant-rate R --tenant-burst B --slack T]\n\
+         \x20                                    N-node serving cluster simulation:\n\
+         \x20                                    consistent-hash placement + R-way replicas,\n\
+         \x20                                    global admission, fail-stop failover; response\n\
+         \x20                                    + shed digests are invariant to --nodes/--replicas\n\
          \x20 pipeline [--adapters N --requests N --publish-every S --workers W\n\
          \x20           --train-workers T --steps K --keep V --artifact A\n\
          \x20           --apply {{auto,dense,factored}}\n\
@@ -239,20 +252,139 @@ fn serve_host(args: &Args) -> Result<()> {
             println!("worst per-tenant p99 virtual latency: {tenant} at {p99:.0} ticks");
         }
     }
-    let mut digest = fourier_peft::util::FNV64_INIT;
-    for (id, t) in &results {
-        digest = fourier_peft::util::fnv64_fold(digest, &id.to_le_bytes());
-        for v in t.as_f32()? {
-            digest = fourier_peft::util::fnv64_fold(digest, &v.to_bits().to_le_bytes());
-        }
-    }
+    let digest = fourier_peft::coordinator::serving::response_digest(&results)?;
     println!("response digest {digest:016x}");
     if arrival != ArrivalKind::Closed {
-        let mut sdig = fourier_peft::util::FNV64_INIT;
-        for id in &stats.shed_ids {
-            sdig = fourier_peft::util::fnv64_fold(sdig, &id.to_le_bytes());
-        }
+        let sdig = fourier_peft::coordinator::serving::shed_digest(&stats.shed_ids);
         println!("shed digest {sdig:016x} over {} shed ids", stats.shed_ids.len());
+    }
+    Ok(())
+}
+
+/// N-node serving cluster simulation: consistent-hash placement with
+/// virtual nodes and R-way replication, one global admission pass (so
+/// the shed set — and its digest — is invariant to `--nodes`), a
+/// deterministic replica pick per request with fail-stop failover
+/// (`--fail-at tick:node`), and per-node serves through the unmodified
+/// single-node scheduler. The `response digest` / `shed digest` lines
+/// use the same format as `serve-host`; the cluster-smoke CI job gates
+/// on their invariance across `--nodes {1,2,4}` and across a fail-at
+/// run vs its survivor replay.
+fn cluster(args: &Args) -> Result<()> {
+    use fourier_peft::cluster::{Cluster, ClusterCfg};
+    use fourier_peft::coordinator::scheduler::{AdmissionCfg, ApplyMode, SchedCfg};
+    use fourier_peft::coordinator::serving::{response_digest, shed_digest};
+    use fourier_peft::coordinator::workload::{self, ArrivalKind, OpenLoopCfg, WorkloadCfg};
+
+    let method = args.str_or("method", "fourierft");
+    let apply: ApplyMode = args.str_or("apply", "auto").parse()?;
+    let base = WorkloadCfg::small();
+    let wl = WorkloadCfg {
+        adapters: args.usize_or("adapters", 32),
+        requests: args.usize_or("requests", 256),
+        method: method.to_string(),
+        dim: args.usize_or("dim", base.dim),
+        sites: args.usize_or("sites", base.sites),
+        n_coeffs: args.usize_or("n", base.n_coeffs),
+        batch: args.usize_or("batch", base.batch),
+        seed: args.u64_or("seed", base.seed),
+        ..base
+    };
+    let mut ccfg = ClusterCfg::new(args.usize_or("nodes", 2), args.usize_or("replicas", 2));
+    ccfg.vnodes = args.usize_or("vnodes", ccfg.vnodes);
+    ccfg.hot_extra = args.usize_or("hot-extra", ccfg.hot_extra);
+    ccfg.hot_factor = args.f64_or("hot-factor", ccfg.hot_factor);
+    // --fail-at "tick:node[,tick:node...]" — seeded fail-stop schedule.
+    if let Some(spec) = args.get("fail-at") {
+        for part in spec.split(',').filter(|p| !p.is_empty()) {
+            let (tick, node) = part
+                .split_once(':')
+                .with_context(|| format!("--fail-at entry '{part}' is not tick:node"))?;
+            ccfg.fail_at.push((
+                tick.trim().parse().with_context(|| format!("bad tick in '{part}'"))?,
+                node.trim().parse().with_context(|| format!("bad node in '{part}'"))?,
+            ));
+        }
+    }
+    let fail_at = ccfg.fail_at.clone();
+
+    let dir = fourier_peft::runs_dir().join("cluster_demo");
+    let cluster = Cluster::build(&dir, &wl, ccfg)?;
+    let sched = SchedCfg { workers: args.usize_or("workers", 2), apply, ..SchedCfg::default() };
+    let arrival: ArrivalKind = args.str_or("arrival", "poisson").parse()?;
+    let service_ticks = args.u64_or("service-ticks", 8);
+    let ol = OpenLoopCfg {
+        kind: arrival,
+        rate_per_ktick: args.f64_or("rate", 250.0),
+        deadline_ticks: args.u64_or("deadline-ticks", 96),
+        burst_factor: args.f64_or("burst-factor", 8.0),
+        period_ticks: args.u64_or("period", 512),
+        duty: args.f64_or("duty", 0.25),
+        seed: wl.seed,
+    };
+    let adm = AdmissionCfg {
+        service_ticks,
+        queue_depth: args.usize_or("queue-depth", 64),
+        tenant_rate_per_ktick: args.f64_or("tenant-rate", 0.0),
+        tenant_burst: args.f64_or("tenant-burst", 16.0),
+        flush_slack_ticks: args.u64_or("slack", service_ticks),
+    };
+    let queue = workload::gen_arrivals(&ol, workload::gen_requests(&wl)?)?;
+    let (results, stats) = cluster.serve_open_loop(queue, &sched, &adm)?;
+
+    println!(
+        "cluster: {} nodes x {} replicas ({} vnodes)  method {method} (apply {apply})  \
+         {} adapters",
+        cluster.cfg.nodes, cluster.cfg.replicas, cluster.cfg.vnodes, wl.adapters
+    );
+    for (id, s) in stats.per_node.iter().enumerate() {
+        let dead = fail_at.iter().find(|&&(_, n)| n == id);
+        println!(
+            "  node {id}: offered {:>5}  served {:>5}  shed {:>4}  batches {:>5}  \
+             swaps {:>5} ({} warm)  wall {:.3}s{}",
+            s.offered, s.requests, s.shed, s.batches, s.swaps, s.warm_swaps, s.wall_seconds,
+            dead.map(|&(t, _)| format!("  [failed at tick {t}]")).unwrap_or_default()
+        );
+    }
+    let t = &stats.total;
+    println!(
+        "total: offered {}  served {}  shed {} (queue_full {}, rate_limited {})  \
+         failovers {}  promoted {}  synced {}",
+        t.offered, t.requests, t.shed, t.shed_queue_full, t.shed_rate_limited,
+        stats.failovers, stats.promoted.len(), stats.synced
+    );
+    println!(
+        "makespan {:.3}s (max node wall; node-seconds {:.3})  goodput {}/{} admitted  \
+         => {:.1} goodput req/s  {:.1} req/s",
+        stats.wall_max_seconds, t.wall_seconds, t.goodput, t.requests,
+        stats.goodput_rps(), stats.throughput_rps()
+    );
+    println!("response digest {:016x}", response_digest(&results)?);
+    println!(
+        "shed digest {:016x} over {} shed ids",
+        shed_digest(&t.shed_ids),
+        t.shed_ids.len()
+    );
+
+    // --rebalance: drop failed nodes from the ring, sync the moved keys
+    // to their surviving owners, and replay the workload — the replayed
+    // response digest must match the line above (the replica-invariance
+    // contract), with the moved keys' cold caches refilling on the way.
+    if args.bool("rebalance") && !fail_at.is_empty() {
+        let mut cluster = cluster;
+        let report = cluster.rebalance()?;
+        println!(
+            "rebalance: removed nodes {:?}  moved {} adapters  synced {} replica copies",
+            report.removed, report.moved, report.synced
+        );
+        let replay = workload::gen_arrivals(&ol, workload::gen_requests(&wl)?)?;
+        let (res2, stats2) = cluster.serve_open_loop(replay, &sched, &adm)?;
+        println!(
+            "post-rebalance: served {}  failovers {}  disk reads {}  \
+             response digest {:016x}",
+            stats2.total.requests, stats2.failovers, stats2.total.disk_reads,
+            response_digest(&res2)?
+        );
     }
     Ok(())
 }

@@ -1,0 +1,93 @@
+//! The one FNV-1a implementation in the crate.
+//!
+//! Before the cluster layer there were two copies of this machinery —
+//! `util::{FNV64_INIT, fnv64_fold, fnv64}` (digests, seed derivation)
+//! and `adapter::store::shard_index` (lock-partitioned cache routing) —
+//! kept in sync by convention. The consistent-hash ring in
+//! [`crate::cluster::placement`] made a third caller, so the hash now
+//! lives here and everything routes through it:
+//!
+//! * **shard routing** — [`shard_index`] places an adapter name into one
+//!   of K lock shards ([`crate::adapter::SharedAdapterStore`],
+//!   [`crate::coordinator::serving::SharedSwap`]);
+//! * **ring placement** — [`crate::cluster::placement::Ring`] hashes
+//!   virtual-node labels and adapter names onto the u64 circle;
+//! * **digests** — the serving CLI and the cluster CI gates fold
+//!   id-sorted response bits and sorted shed ids into one comparable
+//!   line ([`crate::coordinator::serving::response_digest`] /
+//!   [`crate::coordinator::serving::shed_digest`]);
+//! * **seed derivation** — name-stable init streams in
+//!   [`crate::runtime::host::zoo`] and the pipeline's per-adapter job
+//!   seeds.
+//!
+//! All of these depend on the *exact* byte-for-byte hash: shard tests pin
+//! routing stability, CI pins digest values across worker counts, and the
+//! ring's minimal-movement property only holds if every session of the
+//! simulator hashes identically. Do not change the constants.
+
+/// FNV-1a offset basis — seed value for [`fnv64_fold`] chains.
+pub const FNV64_INIT: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// FNV-1a prime.
+const FNV64_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a: fold `bytes` into a running hash.
+pub fn fnv64_fold(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(FNV64_PRIME);
+    }
+    h
+}
+
+/// Fold one little-endian `u64` into a running hash (request ids, ticks).
+pub fn fnv64_fold_u64(h: u64, v: u64) -> u64 {
+    fnv64_fold(h, &v.to_le_bytes())
+}
+
+/// FNV-1a over a string — the one name-hash shared by the adapter-store
+/// shard router, the cluster placement ring, and the host engine's
+/// name-stable init streams.
+pub fn fnv64(s: &str) -> u64 {
+    fnv64_fold(FNV64_INIT, s.as_bytes())
+}
+
+/// Stable shard index for an adapter name: FNV-1a over the name bytes,
+/// reduced mod `shards`. Used by [`crate::adapter::SharedAdapterStore`]
+/// and the serving swap cache so a name's cached state always lives in
+/// exactly one shard.
+pub fn shard_index(name: &str, shards: usize) -> usize {
+    debug_assert!(shards > 0);
+    (fnv64(name) % shards as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv64_known_vectors() {
+        // Reference FNV-1a values; pinned because shard routing, ring
+        // placement, and the CI digest gates all depend on these bytes.
+        assert_eq!(fnv64(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64("a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv64("foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn fold_u64_matches_byte_fold() {
+        let h = fnv64_fold_u64(FNV64_INIT, 0x0102_0304_0506_0708);
+        assert_eq!(h, fnv64_fold(FNV64_INIT, &0x0102_0304_0506_0708u64.to_le_bytes()));
+    }
+
+    #[test]
+    fn shard_index_stable_and_in_range() {
+        for shards in [1usize, 2, 8, 64] {
+            for name in ["zipf_0000", "task_rte", "task_rte@3", ""] {
+                let i = shard_index(name, shards);
+                assert!(i < shards);
+                assert_eq!(i, shard_index(name, shards), "must be deterministic");
+            }
+        }
+    }
+}

@@ -3,28 +3,28 @@
 
 pub mod bench;
 pub mod cli;
+pub mod hash;
 pub mod json;
+
+// Historical paths: the FNV-1a machinery predates `util::hash` and is
+// re-exported so `util::fnv64`-style callers (host zoo seeds, digests)
+// keep compiling; new code should import from [`hash`] directly.
+pub use hash::{fnv64, fnv64_fold, fnv64_fold_u64, shard_index, FNV64_INIT};
 
 use std::time::Instant;
 
-/// FNV-1a offset basis — seed value for [`fnv64_fold`] chains.
-pub const FNV64_INIT: u64 = 0xcbf2_9ce4_8422_2325;
-
-/// Incremental FNV-1a: fold `bytes` into a running hash. Used by the
-/// serving CLI to digest id-sorted response bits into one line the CI
-/// scheduler-stress job can compare across apply modes and worker counts.
-pub fn fnv64_fold(mut h: u64, bytes: &[u8]) -> u64 {
-    for &b in bytes {
-        h ^= u64::from(b);
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
-}
-
-/// FNV-1a over a string — the one name-hash shared by the adapter-store
-/// shard router and the host engine's name-stable init streams.
-pub fn fnv64(s: &str) -> u64 {
-    fnv64_fold(FNV64_INIT, s.as_bytes())
+/// Poison-tolerant mutex lock: recover the guard from a poisoned mutex
+/// instead of panicking ([`std::sync::PoisonError::into_inner`]).
+///
+/// The serving cache stack (`SharedSwap` shards, engine slots, store
+/// shards) guards state that is either a rebuildable cache over immutable
+/// on-disk files or a per-worker scratch slot — a panic mid-mutation can
+/// at worst leave a droppable entry behind, never corrupt ground truth.
+/// Propagating the poison instead would cascade one panicking worker into
+/// a permanently unusable cluster node, which is exactly what the
+/// failure-simulation layer must not do.
+pub fn lock_recover<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
 /// Wall-clock a closure, returning (result, seconds).

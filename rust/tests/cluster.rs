@@ -1,0 +1,439 @@
+//! Cluster integration tests — the PR-8 acceptance claims:
+//!
+//! * **replica invariance**: a pinned request set served at
+//!   `nodes {1,2,4} × replicas {1,2}`, under a seeded fail-at schedule,
+//!   and on a re-run yields bitwise-identical responses and identical
+//!   shed-id digests (admission runs once, globally, before placement);
+//! * a fail-at run and its survivor replay (same node dead from tick 0)
+//!   agree bitwise;
+//! * a 1-node cluster is a strict wrapper around the single-node
+//!   scheduler: same bits, same offered/shed/goodput ledger;
+//! * [`ClusterStats`] aggregation sums what must sum (offered, shed,
+//!   goodput) and maxes what must max (`queue_depth_peak`, `peak_bytes`)
+//!   — the sharded-vs-unsharded parity mirror of the PR 7
+//!   `SwapCacheStats::merge` fix;
+//! * placement: the ring is deterministic, balanced at 1k keys × 8
+//!   nodes, and moves ≈1/N of keys on join/leave — far fewer than the
+//!   naive `hash % N` reference;
+//! * the version fence: a partial stage keeps serving the old
+//!   generation bitwise; a completed stage + flip switches atomically;
+//! * failure → rebalance moves only the dead node's keys and the new
+//!   owners' cold caches refill on the next wave.
+
+use std::collections::BTreeMap;
+
+use fourier_peft::adapter::SharedAdapterStore;
+use fourier_peft::cluster::placement::{moved_keys, Ring};
+use fourier_peft::cluster::{Cluster, ClusterCfg};
+use fourier_peft::coordinator::scheduler::{admit, serve_open_loop_host, AdmissionCfg, SchedCfg};
+use fourier_peft::coordinator::serving::{response_digest, shed_digest, TimedRequest};
+use fourier_peft::coordinator::workload::{self, OpenLoopCfg, WorkloadCfg};
+use fourier_peft::tensor::Tensor;
+use fourier_peft::util::hash::fnv64;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("fp_cluster_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn assert_bitwise_equal(a: &[(u64, Tensor)], b: &[(u64, Tensor)], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: result counts differ");
+    for ((ia, ta), (ib, tb)) in a.iter().zip(b.iter()) {
+        assert_eq!(ia, ib, "{what}: id order differs");
+        let (va, vb) = (ta.as_f32().unwrap(), tb.as_f32().unwrap());
+        assert_eq!(va.len(), vb.len(), "{what}: shapes differ at id {ia}");
+        for i in 0..va.len() {
+            assert!(
+                va[i].to_bits() == vb[i].to_bits(),
+                "{what}: id {ia} element {i}: {} vs {} not bitwise identical",
+                va[i],
+                vb[i]
+            );
+        }
+    }
+}
+
+/// The shared test workload: small enough to build per-config clusters
+/// cheaply, overloaded enough (interarrival ≈ 3.3 ticks vs 6-tick
+/// service, 16-deep queue) that admission sheds a meaningful set.
+fn wl() -> WorkloadCfg {
+    WorkloadCfg { adapters: 12, requests: 160, batch: 2, ..WorkloadCfg::small() }
+}
+
+fn ol() -> OpenLoopCfg {
+    OpenLoopCfg::poisson(300.0, 64)
+}
+
+fn adm() -> AdmissionCfg {
+    AdmissionCfg { service_ticks: 6, queue_depth: 16, ..AdmissionCfg::default() }
+}
+
+fn sched() -> SchedCfg {
+    SchedCfg { workers: 2, ..SchedCfg::default() }
+}
+
+fn arrivals() -> Vec<TimedRequest> {
+    workload::gen_arrivals(&ol(), workload::gen_requests(&wl()).unwrap()).unwrap()
+}
+
+/// Serve the shared workload on a fresh cluster of the given shape.
+fn serve_config(
+    tag: &str,
+    nodes: usize,
+    replicas: usize,
+    fail_at: Vec<(u64, usize)>,
+) -> (Vec<(u64, Tensor)>, fourier_peft::cluster::ClusterStats) {
+    let mut cfg = ClusterCfg::new(nodes, replicas);
+    cfg.fail_at = fail_at;
+    let cluster = Cluster::build(&tmpdir(tag), &wl(), cfg).unwrap();
+    cluster.serve_open_loop(arrivals(), &sched(), &adm()).unwrap()
+}
+
+// --- tentpole: replica invariance ------------------------------------------
+
+/// The acceptance matrix: every (nodes, replicas) shape, a seeded
+/// fail-stop schedule, and a re-run must produce the same response bits
+/// and the same shed-id digest as the 1-node baseline.
+#[test]
+fn cluster_bitwise_invariant_across_nodes_replicas_failures_and_reruns() {
+    let mid = arrivals()[arrivals().len() / 2].arrive_tick;
+    let (base_res, base_stats) = serve_config("base_n1r1", 1, 1, vec![]);
+    assert!(!base_res.is_empty(), "baseline served nothing");
+    assert!(base_stats.total.shed > 0, "workload must shed for the gate to mean anything");
+    let base_digest = response_digest(&base_res).unwrap();
+    let base_shed = shed_digest(&base_stats.total.shed_ids);
+
+    for (tag, nodes, replicas, fail_at) in [
+        ("n2r1", 2, 1, vec![]),
+        ("n2r2", 2, 2, vec![]),
+        ("n4r1", 4, 1, vec![]),
+        ("n4r2", 4, 2, vec![]),
+        ("n4r2_fail", 4, 2, vec![(mid, 1usize)]),
+        ("n4r2_rerun", 4, 2, vec![]),
+    ] {
+        let (res, stats) = serve_config(tag, nodes, replicas, fail_at);
+        assert_bitwise_equal(&base_res, &res, tag);
+        assert_eq!(response_digest(&res).unwrap(), base_digest, "{tag}: response digest");
+        assert_eq!(stats.total.shed_ids, base_stats.total.shed_ids, "{tag}: shed ids");
+        assert_eq!(shed_digest(&stats.total.shed_ids), base_shed, "{tag}: shed digest");
+        assert_eq!(stats.total.offered, base_stats.total.offered, "{tag}: offered");
+    }
+}
+
+/// A run that loses node 1 mid-wave and a replay where node 1 was dead
+/// from tick 0 (the survivor replay) must agree bitwise — the failure
+/// schedule moves requests between nodes, never changes their answers.
+#[test]
+fn cluster_fail_at_run_matches_survivor_replay() {
+    let mid = arrivals()[arrivals().len() / 2].arrive_tick;
+    let (res_fail, stats_fail) = serve_config("failmid", 4, 2, vec![(mid, 1)]);
+    let (res_surv, stats_surv) = serve_config("survivor", 4, 2, vec![(0, 1)]);
+    assert_bitwise_equal(&res_fail, &res_surv, "fail-at vs survivor replay");
+    assert_eq!(stats_fail.total.shed_ids, stats_surv.total.shed_ids);
+    // The dead-from-tick-0 replay serves nothing on node 1 and fails
+    // over everything that would have landed there.
+    assert_eq!(stats_surv.per_node[1].requests, 0, "dead node served requests");
+    assert!(
+        stats_surv.failovers >= stats_fail.failovers,
+        "longer dead window cannot mean fewer failovers"
+    );
+    assert!(
+        stats_fail.failovers > 0 || stats_fail.per_node[1].offered == 0,
+        "node 1 took traffic but its mid-wave death caused no failover"
+    );
+}
+
+// --- single-node parity -----------------------------------------------------
+
+/// nodes=1 must be a strict wrapper: identical bits AND an identical
+/// open-loop ledger (offered / shed / shed ids / goodput) to calling
+/// the single-node scheduler directly on the same pinned queue.
+#[test]
+fn cluster_single_node_parity_with_flat_scheduler() {
+    let (res_c, stats_c) = serve_config("parity", 1, 1, vec![]);
+
+    let dir = tmpdir("parity_flat");
+    let store = SharedAdapterStore::with_shards_keep(&dir, 4, 64, 4).unwrap();
+    let names = workload::populate_store(&store, &wl()).unwrap();
+    for name in &names {
+        let file = store.load(name).unwrap();
+        store.publish(name, &file).unwrap();
+    }
+    let swap = fourier_peft::coordinator::serving::SharedSwap::with_shards(
+        workload::site_dims(&wl()),
+        4,
+        64,
+    );
+    let mut queue = arrivals();
+    workload::pin_timed_requests(&mut queue, |n| store.latest_version(n).ok().filter(|v| *v > 0));
+    let (res_f, stats_f) = serve_open_loop_host(&swap, &store, queue, &sched(), &adm()).unwrap();
+
+    assert_bitwise_equal(&res_c, &res_f, "cluster(1) vs flat scheduler");
+    assert_eq!(stats_c.total.offered, stats_f.offered, "offered");
+    assert_eq!(stats_c.total.shed, stats_f.shed, "shed");
+    assert_eq!(stats_c.total.shed_ids, stats_f.shed_ids, "shed ids");
+    assert_eq!(stats_c.total.requests, stats_f.requests, "requests");
+    assert_eq!(stats_c.total.goodput, stats_f.goodput, "goodput");
+    assert_eq!(stats_c.total.deadline_misses, stats_f.deadline_misses, "deadline misses");
+}
+
+// --- aggregation: sums vs maxes --------------------------------------------
+
+/// Offered / shed / served / goodput must SUM across nodes to the global
+/// admission figures (no double counting, no loss); `queue_depth_peak`
+/// and `peak_bytes` must be cross-node MAXes, not sums.
+#[test]
+fn cluster_stats_aggregation_sums_and_maxes() {
+    let (res, stats) = serve_config("agg", 4, 2, vec![]);
+
+    // Recompute the global admission ledger independently.
+    let mut queue = arrivals();
+    workload::pin_timed_requests(&mut queue, |_| Some(1));
+    let offered = queue.len();
+    let admission = admit(queue, &adm());
+    let mut expect_shed: Vec<u64> = admission.shed.iter().map(|&(id, _, _)| id).collect();
+    expect_shed.sort_unstable();
+
+    assert_eq!(stats.total.offered, offered);
+    assert_eq!(stats.total.shed_ids, expect_shed);
+    assert_eq!(stats.total.requests, res.len());
+    assert_eq!(stats.total.requests + stats.total.shed, offered, "served + shed = offered");
+
+    let sum_offered: usize = stats.per_node.iter().map(|s| s.offered).sum();
+    let sum_shed: usize = stats.per_node.iter().map(|s| s.shed).sum();
+    let sum_requests: usize = stats.per_node.iter().map(|s| s.requests).sum();
+    let sum_goodput: usize = stats.per_node.iter().map(|s| s.goodput).sum();
+    assert_eq!(sum_offered, stats.total.offered, "offered must sum exactly");
+    assert_eq!(sum_shed, stats.total.shed, "shed must sum exactly");
+    assert_eq!(sum_requests, stats.total.requests, "served must sum exactly");
+    assert_eq!(sum_goodput, stats.total.goodput, "goodput must sum exactly");
+
+    let max_depth = stats.per_node.iter().map(|s| s.queue_depth_peak).max().unwrap();
+    let max_peak = stats.per_node.iter().map(|s| s.peak_bytes).max().unwrap();
+    assert_eq!(stats.total.queue_depth_peak, max_depth, "queue_depth_peak is a max");
+    assert_eq!(stats.total.peak_bytes, max_peak, "peak_bytes is a max");
+    let sum_peak: u64 = stats.per_node.iter().map(|s| s.peak_bytes).sum();
+    assert!(
+        stats.total.peak_bytes <= sum_peak,
+        "a summed peak would double-count node residency"
+    );
+}
+
+// --- placement property tests ----------------------------------------------
+
+fn keys_1k() -> Vec<String> {
+    (0..1000).map(workload::adapter_name).collect()
+}
+
+fn primary_counts(ring: &Ring, keys: &[String]) -> BTreeMap<usize, usize> {
+    let mut counts = BTreeMap::new();
+    for k in keys {
+        *counts.entry(ring.primary(k).unwrap()).or_insert(0) += 1;
+    }
+    counts
+}
+
+/// 1k adapters × 8 nodes: deterministic across rebuilds, every node
+/// takes load, and max/mean imbalance is bounded.
+#[test]
+fn ring_is_deterministic_and_balanced_at_1k_keys_8_nodes() {
+    let nodes: Vec<usize> = (0..8).collect();
+    let ring = Ring::new(&nodes, 64);
+    let again = Ring::new(&nodes, 64);
+    let keys = keys_1k();
+    for k in &keys {
+        assert_eq!(ring.primary(k), again.primary(k), "placement must be deterministic");
+        assert_eq!(ring.replicas(k, 2), again.replicas(k, 2));
+    }
+    let counts = primary_counts(&ring, &keys);
+    assert_eq!(counts.len(), 8, "every node must take some load");
+    let mean = keys.len() as f64 / 8.0;
+    let max = *counts.values().max().unwrap() as f64;
+    let min = *counts.values().min().unwrap();
+    assert!(max <= 3.0 * mean, "max load {max} vs mean {mean}: too imbalanced");
+    assert!(min >= 1, "a node got zero keys");
+}
+
+/// Join / leave move ≈1/N of keys — every moved key moves for the right
+/// reason (to the joined node / off the removed node), nothing else
+/// moves, and the naive `hash % N` reference moves far more.
+#[test]
+fn ring_moves_minimal_keys_on_join_and_leave_vs_naive() {
+    let keys = keys_1k();
+    let before = Ring::new(&(0..8).collect::<Vec<_>>(), 64);
+    let mut joined = before.clone();
+    joined.add_node(8);
+
+    let mut moved_join = 0usize;
+    for k in &keys {
+        let (old, new) = (before.primary(k).unwrap(), joined.primary(k).unwrap());
+        if old != new {
+            moved_join += 1;
+            assert_eq!(new, 8, "a key moved between two old nodes on join");
+        }
+    }
+    assert!(moved_join > 0, "a 9th node must take some keys");
+    assert!(
+        moved_join <= keys.len() / 4,
+        "join moved {moved_join}/1000 keys; consistent hashing should move ≈1/9"
+    );
+    // The replica-set view agrees with the primary view at r=1.
+    assert_eq!(moved_keys(&before, &joined, &keys, 1).len(), moved_join);
+
+    let mut left = before.clone();
+    left.remove_node(3);
+    let mut moved_leave = 0usize;
+    for k in &keys {
+        let (old, new) = (before.primary(k).unwrap(), left.primary(k).unwrap());
+        if old != new {
+            moved_leave += 1;
+            assert_eq!(old, 3, "a key moved that the removed node never owned");
+            assert_ne!(new, 3);
+        }
+    }
+    let owned_by_3 = primary_counts(&before, &keys)[&3];
+    assert_eq!(moved_leave, owned_by_3, "exactly the removed node's keys move");
+
+    // Naive reference: primary = fnv64(key) % N. Adding a node rehashes
+    // nearly everything.
+    let naive_moved = keys.iter().filter(|k| fnv64(k) % 8 != fnv64(k) % 9).count();
+    assert!(
+        naive_moved >= 2 * moved_join,
+        "naive mod-hash moved {naive_moved}, ring moved {moved_join}: \
+         the ring must move at most half as much"
+    );
+}
+
+// --- version fence ----------------------------------------------------------
+
+/// Publish storm protocol: a partially-staged v2 must not change a
+/// single served bit (the fence still pins v1 everywhere); once every
+/// replica stages and the fence flips, the new generation serves — and
+/// serves identically on every replica.
+#[test]
+fn fence_partial_stage_serves_old_generation_bitwise() {
+    let cluster = Cluster::build(&tmpdir("fence"), &wl(), ClusterCfg::new(2, 2)).unwrap();
+    let (res_v1, _) = cluster.serve_open_loop(arrivals(), &sched(), &adm()).unwrap();
+
+    // A different generation of the hottest adapter: same geometry,
+    // different seed => different coefficients, different logits.
+    let name = cluster.names()[0].clone();
+    let alt_store = SharedAdapterStore::with_shards(&tmpdir("fence_alt"), 2, 16).unwrap();
+    workload::populate_store(&alt_store, &WorkloadCfg { seed: wl().seed + 1, ..wl() }).unwrap();
+    let v2 = alt_store.load(&name).unwrap();
+
+    let owners = cluster.owners(&name);
+    assert_eq!(owners.len(), 2, "replicas=2 on 2 nodes must place everywhere");
+
+    // Phase 1 on one replica only: fence must refuse to flip, and
+    // serving must still produce the v1 bits.
+    let staged_v = cluster.stage_on(owners[0], &name, &v2).unwrap();
+    assert_eq!(staged_v, 2);
+    assert!(cluster.flip(&name).is_err(), "flip must wait for every replica");
+    assert_eq!(cluster.fence.pinned(&name), Some(1), "fence must still pin v1");
+    let (res_mid, _) = cluster.serve_open_loop(arrivals(), &sched(), &adm()).unwrap();
+    assert_bitwise_equal(&res_v1, &res_mid, "partial stage must not leak v2");
+
+    // Complete the stage and flip: the new generation serves, bitwise
+    // reproducibly.
+    cluster.stage_on(owners[1], &name, &v2).unwrap();
+    assert_eq!(cluster.flip(&name).unwrap(), 2);
+    assert_eq!(cluster.fence.pinned(&name), Some(2));
+    let (res_a, _) = cluster.serve_open_loop(arrivals(), &sched(), &adm()).unwrap();
+    let (res_b, _) = cluster.serve_open_loop(arrivals(), &sched(), &adm()).unwrap();
+    assert_bitwise_equal(&res_a, &res_b, "post-flip serves must agree");
+    assert_ne!(
+        response_digest(&res_v1).unwrap(),
+        response_digest(&res_a).unwrap(),
+        "the flipped generation must actually change the hot adapter's bits"
+    );
+
+    // One-shot publish (stage-all + flip) keeps the numbering monotone.
+    let v3 = cluster.publish(&name, &v2).unwrap();
+    assert_eq!(v3, 3);
+    assert_eq!(cluster.fence.pinned(&name), Some(3));
+}
+
+// --- failure -> rebalance ---------------------------------------------------
+
+/// Fail a node, rebalance: only its keys change owners, the replay is
+/// bitwise-identical to the pre-failure baseline, and the new owners'
+/// cold caches refill (observable as fresh swap-cache builds).
+#[test]
+fn rebalance_moves_only_dead_nodes_keys_and_refills_cold_caches() {
+    let mut cluster = Cluster::build(&tmpdir("rebalance"), &wl(), ClusterCfg::new(4, 1)).unwrap();
+    let (res_before, stats_before) = cluster.serve_open_loop(arrivals(), &sched(), &adm()).unwrap();
+
+    // Kill the primary of the hottest adapter so the failure certainly
+    // owns keys, then repair the ring.
+    let victim = cluster.owners(&cluster.names()[0])[0];
+    cluster.fail_node(victim, 0);
+    let owned: usize = cluster
+        .names()
+        .iter()
+        .filter(|n| cluster.owners(n)[0] == victim)
+        .count();
+    let report = cluster.rebalance().unwrap();
+    assert_eq!(report.removed, vec![victim]);
+    assert_eq!(report.moved, owned, "exactly the dead node's keys move");
+    assert!(report.moved >= 1, "the victim owned the hottest adapter");
+    // Every node published v1 of everything at build time, so repair
+    // finds the bytes already in place — zero copies, only ownership
+    // moves. (Post-publish failures would transfer real bytes.)
+    assert_eq!(report.synced, 0, "v1 is everywhere; repair should copy nothing");
+    for name in cluster.names() {
+        assert_ne!(cluster.owners(name)[0], victim, "ring still routes to the corpse");
+    }
+
+    let builds = |stats: &fourier_peft::cluster::ClusterStats| -> u64 {
+        stats
+            .per_node_swap
+            .iter()
+            .enumerate()
+            .filter(|&(id, _)| id != victim)
+            .map(|(_, s)| s.tensor_builds + s.delta_builds + s.factor_builds)
+            .sum()
+    };
+    let (res_after, stats_after) = cluster.serve_open_loop(arrivals(), &sched(), &adm()).unwrap();
+    assert_bitwise_equal(&res_before, &res_after, "post-rebalance replay");
+    assert_eq!(stats_after.per_node[victim].offered, 0, "corpse got traffic after repair");
+    assert!(
+        builds(&stats_after) > builds(&stats_before),
+        "survivors must cold-build the keys they inherited"
+    );
+}
+
+/// A joined (empty) node receives exactly the keys it now owns, serves
+/// them bitwise-identically, and everything else stays put.
+#[test]
+fn join_syncs_moved_keys_and_keeps_bits() {
+    let mut cluster = Cluster::build(&tmpdir("join"), &wl(), ClusterCfg::new(3, 1)).unwrap();
+    let (res_before, _) = cluster.serve_open_loop(arrivals(), &sched(), &adm()).unwrap();
+    let owners_before: Vec<Vec<usize>> =
+        cluster.names().iter().map(|n| cluster.owners(n)).collect();
+
+    let (id, report) = cluster.join_node().unwrap();
+    assert_eq!(id, 3);
+    // The join starts from an empty store, so every moved key is a real
+    // transfer; unmoved keys keep their owners.
+    assert_eq!(report.synced, report.moved, "cold join must copy each moved key once");
+    let mut gained = 0usize;
+    for (name, old) in cluster.names().iter().zip(&owners_before) {
+        let new = cluster.owners(name);
+        if new != *old {
+            gained += 1;
+            assert_eq!(new[0], id, "a key moved between two old nodes on join");
+        }
+    }
+    assert_eq!(gained, report.moved, "report must count exactly the re-owned keys");
+
+    let (res_after, stats_after) = cluster.serve_open_loop(arrivals(), &sched(), &adm()).unwrap();
+    assert_bitwise_equal(&res_before, &res_after, "post-join replay");
+    if report.moved > 0 {
+        assert!(
+            stats_after.per_node[id].offered > 0,
+            "the joined node owns keys but got no traffic"
+        );
+    }
+}
