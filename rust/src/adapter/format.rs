@@ -1,14 +1,14 @@
-//! Binary adapter checkpoint format (v3) + v1/v2 read-compat shims.
+//! Binary adapter checkpoint format (v4) + v1/v2/v3 read-compat shims.
 //!
 //! The paper's pitch is storage: a FourierFT fine-tune of RoBERTa-base is
 //! 18.8 KB vs LoRA's 574 KB. This module is the concrete artifact: a
 //! little-endian binary container with a small header, a JSON-free
 //! metadata section, and raw tensor payloads.
 //!
-//! ## v3 layout (all little-endian)
+//! ## v3/v4 layout (all little-endian)
 //!
 //! ```text
-//! magic   u32   0x46465433  ("FFT3")
+//! magic   u32   0x46465433 ("FFT3") / 0x46465434 ("FFT4")
 //! method  str   registered method id ("fourierft", "lora", "loca", ...)
 //! version u64   monotonic publish version (0 = never published)
 //! seed    u64   entry/location seed (spectral methods) or 0
@@ -28,6 +28,22 @@
 //! site carries its (d1, d2) weight dims — so reconstruction
 //! ([`crate::adapter::method::site_deltas`]) needs neither a dims callback
 //! nor tensor-name suffix guessing.
+//!
+//! ## v4: quantized payloads
+//!
+//! v4 is v3 plus two optional per-tensor storage encodings from
+//! [`super::quant`], selected by new dtype tags: `2` = f16 (payload is
+//! `numel × u16` binary16 bits) and `3` = int8 (payload is `f32 scale,
+//! f32 zero, numel × u8` affine codes). `save` stamps `MAGIC_V4` **only
+//! when some tensor actually uses a quantized encoding** — an all-f32
+//! file writes the identical v3 bytes it always did, so existing
+//! fixtures, digests, and mixed-version fleets are untouched. The v3
+//! reader (and the v1/v2 shims) reject the quantized tags; only v4
+//! accepts them. In memory a quantized tensor holds its *dequantized*
+//! f32 values plus the [`Enc`] parameters, and `save` re-encodes with
+//! those stored parameters — exact by the grid-point argument in
+//! [`super::quant`] — so load → save round-trips byte-identically and
+//! reconstruction stays deterministic (the serving digest contract).
 //!
 //! ## v2 compat
 //!
@@ -56,6 +72,8 @@
 //! trick taken to its logical end (0 bytes per layer).
 
 use super::method;
+pub use super::quant::Enc;
+use super::quant::{f16_from_f32, f16_to_f32, int8_decode, int8_encode};
 use crate::tensor::{Data, Tensor};
 use anyhow::{anyhow, bail, Result};
 use std::io::{Read, Write};
@@ -64,6 +82,7 @@ use std::path::Path;
 const MAGIC_V1: u32 = 0x4646_5431;
 const MAGIC_V2: u32 = 0x4646_5432;
 const MAGIC_V3: u32 = 0x4646_5433;
+const MAGIC_V4: u32 = 0x4646_5434;
 
 /// Role name of task-head tensors (replace rather than add at merge time).
 pub const ROLE_HEAD: &str = "head";
@@ -87,7 +106,12 @@ pub struct TensorEntry {
     pub name: String,
     pub site: String,
     pub role: String,
+    /// In-memory values — always dequantized f32 (or i32), regardless of
+    /// the storage encoding in `enc`.
     pub tensor: Tensor,
+    /// Storage encoding for the payload (v4 quantization). `Enc::F32`
+    /// (the default) is the exact legacy encoding.
+    pub enc: Enc,
 }
 
 impl TensorEntry {
@@ -97,6 +121,7 @@ impl TensorEntry {
             site: site.to_string(),
             role: role.to_string(),
             tensor,
+            enc: Enc::F32,
         }
     }
 }
@@ -139,7 +164,7 @@ impl AdapterFile {
         let mut tensors = Vec::with_capacity(named.len());
         for (name, tensor) in named {
             let (site, role) = classify_name(m.as_ref(), &name);
-            tensors.push(TensorEntry { name, site, role, tensor });
+            tensors.push(TensorEntry { name, site, role, tensor, enc: Enc::F32 });
         }
         // One pass to group tensors per site (first-seen order), then one
         // dims resolution per site — O(tensors), not O(sites × tensors).
@@ -206,14 +231,29 @@ impl AdapterFile {
         }
         for e in &self.tensors {
             sz += 4 + e.name.len() + 4 + e.site.len() + 4 + e.role.len();
-            sz += 1 + 4 + 8 * e.tensor.shape.len() + 4 * e.tensor.len();
+            // i32 payloads are always exact 4-byte words; only f32 data
+            // takes the (possibly quantized) encoding's payload size.
+            let payload = match &e.tensor.data {
+                Data::I32(_) => 4 * e.tensor.len(),
+                Data::F32(_) => e.enc.payload_bytes(e.tensor.len()),
+            };
+            sz += 1 + 4 + 8 * e.tensor.shape.len() + payload;
         }
         sz
     }
 
+    /// True when some tensor uses a quantized storage encoding — i.e.
+    /// `save` will stamp `MAGIC_V4` instead of `MAGIC_V3`.
+    pub fn is_quantized(&self) -> bool {
+        self.tensors.iter().any(|e| e.enc != Enc::F32)
+    }
+
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut buf: Vec<u8> = Vec::with_capacity(self.byte_size());
-        buf.extend(MAGIC_V3.to_le_bytes());
+        // All-f32 files keep writing the exact v3 bytes they always did;
+        // only an actually-quantized payload opts the file into v4.
+        let magic = if self.is_quantized() { MAGIC_V4 } else { MAGIC_V3 };
+        buf.extend(magic.to_le_bytes());
         write_str(&mut buf, &self.method);
         buf.extend(self.version.to_le_bytes());
         buf.extend(self.seed.to_le_bytes());
@@ -234,7 +274,7 @@ impl AdapterFile {
             write_str(&mut buf, &e.name);
             write_str(&mut buf, &e.site);
             write_str(&mut buf, &e.role);
-            write_tensor(&mut buf, &e.tensor);
+            write_tensor(&mut buf, &e.tensor, e.enc);
         }
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
@@ -253,27 +293,34 @@ impl AdapterFile {
     pub fn from_bytes(b: &[u8]) -> Result<AdapterFile> {
         let mut r = Reader { b, i: 0 };
         match r.u32()? {
-            MAGIC_V3 => Self::read_v3(&mut r),
+            // v4 = v3 + quantized dtype tags; v3 strictly rejects them.
+            MAGIC_V4 => Self::read_v34(&mut r, true),
+            MAGIC_V3 => Self::read_v34(&mut r, false),
             MAGIC_V2 => Self::read_v2(&mut r),
             MAGIC_V1 => Self::read_v1(&mut r),
             _ => bail!("bad magic: not a fourier-peft adapter file"),
         }
     }
 
-    fn read_v3(r: &mut Reader) -> Result<AdapterFile> {
+    fn read_v34(r: &mut Reader, allow_quant: bool) -> Result<AdapterFile> {
         let method_id = r.string()?;
         let version = r.u64()?;
-        Self::read_body(r, method_id, version)
+        Self::read_body(r, method_id, version, allow_quant)
     }
 
     /// v2 shim: identical to v3 minus the version word; loads as
     /// version 0 with byte-identical payloads.
     fn read_v2(r: &mut Reader) -> Result<AdapterFile> {
         let method_id = r.string()?;
-        Self::read_body(r, method_id, 0)
+        Self::read_body(r, method_id, 0, false)
     }
 
-    fn read_body(r: &mut Reader, method_id: String, version: u64) -> Result<AdapterFile> {
+    fn read_body(
+        r: &mut Reader,
+        method_id: String,
+        version: u64,
+        allow_quant: bool,
+    ) -> Result<AdapterFile> {
         let seed = r.u64()?;
         let alpha = f32::from_le_bytes(r.bytes(4)?.try_into().unwrap());
         let n_meta = r.u32()? as usize;
@@ -295,8 +342,8 @@ impl AdapterFile {
             let name = r.string()?;
             let site = r.string()?;
             let role = r.string()?;
-            let tensor = read_tensor(r)?;
-            tensors.push(TensorEntry { name, site, role, tensor });
+            let (tensor, enc) = read_tensor(r, allow_quant)?;
+            tensors.push(TensorEntry { name, site, role, tensor, enc });
         }
         Ok(AdapterFile { method: method_id, version, seed, alpha, meta, sites, tensors })
     }
@@ -320,9 +367,9 @@ impl AdapterFile {
         let mut tensors = Vec::with_capacity(n_tens);
         for _ in 0..n_tens {
             let name = r.string()?;
-            let tensor = read_tensor(r)?;
+            let (tensor, enc) = read_tensor(r, false)?;
             let (site, role) = classify_name(m.as_ref(), &name);
-            tensors.push(TensorEntry { name, site, role, tensor });
+            tensors.push(TensorEntry { name, site, role, tensor, enc });
         }
         Ok(AdapterFile {
             method: method_id.to_string(),
@@ -353,16 +400,38 @@ fn write_str(buf: &mut Vec<u8>, s: &str) {
     buf.extend(s.as_bytes());
 }
 
-fn write_tensor(buf: &mut Vec<u8>, t: &Tensor) {
-    match &t.data {
-        Data::F32(v) => {
+/// Serialize one tensor under its storage encoding. Dtype tags:
+/// `0` = f32, `1` = i32 (exact, v1+); `2` = f16 bits, `3` = int8 affine
+/// (v4 only). Quantized entries hold dequantized values in memory, so
+/// re-encoding with the stored parameters reproduces the payload bytes
+/// exactly (see [`super::quant`]).
+fn write_tensor(buf: &mut Vec<u8>, t: &Tensor, enc: Enc) {
+    match (&t.data, enc) {
+        (Data::F32(v), Enc::F32) => {
             buf.push(0);
             write_dims(buf, &t.shape);
             for x in v {
                 buf.extend(x.to_le_bytes());
             }
         }
-        Data::I32(v) => {
+        (Data::F32(v), Enc::F16) => {
+            buf.push(2);
+            write_dims(buf, &t.shape);
+            for &x in v {
+                buf.extend(f16_from_f32(x).to_le_bytes());
+            }
+        }
+        (Data::F32(v), Enc::Int8 { scale, zero }) => {
+            buf.push(3);
+            write_dims(buf, &t.shape);
+            buf.extend(scale.to_le_bytes());
+            buf.extend(zero.to_le_bytes());
+            for &x in v {
+                buf.push(int8_encode(x, scale, zero));
+            }
+        }
+        // i32 payloads (entry-location ids etc.) are never quantized.
+        (Data::I32(v), _) => {
             buf.push(1);
             write_dims(buf, &t.shape);
             for x in v {
@@ -379,7 +448,7 @@ fn write_dims(buf: &mut Vec<u8>, dims: &[usize]) {
     }
 }
 
-fn read_tensor(r: &mut Reader) -> Result<Tensor> {
+fn read_tensor(r: &mut Reader, allow_quant: bool) -> Result<(Tensor, Enc)> {
     let dt = r.u8()?;
     let rank = r.u32()? as usize;
     let mut shape = Vec::with_capacity(rank);
@@ -387,6 +456,9 @@ fn read_tensor(r: &mut Reader) -> Result<Tensor> {
         shape.push(r.u64()? as usize);
     }
     let numel: usize = shape.iter().product();
+    if (dt == 2 || dt == 3) && !allow_quant {
+        bail!("quantized dtype tag {dt} requires a format v4 file");
+    }
     Ok(match dt {
         0 => {
             let raw = r.bytes(4 * numel)?;
@@ -394,7 +466,7 @@ fn read_tensor(r: &mut Reader) -> Result<Tensor> {
                 .chunks_exact(4)
                 .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                 .collect();
-            Tensor::f32(&shape, v)
+            (Tensor::f32(&shape, v), Enc::F32)
         }
         1 => {
             let raw = r.bytes(4 * numel)?;
@@ -402,7 +474,22 @@ fn read_tensor(r: &mut Reader) -> Result<Tensor> {
                 .chunks_exact(4)
                 .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
                 .collect();
-            Tensor::i32(&shape, v)
+            (Tensor::i32(&shape, v), Enc::F32)
+        }
+        2 => {
+            let raw = r.bytes(2 * numel)?;
+            let v = raw
+                .chunks_exact(2)
+                .map(|c| f16_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+                .collect();
+            (Tensor::f32(&shape, v), Enc::F16)
+        }
+        3 => {
+            let scale = f32::from_le_bytes(r.bytes(4)?.try_into().unwrap());
+            let zero = f32::from_le_bytes(r.bytes(4)?.try_into().unwrap());
+            let raw = r.bytes(numel)?;
+            let v = raw.iter().map(|&q| int8_decode(q, scale, zero)).collect();
+            (Tensor::f32(&shape, v), Enc::Int8 { scale, zero })
         }
         other => bail!("unknown dtype tag {other}"),
     })
@@ -542,6 +629,78 @@ mod tests {
     fn rejects_garbage() {
         assert!(AdapterFile::from_bytes(&[0u8; 8]).is_err());
         assert!(AdapterFile::from_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn all_f32_files_still_write_v3_bytes() {
+        // Quantization must be strictly opt-in: an unquantized file's
+        // bytes (magic included) are exactly what v3 wrote, keeping old
+        // fixtures and mixed-version fleets byte-compatible.
+        let a = sample();
+        assert!(!a.is_quantized());
+        let dir = std::env::temp_dir().join("fourier_peft_test_fmt_v3magic");
+        let path = dir.join("f32.fft");
+        a.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..4], MAGIC_V3.to_le_bytes());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn quantized_files_save_as_v4_and_round_trip_byte_identically() {
+        use crate::adapter::quant::{quantize_file, QuantKind};
+        for (kind, tag) in [(QuantKind::F16, "f16"), (QuantKind::Int8, "int8")] {
+            let q = quantize_file(&sample(), kind);
+            assert!(q.is_quantized());
+            let dir = std::env::temp_dir().join("fourier_peft_test_fmt_v4");
+            let path = dir.join(format!("{tag}.fft"));
+            q.save(&path).unwrap();
+            let bytes = std::fs::read(&path).unwrap();
+            assert_eq!(&bytes[..4], MAGIC_V4.to_le_bytes(), "{tag}");
+            assert_eq!(bytes.len(), q.byte_size(), "{tag}: byte_size must stay exact");
+            // Load returns the dequantized values + parameters unchanged…
+            let b = AdapterFile::from_bytes(&bytes).unwrap();
+            assert_eq!(q.tensors, b.tensors, "{tag}");
+            assert_eq!(q.sites, b.sites, "{tag}");
+            // …and resaving reproduces the exact bytes (determinism
+            // anchor: quantization is lossy once, at quantize_file time).
+            let path2 = dir.join(format!("{tag}_resave.fft"));
+            b.save(&path2).unwrap();
+            assert_eq!(bytes, std::fs::read(&path2).unwrap(), "{tag}");
+            // The i32 tensor passed through exact.
+            let ids = b.tensors.iter().find(|e| e.name == "ids").unwrap();
+            assert_eq!(ids.enc, Enc::F32);
+            assert_eq!(ids.tensor, Tensor::i32(&[2, 3], vec![1, 2, 3, 4, 5, 6]));
+            std::fs::remove_file(&path).unwrap();
+            std::fs::remove_file(&path2).unwrap();
+        }
+    }
+
+    #[test]
+    fn v3_reader_rejects_quantized_tags() {
+        use crate::adapter::quant::{quantize_file, QuantKind};
+        let q = quantize_file(&sample(), QuantKind::F16);
+        let dir = std::env::temp_dir().join("fourier_peft_test_fmt_v4strict");
+        let path = dir.join("strict.fft");
+        q.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[..4].copy_from_slice(&MAGIC_V3.to_le_bytes());
+        let err = AdapterFile::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("v4"), "got: {err:#}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn quantized_byte_sizes_shrink_as_documented() {
+        use crate::adapter::quant::{quantize_file, QuantKind};
+        // Payload-only deltas for sample(): 64 + 12 f32 elements become
+        // 2 bytes/elem (f16) or 1 byte/elem + 8 param bytes (int8); the
+        // i32 tensor and the container around them are unchanged.
+        let a = sample();
+        let f16 = quantize_file(&a, QuantKind::F16);
+        let i8q = quantize_file(&a, QuantKind::Int8);
+        assert_eq!(a.byte_size() - f16.byte_size(), (64 + 12) * 2);
+        assert_eq!(a.byte_size() - i8q.byte_size(), (64 + 12) * 3 - 2 * 8);
     }
 
     #[test]

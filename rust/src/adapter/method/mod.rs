@@ -627,6 +627,7 @@ pub fn init_adapter(
                 site: spec.name.clone(),
                 role,
                 tensor,
+                enc: super::quant::Enc::F32,
             });
         }
         dim_records.push(super::format::SiteDims {

@@ -6,10 +6,13 @@
 //!   `dense`/`bitfit`, `loca`, `circulant`, and anything user-registered)
 //!   dispatches through one table shared by merge, serving, budgets, and
 //!   the CLI. See the module docs for "how to add a method".
-//! * [`format`] — the self-describing binary checkpoint format (v3):
-//!   method id, monotonic publish version, per-site dims, and per-tensor
-//!   roles live in the file; v1/v2 files load through read-compat shims
-//!   (reporting version 0).
+//! * [`format`] — the self-describing binary checkpoint format (v4):
+//!   method id, monotonic publish version, per-site dims, per-tensor
+//!   roles, and optional quantized payload encodings live in the file;
+//!   v1/v2/v3 files load through read-compat shims.
+//! * [`quant`] — the f16 / affine-int8 storage codecs behind format v4's
+//!   quantized encodings, with the deterministic dequantize-once contract
+//!   that keeps serving digests stable for quantized fleets.
 //! * [`budget`] — exact trainable-parameter / byte arithmetic reproducing
 //!   the paper's Table 1, plus registry-driven cross-method budgets.
 //! * [`store`] — a multi-adapter registry over one frozen base model with
@@ -24,9 +27,11 @@ pub mod budget;
 pub mod format;
 pub mod merge;
 pub mod method;
+pub mod quant;
 pub mod store;
 
 pub use budget::{fourierft_params, lora_params, Table1Row, TABLE1};
 pub use format::{AdapterFile, SiteDims, TensorEntry};
 pub use method::{DeltaMethod, MethodHp, SiteSpec};
+pub use quant::{Enc, QuantKind};
 pub use store::{AdapterStore, SharedAdapterStore};

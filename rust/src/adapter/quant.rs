@@ -1,0 +1,390 @@
+//! Per-tensor quantized encodings for adapter checkpoints (format v4).
+//!
+//! The paper's fleet-scale pitch is millions of per-user adapters at
+//! ~0.06M params each; at that count the dominant cost is stored bytes,
+//! and the standard move from the LoRA-serving literature is per-tensor
+//! quantization with an affine scale/zero-point. This module holds the
+//! two optional storage encodings understood by format v4:
+//!
+//! * **f16** — IEEE 754 binary16, round-to-nearest-even, 2 bytes/elem.
+//!   Exactly round-trips every f16-representable f32 (all our committed
+//!   fixture coefficients are chosen to be), relative error ≤ 2⁻¹¹ for
+//!   normal-range values otherwise.
+//! * **int8** — affine `q = round(x/scale + zero)` over [0, 255] with a
+//!   per-tensor f32 `scale`/`zero`, 1 byte/elem + 8 bytes of parameters.
+//!   The quantization range always includes 0 so exact zeros stay exact.
+//!
+//! **Determinism contract.** An in-memory [`super::format::TensorEntry`]
+//! always holds the *dequantized* f32 values next to its [`Enc`]
+//! parameters; `save` re-encodes with the stored parameters. Because
+//! `decode(encode(x))` lands exactly on a representable grid point and
+//! re-encoding a grid point recovers its code exactly (the rounding
+//! error is far below 1/2 ulp of the grid), load → save is byte-identical
+//! and every serve from a given file reconstructs bit-identical tensors.
+//! Quantization is *lossy once*, at [`quantize_file`] time; everything
+//! downstream is exact, which is what keeps the serving digest contract
+//! alive for quantized fleets (f32 payloads are untouched and stay
+//! bitwise).
+
+use super::format::AdapterFile;
+use crate::tensor::{Data, Tensor};
+use anyhow::{bail, Result};
+
+/// Storage encoding of one tensor's payload. `F32` is the exact legacy
+/// encoding (and the only one v1–v3 files can hold); the quantized
+/// encodings carry their dequantization parameters so the in-memory
+/// (dequantized) values re-encode bit-exactly on save.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Enc {
+    /// Exact little-endian f32 payload (4 bytes/elem). Also used for
+    /// i32 tensors, whose payload is never quantized.
+    F32,
+    /// IEEE 754 binary16 payload (2 bytes/elem), round-to-nearest-even.
+    F16,
+    /// Affine u8 payload (8 parameter bytes + 1 byte/elem):
+    /// `x ≈ (q - zero) * scale`, `q ∈ [0, 255]`.
+    Int8 { scale: f32, zero: f32 },
+}
+
+impl Default for Enc {
+    fn default() -> Self {
+        Enc::F32
+    }
+}
+
+impl Enc {
+    /// Exact serialized payload size for `numel` elements of f32 data
+    /// under this encoding (i32 tensors are always 4 bytes/elem
+    /// regardless of `Enc` — see `format::write_tensor`).
+    pub fn payload_bytes(&self, numel: usize) -> usize {
+        match self {
+            Enc::F32 => 4 * numel,
+            Enc::F16 => 2 * numel,
+            Enc::Int8 { .. } => 8 + numel,
+        }
+    }
+}
+
+/// Which quantized encoding to apply to a file's f32 tensors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantKind {
+    F16,
+    Int8,
+}
+
+impl std::str::FromStr for QuantKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<QuantKind> {
+        match s {
+            "f16" => Ok(QuantKind::F16),
+            "int8" => Ok(QuantKind::Int8),
+            other => bail!("unknown quantization '{other}' (expected f16|int8|f32)"),
+        }
+    }
+}
+
+impl std::fmt::Display for QuantKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            QuantKind::F16 => "f16",
+            QuantKind::Int8 => "int8",
+        })
+    }
+}
+
+/// f32 → f16 bits, IEEE round-to-nearest-even. Handles subnormals,
+/// overflow to ±inf, and quiets NaN payloads. Pure integer arithmetic so
+/// the result is identical on every platform.
+pub fn f16_from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf stays inf; NaN becomes a quiet NaN with the top payload bit.
+        return sign | 0x7c00 | if man != 0 { 0x0200 | (man >> 13) as u16 & 0x3ff } else { 0 };
+    }
+    let e16 = exp - 127 + 15;
+    if e16 >= 0x1f {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e16 <= 0 {
+        if e16 < -10 {
+            return sign; // underflow → signed zero
+        }
+        // Subnormal half: shift the (implicit-1) mantissa into place and
+        // round to nearest even on the dropped bits.
+        let full = man | 0x0080_0000;
+        let shift = (14 - e16) as u32;
+        let half = (full >> shift) as u16;
+        let rem = full & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let round_up = rem > halfway || (rem == halfway && (half & 1) == 1);
+        return sign | (half + u16::from(round_up));
+    }
+    // Normal half: keep 10 mantissa bits, round to nearest even on the
+    // dropped 13. A rounding carry may overflow into the exponent —
+    // the +1 then lands on the correct next binade (or inf) by layout.
+    let half = ((e16 as u16) << 10) | (man >> 13) as u16;
+    let rem = man & 0x1fff;
+    let round_up = rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1);
+    sign.wrapping_add(half).wrapping_add(u16::from(round_up)) // sign bit is disjoint; carry can't reach it
+}
+
+/// f16 bits → f32, exact (every f16 value is f32-representable).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = u32::from(h & 0x8000) << 16;
+    let exp = i32::from((h >> 10) & 0x1f);
+    let man = u32::from(h & 0x03ff);
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13) // inf / NaN
+    } else if exp == 0 {
+        if man == 0 {
+            sign // signed zero
+        } else {
+            // Subnormal half: renormalize. The leading set bit of the
+            // 10-bit mantissa becomes the implicit 1 of the f32.
+            let k = 31 - man.leading_zeros(); // position of leading bit, 0..=9
+            let exp32 = 103 + k; // (-14 - (9 - k)) + 127 ... wait: value = man * 2^-24
+            let man32 = (man ^ (1 << k)) << (23 - k);
+            sign | (exp32 << 23) | man32
+        }
+    } else {
+        sign | (((exp + 112) as u32) << 23) | (man << 13) // rebias 15 → 127
+    };
+    f32::from_bits(bits)
+}
+
+/// Per-tensor affine int8 parameters. The range always includes zero so
+/// exact zeros encode exactly; a constant tensor gets `scale = 1` (any
+/// non-zero scale round-trips a single grid point exactly).
+pub fn int8_params(data: &[f32]) -> (f32, f32) {
+    let mut lo = 0.0f32;
+    let mut hi = 0.0f32;
+    for &x in data {
+        if x.is_finite() {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+    }
+    if hi == lo {
+        return (1.0, 0.0);
+    }
+    let scale = (hi - lo) / 255.0;
+    let zero = (-lo / scale).round().clamp(0.0, 255.0);
+    (scale, zero)
+}
+
+/// Encode one value onto the affine u8 grid (saturating).
+pub fn int8_encode(x: f32, scale: f32, zero: f32) -> u8 {
+    (x / scale + zero).round().clamp(0.0, 255.0) as u8
+}
+
+/// Decode one grid point. `decode(encode(x))` is a grid point that
+/// re-encodes to the same code — the determinism anchor for resave.
+pub fn int8_decode(q: u8, scale: f32, zero: f32) -> f32 {
+    (f32::from(q) - zero) * scale
+}
+
+/// Relative L2 error `‖a − b‖₂ / ‖b‖₂` (0 when both are all-zero).
+/// Accumulated in f64 so the gate itself adds no noise.
+pub fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "rel_l2: length mismatch");
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        let d = f64::from(x) - f64::from(y);
+        num += d * d;
+        den += f64::from(y) * f64::from(y);
+    }
+    if den == 0.0 {
+        return if num == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    (num / den).sqrt()
+}
+
+/// Quantize one f32 tensor: returns the *dequantized* values (what the
+/// in-memory entry must hold, per the module's determinism contract)
+/// plus the encoding parameters. i32 tensors pass through as exact F32.
+pub fn quantize_tensor(t: &Tensor, kind: QuantKind) -> (Tensor, Enc) {
+    let v = match &t.data {
+        Data::F32(v) => v,
+        Data::I32(_) => return (t.clone(), Enc::F32),
+    };
+    match kind {
+        QuantKind::F16 => {
+            let deq: Vec<f32> = v.iter().map(|&x| f16_to_f32(f16_from_f32(x))).collect();
+            (Tensor::f32(&t.shape, deq), Enc::F16)
+        }
+        QuantKind::Int8 => {
+            let (scale, zero) = int8_params(v);
+            let deq: Vec<f32> =
+                v.iter().map(|&x| int8_decode(int8_encode(x, scale, zero), scale, zero)).collect();
+            (Tensor::f32(&t.shape, deq), Enc::Int8 { scale, zero })
+        }
+    }
+}
+
+/// Re-encode every f32 tensor of a file under `kind`. The result holds
+/// dequantized values + parameters, saves as format v4, and round-trips
+/// byte-identically thereafter. This is the *one* lossy step.
+pub fn quantize_file(file: &AdapterFile, kind: QuantKind) -> AdapterFile {
+    let mut out = file.clone();
+    for e in &mut out.tensors {
+        let (t, enc) = quantize_tensor(&e.tensor, kind);
+        e.tensor = t;
+        e.enc = enc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    #[test]
+    fn f16_known_bit_patterns() {
+        // Hand-verified pairs, including the fixture coefficient set.
+        let cases: &[(f32, u16)] = &[
+            (0.0, 0x0000),
+            (-0.0, 0x8000),
+            (1.0, 0x3c00),
+            (-2.0, 0xc000),
+            (0.5, 0x3800),
+            (-1.25, 0xbd00),
+            (2.0, 0x4000),
+            (-3.5, 0xc300),
+            (0.125, 0x3000),
+            (4.75, 0x44c0),
+            (-0.625, 0xb900),
+            (65504.0, 0x7bff), // f16 max
+            (f32::INFINITY, 0x7c00),
+            (f32::NEG_INFINITY, 0xfc00),
+        ];
+        for &(x, bits) in cases {
+            assert_eq!(f16_from_f32(x), bits, "encode {x}");
+            assert_eq!(f16_to_f32(bits).to_bits(), x.to_bits(), "decode {bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even_and_saturates() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16;
+        // RNE picks the even mantissa (1.0). One ulp above goes up.
+        assert_eq!(f16_from_f32(1.0 + 0.000_488_281_25), 0x3c00);
+        assert_eq!(f16_from_f32(1.0 + 0.000_732_421_875), 0x3c01);
+        // Values past the max finite f16 round to infinity.
+        assert_eq!(f16_from_f32(65520.0), 0x7c00);
+        assert_eq!(f16_from_f32(1e9), 0x7c00);
+        // Tiny values underflow to signed zero.
+        assert_eq!(f16_from_f32(1e-9), 0x0000);
+        assert_eq!(f16_from_f32(-1e-9), 0x8000);
+    }
+
+    #[test]
+    fn f16_subnormals_round_trip() {
+        // Smallest positive subnormal (2^-24) and friends.
+        for bits in [0x0001u16, 0x0002, 0x03ff, 0x8001, 0x83ff, 0x0400, 0x7bff] {
+            let x = f16_to_f32(bits);
+            assert_eq!(f16_from_f32(x), bits, "bits {bits:#06x} → {x} must round-trip");
+        }
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24));
+        assert_eq!(f16_to_f32(0x0400), 2.0f32.powi(-14));
+    }
+
+    #[test]
+    fn f16_round_trip_is_idempotent_on_random_values() {
+        let mut rng = Rng::new(42);
+        for _ in 0..10_000 {
+            let x = rng.normal() * 8.0;
+            let once = f16_to_f32(f16_from_f32(x));
+            let twice = f16_to_f32(f16_from_f32(once));
+            assert_eq!(once.to_bits(), twice.to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn int8_grid_points_reencode_exactly() {
+        // The resave determinism anchor: decode(q) must encode back to q
+        // for every code under the parameters the encoder itself picks.
+        let mut rng = Rng::new(7);
+        for _ in 0..64 {
+            let v = rng.normal_vec(97, 2.5);
+            let (scale, zero) = int8_params(&v);
+            for q in 0..=255u8 {
+                let x = int8_decode(q, scale, zero);
+                assert_eq!(int8_encode(x, scale, zero), q, "scale={scale} zero={zero}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_range_includes_zero_and_handles_constants() {
+        // All-positive data still encodes exact zero exactly.
+        let (scale, zero) = int8_params(&[1.0, 2.0, 3.0]);
+        assert_eq!(zero, 0.0);
+        assert_eq!(int8_decode(int8_encode(0.0, scale, zero), scale, zero), 0.0);
+        // Constant (and all-zero) tensors get the degenerate scale.
+        assert_eq!(int8_params(&[0.0; 8]), (1.0, 0.0));
+        let (s, z) = int8_params(&[4.0; 8]);
+        let deq = int8_decode(int8_encode(4.0, s, z), s, z);
+        assert_eq!(int8_encode(deq, s, z), int8_encode(4.0, s, z));
+    }
+
+    #[test]
+    fn int8_error_stays_inside_the_documented_budget() {
+        // The EXPERIMENTS.md gate: rel-L2 ≤ 1e-2 on seeded normal
+        // coefficients (the shape FourierFT spectral entries take).
+        let mut rng = Rng::new(2024);
+        for n in [64usize, 256] {
+            let v = rng.normal_vec(n, 1.0);
+            let t = Tensor::f32(&[n], v.clone());
+            let (deq, enc) = quantize_tensor(&t, QuantKind::Int8);
+            assert!(matches!(enc, Enc::Int8 { .. }));
+            let err = rel_l2(deq.as_f32().unwrap(), &v);
+            assert!(err > 0.0, "int8 is lossy on generic data");
+            assert!(err <= 1e-2, "n={n}: rel-L2 {err} over budget");
+        }
+    }
+
+    #[test]
+    fn f16_error_is_an_order_tighter_than_int8() {
+        let mut rng = Rng::new(2024);
+        let v = rng.normal_vec(512, 1.0);
+        let t = Tensor::f32(&[512], v.clone());
+        let (deq, _) = quantize_tensor(&t, QuantKind::F16);
+        let err = rel_l2(deq.as_f32().unwrap(), &v);
+        assert!(err > 0.0 && err <= 1e-3, "f16 rel-L2 {err}");
+    }
+
+    #[test]
+    fn quantize_tensor_is_idempotent() {
+        // Quantizing already-dequantized values with the same parameters
+        // changes nothing — the "lossy once" contract.
+        let mut rng = Rng::new(11);
+        let t = Tensor::f32(&[64], rng.normal_vec(64, 1.5));
+        for kind in [QuantKind::F16, QuantKind::Int8] {
+            let (once, enc1) = quantize_tensor(&t, kind);
+            let (twice, enc2) = quantize_tensor(&once, kind);
+            assert_eq!(enc1, enc2);
+            assert_eq!(once.as_f32().unwrap(), twice.as_f32().unwrap());
+        }
+    }
+
+    #[test]
+    fn i32_tensors_pass_through_unquantized() {
+        let t = Tensor::i32(&[3], vec![1, -2, 3]);
+        let (out, enc) = quantize_tensor(&t, QuantKind::Int8);
+        assert_eq!(enc, Enc::F32);
+        assert_eq!(out, t);
+    }
+
+    #[test]
+    fn quant_kind_parses() {
+        assert_eq!("f16".parse::<QuantKind>().unwrap(), QuantKind::F16);
+        assert_eq!("int8".parse::<QuantKind>().unwrap(), QuantKind::Int8);
+        assert!("q4".parse::<QuantKind>().is_err());
+        assert_eq!(QuantKind::F16.to_string(), "f16");
+    }
+}

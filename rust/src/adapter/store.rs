@@ -27,6 +27,35 @@
 //! version it admitted against while later admissions read the republished
 //! current bytes — no layer above needs version plumbing beyond the ref
 //! string (see `coordinator::pipeline`).
+//!
+//! ## Sharded on-disk layout (million-adapter scale)
+//!
+//! A flat directory collapses at 10⁶ files (directory-entry scans go
+//! quadratic on several filesystems, and every `readdir` touches the full
+//! fleet). The store therefore fans out into **256 shard subdirectories**
+//! named by the low byte of the stable FNV-1a hash of the *base* adapter
+//! name ([`shard_dir_name`]):
+//!
+//! ```text
+//! <dir>/a3/<name>.adapter                 current bytes
+//! <dir>/a3/.versions/<name>@<v>.adapter   immutable history
+//! <dir>/a3/.<name>.adapter.tmp            atomic-publish staging
+//! ```
+//!
+//! Versioned refs hash by base name, so an adapter's current file, its
+//! history, and its publish staging always share one shard directory.
+//! Opening a store over a legacy flat directory **migrates on open**
+//! (renames into shard dirs; idempotent, concurrency-safe — a rename
+//! that loses a race is simply skipped). `list`/`total_bytes` stream the
+//! layout in one pass without descending into `.versions/`.
+//!
+//! ## Byte-budgeted decode cache
+//!
+//! The per-shard decode cache evicts by **decoded bytes**
+//! ([`AdapterStore::with_cache_budget`]), not just entry count: this is
+//! the cold tier of the serving stack's hot→warm→cold→disk hierarchy
+//! (see `coordinator::serving`), and its committed residency never
+//! exceeds the budget (`cache_peak_bytes` proves it).
 
 use super::format::AdapterFile;
 use anyhow::{anyhow, ensure, Result};
@@ -47,6 +76,33 @@ const VERSIONS_DIR: &str = ".versions";
 // here because the serving layer and tests import it from the store.
 pub use crate::util::hash::shard_index;
 
+/// Default decode-cache byte budget per [`AdapterStore`] (256 MiB). Far
+/// above what the entry cap admits for typical adapters, so the budget
+/// only binds when explicitly tightened or when files are large.
+pub const DEFAULT_DECODE_BUDGET: u64 = 256 << 20;
+
+/// The 256-way shard subdirectory (`"00"`..`"ff"`) an adapter's files
+/// live in: low byte of the stable FNV-1a hash of the **base** name, so
+/// a name's current file, version history, and publish staging always
+/// colocate (versioned refs shard by their base).
+pub fn shard_dir_name(base: &str) -> String {
+    format!("{:02x}", crate::util::hash::fnv64(base) & 0xff)
+}
+
+/// Split a global byte budget exactly across `n` shards: shard `i` gets
+/// `total / n`, plus one extra byte when `i < total % n`, so per-shard
+/// budgets **sum to the global budget exactly** — the shared wrappers
+/// enforce a global bound without any cross-shard locking. `u64::MAX`
+/// (unbounded) passes through unchanged.
+pub fn split_budget(total: u64, n: usize, i: usize) -> u64 {
+    debug_assert!(i < n.max(1));
+    if total == u64::MAX || n <= 1 {
+        return total;
+    }
+    let n64 = n as u64;
+    total / n64 + u64::from((i as u64) < total % n64)
+}
+
 /// Split a possibly-versioned ref into (base name, pinned version).
 /// `"a@3"` → `("a", Some(3))`; `"a"` (or a malformed suffix) → the whole
 /// string with `None`.
@@ -66,10 +122,17 @@ pub fn versioned_ref(name: &str, version: u64) -> String {
 
 pub struct AdapterStore {
     dir: PathBuf,
-    cache: BTreeMap<String, AdapterFile>,
+    /// Decoded file + its exact serialized byte size (cached so byte
+    /// accounting never re-serializes).
+    cache: BTreeMap<String, (AdapterFile, usize)>,
     cache_order: Vec<String>,
     cache_cap: usize,
+    cache_budget: u64,
+    cache_bytes: u64,
+    cache_peak_bytes: u64,
+    cache_evictions: u64,
     keep_versions: usize,
+    migrated_on_open: u64,
     pub hits: u64,
     pub misses: u64,
 }
@@ -77,12 +140,18 @@ pub struct AdapterStore {
 impl AdapterStore {
     pub fn open(dir: &Path) -> Result<AdapterStore> {
         std::fs::create_dir_all(dir)?;
+        let migrated = migrate_flat_layout(dir)?;
         Ok(AdapterStore {
             dir: dir.to_path_buf(),
             cache: BTreeMap::new(),
             cache_order: Vec::new(),
             cache_cap: 32,
+            cache_budget: DEFAULT_DECODE_BUDGET,
+            cache_bytes: 0,
+            cache_peak_bytes: 0,
+            cache_evictions: 0,
             keep_versions: 4,
+            migrated_on_open: migrated,
             hits: 0,
             misses: 0,
         })
@@ -91,6 +160,39 @@ impl AdapterStore {
     pub fn with_cache_cap(mut self, cap: usize) -> AdapterStore {
         self.cache_cap = cap.max(1);
         self
+    }
+
+    /// Decode-cache byte budget: committed residency (sum of decoded
+    /// file sizes) never exceeds it — the entry cap and the budget are
+    /// enforced together, coldest entry first. A single file larger than
+    /// the whole budget is served but never retained.
+    pub fn with_cache_budget(mut self, bytes: u64) -> AdapterStore {
+        self.cache_budget = bytes.max(1);
+        self
+    }
+
+    /// Current decode-cache residency in decoded-file bytes.
+    pub fn cache_resident_bytes(&self) -> u64 {
+        self.cache_bytes
+    }
+
+    /// High-water mark of committed decode-cache residency (≤ budget).
+    pub fn cache_peak_bytes(&self) -> u64 {
+        self.cache_peak_bytes
+    }
+
+    pub fn cache_budget(&self) -> u64 {
+        self.cache_budget
+    }
+
+    /// Entries evicted by the cap or the byte budget (not invalidations).
+    pub fn cache_evictions(&self) -> u64 {
+        self.cache_evictions
+    }
+
+    /// Flat-layout files this open migrated into shard subdirectories.
+    pub fn migrated_on_open(&self) -> u64 {
+        self.migrated_on_open
     }
 
     /// History depth: how many published versions per adapter stay on disk
@@ -108,12 +210,25 @@ impl AdapterStore {
     fn path_of(&self, name: &str) -> PathBuf {
         match split_versioned(name) {
             (base, Some(v)) => self.version_path(base, v),
-            _ => self.dir.join(format!("{name}.adapter")),
+            (base, None) => self.shard_dir(base).join(format!("{name}.adapter")),
         }
     }
 
     fn version_path(&self, base: &str, version: u64) -> PathBuf {
-        self.dir.join(VERSIONS_DIR).join(format!("{base}{VERSION_SEP}{version}.adapter"))
+        self.shard_dir(base)
+            .join(VERSIONS_DIR)
+            .join(format!("{base}{VERSION_SEP}{version}.adapter"))
+    }
+
+    /// The shard subdirectory owning `base` (a bare name, never a ref).
+    fn shard_dir(&self, base: &str) -> PathBuf {
+        self.dir.join(shard_dir_name(base))
+    }
+
+    /// Publish/rollback staging path — same shard dir as the target, so
+    /// the final `rename` stays within one directory (atomic everywhere).
+    fn tmp_path(&self, name: &str) -> PathBuf {
+        self.shard_dir(name).join(format!(".{name}.adapter.tmp"))
     }
 
     pub fn save(&mut self, name: &str, adapter: &AdapterFile) -> Result<usize> {
@@ -156,7 +271,7 @@ impl AdapterStore {
         let mut stamped = adapter.clone();
         stamped.version = version;
         stamped.save(&self.version_path(name, version))?;
-        let tmp = self.dir.join(format!(".{name}.adapter.tmp"));
+        let tmp = self.tmp_path(name);
         stamped.save(&tmp)?;
         std::fs::rename(&tmp, self.path_of(name))?;
         let bytes = stamped.byte_size();
@@ -184,9 +299,9 @@ impl AdapterStore {
         adapter.save(&self.version_path(name, adapter.version))?;
         let cur = self.load(name).map(|f| f.version).unwrap_or(0);
         if adapter.version >= cur {
-            let tmp = self.dir.join(format!(".{name}.adapter.tmp"));
+            let tmp = self.tmp_path(name);
             adapter.save(&tmp)?;
-            std::fs::rename(&tmp, self.dir.join(format!("{name}.adapter")))?;
+            std::fs::rename(&tmp, self.path_of(name))?;
             self.touch(name, adapter.clone());
         }
         Ok(adapter.version)
@@ -195,7 +310,7 @@ impl AdapterStore {
     /// Retained history versions of `name`, ascending. Empty for adapters
     /// that were only ever `save`d (never published).
     pub fn versions(&self, name: &str) -> Result<Vec<u64>> {
-        let dir = self.dir.join(VERSIONS_DIR);
+        let dir = self.shard_dir(name).join(VERSIONS_DIR);
         let mut out = Vec::new();
         if let Ok(rd) = std::fs::read_dir(&dir) {
             let prefix = format!("{name}{VERSION_SEP}");
@@ -253,9 +368,9 @@ impl AdapterStore {
             .ok_or_else(|| {
                 anyhow!("adapter '{name}': no version older than {cur} retained to roll back to")
             })?;
-        let tmp = self.dir.join(format!(".{name}.adapter.tmp"));
+        let tmp = self.tmp_path(name);
         std::fs::copy(self.version_path(name, prev), &tmp)?;
-        std::fs::rename(&tmp, self.dir.join(format!("{name}.adapter")))?;
+        std::fs::rename(&tmp, self.path_of(name))?;
         self.invalidate(name);
         Ok(prev)
     }
@@ -302,7 +417,7 @@ impl AdapterStore {
     /// Load an adapter, via the LRU cache. A hit returns the decoded file
     /// with no disk I/O; a miss reads + decodes from disk and caches.
     pub fn load(&mut self, name: &str) -> Result<AdapterFile> {
-        if let Some(a) = self.cache.get(name) {
+        if let Some((a, _)) = self.cache.get(name) {
             self.hits += 1;
             let a = a.clone();
             self.bump(name);
@@ -328,7 +443,9 @@ impl AdapterStore {
     /// Drop `name` from the decode cache (e.g. after an external writer
     /// replaced the file); the next `load` re-reads from disk.
     pub fn invalidate(&mut self, name: &str) {
-        self.cache.remove(name);
+        if let Some((_, sz)) = self.cache.remove(name) {
+            self.cache_bytes -= sz as u64;
+        }
         self.cache_order.retain(|n| n != name);
     }
 
@@ -340,39 +457,230 @@ impl AdapterStore {
     }
 
     fn touch(&mut self, name: &str, a: AdapterFile) {
-        if !self.cache.contains_key(name) && self.cache.len() >= self.cache_cap {
-            if let Some(evict) = self.cache_order.first().cloned() {
-                self.cache.remove(&evict);
-                self.cache_order.remove(0);
-            }
+        let sz = a.byte_size();
+        if let Some((_, old)) = self.cache.insert(name.to_string(), (a, sz)) {
+            self.cache_bytes -= old as u64;
         }
-        self.cache.insert(name.to_string(), a);
+        self.cache_bytes += sz as u64;
         self.bump(name);
         if !self.cache_order.iter().any(|n| n == name) {
             self.cache_order.push(name.to_string());
         }
+        // Entry cap and byte budget enforced together, coldest first.
+        // The just-inserted entry is MRU (last): it is only dropped when
+        // it alone exceeds the budget, in which case it is served but
+        // not retained — committed residency stays ≤ budget either way.
+        while (self.cache.len() > self.cache_cap || self.cache_bytes > self.cache_budget)
+            && !self.cache_order.is_empty()
+        {
+            let evict = self.cache_order.remove(0);
+            if let Some((_, old)) = self.cache.remove(&evict) {
+                self.cache_bytes -= old as u64;
+            }
+            self.cache_evictions += 1;
+        }
+        if self.cache_bytes > self.cache_peak_bytes {
+            self.cache_peak_bytes = self.cache_bytes;
+        }
     }
 
-    /// All adapters on disk, with their byte sizes.
-    pub fn list(&self) -> Result<Vec<(String, u64)>> {
-        let mut out = Vec::new();
+    /// Visit every bare adapter on disk exactly once — `(name, bytes)`
+    /// per file, streaming (no intermediate Vec, no descent into
+    /// `.versions/`, no per-name `versions()` scans): the top level plus
+    /// the two-hex-digit shard subdirectories. Not-yet-migrated flat
+    /// files are included, so a mixed-layout dir lists completely.
+    fn for_each_adapter(&self, mut f: impl FnMut(String, u64)) -> Result<()> {
         for entry in std::fs::read_dir(&self.dir)? {
             let entry = entry?;
-            let p = entry.path();
-            if p.extension().map(|e| e == "adapter").unwrap_or(false) {
-                let name = p.file_stem().unwrap().to_string_lossy().to_string();
-                out.push((name, entry.metadata()?.len()));
+            let ft = entry.file_type()?;
+            if ft.is_file() {
+                visit_adapter_file(&entry, &mut f)?;
+            } else if ft.is_dir() && is_shard_dir(&entry.path()) {
+                for sub in std::fs::read_dir(entry.path())? {
+                    let sub = sub?;
+                    if sub.file_type()?.is_file() {
+                        visit_adapter_file(&sub, &mut f)?;
+                    }
+                }
             }
         }
+        Ok(())
+    }
+
+    /// All adapters on disk with their byte sizes, sorted by name.
+    pub fn list(&self) -> Result<Vec<(String, u64)>> {
+        let mut out = Vec::new();
+        self.for_each_adapter(|name, sz| out.push((name, sz)))?;
         out.sort();
         Ok(out)
     }
 
     /// Total bytes across all stored adapters — the "Civitai bandwidth"
-    /// number the paper's intro argues about.
+    /// number the paper's intro argues about. One streaming pass; never
+    /// materializes the name list (`list` at 10⁶ adapters is a Vec of a
+    /// million strings, this is a running sum).
     pub fn total_bytes(&self) -> Result<u64> {
-        Ok(self.list()?.iter().map(|(_, sz)| sz).sum())
+        let mut total = 0u64;
+        self.for_each_adapter(|_, sz| total += sz)?;
+        Ok(total)
     }
+
+    /// One streaming pass over the on-disk layout (file metadata only,
+    /// never file contents): adapter/version counts and bytes, shard
+    /// fan-out, unmigrated flat files, and version-GC debt.
+    pub fn disk_stats(&self) -> Result<DiskStats> {
+        let mut st = DiskStats::default();
+        let mut shard_min = u64::MAX;
+        for entry in std::fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            let ft = entry.file_type()?;
+            if ft.is_file() {
+                let n = st.adapters;
+                visit_adapter_file(&entry, &mut |_, sz| {
+                    st.adapters += 1;
+                    st.adapter_bytes += sz;
+                })?;
+                st.flat_files += st.adapters - n;
+            } else if ft.is_dir() && is_shard_dir(&entry.path()) {
+                let mut here = 0u64;
+                let mut version_counts: BTreeMap<String, u64> = BTreeMap::new();
+                for sub in std::fs::read_dir(entry.path())? {
+                    let sub = sub?;
+                    let ft = sub.file_type()?;
+                    if ft.is_file() {
+                        visit_adapter_file(&sub, &mut |_, sz| {
+                            here += 1;
+                            st.adapters += 1;
+                            st.adapter_bytes += sz;
+                        })?;
+                    } else if ft.is_dir() && sub.file_name() == VERSIONS_DIR {
+                        for vf in std::fs::read_dir(sub.path())? {
+                            let vf = vf?;
+                            visit_adapter_file(&vf, &mut |stem, sz| {
+                                st.version_files += 1;
+                                st.version_bytes += sz;
+                                let (base, _) = split_versioned(&stem);
+                                *version_counts.entry(base.to_string()).or_insert(0) += 1;
+                            })?;
+                        }
+                    }
+                }
+                if here > 0 {
+                    st.shard_dirs_used += 1;
+                    shard_min = shard_min.min(here);
+                    st.shard_max = st.shard_max.max(here);
+                }
+                let keep = self.keep_versions as u64;
+                st.gc_debt +=
+                    version_counts.values().map(|&c| c.saturating_sub(keep)).sum::<u64>();
+            }
+        }
+        st.shard_min = if st.shard_dirs_used > 0 { shard_min } else { 0 };
+        Ok(st)
+    }
+}
+
+/// On-disk layout statistics from [`AdapterStore::disk_stats`] — what
+/// `repro store-stats` and the scale bench report.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct DiskStats {
+    /// Bare (current) adapter files.
+    pub adapters: u64,
+    pub adapter_bytes: u64,
+    /// Immutable history files under `.versions/`.
+    pub version_files: u64,
+    pub version_bytes: u64,
+    /// Shard subdirectories holding at least one bare adapter.
+    pub shard_dirs_used: u64,
+    /// Min/max bare adapters per used shard dir (fan-out skew).
+    pub shard_min: u64,
+    pub shard_max: u64,
+    /// Legacy flat files at the top level that a future open will migrate.
+    pub flat_files: u64,
+    /// History files beyond each adapter's keep-K window — version-GC
+    /// debt an external writer left behind (our own publishes GC inline,
+    /// so this is normally 0).
+    pub gc_debt: u64,
+}
+
+/// Is `p` one of the 256 shard subdirectories (`"00"`..`"ff"`)? Keeps
+/// the streaming walkers out of unrelated directories a user may have
+/// placed next to the store.
+fn is_shard_dir(p: &Path) -> bool {
+    p.file_name()
+        .and_then(|n| n.to_str())
+        .map(|n| n.len() == 2 && n.bytes().all(|b| b.is_ascii_hexdigit()))
+        .unwrap_or(false)
+}
+
+/// Invoke `f(stem, len)` when `entry` is a bare `<name>.adapter` file.
+/// `.versions/` (no extension: leading dot only) and `.<n>.adapter.tmp`
+/// staging files (extension `tmp`) never match.
+fn visit_adapter_file(
+    entry: &std::fs::DirEntry,
+    f: &mut impl FnMut(String, u64),
+) -> Result<()> {
+    let p = entry.path();
+    if p.extension().map(|e| e == "adapter").unwrap_or(false) {
+        if let Some(stem) = p.file_stem().and_then(|s| s.to_str()) {
+            if !stem.starts_with('.') {
+                f(stem.to_string(), entry.metadata()?.len());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// One-time layout migration: move flat `<dir>/<name>.adapter` files and
+/// the legacy flat `<dir>/.versions/` history into their shard
+/// subdirectories. Idempotent (nothing flat → nothing to move) and safe
+/// under concurrent opens of the same dir: a rename that loses the race
+/// fails and is skipped, the winner already put the file where both
+/// agree it belongs (the hash is deterministic).
+fn migrate_flat_layout(dir: &Path) -> Result<u64> {
+    let mut moved = 0u64;
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        if !entry.file_type().map(|t| t.is_file()).unwrap_or(false) {
+            continue;
+        }
+        let p = entry.path();
+        if !p.extension().map(|e| e == "adapter").unwrap_or(false) {
+            continue;
+        }
+        if let Some(stem) = p.file_stem().and_then(|s| s.to_str()) {
+            if stem.starts_with('.') {
+                continue;
+            }
+            let target = dir.join(shard_dir_name(stem));
+            std::fs::create_dir_all(&target)?;
+            if std::fs::rename(&p, target.join(p.file_name().unwrap())).is_ok() {
+                moved += 1;
+            }
+        }
+    }
+    let flat_versions = dir.join(VERSIONS_DIR);
+    if flat_versions.is_dir() {
+        for entry in std::fs::read_dir(&flat_versions)? {
+            let p = entry?.path();
+            if !p.extension().map(|e| e == "adapter").unwrap_or(false) {
+                continue;
+            }
+            if let Some(stem) = p.file_stem().and_then(|s| s.to_str()) {
+                // History files shard by their *base* name so they land
+                // next to their adapter's current file.
+                let (base, _) = split_versioned(stem);
+                let target = dir.join(shard_dir_name(base)).join(VERSIONS_DIR);
+                std::fs::create_dir_all(&target)?;
+                if std::fs::rename(&p, target.join(p.file_name().unwrap())).is_ok() {
+                    moved += 1;
+                }
+            }
+        }
+        // Gone once emptied; harmlessly refuses while stragglers remain.
+        let _ = std::fs::remove_dir(&flat_versions);
+    }
+    Ok(moved)
 }
 
 /// Lock-partitioned, thread-shared adapter store.
@@ -412,13 +720,37 @@ impl SharedAdapterStore {
         cache_cap_per_shard: usize,
         keep_versions: usize,
     ) -> Result<SharedAdapterStore> {
+        // Every shard keeps the single-store default byte budget; use
+        // `with_shards_budget` to bound the global decode residency.
+        let n = shards.max(1);
+        SharedAdapterStore::with_shards_budget(
+            dir,
+            n,
+            cache_cap_per_shard,
+            keep_versions,
+            DEFAULT_DECODE_BUDGET.saturating_mul(n as u64),
+        )
+    }
+
+    /// Fully explicit open: `decode_budget_total` bytes of decode cache
+    /// split **exactly** across the shards ([`split_budget`]), so the
+    /// global committed decode residency never exceeds it — no
+    /// cross-shard locking needed, each shard enforces its own slice.
+    pub fn with_shards_budget(
+        dir: &Path,
+        shards: usize,
+        cache_cap_per_shard: usize,
+        keep_versions: usize,
+        decode_budget_total: u64,
+    ) -> Result<SharedAdapterStore> {
         let n = shards.max(1);
         let mut v = Vec::with_capacity(n);
-        for _ in 0..n {
+        for i in 0..n {
             v.push(Mutex::new(
                 AdapterStore::open(dir)?
                     .with_cache_cap(cache_cap_per_shard)
-                    .with_keep_versions(keep_versions),
+                    .with_keep_versions(keep_versions)
+                    .with_cache_budget(split_budget(decode_budget_total, n, i)),
             ));
         }
         Ok(SharedAdapterStore { dir: dir.to_path_buf(), shards: v })
@@ -547,6 +879,43 @@ impl SharedAdapterStore {
     /// Total bytes across all stored adapters.
     pub fn total_bytes(&self) -> Result<u64> {
         crate::util::lock_recover(&self.shards[0]).total_bytes()
+    }
+
+    /// On-disk layout statistics (directory scan; shard-free).
+    pub fn disk_stats(&self) -> Result<DiskStats> {
+        crate::util::lock_recover(&self.shards[0]).disk_stats()
+    }
+
+    /// Current decode-cache residency across all shards, in decoded bytes.
+    pub fn decode_cache_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| crate::util::lock_recover(s).cache_resident_bytes()).sum()
+    }
+
+    /// Sum of per-shard committed decode-cache peaks. Each shard's peak
+    /// is ≤ its budget slice and the slices sum exactly to the global
+    /// budget, so this (slightly pessimistic) bound is itself ≤ the
+    /// global budget — the scale bench's cold-tier proof line.
+    pub fn decode_cache_peak_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| crate::util::lock_recover(s).cache_peak_bytes()).sum()
+    }
+
+    /// Global decode-cache byte budget (sum of the per-shard slices).
+    pub fn decode_cache_budget(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| crate::util::lock_recover(s).cache_budget())
+            .fold(0u64, u64::saturating_add)
+    }
+
+    /// Decode-cache evictions (cap or byte budget) across all shards.
+    pub fn decode_cache_evictions(&self) -> u64 {
+        self.shards.iter().map(|s| crate::util::lock_recover(s).cache_evictions()).sum()
+    }
+
+    /// Flat-layout files migrated into shard dirs when this store opened
+    /// (the first shard's open does the work; later opens find nothing).
+    pub fn migrated_on_open(&self) -> u64 {
+        self.shards.iter().map(|s| crate::util::lock_recover(s).migrated_on_open()).sum()
     }
 }
 
@@ -786,6 +1155,141 @@ mod tests {
         assert!(!store.cached(&versioned_ref("t", 1)));
         assert!(store.load(&versioned_ref("t", 1)).is_err());
         assert!(store.load(&versioned_ref("t", 2)).is_ok());
+    }
+
+    #[test]
+    fn layout_is_sharded_and_skips_versions_in_one_pass() {
+        let dir = tmp("shard_layout");
+        let mut store = AdapterStore::open(&dir).unwrap();
+        for name in ["alpha", "beta", "gamma"] {
+            store.publish(name, &adapter(8)).unwrap();
+            store.publish(name, &adapter(16)).unwrap();
+        }
+        // No adapter files at the top level: everything lives under a
+        // two-hex shard dir, history under that dir's .versions/.
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let e = entry.unwrap();
+            assert!(e.file_type().unwrap().is_dir(), "unexpected flat file {:?}", e.path());
+            assert!(is_shard_dir(&e.path()), "unexpected dir {:?}", e.path());
+        }
+        let expected = dir.join(shard_dir_name("alpha")).join("alpha.adapter");
+        assert!(expected.is_file(), "missing {expected:?}");
+        assert!(dir
+            .join(shard_dir_name("alpha"))
+            .join(VERSIONS_DIR)
+            .join("alpha@1.adapter")
+            .is_file());
+        // list/total_bytes see exactly the three bare adapters (history
+        // excluded), and disk_stats counts both plus fan-out.
+        let names: Vec<String> = store.list().unwrap().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["alpha", "beta", "gamma"]);
+        let bare: u64 = store.list().unwrap().iter().map(|(_, sz)| sz).sum();
+        assert_eq!(store.total_bytes().unwrap(), bare);
+        let st = store.disk_stats().unwrap();
+        assert_eq!(st.adapters, 3);
+        assert_eq!(st.version_files, 6);
+        assert_eq!(st.flat_files, 0);
+        assert_eq!(st.gc_debt, 0, "publish GCs inline, keep=4 > 2 versions");
+        assert!(st.shard_dirs_used >= 1 && st.shard_dirs_used <= 3);
+        assert!(st.shard_min >= 1 && st.shard_max <= 3);
+        assert!(st.version_bytes > 0 && st.adapter_bytes > 0);
+    }
+
+    #[test]
+    fn flat_legacy_dirs_migrate_on_open() {
+        // Simulate a pre-shard store: bare files + flat .versions/, laid
+        // out by hand exactly as the old path_of wrote them.
+        let dir = tmp("migrate");
+        std::fs::create_dir_all(dir.join(VERSIONS_DIR)).unwrap();
+        adapter(8).save(&dir.join("old_a.adapter")).unwrap();
+        adapter(16).save(&dir.join("old_b.adapter")).unwrap();
+        let mut v1 = adapter(8);
+        v1.version = 1;
+        v1.save(&dir.join(VERSIONS_DIR).join("old_a@1.adapter")).unwrap();
+
+        let mut store = AdapterStore::open(&dir).unwrap();
+        assert_eq!(store.migrated_on_open(), 3);
+        assert!(!dir.join("old_a.adapter").exists(), "flat file must move");
+        assert!(!dir.join(VERSIONS_DIR).exists(), "flat history dir must empty out");
+        // Everything still loads, history included, through the new layout.
+        assert_eq!(store.load("old_a").unwrap().meta_get("n"), Some("8"));
+        assert_eq!(store.load("old_b").unwrap().meta_get("n"), Some("16"));
+        assert_eq!(store.versions("old_a").unwrap(), vec![1]);
+        assert_eq!(store.load(&versioned_ref("old_a", 1)).unwrap().version, 1);
+        let names: Vec<String> = store.list().unwrap().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["old_a", "old_b"]);
+        // Re-opening (second shard of a shared store, say) migrates nothing.
+        let store2 = AdapterStore::open(&dir).unwrap();
+        assert_eq!(store2.migrated_on_open(), 0);
+        let st = store2.disk_stats().unwrap();
+        assert_eq!((st.adapters, st.flat_files, st.version_files), (2, 0, 1));
+    }
+
+    #[test]
+    fn decode_cache_byte_budget_evicts_coldest_and_bounds_peak() {
+        let one = adapter(64).byte_size() as u64;
+        // Budget fits two decoded files but not three; entry cap is slack.
+        let mut store = AdapterStore::open(&tmp("budget"))
+            .unwrap()
+            .with_cache_cap(100)
+            .with_cache_budget(2 * one + one / 2);
+        for i in 0..3 {
+            store.save(&format!("b{i}"), &adapter(64)).unwrap();
+        }
+        assert_eq!(store.cache_evictions(), 1, "third insert must evict the coldest");
+        assert!(!store.cached("b0"), "b0 was coldest");
+        assert!(store.cached("b1") && store.cached("b2"));
+        assert_eq!(store.cache_resident_bytes(), 2 * one);
+        assert!(store.cache_peak_bytes() <= store.cache_budget());
+        // LRU order respects recency: touching b1 makes b2 the victim.
+        store.load("b1").unwrap();
+        store.load("b0").unwrap(); // miss: re-decode, evicting b2
+        assert!(store.cached("b1") && store.cached("b0") && !store.cached("b2"));
+        // Invalidation returns its bytes.
+        store.invalidate("b1");
+        assert_eq!(store.cache_resident_bytes(), one);
+    }
+
+    #[test]
+    fn oversized_file_is_served_but_not_retained() {
+        let mut store =
+            AdapterStore::open(&tmp("oversize")).unwrap().with_cache_budget(8);
+        store.save("big", &adapter(64)).unwrap();
+        assert!(!store.cached("big"), "cannot retain a file above the whole budget");
+        assert_eq!(store.cache_resident_bytes(), 0);
+        assert_eq!(store.load("big").unwrap().meta_get("n"), Some("64"));
+        assert!(store.cache_peak_bytes() <= 8);
+    }
+
+    #[test]
+    fn split_budget_is_exact_and_passes_unbounded_through() {
+        for (total, n) in [(10u64, 3usize), (7, 8), (1 << 30, 6), (0, 4), (255, 256)] {
+            let parts: Vec<u64> = (0..n).map(|i| split_budget(total, n, i)).collect();
+            assert_eq!(parts.iter().sum::<u64>(), total, "total={total} n={n}");
+            let (mn, mx) = (parts.iter().min().unwrap(), parts.iter().max().unwrap());
+            assert!(mx - mn <= 1, "slices must differ by at most one byte");
+        }
+        assert_eq!(split_budget(u64::MAX, 8, 3), u64::MAX);
+        assert_eq!(split_budget(42, 1, 0), 42);
+    }
+
+    #[test]
+    fn shared_store_budget_splits_exactly_and_bounds_decode_residency() {
+        let dir = tmp("sh_budget");
+        let one = adapter(64).byte_size() as u64;
+        let total = 3 * one + 1; // around one decoded file per shard
+        let store = SharedAdapterStore::with_shards_budget(&dir, 3, 100, 4, total).unwrap();
+        assert_eq!(store.decode_cache_budget(), total);
+        for i in 0..24 {
+            store.save(&format!("s{i}"), &adapter(64)).unwrap();
+        }
+        assert!(store.decode_cache_bytes() <= total);
+        assert!(store.decode_cache_peak_bytes() <= total);
+        assert!(store.decode_cache_evictions() > 0);
+        // Everything still loads correctly through the bounded cache.
+        for i in 0..24 {
+            assert_eq!(store.load(&format!("s{i}")).unwrap().meta_get("n"), Some("64"));
+        }
     }
 
     #[test]

@@ -35,11 +35,24 @@
 //!    Methods that don't factor (dense/bitfit) cache a `None` so the
 //!    fallback decision is itself warm.
 //!
-//! The delta and factor layers carry byte-accurate residency counters
+//! Every layer carries byte-accurate residency counters
 //! ([`SwapCacheStats::delta_bytes`] / [`SwapCacheStats::factor_bytes`] /
-//! [`SwapCacheStats::peak_bytes`]), and LRU eviction breaks coldness ties
-//! by byte size (of the two coldest names the byte-larger one goes first;
-//! full byte-budget eviction is future work).
+//! [`SwapCacheStats::tensor_bytes`] / [`SwapCacheStats::peak_bytes`]),
+//! and LRU eviction breaks coldness ties by byte size (of the two coldest
+//! names the byte-larger one goes first). On top of the name cap,
+//! [`SwapBudget`] bounds resident **bytes** per tier: the *hot* tier
+//! (dense ΔW + factored state) and the *warm* tier (device-form adapt
+//! tensor sets) each get a budget, and [`SwapCache`] demotes
+//! coldest-first (same two-candidate byte tie-break) until both hold —
+//! a demoted adapter falls back to the store's byte-budgeted decode
+//! cache (*cold* tier) and, past that, to disk. Demotions are counted
+//! ([`SwapCacheStats::demote_hot`] / [`SwapCacheStats::demote_warm`]),
+//! and [`SharedSwap::with_budget`] slices a global budget across shards
+//! with [`crate::adapter::store::split_budget`] so the shard slices sum
+//! *exactly* to the configured total — the sharded cache enforces the
+//! global bound, not an approximation of it. Eviction order is a pure
+//! function of the access sequence, so budgeted serving keeps the
+//! bitwise response/shed digest contract.
 //!
 //! [`Server::publish`] stamps a monotonic version into the store
 //! ([`crate::adapter::store::AdapterStore::publish`]) and invalidates
@@ -71,7 +84,9 @@ use super::scheduler::{BatchOut, BatchRunner};
 use super::trainer::{Batch, Trainer};
 use crate::adapter::format::AdapterFile;
 use crate::adapter::method::{site_deltas_with_dims, site_factors_with_dims, SiteFactors};
-use crate::adapter::store::{shard_index, split_versioned, AdapterStore, SharedAdapterStore};
+use crate::adapter::store::{
+    shard_index, split_budget, split_versioned, AdapterStore, SharedAdapterStore,
+};
 use crate::runtime::{ParamSet, StepEngine};
 use crate::tensor::Tensor;
 use anyhow::Result;
@@ -158,11 +173,20 @@ pub struct ServeStats {
     pub delta_bytes: u64,
     /// Factored adapter-state bytes resident when the call finished.
     pub factor_bytes: u64,
-    /// Peak resident bytes (deltas + factors) over the cache lifetime.
-    /// [`SharedSwap::stats`] reports the exact global high-water mark
-    /// (coherently tracked across shards); a bare per-[`SwapCache`]
-    /// snapshot reports that cache's own exact peak.
+    /// Device-form adapt tensor bytes (warm tier) resident when the call
+    /// finished.
+    pub tensor_bytes: u64,
+    /// Peak resident bytes (deltas + factors + tensors) over the cache
+    /// lifetime. [`SharedSwap::stats`] reports the exact global
+    /// high-water mark (coherently tracked across shards); a bare
+    /// per-[`SwapCache`] snapshot reports that cache's own exact peak.
     pub peak_bytes: u64,
+    /// Hot-tier demotions (ΔW + factors dropped to fit
+    /// [`SwapBudget::hot_bytes`]) over the cache lifetime.
+    pub demote_hot: u64,
+    /// Warm-tier demotions (tensor sets dropped to fit
+    /// [`SwapBudget::warm_bytes`]) over the cache lifetime.
+    pub demote_warm: u64,
     // ---- open-loop / admission accounting (closed-loop serves leave the
     // shed fields zero and `offered == requests`) ----
     /// Requests offered to admission (admitted + shed).
@@ -237,7 +261,10 @@ impl ServeStats {
     pub fn record_residency(&mut self, cs: &SwapCacheStats) {
         self.delta_bytes = cs.delta_bytes;
         self.factor_bytes = cs.factor_bytes;
+        self.tensor_bytes = cs.tensor_bytes;
         self.peak_bytes = cs.peak_bytes;
+        self.demote_hot = cs.demote_hot;
+        self.demote_warm = cs.demote_warm;
     }
 
     /// Fraction of offered requests shed by admission (0.0 when nothing
@@ -309,10 +336,15 @@ impl ServeStats {
     ///   cluster's end-to-end makespan is the max over nodes and is
     ///   tracked separately by `ClusterStats`.)
     /// * **Maxes**: `queue_depth_peak`, `delta_bytes`, `factor_bytes`,
-    ///   `peak_bytes`, `max_micro_batch` — high-water marks of caches
-    ///   and queues that do not peak simultaneously; summing them
-    ///   overstates (the same bug [`SwapCacheStats::merge`] fixed for
-    ///   per-shard peaks).
+    ///   `tensor_bytes`, `peak_bytes`, `max_micro_batch` — high-water
+    ///   marks of caches and queues that do not peak simultaneously;
+    ///   summing them overstates (the same bug
+    ///   [`SwapCacheStats::merge`] fixed for per-shard peaks). The
+    ///   `demote_hot` / `demote_warm` counters also take the max: they
+    ///   are *lifetime* cache counters re-snapshotted by every serve
+    ///   call on the same shared cache (pipeline waves), so the latest
+    ///   — largest — snapshot already contains every earlier one, and
+    ///   summing would double-count.
     /// * **Set/level unions**: `latencies` and `vlat_ticks` concatenate
     ///   (percentiles are computed over the merged vector at report
     ///   time); `shed_ids` merge into one sorted set; `per_adapter` /
@@ -320,7 +352,10 @@ impl ServeStats {
     pub fn merge(&mut self, s: ServeStats) {
         self.delta_bytes = self.delta_bytes.max(s.delta_bytes);
         self.factor_bytes = self.factor_bytes.max(s.factor_bytes);
+        self.tensor_bytes = self.tensor_bytes.max(s.tensor_bytes);
         self.peak_bytes = self.peak_bytes.max(s.peak_bytes);
+        self.demote_hot = self.demote_hot.max(s.demote_hot);
+        self.demote_warm = self.demote_warm.max(s.demote_warm);
         self.requests += s.requests;
         self.batches += s.batches;
         self.swaps += s.swaps;
@@ -402,8 +437,18 @@ pub struct SwapCacheStats {
     /// factor layer (spectral plans are shared process-wide and excluded —
     /// see [`SiteFactors::resident_bytes`]).
     pub factor_bytes: u64,
-    /// Peak of `delta_bytes + factor_bytes` over the cache's lifetime.
+    /// Bytes of device-form adapt tensor sets currently resident in the
+    /// tensor layer (the warm tier under [`SwapBudget`]).
+    pub tensor_bytes: u64,
+    /// Peak of `delta_bytes + factor_bytes + tensor_bytes` over the
+    /// cache's lifetime.
     pub peak_bytes: u64,
+    /// Names demoted out of the hot tier (ΔW + factors dropped) to fit
+    /// [`SwapBudget::hot_bytes`].
+    pub demote_hot: u64,
+    /// Names demoted out of the warm tier (tensor set dropped) to fit
+    /// [`SwapBudget::warm_bytes`].
+    pub demote_warm: u64,
 }
 
 impl SwapCacheStats {
@@ -423,6 +468,9 @@ impl SwapCacheStats {
         self.factor_builds += other.factor_builds;
         self.delta_bytes += other.delta_bytes;
         self.factor_bytes += other.factor_bytes;
+        self.tensor_bytes += other.tensor_bytes;
+        self.demote_hot += other.demote_hot;
+        self.demote_warm += other.demote_warm;
         self.peak_bytes = self.peak_bytes.max(other.peak_bytes);
     }
 }
@@ -437,6 +485,55 @@ pub struct SwapTrace {
     pub rebuilt: bool,
     /// The adapter file was read + decoded from disk (store-layer miss).
     pub disk_read: bool,
+}
+
+/// Per-tier resident-byte budgets for a [`SwapCache`] (on top of the
+/// distinct-name cap). Defaults to unbounded — the pre-budget behaviour —
+/// so every existing constructor keeps its exact semantics.
+///
+/// The tiers map onto the cache layers by reconstruction cost:
+///
+/// * **hot** — dense ΔW sets + factored state (`deltas` + `factors`):
+///   the most expensive layers to rebuild (IDFT / factor extraction),
+///   and by far the largest per adapter.
+/// * **warm** — device-form adapt tensor sets (`tensors`): raw file
+///   tensors re-collated per name; cheap to rebuild from a decoded file
+///   but still per-request-path resident.
+///
+/// Past these sits the store's byte-budgeted decode cache (*cold*: file
+/// bytes, see [`crate::adapter::store::AdapterStore::with_cache_budget`])
+/// and then disk — a demotion never loses data, it only pushes the next
+/// access down one rebuild level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SwapBudget {
+    /// Resident-byte budget for dense ΔW + factored state.
+    pub hot_bytes: u64,
+    /// Resident-byte budget for device-form adapt tensor sets.
+    pub warm_bytes: u64,
+}
+
+impl Default for SwapBudget {
+    fn default() -> SwapBudget {
+        SwapBudget::unbounded()
+    }
+}
+
+impl SwapBudget {
+    /// No byte bounds (the distinct-name cap still applies).
+    pub fn unbounded() -> SwapBudget {
+        SwapBudget { hot_bytes: u64::MAX, warm_bytes: u64::MAX }
+    }
+
+    /// The `i`-th of `n` per-shard slices. Built on
+    /// [`crate::adapter::store::split_budget`], so the slices sum
+    /// *exactly* to this budget (unbounded passes through) and a sharded
+    /// cache enforces the global bound precisely.
+    fn shard_slice(&self, n: usize, i: usize) -> SwapBudget {
+        SwapBudget {
+            hot_bytes: split_budget(self.hot_bytes, n, i),
+            warm_bytes: split_budget(self.warm_bytes, n, i),
+        }
+    }
 }
 
 /// Update a worker's active-adapter slot after a cache fetch and return
@@ -482,12 +579,21 @@ pub struct SwapCache {
     /// LRU order over adapter names, most-recently-used last.
     order: Vec<String>,
     cap: usize,
+    /// Per-tier resident-byte budgets (hot: deltas + factors; warm:
+    /// tensors). Enforced by [`SwapCache::enforce_budget`] after every
+    /// layer insert.
+    budget: SwapBudget,
     pub stats: SwapCacheStats,
 }
 
 /// Resident bytes of one dense ΔW set.
 fn delta_set_bytes(d: &DeltaSet) -> u64 {
     d.iter().map(|(_, t)| t.byte_size() as u64).sum()
+}
+
+/// Resident bytes of one device-form adapt tensor set.
+fn tensor_set_bytes(t: &TensorSet) -> u64 {
+    t.values().map(|x| x.byte_size() as u64).sum()
 }
 
 /// Resident bytes of one cached factor entry (0 for the negative cache).
@@ -502,8 +608,19 @@ impl SwapCache {
         SwapCache::with_cap(site_dims, 64)
     }
 
-    /// Cap the number of distinct adapter names resident at once.
+    /// Cap the number of distinct adapter names resident at once
+    /// (byte-unbounded — the pre-[`SwapBudget`] behaviour).
     pub fn with_cap(site_dims: BTreeMap<String, (usize, usize)>, cap: usize) -> SwapCache {
+        SwapCache::with_budget(site_dims, cap, SwapBudget::unbounded())
+    }
+
+    /// Cap both the number of distinct adapter names and the resident
+    /// bytes per tier.
+    pub fn with_budget(
+        site_dims: BTreeMap<String, (usize, usize)>,
+        cap: usize,
+        budget: SwapBudget,
+    ) -> SwapCache {
         SwapCache {
             site_dims,
             tensors: HashMap::new(),
@@ -511,26 +628,38 @@ impl SwapCache {
             factors: HashMap::new(),
             order: Vec::new(),
             cap: cap.max(1),
+            budget,
             stats: SwapCacheStats::default(),
         }
+    }
+
+    pub fn budget(&self) -> SwapBudget {
+        self.budget
     }
 
     /// Total resident bytes of one name across all layers (eviction
     /// tie-break input).
     fn entry_bytes(&self, name: &str) -> u64 {
-        let t: u64 = self
-            .tensors
-            .get(name)
-            .map(|ts| ts.values().map(|x| x.byte_size() as u64).sum())
-            .unwrap_or(0);
+        self.hot_bytes_of(name) + self.warm_bytes_of(name)
+    }
+
+    /// Hot-tier bytes (dense ΔW + factored state) held for `name`.
+    fn hot_bytes_of(&self, name: &str) -> u64 {
         let d = self.deltas.get(name).map(delta_set_bytes).unwrap_or(0);
         let f = self.factors.get(name).map(factor_set_bytes).unwrap_or(0);
-        t + d + f
+        d + f
+    }
+
+    /// Warm-tier bytes (device-form adapt tensor set) held for `name`.
+    fn warm_bytes_of(&self, name: &str) -> u64 {
+        self.tensors.get(name).map(tensor_set_bytes).unwrap_or(0)
     }
 
     /// Drop every cache layer of `name`, keeping the byte counters exact.
     fn drop_layers(&mut self, name: &str) {
-        self.tensors.remove(name);
+        if let Some(t) = self.tensors.remove(name) {
+            self.stats.tensor_bytes -= tensor_set_bytes(&t);
+        }
         if let Some(d) = self.deltas.remove(name) {
             self.stats.delta_bytes -= delta_set_bytes(&d);
         }
@@ -539,11 +668,80 @@ impl SwapCache {
         }
     }
 
-    /// Record the current residency high-water mark.
+    /// Record the current residency high-water mark. Called after
+    /// [`SwapCache::enforce_budget`] on every insert path, so the peak
+    /// reflects *committed* residency — a budgeted cache's peak never
+    /// exceeds `hot_bytes + warm_bytes` plus the single in-flight entry
+    /// being inserted (and since enforcement runs before the peak is
+    /// noted, not even that).
     fn note_peak(&mut self) {
-        let cur = self.stats.delta_bytes + self.stats.factor_bytes;
+        let cur =
+            self.stats.delta_bytes + self.stats.factor_bytes + self.stats.tensor_bytes;
         if cur > self.stats.peak_bytes {
             self.stats.peak_bytes = cur;
+        }
+    }
+
+    /// Pick the next demotion victim for one tier: coldest-first over the
+    /// names actually holding bytes in that tier, with the same
+    /// two-candidate byte tie-break as cap eviction — of the two coldest
+    /// holders, the byte-larger one goes first (equal sizes fall back to
+    /// pure coldness). Deterministic: a pure function of LRU order and
+    /// resident sizes.
+    fn tier_victim(&self, hot: bool) -> Option<String> {
+        let mut coldest: Option<(usize, u64)> = None;
+        for (i, name) in self.order.iter().enumerate() {
+            let b = if hot { self.hot_bytes_of(name) } else { self.warm_bytes_of(name) };
+            if b == 0 {
+                continue;
+            }
+            match coldest {
+                None => coldest = Some((i, b)),
+                Some((ci, cb)) => {
+                    let idx = if b > cb { i } else { ci };
+                    return Some(self.order[idx].clone());
+                }
+            }
+        }
+        coldest.map(|(i, _)| self.order[i].clone())
+    }
+
+    /// Demote coldest-first until both tier budgets hold. Hot demotion
+    /// drops a name's ΔW + factor layers (it falls back to the warm /
+    /// cold tiers); warm demotion drops its tensor set. A victim that
+    /// still holds bytes in another layer keeps its LRU slot; one that
+    /// holds nothing leaves `order` entirely. Terminates because every
+    /// iteration removes > 0 bytes from the over-budget tier (victims
+    /// are only picked among names with non-zero tier bytes).
+    fn enforce_budget(&mut self) {
+        while self.stats.delta_bytes + self.stats.factor_bytes > self.budget.hot_bytes {
+            let victim = match self.tier_victim(true) {
+                Some(v) => v,
+                None => break,
+            };
+            if let Some(d) = self.deltas.remove(&victim) {
+                self.stats.delta_bytes -= delta_set_bytes(&d);
+            }
+            if let Some(f) = self.factors.remove(&victim) {
+                self.stats.factor_bytes -= factor_set_bytes(&f);
+            }
+            self.stats.demote_hot += 1;
+            if !self.contains(&victim) {
+                self.order.retain(|n| n != &victim);
+            }
+        }
+        while self.stats.tensor_bytes > self.budget.warm_bytes {
+            let victim = match self.tier_victim(false) {
+                Some(v) => v,
+                None => break,
+            };
+            if let Some(t) = self.tensors.remove(&victim) {
+                self.stats.tensor_bytes -= tensor_set_bytes(&t);
+            }
+            self.stats.demote_warm += 1;
+            if !self.contains(&victim) {
+                self.order.retain(|n| n != &victim);
+            }
         }
     }
 
@@ -600,8 +798,11 @@ impl SwapCache {
         let t: TensorSet =
             Arc::new(file.tensors.into_iter().map(|e| (e.name, e.tensor)).collect());
         self.stats.tensor_builds += 1;
+        self.stats.tensor_bytes += tensor_set_bytes(&t);
         self.tensors.insert(name.to_string(), t.clone());
         self.touch(name);
+        self.enforce_budget();
+        self.note_peak();
         Ok((t, SwapTrace { rebuilt: true, disk_read: store.disk_reads() > disk0 }))
     }
 
@@ -639,8 +840,9 @@ impl SwapCache {
         self.stats.delta_builds += 1;
         self.stats.delta_bytes += delta_set_bytes(&d);
         self.deltas.insert(name.to_string(), d.clone());
-        self.note_peak();
         self.touch(name);
+        self.enforce_budget();
+        self.note_peak();
         Ok((d, SwapTrace { rebuilt: true, disk_read: store.disk_reads() > disk0 }))
     }
 
@@ -679,8 +881,9 @@ impl SwapCache {
         self.stats.factor_builds += 1;
         self.stats.factor_bytes += factor_set_bytes(&f);
         self.factors.insert(name.to_string(), f.clone());
-        self.note_peak();
         self.touch(name);
+        self.enforce_budget();
+        self.note_peak();
         Ok((f, SwapTrace { rebuilt: true, disk_read: store.disk_reads() > disk0 }))
     }
 
@@ -716,6 +919,7 @@ impl SwapCache {
         self.order.clear();
         self.stats.delta_bytes = 0;
         self.stats.factor_bytes = 0;
+        self.stats.tensor_bytes = 0;
     }
 
     /// Resident adapter names in LRU order, coldest first (for tests and
@@ -754,8 +958,18 @@ impl SwapCache {
         let bytes_exact = self.stats.delta_bytes
             == self.deltas.values().map(delta_set_bytes).sum::<u64>()
             && self.stats.factor_bytes
-                == self.factors.values().map(factor_set_bytes).sum::<u64>();
-        no_phantom && all_tracked && unique && bytes_exact && self.order.len() <= self.cap
+                == self.factors.values().map(factor_set_bytes).sum::<u64>()
+            && self.stats.tensor_bytes
+                == self.tensors.values().map(tensor_set_bytes).sum::<u64>();
+        let within_budget = self.stats.delta_bytes + self.stats.factor_bytes
+            <= self.budget.hot_bytes
+            && self.stats.tensor_bytes <= self.budget.warm_bytes;
+        no_phantom
+            && all_tracked
+            && unique
+            && bytes_exact
+            && within_budget
+            && self.order.len() <= self.cap
     }
 }
 
@@ -769,8 +983,10 @@ impl SwapCache {
 /// global peak instead of a per-shard aggregate.
 pub struct SharedSwap {
     shards: Vec<Mutex<SwapCache>>,
-    /// Exact delta+factor bytes resident across all shards (updated after
-    /// every residency-changing shard op).
+    /// The global (pre-slicing) per-tier byte budget.
+    budget: SwapBudget,
+    /// Exact delta+factor+tensor bytes resident across all shards
+    /// (updated after every residency-changing shard op).
     resident: AtomicU64,
     /// Lifetime high-water mark of `resident`. Unlike summing per-shard
     /// peaks (which overstates — shards don't peak simultaneously), this
@@ -790,14 +1006,39 @@ impl SharedSwap {
         shards: usize,
         cap_per_shard: usize,
     ) -> SharedSwap {
+        SharedSwap::with_budget(site_dims, shards, cap_per_shard, SwapBudget::unbounded())
+    }
+
+    /// Sharded cache under a **global** per-tier byte budget: shard `i`
+    /// gets the `i`-th [`crate::adapter::store::split_budget`] slice of
+    /// each tier, and the slices sum exactly to `budget`, so total
+    /// committed residency never exceeds the configured bytes.
+    pub fn with_budget(
+        site_dims: BTreeMap<String, (usize, usize)>,
+        shards: usize,
+        cap_per_shard: usize,
+        budget: SwapBudget,
+    ) -> SharedSwap {
         let n = shards.max(1);
         SharedSwap {
             shards: (0..n)
-                .map(|_| Mutex::new(SwapCache::with_cap(site_dims.clone(), cap_per_shard)))
+                .map(|i| {
+                    Mutex::new(SwapCache::with_budget(
+                        site_dims.clone(),
+                        cap_per_shard,
+                        budget.shard_slice(n, i),
+                    ))
+                })
                 .collect(),
+            budget,
             resident: AtomicU64::new(0),
             peak: AtomicU64::new(0),
         }
+    }
+
+    /// The global (pre-slicing) budget this cache was built with.
+    pub fn budget(&self) -> SwapBudget {
+        self.budget
     }
 
     pub fn shard_count(&self) -> usize {
@@ -815,9 +1056,11 @@ impl SharedSwap {
     /// through the `fetch_add` + `fetch_max` pair).
     fn with_shard_tracked<T>(&self, idx: usize, f: impl FnOnce(&mut SwapCache) -> T) -> T {
         let mut shard = crate::util::lock_recover(&self.shards[idx]);
-        let before = shard.stats.delta_bytes + shard.stats.factor_bytes;
+        let before =
+            shard.stats.delta_bytes + shard.stats.factor_bytes + shard.stats.tensor_bytes;
         let out = f(&mut shard);
-        let after = shard.stats.delta_bytes + shard.stats.factor_bytes;
+        let after =
+            shard.stats.delta_bytes + shard.stats.factor_bytes + shard.stats.tensor_bytes;
         drop(shard);
         if after > before {
             let grew = after - before;
@@ -1307,7 +1550,10 @@ mod tests {
             factor_builds: 6,
             delta_bytes: 7,
             factor_bytes: 8,
+            tensor_bytes: 11,
             peak_bytes: 9,
+            demote_hot: 12,
+            demote_warm: 13,
         };
         let b = SwapCacheStats {
             tensor_hits: 10,
@@ -1318,7 +1564,10 @@ mod tests {
             factor_builds: 60,
             delta_bytes: 70,
             factor_bytes: 80,
+            tensor_bytes: 110,
             peak_bytes: 90,
+            demote_hot: 120,
+            demote_warm: 130,
         };
         a.merge(&b);
         assert_eq!(a.tensor_hits, 11);
@@ -1329,6 +1578,9 @@ mod tests {
         assert_eq!(a.factor_builds, 66);
         assert_eq!(a.delta_bytes, 77);
         assert_eq!(a.factor_bytes, 88);
+        assert_eq!(a.tensor_bytes, 121);
+        assert_eq!(a.demote_hot, 132);
+        assert_eq!(a.demote_warm, 143);
         // Peaks take the max, not the sum: shards don't peak at the same
         // instant, so summing overstated true peak residency (the old bug).
         assert_eq!(a.peak_bytes, 90);

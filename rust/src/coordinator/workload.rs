@@ -126,6 +126,21 @@ pub fn zipf_weights(n: usize, s: f64) -> Vec<f64> {
 /// entry matrix per model family) but have their own coefficients, so all
 /// ΔW reconstructions share one GEMM plan while remaining distinct.
 pub fn populate_store(store: &SharedAdapterStore, cfg: &WorkloadCfg) -> Result<Vec<String>> {
+    populate_store_enc(store, cfg, None)
+}
+
+/// [`populate_store`] with an optional storage encoding: `Some(kind)`
+/// quantizes every file through
+/// [`crate::adapter::quant::quantize_file`] before saving (format v4),
+/// `None` keeps exact f32 payloads (format v3, byte-identical to the
+/// pre-quantization writer). The coefficients are drawn identically in
+/// both cases — the only difference is the storage codec — so quantized
+/// and exact registries are directly comparable in accuracy gates.
+pub fn populate_store_enc(
+    store: &SharedAdapterStore,
+    cfg: &WorkloadCfg,
+    quant: Option<crate::adapter::quant::QuantKind>,
+) -> Result<Vec<String>> {
     let hp = MethodHp { n: cfg.n_coeffs, rank: 4, init_std: 1.0 };
     let sites: Vec<SiteSpec> = (0..cfg.sites)
         .map(|s| SiteSpec { name: format!("blk{s}.attn.wq.w"), d1: cfg.dim, d2: cfg.dim })
@@ -135,7 +150,7 @@ pub fn populate_store(store: &SharedAdapterStore, cfg: &WorkloadCfg) -> Result<V
         let name = adapter_name(i);
         let mut rng =
             Rng::new(cfg.seed ^ 0xADA7 ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-        let file = method::init_adapter(
+        let mut file = method::init_adapter(
             &cfg.method,
             &mut rng,
             &sites,
@@ -144,6 +159,9 @@ pub fn populate_store(store: &SharedAdapterStore, cfg: &WorkloadCfg) -> Result<V
             8.0,
             vec![("n".into(), cfg.n_coeffs.to_string())],
         )?;
+        if let Some(kind) = quant {
+            file = crate::adapter::quant::quantize_file(&file, kind);
+        }
         store.save(&name, &file)?;
         names.push(name);
     }

@@ -9,6 +9,8 @@
 //!   all       [--quick]             every table + figure (EXPERIMENTS.md data)
 //!   serve     [--adapters K ...]    multi-adapter serving demo + stats
 //!   cluster   [--nodes N ...]       sharded multi-node serving simulation
+//!   scale     [--adapters N ...]    million-adapter tiered-store bench + budget gate
+//!   store-stats [--dir P]           on-disk / decode-cache stats for a store dir
 //!
 //! `--engine host` (the default) trains and serves pure-Rust with no
 //! artifacts; `--engine xla` runs from AOT artifacts. Python is never
@@ -48,6 +50,8 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("pipeline") => pipeline(args),
         Some("methods") => methods(args),
         Some("probe") => probe(args),
+        Some("scale") => scale(args),
+        Some("store-stats") => store_stats(args),
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown command '{cmd}'\n");
@@ -99,6 +103,16 @@ fn print_usage() {
          \x20                                    publish -> serve, with per-publish latency rows;\n\
          \x20                                    open-loop arrivals shed at admission per wave\n\
          \x20 methods [--d N --layers N --n N --rank N]      registered adapter methods + budgets\n\
+         \x20 scale [--adapters N --requests N --quant {{f32,f16,int8}}\n\
+         \x20        --hot-mb M --warm-mb M --cold-mb M --workers W --apply MODE\n\
+         \x20        --arrival K --rate R --deadline-ticks D --probe-layout]\n\
+         \x20                                    million-adapter tiered-store bench: populate a\n\
+         \x20                                    sharded registry (optionally quantized v4), serve\n\
+         \x20                                    the Zipf open-loop workload under hot/warm/cold\n\
+         \x20                                    byte budgets, gate peak resident bytes <= budget\n\
+         \x20 store-stats [--dir PATH --keep K]  on-disk + decode-cache stats for a store dir:\n\
+         \x20                                    adapters, versions, GC debt, shard fan-out\n\
+         \x20                                    (opening migrates flat legacy layouts in place)\n\
          \n\
          global flags:\n\
          \x20 --engine {host,xla}                host = pure-Rust training engine (default,\n\
@@ -669,6 +683,275 @@ fn probe(args: &Args) -> Result<()> {
     for (s, m) in &res.evals {
         println!("  step {s:>5}  {}: {:.4}", task.metric_name(), m);
     }
+    Ok(())
+}
+
+/// Million-adapter tiered-store bench (the §Store scale proof): populate
+/// a sharded on-disk registry with `--adapters` synthetic adapters
+/// (optionally `--quant f16|int8` format-v4 files), then serve the Zipf
+/// open-loop workload through the budgeted cache stack — hot (ΔW +
+/// factors) and warm (adapt tensors) tiers in the swap cache, cold
+/// (decoded file bytes) in the store — and gate peak resident bytes
+/// against the configured budget. Prints the same `response digest` /
+/// `shed digest` lines as `serve-host` (budgeted eviction must not
+/// change a single bit of output), a `peak resident bytes P budget B`
+/// line the scale-smoke CI job gates with awk, and `store/scale/*`
+/// bench rows (JSON via `BENCH_JSON`). `--probe-layout` additionally
+/// lays out flat probe files, measures a flat directory scan, then
+/// migrates them to the sharded layout and measures the sharded scan.
+fn scale(args: &Args) -> Result<()> {
+    use fourier_peft::adapter::quant::QuantKind;
+    use fourier_peft::adapter::{AdapterStore, SharedAdapterStore};
+    use fourier_peft::coordinator::scheduler::{
+        serve_open_loop_host, serve_scheduled_host, AdmissionCfg, ApplyMode, SchedCfg,
+    };
+    use fourier_peft::coordinator::serving::{SharedSwap, SwapBudget};
+    use fourier_peft::coordinator::workload::{self, ArrivalKind, OpenLoopCfg, WorkloadCfg};
+    use std::time::Instant;
+
+    let adapters = args.usize_or("adapters", 200_000);
+    let requests = args.usize_or("requests", 20_000);
+    let quant: Option<QuantKind> = match args.str_or("quant", "f32") {
+        "f32" => None,
+        other => Some(other.parse()?),
+    };
+    let apply: ApplyMode = args.str_or("apply", "auto").parse()?;
+    let base = WorkloadCfg::small();
+    let cfg = WorkloadCfg {
+        adapters,
+        requests,
+        zipf_s: args.f64_or("zipf", 1.1),
+        method: args.str_or("method", "fourierft").to_string(),
+        dim: args.usize_or("dim", 16),
+        sites: args.usize_or("sites", 1),
+        n_coeffs: args.usize_or("n", 8),
+        batch: args.usize_or("batch", 2),
+        seed: args.u64_or("seed", base.seed),
+        ..base
+    };
+    // Tier budgets, sized so all three bind under the default Zipf mix.
+    let hot = args.u64_or("hot-mb", 4) << 20;
+    let warm = args.u64_or("warm-mb", 2) << 20;
+    let cold = args.u64_or("cold-mb", 4) << 20;
+    let budget_total = hot + warm + cold;
+    let shards = args.usize_or("shards", 8);
+
+    let dir = fourier_peft::runs_dir().join("scale_store");
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = SharedAdapterStore::with_shards_budget(&dir, shards, 1 << 20, 4, cold)?;
+    let swap = SharedSwap::with_budget(
+        workload::site_dims(&cfg),
+        shards,
+        1 << 20,
+        SwapBudget { hot_bytes: hot, warm_bytes: warm },
+    );
+
+    let t0 = Instant::now();
+    workload::populate_store_enc(&store, &cfg, quant)?;
+    let populate_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let listed = store.list()?;
+    let scan_s = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(listed.len() == adapters, "scan found {} of {adapters}", listed.len());
+    let store_bytes: u64 = listed.iter().map(|(_, b)| *b).sum();
+    println!(
+        "populated {adapters} adapters ({}) in {populate_s:.2}s  ({:.0} adapters/s, quant {})  \
+         sharded scan {scan_s:.3}s",
+        fourier_peft::util::fmt_bytes(store_bytes as usize),
+        adapters as f64 / populate_s,
+        args.str_or("quant", "f32"),
+    );
+
+    let sched = SchedCfg { workers: args.usize_or("workers", 4), apply, ..SchedCfg::default() };
+    let queue = workload::gen_requests(&cfg)?;
+    let arrival: ArrivalKind = args.str_or("arrival", "poisson").parse()?;
+    let service_ticks = args.u64_or("service-ticks", 8);
+    let (results, stats) = if arrival == ArrivalKind::Closed {
+        serve_scheduled_host(&swap, &store, queue, &sched)?
+    } else {
+        let ol = OpenLoopCfg {
+            kind: arrival,
+            rate_per_ktick: args.f64_or("rate", 250.0),
+            deadline_ticks: args.u64_or("deadline-ticks", 96),
+            burst_factor: args.f64_or("burst-factor", 8.0),
+            period_ticks: args.u64_or("period", 512),
+            duty: args.f64_or("duty", 0.25),
+            seed: cfg.seed,
+        };
+        let adm = AdmissionCfg {
+            service_ticks,
+            queue_depth: args.usize_or("queue-depth", 64),
+            tenant_rate_per_ktick: args.f64_or("tenant-rate", 0.0),
+            tenant_burst: args.f64_or("tenant-burst", 16.0),
+            flush_slack_ticks: args.u64_or("slack", service_ticks),
+        };
+        serve_open_loop_host(&swap, &store, workload::gen_arrivals(&ol, queue)?, &sched, &adm)?
+    };
+    println!(
+        "served {} requests in {} micro-batches  swaps {} ({} warm)  disk reads {}  \
+         wall {:.3}s  => {:.1} req/s",
+        results.len(), stats.batches, stats.swaps, stats.warm_swaps, stats.disk_reads,
+        stats.wall_seconds, stats.throughput_rps()
+    );
+
+    // Tier accounting: the swap peak is committed hot+warm residency
+    // (budget enforced before every peak sample), the decode-cache peak
+    // sum is bounded by the cold budget, so their sum is bounded by the
+    // configured total — the invariant the scale-smoke CI job gates.
+    let ss = swap.stats();
+    let peak_resident = stats.peak_bytes + store.decode_cache_peak_bytes();
+    println!(
+        "tiers: hot+warm peak {}  demotions hot {} warm {}  cold peak {}  \
+         cold evictions {}",
+        fourier_peft::util::fmt_bytes(stats.peak_bytes as usize),
+        ss.demote_hot, ss.demote_warm,
+        fourier_peft::util::fmt_bytes(store.decode_cache_peak_bytes() as usize),
+        store.decode_cache_evictions(),
+    );
+    let swap_lookups = ss.tensor_hits + ss.tensor_builds + ss.delta_hits + ss.delta_builds
+        + ss.factor_hits + ss.factor_builds;
+    let swap_hit_rate = if swap_lookups == 0 {
+        0.0
+    } else {
+        (ss.tensor_hits + ss.delta_hits + ss.factor_hits) as f64 / swap_lookups as f64
+    };
+    let decode_lookups = store.cache_hits() + store.disk_reads();
+    let decode_hit_rate = if decode_lookups == 0 {
+        0.0
+    } else {
+        store.cache_hits() as f64 / decode_lookups as f64
+    };
+    println!(
+        "hit rates: swap {:.3}  decode {:.3}",
+        swap_hit_rate, decode_hit_rate
+    );
+    println!("peak resident bytes {peak_resident} budget {budget_total}");
+    anyhow::ensure!(
+        peak_resident <= budget_total,
+        "peak resident {peak_resident} exceeds the configured budget {budget_total}"
+    );
+    println!("response digest {:016x}", fourier_peft::coordinator::serving::response_digest(&results)?);
+    if arrival != ArrivalKind::Closed {
+        println!(
+            "shed digest {:016x} over {} shed ids",
+            fourier_peft::coordinator::serving::shed_digest(&stats.shed_ids),
+            stats.shed_ids.len()
+        );
+    }
+
+    let bench = fourier_peft::util::bench::Bench::quick();
+    bench.report_value("store/scale/adapters", adapters as f64, "adapters");
+    bench.report_value("store/scale/populate_rate", adapters as f64 / populate_s, "adapters/s");
+    bench.report_value("store/scale/store_bytes", store_bytes as f64, "bytes");
+    bench.report_value("store/scale/scan_seconds", scan_s, "s");
+    bench.report_value("store/scale/serve_rps", stats.throughput_rps(), "req/s");
+    bench.report_value("store/scale/peak_resident_bytes", peak_resident as f64, "bytes");
+    bench.report_value("store/scale/budget_bytes", budget_total as f64, "bytes");
+    bench.report_value("store/scale/swap_hit_rate", swap_hit_rate, "ratio");
+    bench.report_value("store/scale/decode_hit_rate", decode_hit_rate, "ratio");
+    bench.report_value("store/scale/demote_hot", ss.demote_hot as f64, "demotions");
+    bench.report_value("store/scale/demote_warm", ss.demote_warm as f64, "demotions");
+
+    // Optional flat-vs-sharded layout probe: time a flat directory scan
+    // over K tiny adapter files, migrate them (open shards in place),
+    // then time the sharded streaming scan of the same files.
+    if args.bool("probe-layout") {
+        let k = args.usize_or("probe-files", 20_000);
+        let pdir = fourier_peft::runs_dir().join("scale_store_probe");
+        let _ = std::fs::remove_dir_all(&pdir);
+        std::fs::create_dir_all(&pdir)?;
+        for i in 0..k {
+            std::fs::write(pdir.join(format!("probe_{i:06}.adapter")), b"p")?;
+        }
+        let t0 = Instant::now();
+        let mut flat_files = 0u64;
+        for entry in std::fs::read_dir(&pdir)? {
+            let entry = entry?;
+            let _ = entry.metadata()?.len();
+            flat_files += 1;
+        }
+        let flat_s = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let pstore = AdapterStore::open(&pdir)?;
+        let migrate_s = t0.elapsed().as_secs_f64();
+        anyhow::ensure!(
+            pstore.migrated_on_open() == k as u64,
+            "probe migration moved {} of {k}",
+            pstore.migrated_on_open()
+        );
+        let t0 = Instant::now();
+        let plist = pstore.list()?;
+        let sharded_s = t0.elapsed().as_secs_f64();
+        anyhow::ensure!(plist.len() == k, "sharded scan found {} of {k}", plist.len());
+        println!(
+            "layout probe over {k} files: flat scan {:.3}s ({flat_files} entries)  \
+             migrate {migrate_s:.3}s  sharded scan {sharded_s:.3}s",
+            flat_s
+        );
+        bench.report_value(
+            "store/scale/flat_scan_us_per_file", flat_s * 1e6 / k as f64, "us/file");
+        bench.report_value(
+            "store/scale/migrate_us_per_file", migrate_s * 1e6 / k as f64, "us/file");
+        bench.report_value(
+            "store/scale/sharded_scan_us_per_file", sharded_s * 1e6 / k as f64, "us/file");
+        let _ = std::fs::remove_dir_all(&pdir);
+    }
+    Ok(())
+}
+
+/// On-disk + decode-cache stats for an existing adapter-store directory:
+/// adapter/version counts and bytes, GC debt against the keep-K policy,
+/// shard-directory fan-out, and the decode-cache configuration. Note:
+/// opening a store **migrates** any flat legacy layout into the sharded
+/// one in place (idempotent; the `migrated` line reports how many files
+/// moved).
+fn store_stats(args: &Args) -> Result<()> {
+    use fourier_peft::adapter::AdapterStore;
+    use std::time::Instant;
+
+    let default_dir = fourier_peft::runs_dir().join("scale_store");
+    let dir = match args.get("dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => default_dir,
+    };
+    anyhow::ensure!(dir.is_dir(), "store dir {} does not exist", dir.display());
+    let t0 = Instant::now();
+    let mut store = AdapterStore::open(&dir)?;
+    let open_s = t0.elapsed().as_secs_f64();
+    if let Some(k) = args.get("keep") {
+        store = store.with_keep_versions(k.parse()?);
+    }
+    let t0 = Instant::now();
+    let ds = store.disk_stats()?;
+    let scan_s = t0.elapsed().as_secs_f64();
+
+    println!("store {}", dir.display());
+    println!(
+        "  adapters {}  bytes {}  (open {:.3}s, migrated {} flat files; scan {:.3}s)",
+        ds.adapters,
+        fourier_peft::util::fmt_bytes(ds.adapter_bytes as usize),
+        open_s,
+        store.migrated_on_open(),
+        scan_s
+    );
+    println!(
+        "  versions {} files  {}  gc debt {} (keep {})",
+        ds.version_files,
+        fourier_peft::util::fmt_bytes(ds.version_bytes as usize),
+        ds.gc_debt,
+        store.keep_versions()
+    );
+    println!(
+        "  layout: {} shard dirs used (fan-out min {} max {})  flat stragglers {}",
+        ds.shard_dirs_used, ds.shard_min, ds.shard_max, ds.flat_files
+    );
+    println!(
+        "  decode cache: budget {}  resident {}  peak {}  evictions {}",
+        fourier_peft::util::fmt_bytes(store.cache_budget() as usize),
+        fourier_peft::util::fmt_bytes(store.cache_resident_bytes() as usize),
+        fourier_peft::util::fmt_bytes(store.cache_peak_bytes() as usize),
+        store.cache_evictions()
+    );
     Ok(())
 }
 

@@ -69,6 +69,24 @@ impl Bench {
         println!("{:<44} rate: {:.1} {unit}/s  ({items} in {:.3}s)", name, items / seconds, seconds);
     }
 
+    /// Report a scalar measurement computed elsewhere (a byte count, a
+    /// hit rate, an adapter count …), with the same optional
+    /// `BENCH_JSON` side channel as [`Bench::run`].
+    pub fn report_value(&self, name: &str, value: f64, unit: &str) {
+        println!("{:<44} value: {value} {unit}", name);
+        if let Ok(path) = std::env::var("BENCH_JSON") {
+            let line = format!(
+                "{{\"name\": \"{}\", \"value\": {}, \"unit\": \"{}\"}}\n",
+                name, value, unit
+            );
+            let _ = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+                .map(|mut f| std::io::Write::write_all(&mut f, line.as_bytes()));
+        }
+    }
+
     /// Report p50/p95/p99 of a latency sample (seconds), e.g. the
     /// per-request latencies a `ServeStats` collected, with the same
     /// optional JSON side channel as [`Bench::run`].

@@ -11,7 +11,7 @@
 //!   swap sees the new coefficients.
 
 use fourier_peft::adapter::{AdapterFile, AdapterStore, SharedAdapterStore};
-use fourier_peft::coordinator::serving::{SharedSwap, SwapCache};
+use fourier_peft::coordinator::serving::{SharedSwap, SwapBudget, SwapCache};
 use fourier_peft::fourier::plan;
 use fourier_peft::tensor::{rng::Rng, Tensor};
 use std::collections::BTreeMap;
@@ -428,6 +428,109 @@ fn summed_per_shard_peaks_overstate_the_true_peak() {
     let summed: u64 = swap.shard_stats().iter().map(|s| s.peak_bytes).sum();
     assert_eq!(summed, 2 * one, "the old sum-of-peaks formula doubles it");
     assert!(summed > stats.peak_bytes);
+}
+
+// --- byte-budget tiers (PR-9) ---------------------------------------------
+
+/// A hot-tier budget demotes dense ΔW (and factors) while the warm tier
+/// keeps serving the same name's device-form tensors from cache: a
+/// demotion moves a name down one tier, it does not forget it.
+#[test]
+fn hot_budget_demotes_deltas_but_keeps_tensors_warm() {
+    let (sites, d, n) = (1, 16, 8); // one 16×16 ΔW = 1024 bytes
+    let mut store = AdapterStore::open(&tmpdir("hotbudget")).unwrap();
+    let mut rng = Rng::new(0xB06);
+    for name in ["a", "b", "c"] {
+        store.save(name, &fourierft_adapter(&mut rng, sites, n, 2024)).unwrap();
+    }
+    // Room for one-and-a-half ΔW: the third build must demote the coldest.
+    let budget = SwapBudget { hot_bytes: 1536, warm_bytes: u64::MAX };
+    let mut swap = SwapCache::with_budget(site_dims(sites, d), 8, budget);
+    assert_eq!(swap.budget(), budget);
+
+    for name in ["a", "b", "c"] {
+        swap.adapt_tensors(&mut store, name).unwrap(); // warm layer
+        swap.deltas(&mut store, name).unwrap(); // hot layer
+    }
+    assert!(swap.stats.demote_hot >= 1, "1536-byte hot budget must demote 1024-byte ΔWs");
+    assert_eq!(swap.stats.demote_warm, 0, "unbounded warm tier must not demote");
+    assert!(
+        swap.stats.delta_bytes + swap.stats.factor_bytes <= budget.hot_bytes,
+        "hot residency must settle under the budget"
+    );
+    assert!(swap.check_consistent());
+
+    // Demoted names still answer from the warm tier without disk I/O …
+    let (disk0, th0) = (store.disk_reads(), swap.stats.tensor_hits);
+    for name in ["a", "b", "c"] {
+        swap.adapt_tensors(&mut store, name).unwrap();
+    }
+    assert_eq!(swap.stats.tensor_hits, th0 + 3, "tensor sets must have stayed resident");
+    assert_eq!(store.disk_reads(), disk0);
+
+    // … and a demoted ΔW comes back as a rebuild, not an error. ("a" is
+    // the coldest of the three same-sized names, so it went first.)
+    let builds = swap.stats.delta_builds;
+    swap.deltas(&mut store, "a").unwrap();
+    assert_eq!(swap.stats.delta_builds, builds + 1, "demoted ΔW must rebuild on return");
+}
+
+/// A warm-tier budget demotes device-form tensor sets without touching
+/// the hot tier. The budget is calibrated from a probe insert so the
+/// test tracks the method's actual device-form footprint.
+#[test]
+fn warm_budget_demotes_tensor_sets() {
+    let (sites, d, n) = (1, 16, 8);
+    let mut store = AdapterStore::open(&tmpdir("warmbudget")).unwrap();
+    let mut rng = Rng::new(0x3A9);
+    for name in ["a", "b", "c"] {
+        store.save(name, &fourierft_adapter(&mut rng, sites, n, 2024)).unwrap();
+    }
+    // Probe: one insert into an unbounded cache measures a set's bytes.
+    let mut probe = SwapCache::new(site_dims(sites, d));
+    probe.adapt_tensors(&mut store, "a").unwrap();
+    let set_bytes = probe.stats.tensor_bytes;
+    assert!(set_bytes > 0);
+
+    // Room for one-and-a-half sets: the second insert demotes the first.
+    let budget = SwapBudget { hot_bytes: u64::MAX, warm_bytes: set_bytes * 3 / 2 };
+    let mut swap = SwapCache::with_budget(site_dims(sites, d), 8, budget);
+    for name in ["a", "b", "c"] {
+        swap.adapt_tensors(&mut store, name).unwrap();
+        swap.deltas(&mut store, name).unwrap();
+    }
+    assert!(swap.stats.demote_warm >= 1, "warm budget must demote tensor sets");
+    assert_eq!(swap.stats.demote_hot, 0, "unbounded hot tier must not demote");
+    assert!(swap.stats.tensor_bytes <= budget.warm_bytes);
+    assert!(swap.check_consistent());
+
+    // Hot tier untouched: every ΔW still answers as a hit.
+    let (builds, hits) = (swap.stats.delta_builds, swap.stats.delta_hits);
+    for name in ["a", "b", "c"] {
+        swap.deltas(&mut store, name).unwrap();
+    }
+    assert_eq!(swap.stats.delta_builds, builds);
+    assert_eq!(swap.stats.delta_hits, hits + 3);
+
+    // A demoted set comes back as a rebuild.
+    let tb = swap.stats.tensor_builds;
+    swap.adapt_tensors(&mut store, "a").unwrap();
+    assert_eq!(swap.stats.tensor_builds, tb + 1);
+}
+
+/// Budget plumbing: defaults are unbounded (pure-LRU behavior is
+/// unchanged), and a sharded cache reports the global budget it was
+/// built with while slicing it exactly across shards.
+#[test]
+fn swap_budget_defaults_and_shared_passthrough() {
+    assert_eq!(SwapBudget::default(), SwapBudget::unbounded());
+    let unbudgeted = SwapCache::new(site_dims(1, 8));
+    assert_eq!(unbudgeted.budget(), SwapBudget::unbounded());
+    assert_eq!(SharedSwap::with_shards(site_dims(1, 8), 4, 8).budget(), SwapBudget::unbounded());
+
+    let budget = SwapBudget { hot_bytes: 10_000, warm_bytes: 3_000 };
+    let shared = SharedSwap::with_budget(site_dims(1, 8), 4, 8, budget);
+    assert_eq!(shared.budget(), budget, "the global (pre-slicing) budget is reported");
 }
 
 #[test]
