@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     let mut trig_at_n1024 = f64::NAN;
     let mut gemm_at_n1024 = f64::NAN;
     for n in [16, 64, 256, 1024] {
-        let (rows, cols) = sample_entries(d, d, n, EntryBias::None, 2024);
+        let (rows, cols) = sample_entries(d, d, n, EntryBias::None, 2024).unwrap();
         let c = rng.normal_vec(n, 1.0);
         let trig = b.run(&format!("reconstruct/trig_idft/d128_n{n}"), || {
             idft2_real_sparse((&rows, &cols), &c, d, d, 8.0).unwrap()
@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
     // these rows: factored wins iff 2n(d1+d2) < d1·d2.
     for (dd, batch) in [(128usize, 8usize), (768, 8), (768, 32)] {
         for n in [16usize, 128] {
-            let (rows, cols) = sample_entries(dd, dd, n, EntryBias::None, 2024);
+            let (rows, cols) = sample_entries(dd, dd, n, EntryBias::None, 2024).unwrap();
             let c = rng.normal_vec(n, 1.0);
             let p = plan::global().get((&rows, &cols), dd, dd)?;
             let x = rng.normal_vec(batch * dd, 1.0);
@@ -408,7 +408,7 @@ fn main() -> anyhow::Result<()> {
         for n in [64usize, 1024] {
             if let Ok(hlo) = reg.delta_hlo(d, n) {
                 if let Ok(exe) = trainer.client.load_hlo(&hlo) {
-                    let (rows, cols) = sample_entries(d, d, n, EntryBias::None, 2024);
+                    let (rows, cols) = sample_entries(d, d, n, EntryBias::None, 2024).unwrap();
                     let mut e = rows.clone();
                     e.extend(&cols);
                     let args = [

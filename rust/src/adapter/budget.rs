@@ -39,16 +39,33 @@ pub fn circulant_params(d: usize, layers_t: usize) -> usize {
 }
 
 /// Trainable parameters of any *registered* method across L_t adapted
-/// square d×d sites — the registry-driven generalization of the per-method
+/// (d1, d2) sites — the registry-driven generalization of the per-method
 /// formulas above, used by the cross-method budget table in
-/// EXPERIMENTS.md §Methods. Errors on unregistered ids.
+/// EXPERIMENTS.md §Methods and the conversion compaction report. The
+/// paper's tables assume square sites (pass `d, d`); rectangular adapted
+/// weights (e.g. fused QKV projections) count correctly too — the old
+/// square-only signature silently reported `d1 × d1` for them. Errors on
+/// unregistered ids.
 pub fn method_params(
     method: &str,
-    d: usize,
+    d1: usize,
+    d2: usize,
     layers_t: usize,
     hp: &super::method::MethodHp,
 ) -> anyhow::Result<usize> {
-    Ok(super::method::get(method)?.param_count(d, d, hp) * layers_t)
+    Ok(super::method::get(method)?.param_count(d1, d2, hp) * layers_t)
+}
+
+/// [`method_params`] summed over explicit per-site `(d1, d2)` dims (from
+/// `AdapterFile::sites` / `ArtifactMeta::site_dims()`), one site each —
+/// what a real adapter file's trainable footprint is.
+pub fn method_params_sites(
+    method: &str,
+    sites: &[(usize, usize)],
+    hp: &super::method::MethodHp,
+) -> anyhow::Result<usize> {
+    let m = super::method::get(method)?;
+    Ok(sites.iter().map(|&(d1, d2)| m.param_count(d1, d2, hp)).sum())
 }
 
 /// One row of the paper's Table 1.
@@ -183,13 +200,39 @@ mod tests {
         use crate::adapter::method::MethodHp;
         let hp = MethodHp { n: 1000, rank: 8, init_std: 1.0 };
         let (d, lt) = (768usize, 24usize);
-        assert_eq!(method_params("fourierft", d, lt, &hp).unwrap(), fourierft_params(1000, lt));
-        assert_eq!(method_params("lora", d, lt, &hp).unwrap(), lora_params(d, lt, 8));
-        assert_eq!(method_params("loca", d, lt, &hp).unwrap(), loca_params(1000, lt));
-        assert_eq!(method_params("circulant", d, lt, &hp).unwrap(), circulant_params(d, lt));
-        assert_eq!(method_params("bitfit", d, lt, &hp).unwrap(), d * lt);
-        assert_eq!(method_params("dense", d, lt, &hp).unwrap(), d * d * lt);
-        assert!(method_params("nope", d, lt, &hp).is_err());
+        assert_eq!(
+            method_params("fourierft", d, d, lt, &hp).unwrap(),
+            fourierft_params(1000, lt)
+        );
+        assert_eq!(method_params("lora", d, d, lt, &hp).unwrap(), lora_params(d, lt, 8));
+        assert_eq!(method_params("loca", d, d, lt, &hp).unwrap(), loca_params(1000, lt));
+        assert_eq!(
+            method_params("circulant", d, d, lt, &hp).unwrap(),
+            circulant_params(d, lt)
+        );
+        assert_eq!(method_params("bitfit", d, d, lt, &hp).unwrap(), d * lt);
+        assert_eq!(method_params("dense", d, d, lt, &hp).unwrap(), d * d * lt);
+        assert!(method_params("nope", d, d, lt, &hp).is_err());
+    }
+
+    #[test]
+    fn rectangular_sites_count_correctly() {
+        use crate::adapter::method::MethodHp;
+        let hp = MethodHp { n: 100, rank: 8, init_std: 1.0 };
+        // A 768x3072 FFN up-projection: LoRA counts r(d1+d2), not 2·r·d1
+        // (the old square-only signature under-counted by 2304r per site).
+        let (d1, d2) = (768usize, 3072usize);
+        assert_eq!(method_params("lora", d1, d2, 1, &hp).unwrap(), 8 * (d1 + d2));
+        assert_eq!(method_params("dense", d1, d2, 1, &hp).unwrap(), d1 * d2);
+        assert_eq!(method_params("fourierft", d1, d2, 1, &hp).unwrap(), 100);
+        // Per-site summing matches one-at-a-time accumulation.
+        let sites = [(768usize, 3072usize), (768, 768), (3072, 768)];
+        let want: usize = sites
+            .iter()
+            .map(|&(a, b)| method_params("lora", a, b, 1, &hp).unwrap())
+            .sum();
+        assert_eq!(method_params_sites("lora", &sites, &hp).unwrap(), want);
+        assert!(method_params_sites("nope", &sites, &hp).is_err());
     }
 
     #[test]

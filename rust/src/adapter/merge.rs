@@ -39,7 +39,7 @@ pub fn delta_host(
     d2: usize,
     alpha: f32,
 ) -> Result<Tensor> {
-    let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, seed);
+    let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, seed)?;
     let c = coeffs.as_f32()?;
     anyhow::ensure!(c.len() == n, "coeff len {} != n {n}", c.len());
     let p = plan::global().get((&rows, &cols), d1, d2)?;
@@ -89,6 +89,29 @@ pub fn merge_into_base(
     adapter: &AdapterFile,
     base: &mut std::collections::BTreeMap<String, Tensor>,
 ) -> Result<Vec<(String, Tensor)>> {
+    // When the method reconstructs over a (d1, d2) weight grid and the
+    // file carries no stored dims, the base tensor at that site IS the
+    // dims source — a non-2-D tensor there is a site/name collision, not
+    // a shape to silently skip (that used to surface as a confusing
+    // `infer_dims` failure downstream).
+    let m = super::method::get(&adapter.method)?;
+    if m.needs_dims() {
+        for e in &adapter.tensors {
+            if e.site.is_empty() || adapter.site_dims(&e.site).is_some() {
+                continue;
+            }
+            if let Some(w) = base.get(&e.site) {
+                anyhow::ensure!(
+                    w.shape.len() == 2,
+                    "cannot merge '{}' adapter into site '{}': base tensor has shape {:?}, \
+                     expected a 2-D weight",
+                    adapter.method,
+                    e.site,
+                    w.shape
+                );
+            }
+        }
+    }
     let deltas = site_deltas_with_dims(adapter, |site| {
         base.get(site).filter(|w| w.shape.len() == 2).map(|w| (w.shape[0], w.shape[1]))
     })?;
@@ -169,6 +192,28 @@ mod tests {
         merge_into_base(&adapter, &mut base).unwrap();
         let want = delta_host(&coeffs, 7, 8, 16, 16, 2.0).unwrap();
         assert_eq!(base["w"], want);
+    }
+
+    #[test]
+    fn merge_rank_mismatch_is_a_hard_error_naming_site_and_shapes() {
+        // A 1-D base tensor colliding with a dims-needing site used to be
+        // silently filtered out of the dims callback, failing later in
+        // infer_dims with no mention of the collision.
+        let mut base = BTreeMap::from([("w".to_string(), Tensor::f32(&[3], vec![0.0; 3]))]);
+        let adapter = AdapterFile::from_named(
+            "fourierft",
+            2024,
+            1.0,
+            vec![("n".into(), "2".into())],
+            vec![("spec.w.c".into(), Tensor::zeros(&[2]))],
+            |_| None, // no stored dims: the base must supply them
+        )
+        .unwrap();
+        let err = merge_into_base(&adapter, &mut base).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("site 'w'"), "must name the site, got: {msg}");
+        assert!(msg.contains("[3]"), "must name the base shape, got: {msg}");
+        assert!(msg.contains("2-D"), "must say what was expected, got: {msg}");
     }
 
     #[test]

@@ -36,7 +36,7 @@ impl DeltaMethod for FourierFt {
         if let Some(meta_n) = ctx.meta_get("n").and_then(|v| v.parse::<usize>().ok()) {
             anyhow::ensure!(meta_n == n, "coeff len {n} != meta n {meta_n}");
         }
-        let (rows, cols) = sample_entries(site.d1, site.d2, n, EntryBias::None, ctx.seed);
+        let (rows, cols) = sample_entries(site.d1, site.d2, n, EntryBias::None, ctx.seed)?;
         let p = plan::global().get((&rows, &cols), site.d1, site.d2)?;
         Ok(Tensor::f32(&[site.d1, site.d2], p.reconstruct(c, ctx.alpha)?))
     }
@@ -58,7 +58,7 @@ impl DeltaMethod for FourierFt {
         if let Some(meta_n) = ctx.meta_get("n").and_then(|v| v.parse::<usize>().ok()) {
             anyhow::ensure!(meta_n == n, "coeff len {n} != meta n {meta_n}");
         }
-        let (rows, cols) = sample_entries(site.d1, site.d2, n, EntryBias::None, ctx.seed);
+        let (rows, cols) = sample_entries(site.d1, site.d2, n, EntryBias::None, ctx.seed)?;
         let p = plan::global().get((&rows, &cols), site.d1, site.d2)?;
         Ok(Some(SiteFactors::Spectral { coeffs: c.to_vec(), alpha: ctx.alpha, plan: p }))
     }
@@ -83,10 +83,59 @@ impl DeltaMethod for FourierFt {
             site.d1,
             site.d2
         );
-        let (rows, cols) = sample_entries(site.d1, site.d2, n, EntryBias::None, ctx.seed);
+        let (rows, cols) = sample_entries(site.d1, site.d2, n, EntryBias::None, ctx.seed)?;
         let p = plan::global().get((&rows, &cols), site.d1, site.d2)?;
         let dc = p.coeff_grad(upstream.as_f32()?, ctx.alpha)?;
         Ok(vec![(ROLE_COEF.to_string(), Tensor::f32(&[n], dc))])
+    }
+
+    /// Conversion fit: entry-pinned spectral least squares. One
+    /// [`coeff_grad`](crate::fourier::ReconstructPlan::coeff_grad) call on
+    /// the shared cached plan with alpha = d1·d2 (cancelling its internal
+    /// α/(d1·d2) scale) yields the exact projections b_l = ⟨ΔW, A_l⟩ onto
+    /// every seed-pinned atom A_l[p,q] = cos(2π(j_l·p/d1 + k_l·q/d2)).
+    /// Distinct-frequency atoms are orthogonal with ‖A‖² = d1·d2 for
+    /// self-conjugate frequencies (2j ≡ 0 mod d1 and 2k ≡ 0 mod d2) and
+    /// d1·d2/2 otherwise, and an entry's conjugate (d1−j, d2−k) carries
+    /// the *identical* atom — so the closed-form least-squares stored
+    /// coefficient (reconstruction scale α/(d1·d2)) is c = b/α for
+    /// self-conjugate entries and for conjugate pairs (the pair splits its
+    /// atom's weight evenly), and c = 2b/α for unpaired entries.
+    fn fit_delta(
+        &self,
+        site: &SiteSpec,
+        delta: &Tensor,
+        hp: &MethodHp,
+        ctx: &ReconstructCtx,
+    ) -> Result<Vec<(String, Tensor)>> {
+        let (d1, d2) = (site.d1, site.d2);
+        anyhow::ensure!(
+            delta.shape == [d1, d2],
+            "fourierft fit site {}: delta shape {:?} != [{d1}, {d2}]",
+            site.name,
+            delta.shape
+        );
+        anyhow::ensure!(ctx.alpha != 0.0, "fourierft fit: alpha must be nonzero");
+        let n = hp.n;
+        let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, ctx.seed)?;
+        let p = plan::global().get((&rows, &cols), d1, d2)?;
+        let b = p.coeff_grad(delta.as_f32()?, (d1 * d2) as f32)?;
+        let mut groups: std::collections::HashMap<(i32, i32), Vec<usize>> =
+            std::collections::HashMap::new();
+        for l in 0..n {
+            let (j, k) = (rows[l], cols[l]);
+            let conj = ((d1 as i32 - j) % d1 as i32, (d2 as i32 - k) % d2 as i32);
+            groups.entry(std::cmp::min((j, k), conj)).or_default().push(l);
+        }
+        let mut c = vec![0.0f32; n];
+        for ((j, k), members) in groups {
+            let self_conj = (2 * j) % d1 as i32 == 0 && (2 * k) % d2 as i32 == 0;
+            let w = if self_conj || members.len() == 2 { 1.0 } else { 2.0 };
+            for &l in &members {
+                c[l] = (w * b[l] as f64 / ctx.alpha as f64) as f32;
+            }
+        }
+        Ok(vec![(ROLE_COEF.to_string(), Tensor::f32(&[n], c))])
     }
 
     fn param_count(&self, _d1: usize, _d2: usize, hp: &MethodHp) -> usize {
@@ -147,6 +196,48 @@ mod tests {
         for i in 0..a.len() {
             assert_eq!(a[i].to_bits(), b[i].to_bits(), "mismatch at {i}");
         }
+    }
+
+    #[test]
+    fn fit_delta_round_trips_own_reconstruction() {
+        // ΔW built from known coefficients, re-fit at the same seed/n:
+        // the refit reconstruction must match to f32 accuracy even though
+        // the coefficient vector itself may differ (conjugate-paired
+        // entries can split their shared atom's weight differently).
+        let (d, n, seed, alpha) = (32usize, 24usize, 7u64, 4.0f32);
+        let mut rng = Rng::new(3);
+        let coeffs = Tensor::f32(&[n], rng.normal_vec(n, 1.0));
+        let site = SiteSpec { name: "w".into(), d1: d, d2: d };
+        let ctx = ReconstructCtx { seed, alpha, meta: &[] };
+        let pairs = [(ROLE_COEF, &coeffs)];
+        let delta = FourierFt
+            .site_delta(&site, &SiteTensors::from_pairs(&pairs), &ctx)
+            .unwrap();
+        let hp = MethodHp { n, rank: 4, init_std: 1.0 };
+        let fitted = FourierFt.fit_delta(&site, &delta, &hp, &ctx).unwrap();
+        assert_eq!(fitted.len(), 1);
+        let refit = &fitted[0].1;
+        let pairs2 = [(ROLE_COEF, refit)];
+        let rec = FourierFt
+            .site_delta(&site, &SiteTensors::from_pairs(&pairs2), &ctx)
+            .unwrap();
+        let (a, b) = (delta.as_f32().unwrap(), rec.as_f32().unwrap());
+        let num: f64 = a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+        let den: f64 = a.iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!(den > 0.0);
+        let rel = (num / den).sqrt();
+        assert!(rel < 1e-4, "fourierft refit rel-L2 {rel}");
+    }
+
+    #[test]
+    fn fit_delta_zero_alpha_is_rejected() {
+        let site = SiteSpec { name: "w".into(), d1: 8, d2: 8 };
+        let delta = Tensor::zeros(&[8, 8]);
+        let hp = MethodHp { n: 4, rank: 1, init_std: 1.0 };
+        let err = FourierFt
+            .fit_delta(&site, &delta, &hp, &ReconstructCtx { seed: 1, alpha: 0.0, meta: &[] })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("alpha"));
     }
 
     #[test]

@@ -193,6 +193,84 @@ impl DeltaMethod for Loca {
         Ok(vec![(ROLE_COEF.to_string(), Tensor::f32(&[n], dc))])
     }
 
+    /// Conversion fit: project ΔW onto the *full* separable DCT-II basis
+    /// (two f64 contraction passes, O(d1·d2·(d1+d2))), then keep the n
+    /// locations carrying the most energy. The basis is orthogonal with
+    /// ‖atom_{jk}‖² = w_j·w_k·d1·d2 (w_0 = 1, w_{>0} = 1/2), so the
+    /// least-squares stored coefficient at a kept location is
+    /// c = b_{jk}/(w_j·w_k·α) (reconstruction scale α/(d1·d2)) and the
+    /// captured energy is b²/(w_j·w_k) — the top-n selection criterion.
+    /// Ties and NaNs order deterministically (total_cmp, then flat index).
+    fn fit_delta(
+        &self,
+        site: &SiteSpec,
+        delta: &Tensor,
+        hp: &MethodHp,
+        ctx: &ReconstructCtx,
+    ) -> Result<Vec<(String, Tensor)>> {
+        let (d1, d2) = (site.d1, site.d2);
+        anyhow::ensure!(
+            delta.shape == [d1, d2],
+            "loca fit site {}: delta shape {:?} != [{d1}, {d2}]",
+            site.name,
+            delta.shape
+        );
+        anyhow::ensure!(ctx.alpha != 0.0, "loca fit: alpha must be nonzero");
+        let n = hp.n;
+        anyhow::ensure!(
+            n <= d1 * d2,
+            "loca fit site {}: n={n} exceeds DCT grid {d1}x{d2}",
+            site.name
+        );
+        let dv = delta.as_f32()?;
+        // t[j, q] = Σ_p cos(π j (2p+1) / (2 d1)) · ΔW[p, q]
+        let mut t = vec![0.0f64; d1 * d2];
+        for j in 0..d1 {
+            let row = &mut t[j * d2..(j + 1) * d2];
+            for p in 0..d1 {
+                let cu = (PI * j as f64 * (2.0 * p as f64 + 1.0) / (2.0 * d1 as f64)).cos();
+                let drow = &dv[p * d2..(p + 1) * d2];
+                for (q, slot) in row.iter_mut().enumerate() {
+                    *slot += cu * drow[q] as f64;
+                }
+            }
+        }
+        // b[j, k] = Σ_q t[j, q] · cos(π k (2q+1) / (2 d2))
+        let mut b = vec![0.0f64; d1 * d2];
+        for j in 0..d1 {
+            let trow = &t[j * d2..(j + 1) * d2];
+            let brow = &mut b[j * d2..(j + 1) * d2];
+            for (k, slot) in brow.iter_mut().enumerate() {
+                let mut acc = 0.0f64;
+                for (q, &tv) in trow.iter().enumerate() {
+                    acc += tv * (PI * k as f64 * (2.0 * q as f64 + 1.0) / (2.0 * d2 as f64)).cos();
+                }
+                *slot = acc;
+            }
+        }
+        let wgt = |i: usize| if i == 0 { 1.0f64 } else { 0.5 };
+        let mut idx: Vec<usize> = (0..d1 * d2).collect();
+        idx.sort_by(|&x, &y| {
+            let ex = b[x] * b[x] / (wgt(x / d2) * wgt(x % d2));
+            let ey = b[y] * b[y] / (wgt(y / d2) * wgt(y % d2));
+            ey.total_cmp(&ex).then(x.cmp(&y))
+        });
+        let mut js = Vec::with_capacity(n);
+        let mut ks = Vec::with_capacity(n);
+        let mut c = Vec::with_capacity(n);
+        for &flat in idx.iter().take(n) {
+            let (j, k) = (flat / d2, flat % d2);
+            js.push(j as i32);
+            ks.push(k as i32);
+            c.push((b[flat] / (wgt(j) * wgt(k) * ctx.alpha as f64)) as f32);
+        }
+        js.extend(ks);
+        Ok(vec![
+            (ROLE_COEF.to_string(), Tensor::f32(&[n], c)),
+            (ROLE_LOCS.to_string(), Tensor::i32(&[2, n], js)),
+        ])
+    }
+
     fn param_count(&self, _d1: usize, _d2: usize, hp: &MethodHp) -> usize {
         // The coefficients are the trainable parameters; the n selected
         // locations are frozen integer indices (stored, not trained).
@@ -213,7 +291,7 @@ impl DeltaMethod for Loca {
             site.d2
         );
         let (rows, cols) =
-            sample_entries(site.d1, site.d2, hp.n, EntryBias::None, rng.next_u64());
+            sample_entries(site.d1, site.d2, hp.n, EntryBias::None, rng.next_u64())?;
         let mut e: Vec<i32> = rows;
         e.extend(cols);
         let locs = Tensor::i32(&[2, hp.n], e);
@@ -279,7 +357,7 @@ mod tests {
     fn gemm_form_matches_naive_idct() {
         let mut rng = Rng::new(11);
         let (d1, d2, n) = (24usize, 20usize, 12usize);
-        let (js, ks) = sample_entries(d1, d2, n, EntryBias::None, 99);
+        let (js, ks) = sample_entries(d1, d2, n, EntryBias::None, 99).unwrap();
         let c = rng.normal_vec(n, 1.0);
         let want = naive(&js, &ks, &c, d1, d2, 3.0);
         let got = run(js, ks, c, d1, d2, 3.0);
@@ -326,6 +404,41 @@ mod tests {
                 &ReconstructCtx { seed: 0, alpha: 1.0, meta: &[] },
             )
             .is_err());
+    }
+
+    #[test]
+    fn fit_delta_recovers_sparse_dct_target() {
+        // ΔW built from 6 DCT atoms, re-fit with n = 8: top-n selection
+        // must find (at least) those locations and reconstruct exactly.
+        let mut rng = Rng::new(13);
+        let (d1, d2, m) = (16usize, 12usize, 6usize);
+        let (js, ks) = sample_entries(d1, d2, m, EntryBias::None, 77).unwrap();
+        let c = rng.normal_vec(m, 1.0);
+        let alpha = 3.0f32;
+        let delta = run(js, ks, c, d1, d2, alpha);
+        let site = SiteSpec { name: "w".into(), d1, d2 };
+        let ctx = ReconstructCtx { seed: 0, alpha, meta: &[] };
+        let hp = MethodHp { n: 8, rank: 2, init_std: 1.0 };
+        let fitted = Loca.fit_delta(&site, &delta, &hp, &ctx).unwrap();
+        let map: std::collections::HashMap<&str, &Tensor> =
+            fitted.iter().map(|(r, t)| (r.as_str(), t)).collect();
+        let pairs = [(ROLE_COEF, map[ROLE_COEF]), (ROLE_LOCS, map[ROLE_LOCS])];
+        let rec = Loca
+            .site_delta(&site, &SiteTensors::from_pairs(&pairs), &ctx)
+            .unwrap();
+        let diff = rec.max_abs_diff(&delta).unwrap();
+        assert!(diff < 1e-4, "sparse DCT target not recovered: max diff {diff}");
+    }
+
+    #[test]
+    fn fit_delta_n_beyond_grid_is_rejected() {
+        let site = SiteSpec { name: "w".into(), d1: 4, d2: 4 };
+        let delta = Tensor::zeros(&[4, 4]);
+        let hp = MethodHp { n: 17, rank: 1, init_std: 1.0 };
+        let err = Loca
+            .fit_delta(&site, &delta, &hp, &ReconstructCtx { seed: 0, alpha: 1.0, meta: &[] })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds"));
     }
 
     #[test]

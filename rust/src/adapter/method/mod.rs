@@ -351,6 +351,35 @@ pub trait DeltaMethod: Send + Sync {
         )
     }
 
+    /// Inverse of [`site_delta`](DeltaMethod::site_delta): given a dense
+    /// target ΔW for one site, fit this method's stored tensors so that
+    /// `site_delta` over the result approximates `delta` — the per-site
+    /// kernel of cross-method adapter **conversion** (`adapter::convert`).
+    /// Returns (role, tensor) pairs in the same form `init_tensors` does.
+    ///
+    /// The fit must be deterministic (seeded from `ctx.seed` where
+    /// randomness is needed, e.g. lora's sketch matrix) so converting the
+    /// same source file twice yields bit-identical output. Each built-in
+    /// solves its own structured least-squares problem: fourierft projects
+    /// onto its seed-pinned entry atoms, lora runs seeded subspace
+    /// iteration, loca projects onto the full DCT-II basis and keeps the
+    /// top-n coefficients, circulant alternates exact 1-D solves. Methods
+    /// without a useful fit (dense would defeat compaction; bitfit cannot
+    /// represent a matrix delta) keep this default and are rejected as
+    /// conversion targets.
+    fn fit_delta(
+        &self,
+        _site: &SiteSpec,
+        _delta: &Tensor,
+        _hp: &MethodHp,
+        _ctx: &ReconstructCtx,
+    ) -> Result<Vec<(String, Tensor)>> {
+        bail!(
+            "adapter method '{}' has no fit_delta (cannot be a conversion target)",
+            self.id()
+        )
+    }
+
     /// Factored form of [`site_delta`](DeltaMethod::site_delta) for
     /// no-materialize serving, or `None` when the method has no useful
     /// factorization (dense/bitfit: the stored tensor *is* the delta).

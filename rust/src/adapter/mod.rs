@@ -15,6 +15,10 @@
 //!   that keeps serving digests stable for quantized fleets.
 //! * [`budget`] — exact trainable-parameter / byte arithmetic reproducing
 //!   the paper's Table 1, plus registry-driven cross-method budgets.
+//! * [`convert`] — cross-method conversion: re-fit any adapter's ΔW into
+//!   another registered method via [`method::DeltaMethod::fit_delta`],
+//!   with a per-site/pooled rel-L2 fidelity report and compaction
+//!   accounting (the fleet-compaction path behind `repro convert`).
 //! * [`store`] — a multi-adapter registry over one frozen base model with
 //!   hot-swap and a versioned publish lifecycle (immutable per-version
 //!   history, keep-K GC, byte-identical rollback, `name@v` pinned loads),
@@ -24,6 +28,7 @@
 //!   or on-device via the `delta_*.hlo.txt` artifact.
 
 pub mod budget;
+pub mod convert;
 pub mod format;
 pub mod merge;
 pub mod method;
@@ -31,6 +36,7 @@ pub mod quant;
 pub mod store;
 
 pub use budget::{fourierft_params, lora_params, Table1Row, TABLE1};
+pub use convert::{convert_file, ConvertCfg, FidelityReport};
 pub use format::{AdapterFile, SiteDims, TensorEntry};
 pub use method::{DeltaMethod, MethodHp, SiteSpec};
 pub use quant::{Enc, QuantKind};

@@ -170,7 +170,12 @@ pub fn int8_params(data: &[f32]) -> (f32, f32) {
     if hi == lo {
         return (1.0, 0.0);
     }
-    let scale = (hi - lo) / 255.0;
+    // A subnormal-tiny range underflows `(hi - lo) / 255` to 0.0, and a
+    // zero scale turns `int8_encode`'s division into inf/NaN codes. Floor
+    // at the smallest normal f32 — an exact power of two, so the
+    // grid-point re-encode argument (decode(q) encodes back to q) is
+    // preserved: `(q - zero) * scale / scale` is exact.
+    let scale = ((hi - lo) / 255.0).max(f32::MIN_POSITIVE);
     let zero = (-lo / scale).round().clamp(0.0, 255.0);
     (scale, zero)
 }
@@ -330,6 +335,53 @@ mod tests {
         let (s, z) = int8_params(&[4.0; 8]);
         let deq = int8_decode(int8_encode(4.0, s, z), s, z);
         assert_eq!(int8_encode(deq, s, z), int8_encode(4.0, s, z));
+    }
+
+    #[test]
+    fn int8_degenerate_tensors_stay_finite_and_zeros_round_trip() {
+        // Property sweep over the degenerate shapes conversion output can
+        // hit: constant, all-negative, single-element, subnormal-tiny
+        // ranges, and exact zeros. Invariants: the chosen scale is finite
+        // and non-zero, every decoded value is finite, grid points
+        // re-encode exactly, and exact zeros round-trip exactly.
+        let mut rng = Rng::new(13);
+        let mut cases: Vec<Vec<f32>> = vec![
+            vec![4.0; 8],                    // constant positive
+            vec![-3.25; 5],                  // constant negative
+            vec![0.0; 4],                    // all-zero
+            vec![7.5],                       // single element
+            vec![-2.0],                      // single negative element
+            vec![-5.0, -1.0, -0.25],         // all-negative range
+            vec![0.0, 1e-44],                // subnormal-tiny range (old code: scale = 0)
+            vec![-1e-44, 1e-44],             // tiny symmetric range
+            vec![0.0, f32::MIN_POSITIVE],    // smallest normal range
+            vec![f32::NAN, 1.0, 0.0, -1.0],  // non-finite values ignored for the range
+        ];
+        for _ in 0..40 {
+            let n = 1 + rng.below(16);
+            let base = rng.normal() * 10.0;
+            let spread = if rng.chance(0.5) { 0.0 } else { rng.f32() * 1e-43 };
+            cases.push((0..n).map(|_| base + spread * rng.f32()).collect());
+        }
+        for v in &cases {
+            let (scale, zero) = int8_params(v);
+            assert!(scale.is_finite() && scale > 0.0, "scale {scale} for {v:?}");
+            assert!(zero.is_finite() && (0.0..=255.0).contains(&zero), "zero {zero}");
+            for q in 0..=255u8 {
+                let x = int8_decode(q, scale, zero);
+                assert!(x.is_finite(), "code {q} decodes to {x} for {v:?}");
+                assert_eq!(int8_encode(x, scale, zero), q, "grid point {q} for {v:?}");
+            }
+            assert_eq!(
+                int8_decode(int8_encode(0.0, scale, zero), scale, zero),
+                0.0,
+                "exact zero must round-trip exactly for {v:?}"
+            );
+            for &x in v.iter().filter(|x| x.is_finite()) {
+                let deq = int8_decode(int8_encode(x, scale, zero), scale, zero);
+                assert!(deq.is_finite(), "{x} dequantizes to {deq} for {v:?}");
+            }
+        }
     }
 
     #[test]

@@ -489,7 +489,7 @@ impl AdapterStore {
     /// `.versions/`, no per-name `versions()` scans): the top level plus
     /// the two-hex-digit shard subdirectories. Not-yet-migrated flat
     /// files are included, so a mixed-layout dir lists completely.
-    fn for_each_adapter(&self, mut f: impl FnMut(String, u64)) -> Result<()> {
+    pub fn for_each_adapter(&self, mut f: impl FnMut(String, u64)) -> Result<()> {
         for entry in std::fs::read_dir(&self.dir)? {
             let entry = entry?;
             let ft = entry.file_type()?;
@@ -874,6 +874,13 @@ impl SharedAdapterStore {
     /// All adapters on disk, with byte sizes (directory scan; shard-free).
     pub fn list(&self) -> Result<Vec<(String, u64)>> {
         crate::util::lock_recover(&self.shards[0]).list()
+    }
+
+    /// Visit every adapter on disk exactly once, streaming `(name, bytes)`
+    /// — the walker behind fleet-wide passes (e.g. `repro convert`) that
+    /// must not materialize a million-name Vec.
+    pub fn for_each_adapter(&self, f: impl FnMut(String, u64)) -> Result<()> {
+        crate::util::lock_recover(&self.shards[0]).for_each_adapter(f)
     }
 
     /// Total bytes across all stored adapters.

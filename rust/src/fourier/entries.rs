@@ -13,6 +13,7 @@
 //! Figure 3 visualizes these maps; Figure 5 sweeps f_c on four GLUE tasks.
 
 use crate::tensor::rng::Rng;
+use anyhow::{ensure, Result};
 
 /// Frequency bias for entry sampling.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -25,37 +26,58 @@ pub enum EntryBias {
 
 /// Sample `n` distinct spectral entries from a d1 x d2 grid.
 /// Returns (rows, cols), each of length n — the paper's E in R^{2 x n}.
+///
+/// `n` larger than the grid is an error (conversion passes user-supplied
+/// budgets straight in). A band-pass bias whose positive support is
+/// smaller than `n` — narrow bands underflow `exp` to exact zeros — falls
+/// back to uniform sampling over the not-yet-picked entries once the band
+/// is exhausted, so the result always holds `n` distinct entries.
 pub fn sample_entries(
     d1: usize,
     d2: usize,
     n: usize,
     bias: EntryBias,
     seed: u64,
-) -> (Vec<i32>, Vec<i32>) {
-    assert!(n <= d1 * d2, "n={n} exceeds spectral grid {d1}x{d2}");
+) -> Result<(Vec<i32>, Vec<i32>)> {
+    ensure!(
+        n <= d1 * d2,
+        "sample_entries: n={n} exceeds the {d1}x{d2} spectral grid ({} entries)",
+        d1 * d2
+    );
     let mut rng = Rng::new(seed);
     match bias {
         EntryBias::None => {
             let picks = rng.choose_distinct(d1 * d2, n);
-            (
+            Ok((
                 picks.iter().map(|&f| (f / d2) as i32).collect(),
                 picks.iter().map(|&f| (f % d2) as i32).collect(),
-            )
+            ))
         }
         EntryBias::BandPass { fc, w } => {
-            let probs = bandpass_map(d1, d2, fc, w);
             // Weighted sampling without replacement (successive draws with
             // removal). Grid sizes here are <= 768^2 so O(n * d1 d2) is fine.
-            let mut weights = probs;
+            let mut weights = bandpass_map(d1, d2, fc, w);
+            let mut picked = vec![false; d1 * d2];
             let mut rows = Vec::with_capacity(n);
             let mut cols = Vec::with_capacity(n);
             for _ in 0..n {
+                if weights.iter().sum::<f64>() <= 0.0 {
+                    break; // band support exhausted
+                }
                 let idx = rng.weighted(&weights);
                 weights[idx] = 0.0;
+                picked[idx] = true;
                 rows.push((idx / d2) as i32);
                 cols.push((idx % d2) as i32);
             }
-            (rows, cols)
+            if rows.len() < n {
+                let rest: Vec<usize> = (0..d1 * d2).filter(|&i| !picked[i]).collect();
+                for j in rng.choose_distinct(rest.len(), n - rows.len()) {
+                    rows.push((rest[j] / d2) as i32);
+                    cols.push((rest[j] % d2) as i32);
+                }
+            }
+            Ok((rows, cols))
         }
     }
 }
@@ -102,7 +124,7 @@ mod tests {
 
     #[test]
     fn uniform_entries_distinct_and_in_range() {
-        let (r, c) = sample_entries(96, 80, 500, EntryBias::None, 2024);
+        let (r, c) = sample_entries(96, 80, 500, EntryBias::None, 2024).unwrap();
         assert_eq!(r.len(), 500);
         let mut seen = std::collections::HashSet::new();
         for i in 0..500 {
@@ -114,10 +136,10 @@ mod tests {
 
     #[test]
     fn deterministic_given_seed() {
-        let a = sample_entries(64, 64, 100, EntryBias::None, 2024);
-        let b = sample_entries(64, 64, 100, EntryBias::None, 2024);
+        let a = sample_entries(64, 64, 100, EntryBias::None, 2024).unwrap();
+        let b = sample_entries(64, 64, 100, EntryBias::None, 2024).unwrap();
         assert_eq!(a, b);
-        let c = sample_entries(64, 64, 100, EntryBias::None, 2025);
+        let c = sample_entries(64, 64, 100, EntryBias::None, 2025).unwrap();
         assert_ne!(a, c);
     }
 
@@ -125,8 +147,10 @@ mod tests {
     fn low_freq_bias_concentrates_near_center() {
         // fc = 0 passes only low distances; large fc favors the rim.
         let d = 128;
-        let (r0, c0) = sample_entries(d, d, 300, EntryBias::BandPass { fc: 0.0, w: 30.0 }, 7);
-        let (r1, c1) = sample_entries(d, d, 300, EntryBias::BandPass { fc: 60.0, w: 30.0 }, 7);
+        let (r0, c0) =
+            sample_entries(d, d, 300, EntryBias::BandPass { fc: 0.0, w: 30.0 }, 7).unwrap();
+        let (r1, c1) =
+            sample_entries(d, d, 300, EntryBias::BandPass { fc: 60.0, w: 30.0 }, 7).unwrap();
         let m0 = mean_radius(&r0, &c0, d, d);
         let m1 = mean_radius(&r1, &c1, d, d);
         assert!(m0 < m1, "fc=0 radius {m0} should be < fc=60 radius {m1}");
@@ -157,5 +181,37 @@ mod tests {
         let center = map[32 * 64 + 32];
         let corner = map[0];
         assert!(center > corner);
+    }
+
+    #[test]
+    fn n_beyond_grid_is_a_hard_error() {
+        let err = sample_entries(8, 8, 65, EntryBias::None, 2024).unwrap_err();
+        assert!(format!("{err:#}").contains("8x8"), "got: {err:#}");
+        assert!(sample_entries(8, 8, 64, EntryBias::None, 2024).is_ok());
+    }
+
+    #[test]
+    fn exhausted_band_falls_back_to_uniform() {
+        // w = 0.01 underflows exp at every off-center distance; on an even
+        // grid there is no exact-center pixel either, so the whole map is
+        // zero and every draw comes from the uniform fallback.
+        let (r, c) =
+            sample_entries(8, 8, 10, EntryBias::BandPass { fc: 0.0, w: 0.01 }, 3).unwrap();
+        assert_eq!(r.len(), 10);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10 {
+            assert!((0..8).contains(&r[i]) && (0..8).contains(&c[i]));
+            assert!(seen.insert((r[i], c[i])), "duplicate entry");
+        }
+        // Odd grid: exactly one positive-weight pixel (the center), so a
+        // 5-entry draw takes it first and fills the rest uniformly.
+        let (r, c) =
+            sample_entries(9, 9, 5, EntryBias::BandPass { fc: 0.0, w: 0.01 }, 3).unwrap();
+        assert_eq!(r.len(), 5);
+        assert_eq!((r[0], c[0]), (4, 4), "center pixel is the only in-band entry");
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..5 {
+            assert!(seen.insert((r[i], c[i])), "duplicate entry");
+        }
     }
 }

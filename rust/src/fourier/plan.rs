@@ -323,7 +323,7 @@ mod tests {
     #[test]
     fn gemm_matches_trig_path() {
         let (d1, d2, n) = (48, 64, 96);
-        let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, 2024);
+        let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, 2024).unwrap();
         let mut rng = Rng::new(1);
         let c = rng.normal_vec(n, 1.0);
         let want = idft2_real_sparse((&rows, &cols), &c, d1, d2, 7.5).unwrap();
@@ -335,7 +335,7 @@ mod tests {
     #[test]
     fn plan_is_reusable_across_coefficient_vectors() {
         let (d, n) = (32, 24);
-        let (rows, cols) = sample_entries(d, d, n, EntryBias::None, 7);
+        let (rows, cols) = sample_entries(d, d, n, EntryBias::None, 7).unwrap();
         let plan = ReconstructPlan::new((&rows, &cols), d, d).unwrap();
         let mut rng = Rng::new(2);
         for _ in 0..3 {
@@ -364,7 +364,7 @@ mod tests {
         // ΔW is linear in c, so for any upstream G:
         //   <G, reconstruct(c + h·e_l)> − <G, reconstruct(c)> = h · coeff_grad(G)[l].
         let (d1, d2, n) = (20usize, 14usize, 10usize);
-        let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, 42);
+        let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, 42).unwrap();
         let plan = ReconstructPlan::new((&rows, &cols), d1, d2).unwrap();
         let mut rng = Rng::new(3);
         let c = rng.normal_vec(n, 1.0);
@@ -390,7 +390,7 @@ mod tests {
     #[test]
     fn factored_apply_matches_dense_product_and_is_rerun_stable() {
         let (d1, d2, n, rows) = (48usize, 32usize, 24usize, 5usize);
-        let (js, ks) = sample_entries(d1, d2, n, EntryBias::None, 11);
+        let (js, ks) = sample_entries(d1, d2, n, EntryBias::None, 11).unwrap();
         let plan = ReconstructPlan::new((&js, &ks), d1, d2).unwrap();
         let mut rng = Rng::new(9);
         let c = rng.normal_vec(n, 1.0);
@@ -429,13 +429,13 @@ mod tests {
     #[test]
     fn cache_hits_on_repeat_key() {
         let cache = PlanCache::new(8);
-        let (rows, cols) = sample_entries(16, 16, 8, EntryBias::None, 5);
+        let (rows, cols) = sample_entries(16, 16, 8, EntryBias::None, 5).unwrap();
         let p1 = cache.get((&rows, &cols), 16, 16).unwrap();
         let p2 = cache.get((&rows, &cols), 16, 16).unwrap();
         assert!(Arc::ptr_eq(&p1, &p2));
         let (hits, builds) = cache.stats();
         assert_eq!((hits, builds), (1, 1));
-        let other = sample_entries(16, 16, 8, EntryBias::None, 6);
+        let other = sample_entries(16, 16, 8, EntryBias::None, 6).unwrap();
         cache.get((&other.0, &other.1), 16, 16).unwrap();
         assert_eq!(cache.len(), 2);
         cache.clear();

@@ -11,6 +11,7 @@
 //!   cluster   [--nodes N ...]       sharded multi-node serving simulation
 //!   scale     [--adapters N ...]    million-adapter tiered-store bench + budget gate
 //!   store-stats [--dir P]           on-disk / decode-cache stats for a store dir
+//!   convert   [--to ID ...]         re-fit a fleet of adapters into another method
 //!
 //! `--engine host` (the default) trains and serves pure-Rust with no
 //! artifacts; `--engine xla` runs from AOT artifacts. Python is never
@@ -52,6 +53,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("probe") => probe(args),
         Some("scale") => scale(args),
         Some("store-stats") => store_stats(args),
+        Some("convert") => convert(args),
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown command '{cmd}'\n");
@@ -102,7 +104,8 @@ fn print_usage() {
          \x20                                    online lifecycle: background train -> versioned\n\
          \x20                                    publish -> serve, with per-publish latency rows;\n\
          \x20                                    open-loop arrivals shed at admission per wave\n\
-         \x20 methods [--d N --layers N --n N --rank N]      registered adapter methods + budgets\n\
+         \x20 methods [--d N --d2 N --layers N --n N --rank N]  registered adapter methods +\n\
+         \x20                                    budgets (--d2 for rectangular adapted sites)\n\
          \x20 scale [--adapters N --requests N --quant {{f32,f16,int8}}\n\
          \x20        --hot-mb M --warm-mb M --cold-mb M --workers W --apply MODE\n\
          \x20        --arrival K --rate R --deadline-ticks D --probe-layout]\n\
@@ -113,6 +116,15 @@ fn print_usage() {
          \x20 store-stats [--dir PATH --keep K]  on-disk + decode-cache stats for a store dir:\n\
          \x20                                    adapters, versions, GC debt, shard fan-out\n\
          \x20                                    (opening migrates flat legacy layouts in place)\n\
+         \x20 convert [--dir PATH --to ID --from ID --adapters N --n N --rank R\n\
+         \x20          --quant {{f32,f16,int8}} --max-rel-l2 F --dim D --sites S\n\
+         \x20          --requests N --workers W --seed S]\n\
+         \x20                                    cross-method fleet conversion: re-fit every\n\
+         \x20                                    adapter's ΔW into --to via fit_delta, publish\n\
+         \x20                                    the converted version in place (rollback =\n\
+         \x20                                    version pin), report per-method compaction +\n\
+         \x20                                    rel-L2 fidelity, then gate serve-digest\n\
+         \x20                                    determinism across worker counts\n\
          \n\
          global flags:\n\
          \x20 --engine {host,xla}                host = pure-Rust training engine (default,\n\
@@ -129,6 +141,7 @@ fn methods(args: &Args) -> Result<()> {
     use fourier_peft::adapter::method::{self, MethodHp};
 
     let d = args.usize_or("d", 768);
+    let d2 = args.usize_or("d2", d); // rectangular adapted sites, e.g. fused QKV
     let layers = args.usize_or("layers", 24);
     let hp = MethodHp {
         n: args.usize_or("n", 1000),
@@ -136,12 +149,12 @@ fn methods(args: &Args) -> Result<()> {
         init_std: 1.0,
     };
     println!(
-        "registered adapter methods (d={d}, L_t={layers}, n={}, r={}):",
+        "registered adapter methods (d1={d}, d2={d2}, L_t={layers}, n={}, r={}):",
         hp.n, hp.rank
     );
     println!("{:<12} {:>14} {:>12}", "method", "params", "f32 bytes");
     for id in method::ids() {
-        let p = method_params(&id, d, layers, &hp)?;
+        let p = method_params(&id, d, d2, layers, &hp)?;
         println!(
             "{:<12} {:>14} {:>12}",
             id,
@@ -952,6 +965,195 @@ fn store_stats(args: &Args) -> Result<()> {
         fourier_peft::util::fmt_bytes(store.cache_peak_bytes() as usize),
         store.cache_evictions()
     );
+    Ok(())
+}
+
+/// Cross-method fleet conversion: re-fit every adapter in a store into
+/// `--to` via the target method's `fit_delta`, publish the converted file
+/// as the next version of the same name (so rollback is a `name@v` pin on
+/// the byte-identical prior version), and report what the conversion cost
+/// (per-source-method pooled rel-L2, measured on the *post-quantization*
+/// reconstruction) and bought (byte compaction). With no `--dir` the
+/// command is self-contained: it populates a fresh mixed store — lora
+/// fleets built from Fourier atoms so the lora→fourierft re-fit at the
+/// shared entry seed is near-exact, plus circulant + fourierft adapters —
+/// then serves the converted fleet through the scheduler in both apply
+/// modes × {1, --workers} workers and gates that the response digest is
+/// bit-identical across worker counts (the determinism contract the
+/// convert-smoke CI job replays).
+fn convert(args: &Args) -> Result<()> {
+    use fourier_peft::adapter::{convert_file, ConvertCfg, MethodHp, QuantKind, SharedAdapterStore};
+    use fourier_peft::coordinator::scheduler::{serve_scheduled_host, ApplyMode, SchedCfg};
+    use fourier_peft::coordinator::serving::SharedSwap;
+    use fourier_peft::coordinator::workload::{self, WorkloadCfg};
+    use std::collections::BTreeMap;
+    use std::time::Instant;
+
+    let to = args.str_or("to", "fourierft");
+    let from = args.get("from");
+    let hp = MethodHp {
+        n: args.usize_or("n", 64),
+        rank: args.usize_or("rank", 8),
+        init_std: 1.0,
+    };
+    let quant: Option<QuantKind> = match args.str_or("quant", "f32") {
+        "f32" => None,
+        other => Some(other.parse()?),
+    };
+    let mut ccfg = ConvertCfg::new(to, hp.clone());
+    ccfg.quant = quant;
+    ccfg.max_rel_l2 = match args.get("max-rel-l2") {
+        Some(v) => Some(v.parse::<f64>()?),
+        None => None,
+    };
+
+    let fresh = args.get("dir").is_none();
+    let base = WorkloadCfg::small();
+    let cfg = WorkloadCfg {
+        adapters: args.usize_or("adapters", 1000),
+        requests: args.usize_or("requests", 512),
+        method: to.to_string(),
+        dim: args.usize_or("dim", 64),
+        sites: args.usize_or("sites", base.sites),
+        n_coeffs: hp.n,
+        seed: args.u64_or("seed", base.seed),
+        ..base
+    };
+    let dir = match args.get("dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => fourier_peft::runs_dir().join("convert_store"),
+    };
+    if fresh {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    let store = SharedAdapterStore::open(&dir)?;
+    if fresh {
+        let methods: Vec<String> =
+            ["lora", "circulant", "fourierft"].iter().map(|s| s.to_string()).collect();
+        workload::populate_store_compressible(&store, &cfg, &methods)?;
+        println!(
+            "populated {} {} adapters ({} sites x {}x{}) in {}",
+            cfg.adapters,
+            methods.join("/"),
+            cfg.sites,
+            cfg.dim,
+            cfg.dim,
+            dir.display()
+        );
+    }
+    let mut names = Vec::new();
+    store.for_each_adapter(|name, _| names.push(name))?;
+    anyhow::ensure!(!names.is_empty(), "store {} holds no adapters", dir.display());
+    names.sort();
+
+    #[derive(Default)]
+    struct Agg {
+        count: usize,
+        bytes_before: usize,
+        bytes_after: usize,
+        rel_sum: f64,
+        rel_max: f64,
+    }
+    let mut per: BTreeMap<String, Agg> = BTreeMap::new();
+    let mut rels: Vec<f64> = Vec::new();
+    let mut skipped = 0usize;
+    let t0 = Instant::now();
+    for name in &names {
+        let src = store.load(name)?;
+        if let Some(f) = from {
+            if src.method != f {
+                skipped += 1;
+                continue;
+            }
+        }
+        let (out, rep) =
+            convert_file(&src, &ccfg).with_context(|| format!("converting adapter '{name}'"))?;
+        store.publish(name, &out)?;
+        let a = per.entry(src.method.clone()).or_default();
+        a.count += 1;
+        a.bytes_before += rep.bytes_before;
+        a.bytes_after += rep.bytes_after;
+        a.rel_sum += rep.rel_l2;
+        a.rel_max = a.rel_max.max(rep.rel_l2);
+        rels.push(rep.rel_l2);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let converted: usize = per.values().map(|a| a.count).sum();
+    anyhow::ensure!(converted > 0, "no adapters matched --from {from:?}");
+
+    println!(
+        "converted {converted} adapters -> {to} in {wall:.3}s ({:.0}/s), {skipped} skipped",
+        converted as f64 / wall.max(1e-9)
+    );
+    println!(
+        "{:<12} {:>7} {:>12} {:>12} {:>9} {:>12} {:>12}",
+        "from", "count", "bytes", "-> bytes", "compact", "rel-L2 mean", "rel-L2 max"
+    );
+    let (mut tb, mut ta, mut rmax) = (0usize, 0usize, 0f64);
+    for (m, a) in &per {
+        let compact = a.bytes_before as f64 / a.bytes_after.max(1) as f64;
+        println!(
+            "{:<12} {:>7} {:>12} {:>12} {:>8.2}x {:>12.3e} {:>12.3e}",
+            m,
+            a.count,
+            fourier_peft::util::fmt_bytes(a.bytes_before),
+            fourier_peft::util::fmt_bytes(a.bytes_after),
+            compact,
+            a.rel_sum / a.count as f64,
+            a.rel_max,
+        );
+        tb += a.bytes_before;
+        ta += a.bytes_after;
+        rmax = rmax.max(a.rel_max);
+    }
+    let compact = tb as f64 / ta.max(1) as f64;
+    // Whole-fleet fidelity histogram: per-adapter pooled rel-L2 bucketed
+    // at the gates the codecs and CI use.
+    let edges = [1e-4, 1e-3, 1e-2, 5e-2];
+    let mut hist = [0usize; 5];
+    for &r in &rels {
+        hist[edges.iter().position(|&e| r <= e).unwrap_or(edges.len())] += 1;
+    }
+    println!(
+        "rel-L2 histogram: <=1e-4 {}  <=1e-3 {}  <=1e-2 {}  <=5e-2 {}  >5e-2 {}",
+        hist[0], hist[1], hist[2], hist[3], hist[4]
+    );
+    // awk-able gate lines (the convert-smoke CI job parses these).
+    println!("convert rel_l2 max {rmax:.6e}");
+    println!("convert compaction {compact:.3}");
+
+    let bench = fourier_peft::util::bench::Bench::quick();
+    bench.report_value("convert/adapters", converted as f64, "count");
+    bench.report_value("convert/rate", converted as f64 / wall.max(1e-9), "adapters/s");
+    bench.report_value("convert/rel_l2_max", rmax, "rel");
+    bench.report_value("convert/compaction", compact, "x");
+
+    if fresh {
+        // The populated names follow the zipf_* convention gen_requests
+        // samples from, so the converted fleet can be served directly:
+        // the digest must not move with the worker count in either apply
+        // mode (it may differ *between* modes — different GEMM order).
+        let swap = SharedSwap::new(workload::site_dims(&cfg));
+        let workers = args.usize_or("workers", 4);
+        for apply_s in ["dense", "factored"] {
+            let apply: ApplyMode = apply_s.parse()?;
+            let mut digests = Vec::new();
+            for w in [1, workers] {
+                let sched = SchedCfg { workers: w, apply, ..SchedCfg::default() };
+                let queue = workload::gen_requests(&cfg)?;
+                let (results, _) = serve_scheduled_host(&swap, &store, queue, &sched)?;
+                let d = fourier_peft::coordinator::serving::response_digest(&results)?;
+                println!("response digest {d:016x} (apply {apply}, workers {w})");
+                digests.push(d);
+            }
+            anyhow::ensure!(
+                digests.windows(2).all(|w| w[0] == w[1]),
+                "converted-fleet response digest varies with worker count under {apply}"
+            );
+        }
+    } else {
+        println!("(--dir given: skipping the serve-digest check — store names may not be zipf_*)");
+    }
     Ok(())
 }
 

@@ -249,7 +249,7 @@ pub fn make_statics(
     }
     let n = meta.method.n;
     let (d1, d2) = entry_grid_dims(meta);
-    let (rows, cols) = sample_entries(d1, d2, n, bias, entry_seed);
+    let (rows, cols) = sample_entries(d1, d2, n, bias, entry_seed)?;
     let mut e_data = rows.clone();
     e_data.extend(&cols);
     let entries_t = Tensor::i32(&[2, n], e_data);

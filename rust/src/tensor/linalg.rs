@@ -86,6 +86,55 @@ pub fn qr_q(a: &Tensor) -> Result<Tensor> {
     Ok(Tensor::f32(&[n, n], q.iter().map(|&x| x as f32).collect()))
 }
 
+/// Thin QR of a tall matrix A \[m, r\] (m >= r): returns Q \[m, r\] with
+/// orthonormal columns spanning range(A). Modified Gram–Schmidt in f64
+/// with a re-orthogonalization pass (the classic "twice is enough" fix).
+/// Numerically-dead columns (rank-deficient input) are left as zero
+/// columns rather than failing — callers doing subspace iteration just
+/// get a smaller effective rank.
+pub fn qr_thin(a: &Tensor) -> Result<Tensor> {
+    anyhow::ensure!(a.shape.len() == 2, "qr_thin wants a matrix, got {:?}", a.shape);
+    let (m, r) = (a.shape[0], a.shape[1]);
+    anyhow::ensure!(m >= r, "qr_thin wants tall/square input, got {:?}", a.shape);
+    let av = a.as_f32()?;
+    // Column-major working copy in f64.
+    let mut q: Vec<f64> = vec![0.0; m * r];
+    for i in 0..m {
+        for j in 0..r {
+            q[j * m + i] = av[i * r + j] as f64;
+        }
+    }
+    for j in 0..r {
+        // Two MGS passes of projection against the already-finished columns.
+        for _pass in 0..2 {
+            for k in 0..j {
+                let dot: f64 =
+                    (0..m).map(|i| q[k * m + i] * q[j * m + i]).sum();
+                for i in 0..m {
+                    q[j * m + i] -= dot * q[k * m + i];
+                }
+            }
+        }
+        let norm: f64 = (0..m).map(|i| q[j * m + i] * q[j * m + i]).sum::<f64>().sqrt();
+        if norm < 1e-12 {
+            for i in 0..m {
+                q[j * m + i] = 0.0;
+            }
+            continue;
+        }
+        for i in 0..m {
+            q[j * m + i] /= norm;
+        }
+    }
+    let mut out = vec![0.0f32; m * r];
+    for i in 0..m {
+        for j in 0..r {
+            out[i * r + j] = q[j * m + i] as f32;
+        }
+    }
+    Ok(Tensor::f32(&[m, r], out))
+}
+
 /// Pearson correlation coefficient of two equal-length slices.
 pub fn pearson(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len());
@@ -164,6 +213,38 @@ mod tests {
                 assert!((qtq.at2(i, j) - want).abs() < 1e-4, "({i},{j}) {}", qtq.at2(i, j));
             }
         }
+    }
+
+    #[test]
+    fn qr_thin_orthonormal_and_spans_input() {
+        let mut rng = Rng::new(17);
+        let (m, r) = (40, 6);
+        let a = Tensor::f32(&[m, r], rng.normal_vec(m * r, 1.0));
+        let q = qr_thin(&a).unwrap();
+        assert_eq!(q.shape, vec![m, r]);
+        let qtq = matmul(&transpose(&q).unwrap(), &q).unwrap();
+        for i in 0..r {
+            for j in 0..r {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((qtq.at2(i, j) - want).abs() < 1e-5, "({i},{j}) {}", qtq.at2(i, j));
+            }
+        }
+        // Q Qᵀ A == A (Q spans the full-rank input's column space).
+        let proj = matmul(&q, &matmul(&transpose(&q).unwrap(), &a).unwrap()).unwrap();
+        assert!(proj.max_abs_diff(&a).unwrap() < 1e-4);
+    }
+
+    #[test]
+    fn qr_thin_zeroes_dependent_columns() {
+        // Second column = 2x first: its orthogonalized residual is dead.
+        let a = Tensor::f32(&[3, 2], vec![1., 2., 0., 0., 1., 2.]);
+        let q = qr_thin(&a).unwrap();
+        let qv = q.as_f32().unwrap();
+        for i in 0..3 {
+            assert_eq!(qv[i * 2 + 1], 0.0, "dependent column must be zeroed");
+        }
+        let n0: f32 = (0..3).map(|i| qv[i * 2] * qv[i * 2]).sum();
+        assert!((n0 - 1.0).abs() < 1e-6);
     }
 
     #[test]

@@ -28,7 +28,7 @@ fn host_and_device_delta_reconstruction_agree() {
     let trainer = Trainer::open(EngineKind::Xla).unwrap();
     let (d, n) = (128usize, 64usize);
     let seed = 2024u64;
-    let (rows, cols) = sample_entries(d, d, n, EntryBias::None, seed);
+    let (rows, cols) = sample_entries(d, d, n, EntryBias::None, seed).unwrap();
     let mut rng = Rng::new(3);
     let coeffs = Tensor::f32(&[n], rng.normal_vec(n, 1.0));
     let alpha = 8.0;

@@ -23,7 +23,7 @@ fn prop_idft_is_linear() {
         let d1 = 8 + rng.below(48);
         let d2 = 8 + rng.below(48);
         let n = 1 + rng.below((d1 * d2).min(64));
-        let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, seed);
+        let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, seed).unwrap();
         let c1 = rng.normal_vec(n, 1.0);
         let c2 = rng.normal_vec(n, 1.0);
         let sum: Vec<f32> = c1.iter().zip(&c2).map(|(a, b)| a + b).collect();
@@ -45,7 +45,7 @@ fn prop_idft_implementations_agree() {
         let d1 = 4 + rng.below(60);
         let d2 = 4 + rng.below(60);
         let n = 1 + rng.below((d1 * d2).min(50));
-        let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, seed ^ 1);
+        let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, seed ^ 1).unwrap();
         let c = rng.normal_vec(n, 2.0);
         let a = idft2_real_sparse((&rows, &cols), &c, d1, d2, 1.5).unwrap();
         let b = idft2_real_sparse_fft((&rows, &cols), &c, d1, d2, 1.5).unwrap();
@@ -67,7 +67,7 @@ fn prop_idft_negative_frequency_equivalence() {
         let d1 = 4 + rng.below(40);
         let d2 = 4 + rng.below(40);
         let n = 1 + rng.below(24.min(d1 * d2));
-        let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, seed ^ 3);
+        let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, seed ^ 3).unwrap();
         // Shift each frequency by a random multiple of its period (incl.
         // negative shifts) — the reconstruction must be unchanged.
         let rows_shifted: Vec<i32> = rows
@@ -100,7 +100,7 @@ fn prop_plan_reuse_matches_one_shot() {
         let d1 = 8 + rng.below(56);
         let d2 = 8 + rng.below(56);
         let n = 1 + rng.below(32);
-        let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, seed ^ 9);
+        let (rows, cols) = sample_entries(d1, d2, n, EntryBias::None, seed ^ 9).unwrap();
         let plan = ReconstructPlan::new((&rows, &cols), d1, d2).unwrap();
         for _ in 0..3 {
             let c = rng.normal_vec(n, 1.0);
@@ -119,7 +119,7 @@ fn prop_reconstruction_norm_bounded() {
         let mut rng = Rng::new(seed);
         let d = 16 + rng.below(48);
         let n = 1 + rng.below(32);
-        let (rows, cols) = sample_entries(d, d, n, EntryBias::None, seed ^ 2);
+        let (rows, cols) = sample_entries(d, d, n, EntryBias::None, seed ^ 2).unwrap();
         let c = rng.normal_vec(n, 1.0);
         let alpha = 2.0f32;
         let rec = idft2_real_sparse((&rows, &cols), &c, d, d, alpha).unwrap();
@@ -255,8 +255,8 @@ fn prop_entry_sampling_valid() {
         } else {
             EntryBias::BandPass { fc: rng.f64() * d1 as f64, w: 5.0 + rng.f64() * 50.0 }
         };
-        let (rows, cols) = sample_entries(d1, d2, n, bias, seed);
-        let again = sample_entries(d1, d2, n, bias, seed);
+        let (rows, cols) = sample_entries(d1, d2, n, bias, seed).unwrap();
+        let again = sample_entries(d1, d2, n, bias, seed).unwrap();
         assert_eq!((rows.clone(), cols.clone()), again, "determinism seed {seed}");
         let mut seen = std::collections::HashSet::new();
         for i in 0..n {

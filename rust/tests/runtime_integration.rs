@@ -47,7 +47,7 @@ fn mlp_fourierft_trains_end_to_end() {
     // Base params from the base-init artifact; E sampled host-side.
     let (base_hlo, _) = reg.base_init("mlp").unwrap();
     let base = exec::run_base_init(&client, &base_hlo, 7).unwrap();
-    let (rows, cols) = sample_entries(64, 64, 128, EntryBias::None, 2024);
+    let (rows, cols) = sample_entries(64, 64, 128, EntryBias::None, 2024).unwrap();
     let mut e_data: Vec<i32> = rows.clone();
     e_data.extend(&cols);
     let entries = Tensor::i32(&[2, 128], e_data);
@@ -111,7 +111,7 @@ fn pallas_delta_artifact_matches_rust_idft() {
     let hlo = reg.delta_hlo(d, n).unwrap();
     let exe = client.load_hlo(&hlo).unwrap();
 
-    let (rows, cols) = sample_entries(d, d, n, EntryBias::None, 42);
+    let (rows, cols) = sample_entries(d, d, n, EntryBias::None, 42).unwrap();
     let mut rng = Rng::new(11);
     let coeffs = rng.normal_vec(n, 1.0);
     let alpha = 150.0f32;
@@ -147,7 +147,7 @@ fn encoder_fourierft_artifact_runs_and_learns() {
     let (base_hlo, _) = reg.base_init("enc_base").unwrap();
     let base = exec::run_base_init(&client, &base_hlo, 0).unwrap();
 
-    let (rows, cols) = sample_entries(128, 128, 64, EntryBias::None, 2024);
+    let (rows, cols) = sample_entries(128, 128, 64, EntryBias::None, 2024).unwrap();
     let mut e_data = rows;
     e_data.extend(cols);
     let statics =
